@@ -1,0 +1,74 @@
+//! Accuracy ablations A1 (LARS), A2 (warmup), A3 (label smoothing): short
+//! fixed-budget runs with one technique toggled at a time, in the regime
+//! the paper targets — an aggressive LR that plain SGD cannot survive but
+//! the stabilized stack can (paper III-A). `cargo bench --bench ablations`
+//!
+//! Calibration (this box, resnet_micro proxy): peak_lr 6.0 is trainable
+//! with LARS (loss ~1.0 after 30 steps) and divergent without (loss > 2).
+
+use std::sync::Arc;
+use yasgd::benchkit::{dump_results, Table};
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+use yasgd::util::json::Json;
+
+fn base() -> RunConfig {
+    RunConfig {
+        workers: 4,
+        grad_accum: 2,
+        total_steps: 30,
+        eval_every: 0,
+        eval_batches: 6,
+        peak_lr: 6.0,
+        train_size: 2048,
+        noise: 0.4,
+        ..RunConfig::default()
+    }
+}
+
+fn run(engine: Arc<Engine>, name: &str, f: impl FnOnce(&mut RunConfig)) -> (String, f32, f32) {
+    let mut cfg = base();
+    f(&mut cfg);
+    let mut tr = Trainer::new(cfg, engine).unwrap();
+    tr.threaded = true;
+    let rep = tr.train().unwrap();
+    (name.to_string(), rep.final_val_acc, rep.final_train_loss)
+}
+
+fn main() {
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("make artifacts"));
+    let mut t = Table::new(&["configuration", "train loss", "val acc"]);
+    let mut rows = Vec::new();
+    let cases: Vec<(&str, Box<dyn FnOnce(&mut RunConfig)>)> = vec![
+        ("full stack @ lr 6 (paper)", Box::new(|_: &mut RunConfig| {})),
+        ("A1: no LARS @ lr 6", Box::new(|c: &mut RunConfig| c.lars = false)),
+        ("A2: no warmup @ lr 6 (LARS on)", Box::new(|c: &mut RunConfig| c.warmup_frac = 0.0)),
+        ("A3: no smoothing @ lr 6", Box::new(|c: &mut RunConfig| c.label_smoothing = false)),
+        ("A2b: no LARS @ lr 3, warmup on", Box::new(|c: &mut RunConfig| {
+            c.lars = false;
+            c.peak_lr = 3.0;
+        })),
+        ("A2b: no LARS @ lr 3, no warmup", Box::new(|c: &mut RunConfig| {
+            c.lars = false;
+            c.peak_lr = 3.0;
+            c.warmup_frac = 0.0;
+        })),
+    ];
+    for (name, f) in cases {
+        let (n, acc, loss) = run(engine.clone(), name, f);
+        t.row(&[n.clone(), format!("{loss:.4}"), format!("{acc:.4}")]);
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(n)),
+            ("val_acc", Json::Num(acc as f64)),
+            ("train_loss", Json::Num(loss as f64)),
+        ]));
+    }
+    println!("== accuracy ablations (30 steps, global batch 256) ==\n");
+    println!("{}", t.render());
+    println!("paper III-A trends: LARS is what makes the high-LR (large-batch) regime");
+    println!("trainable at all (A1 diverges); warmup adds a further margin in the");
+    println!("borderline regime (A2b pair); smoothing trades train loss for val acc.");
+    let path = dump_results("ablations", &Json::Arr(rows)).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,71 @@
+//! Bench target for paper Fig 2: throughput vs GPU count.
+//!
+//! Measures the REAL coordinator at 1..4 in-process workers (compute-bound
+//! on this box) and regenerates the paper's 4..2048-GPU curve from the
+//! ABCI α–β model. `cargo bench --bench fig2_scalability`
+
+use std::sync::Arc;
+use yasgd::benchkit::{dump_results, Table};
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+use yasgd::simnet::{scaling_curve, ClusterSpec};
+use yasgd::util::json::Json;
+
+fn main() {
+    let mut results = Vec::new();
+
+    // ---- measured (real engine) ------------------------------------------
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("make artifacts"));
+    let b = engine.manifest().train.batch_size;
+    let steps = 4;
+    println!("== measured coordinator throughput (real PJRT engine) ==");
+    let mut t = Table::new(&["workers", "step ms", "img/s"]);
+    for w in [1usize, 2, 4] {
+        let cfg = RunConfig { workers: w, total_steps: steps, eval_every: 0, ..RunConfig::default() };
+        let mut tr = Trainer::new(cfg, engine.clone()).unwrap();
+        tr.threaded = true;
+        tr.step().unwrap(); // warmup
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            tr.step().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let ips = (steps * w * b) as f64 / dt;
+        t.row(&[format!("{w}"), format!("{:.1}", dt / steps as f64 * 1e3), format!("{ips:.1}")]);
+        results.push(Json::obj(vec![
+            ("name", Json::Str(format!("measured-{w}w"))),
+            ("images_per_sec", Json::Num(ips)),
+        ]));
+    }
+    println!("{}", t.render());
+
+    // ---- modelled ABCI curve (the figure's axes) ---------------------------
+    println!("== Fig 2 curve (ABCI model, per-GPU batch 40, fp16 grads) ==");
+    let spec = ClusterSpec::abci();
+    let counts: Vec<usize> = (2..=11).map(|k| 1usize << k).collect();
+    let pts = scaling_curve(&spec, &counts, 40, 51e6, 8, 0.66);
+    let mut t = Table::new(&["gpus", "ideal Mimg/s", "model Mimg/s", "efficiency"]);
+    for p in &pts {
+        t.row(&[
+            format!("{}", p.gpus),
+            format!("{:.3}", p.ideal_images_per_sec / 1e6),
+            format!("{:.3}", p.model_images_per_sec / 1e6),
+            format!("{:.1}%", p.efficiency * 100.0),
+        ]);
+        results.push(Json::obj(vec![
+            ("name", Json::Str(format!("model-{}g", p.gpus))),
+            ("model_images_per_sec", Json::Num(p.model_images_per_sec)),
+            ("efficiency", Json::Num(p.efficiency)),
+        ]));
+    }
+    println!("{}", t.render());
+    let last = pts.last().unwrap();
+    println!(
+        "paper @2048 GPUs: 1.73M img/s @ 77.0% | model: {:.2}M img/s @ {:.1}%",
+        last.model_images_per_sec / 1e6,
+        last.efficiency * 100.0
+    );
+    let path = dump_results("fig2_scalability", &Json::Arr(results)).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,55 @@
+//! Bench target for paper Fig 3: top-1 validation accuracy vs mini-batch
+//! size at a FIXED sample budget (bigger batch => fewer updates — the
+//! paper's core tension). `cargo bench --bench fig3_large_batch`
+//!
+//! Short-budget version of examples/large_batch.rs so `make bench` stays
+//! tractable; the example runs the full sweep.
+
+use std::sync::Arc;
+use yasgd::benchkit::{dump_results, Table};
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+use yasgd::util::json::Json;
+
+fn main() {
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("make artifacts"));
+    let b = engine.manifest().train.batch_size;
+    let workers = 4;
+    let budget = 6144; // samples per configuration
+    let mut t = Table::new(&["global batch", "updates", "val acc", "train loss"]);
+    let mut rows = Vec::new();
+    for accum in [1usize, 4, 12] {
+        let global = workers * accum * b;
+        let steps = (budget / global).max(1);
+        let cfg = RunConfig {
+            workers,
+            grad_accum: accum,
+            total_steps: steps,
+            eval_every: 0,
+            eval_batches: 6,
+            peak_lr: 0.3 * (global as f64 / 128.0),
+            train_size: 2048,
+            ..RunConfig::default()
+        };
+        let mut tr = Trainer::new(cfg, engine.clone()).unwrap();
+        tr.threaded = true;
+        let rep = tr.train().unwrap();
+        t.row(&[
+            format!("{global}"),
+            format!("{steps}"),
+            format!("{:.4}", rep.final_val_acc),
+            format!("{:.4}", rep.final_train_loss),
+        ]);
+        rows.push(Json::obj(vec![
+            ("global_batch", Json::Num(global as f64)),
+            ("updates", Json::Num(steps as f64)),
+            ("val_acc", Json::Num(rep.final_val_acc as f64)),
+        ]));
+    }
+    println!("Fig 3 regeneration (fixed {budget}-sample budget):\n");
+    println!("{}", t.render());
+    println!("paper shape: accuracy holds until updates get too few, then falls off.");
+    let path = dump_results("fig3_large_batch", &Json::Arr(rows)).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,46 @@
+//! Bench A6: parallel same-seed init vs root-broadcast init (paper III-B-1).
+//! `cargo bench --bench init_bench`
+
+use std::time::Duration;
+use yasgd::benchkit::{bench, dump_results, Table};
+use yasgd::init::{broadcast_init_all, parallel_init_all};
+use yasgd::model_meta::Manifest;
+use yasgd::simnet::ClusterSpec;
+use yasgd::util::json::Json;
+
+fn main() {
+    let man = Manifest::load(std::path::Path::new("artifacts")).expect("make artifacts");
+    let mut results = Vec::new();
+    println!("== A6: init strategy (measured in-process + modelled wire cost) ==");
+    let mut t = Table::new(&[
+        "workers", "parallel (ms)", "broadcast (ms)", "bcast wire MiB", "modelled bcast @2048 (s)",
+    ]);
+    let spec = ClusterSpec::abci();
+    for workers in [2usize, 8, 32, 64] {
+        let rp = bench(&format!("parallel-{workers}"), 1, Duration::from_millis(400), || {
+            std::hint::black_box(parallel_init_all(&man, 7, workers));
+        });
+        let rb = bench(&format!("broadcast-{workers}"), 1, Duration::from_millis(400), || {
+            std::hint::black_box(broadcast_init_all(&man, 7, workers));
+        });
+        let wire = broadcast_init_all(&man, 7, workers).wire_bytes;
+        // modelled: ResNet-50 fp32 weights (102 MB) tree-broadcast to 2048
+        // ranks = 11 rounds over IB; parallel init = 0.
+        let bcast_2048 =
+            11.0 * spec.inter.transfer_time(102e6) * (workers as f64 / workers as f64);
+        t.row(&[
+            format!("{workers}"),
+            format!("{:.2}", rp.mean_ms()),
+            format!("{:.2}", rb.mean_ms()),
+            format!("{:.2}", wire as f64 / (1 << 20) as f64),
+            format!("{:.2}", bcast_2048),
+        ]);
+        results.push(rp.to_json());
+        results.push(rb.to_json());
+    }
+    println!("{}", t.render());
+    println!("paper III-B-1: parallel same-seed init removes the broadcast entirely;");
+    println!("the wire column is what the baseline pays (and it grows with workers).");
+    let path = dump_results("init_bench", &Json::Arr(results)).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,51 @@
+//! Bench A7: batched-norms Pallas kernel vs per-layer norm reductions
+//! (paper Section III-B-2) — both as REAL compiled artifacts on the PJRT
+//! runtime, plus the plain-SGD update as the no-norm floor.
+//! `cargo bench --bench norms`
+
+use std::time::Duration;
+use yasgd::benchkit::{bench, dump_results, Table};
+use yasgd::runtime::{Engine, UpdateRule};
+use yasgd::util::json::Json;
+use yasgd::util::rng::Rng;
+
+fn main() {
+    let engine = Engine::load(&yasgd::artifacts_dir(None)).expect("make artifacts");
+    let m = engine.manifest();
+    let np = m.padded_param_count;
+    let mut rng = Rng::new(1);
+    let params: Vec<f32> = (0..np).map(|_| rng.next_f32() - 0.5).collect();
+    let momentum = vec![0.0f32; np];
+    let grads: Vec<f32> = (0..np).map(|_| (rng.next_f32() - 0.5) * 0.01).collect();
+
+    println!("== A7: update-step cost by norm strategy ({} layers, {} params) ==", m.layers.len(), m.param_count);
+    let mut t = Table::new(&["update rule", "mean ms", "p95 ms", "vs batched"]);
+    let mut results = Vec::new();
+    let mut batched_mean = 0.0;
+    for (rule, name) in [
+        (UpdateRule::Lars, "LARS batched kernel (paper)"),
+        (UpdateRule::LarsPerLayer, "LARS per-layer reduces"),
+        (UpdateRule::Sgd, "plain SGD (no norms floor)"),
+    ] {
+        let r = bench(name, 3, Duration::from_millis(800), || {
+            std::hint::black_box(
+                engine.update(rule, &params, &momentum, &grads, 0.1).unwrap(),
+            );
+        });
+        if rule == UpdateRule::Lars {
+            batched_mean = r.mean_s;
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", r.mean_ms()),
+            format!("{:.3}", r.p95_s * 1e3),
+            format!("{:.2}x", r.mean_s / batched_mean),
+        ]);
+        results.push(r.to_json());
+    }
+    println!("{}", t.render());
+    println!("paper III-B-2: one batched launch computes every layer's norms; the");
+    println!("per-layer variant pays one reduction per layer (2L reduces total).");
+    let path = dump_results("norms", &Json::Arr(results)).unwrap();
+    println!("wrote {}", path.display());
+}

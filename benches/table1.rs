@@ -1,0 +1,34 @@
+//! Bench target for paper Table I: regenerates every row from the α–β
+//! cost model and reports model-vs-paper ratios. `cargo bench --bench table1`
+
+use yasgd::benchkit::{dump_results, Table};
+use yasgd::experiments::{fmt_time, table1_model_time_s, table1_rows};
+use yasgd::util::json::Json;
+
+fn main() {
+    let mut table = Table::new(&["system", "paper", "model", "ratio"]);
+    let mut rows = Vec::new();
+    let mut worst: f64 = 1.0;
+    for r in table1_rows() {
+        let t = table1_model_time_s(&r);
+        let ratio = t / r.paper_time_s;
+        worst = worst.max(ratio.max(1.0 / ratio));
+        table.row(&[
+            r.name.to_string(),
+            r.paper_time.to_string(),
+            fmt_time(t),
+            format!("{ratio:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("system", Json::Str(r.name.into())),
+            ("paper_time_s", Json::Num(r.paper_time_s)),
+            ("model_time_s", Json::Num(t)),
+            ("ratio", Json::Num(ratio)),
+        ]));
+    }
+    println!("TABLE I regeneration (cost model vs published times)\n");
+    println!("{}", table.render());
+    println!("worst-case ratio: {worst:.2}x (shape holds when all ratios stay within ~2x)");
+    let path = dump_results("table1", &Json::Arr(rows)).unwrap();
+    println!("wrote {}", path.display());
+}

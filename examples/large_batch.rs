@@ -1,0 +1,74 @@
+//! Fig 3 reproduction: top-1 validation accuracy vs mini-batch size.
+//!
+//! The paper's Fig 3 shows accuracy holding at ~75% up to 81,920 samples
+//! per batch and falling off a cliff beyond (the update count per epoch
+//! becomes too small for SGD). We reproduce the SHAPE on the proxy task:
+//! a fixed *sample* budget (so bigger batches = fewer updates, exactly the
+//! paper's tension), LARS + warmup on, batch swept via worker count x
+//! grad accumulation.
+//!
+//! Writes large_batch.json.
+//!
+//!   cargo run --release --example large_batch -- [--budget 12288] [--workers 4]
+
+use anyhow::Result;
+use std::sync::Arc;
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+use yasgd::util::cli::Args;
+use yasgd::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    // Total training samples consumed per configuration (epochs x corpus).
+    let budget = args.get_usize("budget", 12288)?;
+    let workers = args.get_usize("workers", 4)?;
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(args.get("artifacts")))?);
+    let b = engine.manifest().train.batch_size;
+
+    println!("Fig 3 proxy: fixed sample budget {budget}, per-worker batch {b}, {workers} workers");
+    println!(
+        "{:>12} {:>8} {:>8} {:>10} {:>10}",
+        "global_batch", "accum", "steps", "val_acc", "train_loss"
+    );
+
+    let mut rows = Vec::new();
+    // Sweep grad_accum to scale the global batch at constant worker count.
+    for accum in [1usize, 2, 4, 8, 16] {
+        let global_batch = workers * accum * b;
+        let steps = (budget / global_batch).max(1);
+        let cfg = RunConfig {
+            workers,
+            grad_accum: accum,
+            total_steps: steps,
+            eval_every: 0,
+            eval_batches: 8,
+            // linear-scaling rule for the peak LR (Goyal et al.), LARS on
+            peak_lr: 0.3 * (global_batch as f64 / 128.0),
+            train_size: 2048,
+            val_size: 512,
+            ..RunConfig::default()
+        };
+        let mut t = Trainer::new(cfg, engine.clone())?;
+        t.threaded = true;
+        let report = t.train()?;
+        let va = report.final_val_acc;
+        println!(
+            "{:>12} {:>8} {:>8} {:>10.4} {:>10.4}",
+            global_batch, accum, steps, va, report.final_train_loss
+        );
+        rows.push(Json::obj(vec![
+            ("global_batch", Json::Num(global_batch as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("val_acc", Json::Num(va as f64)),
+            ("train_loss", Json::Num(report.final_train_loss as f64)),
+        ]));
+    }
+
+    println!("\nexpected shape (paper Fig 3): flat accuracy until the update count");
+    println!("gets too small, then a cliff — the largest batches above should underperform.");
+    std::fs::write("large_batch.json", Json::obj(vec![("rows", Json::Arr(rows))]).to_string_pretty())?;
+    println!("wrote large_batch.json");
+    Ok(())
+}

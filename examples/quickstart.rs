@@ -1,0 +1,42 @@
+//! Quickstart: the smallest complete use of the yasgd public API.
+//!
+//! Loads the AOT artifacts, builds a 2-worker data-parallel trainer with
+//! the paper's full technique stack (LARS + warmup + label smoothing +
+//! fp16 hierarchical allreduce + bucketing), trains for 20 steps on the
+//! synthetic ImageNet proxy and prints the loss curve.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use std::sync::Arc;
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+
+fn main() -> Result<()> {
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None))?);
+    println!(
+        "model {} | {} params | {} layers | per-worker batch {}",
+        engine.manifest().model.name,
+        engine.manifest().param_count,
+        engine.manifest().layers.len(),
+        engine.manifest().train.batch_size,
+    );
+
+    let cfg = RunConfig {
+        workers: 2,
+        total_steps: 20,
+        eval_every: 10,
+        peak_lr: 0.5,
+        ..RunConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg, engine)?;
+
+    for step in 0..20 {
+        let (loss, acc) = trainer.step()?;
+        println!("step {step:>3}  loss {loss:.4}  train-acc {acc:.3}");
+    }
+    let (val_loss, val_acc) = trainer.evaluate(4)?;
+    println!("validation: loss {val_loss:.4} acc {val_acc:.3}");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Fig 2 reproduction: throughput vs GPU count, ideal vs achieved.
+//!
+//! Two parts:
+//!   1. REAL measurement: our coordinator's step throughput at 1..8
+//!      in-process workers (the regime this box can actually run),
+//!      including the real bucketed allreduce on real gradients.
+//!   2. MODEL extrapolation: the α–β ABCI model (simnet) from 4 to 2,048
+//!      GPUs with the paper's workload (ResNet-50 fp16 gradients, 40
+//!      images/GPU), which is where the paper's 77% @2048 figure lives.
+//!
+//! Writes scalability.json for EXPERIMENTS.md.
+//!
+//!   cargo run --release --example scalability -- [--steps 8] [--max-workers 8]
+
+use anyhow::Result;
+use std::sync::Arc;
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+use yasgd::simnet::{scaling_curve, ClusterSpec};
+use yasgd::util::cli::Args;
+use yasgd::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.get_usize("steps", 8)?;
+    let max_workers = args.get_usize("max-workers", 8)?;
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(args.get("artifacts")))?);
+    let b = engine.manifest().train.batch_size;
+
+    println!("== part 1: measured multi-worker throughput (this machine) ==");
+    println!(
+        "{:>8} {:>12} {:>14} {:>12} {:>8}",
+        "workers", "step ms", "images/sec", "ideal img/s", "eff"
+    );
+    let mut measured = Vec::new();
+    let mut single_ips = 0.0;
+    let mut w = 1;
+    while w <= max_workers {
+        let cfg = RunConfig {
+            workers: w,
+            total_steps: steps,
+            eval_every: 0,
+            train_size: 2048,
+            ..RunConfig::default()
+        };
+        let mut t = Trainer::new(cfg, engine.clone())?;
+        t.threaded = true;
+        // warmup step (compile caches, allocators)
+        t.step()?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            t.step()?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let ips = (steps * w * b) as f64 / dt;
+        if w == 1 {
+            single_ips = ips;
+        }
+        let ideal = single_ips * w as f64;
+        println!(
+            "{:>8} {:>12.1} {:>14.1} {:>12.1} {:>7.1}%",
+            w,
+            dt / steps as f64 * 1e3,
+            ips,
+            ideal,
+            ips / ideal * 100.0
+        );
+        measured.push(Json::obj(vec![
+            ("workers", Json::Num(w as f64)),
+            ("images_per_sec", Json::Num(ips)),
+            ("ideal", Json::Num(ideal)),
+            ("efficiency", Json::Num(ips / ideal)),
+        ]));
+        w *= 2;
+    }
+
+    println!("\n== part 2: ABCI model extrapolation (paper Fig 2 axes) ==");
+    let spec = ClusterSpec::abci();
+    let counts: Vec<usize> = (2..=11).map(|k| 1usize << k).collect(); // 4..2048
+    let pts = scaling_curve(&spec, &counts, 40, 51e6, 8, 0.66);
+    println!(
+        "{:>6} {:>16} {:>16} {:>8}",
+        "gpus", "ideal img/s", "model img/s", "eff"
+    );
+    let mut modeled = Vec::new();
+    for p in &pts {
+        println!(
+            "{:>6} {:>16.0} {:>16.0} {:>7.1}%",
+            p.gpus,
+            p.ideal_images_per_sec,
+            p.model_images_per_sec,
+            p.efficiency * 100.0
+        );
+        modeled.push(Json::obj(vec![
+            ("gpus", Json::Num(p.gpus as f64)),
+            ("ideal", Json::Num(p.ideal_images_per_sec)),
+            ("model", Json::Num(p.model_images_per_sec)),
+            ("efficiency", Json::Num(p.efficiency)),
+        ]));
+    }
+    let last = pts.last().unwrap();
+    println!(
+        "\npaper @2048: 1.73M img/s, 77.0% efficiency | model @2048: {:.2}M img/s, {:.1}%",
+        last.model_images_per_sec / 1e6,
+        last.efficiency * 100.0
+    );
+
+    let out = Json::obj(vec![
+        ("measured", Json::Arr(measured)),
+        ("modeled_abci", Json::Arr(modeled)),
+        ("paper_at_2048", Json::obj(vec![
+            ("images_per_sec", Json::Num(1.73e6)),
+            ("efficiency", Json::Num(0.77)),
+        ])),
+    ]);
+    std::fs::write("scalability.json", out.to_string_pretty())?;
+    println!("wrote scalability.json");
+    Ok(())
+}

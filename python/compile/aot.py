@@ -1,0 +1,307 @@
+"""AOT-lower the L2 graphs to HLO text + emit manifest.json for rust.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts written (all shapes static, per manifest):
+
+  grad_step.hlo.txt           fwd+bwd with label smoothing (the default)
+  grad_step_nosmooth.hlo.txt  ablation A3: smoothing = 0
+  update_lars.hlo.txt         batched-norms + LARS + fused momentum update
+  update_sgd.hlo.txt          ablation A1: plain momentum SGD update
+  eval_step.hlo.txt           inference loss + top-1 correct count
+  manifest.json               packed layout + hyperparams + artifact table
+
+Run: cd python && python -m compile.aot --out ../artifacts [--model resnet_micro]
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+import numpy as np
+
+from . import model as M
+from . import resnet
+from .kernels import batched_norms as bn_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, path: str) -> int:
+    # keep_unused: every artifact keeps its FULL input signature even when a
+    # variant ignores an input (update_sgd ignores ids/skip) — the rust
+    # caller passes one fixed argument list per artifact family.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_manifest(cfg: resnet.ResNetConfig, tc: M.TrainConfig) -> dict:
+    pspecs, sspecs, sizes, skip = M.layer_tables(cfg)
+    p_count = sum(sizes)
+    np_len = M.packed_param_len(cfg)
+    s_count = sum(s.size for s in sspecs)
+
+    layers = []
+    off = 0
+    for s, sk in zip(pspecs, skip):
+        layers.append(
+            {
+                "name": s.name,
+                "kind": s.kind,
+                "shape": list(s.shape),
+                "size": s.size,
+                "offset": off,
+                "lars_skip": bool(sk),
+            }
+        )
+        off += s.size
+
+    states = []
+    off = 0
+    for s in sspecs:
+        states.append({"name": s.name, "shape": list(s.shape), "size": s.size, "offset": off})
+        off += s.size
+
+    b = tc.batch_size
+    img = [b, cfg.image_size, cfg.image_size, cfg.channels]
+    model_dict = dataclasses.asdict(cfg)
+    model_dict["stage_blocks"] = list(model_dict["stage_blocks"])  # json has no tuples
+    return {
+        "format_version": 1,
+        "model": model_dict,
+        "train": dataclasses.asdict(tc),
+        "param_count": p_count,
+        "padded_param_count": np_len,
+        "state_count": s_count,
+        "num_layers": len(pspecs),
+        "pallas_tile": bn_kernel.TILE,
+        "layers": layers,
+        "states": states,
+        "artifacts": {
+            "grad_step": {
+                "file": "grad_step.hlo.txt",
+                "inputs": [
+                    {"name": "params", "shape": [np_len], "dtype": "f32"},
+                    {"name": "bn_state", "shape": [s_count], "dtype": "f32"},
+                    {"name": "images", "shape": img, "dtype": "f32"},
+                    {"name": "labels", "shape": [b], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "correct", "shape": [], "dtype": "f32"},
+                    {"name": "grads", "shape": [np_len], "dtype": "f32"},
+                    {"name": "new_bn_state", "shape": [s_count], "dtype": "f32"},
+                ],
+            },
+            "grad_step_nosmooth": {"file": "grad_step_nosmooth.hlo.txt", "same_as": "grad_step"},
+            "update_lars": {
+                "file": "update_lars.hlo.txt",
+                "inputs": [
+                    {"name": "params", "shape": [np_len], "dtype": "f32"},
+                    {"name": "momentum", "shape": [np_len], "dtype": "f32"},
+                    {"name": "grads", "shape": [np_len], "dtype": "f32"},
+                    {"name": "lr", "shape": [1], "dtype": "f32"},
+                    {"name": "layer_ids", "shape": [np_len], "dtype": "i32"},
+                    {"name": "lars_skip", "shape": [len(layers)], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "new_params", "shape": [np_len], "dtype": "f32"},
+                    {"name": "new_momentum", "shape": [np_len], "dtype": "f32"},
+                ],
+            },
+            "update_sgd": {"file": "update_sgd.hlo.txt", "same_as": "update_lars"},
+            "update_lars_perlayer": {
+                "file": "update_lars_perlayer.hlo.txt",
+                "same_as": "update_lars",
+            },
+            "eval_step": {
+                "file": "eval_step.hlo.txt",
+                "inputs": [
+                    {"name": "params", "shape": [np_len], "dtype": "f32"},
+                    {"name": "bn_state", "shape": [s_count], "dtype": "f32"},
+                    {"name": "images", "shape": img, "dtype": "f32"},
+                    {"name": "labels", "shape": [b], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "correct", "shape": [], "dtype": "f32"},
+                ],
+            },
+        },
+    }
+
+
+def _pattern(n: int, period: int, scale: float) -> np.ndarray:
+    """Deterministic input pattern reproducible in rust with integer math:
+    v[i] = ((i % period) / period - 0.5) * scale."""
+    i = np.arange(n, dtype=np.float64)
+    return (((i % period) / period) - 0.5) * scale
+
+
+def build_golden(cfg: resnet.ResNetConfig, tc: M.TrainConfig) -> dict:
+    """Cross-language verification vectors.
+
+    The rust integration suite regenerates the same pattern inputs,
+    executes the COMPILED artifacts through PJRT, and asserts the outputs
+    match these jit-side values. This closes the loop over the whole AOT
+    chain — it is the test that would have caught the xla_extension-0.5.1
+    constant-array mangling bug immediately.
+    """
+    import numpy as np_  # local alias, keep global np for _pattern
+
+    np_len = M.packed_param_len(cfg)
+    s_count = resnet.state_count(cfg)
+    b = tc.batch_size
+    img_elems = b * cfg.image_size * cfg.image_size * cfg.channels
+
+    params = jnp.asarray(_pattern(np_len, 101, 0.2), jnp.float32)
+    pc = resnet.param_count(cfg)
+    params = params.at[pc:].set(0.0)  # padding must be zero
+    state = resnet.init_state(cfg)
+    images = jnp.asarray(_pattern(img_elems, 97, 1.0), jnp.float32).reshape(
+        b, cfg.image_size, cfg.image_size, cfg.channels
+    )
+    labels = jnp.asarray(np.arange(b) % cfg.num_classes, jnp.int32)
+    momentum = jnp.asarray(_pattern(np_len, 89, 0.02), jnp.float32)
+    grads = jnp.asarray(_pattern(np_len, 83, 0.05), jnp.float32)
+    lr = jnp.float32(0.25)
+    ids, skip = M.make_update_inputs(cfg)
+
+    gs = jax.jit(M.make_grad_step(cfg, tc))
+    loss, correct, g_out, new_state = gs(params, state, images, labels)
+    ev = jax.jit(M.make_eval_step(cfg, tc))
+    e_loss, e_correct = ev(params, state, images, labels)
+    up = jax.jit(M.make_update_step(cfg, tc, use_lars=True), keep_unused=True)
+    w2, m2 = up(params, momentum, grads, lr, ids, skip)
+    up_s = jax.jit(M.make_update_step(cfg, tc, use_lars=False), keep_unused=True)
+    w2s, m2s = up_s(params, momentum, grads, lr, ids, skip)
+
+    def summarize(x) -> dict:
+        x = np_.asarray(x, np_.float64)
+        return {
+            "l2": float(np_.sqrt((x * x).sum())),
+            "sum": float(x.sum()),
+            "first8": [float(v) for v in x.reshape(-1)[:8]],
+        }
+
+    return {
+        "inputs": {
+            "params": {"period": 101, "scale": 0.2},
+            "images": {"period": 97, "scale": 1.0},
+            "momentum": {"period": 89, "scale": 0.02},
+            "grads": {"period": 83, "scale": 0.05},
+            "lr": 0.25,
+        },
+        "grad_step": {
+            "loss": float(loss),
+            "correct": float(correct),
+            "grads": summarize(g_out),
+            "new_state": summarize(new_state),
+        },
+        "eval_step": {"loss": float(e_loss), "correct": float(e_correct)},
+        "update_lars": {"new_params": summarize(w2), "new_momentum": summarize(m2)},
+        "update_sgd": {"new_params": summarize(w2s), "new_momentum": summarize(m2s)},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--model", default="resnet_micro", choices=sorted(resnet.PRESETS))
+    ap.add_argument("--batch", type=int, default=32, help="per-worker batch size")
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--smoothing", type=float, default=0.1)
+    ap.add_argument("--bn-momentum", type=float, default=0.9)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        resnet.PRESETS[args.model], num_classes=args.classes, bn_momentum=args.bn_momentum
+    )
+    tc = M.TrainConfig(label_smoothing=args.smoothing, batch_size=args.batch)
+    os.makedirs(args.out, exist_ok=True)
+
+    np_len = M.packed_param_len(cfg)
+    s_count = resnet.state_count(cfg)
+    b = tc.batch_size
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    params_s = spec((np_len,), f32)
+    mom_s = spec((np_len,), f32)
+    state_s = spec((s_count,), f32)
+    img_s = spec((b, cfg.image_size, cfg.image_size, cfg.channels), f32)
+    lbl_s = spec((b,), jnp.int32)
+    lr_s = spec((1,), f32)
+    ids_s = spec((np_len,), jnp.int32)
+    skip_s = spec((len(M.layer_tables(cfg)[0]),), jnp.int32)
+
+    def wrap_update(fn):
+        # rust passes lr as f32[1]; unwrap to scalar inside the graph.
+        # ids/skip are runtime inputs (constant-array HLO-text hazard, see
+        # model.make_update_step docstring).
+        return lambda p, m, g, lr, ids, skip: fn(p, m, g, lr[0], ids, skip)
+
+    jobs = [
+        ("grad_step.hlo.txt", M.make_grad_step(cfg, tc), (params_s, state_s, img_s, lbl_s)),
+        (
+            "grad_step_nosmooth.hlo.txt",
+            M.make_grad_step(cfg, tc, smoothing=0.0),
+            (params_s, state_s, img_s, lbl_s),
+        ),
+        (
+            "update_lars.hlo.txt",
+            wrap_update(M.make_update_step(cfg, tc, use_lars=True)),
+            (params_s, mom_s, params_s, lr_s, ids_s, skip_s),
+        ),
+        (
+            "update_sgd.hlo.txt",
+            wrap_update(M.make_update_step(cfg, tc, use_lars=False)),
+            (params_s, mom_s, params_s, lr_s, ids_s, skip_s),
+        ),
+        (
+            "update_lars_perlayer.hlo.txt",
+            wrap_update(M.make_update_step_perlayer(cfg, tc)),
+            (params_s, mom_s, params_s, lr_s, ids_s, skip_s),
+        ),
+        ("eval_step.hlo.txt", M.make_eval_step(cfg, tc), (params_s, state_s, img_s, lbl_s)),
+    ]
+    for fname, fn, ex in jobs:
+        path = os.path.join(args.out, fname)
+        nchars = lower_and_write(fn, ex, path)
+        print(f"wrote {fname}: {nchars} chars")
+
+    golden = build_golden(cfg, tc)
+    with open(os.path.join(args.out, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    print("wrote golden.json (cross-language verification vectors)")
+
+    manifest = build_manifest(cfg, tc)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"wrote manifest.json: model={cfg.name} P={manifest['param_count']} "
+        f"Np={np_len} S={s_count} L={manifest['num_layers']} B={b}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- batched_norms: all per-layer |w|²,|g|² in one launch (paper III-B-2)
+- lars: fused LARS + momentum master-weight update (paper III-A-1 / IV)
+- loss: label-smoothed softmax cross-entropy with custom_vjp (III-A-2)
+- ref: pure-jnp oracle the pytest/hypothesis suite checks the above against
+"""
+
+from .batched_norms import batched_sq_norms, make_layer_ids, padded_layer_slots, padded_len, TILE
+from .lars import lars_momentum_update
+from .loss import smoothed_softmax_xent
+
+__all__ = [
+    "batched_sq_norms",
+    "make_layer_ids",
+    "padded_layer_slots",
+    "padded_len",
+    "TILE",
+    "lars_momentum_update",
+    "smoothed_softmax_xent",
+]

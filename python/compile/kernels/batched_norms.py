@@ -1,0 +1,126 @@
+"""Batched per-layer norm computation — the paper's Section III-B-2 kernel.
+
+ResNet-50's layers are individually tiny (a BN scale is 64-2048 floats), so
+computing each layer's ‖w‖ and ‖g‖ with one launch per layer under-occupies
+the machine: on the paper's V100s the CUDA cores idle; on TPU the analogous
+waste is one under-filled `reduce` per layer, each paying an HBM round-trip.
+
+This kernel computes the squared L2 norms of EVERY layer in one launch:
+
+  * all layer tensors are packed into one flat fp32 buffer (the same packed
+    layout the rust coordinator buckets for allreduce — offsets come from
+    `manifest.json`),
+  * a parallel i32 buffer maps each element to its layer id (padding maps
+    to a sacrificial slot past the last layer),
+  * the grid walks (8, 128)-aligned VMEM tiles; each step squares its tile
+    and accumulates a one-hot segmented matmul into a per-layer accumulator
+    that lives in the (tiny) output block.
+
+One HBM sweep, L norms out. The threadblock-per-layer structure of the
+paper's CUDA kernel becomes grid-over-tiles with a layer-id map; the
+shared-memory tree reduction becomes the MXU/VPU one-hot contraction plus
+sequential-grid accumulation (TPU grids execute in order, so `o_ref +=` is
+the idiomatic cross-step accumulator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry. 128 lanes is fixed by the TPU vector unit; the row count
+# is a perf knob: on real TPU (8, 128) is the natural fp32 tile and the
+# grid pipelines HBM->VMEM loads, but under interpret=True every grid step
+# pays ~0.1 ms of pure python dispatch, which dominated the update step.
+# The §Perf sweep (EXPERIMENTS.md) over rows {8,16,32,64,96,192} found 32
+# rows best (7.8 ms -> 2.4 ms for the full LARS update): fat enough to
+# amortize dispatch, small enough that the (TILE x slots) one-hot operand
+# stays cache-resident. VMEM at 32 rows is 16 KiB/operand — trivially
+# within a real TPU's ~16 MiB budget.
+TILE_ROWS = 32
+TILE_COLS = 128
+TILE = TILE_ROWS * TILE_COLS
+
+
+def padded_len(n: int, multiple: int = TILE) -> int:
+    """Round n up to a tile multiple (layout contract with rust's packer)."""
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def padded_layer_slots(num_layers: int) -> int:
+    """Output slots: num_layers + 1 padding slot, rounded to the lane width."""
+    return padded_len(num_layers + 1, TILE_COLS)
+
+
+def _kernel(flat_ref, ids_ref, out_ref, *, slots: int):
+    # NOTE on structure: on real TPU the natural form accumulates into one
+    # (1, slots) output block across sequential grid steps
+    # (`out_ref[...] +=` with a constant index_map). The CPU-PJRT target of
+    # this repo (xla_extension 0.5.1) miscompiles that aliased
+    # read-modify-write inside the interpret-lowered while loop, so each
+    # grid step instead writes ITS OWN partial row and the (grid, slots)
+    # matrix is reduced by one tiny XLA reduce outside the kernel. Same
+    # single-launch batching, one extra grid x slots HBM write.
+    vals = flat_ref[...].astype(jnp.float32).reshape(-1)          # (TILE,)
+    ids = ids_ref[...].reshape(-1)                                # (TILE,) i32
+    sq = vals * vals
+    # Segmented reduction as a one-hot contraction: (1, TILE) @ (TILE, slots).
+    # On real TPU this maps onto the MXU; under interpret it is a numpy dot.
+    onehot = (ids[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, slots), 1)).astype(
+        jnp.float32
+    )
+    partial = jnp.dot(sq[None, :], onehot, preferred_element_type=jnp.float32)
+    out_ref[...] = partial
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers",))
+def batched_sq_norms(flat: jnp.ndarray, layer_ids: jnp.ndarray, num_layers: int) -> jnp.ndarray:
+    """Per-layer squared L2 norms in a single Pallas launch.
+
+    flat:      f32[N] packed layer buffer, N a multiple of TILE (=1024)
+    layer_ids: i32[N] layer id per element; padding elements carry an id in
+               [num_layers, slots) so they land in sacrificial slots
+    returns:   f32[num_layers]
+    """
+    n = flat.shape[0]
+    if n % TILE != 0:
+        raise ValueError(f"flat length {n} not a multiple of {TILE}; pad with padded_len()")
+    slots = padded_layer_slots(num_layers)
+    rows = n // TILE_COLS
+    flat2 = flat.reshape(rows, TILE_COLS)
+    ids2 = layer_ids.reshape(rows, TILE_COLS)
+    grid = rows // TILE_ROWS
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, slots=slots),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, slots), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, slots), jnp.float32),
+        interpret=True,  # CPU-PJRT target; real TPU would drop this flag
+    )(flat2, ids2)
+    # Tiny (grid x slots) tree-reduce outside the kernel; see _kernel note.
+    return jnp.sum(out, axis=0)[:num_layers]
+
+
+def make_layer_ids(sizes: list[int], num_layers: int | None = None) -> jnp.ndarray:
+    """Build the i32 layer-id map for a packed buffer of the given layer sizes.
+
+    Returns ids of length padded_len(sum(sizes)); padding gets id num_layers
+    (the sacrificial slot).
+    """
+    num_layers = len(sizes) if num_layers is None else num_layers
+    total = sum(sizes)
+    n = padded_len(total)
+    ids = jnp.full((n,), num_layers, dtype=jnp.int32)
+    off = 0
+    for i, s in enumerate(sizes):
+        ids = ids.at[off : off + s].set(i)
+        off += s
+    return ids

@@ -1,0 +1,81 @@
+"""Fused LARS + momentum-SGD update kernel.
+
+The paper updates fp32 master weights with LARS (You et al. 2017) layer-wise
+trust ratios. Done naively this is 4 elementwise passes per layer x ~160
+layers; fused here it is ONE flat sweep over the packed parameter buffer:
+
+  m' = momentum * m + scale * lr * (g + wd * w)
+  w' = w - m'
+
+where `scale[i] = trust_ratio[layer_id[i]]` has already been gathered to
+element granularity (an L-sized gather, done in the surrounding jnp — it is
+negligible next to the P-sized sweep). The kernel reads 4 flat fp32 streams
+and writes 2; on real TPU each (8,128) tile is a VMEM-resident
+load-fma-store with no HBM re-traffic, i.e. purely bandwidth-bound at the
+roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .batched_norms import TILE, TILE_COLS, TILE_ROWS
+
+
+def _kernel(lr_ref, w_ref, g_ref, m_ref, s_ref, w_out, m_out, *, momentum, weight_decay):
+    lr = lr_ref[0, 0]
+    w = w_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    s = s_ref[...]
+    m_new = momentum * m + s * lr * (g + weight_decay * w)
+    w_out[...] = w - m_new
+    m_out[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("momentum", "weight_decay"))
+def lars_momentum_update(
+    w: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    scale: jnp.ndarray,
+    lr: jnp.ndarray,
+    momentum: float,
+    weight_decay: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the fused update over packed flat fp32 buffers.
+
+    w, g, m, scale: f32[N] with N a multiple of TILE (=1024); lr: f32 scalar.
+    Returns (w', m') with the same packed layout.
+    """
+    n = w.shape[0]
+    if n % TILE != 0:
+        raise ValueError(f"length {n} not a multiple of {TILE}")
+    rows = n // TILE_COLS
+    grid = rows // TILE_ROWS
+    shape2 = (rows, TILE_COLS)
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+
+    tile_spec = pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i: (i, 0))
+    w2, m2 = pl.pallas_call(
+        functools.partial(_kernel, momentum=momentum, weight_decay=weight_decay),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # lr scalar, replicated
+            tile_spec,
+            tile_spec,
+            tile_spec,
+            tile_spec,
+        ],
+        out_specs=[tile_spec, tile_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape2, jnp.float32),
+            jax.ShapeDtypeStruct(shape2, jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT target
+    )(lr2, w.reshape(shape2), g.reshape(shape2), m.reshape(shape2), scale.reshape(shape2))
+    return w2.reshape(n), m2.reshape(n)

@@ -1,0 +1,249 @@
+"""L2: the paper's compute graphs — fwd/bwd, LARS update, evaluation.
+
+Three jitted functions are AOT-lowered to HLO text by aot.py and executed
+from rust; python never runs at training time:
+
+  grad_step(params[Np], bn_state[S], images[B,H,W,C], labels[B])
+      -> (loss_mean, correct_count, grads[Np], new_bn_state[S])
+  update_step(params[Np], momentum[Np], grads[Np], lr)
+      -> (new_params[Np], new_momentum[Np])          (LARS or plain SGD)
+  eval_step(params[Np], bn_state[S], images[B,H,W,C], labels[B])
+      -> (loss_mean, correct_count)
+
+All parameter-sized buffers use ONE packed layout: the concatenation of
+every layer tensor in `resnet.build_specs` order, zero-padded to a multiple
+of the Pallas tile (1024 fp32 elements). Np is that padded length. The rust
+side gets the layout from manifest.json and buckets/allreduces the exact
+same bytes — the gradient that crosses the L3 boundary is the gradient the
+update kernel consumes.
+
+The update graph is where the paper's T1/T6 land: two `batched_sq_norms`
+Pallas launches (all layer ‖w‖², ‖g‖² at once), an L-sized trust-ratio
+computation, an L-sized gather to element granularity, and one fused
+`lars_momentum_update` sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import resnet
+from .kernels import batched_norms as bn_kernel
+from .kernels import lars as lars_kernel
+from .kernels import loss as loss_kernel
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer + loss hyper-parameters baked into the artifacts."""
+
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    lars_eta: float = 0.001
+    lars_eps: float = 1e-9
+    label_smoothing: float = 0.1
+    batch_size: int = 32
+
+
+def packed_param_len(cfg: resnet.ResNetConfig) -> int:
+    return bn_kernel.padded_len(resnet.param_count(cfg))
+
+
+def layer_tables(cfg: resnet.ResNetConfig):
+    """(param specs, state specs, layer sizes, lars-skip mask)."""
+    pspecs, sspecs = resnet.build_specs(cfg)
+    sizes = [s.size for s in pspecs]
+    skip = np.array(
+        [1 if s.kind in resnet.LARS_SKIP_KINDS else 0 for s in pspecs], dtype=np.int32
+    )
+    return pspecs, sspecs, sizes, skip
+
+
+# ---------------------------------------------------------------------------
+# graphs
+
+
+def make_grad_step(cfg: resnet.ResNetConfig, tc: TrainConfig, smoothing: float | None = None):
+    """Build the per-worker fwd+bwd function over packed buffers."""
+    pspecs, _, _, _ = layer_tables(cfg)
+    p_count = sum(s.size for s in pspecs)
+    np_len = packed_param_len(cfg)
+    eps = tc.label_smoothing if smoothing is None else smoothing
+
+    def loss_fn(params_pad, state_flat, images, labels):
+        logits, new_state = resnet.forward(
+            cfg, params_pad[:p_count], state_flat, images, training=True
+        )
+        per_ex = loss_kernel.smoothed_softmax_xent(logits, labels, eps)
+        loss = jnp.mean(per_ex)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return loss, (correct, new_state)
+
+    def grad_step(params_pad, state_flat, images, labels):
+        (loss, (correct, new_state)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params_pad, state_flat, images, labels
+        )
+        # autodiff of the [:p_count] slice already yields zero grad on padding
+        return loss, correct, grads, new_state
+
+    return grad_step
+
+
+def make_update_step(cfg: resnet.ResNetConfig, tc: TrainConfig, use_lars: bool):
+    """Build the master-weight update over packed buffers (LARS or SGD).
+
+    `ids` (i32[Np] layer-id map, padding -> num_layers) and `skip`
+    (i32[num_layers] LARS-skip mask) are RUNTIME INPUTS, not baked
+    constants: the CPU-PJRT target (xla_extension 0.5.1) silently mangles
+    large integer constant arrays when round-tripping through HLO text, so
+    the rust side supplies them from manifest.json instead. (Discovered
+    the hard way; see rust/tests/integration.rs::lars_and_sgd_updates_differ.)
+    """
+    pspecs, _, _, _ = layer_tables(cfg)
+    num_layers = len(pspecs)
+
+    def update_step(params_pad, momentum_pad, grads_pad, lr, ids, skip):
+        if use_lars:
+            w_sq = bn_kernel.batched_sq_norms(params_pad, ids, num_layers)
+            g_sq = bn_kernel.batched_sq_norms(grads_pad, ids, num_layers)
+            trust = kref.lars_trust_ratios_ref(
+                w_sq, g_sq, tc.weight_decay, tc.lars_eta, tc.lars_eps, skip
+            )
+            # element-granularity gather; padding (id == num_layers) -> 1.0
+            trust1 = jnp.concatenate([trust, jnp.ones((1,), jnp.float32)])
+            scale = trust1[jnp.minimum(ids, num_layers)]
+        else:
+            scale = jnp.ones_like(params_pad)
+        return lars_kernel.lars_momentum_update(
+            params_pad, grads_pad, momentum_pad, scale, lr, tc.momentum, tc.weight_decay
+        )
+
+    return update_step
+
+
+def make_update_inputs(cfg: resnet.ResNetConfig):
+    """The (ids, skip) arrays the caller must feed `update_step`."""
+    pspecs, _, sizes, skip = layer_tables(cfg)
+    ids = bn_kernel.make_layer_ids(sizes, len(pspecs))
+    return ids, jnp.asarray(skip)
+
+
+def make_update_step_perlayer(cfg: resnet.ResNetConfig, tc: TrainConfig):
+    """Ablation A7 baseline: LARS with PER-LAYER norm reductions.
+
+    This is what the paper's Section III-B-2 kernel replaces: one reduce
+    per layer (2L reduces total) instead of a single batched launch. The
+    graph is built with static slices so XLA genuinely emits per-layer
+    reductions; benches/norms.rs times this artifact against update_lars.
+    Same (ids, skip) runtime-input signature as make_update_step so the
+    rust engine can call either interchangeably.
+    """
+    pspecs, _, sizes, _ = layer_tables(cfg)
+    num_layers = len(pspecs)
+    offsets = []
+    off = 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+
+    def update_step(params_pad, momentum_pad, grads_pad, lr, ids, skip):
+        w_sq = jnp.stack(
+            [jnp.sum(jax.lax.dynamic_slice_in_dim(params_pad, o, s) ** 2) for o, s in zip(offsets, sizes)]
+        )
+        g_sq = jnp.stack(
+            [jnp.sum(jax.lax.dynamic_slice_in_dim(grads_pad, o, s) ** 2) for o, s in zip(offsets, sizes)]
+        )
+        trust = kref.lars_trust_ratios_ref(
+            w_sq, g_sq, tc.weight_decay, tc.lars_eta, tc.lars_eps, skip
+        )
+        trust1 = jnp.concatenate([trust, jnp.ones((1,), jnp.float32)])
+        scale = trust1[jnp.minimum(ids, num_layers)]
+        return lars_kernel.lars_momentum_update(
+            params_pad, grads_pad, momentum_pad, scale, lr, tc.momentum, tc.weight_decay
+        )
+
+    return update_step
+
+
+def make_eval_step(cfg: resnet.ResNetConfig, tc: TrainConfig):
+    pspecs, _, _, _ = layer_tables(cfg)
+    p_count = sum(s.size for s in pspecs)
+
+    def eval_step(params_pad, state_flat, images, labels):
+        logits, _ = resnet.forward(
+            cfg, params_pad[:p_count], state_flat, images, training=False
+        )
+        per_ex = loss_kernel.smoothed_softmax_xent(logits, labels, tc.label_smoothing)
+        loss = jnp.mean(per_ex)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return loss, correct
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp end-to-end reference (used by pytest to check the packed graphs)
+
+
+def make_grad_step_ref(cfg: resnet.ResNetConfig, tc: TrainConfig):
+    pspecs, _, _, _ = layer_tables(cfg)
+    p_count = sum(s.size for s in pspecs)
+
+    def loss_fn(params_pad, state_flat, images, labels):
+        logits, new_state = resnet.forward(
+            cfg, params_pad[:p_count], state_flat, images, training=True
+        )
+        per_ex = kref.smoothed_softmax_xent_ref(logits, labels, tc.label_smoothing)
+        loss = jnp.mean(per_ex)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return loss, (correct, new_state)
+
+    def grad_step(params_pad, state_flat, images, labels):
+        (loss, (correct, new_state)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params_pad, state_flat, images, labels
+        )
+        return loss, correct, grads, new_state
+
+    return grad_step
+
+
+def make_update_step_ref(cfg: resnet.ResNetConfig, tc: TrainConfig, use_lars: bool):
+    pspecs, _, _, _ = layer_tables(cfg)
+    num_layers = len(pspecs)
+
+    def update_step(params_pad, momentum_pad, grads_pad, lr, ids, skip):
+        if use_lars:
+            w_sq = kref.batched_sq_norms_ref(params_pad, ids, num_layers)
+            g_sq = kref.batched_sq_norms_ref(grads_pad, ids, num_layers)
+            trust = kref.lars_trust_ratios_ref(
+                w_sq, g_sq, tc.weight_decay, tc.lars_eta, tc.lars_eps, skip
+            )
+            trust1 = jnp.concatenate([trust, jnp.ones((1,), jnp.float32)])
+            scale = trust1[jnp.minimum(ids, num_layers)]
+        else:
+            scale = jnp.ones_like(params_pad)
+        return kref.lars_momentum_update_ref(
+            params_pad, grads_pad, momentum_pad, scale, lr, tc.momentum, tc.weight_decay
+        )
+
+    return update_step
+
+
+# ---------------------------------------------------------------------------
+# packed-buffer init helpers (shared by aot + tests)
+
+
+def init_packed_params(cfg: resnet.ResNetConfig, seed: int) -> jnp.ndarray:
+    flat = resnet.init_params(cfg, seed)
+    np_len = packed_param_len(cfg)
+    return jnp.pad(flat, (0, np_len - flat.shape[0]))
+
+
+def init_packed_momentum(cfg: resnet.ResNetConfig) -> jnp.ndarray:
+    return jnp.zeros((packed_param_len(cfg),), jnp.float32)

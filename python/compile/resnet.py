@@ -1,0 +1,323 @@
+"""ResNet family in pure JAX (no framework deps) for the L2 compute graph.
+
+The paper trains ResNet-50 (bottleneck blocks, BN) on 224x224 ImageNet.
+Training that on the CPU-interpret Pallas path is infeasible, so the family
+here is the standard CIFAR-style scaling of the same architecture — basic
+and bottleneck residual blocks, BN everywhere, the same *layer inventory
+structure* (conv / bn_gamma / bn_beta / fc_w / fc_b) that LARS, the batched
+norm kernel and the rust bucketing all key off. DESIGN.md §3 records the
+substitution.
+
+Parameters are an ordered list of (name, kind, array) — the order IS the
+packed flat layout shared with rust via manifest.json. BatchNorm moving
+averages are a separate "state" list with its own flat layout (they are
+synchronized data, not LARS-updated weights — paper III-A-2 tunes their
+momentum, exposed here as `bn_momentum`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Parameter kinds — rust mirrors these in model_meta (manifest.json "kind").
+K_CONV = "conv"
+K_BN_GAMMA = "bn_gamma"
+K_BN_BETA = "bn_beta"
+K_FC_W = "fc_w"
+K_FC_B = "fc_b"
+# Kinds that LARS skips (trust ratio forced to 1.0) per You et al. recipe.
+LARS_SKIP_KINDS = frozenset({K_BN_GAMMA, K_BN_BETA, K_FC_B})
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    """Architecture hyper-parameters.
+
+    stage_blocks: residual blocks per stage (CIFAR ResNet has 3 stages).
+    width: filters of the first stage (doubles per stage).
+    bottleneck: use 1x1-3x3-1x1 bottleneck blocks (ResNet-50 style) instead
+                of basic 3x3-3x3 blocks.
+    """
+
+    name: str
+    num_classes: int = 10
+    image_size: int = 32
+    channels: int = 3
+    stage_blocks: tuple[int, ...] = (2, 2, 2)
+    width: int = 16
+    bottleneck: bool = False
+    bn_momentum: float = 0.9
+    bn_epsilon: float = 1e-5
+
+
+PRESETS: dict[str, ResNetConfig] = {
+    # ~46k params — fast enough for CI-grade e2e on the interpret path.
+    "resnet_micro": ResNetConfig(name="resnet_micro", stage_blocks=(1, 1, 1), width=8),
+    # CIFAR ResNet-20 (He et al. 2016 sec 4.2): ~0.27M params.
+    "resnet_tiny": ResNetConfig(name="resnet_tiny", stage_blocks=(3, 3, 3), width=16),
+    # Bottleneck variant — same block type as the paper's ResNet-50.
+    "resnet_small": ResNetConfig(
+        name="resnet_small", stage_blocks=(2, 2, 2), width=16, bottleneck=True
+    ),
+    # Deeper bottleneck stack for scaling studies (~1.7M params).
+    "resnet_mid": ResNetConfig(
+        name="resnet_mid", stage_blocks=(3, 4, 3), width=32, bottleneck=True
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    kind: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    name: str  # <bn layer>.mean / <bn layer>.var
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def _conv_spec(name: str, kh: int, kw: int, cin: int, cout: int) -> ParamSpec:
+    # HWIO layout (jax lax conv rhs default for NHWC).
+    return ParamSpec(name, K_CONV, (kh, kw, cin, cout))
+
+
+def _bn_specs(name: str, c: int) -> tuple[ParamSpec, ParamSpec, StateSpec, StateSpec]:
+    return (
+        ParamSpec(f"{name}.gamma", K_BN_GAMMA, (c,)),
+        ParamSpec(f"{name}.beta", K_BN_BETA, (c,)),
+        StateSpec(f"{name}.mean", (c,)),
+        StateSpec(f"{name}.var", (c,)),
+    )
+
+
+def build_specs(cfg: ResNetConfig) -> tuple[list[ParamSpec], list[StateSpec]]:
+    """Enumerate the full layer inventory in packed order."""
+    params: list[ParamSpec] = []
+    states: list[StateSpec] = []
+
+    def add_bn(name: str, c: int) -> None:
+        g, b, m, v = _bn_specs(name, c)
+        params.extend([g, b])
+        states.extend([m, v])
+
+    w = cfg.width
+    params.append(_conv_spec("stem.conv", 3, 3, cfg.channels, w))
+    add_bn("stem.bn", w)
+
+    cin = w
+    for si, nblocks in enumerate(cfg.stage_blocks):
+        cout = w * (2**si)
+        for bi in range(nblocks):
+            pre = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            if cfg.bottleneck:
+                mid = cout
+                cexp = cout * 4
+                params.append(_conv_spec(f"{pre}.conv1", 1, 1, cin, mid))
+                add_bn(f"{pre}.bn1", mid)
+                params.append(_conv_spec(f"{pre}.conv2", 3, 3, mid, mid))
+                add_bn(f"{pre}.bn2", mid)
+                params.append(_conv_spec(f"{pre}.conv3", 1, 1, mid, cexp))
+                add_bn(f"{pre}.bn3", cexp)
+                if stride != 1 or cin != cexp:
+                    params.append(_conv_spec(f"{pre}.proj", 1, 1, cin, cexp))
+                    add_bn(f"{pre}.proj_bn", cexp)
+                cin = cexp
+            else:
+                params.append(_conv_spec(f"{pre}.conv1", 3, 3, cin, cout))
+                add_bn(f"{pre}.bn1", cout)
+                params.append(_conv_spec(f"{pre}.conv2", 3, 3, cout, cout))
+                add_bn(f"{pre}.bn2", cout)
+                if stride != 1 or cin != cout:
+                    params.append(_conv_spec(f"{pre}.proj", 1, 1, cin, cout))
+                    add_bn(f"{pre}.proj_bn", cout)
+                cin = cout
+
+    params.append(ParamSpec("fc.w", K_FC_W, (cin, cfg.num_classes)))
+    params.append(ParamSpec("fc.b", K_FC_B, (cfg.num_classes,)))
+    return params, states
+
+
+def param_count(cfg: ResNetConfig) -> int:
+    p, _ = build_specs(cfg)
+    return sum(s.size for s in p)
+
+
+def state_count(cfg: ResNetConfig) -> int:
+    _, s = build_specs(cfg)
+    return sum(x.size for x in s)
+
+
+# ---------------------------------------------------------------------------
+# flat <-> structured views
+
+
+def unflatten(flat: jnp.ndarray, specs: Sequence[ParamSpec | StateSpec]) -> dict[str, jnp.ndarray]:
+    out: dict[str, jnp.ndarray] = {}
+    off = 0
+    for s in specs:
+        out[s.name] = jax.lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape)
+        off += s.size
+    return out
+
+
+def flatten(tree: dict[str, jnp.ndarray], specs: Sequence[ParamSpec | StateSpec]) -> jnp.ndarray:
+    return jnp.concatenate([tree[s.name].reshape(-1) for s in specs])
+
+
+# ---------------------------------------------------------------------------
+# initialization (paper III-B-1: every process runs this with the same seed,
+# so no weight broadcast is needed; rust/src/init mirrors the same contract)
+
+
+def init_params(cfg: ResNetConfig, seed: int) -> jnp.ndarray:
+    """He-normal conv/fc weights, BN gamma=1 beta=0. Returns the packed flat."""
+    specs, _ = build_specs(cfg)
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.kind == K_CONV:
+            fan_in = s.shape[0] * s.shape[1] * s.shape[2]
+            std = float(np.sqrt(2.0 / fan_in))
+            chunks.append(jax.random.truncated_normal(sub, -2.0, 2.0, s.shape) * std)
+        elif s.kind == K_FC_W:
+            std = float(np.sqrt(1.0 / s.shape[0]))
+            chunks.append(jax.random.truncated_normal(sub, -2.0, 2.0, s.shape) * std)
+        elif s.kind == K_BN_GAMMA:
+            chunks.append(jnp.ones(s.shape))
+        else:  # beta, fc bias
+            chunks.append(jnp.zeros(s.shape))
+    return jnp.concatenate([c.reshape(-1).astype(jnp.float32) for c in chunks])
+
+
+def init_state(cfg: ResNetConfig) -> jnp.ndarray:
+    """BN moving averages: mean=0, var=1, packed flat."""
+    _, states = build_specs(cfg)
+    chunks = []
+    for s in states:
+        if s.name.endswith(".var"):
+            chunks.append(jnp.ones(s.shape, jnp.float32))
+        else:
+            chunks.append(jnp.zeros(s.shape, jnp.float32))
+    return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _batch_norm(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    mean: jnp.ndarray,
+    var: jnp.ndarray,
+    *,
+    training: bool,
+    momentum: float,
+    eps: float,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (y, new_mean, new_var). In eval mode the running stats pass
+    through unchanged and normalize the batch."""
+    if training:
+        bm = jnp.mean(x, axis=(0, 1, 2))
+        bv = jnp.var(x, axis=(0, 1, 2))
+        y = (x - bm) * jax.lax.rsqrt(bv + eps) * gamma + beta
+        # paper III-A-2: `momentum` here is the tuned moving-average knob
+        new_mean = momentum * mean + (1.0 - momentum) * bm
+        new_var = momentum * var + (1.0 - momentum) * bv
+        return y, new_mean, new_var
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return y, mean, var
+
+
+def forward(
+    cfg: ResNetConfig,
+    params_flat: jnp.ndarray,
+    state_flat: jnp.ndarray,
+    images: jnp.ndarray,
+    *,
+    training: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the network. images f32[N,H,W,C] -> (logits f32[N,classes],
+    new_state_flat)."""
+    pspecs, sspecs = build_specs(cfg)
+    p = unflatten(params_flat, pspecs)
+    s = unflatten(state_flat, sspecs)
+    new_s = dict(s)
+
+    def bn(x: jnp.ndarray, name: str) -> jnp.ndarray:
+        y, nm, nv = _batch_norm(
+            x,
+            p[f"{name}.gamma"],
+            p[f"{name}.beta"],
+            s[f"{name}.mean"],
+            s[f"{name}.var"],
+            training=training,
+            momentum=cfg.bn_momentum,
+            eps=cfg.bn_epsilon,
+        )
+        new_s[f"{name}.mean"] = nm
+        new_s[f"{name}.var"] = nv
+        return y
+
+    x = _conv(images, p["stem.conv"], 1)
+    x = jax.nn.relu(bn(x, "stem.bn"))
+
+    w = cfg.width
+    cin = w
+    for si, nblocks in enumerate(cfg.stage_blocks):
+        cout = w * (2**si)
+        for bi in range(nblocks):
+            pre = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            shortcut = x
+            if cfg.bottleneck:
+                cexp = cout * 4
+                h = jax.nn.relu(bn(_conv(x, p[f"{pre}.conv1"], 1), f"{pre}.bn1"))
+                h = jax.nn.relu(bn(_conv(h, p[f"{pre}.conv2"], stride), f"{pre}.bn2"))
+                h = bn(_conv(h, p[f"{pre}.conv3"], 1), f"{pre}.bn3")
+                if stride != 1 or cin != cexp:
+                    shortcut = bn(_conv(x, p[f"{pre}.proj"], stride), f"{pre}.proj_bn")
+                x = jax.nn.relu(h + shortcut)
+                cin = cexp
+            else:
+                h = jax.nn.relu(bn(_conv(x, p[f"{pre}.conv1"], stride), f"{pre}.bn1"))
+                h = bn(_conv(h, p[f"{pre}.conv2"], 1), f"{pre}.bn2")
+                if stride != 1 or cin != cout:
+                    shortcut = bn(_conv(x, p[f"{pre}.proj"], stride), f"{pre}.proj_bn")
+                x = jax.nn.relu(h + shortcut)
+                cin = cout
+
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    logits = x @ p["fc.w"] + p["fc.b"]
+    new_state_flat = flatten(new_s, sspecs)
+    return logits, new_state_flat

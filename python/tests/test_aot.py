@@ -1,0 +1,76 @@
+"""AOT pipeline checks: manifest consistency and HLO text emission."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import resnet
+
+
+def test_manifest_offsets_are_contiguous():
+    cfg = resnet.PRESETS["resnet_micro"]
+    tc = M.TrainConfig()
+    man = aot.build_manifest(cfg, tc)
+    off = 0
+    for l in man["layers"]:
+        assert l["offset"] == off
+        off += l["size"]
+    assert off == man["param_count"]
+    assert man["padded_param_count"] % man["pallas_tile"] == 0
+    assert man["padded_param_count"] >= man["param_count"]
+
+
+def test_manifest_lars_skip_kinds():
+    man = aot.build_manifest(resnet.PRESETS["resnet_micro"], M.TrainConfig())
+    for l in man["layers"]:
+        if l["kind"] in ("bn_gamma", "bn_beta", "fc_b"):
+            assert l["lars_skip"], l
+        else:
+            assert not l["lars_skip"], l
+
+
+def test_manifest_is_valid_json():
+    man = aot.build_manifest(resnet.PRESETS["resnet_micro"], M.TrainConfig())
+    text = json.dumps(man)
+    assert json.loads(text) == man
+
+
+def test_hlo_text_emission(tmp_path):
+    """Lower the (cheap) update graph and check the HLO text contract the
+    rust loader depends on."""
+    cfg = resnet.PRESETS["resnet_micro"]
+    tc = M.TrainConfig()
+    np_len = M.packed_param_len(cfg)
+    spec = jax.ShapeDtypeStruct((np_len,), jnp.float32)
+    lr_s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    ids_s = jax.ShapeDtypeStruct((np_len,), jnp.int32)
+    skip_s = jax.ShapeDtypeStruct((len(M.layer_tables(cfg)[0]),), jnp.int32)
+    fn = M.make_update_step(cfg, tc, use_lars=False)
+    path = str(tmp_path / "u.hlo.txt")
+    n = aot.lower_and_write(
+        lambda p, m, g, lr, ids, skip: fn(p, m, g, lr[0], ids, skip),
+        (spec, spec, spec, lr_s, ids_s, skip_s),
+        path,
+    )
+    assert n > 100
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # tuple-return convention the rust side unpacks with to_tuple()
+    assert "(f32[" in text
+
+
+def test_state_entries_pair_mean_var():
+    man = aot.build_manifest(resnet.PRESETS["resnet_tiny"], M.TrainConfig())
+    names = [s["name"] for s in man["states"]]
+    means = [n for n in names if n.endswith(".mean")]
+    variances = [n for n in names if n.endswith(".var")]
+    assert len(means) == len(variances) == len(names) // 2
+    for m in means:
+        assert m.replace(".mean", ".var") in variances

@@ -1,0 +1,212 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes/values; tolerances are tight because both
+sides compute in fp32 (only reduction order differs).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    TILE,
+    batched_sq_norms,
+    lars_momentum_update,
+    make_layer_ids,
+    padded_len,
+    smoothed_softmax_xent,
+)
+from compile.kernels import ref
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+# ---------------------------------------------------------------------------
+# batched_sq_norms
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    sizes=st.lists(st.integers(min_value=1, max_value=3000), min_size=1, max_size=40),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_batched_norms_matches_ref(sizes, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    total = sum(sizes)
+    n = padded_len(total)
+    flat = np.zeros(n, np.float32)
+    flat[:total] = rng.randn(total).astype(np.float32)
+    ids = make_layer_ids(sizes)
+    got = batched_sq_norms(jnp.asarray(flat), ids, len(sizes))
+    want = ref.batched_sq_norms_ref(jnp.asarray(flat), ids, len(sizes))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_norms_ignores_padding():
+    sizes = [100, 200]
+    ids = make_layer_ids(sizes)
+    n = ids.shape[0]
+    flat = np.ones(n, np.float32) * 7.0  # padding region also nonzero!
+    got = np.asarray(batched_sq_norms(jnp.asarray(flat), ids, 2))
+    np.testing.assert_allclose(got, [100 * 49.0, 200 * 49.0], rtol=1e-6)
+
+
+def test_batched_norms_single_layer_spanning_tiles():
+    sizes = [5000]
+    ids = make_layer_ids(sizes)
+    flat = np.zeros(ids.shape[0], np.float32)
+    flat[:5000] = 2.0
+    got = np.asarray(batched_sq_norms(jnp.asarray(flat), ids, 1))
+    np.testing.assert_allclose(got, [5000 * 4.0], rtol=1e-6)
+
+
+def test_batched_norms_rejects_unpadded():
+    with pytest.raises(ValueError):
+        batched_sq_norms(jnp.zeros(1000), jnp.zeros(1000, jnp.int32), 1)
+
+
+def test_layer_ids_layout():
+    ids = np.asarray(make_layer_ids([3, 5]))
+    assert ids.shape[0] == TILE
+    assert list(ids[:3]) == [0, 0, 0]
+    assert list(ids[3:8]) == [1] * 5
+    assert all(ids[8:] == 2)  # padding slot
+
+
+# ---------------------------------------------------------------------------
+# lars_momentum_update
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    n_tiles=st.integers(min_value=1, max_value=8),
+    momentum=st.floats(min_value=0.0, max_value=0.99),
+    wd=st.floats(min_value=0.0, max_value=0.01),
+    lr=st.floats(min_value=1e-4, max_value=10.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_lars_update_matches_ref(n_tiles, momentum, wd, lr, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    n = n_tiles * TILE
+    w, g, m, s = (jnp.asarray(rng.randn(n).astype(np.float32)) for _ in range(4))
+    lr = jnp.float32(lr)
+    w2, m2 = lars_momentum_update(w, g, m, s, lr, momentum, wd)
+    w2r, m2r = ref.lars_momentum_update_ref(w, g, m, s, lr, momentum, wd)
+    np.testing.assert_allclose(m2, m2r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(w2, w2r, rtol=1e-5, atol=1e-6)
+
+
+def test_lars_zero_momentum_is_pure_sgd_step():
+    n = TILE
+    w = jnp.ones(n)
+    g = jnp.full((n,), 0.5)
+    m = jnp.zeros(n)
+    s = jnp.ones(n)
+    w2, m2 = lars_momentum_update(w, g, m, s, jnp.float32(0.1), 0.0, 0.0)
+    np.testing.assert_allclose(w2, 1.0 - 0.05, rtol=1e-6)
+    np.testing.assert_allclose(m2, 0.05, rtol=1e-6)
+
+
+def test_lars_rejects_unaligned():
+    n = 100
+    z = jnp.zeros(n)
+    with pytest.raises(ValueError):
+        lars_momentum_update(z, z, z, z, jnp.float32(0.1), 0.9, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# trust ratios (jnp-level, used inside the update graph)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    num_layers=st.integers(min_value=1, max_value=50),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_trust_ratios_properties(num_layers, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    w_sq = jnp.asarray(np.abs(rng.randn(num_layers)).astype(np.float32))
+    g_sq = jnp.asarray(np.abs(rng.randn(num_layers)).astype(np.float32))
+    skip = jnp.asarray((rng.rand(num_layers) < 0.3).astype(np.int32))
+    t = np.asarray(ref.lars_trust_ratios_ref(w_sq, g_sq, 5e-4, 0.001, 1e-9, skip))
+    assert np.all(t > 0)
+    assert np.all(t[np.asarray(skip) == 1] == 1.0)
+
+
+def test_trust_ratio_zero_norm_falls_back_to_one():
+    w_sq = jnp.asarray([0.0, 1.0], jnp.float32)
+    g_sq = jnp.asarray([1.0, 0.0], jnp.float32)
+    t = np.asarray(
+        ref.lars_trust_ratios_ref(w_sq, g_sq, 5e-4, 0.001, 1e-9, jnp.zeros(2, jnp.int32))
+    )
+    np.testing.assert_allclose(t, [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# smoothed softmax cross-entropy
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    b8=st.integers(min_value=1, max_value=8),
+    c=st.integers(min_value=2, max_value=100),
+    smoothing=st.floats(min_value=0.0, max_value=0.5),
+    scale=st.floats(min_value=0.1, max_value=30.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_loss_fwd_matches_ref(b8, c, smoothing, scale, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    b = 8 * b8
+    logits = jnp.asarray((rng.randn(b, c) * scale).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, c, b).astype(np.int32))
+    got = smoothed_softmax_xent(logits, labels, smoothing)
+    want = ref.smoothed_softmax_xent_ref(logits, labels, smoothing)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    b8=st.integers(min_value=1, max_value=4),
+    c=st.integers(min_value=2, max_value=40),
+    smoothing=st.floats(min_value=0.0, max_value=0.3),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_loss_grad_matches_ref(b8, c, smoothing, seed):
+    rng = np.random.RandomState(seed % 2**31)
+    b = 8 * b8
+    logits = jnp.asarray((rng.randn(b, c) * 3).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, c, b).astype(np.int32))
+    f = lambda lg: jnp.mean(smoothed_softmax_xent(lg, labels, smoothing))
+    fr = lambda lg: jnp.mean(ref.smoothed_softmax_xent_ref(lg, labels, smoothing))
+    gk = jax.grad(f)(logits)
+    gr = jax.grad(fr)(logits)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-6)
+
+
+def test_loss_numerically_stable_at_large_logits():
+    logits = jnp.asarray([[1e4, 0.0, -1e4] + [0.0] * 5] * 8, jnp.float32)
+    labels = jnp.zeros(8, jnp.int32)
+    out = np.asarray(smoothed_softmax_xent(logits, labels, 0.1))
+    assert np.all(np.isfinite(out))
+
+
+def test_loss_zero_smoothing_is_plain_xent():
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(8, 10).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, 10, 8).astype(np.int32))
+    got = smoothed_softmax_xent(logits, labels, 0.0)
+    logp = jax.nn.log_softmax(logits)
+    want = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_loss_gradient_sums_to_zero_per_example():
+    # d/dlogits of xent sums to (1 - sum(target)) = 0 per example.
+    rng = np.random.RandomState(1)
+    logits = jnp.asarray(rng.randn(8, 10).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, 10, 8).astype(np.int32))
+    g = jax.grad(lambda lg: jnp.sum(smoothed_softmax_xent(lg, labels, 0.1)))(logits)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), np.zeros(8), atol=1e-5)

@@ -1,0 +1,200 @@
+"""L2 correctness: the packed-buffer graphs vs pure-jnp references, model
+shape/structure checks, and training-dynamics sanity."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import resnet
+
+CFG = resnet.PRESETS["resnet_micro"]
+TC = M.TrainConfig(batch_size=16)
+
+
+def batch(seed=0, b=16, cfg=CFG):
+    rng = np.random.RandomState(seed)
+    img = jnp.asarray(rng.randn(b, cfg.image_size, cfg.image_size, cfg.channels).astype(np.float32))
+    lbl = jnp.asarray(rng.randint(0, cfg.num_classes, b).astype(np.int32))
+    return img, lbl
+
+
+# ---------------------------------------------------------------------------
+# structure
+
+
+def test_spec_sizes_add_up():
+    pspecs, sspecs = resnet.build_specs(CFG)
+    assert sum(s.size for s in pspecs) == resnet.param_count(CFG)
+    assert sum(s.size for s in sspecs) == resnet.state_count(CFG)
+    # every BN layer contributes gamma+beta and mean+var of the same width
+    gammas = [s for s in pspecs if s.kind == resnet.K_BN_GAMMA]
+    means = [s for s in sspecs if s.name.endswith(".mean")]
+    assert len(gammas) == len(means)
+
+
+@pytest.mark.parametrize("name", sorted(resnet.PRESETS))
+def test_all_presets_build_and_forward(name):
+    cfg = dataclasses.replace(resnet.PRESETS[name], num_classes=7)
+    p = resnet.init_params(cfg, 0)
+    s = resnet.init_state(cfg)
+    img, _ = batch(1, 8, cfg)
+    logits, new_s = resnet.forward(cfg, p, s, img, training=True)
+    assert logits.shape == (8, 7)
+    assert new_s.shape == s.shape
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_flatten_unflatten_round_trip():
+    pspecs, _ = resnet.build_specs(CFG)
+    p = resnet.init_params(CFG, 3)
+    tree = resnet.unflatten(p, pspecs)
+    p2 = resnet.flatten(tree, pspecs)
+    np.testing.assert_array_equal(p, p2)
+
+
+def test_bottleneck_has_three_convs_per_block():
+    cfg = resnet.PRESETS["resnet_small"]
+    pspecs, _ = resnet.build_specs(cfg)
+    b0 = [s for s in pspecs if s.name.startswith("s0b0.conv")]
+    assert len(b0) == 3
+
+
+def test_init_deterministic():
+    np.testing.assert_array_equal(resnet.init_params(CFG, 5), resnet.init_params(CFG, 5))
+    a = np.asarray(resnet.init_params(CFG, 5))
+    b = np.asarray(resnet.init_params(CFG, 6))
+    assert not np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# grad_step vs reference
+
+
+def test_grad_step_matches_pure_jnp_reference():
+    p = M.init_packed_params(CFG, 0)
+    s = resnet.init_state(CFG)
+    img, lbl = batch(0)
+    gs = jax.jit(M.make_grad_step(CFG, TC))
+    gsr = jax.jit(M.make_grad_step_ref(CFG, TC))
+    loss, correct, grads, ns = gs(p, s, img, lbl)
+    lr_, cr_, gr_, nsr_ = gsr(p, s, img, lbl)
+    np.testing.assert_allclose(loss, lr_, rtol=1e-5)
+    assert float(correct) == float(cr_)
+    np.testing.assert_allclose(grads, gr_, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(ns, nsr_, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_padding_is_zero():
+    p = M.init_packed_params(CFG, 0)
+    s = resnet.init_state(CFG)
+    img, lbl = batch(2)
+    gs = jax.jit(M.make_grad_step(CFG, TC))
+    _, _, grads, _ = gs(p, s, img, lbl)
+    pc = resnet.param_count(CFG)
+    np.testing.assert_array_equal(np.asarray(grads[pc:]), 0.0)
+
+
+def test_grad_step_smoothing_flag_changes_loss():
+    p = M.init_packed_params(CFG, 0)
+    s = resnet.init_state(CFG)
+    img, lbl = batch(3)
+    l1 = jax.jit(M.make_grad_step(CFG, TC))(p, s, img, lbl)[0]
+    l0 = jax.jit(M.make_grad_step(CFG, TC, smoothing=0.0))(p, s, img, lbl)[0]
+    assert abs(float(l1) - float(l0)) > 1e-4
+
+
+def test_bn_state_updates_in_train_not_eval():
+    p = M.init_packed_params(CFG, 0)
+    s = resnet.init_state(CFG)
+    img, lbl = batch(4)
+    _, _, _, ns = jax.jit(M.make_grad_step(CFG, TC))(p, s, img, lbl)
+    assert not np.allclose(np.asarray(ns), np.asarray(s))
+    ev = jax.jit(M.make_eval_step(CFG, TC))
+    loss, correct = ev(p, s, img, lbl)
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= img.shape[0]
+
+
+def test_finite_gradients_from_random_init():
+    p = M.init_packed_params(CFG, 42)
+    s = resnet.init_state(CFG)
+    img, lbl = batch(5)
+    _, _, grads, _ = jax.jit(M.make_grad_step(CFG, TC))(p, s, img, lbl)
+    assert bool(jnp.all(jnp.isfinite(grads)))
+    assert float(jnp.linalg.norm(grads)) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# update_step vs reference
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(
+    lr=st.floats(min_value=1e-3, max_value=2.0),
+    use_lars=st.booleans(),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_update_matches_reference(lr, use_lars, seed):
+    rng = np.random.RandomState(seed)
+    np_len = M.packed_param_len(CFG)
+    p = M.init_packed_params(CFG, seed)
+    m = jnp.asarray(rng.randn(np_len).astype(np.float32) * 0.01)
+    g = jnp.asarray(rng.randn(np_len).astype(np.float32) * 0.1)
+    ids, skip = M.make_update_inputs(CFG)
+    up = jax.jit(M.make_update_step(CFG, TC, use_lars))
+    upr = jax.jit(M.make_update_step_ref(CFG, TC, use_lars))
+    w2, m2 = up(p, m, g, jnp.float32(lr), ids, skip)
+    w2r, m2r = upr(p, m, g, jnp.float32(lr), ids, skip)
+    np.testing.assert_allclose(w2, w2r, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(m2, m2r, rtol=1e-4, atol=1e-6)
+
+
+def test_lars_differs_from_sgd():
+    rng = np.random.RandomState(0)
+    np_len = M.packed_param_len(CFG)
+    p = M.init_packed_params(CFG, 0)
+    m = jnp.zeros(np_len)
+    g = jnp.asarray(rng.randn(np_len).astype(np.float32) * 0.1)
+    ids, skip = M.make_update_inputs(CFG)
+    w_lars, _ = jax.jit(M.make_update_step(CFG, TC, True))(p, m, g, jnp.float32(0.5), ids, skip)
+    w_sgd, _ = jax.jit(M.make_update_step(CFG, TC, False))(p, m, g, jnp.float32(0.5), ids, skip)
+    assert not np.allclose(np.asarray(w_lars), np.asarray(w_sgd))
+
+
+def test_update_preserves_padding():
+    np_len = M.packed_param_len(CFG)
+    pc = resnet.param_count(CFG)
+    p = M.init_packed_params(CFG, 0)
+    m = jnp.zeros(np_len)
+    g = jnp.ones(np_len) * 0.1  # even nonzero grad on padding
+    g = g.at[pc:].set(0.0)
+    ids, skip = M.make_update_inputs(CFG)
+    w2, m2 = jax.jit(M.make_update_step(CFG, TC, True))(p, m, g, jnp.float32(0.5), ids, skip)
+    np.testing.assert_array_equal(np.asarray(w2[pc:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(m2[pc:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end training dynamics (pure python, small)
+
+
+def test_few_steps_reduce_loss_on_fixed_batch():
+    p = M.init_packed_params(CFG, 0)
+    s = resnet.init_state(CFG)
+    m = M.init_packed_momentum(CFG)
+    img, lbl = batch(7)
+    gs = jax.jit(M.make_grad_step(CFG, TC))
+    up = jax.jit(M.make_update_step(CFG, TC, True))
+    ids, skip = M.make_update_inputs(CFG)
+    losses = []
+    for _ in range(10):
+        loss, _, grads, s = gs(p, s, img, lbl)
+        losses.append(float(loss))
+        p, m = up(p, m, grads, jnp.float32(0.2), ids, skip)
+    assert losses[-1] < losses[0] - 0.1, losses

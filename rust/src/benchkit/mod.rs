@@ -1,0 +1,186 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false` and drive
+//! this: warmup, fixed-duration measurement, robust stats, an aligned
+//! table printer for the paper-table reproductions, and JSON result dumps
+//! under `bench_results/` so EXPERIMENTS.md can cite exact numbers.
+
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("std_s", Json::Num(self.std_s)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("min_s", Json::Num(self.min_s)),
+        ])
+    }
+}
+
+/// Benchmark a closure: `warmup_iters` unmeasured runs, then measure until
+/// `measure_for` elapses (at least 5 samples).
+pub fn bench<F: FnMut()>(name: &str, warmup_iters: u64, measure_for: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup_iters {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let t_total = Instant::now();
+    while t_total.elapsed() < measure_for || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    finish(name, samples)
+}
+
+/// Benchmark with an explicit iteration count (for slow cases).
+pub fn bench_n<F: FnMut()>(name: &str, warmup_iters: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    finish(name, samples)
+}
+
+fn finish(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    assert!(!samples.is_empty());
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n.max(2.0);
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        p50_s: pct(0.50),
+        p95_s: pct(0.95),
+        min_s: samples[0],
+    }
+}
+
+/// Aligned table printer for paper-table reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write results JSON under bench_results/<file>.json.
+pub fn dump_results(file: &str, payload: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{file}.json"));
+    std::fs::write(&path, payload.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench_n("noop", 2, 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.p50_s && r.p50_s <= r.p95_s);
+    }
+
+    #[test]
+    fn bench_duration_mode_minimum_samples() {
+        let r = bench("fast", 1, Duration::from_millis(1), || {
+            std::hint::black_box((0..10).sum::<i64>());
+        });
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a  "));
+    }
+
+    #[test]
+    fn result_json_shape() {
+        let r = bench_n("x", 0, 5, || {});
+        let j = r.to_json();
+        assert_eq!(j.req_str("name").unwrap(), "x");
+        assert!(j.req_f64("mean_s").unwrap() >= 0.0);
+    }
+}

@@ -1,0 +1,287 @@
+//! Gradient bucketing (paper Section III-C-1).
+//!
+//! "Allreduce operation per each layer leads to large overhead due to
+//! frequent callings ... it is important to enlarge the data size of
+//! allreduce. We gathered gradients of layers and adjusted the data size
+//! of allreduce to several megabytes."
+//!
+//! A `BucketPlan` partitions the layer table into contiguous runs whose
+//! packed byte size reaches a target (default 4 MiB wire bytes). Because
+//! layers are contiguous in the packed gradient buffer, a bucket is just a
+//! span — no gather/scatter copies on the hot path, the allreduce operates
+//! directly on `grads[lo..hi]`.
+//!
+//! Backward order matters for overlap: gradients materialize back-to-front
+//! (fc first, stem last), so buckets are assembled in REVERSE layer order —
+//! bucket 0 becomes ready first during backprop. `overlap::Schedule`
+//! consumes that ordering.
+
+use crate::model_meta::Manifest;
+
+/// One allreduce bucket: a contiguous span of the packed gradient buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// Dense bucket index in READINESS order (0 = first ready in backward).
+    pub index: usize,
+    /// Packed-buffer element span [lo, hi).
+    pub lo: usize,
+    pub hi: usize,
+    /// Indices into `manifest.layers` covered by this bucket, in packed
+    /// (forward) order.
+    pub layer_indices: Vec<usize>,
+}
+
+impl Bucket {
+    pub fn elems(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn bytes(&self, bytes_per_elem: usize) -> usize {
+        self.elems() * bytes_per_elem
+    }
+}
+
+/// The bucket partition of a model's packed gradient buffer.
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    pub buckets: Vec<Bucket>,
+    /// Target bucket size used to build the plan, in BYTES of wire data.
+    pub target_bytes: usize,
+    pub bytes_per_elem: usize,
+    /// Trailing padding span (tile alignment), allreduced with the last
+    /// bucket so the whole Np buffer stays consistent across ranks.
+    pub padding: (usize, usize),
+}
+
+impl BucketPlan {
+    /// Greedy assembly in reverse layer order: walk layers fc -> stem,
+    /// open a new bucket whenever the current one has reached the target.
+    /// A single layer larger than the target gets its own bucket.
+    pub fn build(manifest: &Manifest, target_bytes: usize, bytes_per_elem: usize) -> BucketPlan {
+        assert!(target_bytes > 0 && bytes_per_elem > 0);
+        let nl = manifest.layers.len();
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cur_bytes = 0usize;
+
+        for li in (0..nl).rev() {
+            let l = &manifest.layers[li];
+            cur.push(li);
+            cur_bytes += l.size * bytes_per_elem;
+            if cur_bytes >= target_bytes {
+                buckets.push(Self::seal(manifest, std::mem::take(&mut cur), buckets.len()));
+                cur_bytes = 0;
+            }
+        }
+        if !cur.is_empty() {
+            buckets.push(Self::seal(manifest, cur, buckets.len()));
+        }
+
+        let padding = (manifest.param_count, manifest.padded_param_count);
+        BucketPlan { buckets, target_bytes, bytes_per_elem, padding }
+    }
+
+    /// One bucket per layer — the unbucketed baseline the paper improves on.
+    pub fn per_layer(manifest: &Manifest, bytes_per_elem: usize) -> BucketPlan {
+        let buckets = (0..manifest.layers.len())
+            .rev()
+            .enumerate()
+            .map(|(index, li)| Self::seal(manifest, vec![li], index))
+            .collect();
+        BucketPlan {
+            buckets,
+            target_bytes: 0,
+            bytes_per_elem,
+            padding: (manifest.param_count, manifest.padded_param_count),
+        }
+    }
+
+    /// Single bucket covering everything (the "fully fused" extreme).
+    pub fn single(manifest: &Manifest, bytes_per_elem: usize) -> BucketPlan {
+        let all: Vec<usize> = (0..manifest.layers.len()).rev().collect();
+        let bucket = Self::seal(manifest, all, 0);
+        BucketPlan {
+            buckets: vec![bucket],
+            target_bytes: usize::MAX,
+            bytes_per_elem,
+            padding: (manifest.param_count, manifest.padded_param_count),
+        }
+    }
+
+    fn seal(manifest: &Manifest, mut reversed_layers: Vec<usize>, index: usize) -> Bucket {
+        // reversed_layers came in reverse packed order; contiguity in the
+        // packed buffer means min offset .. max end.
+        reversed_layers.reverse();
+        let lo = manifest.layers[reversed_layers[0]].offset;
+        let last = &manifest.layers[*reversed_layers.last().unwrap()];
+        let hi = last.offset + last.size;
+        Bucket { index, lo, hi, layer_indices: reversed_layers }
+    }
+
+    /// The span to allreduce for bucket `i`, with padding attached to the
+    /// stem-most (last ready) bucket so it also reaches every rank.
+    pub fn span_with_padding(&self, i: usize) -> (usize, usize) {
+        let b = &self.buckets[i];
+        // Padding lives at the tail of the packed buffer, so it rides with
+        // the bucket whose span ends at param_count (bucket 0 in backward
+        // order, since fc is packed last).
+        if b.hi == self.padding.0 {
+            (b.lo, self.padding.1)
+        } else {
+            (b.lo, b.hi)
+        }
+    }
+
+    /// Structural invariants; used by tests and debug assertions.
+    pub fn validate(&self, manifest: &Manifest) -> anyhow::Result<()> {
+        let nl = manifest.layers.len();
+        let mut seen = vec![false; nl];
+        for b in &self.buckets {
+            anyhow::ensure!(b.lo < b.hi, "bucket {} empty", b.index);
+            for &li in &b.layer_indices {
+                anyhow::ensure!(!seen[li], "layer {li} in two buckets");
+                seen[li] = true;
+                let l = &manifest.layers[li];
+                anyhow::ensure!(
+                    l.offset >= b.lo && l.offset + l.size <= b.hi,
+                    "layer {li} outside bucket span"
+                );
+            }
+            // contiguity: span exactly covers its layers
+            let span_elems: usize = b.layer_indices.iter().map(|&li| manifest.layers[li].size).sum();
+            anyhow::ensure!(span_elems == b.elems(), "bucket {} has holes", b.index);
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "some layer missing from plan");
+        // readiness order: bucket i must cover strictly later layers than i+1
+        for w in self.buckets.windows(2) {
+            anyhow::ensure!(w[0].lo >= w[1].hi, "buckets out of backward order");
+        }
+        Ok(())
+    }
+
+    /// Total wire bytes of one full-gradient exchange under this plan.
+    pub fn total_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.bytes(self.bytes_per_elem)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::Manifest;
+
+    fn manifest() -> Manifest {
+        // Build a manifest JSON with a handful of layers of varying size.
+        let sizes = [432usize, 64, 64, 9216, 128, 128, 16384, 256, 256, 2560, 10];
+        let kinds = [
+            "conv", "bn_gamma", "bn_beta", "conv", "bn_gamma", "bn_beta", "conv", "bn_gamma",
+            "bn_beta", "fc_w", "fc_b",
+        ];
+        let mut layers = String::new();
+        let mut off = 0;
+        for (i, (&s, &k)) in sizes.iter().zip(&kinds).enumerate() {
+            if i > 0 {
+                layers.push(',');
+            }
+            let skip = k != "conv" && k != "fc_w";
+            layers.push_str(&format!(
+                r#"{{"name":"l{i}","kind":"{k}","shape":[{s}],"size":{s},"offset":{off},"lars_skip":{skip}}}"#
+            ));
+            off += s;
+        }
+        let p: usize = sizes.iter().sum();
+        let np = ((p + 1023) / 1024) * 1024;
+        let text = format!(
+            r#"{{"format_version":1,
+            "model":{{"name":"t","num_classes":10,"image_size":32,"channels":3}},
+            "train":{{"momentum":0.9,"weight_decay":0.0005,"lars_eta":0.001,"lars_eps":1e-9,"label_smoothing":0.1,"batch_size":32}},
+            "param_count":{p},"padded_param_count":{np},"state_count":0,"num_layers":11,
+            "pallas_tile":1024,"layers":[{layers}],"states":[],"artifacts":{{}}}}"#
+        );
+        Manifest::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn plan_is_partition() {
+        let m = manifest();
+        for target in [1, 1024, 4096, 40960, 1 << 20] {
+            let plan = BucketPlan::build(&m, target, 4);
+            plan.validate(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn per_layer_and_single() {
+        let m = manifest();
+        let pl = BucketPlan::per_layer(&m, 4);
+        assert_eq!(pl.buckets.len(), m.layers.len());
+        pl.validate(&m).unwrap();
+        let s = BucketPlan::single(&m, 4);
+        assert_eq!(s.buckets.len(), 1);
+        s.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn reverse_order_first_bucket_has_fc() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        let first = &plan.buckets[0];
+        // fc.b is the last layer (index 10) and must be in the first bucket
+        assert!(first.layer_indices.contains(&10));
+    }
+
+    #[test]
+    fn target_respected() {
+        let m = manifest();
+        let target = 4096; // bytes
+        let plan = BucketPlan::build(&m, target, 4);
+        // Every bucket except the last must have reached the target.
+        for b in &plan.buckets[..plan.buckets.len() - 1] {
+            assert!(b.bytes(4) >= target, "bucket {} too small", b.index);
+        }
+        assert!(plan.buckets.len() > 1);
+    }
+
+    #[test]
+    fn oversized_layer_gets_own_bucket_region() {
+        let m = manifest();
+        // tiny target: every layer alone (equivalent to per_layer cuts)
+        let plan = BucketPlan::build(&m, 1, 4);
+        assert_eq!(plan.buckets.len(), m.layers.len());
+        plan.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn padding_attached_to_tail_bucket() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        // The bucket whose hi == param_count carries padding to Np.
+        let mut found = false;
+        for (i, b) in plan.buckets.iter().enumerate() {
+            let (lo, hi) = plan.span_with_padding(i);
+            assert_eq!(lo, b.lo);
+            if b.hi == m.param_count {
+                assert_eq!(hi, m.padded_param_count);
+                found = true;
+            } else {
+                assert_eq!(hi, b.hi);
+            }
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn total_bytes_counts_all_params() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        assert_eq!(plan.total_bytes(), m.param_count * 4);
+    }
+
+    #[test]
+    fn fp16_halves_bytes() {
+        let m = manifest();
+        let f32_plan = BucketPlan::build(&m, 4096, 4);
+        let f16_plan = BucketPlan::build(&m, 4096, 2);
+        assert_eq!(f16_plan.total_bytes() * 2, f32_plan.total_bytes());
+    }
+}

@@ -1,0 +1,187 @@
+//! Checkpointing: save/restore the full training state (master weights,
+//! momentum, BN statistics, step counter) to a self-describing binary
+//! format. The MLPerf-style runs this repo reproduces are short, but any
+//! framework a team would deploy needs resumable state — and the packed
+//! flat-buffer layout makes the format trivial: one JSON header + three
+//! raw little-endian f32 sections.
+//!
+//! Format:
+//!   bytes 0..8   magic "YASGD1\n\0"
+//!   u32 LE       header length H
+//!   H bytes      JSON header: model name, buffer lengths, step, seed
+//!   raw f32 LE   params (padded_param_count)
+//!   raw f32 LE   momentum (padded_param_count)
+//!   raw f32 LE   bn_state (state_count)
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"YASGD1\n\0";
+
+/// A complete training state snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model_name: String,
+    pub step: usize,
+    pub seed: u64,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub bn_state: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = Json::obj(vec![
+            ("model_name", Json::Str(self.model_name.clone())),
+            ("step", Json::Num(self.step as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("params_len", Json::Num(self.params.len() as f64)),
+            ("momentum_len", Json::Num(self.momentum.len() as f64)),
+            ("bn_state_len", Json::Num(self.bn_state.len() as f64)),
+        ])
+        .to_string();
+
+        // Write to a temp file + rename so a crash never leaves a torn
+        // checkpoint at the target path.
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u32).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for buf in [&self.params, &self.momentum, &self.bn_state] {
+                for v in buf.iter() {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a yasgd checkpoint (bad magic)");
+        let mut hlen = [0u8; 4];
+        f.read_exact(&mut hlen)?;
+        let hlen = u32::from_le_bytes(hlen) as usize;
+        anyhow::ensure!(hlen < 1 << 20, "implausible header length {hlen}");
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("header: {e}"))?;
+
+        let read_f32s = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let params = read_f32s(&mut f, header.req_usize("params_len")?)?;
+        let momentum = read_f32s(&mut f, header.req_usize("momentum_len")?)?;
+        let bn_state = read_f32s(&mut f, header.req_usize("bn_state_len")?)?;
+        // Trailing garbage check.
+        let mut extra = [0u8; 1];
+        anyhow::ensure!(
+            f.read(&mut extra)? == 0,
+            "trailing bytes after checkpoint payload"
+        );
+        Ok(Checkpoint {
+            model_name: header.req_str("model_name")?.to_string(),
+            step: header.req_usize("step")?,
+            seed: header.req_f64("seed")? as u64,
+            params,
+            momentum,
+            bn_state,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model_name: "resnet_micro".into(),
+            step: 42,
+            seed: 100_000,
+            params: (0..1024).map(|i| i as f32 * 0.001).collect(),
+            momentum: (0..1024).map(|i| -(i as f32) * 0.002).collect(),
+            bn_state: vec![0.0, 1.0, 0.5, 2.0],
+        }
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, c2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_trail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.ckpt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_nan");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("n.ckpt");
+        let mut c = sample();
+        c.params[0] = f32::NAN;
+        c.params[1] = f32::INFINITY;
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert!(c2.params[0].is_nan());
+        assert_eq!(c2.params[1], f32::INFINITY);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,557 @@
+//! Allreduce collectives over in-process ranks — real bytes, real math.
+//!
+//! The paper's training exchanges gradients with allreduce every step
+//! (Section III-C). Here each "rank" owns a real fp32 buffer and the
+//! algorithms move and reduce REAL data message-by-message, so:
+//!
+//! * numerics are faithful — fp16-on-the-wire (paper Section IV) actually
+//!   quantizes every hop, and different algorithms produce the exact
+//!   reduction orders they would on a cluster;
+//! * the wire statistics (rounds, bytes per rank) drive the α–β cost model
+//!   in `simnet` to produce the paper's Fig-2 scaling estimates.
+//!
+//! Algorithms: naive root-gather (baseline), ring (bandwidth-optimal,
+//! 2(p-1)/p · n bytes/rank), recursive halving-doubling (latency-optimal,
+//! log2 p rounds), and the ABCI-shaped hierarchical variant (intra-node
+//! reduce → inter-node ring over node leaders → intra-node broadcast).
+
+use crate::util::fp16;
+
+/// Wire precision for gradient exchange (paper: fp16 wire, fp32 master).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F16,
+}
+
+impl Precision {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 => 2,
+        }
+    }
+}
+
+/// Which collective algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Root gathers all buffers, reduces, broadcasts. O(p·n) at the root.
+    Naive,
+    /// Ring reduce-scatter + ring all-gather.
+    Ring,
+    /// Recursive halving-doubling (power-of-two ranks; remainder folded).
+    HalvingDoubling,
+    /// Intra-node reduce, inter-node ring over leaders, intra-node bcast.
+    Hierarchical { ranks_per_node: usize },
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Naive => "naive",
+            Algorithm::Ring => "ring",
+            Algorithm::HalvingDoubling => "halving_doubling",
+            Algorithm::Hierarchical { .. } => "hierarchical",
+        }
+    }
+}
+
+/// Wire traffic accounting for one allreduce, split by link class so the
+/// simnet model can price intra-node (NVLink) and inter-node (IB) hops
+/// differently.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WireStats {
+    /// Communication rounds on the critical path.
+    pub rounds: usize,
+    /// Total bytes crossing any link.
+    pub total_bytes: usize,
+    /// Max bytes sent by any single rank (the per-rank bottleneck).
+    pub max_bytes_per_rank: usize,
+    /// Messages sent in total.
+    pub messages: usize,
+    /// Bytes that crossed node boundaries (Hierarchical only; otherwise
+    /// equal to total_bytes with 1 rank/node assumed).
+    pub internode_bytes: usize,
+}
+
+/// A "wire": moves a chunk from src to dst, applying the configured
+/// precision (fp16 encodes+decodes, quantizing like real hardware would).
+struct Wire {
+    precision: Precision,
+    scratch: Vec<u16>,
+    stats: WireStats,
+}
+
+impl Wire {
+    fn new(precision: Precision) -> Wire {
+        Wire { precision, scratch: Vec::new(), stats: WireStats::default() }
+    }
+
+    /// Transfer `src` into `out` (overwrite), counting bytes.
+    fn send(&mut self, src: &[f32], out: &mut [f32], internode: bool) {
+        assert_eq!(src.len(), out.len());
+        match self.precision {
+            Precision::F32 => out.copy_from_slice(src),
+            Precision::F16 => {
+                fp16::encode_slice(src, &mut self.scratch);
+                fp16::decode_slice(&self.scratch, out);
+            }
+        }
+        self.count(src.len(), internode);
+    }
+
+    /// Transfer `src` and add into `out` (the reduce half of the exchange).
+    fn send_add(&mut self, src: &[f32], out: &mut [f32], internode: bool) {
+        assert_eq!(src.len(), out.len());
+        match self.precision {
+            Precision::F32 => {
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+            Precision::F16 => {
+                fp16::encode_slice(src, &mut self.scratch);
+                for (o, &h) in out.iter_mut().zip(self.scratch.iter()) {
+                    *o += fp16::f16_bits_to_f32(h);
+                }
+            }
+        }
+        self.count(src.len(), internode);
+    }
+
+    /// Quantize a rank's OWN data in place (no wire traffic): before a
+    /// gather phase every rank must hold the same bits it is about to
+    /// send, or the owner's copy would silently stay fp32 and ranks would
+    /// diverge — fatal for data-parallel weight sync.
+    fn quantize_own(&mut self, buf: &mut [f32]) {
+        if self.precision == Precision::F16 {
+            fp16::quantize_inplace(buf);
+        }
+    }
+
+    fn count(&mut self, elems: usize, internode: bool) {
+        let bytes = elems * self.precision.bytes_per_elem();
+        self.stats.total_bytes += bytes;
+        self.stats.messages += 1;
+        if internode {
+            self.stats.internode_bytes += bytes;
+        }
+    }
+}
+
+/// Allreduce-mean across `bufs` (one buffer per rank, equal lengths).
+/// After the call every rank holds the same mean. Returns wire stats.
+pub fn allreduce_mean(bufs: &mut [Vec<f32>], algo: Algorithm, precision: Precision) -> WireStats {
+    let p = bufs.len();
+    assert!(p > 0, "no ranks");
+    let n = bufs[0].len();
+    for b in bufs.iter() {
+        assert_eq!(b.len(), n, "rank buffer lengths differ");
+    }
+    if p == 1 {
+        return WireStats::default();
+    }
+
+    let mut wire = Wire::new(precision);
+    match algo {
+        Algorithm::Naive => naive(bufs, &mut wire),
+        Algorithm::Ring => ring(bufs, &mut wire, true),
+        Algorithm::HalvingDoubling => halving_doubling(bufs, &mut wire),
+        Algorithm::Hierarchical { ranks_per_node } => {
+            hierarchical(bufs, &mut wire, ranks_per_node)
+        }
+    }
+
+    let inv = 1.0 / p as f32;
+    for b in bufs.iter_mut() {
+        for v in b.iter_mut() {
+            *v *= inv;
+        }
+    }
+    wire.stats
+}
+
+/// Compute per-rank max bytes for the stats (the critical-path metric).
+fn finish_max_per_rank(stats: &mut WireStats, p: usize) {
+    // total bytes spread evenly is the lower bound; use it as the estimate
+    // for symmetric algorithms. Naive overrides.
+    stats.max_bytes_per_rank = stats.total_bytes / p.max(1);
+}
+
+fn naive(bufs: &mut [Vec<f32>], wire: &mut Wire) {
+    let p = bufs.len();
+    let n = bufs[0].len();
+    // Gather-reduce at rank 0.
+    let (root, rest) = bufs.split_first_mut().unwrap();
+    for b in rest.iter() {
+        wire.send_add(b, root, true);
+    }
+    // Broadcast (root's own copy quantized to match what it sends).
+    wire.quantize_own(root);
+    let root_copy = root.clone();
+    for b in rest.iter_mut() {
+        wire.send(&root_copy, b, true);
+    }
+    wire.stats.rounds = 2 * (p - 1);
+    // Root sends/receives everything: it is the bottleneck.
+    wire.stats.max_bytes_per_rank = 2 * (p - 1) * n * wire.precision.bytes_per_elem();
+}
+
+/// Chunk boundaries: p nearly-equal spans covering 0..n.
+fn chunks(n: usize, p: usize) -> Vec<(usize, usize)> {
+    let base = n / p;
+    let rem = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut off = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < rem);
+        out.push((off, off + len));
+        off += len;
+    }
+    out
+}
+
+fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool) {
+    let p = bufs.len();
+    let spans = chunks(bufs[0].len(), p);
+
+    // Reduce-scatter: in round r, rank i sends chunk (i - r) to rank i+1.
+    for r in 0..p - 1 {
+        for i in 0..p {
+            let src_rank = i;
+            let dst_rank = (i + 1) % p;
+            let c = (i + p - r) % p;
+            let (lo, hi) = spans[c];
+            if lo == hi {
+                continue;
+            }
+            // Split-borrow the two rank buffers.
+            let (a, b) = two_mut(bufs, src_rank, dst_rank);
+            wire.send_add(&a[lo..hi], &mut b[lo..hi], internode);
+        }
+    }
+    // After reduce-scatter, rank i owns the fully-reduced chunk (i+1)%p;
+    // quantize owned chunks so every rank ends bit-identical.
+    for i in 0..p {
+        let (lo, hi) = spans[(i + 1) % p];
+        wire.quantize_own(&mut bufs[i][lo..hi]);
+    }
+    // All-gather: chunk (i+1-r) travels the ring.
+    for r in 0..p - 1 {
+        for i in 0..p {
+            let src_rank = i;
+            let dst_rank = (i + 1) % p;
+            let c = (i + 1 + p - r) % p;
+            let (lo, hi) = spans[c];
+            if lo == hi {
+                continue;
+            }
+            let (a, b) = two_mut(bufs, src_rank, dst_rank);
+            wire.send(&a[lo..hi], &mut b[lo..hi], internode);
+        }
+    }
+    wire.stats.rounds += 2 * (p - 1);
+    finish_max_per_rank(&mut wire.stats, p);
+}
+
+/// Borrow two distinct ranks mutably.
+fn two_mut(bufs: &mut [Vec<f32>], a: usize, b: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = bufs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = bufs.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
+    let p = bufs.len();
+    let pow2 = p.next_power_of_two() / if p.is_power_of_two() { 1 } else { 2 };
+    let extra = p - pow2;
+
+    // Fold the remainder: ranks >= pow2 send their whole buffer into their
+    // partner (rank - pow2), then sit out.
+    for e in 0..extra {
+        let (src, dst) = (pow2 + e, e);
+        let (a, b) = two_mut(bufs, src, dst);
+        let a_copy = a.clone();
+        wire.send_add(&a_copy, b, true);
+        wire.stats.rounds += 1;
+    }
+
+    // Recursive halving (reduce-scatter) among the pow2 group.
+    // At distance d, partner = rank ^ d; each pair exchanges half of its
+    // active span. We track each active rank's span.
+    let n = bufs[0].len();
+    let mut spans = vec![(0usize, n); pow2];
+    let mut d = pow2 / 2;
+    while d >= 1 {
+        for i in 0..pow2 {
+            let j = i ^ d;
+            if j < i {
+                continue; // handle each pair once
+            }
+            let (lo_i, hi_i) = spans[i];
+            let mid = lo_i + (hi_i - lo_i) / 2;
+            // Lower-half keeper is the rank with the 0 bit at distance d.
+            // i keeps [lo, mid), j keeps [mid, hi): j sends its lower half
+            // into i, i sends its upper half into j.
+            let (bi, bj) = two_mut(bufs, i, j);
+            let bj_lower = bj[lo_i..mid].to_vec();
+            wire.send_add(&bi[mid..hi_i].to_vec(), &mut bj[mid..hi_i], true);
+            wire.send_add(&bj_lower, &mut bi[lo_i..mid], true);
+            spans[i] = (lo_i, mid);
+            spans[j] = (mid, hi_i);
+        }
+        wire.stats.rounds += 1;
+        d /= 2;
+    }
+
+    // Quantize each rank's reduced span before the gather phase (see
+    // Wire::quantize_own).
+    for i in 0..pow2 {
+        let (lo, hi) = spans[i];
+        wire.quantize_own(&mut bufs[i][lo..hi]);
+    }
+    // Recursive doubling (all-gather): reverse the halving.
+    let mut d = 1;
+    while d < pow2 {
+        for i in 0..pow2 {
+            let j = i ^ d;
+            if j < i {
+                continue;
+            }
+            let (lo_i, hi_i) = spans[i];
+            let (lo_j, hi_j) = spans[j];
+            let (bi, bj) = two_mut(bufs, i, j);
+            let bi_span = bi[lo_i..hi_i].to_vec();
+            let bj_span = bj[lo_j..hi_j].to_vec();
+            wire.send(&bj_span, &mut bi[lo_j..hi_j], true);
+            wire.send(&bi_span, &mut bj[lo_i..hi_i], true);
+            let merged = (lo_i.min(lo_j), hi_i.max(hi_j));
+            spans[i] = merged;
+            spans[j] = merged;
+        }
+        wire.stats.rounds += 1;
+        d *= 2;
+    }
+
+    // Unfold: partners broadcast the final buffer back to folded ranks.
+    for e in 0..extra {
+        let (src, dst) = (e, pow2 + e);
+        let (a, b) = two_mut(bufs, src, dst);
+        let a_copy = a.clone();
+        wire.send(&a_copy, b, true);
+        wire.stats.rounds += 1;
+    }
+    finish_max_per_rank(&mut wire.stats, p);
+}
+
+fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
+    let p = bufs.len();
+    let rpn = ranks_per_node.max(1).min(p);
+    let nodes = (p + rpn - 1) / rpn;
+
+    // Phase 1: intra-node reduce to each node leader (local wires).
+    for node in 0..nodes {
+        let leader = node * rpn;
+        for r in leader + 1..((node + 1) * rpn).min(p) {
+            let (l, m) = two_mut(bufs, leader, r);
+            let m_copy = m.clone();
+            wire.send_add(&m_copy, l, false);
+        }
+    }
+    wire.stats.rounds += rpn - 1;
+
+    // Phase 2: ring allreduce across node leaders (inter-node wires).
+    if nodes > 1 {
+        let mut leaders: Vec<Vec<f32>> =
+            (0..nodes).map(|nd| std::mem::take(&mut bufs[nd * rpn])).collect();
+        ring(&mut leaders, wire, true);
+        for (nd, lb) in leaders.into_iter().enumerate() {
+            bufs[nd * rpn] = lb;
+        }
+    }
+
+    // Phase 3: intra-node broadcast from each leader.
+    for node in 0..nodes {
+        let leader = node * rpn;
+        wire.quantize_own(&mut bufs[leader]);
+        let leader_copy = bufs[leader].clone();
+        for r in leader + 1..((node + 1) * rpn).min(p) {
+            wire.send(&leader_copy, &mut bufs[r], false);
+        }
+    }
+    wire.stats.rounds += rpn - 1;
+    finish_max_per_rank(&mut wire.stats, p);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect())
+            .collect()
+    }
+
+    fn expected_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let p = bufs.len();
+        let n = bufs[0].len();
+        (0..n)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum::<f64>() as f32 / p as f32)
+            .collect()
+    }
+
+    fn check(algo: Algorithm, p: usize, n: usize, tol: f32) {
+        let orig = make_bufs(p, n, 42 + p as u64 + n as u64);
+        let want = expected_mean(&orig);
+        let mut bufs = orig.clone();
+        let stats = allreduce_mean(&mut bufs, algo, Precision::F32);
+        for (r, b) in bufs.iter().enumerate() {
+            for (i, (&got, &w)) in b.iter().zip(&want).enumerate() {
+                assert!(
+                    (got - w).abs() <= tol,
+                    "{}: rank {r} elem {i}: {got} vs {w}",
+                    algo.name()
+                );
+            }
+        }
+        if p > 1 && n > 0 {
+            assert!(stats.total_bytes > 0);
+            assert!(stats.rounds > 0);
+        }
+    }
+
+    #[test]
+    fn naive_correct() {
+        for p in [2, 3, 5, 8] {
+            check(Algorithm::Naive, p, 1000, 1e-5);
+        }
+    }
+
+    #[test]
+    fn ring_correct() {
+        for p in [2, 3, 4, 7, 8, 16] {
+            check(Algorithm::Ring, p, 1000, 1e-5);
+        }
+    }
+
+    #[test]
+    fn ring_short_buffer_fewer_elems_than_ranks() {
+        check(Algorithm::Ring, 8, 5, 1e-6);
+        check(Algorithm::Ring, 8, 0, 1e-6);
+    }
+
+    #[test]
+    fn halving_doubling_correct_pow2() {
+        for p in [2, 4, 8, 16] {
+            check(Algorithm::HalvingDoubling, p, 1024, 1e-5);
+        }
+    }
+
+    #[test]
+    fn halving_doubling_correct_non_pow2() {
+        for p in [3, 5, 6, 7, 12] {
+            check(Algorithm::HalvingDoubling, p, 1000, 1e-5);
+        }
+    }
+
+    #[test]
+    fn hierarchical_correct() {
+        for (p, rpn) in [(8, 4), (16, 4), (12, 4), (6, 2), (4, 4), (5, 4)] {
+            check(Algorithm::Hierarchical { ranks_per_node: rpn }, p, 1000, 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let mut bufs = make_bufs(1, 100, 1);
+        let orig = bufs.clone();
+        let stats = allreduce_mean(&mut bufs, Algorithm::Ring, Precision::F32);
+        assert_eq!(bufs, orig);
+        assert_eq!(stats.total_bytes, 0);
+    }
+
+    #[test]
+    fn f16_wire_quantizes_but_stays_close() {
+        let orig = make_bufs(8, 2048, 7);
+        let want = expected_mean(&orig);
+        let mut bufs = orig.clone();
+        allreduce_mean(&mut bufs, Algorithm::Ring, Precision::F16);
+        let mut max_err = 0.0f32;
+        for b in &bufs {
+            for (&got, &w) in b.iter().zip(&want) {
+                max_err = max_err.max((got - w).abs());
+            }
+        }
+        assert!(max_err > 0.0, "f16 should not be bit-exact");
+        assert!(max_err < 0.01, "f16 error too large: {max_err}");
+        // all ranks agree exactly (same final broadcast data)
+        for b in &bufs[1..] {
+            assert_eq!(&bufs[0], b);
+        }
+    }
+
+    #[test]
+    fn ring_is_bandwidth_optimal_vs_naive() {
+        let n = 10_000;
+        let p = 8;
+        let mut a = make_bufs(p, n, 3);
+        let ring_stats = allreduce_mean(&mut a, Algorithm::Ring, Precision::F32);
+        let mut b = make_bufs(p, n, 3);
+        let naive_stats = allreduce_mean(&mut b, Algorithm::Naive, Precision::F32);
+        // Per-rank bottleneck: ring ~ 2n bytes, naive root ~ 2(p-1)n bytes.
+        assert!(ring_stats.max_bytes_per_rank * 4 < naive_stats.max_bytes_per_rank);
+    }
+
+    #[test]
+    fn hd_fewer_rounds_than_ring() {
+        let n = 4096;
+        let p = 16;
+        let mut a = make_bufs(p, n, 5);
+        let ring_stats = allreduce_mean(&mut a, Algorithm::Ring, Precision::F32);
+        let mut b = make_bufs(p, n, 5);
+        let hd_stats = allreduce_mean(&mut b, Algorithm::HalvingDoubling, Precision::F32);
+        assert!(hd_stats.rounds < ring_stats.rounds, "{} vs {}", hd_stats.rounds, ring_stats.rounds);
+    }
+
+    #[test]
+    fn hierarchical_reduces_internode_traffic() {
+        let n = 8192;
+        let p = 16;
+        let mut a = make_bufs(p, n, 9);
+        let flat = allreduce_mean(&mut a, Algorithm::Ring, Precision::F32);
+        let mut b = make_bufs(p, n, 9);
+        let hier =
+            allreduce_mean(&mut b, Algorithm::Hierarchical { ranks_per_node: 4 }, Precision::F32);
+        assert!(
+            hier.internode_bytes < flat.internode_bytes / 2,
+            "hier {} vs flat {}",
+            hier.internode_bytes,
+            flat.internode_bytes
+        );
+    }
+
+    #[test]
+    fn all_ranks_equal_after_allreduce() {
+        for algo in [
+            Algorithm::Naive,
+            Algorithm::Ring,
+            Algorithm::HalvingDoubling,
+            Algorithm::Hierarchical { ranks_per_node: 4 },
+        ] {
+            let mut bufs = make_bufs(8, 999, 11);
+            allreduce_mean(&mut bufs, algo, Precision::F32);
+            for b in &bufs[1..] {
+                assert_eq!(&bufs[0], b, "{}", algo.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Run configuration: typed settings for the coordinator, loadable from a
+//! JSON file with CLI overrides (`--key value` wins over file values).
+
+use crate::collective::{Algorithm, Precision};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Everything the training loop needs to know.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts: PathBuf,
+    /// Data-parallel worker (simulated "GPU") count.
+    pub workers: usize,
+    /// Micro-batches each worker accumulates per step — global batch =
+    /// workers * grad_accum * artifact batch (how we reach the paper's
+    /// 81,920-class batches with a fixed-shape artifact).
+    pub grad_accum: usize,
+    pub total_steps: usize,
+    /// Evaluate every N steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Batches per evaluation pass.
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub peak_lr: f64,
+    /// Warmup fraction of total steps (paper III-A-1).
+    pub warmup_frac: f64,
+    /// "poly" | "step" | "linear" | "cosine" | "none"
+    pub decay: String,
+    pub lars: bool,
+    pub label_smoothing: bool,
+    /// "ring" | "hd" | "hier" | "naive"
+    pub allreduce: String,
+    pub ranks_per_node: usize,
+    /// Wire precision: "f16" (paper) or "f32".
+    pub wire: String,
+    /// Bucket target size in bytes (paper III-C-1: "several megabytes" at
+    /// ResNet-50 scale; default scales down with our smaller models).
+    pub bucket_bytes: usize,
+    pub overlap: bool,
+    /// Synthetic dataset size (images per epoch) and noise.
+    pub train_size: usize,
+    pub val_size: usize,
+    pub noise: f64,
+    /// Echo MLPerf log lines to stderr.
+    pub mlperf_echo: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            artifacts: "artifacts".into(),
+            workers: 4,
+            grad_accum: 1,
+            total_steps: 60,
+            eval_every: 20,
+            eval_batches: 4,
+            seed: 100_000, // the paper's appendix seed
+            peak_lr: 0.4,
+            warmup_frac: 0.15,
+            decay: "poly".into(),
+            lars: true,
+            label_smoothing: true,
+            allreduce: "hier".into(),
+            ranks_per_node: 4,
+            wire: "f16".into(),
+            bucket_bytes: 16 * 1024,
+            overlap: true,
+            train_size: 4096,
+            val_size: 512,
+            noise: 0.25,
+            mlperf_echo: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn algorithm(&self) -> Result<Algorithm> {
+        Ok(match self.allreduce.as_str() {
+            "ring" => Algorithm::Ring,
+            "hd" | "halving_doubling" => Algorithm::HalvingDoubling,
+            "hier" | "hierarchical" => {
+                Algorithm::Hierarchical { ranks_per_node: self.ranks_per_node }
+            }
+            "naive" => Algorithm::Naive,
+            other => anyhow::bail!("unknown allreduce algorithm '{other}'"),
+        })
+    }
+
+    pub fn precision(&self) -> Result<Precision> {
+        Ok(match self.wire.as_str() {
+            "f16" => Precision::F16,
+            "f32" => Precision::F32,
+            other => anyhow::bail!("unknown wire precision '{other}'"),
+        })
+    }
+
+    /// Load from JSON file if `--config path` given, then apply CLI
+    /// overrides.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut c = if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            Self::from_json(&text)?
+        } else {
+            RunConfig::default()
+        };
+        if let Some(v) = args.get("artifacts") {
+            c.artifacts = v.into();
+        }
+        c.workers = args.get_usize("workers", c.workers)?;
+        c.grad_accum = args.get_usize("grad-accum", c.grad_accum)?;
+        c.total_steps = args.get_usize("steps", c.total_steps)?;
+        c.eval_every = args.get_usize("eval-every", c.eval_every)?;
+        c.eval_batches = args.get_usize("eval-batches", c.eval_batches)?;
+        c.seed = args.get_u64("seed", c.seed)?;
+        c.peak_lr = args.get_f64("lr", c.peak_lr)?;
+        c.warmup_frac = args.get_f64("warmup-frac", c.warmup_frac)?;
+        c.decay = args.get_or("decay", &c.decay).to_string();
+        if args.flag("no-lars") {
+            c.lars = false;
+        }
+        if args.flag("no-smoothing") {
+            c.label_smoothing = false;
+        }
+        c.allreduce = args.get_or("allreduce", &c.allreduce).to_string();
+        c.ranks_per_node = args.get_usize("ranks-per-node", c.ranks_per_node)?;
+        c.wire = args.get_or("wire", &c.wire).to_string();
+        c.bucket_bytes = args.get_usize("bucket-bytes", c.bucket_bytes)?;
+        if args.flag("no-overlap") {
+            c.overlap = false;
+        }
+        c.train_size = args.get_usize("train-size", c.train_size)?;
+        c.val_size = args.get_usize("val-size", c.val_size)?;
+        c.noise = args.get_f64("noise", c.noise)?;
+        if args.flag("mlperf-log") {
+            c.mlperf_echo = true;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let d = RunConfig::default();
+        let get_usize = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        let get_f64 = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let get_bool = |k: &str, dv: bool| j.get(k).and_then(Json::as_bool).unwrap_or(dv);
+        let get_str =
+            |k: &str, dv: &str| j.get(k).and_then(Json::as_str).unwrap_or(dv).to_string();
+        let c = RunConfig {
+            artifacts: get_str("artifacts", d.artifacts.to_str().unwrap()).into(),
+            workers: get_usize("workers", d.workers),
+            grad_accum: get_usize("grad_accum", d.grad_accum),
+            total_steps: get_usize("total_steps", d.total_steps),
+            eval_every: get_usize("eval_every", d.eval_every),
+            eval_batches: get_usize("eval_batches", d.eval_batches),
+            seed: j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(d.seed),
+            peak_lr: get_f64("peak_lr", d.peak_lr),
+            warmup_frac: get_f64("warmup_frac", d.warmup_frac),
+            decay: get_str("decay", &d.decay),
+            lars: get_bool("lars", d.lars),
+            label_smoothing: get_bool("label_smoothing", d.label_smoothing),
+            allreduce: get_str("allreduce", &d.allreduce),
+            ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
+            wire: get_str("wire", &d.wire),
+            bucket_bytes: get_usize("bucket_bytes", d.bucket_bytes),
+            overlap: get_bool("overlap", d.overlap),
+            train_size: get_usize("train_size", d.train_size),
+            val_size: get_usize("val_size", d.val_size),
+            noise: get_f64("noise", d.noise),
+            mlperf_echo: get_bool("mlperf_echo", d.mlperf_echo),
+        };
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.grad_accum >= 1, "grad_accum must be >= 1");
+        anyhow::ensure!(self.total_steps >= 1, "total_steps must be >= 1");
+        anyhow::ensure!(self.peak_lr > 0.0, "peak_lr must be > 0");
+        anyhow::ensure!(
+            (0.0..0.9).contains(&self.warmup_frac),
+            "warmup_frac must be in [0, 0.9)"
+        );
+        anyhow::ensure!(self.bucket_bytes > 0, "bucket_bytes must be > 0");
+        self.algorithm()?;
+        self.precision()?;
+        Ok(())
+    }
+
+    /// The schedule implied by this config.
+    pub fn schedule(&self) -> crate::schedule::LrSchedule {
+        use crate::schedule::{Decay, LrSchedule};
+        let decay = match self.decay.as_str() {
+            "poly" => Decay::Polynomial { power: 2.0, end_lr: self.peak_lr * 1e-4 },
+            "step" => Decay::Step { boundaries: vec![0.5, 0.75, 0.9], factor: 0.1 },
+            "linear" => Decay::Linear { end_lr: self.peak_lr * 1e-4 },
+            "cosine" => Decay::Cosine { end_lr: self.peak_lr * 1e-4 },
+            _ => Decay::None,
+        };
+        let warmup = (self.total_steps as f64 * self.warmup_frac).ceil() as usize;
+        LrSchedule {
+            base_lr: self.peak_lr * 0.05,
+            peak_lr: self.peak_lr,
+            warmup_steps: warmup,
+            total_steps: self.total_steps,
+            decay,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(a: &[&str]) -> Args {
+        Args::parse(a.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--workers",
+            "8",
+            "--lr",
+            "1.5",
+            "--no-lars",
+            "--wire",
+            "f32",
+        ]))
+        .unwrap();
+        assert_eq!(c.workers, 8);
+        assert!((c.peak_lr - 1.5).abs() < 1e-12);
+        assert!(!c.lars);
+        assert_eq!(c.precision().unwrap(), Precision::F32);
+    }
+
+    #[test]
+    fn json_round() {
+        let c = RunConfig::from_json(
+            r#"{"workers": 2, "allreduce": "ring", "overlap": false, "peak_lr": 0.8}"#,
+        )
+        .unwrap();
+        assert_eq!(c.workers, 2);
+        assert!(!c.overlap);
+        assert_eq!(c.algorithm().unwrap(), Algorithm::Ring);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_json(r#"{"workers": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"allreduce": "smoke-signals"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"wire": "f8"}"#).is_err());
+    }
+
+    #[test]
+    fn schedule_reflects_decay_choice() {
+        let mut c = RunConfig::default();
+        c.decay = "cosine".into();
+        c.total_steps = 100;
+        let s = c.schedule();
+        assert!(s.lr_at(99) < c.peak_lr * 0.05);
+    }
+}

@@ -1,0 +1,566 @@
+//! The L3 coordinator: data-parallel training orchestration.
+//!
+//! This is the paper's *system* contribution assembled into one loop.
+//! Per step:
+//!
+//! 1. every worker runs the AOT `grad_step` executable on its own shard
+//!    micro-batch(es) (grad accumulation reaches arbitrarily large global
+//!    batches with a fixed-shape artifact);
+//! 2. gradients are exchanged bucket-by-bucket in backward-readiness order
+//!    (bucket::BucketPlan, paper III-C-1/2) with a REAL numeric allreduce
+//!    (collective::allreduce_mean) over the configured algorithm and wire
+//!    precision (fp16 on the wire, paper IV);
+//! 3. the leader applies the LARS/momentum update via the `update_lars`
+//!    artifact — whose body is the L1 batched-norms + fused-update Pallas
+//!    kernels (paper III-A-1, III-B-2);
+//! 4. BN running statistics are either kept process-local (the paper's
+//!    default, III-A-2) or mean-synced.
+//!
+//! Workers are in-process ranks. `threaded = true` runs them on real OS
+//! threads against the shared PJRT engine; either mode is bit-identical
+//! because the collective's reduction order is fixed by the algorithm,
+//! not by thread arrival (determinism test in rust/tests).
+
+use crate::bucket::BucketPlan;
+use crate::collective::{allreduce_mean, WireStats};
+use crate::config::RunConfig;
+use crate::data::{make_batch, Batch, DataConfig, Shard, Split, Synthetic};
+use crate::init;
+use crate::metrics::{StepBreakdown, Throughput, Timer};
+use crate::mlperf::{tags, MlperfLogger};
+use crate::runtime::{Engine, GradVariant, UpdateRule};
+use crate::schedule::LrSchedule;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// How BN running statistics are combined across workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BnStatsMode {
+    /// Worker-local (the paper's setup: "computed on each process
+    /// independently"); the leader adopts worker 0's statistics for eval.
+    Local,
+    /// Mean across workers every step (the tuned alternative).
+    Mean,
+}
+
+/// One evaluation record.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub epoch: f64,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub val_loss: f32,
+    pub val_acc: f32,
+}
+
+/// Summary of a whole training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub global_batch: usize,
+    pub elapsed_s: f64,
+    pub images_per_sec: f64,
+    pub final_train_loss: f32,
+    pub final_val_acc: f32,
+    pub loss_history: Vec<f32>,
+    pub evals: Vec<EvalPoint>,
+    pub wire_totals: WireStats,
+    pub mlperf_elapsed_s: Option<f64>,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::Num(self.steps as f64)),
+            ("global_batch", Json::Num(self.global_batch as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("images_per_sec", Json::Num(self.images_per_sec)),
+            ("final_train_loss", Json::Num(self.final_train_loss as f64)),
+            ("final_val_acc", Json::Num(self.final_val_acc as f64)),
+            (
+                "loss_history",
+                Json::arr_f64(&self.loss_history.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("step", Json::Num(e.step as f64)),
+                                ("epoch", Json::Num(e.epoch)),
+                                ("train_loss", Json::Num(e.train_loss as f64)),
+                                ("train_acc", Json::Num(e.train_acc as f64)),
+                                ("val_loss", Json::Num(e.val_loss as f64)),
+                                ("val_acc", Json::Num(e.val_acc as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("wire_total_bytes", Json::Num(self.wire_totals.total_bytes as f64)),
+            ("wire_messages", Json::Num(self.wire_totals.messages as f64)),
+        ])
+    }
+}
+
+/// The leader: owns master state, the worker pool and the step pipeline.
+pub struct Trainer {
+    pub cfg: RunConfig,
+    engine: Arc<Engine>,
+    data: Arc<Synthetic>,
+    shards: Vec<Shard>,
+    plan: BucketPlan,
+    schedule: LrSchedule,
+    pub logger: MlperfLogger,
+    pub bn_mode: BnStatsMode,
+    pub threaded: bool,
+    /// Smith et al. ("Don't Decay the Learning Rate, Increase the Batch
+    /// Size") baseline: when set, the per-step gradient-accumulation count
+    /// follows the ramp instead of cfg.grad_accum. Related-work row of
+    /// Table I; exercised by the `ablations` suite.
+    pub batch_ramp: Option<crate::schedule::BatchRamp>,
+
+    // master state
+    params: Vec<f32>,
+    momentum: Vec<f32>,
+    bn_state: Vec<f32>,
+
+    // scratch reused across steps (no hot-loop allocation)
+    worker_grads: Vec<Vec<f32>>,
+    worker_states: Vec<Vec<f32>>,
+    batches: Vec<Batch>,
+
+    pub breakdown: StepBreakdown,
+    wire_totals: WireStats,
+    images_seen: u64,
+    step_idx: usize,
+    last_epoch_logged: i64,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig, engine: Arc<Engine>) -> Result<Trainer> {
+        cfg.validate()?;
+        let m = engine.manifest();
+        let dcfg = DataConfig {
+            train_size: cfg.train_size,
+            val_size: cfg.val_size,
+            noise: cfg.noise as f32,
+            seed: cfg.seed ^ 0xDA7A,
+            ..DataConfig::for_model(m.model.num_classes, m.model.image_size, m.model.channels)
+        };
+        let data = Arc::new(Synthetic::new(dcfg));
+        let shards = (0..cfg.workers)
+            .map(|w| Shard::new(w, cfg.workers, cfg.train_size, cfg.seed))
+            .collect();
+        let wire_elem = cfg.precision()?.bytes_per_elem();
+        let plan = BucketPlan::build(m, cfg.bucket_bytes, wire_elem);
+        plan.validate(m)?;
+        let schedule = cfg.schedule();
+        let logger = MlperfLogger::new("yasgd/coordinator.rs", cfg.mlperf_echo);
+
+        // Paper III-B-1: every "process" derives identical weights from the
+        // shared seed — no broadcast. (Workers share the leader's buffer in
+        // this in-process harness; init::parallel_init_all proves equality
+        // and bench A6 measures the alternative.)
+        let params = init::parallel_seed_init(m, cfg.seed);
+        let momentum = init::init_momentum(m);
+        let bn_state = init::init_bn_state(m);
+
+        let np = m.padded_param_count;
+        let sc = m.state_count;
+        let workers = cfg.workers;
+        Ok(Trainer {
+            cfg,
+            engine,
+            data,
+            shards,
+            plan,
+            schedule,
+            logger,
+            bn_mode: BnStatsMode::Local,
+            threaded: false,
+            batch_ramp: None,
+            params,
+            momentum,
+            bn_state,
+            worker_grads: (0..workers).map(|_| vec![0.0; np]).collect(),
+            worker_states: (0..workers).map(|_| vec![0.0; sc]).collect(),
+            batches: (0..workers)
+                .map(|_| Batch { images: Vec::new(), labels: Vec::new() })
+                .collect(),
+            breakdown: StepBreakdown::default(),
+            wire_totals: WireStats::default(),
+            images_seen: 0,
+            step_idx: 0,
+            last_epoch_logged: -1,
+        })
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.cfg.workers * self.cfg.grad_accum * self.engine.manifest().train.batch_size
+    }
+
+    /// Accumulation count for the CURRENT step (cfg.grad_accum, unless a
+    /// batch ramp is active).
+    pub fn accum_at(&self, step: usize) -> usize {
+        match &self.batch_ramp {
+            None => self.cfg.grad_accum,
+            Some(r) => {
+                let per_pass = self.cfg.workers * self.engine.manifest().train.batch_size;
+                (r.batch_at(step, self.cfg.total_steps) / per_pass).max(1)
+            }
+        }
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn bn_state(&self) -> &[f32] {
+        &self.bn_state
+    }
+
+    pub fn bucket_plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    pub fn step_index(&self) -> usize {
+        self.step_idx
+    }
+
+    pub fn epoch(&self) -> f64 {
+        self.images_seen as f64 / self.cfg.train_size as f64
+    }
+
+    /// Run one optimization step. Returns (mean loss, train accuracy).
+    pub fn step(&mut self) -> Result<(f32, f32)> {
+        let m = self.engine.manifest();
+        let b = m.train.batch_size;
+        let variant = if self.cfg.label_smoothing {
+            GradVariant::Smoothed
+        } else {
+            GradVariant::NoSmoothing
+        };
+
+        // ---- phase 1: per-worker gradients (with accumulation) ----------
+        let accum = self.accum_at(self.step_idx);
+        let t_data = Timer::start();
+        // Pre-draw all sample indices (shards are stateful).
+        let mut all_idxs: Vec<Vec<Vec<usize>>> = Vec::with_capacity(self.cfg.workers);
+        for w in 0..self.cfg.workers {
+            let mut per_micro = Vec::with_capacity(accum);
+            for _ in 0..accum {
+                per_micro.push(self.shards[w].next_batch(b));
+            }
+            all_idxs.push(per_micro);
+        }
+        t_data.stop_into(&mut self.breakdown.data_s);
+
+        let t_grad = Timer::start();
+        let accum_inv = 1.0f32 / accum as f32;
+        let (loss_sum, correct_sum) = if self.threaded && self.cfg.workers > 1 {
+            self.grad_phase_threaded(variant, &all_idxs, accum_inv)?
+        } else {
+            self.grad_phase_sequential(variant, &all_idxs, accum_inv)?
+        };
+        t_grad.stop_into(&mut self.breakdown.grad_s);
+
+        // ---- phase 2: bucketed allreduce (paper III-C) -------------------
+        let t_comm = Timer::start();
+        let precision = self.cfg.precision()?;
+        let algo = self.cfg.algorithm()?;
+        for i in 0..self.plan.buckets.len() {
+            let (lo, hi) = self.plan.span_with_padding(i);
+            // Allreduce the bucket span across workers, in place.
+            let mut views: Vec<Vec<f32>> = self
+                .worker_grads
+                .iter_mut()
+                .map(|g| g[lo..hi].to_vec())
+                .collect();
+            let stats = allreduce_mean(&mut views, algo, precision);
+            self.wire_totals.rounds += stats.rounds;
+            self.wire_totals.total_bytes += stats.total_bytes;
+            self.wire_totals.messages += stats.messages;
+            self.wire_totals.internode_bytes += stats.internode_bytes;
+            for (g, v) in self.worker_grads.iter_mut().zip(views.into_iter()) {
+                g[lo..hi].copy_from_slice(&v);
+            }
+        }
+        t_comm.stop_into(&mut self.breakdown.comm_s);
+
+        // ---- phase 3: master update (LARS via L1 kernels) -----------------
+        let t_up = Timer::start();
+        let lr = self.schedule.lr_at(self.step_idx) as f32;
+        let rule = if self.cfg.lars { UpdateRule::Lars } else { UpdateRule::Sgd };
+        let (new_p, new_m) =
+            self.engine.update(rule, &self.params, &self.momentum, &self.worker_grads[0], lr)?;
+        self.params = new_p;
+        self.momentum = new_m;
+
+        // ---- BN statistics policy (paper III-A-2) -------------------------
+        match self.bn_mode {
+            BnStatsMode::Local => self.bn_state.copy_from_slice(&self.worker_states[0]),
+            BnStatsMode::Mean => {
+                let inv = 1.0 / self.cfg.workers as f32;
+                for (i, dst) in self.bn_state.iter_mut().enumerate() {
+                    *dst = self.worker_states.iter().map(|s| s[i]).sum::<f32>() * inv;
+                }
+            }
+        }
+        t_up.stop_into(&mut self.breakdown.update_s);
+
+        self.images_seen += (self.cfg.workers * accum * b) as u64;
+        self.step_idx += 1;
+
+        let denom = (self.cfg.workers * accum) as f32;
+        let loss = loss_sum / denom;
+        let acc = correct_sum / (denom * b as f32);
+        Ok((loss, acc))
+    }
+
+    fn grad_phase_sequential(
+        &mut self,
+        variant: GradVariant,
+        all_idxs: &[Vec<Vec<usize>>],
+        accum_inv: f32,
+    ) -> Result<(f32, f32)> {
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
+        for w in 0..self.cfg.workers {
+            let (l, c) = run_worker(
+                &self.engine,
+                &self.data,
+                variant,
+                &self.params,
+                &self.bn_state,
+                &all_idxs[w],
+                accum_inv,
+                &mut self.worker_grads[w],
+                &mut self.worker_states[w],
+                &mut self.batches[w],
+            )?;
+            loss_sum += l;
+            correct_sum += c;
+        }
+        Ok((loss_sum, correct_sum))
+    }
+
+    fn grad_phase_threaded(
+        &mut self,
+        variant: GradVariant,
+        all_idxs: &[Vec<Vec<usize>>],
+        accum_inv: f32,
+    ) -> Result<(f32, f32)> {
+        let engine = &self.engine;
+        let data = &self.data;
+        let params = &self.params;
+        let bn_state = &self.bn_state;
+        let results: Vec<Result<(f32, f32)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .worker_grads
+                .iter_mut()
+                .zip(self.worker_states.iter_mut())
+                .zip(self.batches.iter_mut())
+                .zip(all_idxs.iter())
+                .map(|(((grads, states), batch), idxs)| {
+                    scope.spawn(move || {
+                        run_worker(
+                            engine, data, variant, params, bn_state, idxs, accum_inv, grads,
+                            states, batch,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        let mut loss_sum = 0.0;
+        let mut correct_sum = 0.0;
+        for r in results {
+            let (l, c) = r?;
+            loss_sum += l;
+            correct_sum += c;
+        }
+        Ok((loss_sum, correct_sum))
+    }
+
+    /// Snapshot the full training state.
+    pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
+        crate::checkpoint::Checkpoint {
+            model_name: self.engine.manifest().model.name.clone(),
+            step: self.step_idx,
+            seed: self.cfg.seed,
+            params: self.params.clone(),
+            momentum: self.momentum.clone(),
+            bn_state: self.bn_state.clone(),
+        }
+    }
+
+    /// Restore a snapshot (model identity and buffer lengths must match).
+    pub fn restore(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<()> {
+        let m = self.engine.manifest();
+        anyhow::ensure!(
+            ckpt.model_name == m.model.name,
+            "checkpoint is for model '{}', engine has '{}'",
+            ckpt.model_name,
+            m.model.name
+        );
+        anyhow::ensure!(
+            ckpt.params.len() == m.padded_param_count
+                && ckpt.momentum.len() == m.padded_param_count
+                && ckpt.bn_state.len() == m.state_count,
+            "checkpoint buffer lengths do not match the manifest"
+        );
+        self.params.copy_from_slice(&ckpt.params);
+        self.momentum.copy_from_slice(&ckpt.momentum);
+        self.bn_state.copy_from_slice(&ckpt.bn_state);
+        self.step_idx = ckpt.step;
+        // Fast-forward the data shards so resumed runs draw the batches the
+        // uninterrupted run would have drawn.
+        for w in 0..self.cfg.workers {
+            self.shards[w] =
+                crate::data::Shard::new(w, self.cfg.workers, self.cfg.train_size, self.cfg.seed);
+        }
+        let b = m.train.batch_size;
+        for _ in 0..ckpt.step {
+            for shard in self.shards.iter_mut() {
+                for _ in 0..self.cfg.grad_accum {
+                    shard.next_batch(b);
+                }
+            }
+        }
+        self.images_seen = (ckpt.step * self.global_batch()) as u64;
+        Ok(())
+    }
+
+    /// Evaluate on `n_batches` of the validation split.
+    pub fn evaluate(&mut self, n_batches: usize) -> Result<(f32, f32)> {
+        let m = self.engine.manifest();
+        let b = m.train.batch_size;
+        let mut batch = Batch { images: Vec::new(), labels: Vec::new() };
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut seen = 0usize;
+        for k in 0..n_batches {
+            let idxs: Vec<usize> =
+                (0..b).map(|i| (k * b + i) % self.cfg.val_size.max(1)).collect();
+            make_batch(&self.data, Split::Val, &idxs, &mut batch);
+            let out = self.engine.eval(&self.params, &self.bn_state, &batch.images, &batch.labels)?;
+            loss_sum += out.loss;
+            correct += out.correct;
+            seen += b;
+        }
+        Ok((loss_sum / n_batches.max(1) as f32, correct / seen.max(1) as f32))
+    }
+
+    /// Full training run with MLPerf-rule timing and periodic evaluation.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let m = self.engine.manifest().clone();
+        self.logger.log(tags::RUN_START);
+        self.logger
+            .log_value(tags::RUN_SET_RANDOM_SEED, &format!("{}", self.cfg.seed));
+        self.logger.log_value(
+            tags::MODEL_HP_INITIAL_SHAPE,
+            &format!(
+                "[{}, {}, {}]",
+                m.model.channels, m.model.image_size, m.model.image_size
+            ),
+        );
+        self.logger
+            .log_value(tags::BATCH_SIZE, &format!("{}", self.global_batch()));
+        self.logger.log(tags::TRAIN_LOOP);
+
+        let run_timer = Timer::start();
+        let mut loss_history = Vec::with_capacity(self.cfg.total_steps);
+        let mut evals: Vec<EvalPoint> = Vec::new();
+        let mut last_train = (f32::NAN, 0.0f32);
+
+        for s in 0..self.cfg.total_steps {
+            let t_step = Timer::start();
+            let (loss, acc) = self.step()?;
+            t_step.stop_into(&mut self.breakdown.step_s);
+            loss_history.push(loss);
+            last_train = (loss, acc);
+
+            let ep = self.epoch() as i64;
+            if ep != self.last_epoch_logged {
+                self.logger.log_value(tags::TRAIN_EPOCH, &format!("{ep}"));
+                self.last_epoch_logged = ep;
+            }
+
+            let do_eval = self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0;
+            if do_eval || s + 1 == self.cfg.total_steps {
+                self.logger.log(tags::EVAL_START);
+                let (vl, va) = self.evaluate(self.cfg.eval_batches)?;
+                self.logger.log_json(
+                    tags::EVAL_ACCURACY,
+                    &Json::obj(vec![
+                        ("epoch", Json::Num(self.epoch())),
+                        ("value", Json::Num(va as f64)),
+                    ]),
+                );
+                self.logger.log(tags::EVAL_STOP);
+                evals.push(EvalPoint {
+                    step: s + 1,
+                    epoch: self.epoch(),
+                    train_loss: loss,
+                    train_acc: acc,
+                    val_loss: vl,
+                    val_acc: va,
+                });
+            }
+        }
+
+        self.logger.log(tags::RUN_STOP);
+        self.logger.log(tags::RUN_FINAL);
+        let elapsed = run_timer.elapsed_s();
+        let tp = Throughput { images: self.images_seen, seconds: elapsed };
+        Ok(TrainReport {
+            steps: self.cfg.total_steps,
+            global_batch: self.global_batch(),
+            elapsed_s: elapsed,
+            images_per_sec: tp.images_per_sec(),
+            final_train_loss: last_train.0,
+            final_val_acc: evals.last().map(|e| e.val_acc).unwrap_or(0.0),
+            loss_history,
+            evals,
+            wire_totals: self.wire_totals.clone(),
+            mlperf_elapsed_s: self.logger.run_elapsed_s(),
+        })
+    }
+}
+
+/// One worker's grad phase: `grad_accum` micro-batches, averaged into
+/// `grads`; worker BN state written to `states`. Free function so the
+/// threaded path can call it without borrowing the Trainer.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    engine: &Engine,
+    data: &Synthetic,
+    variant: GradVariant,
+    params: &[f32],
+    bn_state: &[f32],
+    micro_idxs: &[Vec<usize>],
+    accum_inv: f32,
+    grads: &mut [f32],
+    states: &mut [f32],
+    batch: &mut Batch,
+) -> Result<(f32, f32)> {
+    grads.fill(0.0);
+    let mut loss_sum = 0.0f32;
+    let mut correct_sum = 0.0f32;
+    for idxs in micro_idxs {
+        make_batch(data, Split::Train, idxs, batch);
+        let out = engine.grad_step(variant, params, bn_state, &batch.images, &batch.labels)?;
+        loss_sum += out.loss;
+        correct_sum += out.correct;
+        for (g, d) in grads.iter_mut().zip(out.grads.iter()) {
+            *g += d * accum_inv;
+        }
+        states.copy_from_slice(&out.new_state);
+    }
+    Ok((loss_sum, correct_sum))
+}

@@ -1,0 +1,335 @@
+//! Synthetic ImageNet-proxy data pipeline.
+//!
+//! The real ImageNet is not available in this environment (DESIGN.md §3),
+//! so the pipeline generates a deterministic class-conditional dataset
+//! that exercises the same code paths: epoch accounting over a fixed-size
+//! corpus, disjoint per-worker shards, shuffling per epoch, and a
+//! double-buffered prefetch thread.
+//!
+//! The task is genuinely learnable (each class = a smooth random "texture"
+//! template + per-sample noise + random shift), so accuracy curves behave
+//! qualitatively like image classification: batch size, LR schedule and
+//! LARS all visibly matter — which is what Fig 3/Fig 4 need.
+
+use crate::util::rng::Rng;
+
+/// Dataset-wide configuration.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    /// Images per epoch (the synthetic "corpus size").
+    pub train_size: usize,
+    pub val_size: usize,
+    /// Per-sample additive noise level; higher = harder task.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl DataConfig {
+    pub fn for_model(num_classes: usize, image_size: usize, channels: usize) -> DataConfig {
+        DataConfig {
+            num_classes,
+            image_size,
+            channels,
+            train_size: 4096,
+            val_size: 512,
+            noise: 0.25,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.image_size * self.image_size * self.channels
+    }
+}
+
+/// Deterministic class templates; shared by all workers (same seed — the
+/// same parallel-init trick as the weights, paper III-B-1).
+#[derive(Debug, Clone)]
+pub struct Synthetic {
+    cfg: DataConfig,
+    /// num_classes x image_elems smooth textures in [-1, 1].
+    templates: Vec<Vec<f32>>,
+}
+
+impl Synthetic {
+    pub fn new(cfg: DataConfig) -> Synthetic {
+        let mut templates = Vec::with_capacity(cfg.num_classes);
+        let root = Rng::new(cfg.seed);
+        for c in 0..cfg.num_classes {
+            let mut rng = root.derive(c as u64 + 1);
+            templates.push(Self::texture(&cfg, &mut rng));
+        }
+        Synthetic { cfg, templates }
+    }
+
+    /// Smooth texture: sum of a few random low-frequency sinusoids, so
+    /// conv layers have real spatial structure to latch onto.
+    fn texture(cfg: &DataConfig, rng: &mut Rng) -> Vec<f32> {
+        let s = cfg.image_size;
+        let mut img = vec![0.0f32; cfg.image_elems()];
+        for _ in 0..4 {
+            let fx = 1.0 + rng.next_f64() * 3.0;
+            let fy = 1.0 + rng.next_f64() * 3.0;
+            let phase = rng.next_f64() * std::f64::consts::TAU;
+            let chan_w: Vec<f64> = (0..cfg.channels).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+            for y in 0..s {
+                for x in 0..s {
+                    let v = ((fx * x as f64 / s as f64 + fy * y as f64 / s as f64)
+                        * std::f64::consts::TAU
+                        + phase)
+                        .sin();
+                    for ch in 0..cfg.channels {
+                        img[(y * s + x) * cfg.channels + ch] += (v * chan_w[ch] * 0.5) as f32;
+                    }
+                }
+            }
+        }
+        img
+    }
+
+    pub fn config(&self) -> &DataConfig {
+        &self.cfg
+    }
+
+    /// Materialize sample `idx` of the given split into `out`
+    /// (image_elems floats). Returns the label.
+    ///
+    /// Sample = class template circularly shifted by a per-sample offset +
+    /// Gaussian noise. Fully deterministic in (seed, split, idx).
+    pub fn sample_into(&self, split: Split, idx: usize, out: &mut [f32]) -> i32 {
+        assert_eq!(out.len(), self.cfg.image_elems());
+        let mut rng = Rng::new(self.cfg.seed ^ split.salt()).derive(idx as u64 + 1);
+        let label = rng.below(self.cfg.num_classes as u64) as usize;
+        let s = self.cfg.image_size;
+        let ch = self.cfg.channels;
+        // Small jitter only: the low-frequency textures anticorrelate under
+        // large circular shifts, which would make the task unlearnable at
+        // raw-pixel level. 1-2 px matches real-world augmentation scale.
+        let max_shift = (s as u64 / 16).max(2);
+        let dx = rng.below(max_shift) as usize;
+        let dy = rng.below(max_shift) as usize;
+        let t = &self.templates[label];
+        for y in 0..s {
+            let sy = (y + dy) % s;
+            for x in 0..s {
+                let sx = (x + dx) % s;
+                for c in 0..ch {
+                    out[(y * s + x) * ch + c] = t[(sy * s + sx) * ch + c]
+                        + self.cfg.noise * rng.next_normal() as f32;
+                }
+            }
+        }
+        label as i32
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+impl Split {
+    fn salt(self) -> u64 {
+        match self {
+            Split::Train => 0x7261696E,
+            Split::Val => 0x76616C00,
+        }
+    }
+}
+
+/// One worker's view of the training corpus: disjoint shard, reshuffled
+/// every epoch with a seed all workers derive identically (so shards stay
+/// disjoint without any coordination traffic — same philosophy as T5).
+#[derive(Debug)]
+pub struct Shard {
+    pub worker: usize,
+    pub num_workers: usize,
+    indices: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+    train_size: usize,
+}
+
+impl Shard {
+    pub fn new(worker: usize, num_workers: usize, train_size: usize, seed: u64) -> Shard {
+        assert!(worker < num_workers);
+        let mut s = Shard {
+            worker,
+            num_workers,
+            indices: Vec::new(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+            train_size,
+        };
+        s.reshuffle();
+        s
+    }
+
+    /// Epoch-`e` global permutation, sliced round-robin per worker.
+    fn reshuffle(&mut self) {
+        let mut perm: Vec<usize> = (0..self.train_size).collect();
+        let mut rng = Rng::new(self.seed).derive(0xE0000 + self.epoch);
+        rng.shuffle(&mut perm);
+        self.indices = perm
+            .into_iter()
+            .skip(self.worker)
+            .step_by(self.num_workers)
+            .collect();
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next `n` sample indices, advancing epochs as needed.
+    pub fn next_batch(&mut self, n: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if self.cursor >= self.indices.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// A materialized batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+/// Fill a batch from the dataset.
+pub fn make_batch(data: &Synthetic, split: Split, idxs: &[usize], batch: &mut Batch) {
+    let elems = data.config().image_elems();
+    batch.images.resize(idxs.len() * elems, 0.0);
+    batch.labels.resize(idxs.len(), 0);
+    for (i, &idx) in idxs.iter().enumerate() {
+        let lbl = data.sample_into(split, idx, &mut batch.images[i * elems..(i + 1) * elems]);
+        batch.labels[i] = lbl;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig { train_size: 64, val_size: 16, ..DataConfig::for_model(10, 16, 3) }
+    }
+
+    #[test]
+    fn deterministic_samples() {
+        let d1 = Synthetic::new(cfg());
+        let d2 = Synthetic::new(cfg());
+        let mut a = vec![0.0; d1.config().image_elems()];
+        let mut b = vec![0.0; d2.config().image_elems()];
+        for idx in [0, 5, 63] {
+            let la = d1.sample_into(Split::Train, idx, &mut a);
+            let lb = d2.sample_into(Split::Train, idx, &mut b);
+            assert_eq!(la, lb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn train_and_val_differ() {
+        let d = Synthetic::new(cfg());
+        let mut a = vec![0.0; d.config().image_elems()];
+        let mut b = vec![0.0; d.config().image_elems()];
+        d.sample_into(Split::Train, 3, &mut a);
+        d.sample_into(Split::Val, 3, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let d = Synthetic::new(cfg());
+        let mut img = vec![0.0; d.config().image_elems()];
+        let mut seen = vec![false; 10];
+        for idx in 0..64 {
+            let l = d.sample_into(Split::Train, idx, &mut img) as usize;
+            assert!(l < 10);
+            seen[l] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8, "poor label coverage");
+    }
+
+    #[test]
+    fn same_class_samples_correlate() {
+        // Two samples of the same class should be far more similar than
+        // samples of different classes (learnability sanity check).
+        let d = Synthetic::new(cfg());
+        let elems = d.config().image_elems();
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 10];
+        let mut img = vec![0.0; elems];
+        for idx in 0..64 {
+            let l = d.sample_into(Split::Train, idx, &mut img) as usize;
+            by_class[l].push(img.clone());
+        }
+        let cls: Vec<usize> = (0..10).filter(|&c| by_class[c].len() >= 2).collect();
+        assert!(cls.len() >= 2);
+        let c0 = cls[0];
+        let c1 = cls[1];
+        let cos = |a: &[f32], b: &[f32]| {
+            let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+            dot / (na * nb)
+        };
+        let same = cos(&by_class[c0][0], &by_class[c0][1]);
+        let diff = cos(&by_class[c0][0], &by_class[c1][0]);
+        assert!(
+            same > diff + 0.1,
+            "same-class cos {same} not above cross-class {diff}"
+        );
+    }
+
+    #[test]
+    fn shards_are_disjoint_and_cover() {
+        let n = 64;
+        let workers = 4;
+        let mut all: Vec<usize> = Vec::new();
+        for w in 0..workers {
+            let mut s = Shard::new(w, workers, n, 9);
+            all.extend(s.next_batch(n / workers));
+        }
+        all.sort();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epoch_advances_and_reshuffles() {
+        let mut s = Shard::new(0, 2, 64, 9);
+        let e0: Vec<usize> = s.next_batch(32);
+        assert_eq!(s.epoch(), 0);
+        let e1: Vec<usize> = s.next_batch(32);
+        assert_eq!(s.epoch(), 1);
+        assert_ne!(e0, e1, "epoch permutation should differ");
+        // Same 32-element universe (worker 0's share changes per epoch under
+        // round-robin of a new permutation, so just check bounds).
+        assert!(e1.iter().all(|&i| i < 64));
+    }
+
+    #[test]
+    fn batches_fill_shapes() {
+        let d = Synthetic::new(cfg());
+        let mut s = Shard::new(0, 1, 64, 9);
+        let mut b = Batch { images: Vec::new(), labels: Vec::new() };
+        let idxs = s.next_batch(8);
+        make_batch(&d, Split::Train, &idxs, &mut b);
+        assert_eq!(b.images.len(), 8 * d.config().image_elems());
+        assert_eq!(b.labels.len(), 8);
+    }
+}

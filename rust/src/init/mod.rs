@@ -1,0 +1,215 @@
+//! Parallel DNN model initialization (paper Section III-B-1).
+//!
+//! "Generally, the root process initializes all weights of the model.
+//! After that, the process broadcasts these weights to all processes...
+//! this broadcast operation cost is not ignored [at] thousands of
+//! processes. Therefore, we employ [an] approach [where] every process has
+//! the same seed and initializes weights in parallel."
+//!
+//! Both strategies are implemented so bench A6 can compare them:
+//!
+//! * `parallel_seed_init` — every worker runs the SAME deterministic
+//!   He/truncated-normal fill from the same seed; zero network traffic.
+//! * `broadcast_init` — rank 0 initializes, then a (simulated-wire, real
+//!   memcpy) binary-tree broadcast distributes the weights; cost grows
+//!   with worker count exactly the way the paper complains about.
+
+use crate::model_meta::{LayerKind, Manifest};
+use crate::util::rng::Rng;
+
+/// He-style deterministic initialization of the packed parameter buffer.
+///
+/// Matches the *distributional* contract of python/compile/resnet.py
+/// (truncated normal, std = sqrt(2 / fan_in) for convs, sqrt(1 / fan_in)
+/// for fc; gamma = 1, beta/bias = 0). Bit-for-bit identity with jax is
+/// not required — every rust worker derives identical bits from the seed,
+/// which is the property the paper's technique needs.
+pub fn parallel_seed_init(manifest: &Manifest, seed: u64) -> Vec<f32> {
+    let mut out = vec![0.0f32; manifest.padded_param_count];
+    let root = Rng::new(seed);
+    for (li, l) in manifest.layers.iter().enumerate() {
+        // Independent stream per layer: workers can even init layers in
+        // any order / in parallel threads and agree bit-for-bit.
+        let mut rng = root.derive(li as u64 + 1);
+        let dst = &mut out[l.offset..l.offset + l.size];
+        match l.kind {
+            LayerKind::Conv => {
+                // HWIO: fan_in = kh * kw * cin.
+                let fan_in: usize = l.shape[..l.shape.len() - 1].iter().product();
+                let std = (2.0 / fan_in as f64).sqrt();
+                for v in dst.iter_mut() {
+                    *v = (rng.next_trunc_normal() * std) as f32;
+                }
+            }
+            LayerKind::FcW => {
+                let fan_in = l.shape[0];
+                let std = (1.0 / fan_in as f64).sqrt();
+                for v in dst.iter_mut() {
+                    *v = (rng.next_trunc_normal() * std) as f32;
+                }
+            }
+            LayerKind::BnGamma => dst.fill(1.0),
+            LayerKind::BnBeta | LayerKind::FcB => dst.fill(0.0),
+        }
+    }
+    out
+}
+
+/// Initial BN running statistics (mean 0, var 1), packed.
+pub fn init_bn_state(manifest: &Manifest) -> Vec<f32> {
+    let mut out = vec![0.0f32; manifest.state_count];
+    for s in &manifest.states {
+        if s.name.ends_with(".var") {
+            out[s.offset..s.offset + s.size].fill(1.0);
+        }
+    }
+    out
+}
+
+/// Zeroed momentum buffer.
+pub fn init_momentum(manifest: &Manifest) -> Vec<f32> {
+    vec![0.0f32; manifest.padded_param_count]
+}
+
+/// Result of an initialization strategy across a worker pool.
+pub struct InitResult {
+    /// One parameter buffer per worker.
+    pub per_worker: Vec<Vec<f32>>,
+    /// Bytes that crossed the (simulated) wire.
+    pub wire_bytes: usize,
+    /// Broadcast rounds on the critical path (0 for parallel init).
+    pub rounds: usize,
+}
+
+/// Paper's technique: all workers seed-init independently. No traffic.
+pub fn parallel_init_all(manifest: &Manifest, seed: u64, workers: usize) -> InitResult {
+    let per_worker: Vec<Vec<f32>> =
+        (0..workers).map(|_| parallel_seed_init(manifest, seed)).collect();
+    InitResult { per_worker, wire_bytes: 0, rounds: 0 }
+}
+
+/// Baseline: rank 0 inits, binary-tree broadcast to everyone else. The
+/// copies are real; the "wire" is counted for the cost model.
+pub fn broadcast_init_all(manifest: &Manifest, seed: u64, workers: usize) -> InitResult {
+    let root_params = parallel_seed_init(manifest, seed);
+    let bytes_each = root_params.len() * 4;
+    let mut per_worker: Vec<Option<Vec<f32>>> = vec![None; workers];
+    per_worker[0] = Some(root_params);
+
+    // Binary-tree broadcast: after round r the holders are ranks
+    // 0..2^(r+1); in the round with stride s, every holder w < s sends to
+    // w + s.
+    let mut wire_bytes = 0;
+    let mut rounds = 0;
+    let mut stride = 1;
+    while stride < workers {
+        for w in 0..stride.min(workers) {
+            let dst = w + stride;
+            if dst < workers {
+                let src = per_worker[w].as_ref().expect("holder").clone(); // the memcpy IS the send
+                per_worker[dst] = Some(src);
+                wire_bytes += bytes_each;
+            }
+        }
+        rounds += 1;
+        stride *= 2;
+    }
+
+    InitResult {
+        per_worker: per_worker.into_iter().map(Option::unwrap).collect(),
+        wire_bytes,
+        rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_meta::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"format_version":1,
+            "model":{"name":"t","num_classes":10,"image_size":32,"channels":3},
+            "train":{"momentum":0.9,"weight_decay":0.0005,"lars_eta":0.001,"lars_eps":1e-9,"label_smoothing":0.1,"batch_size":32},
+            "param_count":731,"padded_param_count":1024,"state_count":8,"num_layers":5,
+            "pallas_tile":1024,
+            "layers":[
+              {"name":"stem.conv","kind":"conv","shape":[3,3,3,8],"size":216,"offset":0,"lars_skip":false},
+              {"name":"stem.bn.gamma","kind":"bn_gamma","shape":[8],"size":8,"offset":216,"lars_skip":true},
+              {"name":"stem.bn.beta","kind":"bn_beta","shape":[8],"size":8,"offset":224,"lars_skip":true},
+              {"name":"fc.w","kind":"fc_w","shape":[49,10],"size":490,"offset":232,"lars_skip":false},
+              {"name":"fc.b","kind":"fc_b","shape":[9],"size":9,"offset":722,"lars_skip":true}],
+            "states":[
+              {"name":"stem.bn.mean","shape":[4],"size":4,"offset":0},
+              {"name":"stem.bn.var","shape":[4],"size":4,"offset":4}],
+            "artifacts":{}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parallel_init_is_identical_across_workers() {
+        let m = manifest();
+        let r = parallel_init_all(&m, 100, 8);
+        for w in &r.per_worker[1..] {
+            assert_eq!(&r.per_worker[0], w);
+        }
+        assert_eq!(r.wire_bytes, 0);
+        assert_eq!(r.rounds, 0);
+    }
+
+    #[test]
+    fn broadcast_matches_parallel_content() {
+        let m = manifest();
+        let a = parallel_init_all(&m, 7, 5);
+        let b = broadcast_init_all(&m, 7, 5);
+        assert_eq!(a.per_worker, b.per_worker);
+        assert!(b.wire_bytes > 0);
+        assert_eq!(b.wire_bytes, 4 * 1024 * 4); // 4 sends of the 1024-f32 buffer
+    }
+
+    #[test]
+    fn broadcast_rounds_grow_log() {
+        let m = manifest();
+        assert_eq!(broadcast_init_all(&m, 1, 2).rounds, 1);
+        assert_eq!(broadcast_init_all(&m, 1, 8).rounds, 3);
+        assert_eq!(broadcast_init_all(&m, 1, 9).rounds, 4);
+    }
+
+    #[test]
+    fn he_scaling_by_kind() {
+        let m = manifest();
+        let p = parallel_seed_init(&m, 3);
+        // conv std ~ sqrt(2/27) ~ 0.272
+        let conv = &p[0..216];
+        let std = |xs: &[f32]| {
+            let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+            (xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32).sqrt()
+        };
+        let s_conv = std(conv);
+        // truncated normal on [-2,2] shrinks std by ~0.88
+        let want = (2.0f32 / 27.0).sqrt() * 0.88;
+        assert!((s_conv - want).abs() < want * 0.25, "conv std {s_conv} want ~{want}");
+        // gamma all ones, beta/bias zeros
+        assert!(p[216..224].iter().all(|&v| v == 1.0));
+        assert!(p[224..232].iter().all(|&v| v == 0.0));
+        assert!(p[722..731].iter().all(|&v| v == 0.0));
+        // padding zeroed
+        assert!(p[731..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let m = manifest();
+        assert_ne!(parallel_seed_init(&m, 1), parallel_seed_init(&m, 2));
+    }
+
+    #[test]
+    fn bn_state_mean_zero_var_one() {
+        let m = manifest();
+        let s = init_bn_state(&m);
+        assert_eq!(&s[0..4], &[0.0; 4]);
+        assert_eq!(&s[4..8], &[1.0; 4]);
+    }
+}

@@ -1,0 +1,52 @@
+//! # yasgd — Yet Another Accelerated SGD
+//!
+//! Reproduction of Yamazaki et al. 2019, "Yet Another Accelerated SGD:
+//! ResNet-50 Training on ImageNet in 74.7 seconds" (arXiv:1903.12650), as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: worker
+//!   pool, gradient bucketing, backward/allreduce overlap, real numeric
+//!   collectives, mixed-precision communication, LR scheduling, parallel
+//!   same-seed init, MLPerf-style logging, and an α–β network model that
+//!   extrapolates measured step costs to the paper's 2,048-GPU scale.
+//! * **L2 (python/compile/model.py)** — ResNet fwd/bwd + LARS update
+//!   graphs in JAX, AOT-lowered to `artifacts/*.hlo.txt` once at build
+//!   time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels: batched per-layer
+//!   norms (the paper's Section III-B-2 GPU kernel rethought for TPU),
+//!   fused LARS update, label-smoothed cross-entropy.
+//!
+//! Python never runs at training time; the rust binary is self-contained
+//! once `make artifacts` has produced the HLO text + manifest.
+
+pub mod benchkit;
+pub mod bucket;
+pub mod checkpoint;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod init;
+pub mod metrics;
+pub mod mlperf;
+pub mod model_meta;
+pub mod overlap;
+pub mod runtime;
+pub mod schedule;
+pub mod simnet;
+pub mod util;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: explicit arg > $YASGD_ARTIFACTS > ./artifacts.
+pub fn artifacts_dir(explicit: Option<&str>) -> std::path::PathBuf {
+    if let Some(p) = explicit {
+        return p.into();
+    }
+    if let Ok(p) = std::env::var("YASGD_ARTIFACTS") {
+        return p.into();
+    }
+    DEFAULT_ARTIFACTS_DIR.into()
+}

@@ -1,0 +1,185 @@
+//! yasgd CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                      load artifacts, print the model inventory
+//!   train [opts]              run data-parallel training on the synthetic
+//!                             ImageNet proxy with the full paper stack
+//!   simulate [opts]           α–β model: Fig-2 scaling curve at ABCI shape
+//!   smoke                     one grad+update+eval round trip (CI check)
+//!
+//! Common options: --artifacts DIR, --workers N, --steps N, --lr X,
+//! --allreduce ring|hd|hier|naive, --wire f16|f32, --bucket-bytes N,
+//! --no-lars, --no-smoothing, --no-overlap, --mlperf-log, --threaded.
+
+use anyhow::Result;
+use std::sync::Arc;
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::{Engine, GradVariant, UpdateRule};
+use yasgd::simnet::{scaling_curve, ClusterSpec};
+use yasgd::util::cli::Args;
+
+const KNOWN_OPTS: &[&str] = &[
+    "artifacts", "config", "workers", "grad-accum", "steps", "eval-every", "eval-batches",
+    "seed", "lr", "warmup-frac", "decay", "no-lars", "no-smoothing", "allreduce",
+    "ranks-per-node", "wire", "bucket-bytes", "no-overlap", "train-size", "val-size", "noise",
+    "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json", "save-checkpoint", "resume",
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    args.reject_unknown(KNOWN_OPTS)?;
+    match args.subcommand.as_deref() {
+        Some("info") => info(&args),
+        Some("train") => train(&args),
+        Some("simulate") => simulate(&args),
+        Some("smoke") | None => smoke(&args),
+        Some(other) => {
+            anyhow::bail!("unknown subcommand '{other}' (info | train | simulate | smoke)")
+        }
+    }
+}
+
+fn load_engine(args: &Args) -> Result<Arc<Engine>> {
+    let dir = yasgd::artifacts_dir(args.get("artifacts"));
+    Ok(Arc::new(Engine::load(&dir)?))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let m = engine.manifest();
+    println!(
+        "model={} classes={} image={}x{}x{}",
+        m.model.name, m.model.num_classes, m.model.image_size, m.model.image_size, m.model.channels
+    );
+    println!(
+        "params={} (padded {}) bn_state={} layers={} batch={}",
+        m.param_count,
+        m.padded_param_count,
+        m.state_count,
+        m.layers.len(),
+        m.train.batch_size
+    );
+    println!(
+        "hyperparams: momentum={} wd={} lars_eta={} smoothing={}",
+        m.train.momentum, m.train.weight_decay, m.train.lars_eta, m.train.label_smoothing
+    );
+    println!("flops/image (est): {:.2e}", m.flops_per_image());
+    for (f, ms) in &engine.compile_stats.per_artifact_ms {
+        println!("  compiled {f}: {ms:.1} ms");
+    }
+    println!("\nlayer table:");
+    for (i, l) in m.layers.iter().enumerate() {
+        println!(
+            "  [{i:>3}] {:<16} {:<9} size={:<7} offset={:<8} lars_skip={}",
+            l.name,
+            l.kind.as_str(),
+            l.size,
+            l.offset,
+            l.lars_skip
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let engine = load_engine(args)?;
+    let mut trainer = Trainer::new(cfg, engine)?;
+    trainer.threaded = args.flag("threaded");
+    if let Some(path) = args.get("resume") {
+        let ckpt = yasgd::checkpoint::Checkpoint::load(std::path::Path::new(path))?;
+        trainer.restore(&ckpt)?;
+        println!("resumed from {path} at step {}", trainer.step_index());
+    }
+    let report = trainer.train()?;
+    if let Some(path) = args.get("save-checkpoint") {
+        trainer.checkpoint().save(std::path::Path::new(path))?;
+        println!("saved checkpoint to {path}");
+    }
+
+    println!(
+        "train done: steps={} global_batch={} elapsed={:.2}s ({:.1} img/s)",
+        report.steps, report.global_batch, report.elapsed_s, report.images_per_sec
+    );
+    println!(
+        "final: train_loss={:.4} val_acc={:.4}",
+        report.final_train_loss, report.final_val_acc
+    );
+    for e in &report.evals {
+        println!(
+            "  eval @step {:>4} (epoch {:.1}): train_acc={:.4} val_acc={:.4} val_loss={:.4}",
+            e.step, e.epoch, e.train_acc, e.val_acc, e.val_loss
+        );
+    }
+    println!("step breakdown:\n{}", trainer.breakdown.report());
+    println!(
+        "wire: {} messages, {:.2} MiB total",
+        report.wire_totals.messages,
+        report.wire_totals.total_bytes as f64 / (1024.0 * 1024.0)
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let spec = ClusterSpec::abci();
+    let max_gpus = args.get_usize("gpus", 2048)?;
+    let per_gpu_batch = args.get_usize("per-gpu-batch", 40)?;
+    let mut counts = vec![];
+    let mut g = 4;
+    while g <= max_gpus {
+        counts.push(g);
+        g *= 2;
+    }
+    // ResNet-50 fp16 gradient bytes (the paper's model, not our proxy).
+    let grad_bytes = 25.5e6 * 2.0;
+    let pts = scaling_curve(&spec, &counts, per_gpu_batch, grad_bytes, 8, 0.66);
+    println!("{:>6} {:>16} {:>16} {:>8} {:>10}", "gpus", "ideal img/s", "model img/s", "eff", "step ms");
+    for p in pts {
+        println!(
+            "{:>6} {:>16.0} {:>16.0} {:>7.1}% {:>10.2}",
+            p.gpus,
+            p.ideal_images_per_sec,
+            p.model_images_per_sec,
+            p.efficiency * 100.0,
+            p.step_time_s * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let m = engine.manifest().clone();
+    println!(
+        "loaded artifacts: model={} P={} Np={} S={} L={} B={}",
+        m.model.name,
+        m.param_count,
+        m.padded_param_count,
+        m.state_count,
+        m.layers.len(),
+        m.train.batch_size
+    );
+
+    let params = yasgd::init::parallel_seed_init(&m, 100_000);
+    let momentum = yasgd::init::init_momentum(&m);
+    let state = yasgd::init::init_bn_state(&m);
+    let b = m.train.batch_size;
+    let img_len = b * m.model.image_size * m.model.image_size * m.model.channels;
+    let images: Vec<f32> = (0..img_len).map(|i| ((i % 97) as f32 / 97.0) - 0.5).collect();
+    let labels: Vec<i32> = (0..b).map(|i| (i % m.model.num_classes) as i32).collect();
+
+    let g = engine.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels)?;
+    println!("grad_step: loss={:.4} correct={}", g.loss, g.correct);
+    let (p2, _m2) = engine.update(UpdateRule::Lars, &params, &momentum, &g.grads, 0.1)?;
+    let delta: f32 = p2.iter().zip(&params).map(|(a, b)| (a - b).abs()).sum();
+    println!("update: |delta params|_1 = {delta:.6}");
+    let e = engine.eval(&p2, &g.new_state, &images, &labels)?;
+    println!("eval: loss={:.4} correct={}", e.loss, e.correct);
+    println!("smoke OK");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Throughput/latency metrics: timers, online statistics, and the
+//! images-per-second + scaling-efficiency numbers the paper's Fig 2 axes
+//! use.
+
+use std::time::Instant;
+
+/// Online summary statistics (Welford) + min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Scoped wall-clock timer feeding a Summary.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn stop_into(self, s: &mut Summary) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        s.push(dt);
+        dt
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Per-phase timing breakdown of a training step — the profile that the
+/// §Perf optimization loop reads.
+#[derive(Debug, Clone, Default)]
+pub struct StepBreakdown {
+    pub data_s: Summary,
+    pub grad_s: Summary,
+    pub comm_s: Summary,
+    pub update_s: Summary,
+    pub step_s: Summary,
+}
+
+impl StepBreakdown {
+    pub fn report(&self) -> String {
+        let f = |name: &str, s: &Summary| {
+            format!(
+                "  {name:<8} mean {:8.3} ms  std {:6.3}  min {:8.3}  max {:8.3}  (n={})",
+                s.mean() * 1e3,
+                s.std() * 1e3,
+                s.min() * 1e3,
+                s.max() * 1e3,
+                s.count()
+            )
+        };
+        [
+            f("data", &self.data_s),
+            f("grad", &self.grad_s),
+            f("comm", &self.comm_s),
+            f("update", &self.update_s),
+            f("step", &self.step_s),
+        ]
+        .join("\n")
+    }
+}
+
+/// Throughput accounting over a run.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub images: u64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    pub fn images_per_sec(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.images as f64 / self.seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Scaling efficiency against a single-worker baseline rate.
+    pub fn efficiency_vs(&self, single_worker_ips: f64, workers: usize) -> f64 {
+        self.images_per_sec() / (single_worker_ips * workers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.var(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let mut s = Summary::new();
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let dt = t.stop_into(&mut s);
+        assert!(dt >= 0.004, "dt {dt}");
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { images: 1000, seconds: 2.0 };
+        assert!((t.images_per_sec() - 500.0).abs() < 1e-9);
+        assert!((t.efficiency_vs(125.0, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_report_renders() {
+        let mut b = StepBreakdown::default();
+        b.step_s.push(0.01);
+        let r = b.report();
+        assert!(r.contains("step"));
+        assert!(r.contains("n=1"));
+    }
+}

@@ -1,0 +1,166 @@
+//! MLPerf v0.5.0-style structured logging (paper Section IV + Appendix).
+//!
+//! The paper times its run "according to the rule of MLPerf v0.5.0 ...
+//! from the message of 'run_start' to 'run_final'", and its appendix shows
+//! the `:::MLPv0.5.0 resnet <timestamp> (<file>) <tag>[: <json>]` record
+//! stream. This module reproduces that grammar so our e2e example's log is
+//! directly comparable (and greppable by the same tooling).
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Benchmark tag constants used by the appendix log.
+pub mod tags {
+    pub const RUN_START: &str = "run_start";
+    pub const RUN_STOP: &str = "run_stop";
+    pub const RUN_FINAL: &str = "run_final";
+    pub const RUN_SET_RANDOM_SEED: &str = "run_set_random_seed";
+    pub const TRAIN_LOOP: &str = "train_loop";
+    pub const TRAIN_EPOCH: &str = "train_epoch";
+    pub const EVAL_START: &str = "eval_start";
+    pub const EVAL_STOP: &str = "eval_stop";
+    pub const EVAL_ACCURACY: &str = "eval_accuracy";
+    pub const EVAL_OFFSET: &str = "eval_offset";
+    pub const MODEL_HP_INITIAL_SHAPE: &str = "model_hp_initial_shape";
+    pub const BATCH_SIZE: &str = "global_batch_size";
+}
+
+/// One emitted record (kept for programmatic inspection in tests/benches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub timestamp: f64,
+    pub tag: String,
+    pub value: Option<String>,
+}
+
+impl Record {
+    /// The appendix line format.
+    pub fn render(&self, origin: &str) -> String {
+        let mut s = String::new();
+        write!(
+            s,
+            ":::MLPv0.5.0 resnet {:.9} ({origin}) {}",
+            self.timestamp, self.tag
+        )
+        .unwrap();
+        if let Some(v) = &self.value {
+            write!(s, ": {v}").unwrap();
+        }
+        s
+    }
+}
+
+/// Thread-safe logger; collects records and optionally tees to stderr.
+pub struct MlperfLogger {
+    origin: String,
+    echo: bool,
+    records: Mutex<Vec<Record>>,
+}
+
+impl MlperfLogger {
+    pub fn new(origin: &str, echo: bool) -> MlperfLogger {
+        MlperfLogger { origin: origin.to_string(), echo, records: Mutex::new(Vec::new()) }
+    }
+
+    fn now() -> f64 {
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_secs_f64()
+    }
+
+    pub fn log(&self, tag: &str) {
+        self.log_value_opt(tag, None);
+    }
+
+    pub fn log_value(&self, tag: &str, value: &str) {
+        self.log_value_opt(tag, Some(value.to_string()));
+    }
+
+    pub fn log_json(&self, tag: &str, json: &crate::util::json::Json) {
+        self.log_value_opt(tag, Some(json.to_string()));
+    }
+
+    fn log_value_opt(&self, tag: &str, value: Option<String>) {
+        let rec = Record { timestamp: Self::now(), tag: tag.to_string(), value };
+        if self.echo {
+            eprintln!("{}", rec.render(&self.origin));
+        }
+        self.records.lock().unwrap().push(rec);
+    }
+
+    /// All records so far (cloned).
+    pub fn records(&self) -> Vec<Record> {
+        self.records.lock().unwrap().clone()
+    }
+
+    /// MLPerf-rule elapsed seconds: run_start .. run_stop.
+    pub fn run_elapsed_s(&self) -> Option<f64> {
+        let recs = self.records.lock().unwrap();
+        let start = recs.iter().find(|r| r.tag == tags::RUN_START)?.timestamp;
+        let stop = recs.iter().rev().find(|r| r.tag == tags::RUN_STOP)?.timestamp;
+        Some(stop - start)
+    }
+
+    /// Render the full log.
+    pub fn render_all(&self) -> String {
+        let recs = self.records.lock().unwrap();
+        let mut out = String::new();
+        for r in recs.iter() {
+            out.push_str(&r.render(&self.origin));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn record_grammar_matches_appendix() {
+        let r = Record {
+            timestamp: 1553154085.032542229,
+            tag: "run_start".into(),
+            value: None,
+        };
+        let line = r.render("mlperf_log_utils.py:69");
+        assert!(line.starts_with(":::MLPv0.5.0 resnet 1553154085.03254"));
+        assert!(line.ends_with("(mlperf_log_utils.py:69) run_start"));
+    }
+
+    #[test]
+    fn value_records() {
+        let r = Record {
+            timestamp: 1.5,
+            tag: "eval_accuracy".into(),
+            value: Some(r#"{"epoch": 89, "value": 0.75082}"#.into()),
+        };
+        assert!(r.render("x").contains(r#"eval_accuracy: {"epoch": 89, "value": 0.75082}"#));
+    }
+
+    #[test]
+    fn logger_collects_and_times() {
+        let l = MlperfLogger::new("test", false);
+        l.log(tags::RUN_START);
+        l.log_json(
+            tags::EVAL_ACCURACY,
+            &Json::obj(vec![("epoch", Json::Num(1.0)), ("value", Json::Num(0.1))]),
+        );
+        l.log(tags::RUN_STOP);
+        let recs = l.records();
+        assert_eq!(recs.len(), 3);
+        let dt = l.run_elapsed_s().unwrap();
+        assert!(dt >= 0.0 && dt < 1.0);
+        let all = l.render_all();
+        assert_eq!(all.lines().count(), 3);
+        assert!(all.contains("eval_accuracy: {\"epoch\":1,\"value\":0.1}"));
+    }
+
+    #[test]
+    fn elapsed_none_without_stop() {
+        let l = MlperfLogger::new("test", false);
+        l.log(tags::RUN_START);
+        assert!(l.run_elapsed_s().is_none());
+    }
+}

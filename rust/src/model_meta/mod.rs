@@ -1,0 +1,314 @@
+//! Layer inventory parsed from `artifacts/manifest.json`.
+//!
+//! The manifest is the binding contract between the three layers: L2/L1
+//! pack every parameter tensor into one flat fp32 buffer in `layers` order
+//! (zero-padded to the Pallas tile), and everything on the rust side —
+//! bucketing, allreduce, LARS bookkeeping, checkpointing — navigates that
+//! buffer through this table.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Parameter kind, mirroring python/compile/resnet.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    BnGamma,
+    BnBeta,
+    FcW,
+    FcB,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "bn_gamma" => LayerKind::BnGamma,
+            "bn_beta" => LayerKind::BnBeta,
+            "fc_w" => LayerKind::FcW,
+            "fc_b" => LayerKind::FcB,
+            other => anyhow::bail!("unknown layer kind '{other}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::BnGamma => "bn_gamma",
+            LayerKind::BnBeta => "bn_beta",
+            LayerKind::FcW => "fc_w",
+            LayerKind::FcB => "fc_b",
+        }
+    }
+}
+
+/// One parameter tensor in the packed buffer.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+    /// LARS trust ratio forced to 1.0 for this layer (BN params, fc bias).
+    pub lars_skip: bool,
+}
+
+/// One BN running-statistics tensor in the packed state buffer.
+#[derive(Debug, Clone)]
+pub struct StateEntry {
+    pub name: String,
+    pub size: usize,
+    pub offset: usize,
+}
+
+/// Optimizer/loss hyper-parameters baked into the artifacts at AOT time.
+#[derive(Debug, Clone)]
+pub struct BakedHyperparams {
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub lars_eta: f64,
+    pub lars_eps: f64,
+    pub label_smoothing: f64,
+    pub batch_size: usize,
+}
+
+/// Model geometry.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub train: BakedHyperparams,
+    /// Unpadded parameter count P.
+    pub param_count: usize,
+    /// Padded parameter count Np (multiple of the Pallas tile).
+    pub padded_param_count: usize,
+    /// BN state vector length S.
+    pub state_count: usize,
+    pub pallas_tile: usize,
+    pub layers: Vec<Layer>,
+    pub states: Vec<StateEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let m = j.req("model")?;
+        let model = ModelInfo {
+            name: m.req_str("name")?.to_string(),
+            num_classes: m.req_usize("num_classes")?,
+            image_size: m.req_usize("image_size")?,
+            channels: m.req_usize("channels")?,
+        };
+
+        let t = j.req("train")?;
+        let train = BakedHyperparams {
+            momentum: t.req_f64("momentum")?,
+            weight_decay: t.req_f64("weight_decay")?,
+            lars_eta: t.req_f64("lars_eta")?,
+            lars_eps: t.req_f64("lars_eps")?,
+            label_smoothing: t.req_f64("label_smoothing")?,
+            batch_size: t.req_usize("batch_size")?,
+        };
+
+        let mut layers = Vec::new();
+        for l in j.req_arr("layers")? {
+            layers.push(Layer {
+                name: l.req_str("name")?.to_string(),
+                kind: LayerKind::parse(l.req_str("kind")?)?,
+                shape: l
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("shape element"))
+                    .collect::<Result<_>>()?,
+                size: l.req_usize("size")?,
+                offset: l.req_usize("offset")?,
+                lars_skip: l.req_bool("lars_skip")?,
+            });
+        }
+
+        let mut states = Vec::new();
+        for s in j.req_arr("states")? {
+            states.push(StateEntry {
+                name: s.req_str("name")?.to_string(),
+                size: s.req_usize("size")?,
+                offset: s.req_usize("offset")?,
+            });
+        }
+
+        let man = Manifest {
+            model,
+            train,
+            param_count: j.req_usize("param_count")?,
+            padded_param_count: j.req_usize("padded_param_count")?,
+            state_count: j.req_usize("state_count")?,
+            pallas_tile: j.req_usize("pallas_tile")?,
+            layers,
+            states,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Structural invariants the rest of the system relies on.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for l in &self.layers {
+            anyhow::ensure!(
+                l.offset == off,
+                "layer '{}' offset {} != running total {off}",
+                l.name,
+                l.offset
+            );
+            anyhow::ensure!(
+                l.size == l.shape.iter().product::<usize>(),
+                "layer '{}' size/shape mismatch",
+                l.name
+            );
+            off += l.size;
+        }
+        anyhow::ensure!(off == self.param_count, "param_count mismatch: {off}");
+        anyhow::ensure!(
+            self.padded_param_count >= self.param_count
+                && self.padded_param_count % self.pallas_tile == 0,
+            "padded_param_count {} invalid for tile {}",
+            self.padded_param_count,
+            self.pallas_tile
+        );
+        let soff: usize = self.states.iter().map(|s| s.size).sum();
+        anyhow::ensure!(soff == self.state_count, "state_count mismatch: {soff}");
+        anyhow::ensure!(!self.layers.is_empty(), "empty layer table");
+        Ok(())
+    }
+
+    /// Bytes of one full gradient exchange in fp32 / fp16.
+    pub fn grad_bytes_f32(&self) -> usize {
+        self.param_count * 4
+    }
+
+    pub fn grad_bytes_f16(&self) -> usize {
+        self.param_count * 2
+    }
+
+    /// Per-image forward+backward FLOP estimate (2 * 3 * MACs: fwd + two
+    /// backward passes), used by simnet to translate measured step times
+    /// into the paper's throughput axes. Conv MACs dominate; BN/elementwise
+    /// ignored.
+    pub fn flops_per_image(&self) -> f64 {
+        // For conv layers we lack spatial dims here; approximate with the
+        // standard CIFAR-ResNet accounting: each conv applies its kernel at
+        // every output pixel. We reconstruct pixel counts from the layer
+        // sequence: image_size, halved at each stage boundary.
+        let mut pixels = (self.model.image_size * self.model.image_size) as f64;
+        let mut last_stage = 0usize;
+        let mut flops = 0.0;
+        for l in &self.layers {
+            match l.kind {
+                LayerKind::Conv => {
+                    // stage index from the name: s{si}b... ; stem stays full-res
+                    let stage = l
+                        .name
+                        .strip_prefix('s')
+                        .and_then(|r| r.split('b').next())
+                        .and_then(|d| d.parse::<usize>().ok());
+                    if let Some(si) = stage {
+                        if si > last_stage {
+                            pixels /= 4.0; // stride-2 at each new stage
+                            last_stage = si;
+                        }
+                    }
+                    flops += 2.0 * l.size as f64 * pixels;
+                }
+                LayerKind::FcW => flops += 2.0 * l.size as f64,
+                _ => {}
+            }
+        }
+        3.0 * flops // fwd + bwd(data) + bwd(weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> String {
+        r#"{
+          "format_version": 1,
+          "model": {"name": "m", "num_classes": 10, "image_size": 32, "channels": 3,
+                     "stage_blocks": [1], "width": 8, "bottleneck": false,
+                     "bn_momentum": 0.9, "bn_epsilon": 1e-5},
+          "train": {"momentum": 0.9, "weight_decay": 0.0005, "lars_eta": 0.001,
+                    "lars_eps": 1e-9, "label_smoothing": 0.1, "batch_size": 32},
+          "param_count": 30,
+          "padded_param_count": 1024,
+          "state_count": 4,
+          "num_layers": 2,
+          "pallas_tile": 1024,
+          "layers": [
+            {"name": "stem.conv", "kind": "conv", "shape": [3,3,3,1], "size": 27, "offset": 0, "lars_skip": false},
+            {"name": "fc.b", "kind": "fc_b", "shape": [3], "size": 3, "offset": 27, "lars_skip": true}
+          ],
+          "states": [
+            {"name": "stem.bn.mean", "shape": [2], "size": 2, "offset": 0},
+            {"name": "stem.bn.var", "shape": [2], "size": 2, "offset": 2}
+          ],
+          "artifacts": {}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(&tiny_manifest()).unwrap();
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].kind, LayerKind::Conv);
+        assert!(m.layers[1].lars_skip);
+        assert_eq!(m.param_count, 30);
+        assert_eq!(m.model.num_classes, 10);
+        assert_eq!(m.train.batch_size, 32);
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = tiny_manifest().replace("\"offset\": 27", "\"offset\": 28");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_param_count() {
+        let bad = tiny_manifest().replace("\"param_count\": 30", "\"param_count\": 31");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn grad_bytes() {
+        let m = Manifest::parse(&tiny_manifest()).unwrap();
+        assert_eq!(m.grad_bytes_f32(), 120);
+        assert_eq!(m.grad_bytes_f16(), 60);
+    }
+
+    #[test]
+    fn kind_round_trip() {
+        for k in ["conv", "bn_gamma", "bn_beta", "fc_w", "fc_b"] {
+            assert_eq!(LayerKind::parse(k).unwrap().as_str(), k);
+        }
+        assert!(LayerKind::parse("dense").is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! Backward/allreduce overlap scheduling (paper Section III-C-2).
+//!
+//! "We start to operate allreduce operation for a part of layers without
+//! waiting all layers to be finished... we statically group layers into
+//! several groups beforehand. Allreduce operation is scheduled as soon as
+//! each process finishes backward processing of all layers in a group."
+//!
+//! The static groups ARE the buckets of `bucket::BucketPlan` (built in
+//! backward-readiness order). This module adds the time dimension:
+//!
+//! * `BackwardProfile` — when each layer's gradient materializes during
+//!   the backward pass, apportioned by per-layer FLOP weight (XLA runs the
+//!   whole backward as one fused executable, so per-layer times are not
+//!   individually observable; FLOP-weighting is the standard estimate).
+//! * `simulate` — an event-driven timeline: a single serial communication
+//!   channel (as on a real NIC), each bucket's allreduce eligible at the
+//!   moment its last layer finishes backward. Produces step time, exposed
+//!   (un-hidden) communication, and the hidden fraction — the numbers the
+//!   A5 ablation and Fig 2's overlap factor come from.
+
+use crate::bucket::BucketPlan;
+use crate::model_meta::{LayerKind, Manifest};
+
+/// Per-layer backward completion times, normalized to a total duration.
+#[derive(Debug, Clone)]
+pub struct BackwardProfile {
+    /// ready[i] = seconds (from backward start) at which layer i's gradient
+    /// is complete, for layer index i in MANIFEST (forward) order.
+    pub ready_s: Vec<f64>,
+    pub total_backward_s: f64,
+}
+
+impl BackwardProfile {
+    /// Apportion `total_backward_s` across layers by FLOP weight, walking
+    /// the model back-to-front (fc first, stem last) the way backprop does.
+    pub fn from_flops(manifest: &Manifest, total_backward_s: f64) -> BackwardProfile {
+        let weights = layer_flop_weights(manifest);
+        let total_w: f64 = weights.iter().sum();
+        let nl = manifest.layers.len();
+        let mut ready = vec![0.0; nl];
+        let mut t = 0.0;
+        for li in (0..nl).rev() {
+            t += total_backward_s * weights[li] / total_w;
+            ready[li] = t;
+        }
+        BackwardProfile { ready_s: ready, total_backward_s }
+    }
+
+    /// Uniform apportionment (sensitivity baseline for the ablation).
+    pub fn uniform(manifest: &Manifest, total_backward_s: f64) -> BackwardProfile {
+        let nl = manifest.layers.len();
+        let per = total_backward_s / nl as f64;
+        let mut ready = vec![0.0; nl];
+        let mut t = 0.0;
+        for li in (0..nl).rev() {
+            t += per;
+            ready[li] = t;
+        }
+        BackwardProfile { ready_s: ready, total_backward_s }
+    }
+}
+
+/// Relative backward cost per layer: convs dominate and scale with
+/// kernel_size x pixels; BN/bias are cheap but not free (they still incur
+/// kernel launches — weight 1 element each won't register anyway).
+pub fn layer_flop_weights(manifest: &Manifest) -> Vec<f64> {
+    let mut pixels = (manifest.model.image_size * manifest.model.image_size) as f64;
+    let mut last_stage = 0usize;
+    manifest
+        .layers
+        .iter()
+        .map(|l| match l.kind {
+            LayerKind::Conv => {
+                let stage = l
+                    .name
+                    .strip_prefix('s')
+                    .and_then(|r| r.split('b').next())
+                    .and_then(|d| d.parse::<usize>().ok());
+                if let Some(si) = stage {
+                    if si > last_stage {
+                        pixels /= 4.0;
+                        last_stage = si;
+                    }
+                }
+                l.size as f64 * pixels
+            }
+            LayerKind::FcW => l.size as f64,
+            _ => l.size as f64, // BN params: tiny elementwise work
+        })
+        .collect()
+}
+
+/// Timeline of one step under a given overlap policy.
+#[derive(Debug, Clone)]
+pub struct OverlapReport {
+    /// Per-bucket (start, end) of its allreduce on the comm channel.
+    pub comm_spans: Vec<(f64, f64)>,
+    /// Time from backward start until the last gradient is allreduced.
+    pub step_span_s: f64,
+    /// Communication time NOT hidden behind backward.
+    pub exposed_comm_s: f64,
+    /// Total communication time.
+    pub total_comm_s: f64,
+    /// 1 - exposed/total.
+    pub hidden_frac: f64,
+}
+
+/// Event-driven overlap simulation over a single serial comm channel.
+///
+/// `comm_time(bytes)` prices one bucket's allreduce (plug in
+/// `simnet::allreduce_time` or a measured value). With `overlap = false`
+/// every allreduce waits for the full backward pass — the paper's baseline.
+pub fn simulate(
+    plan: &BucketPlan,
+    profile: &BackwardProfile,
+    overlap: bool,
+    comm_time: impl Fn(usize) -> f64,
+) -> OverlapReport {
+    let mut spans = Vec::with_capacity(plan.buckets.len());
+    let mut chan_free = 0.0f64;
+    let mut total_comm = 0.0;
+
+    for (i, b) in plan.buckets.iter().enumerate() {
+        // Bucket ready when its LAST layer (in backward order) completes;
+        // layers are stored in forward order, so that is the minimum index
+        // = the earliest layer in forward order = the last to finish.
+        let ready = if overlap {
+            b.layer_indices
+                .iter()
+                .map(|&li| profile.ready_s[li])
+                .fold(0.0f64, f64::max)
+        } else {
+            profile.total_backward_s
+        };
+        let (lo, hi) = plan.span_with_padding(i);
+        let bytes = (hi - lo) * plan.bytes_per_elem;
+        let t = comm_time(bytes);
+        let start = ready.max(chan_free);
+        let end = start + t;
+        spans.push((start, end));
+        chan_free = end;
+        total_comm += t;
+    }
+
+    let step_span = spans
+        .iter()
+        .map(|&(_, e)| e)
+        .fold(profile.total_backward_s, f64::max);
+    let exposed = (step_span - profile.total_backward_s).max(0.0);
+    OverlapReport {
+        comm_spans: spans,
+        step_span_s: step_span,
+        exposed_comm_s: exposed,
+        total_comm_s: total_comm,
+        hidden_frac: if total_comm > 0.0 { 1.0 - exposed / total_comm } else { 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bucket::BucketPlan;
+    use crate::model_meta::Manifest;
+
+    fn manifest() -> Manifest {
+        let sizes = [432usize, 64, 64, 9216, 128, 128, 16384, 256, 256, 2560, 10];
+        let kinds = [
+            "conv", "bn_gamma", "bn_beta", "conv", "bn_gamma", "bn_beta", "conv", "bn_gamma",
+            "bn_beta", "fc_w", "fc_b",
+        ];
+        let mut layers = String::new();
+        let mut off = 0;
+        for (i, (&s, &k)) in sizes.iter().zip(&kinds).enumerate() {
+            if i > 0 {
+                layers.push(',');
+            }
+            layers.push_str(&format!(
+                r#"{{"name":"l{i}","kind":"{k}","shape":[{s}],"size":{s},"offset":{off},"lars_skip":false}}"#
+            ));
+            off += s;
+        }
+        let p: usize = sizes.iter().sum();
+        let np = ((p + 1023) / 1024) * 1024;
+        Manifest::parse(&format!(
+            r#"{{"format_version":1,
+            "model":{{"name":"t","num_classes":10,"image_size":32,"channels":3}},
+            "train":{{"momentum":0.9,"weight_decay":0.0005,"lars_eta":0.001,"lars_eps":1e-9,"label_smoothing":0.1,"batch_size":32}},
+            "param_count":{p},"padded_param_count":{np},"state_count":0,"num_layers":11,
+            "pallas_tile":1024,"layers":[{layers}],"states":[],"artifacts":{{}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn ready_times_monotone_backward() {
+        let m = manifest();
+        let prof = BackwardProfile::from_flops(&m, 1.0);
+        // Later layers (higher index) finish EARLIER in backward.
+        for i in 0..m.layers.len() - 1 {
+            assert!(
+                prof.ready_s[i] >= prof.ready_s[i + 1],
+                "layer {i} ready before layer {}",
+                i + 1
+            );
+        }
+        assert!((prof.ready_s[0] - 1.0).abs() < 1e-9, "first layer finishes last");
+    }
+
+    #[test]
+    fn overlap_hides_communication() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 8192, 4);
+        let prof = BackwardProfile::from_flops(&m, 1.0);
+        let comm = |bytes: usize| bytes as f64 * 1e-8 + 1e-4;
+        let with = simulate(&plan, &prof, true, comm);
+        let without = simulate(&plan, &prof, false, comm);
+        assert!(with.step_span_s <= without.step_span_s);
+        assert!(with.hidden_frac > without.hidden_frac);
+        // Without overlap nothing is hidden.
+        assert!(without.exposed_comm_s >= without.total_comm_s - 1e-12);
+    }
+
+    #[test]
+    fn serial_channel_never_overlaps_itself() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        let prof = BackwardProfile::from_flops(&m, 1.0);
+        let rep = simulate(&plan, &prof, true, |b| b as f64 * 1e-7);
+        for w in rep.comm_spans.windows(2) {
+            assert!(w[1].0 >= w[0].1 - 1e-12, "comm spans overlap");
+        }
+    }
+
+    #[test]
+    fn comm_starts_only_after_ready() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        let prof = BackwardProfile::from_flops(&m, 2.0);
+        let rep = simulate(&plan, &prof, true, |_| 1e-3);
+        for (i, b) in plan.buckets.iter().enumerate() {
+            let ready =
+                b.layer_indices.iter().map(|&li| prof.ready_s[li]).fold(0.0f64, f64::max);
+            assert!(rep.comm_spans[i].0 >= ready - 1e-12);
+        }
+    }
+
+    #[test]
+    fn tiny_comm_mostly_hidden() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 8192, 4);
+        let prof = BackwardProfile::from_flops(&m, 10.0);
+        let rep = simulate(&plan, &prof, true, |_| 1e-6);
+        // Only the LAST bucket's allreduce is structurally unhideable (its
+        // gradients finish exactly when backward ends).
+        assert!(rep.exposed_comm_s <= 1e-6 + 1e-12);
+        assert!((rep.step_span_s - prof.total_backward_s) <= 1e-6 + 1e-12);
+    }
+
+    #[test]
+    fn huge_comm_mostly_exposed() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 8192, 4);
+        let prof = BackwardProfile::from_flops(&m, 0.001);
+        let rep = simulate(&plan, &prof, true, |_| 1.0);
+        assert!(rep.hidden_frac < 0.1);
+    }
+
+    #[test]
+    fn flop_weights_favor_convs() {
+        let m = manifest();
+        let w = layer_flop_weights(&m);
+        // conv l0 (432 elems x 1024 px) >> bn l1 (64 elems)
+        assert!(w[0] > w[1] * 100.0);
+    }
+}

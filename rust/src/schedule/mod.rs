@@ -1,0 +1,215 @@
+//! Learning-rate schedules (paper Section III-A-1).
+//!
+//! The paper stabilizes large-batch SGD with (a) gradual warm-up (Goyal et
+//! al.) and (b) a decay pattern "optimized based on many trials" — they
+//! tried step, polynomial and linear decay. All of those are implemented
+//! here behind one `LrSchedule` type, plus cosine (the modern default) and
+//! the batch-size ramp of Smith et al. for the related-work baseline.
+//!
+//! Schedules are pure functions of the step index so the coordinator, the
+//! benches and the tests all see exactly the same curve.
+
+/// Decay applied after warm-up.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decay {
+    /// Constant at peak_lr.
+    None,
+    /// Multiply by `factor` at each boundary (fraction of post-warmup run).
+    Step { boundaries: Vec<f64>, factor: f64 },
+    /// (1 - t)^power, the paper's polynomial pattern (power=2 in their
+    /// MLPerf submissions).
+    Polynomial { power: f64, end_lr: f64 },
+    /// Straight line from peak to end_lr.
+    Linear { end_lr: f64 },
+    /// Half-cosine from peak to end_lr.
+    Cosine { end_lr: f64 },
+}
+
+/// Warm-up + decay schedule over a fixed number of steps.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    /// LR at step 0 (warm-up starts here, usually small but nonzero).
+    pub base_lr: f64,
+    /// LR reached at the end of warm-up.
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub decay: Decay,
+}
+
+impl LrSchedule {
+    /// The paper's recipe scaled to an arbitrary run: linear warm-up over
+    /// `warmup_frac` of the run to `peak_lr`, then polynomial(2) decay.
+    pub fn paper_default(peak_lr: f64, total_steps: usize) -> LrSchedule {
+        let warmup_steps = (total_steps as f64 * 0.15).ceil() as usize;
+        LrSchedule {
+            base_lr: peak_lr * 0.05,
+            peak_lr,
+            warmup_steps,
+            total_steps,
+            decay: Decay::Polynomial { power: 2.0, end_lr: 1e-4 * peak_lr },
+        }
+    }
+
+    /// No warm-up: ablation A2.
+    pub fn no_warmup(mut self) -> LrSchedule {
+        self.warmup_steps = 0;
+        self
+    }
+
+    /// Linear-scaling rule (Goyal et al.): peak_lr = base * global_batch / 256.
+    pub fn linear_scaled(base_lr_per_256: f64, global_batch: usize, total_steps: usize) -> LrSchedule {
+        LrSchedule::paper_default(base_lr_per_256 * global_batch as f64 / 256.0, total_steps)
+    }
+
+    /// LR at a step. Total ordering: warmup ramp, then decay over the rest.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            // Linear ramp, continuous at the boundary:
+            // lr(warmup_steps) == peak_lr exactly.
+            let t = step as f64 / self.warmup_steps as f64;
+            return self.base_lr + (self.peak_lr - self.base_lr) * t;
+        }
+        let decay_steps = self.total_steps.saturating_sub(self.warmup_steps).max(1);
+        let t = ((step - self.warmup_steps) as f64 / decay_steps as f64).clamp(0.0, 1.0);
+        match &self.decay {
+            Decay::None => self.peak_lr,
+            Decay::Step { boundaries, factor } => {
+                let crossed = boundaries.iter().filter(|&&b| t >= b).count();
+                self.peak_lr * factor.powi(crossed as i32)
+            }
+            Decay::Polynomial { power, end_lr } => {
+                end_lr + (self.peak_lr - end_lr) * (1.0 - t).powf(*power)
+            }
+            Decay::Linear { end_lr } => self.peak_lr + (end_lr - self.peak_lr) * t,
+            Decay::Cosine { end_lr } => {
+                end_lr + (self.peak_lr - end_lr) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// Sample the whole curve (for dumps / plots / tests).
+    pub fn curve(&self) -> Vec<f64> {
+        (0..self.total_steps).map(|s| self.lr_at(s)).collect()
+    }
+}
+
+/// Batch-size ramp (Smith et al., "Don't Decay the Learning Rate, Increase
+/// the Batch Size") — used by the related-work baseline in Table I rows.
+#[derive(Debug, Clone)]
+pub struct BatchRamp {
+    pub initial_batch: usize,
+    pub final_batch: usize,
+    /// Fraction of the run at which the ramp jumps (single doubling point
+    /// per entry).
+    pub boundaries: Vec<f64>,
+}
+
+impl BatchRamp {
+    pub fn batch_at(&self, step: usize, total_steps: usize) -> usize {
+        let t = step as f64 / total_steps.max(1) as f64;
+        let crossed = self.boundaries.iter().filter(|&&b| t >= b).count();
+        let mut b = self.initial_batch;
+        for _ in 0..crossed {
+            b = (b * 2).min(self.final_batch);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(decay: Decay) -> LrSchedule {
+        LrSchedule {
+            base_lr: 0.1,
+            peak_lr: 1.0,
+            warmup_steps: 10,
+            total_steps: 110,
+            decay,
+        }
+    }
+
+    #[test]
+    fn warmup_is_monotone_and_continuous() {
+        let s = sched(Decay::None);
+        for i in 1..=10 {
+            assert!(s.lr_at(i) >= s.lr_at(i - 1), "warmup not monotone at {i}");
+        }
+        // continuity at the boundary
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-12);
+        assert!((s.lr_at(9) - s.lr_at(10)).abs() < 0.2);
+    }
+
+    #[test]
+    fn warmup_starts_at_base() {
+        let s = sched(Decay::None);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poly_decays_to_end() {
+        let s = sched(Decay::Polynomial { power: 2.0, end_lr: 0.001 });
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-9);
+        assert!((s.lr_at(110) - 0.001).abs() < 1e-9);
+        // strictly decreasing after warmup
+        for i in 11..110 {
+            assert!(s.lr_at(i) < s.lr_at(i - 1));
+        }
+    }
+
+    #[test]
+    fn linear_endpoint() {
+        let s = sched(Decay::Linear { end_lr: 0.0 });
+        assert!(s.lr_at(110).abs() < 1e-12);
+        let mid = s.lr_at(60);
+        assert!((mid - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_midpoint() {
+        let s = sched(Decay::Cosine { end_lr: 0.0 });
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-9);
+        assert!(s.lr_at(110).abs() < 1e-9);
+        assert!((s.lr_at(60) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_decay_counts_boundaries() {
+        let s = sched(Decay::Step { boundaries: vec![0.5, 0.75], factor: 0.1 });
+        assert!((s.lr_at(11) - 1.0).abs() < 1e-9);
+        assert!((s.lr_at(60) - 0.1).abs() < 1e-9); // t=0.5
+        assert!((s.lr_at(90) - 0.01).abs() < 1e-9); // t=0.8
+    }
+
+    #[test]
+    fn no_warmup_ablation() {
+        let s = sched(Decay::None).no_warmup();
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_scaling_rule() {
+        let s = LrSchedule::linear_scaled(0.1, 81920, 1440);
+        assert!((s.peak_lr - 0.1 * 81920.0 / 256.0).abs() < 1e-9);
+        assert_eq!(s.total_steps, 1440);
+    }
+
+    #[test]
+    fn paper_default_shape() {
+        let s = LrSchedule::paper_default(8.0, 1000);
+        assert_eq!(s.warmup_steps, 150);
+        assert!(s.lr_at(0) < s.lr_at(150));
+        assert!(s.lr_at(999) < 0.1);
+        assert_eq!(s.curve().len(), 1000);
+    }
+
+    #[test]
+    fn batch_ramp() {
+        let r = BatchRamp { initial_batch: 8192, final_batch: 16384, boundaries: vec![0.3] };
+        assert_eq!(r.batch_at(0, 100), 8192);
+        assert_eq!(r.batch_at(30, 100), 16384);
+        assert_eq!(r.batch_at(99, 100), 16384);
+    }
+}

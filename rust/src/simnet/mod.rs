@@ -1,0 +1,377 @@
+//! α–β network cost model of the ABCI cluster (paper Section IV, Fig 1-2).
+//!
+//! We cannot run 2,048 V100s, so wall-clock at scale is *modelled*: each
+//! link class is an (α = latency, β = bandwidth) pair, collectives cost
+//! their textbook round/volume formulas, and computation is calibrated
+//! either from the paper's own single-GPU throughput or from step times
+//! measured on our real (CPU) engine. The coordination logic itself —
+//! bucketing, grouping, overlap — runs for real in `collective`/`overlap`;
+//! only the clock at 2,048 GPUs comes from this model. This is exactly the
+//! split Fig 2 needs: its y-axis is throughput, its x-axis is GPU count,
+//! and the paper's own "ideal" line is the same linear extrapolation.
+
+use crate::collective::Algorithm;
+
+/// One link class: time to move n bytes = latency + n / bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkParams {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64, // bytes per second
+}
+
+impl LinkParams {
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / self.bandwidth_bps
+    }
+}
+
+/// Cluster shape + calibration constants.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub gpus_per_node: usize,
+    /// NVLink-class intra-node link (per direction, per GPU pair).
+    pub intra: LinkParams,
+    /// InfiniBand-class inter-node link (per node; ABCI has 2 HCAs).
+    pub inter: LinkParams,
+    /// Single-GPU training throughput in images/sec (calibration anchor).
+    pub images_per_sec_per_gpu: f64,
+    /// Fixed per-step host/framework overhead (kernel launches, queueing).
+    pub per_step_overhead_s: f64,
+    /// Straggler/jitter inflation per doubling of the worker count: at p
+    /// workers, the synchronous step waits for the SLOWEST of p samples,
+    /// modelled as step *= 1 + frac * log2(p). Calibrated so ABCI lands at
+    /// the paper's measured 77% efficiency at 2,048 GPUs.
+    pub straggler_frac_per_doubling: f64,
+}
+
+impl ClusterSpec {
+    /// ABCI: 4x V100 SXM2 per node, NVLink mesh, 2x IB EDR HCAs per node
+    /// (Fig 1). V100 fp16 ResNet-50 throughput anchored to the paper's own
+    /// measurement: 1.73M img/s over 2048 GPUs at 77% efficiency
+    /// => single-GPU ~ 1097 img/s.
+    pub fn abci() -> ClusterSpec {
+        ClusterSpec {
+            gpus_per_node: 4,
+            intra: LinkParams { latency_s: 3e-6, bandwidth_bps: 130e9 },
+            // 2 HCAs x 100 Gbit/s = 25 GB/s per node aggregate.
+            inter: LinkParams { latency_s: 8e-6, bandwidth_bps: 25e9 },
+            images_per_sec_per_gpu: 1097.0,
+            per_step_overhead_s: 1.2e-3,
+            straggler_frac_per_doubling: 0.02,
+        }
+    }
+
+    /// A single-HCA commodity cluster for ablation comparisons.
+    pub fn commodity() -> ClusterSpec {
+        ClusterSpec {
+            inter: LinkParams { latency_s: 15e-6, bandwidth_bps: 12.5e9 },
+            ..Self::abci()
+        }
+    }
+}
+
+/// Predicted allreduce time for `bytes` of wire data across `p` ranks.
+///
+/// Textbook critical-path formulas; `Hierarchical` prices intra-node hops
+/// on the NVLink link and the leader ring on IB.
+pub fn allreduce_time(spec: &ClusterSpec, algo: Algorithm, p: usize, bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    match algo {
+        Algorithm::Naive => {
+            // Root receives (p-1)·n then sends (p-1)·n, serialized.
+            2.0 * (pf - 1.0) * spec.inter.transfer_time(bytes)
+        }
+        Algorithm::Ring => {
+            // 2(p-1) rounds of n/p bytes.
+            2.0 * (pf - 1.0) * spec.inter.transfer_time(bytes / pf)
+        }
+        Algorithm::HalvingDoubling => {
+            // 2·log2(p) rounds; volume sums to 2n(p-1)/p.
+            let rounds = 2.0 * (pf.log2().ceil());
+            rounds * spec.inter.latency_s + 2.0 * bytes * (pf - 1.0) / pf / spec.inter.bandwidth_bps
+        }
+        Algorithm::Hierarchical { ranks_per_node } => {
+            let rpn = ranks_per_node.max(1).min(p) as f64;
+            let nodes = (pf / rpn).ceil();
+            // Intra: tree reduce + broadcast over NVLink, log2(rpn) rounds each.
+            let intra_rounds = 2.0 * rpn.log2().ceil().max(1.0);
+            let t_intra = intra_rounds * spec.intra.transfer_time(bytes);
+            // Inter: halving-doubling over node leaders (a flat ring across
+            // 512 nodes would pay ~1000 α's; latency-log is what NCCL-class
+            // libraries pick at this scale and message size).
+            let t_inter = if nodes > 1.0 {
+                let rounds = 2.0 * nodes.log2().ceil();
+                rounds * spec.inter.latency_s
+                    + 2.0 * bytes * (nodes - 1.0) / nodes / spec.inter.bandwidth_bps
+            } else {
+                0.0
+            };
+            t_intra + t_inter
+        }
+    }
+}
+
+/// Predicted time for a bucketed exchange: buckets pipeline over the wire,
+/// so total = sum of per-bucket times (latency amortization is exactly what
+/// the paper's Section III-C-1 is about — fewer, bigger buckets pay fewer α).
+pub fn bucketed_allreduce_time(
+    spec: &ClusterSpec,
+    algo: Algorithm,
+    p: usize,
+    bucket_bytes: &[f64],
+) -> f64 {
+    bucket_bytes.iter().map(|&b| allreduce_time(spec, algo, p, b)).sum()
+}
+
+/// One training step under the paper's overlap scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct StepModel {
+    /// Pure computation time for one step (fwd+bwd) at the per-GPU batch.
+    pub compute_s: f64,
+    /// Fraction of compute during which communication can hide (the
+    /// backward pass; paper Section III-C-2). 0.0 = no overlap.
+    pub overlap_window_frac: f64,
+    /// Total gradient allreduce time (bucketed).
+    pub comm_s: f64,
+    /// Fixed overhead per step.
+    pub overhead_s: f64,
+}
+
+impl StepModel {
+    /// Visible step time: comm hides inside the backward window; the
+    /// remainder is exposed.
+    pub fn step_time(&self) -> f64 {
+        let window = self.compute_s * self.overlap_window_frac;
+        let exposed = (self.comm_s - window).max(0.0);
+        self.compute_s + exposed + self.overhead_s
+    }
+
+    pub fn efficiency(&self) -> f64 {
+        self.compute_s / self.step_time()
+    }
+}
+
+/// Fig 2 generator: throughput vs #GPUs with everything else fixed.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub gpus: usize,
+    pub ideal_images_per_sec: f64,
+    pub model_images_per_sec: f64,
+    pub efficiency: f64,
+    pub step_time_s: f64,
+}
+
+/// Model the paper's scaling experiment: per-GPU batch fixed (81920/2048 =
+/// 40), gradient bytes fixed, hierarchical allreduce, overlap on.
+pub fn scaling_curve(
+    spec: &ClusterSpec,
+    gpu_counts: &[usize],
+    per_gpu_batch: usize,
+    grad_bytes: f64,
+    bucket_count: usize,
+    overlap_frac: f64,
+) -> Vec<ScalingPoint> {
+    gpu_counts
+        .iter()
+        .map(|&g| {
+            let compute_s = per_gpu_batch as f64 / spec.images_per_sec_per_gpu;
+            let bucket = grad_bytes / bucket_count.max(1) as f64;
+            let buckets = vec![bucket; bucket_count.max(1)];
+            let comm_s = bucketed_allreduce_time(
+                spec,
+                Algorithm::Hierarchical { ranks_per_node: spec.gpus_per_node },
+                g,
+                &buckets,
+            );
+            let m = StepModel {
+                compute_s,
+                overlap_window_frac: overlap_frac,
+                comm_s,
+                overhead_s: spec.per_step_overhead_s,
+            };
+            let step = m.step_time() * straggler_factor(spec, g);
+            let imgs = g as f64 * per_gpu_batch as f64 / step;
+            let ideal = g as f64 * spec.images_per_sec_per_gpu;
+            ScalingPoint {
+                gpus: g,
+                ideal_images_per_sec: ideal,
+                model_images_per_sec: imgs,
+                efficiency: imgs / ideal,
+                step_time_s: step,
+            }
+        })
+        .collect()
+}
+
+/// Synchronous-SGD straggler inflation at `p` workers.
+pub fn straggler_factor(spec: &ClusterSpec, p: usize) -> f64 {
+    if p <= 1 {
+        1.0
+    } else {
+        1.0 + spec.straggler_frac_per_doubling * (p as f64).log2()
+    }
+}
+
+/// Time-to-train estimator for Table I rows: epochs over a dataset at a
+/// modelled step time.
+pub fn time_to_train_s(
+    spec: &ClusterSpec,
+    gpus: usize,
+    global_batch: usize,
+    grad_bytes: f64,
+    dataset_images: usize,
+    epochs: f64,
+    overlap_frac: f64,
+    init_s: f64,
+) -> f64 {
+    let per_gpu_batch = (global_batch as f64 / gpus as f64).max(1.0);
+    let compute_s = per_gpu_batch / spec.images_per_sec_per_gpu;
+    let comm_s = bucketed_allreduce_time(
+        spec,
+        Algorithm::Hierarchical { ranks_per_node: spec.gpus_per_node },
+        gpus,
+        &vec![grad_bytes / 8.0; 8],
+    );
+    let m = StepModel {
+        compute_s,
+        overlap_window_frac: overlap_frac,
+        comm_s,
+        overhead_s: spec.per_step_overhead_s,
+    };
+    let steps_per_epoch = (dataset_images as f64 / global_batch as f64).ceil();
+    init_s + epochs * steps_per_epoch * m.step_time() * straggler_factor(spec, gpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_affine() {
+        let l = LinkParams { latency_s: 1e-6, bandwidth_bps: 1e9 };
+        assert!((l.transfer_time(0.0) - 1e-6).abs() < 1e-12);
+        assert!((l.transfer_time(1e9) - 1.000001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_beats_naive() {
+        let s = ClusterSpec::abci();
+        let t_ring = allreduce_time(&s, Algorithm::Ring, 64, 100e6);
+        let t_naive = allreduce_time(&s, Algorithm::Naive, 64, 100e6);
+        assert!(t_ring < t_naive / 10.0);
+    }
+
+    #[test]
+    fn hd_beats_ring_for_small_messages() {
+        let s = ClusterSpec::abci();
+        // latency-dominated regime
+        let t_ring = allreduce_time(&s, Algorithm::Ring, 1024, 1e3);
+        let t_hd = allreduce_time(&s, Algorithm::HalvingDoubling, 1024, 1e3);
+        assert!(t_hd < t_ring);
+    }
+
+    #[test]
+    fn ring_competitive_for_large_messages() {
+        let s = ClusterSpec::abci();
+        let t_ring = allreduce_time(&s, Algorithm::Ring, 16, 100e6);
+        let t_hd = allreduce_time(&s, Algorithm::HalvingDoubling, 16, 100e6);
+        // same asymptotic volume; within 2x of each other
+        assert!(t_ring < t_hd * 2.0 && t_hd < t_ring * 2.0);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_at_scale() {
+        let s = ClusterSpec::abci();
+        let p = 2048;
+        let bytes = 25.5e6 * 2.0; // ResNet-50 fp16 grads
+        let t_flat = allreduce_time(&s, Algorithm::Ring, p, bytes);
+        let t_hier =
+            allreduce_time(&s, Algorithm::Hierarchical { ranks_per_node: 4 }, p, bytes);
+        assert!(t_hier < t_flat, "hier {t_hier} flat {t_flat}");
+    }
+
+    #[test]
+    fn allreduce_time_monotone_in_p_and_bytes() {
+        let s = ClusterSpec::abci();
+        let mut prev = 0.0;
+        for p in [2, 8, 32, 128, 512, 2048] {
+            let t = allreduce_time(&s, Algorithm::Ring, p, 50e6);
+            assert!(t > prev);
+            prev = t;
+        }
+        let a = allreduce_time(&s, Algorithm::Ring, 64, 1e6);
+        let b = allreduce_time(&s, Algorithm::Ring, 64, 2e6);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn bucketing_amortizes_latency() {
+        let s = ClusterSpec::abci();
+        let p = 512;
+        let total = 51e6;
+        // 160 per-layer messages vs 8 multi-MB buckets (paper III-C-1).
+        let per_layer = vec![total / 160.0; 160];
+        let bucketed = vec![total / 8.0; 8];
+        let t_pl = bucketed_allreduce_time(&s, Algorithm::Ring, p, &per_layer);
+        let t_b = bucketed_allreduce_time(&s, Algorithm::Ring, p, &bucketed);
+        assert!(t_b < t_pl, "bucketed {t_b} vs per-layer {t_pl}");
+    }
+
+    #[test]
+    fn overlap_hides_comm() {
+        let base = StepModel {
+            compute_s: 40e-3,
+            overlap_window_frac: 0.0,
+            comm_s: 20e-3,
+            overhead_s: 0.0,
+        };
+        let overlapped = StepModel { overlap_window_frac: 0.66, ..base };
+        assert!(overlapped.step_time() < base.step_time());
+        // fully hidden case
+        let hidden = StepModel { comm_s: 10e-3, overlap_window_frac: 0.66, ..base };
+        assert!((hidden.step_time() - 40e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig2_shape_77pct_at_2048() {
+        // The headline calibration: with ABCI params, fp16 ResNet-50
+        // gradients (51 MB fp32 / 25.5 MB fp16), per-GPU batch 40, the
+        // model should land near the paper's 77% efficiency at 2,048 GPUs
+        // and ~1.7M img/s.
+        let s = ClusterSpec::abci();
+        let pts = scaling_curve(&s, &[2048], 40, 51e6, 8, 0.66);
+        let p = &pts[0];
+        assert!(
+            p.efficiency > 0.70 && p.efficiency < 0.85,
+            "efficiency {} out of the paper's band",
+            p.efficiency
+        );
+        assert!(
+            p.model_images_per_sec > 1.5e6 && p.model_images_per_sec < 2.1e6,
+            "throughput {}",
+            p.model_images_per_sec
+        );
+    }
+
+    #[test]
+    fn efficiency_decreases_with_scale() {
+        let s = ClusterSpec::abci();
+        let pts = scaling_curve(&s, &[16, 64, 256, 1024, 2048], 40, 51e6, 8, 0.66);
+        for w in pts.windows(2) {
+            assert!(w[1].efficiency <= w[0].efficiency + 1e-9);
+        }
+        assert!(pts[0].efficiency > 0.85);
+    }
+
+    #[test]
+    fn time_to_train_in_paper_ballpark() {
+        // 90 epochs in the MLPerf sense would be ~84; the paper trains ~85
+        // epochs with eval offsets and reports 74.7 s total. Accept a band.
+        let s = ClusterSpec::abci();
+        let t = time_to_train_s(&s, 2048, 81920, 51e6, 1_280_000, 85.0, 0.66, 14.0);
+        assert!(t > 45.0 && t < 120.0, "time {t}");
+    }
+}

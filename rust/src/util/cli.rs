@@ -1,0 +1,144 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, and `--help` text assembled from registered options.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    /// Unknown-option check: call with the full set of recognized names
+    /// after reading everything, so typos fail loudly instead of silently
+    /// training with defaults.
+    pub fn reject_unknown(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--steps", "100", "--lr=0.5", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["eval"]);
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+        assert_eq!(a.get_or("model", "resnet_micro"), "resnet_micro");
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "artifact1", "artifact2"]);
+        assert_eq!(a.positional, vec!["artifact1", "artifact2"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--steps", "ten"]);
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_catches_typo() {
+        let a = parse(&["train", "--stpes", "100"]);
+        assert!(a.reject_unknown(&["steps"]).is_err());
+        let b = parse(&["train", "--steps", "100"]);
+        assert!(b.reject_unknown(&["steps"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["t", "--a", "--b", "val"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+}

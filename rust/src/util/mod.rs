@@ -1,0 +1,9 @@
+//! In-tree substrates: the offline build reaches only the `xla` and
+//! `anyhow` crates, so JSON, CLI parsing, RNG and the fp16 wire codec are
+//! implemented here (each with its own test suite) instead of pulled in as
+//! dependencies.
+
+pub mod cli;
+pub mod fp16;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,173 @@
+//! Cross-language golden verification: the COMPILED artifacts executed
+//! through the rust PJRT runtime must reproduce the values the jit-side
+//! python computed at AOT time (artifacts/golden.json).
+//!
+//! This closes the loop over the entire interchange chain — jax trace →
+//! stablehlo → HLO text → old-XLA parse → PJRT compile → execute — and is
+//! the guard against silent text-round-trip corruption (the
+//! xla_extension 0.5.1 constant-array mangling bug was exactly the class
+//! of failure this catches).
+
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+use yasgd::runtime::{Engine, GradVariant, UpdateRule};
+use yasgd::util::json::Json;
+
+fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Arc::new(Engine::load(&dir).expect("run `make artifacts` first"))
+        })
+        .clone()
+}
+
+fn golden() -> &'static Json {
+    static GOLDEN: OnceLock<Json> = OnceLock::new();
+    GOLDEN.get_or_init(|| {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.json");
+        Json::parse(&std::fs::read_to_string(path).expect("golden.json")).unwrap()
+    })
+}
+
+/// The exact pattern build_golden used: ((i % period)/period - 0.5) * scale,
+/// computed in f64 then cast — bit-identical to the numpy construction.
+fn pattern(n: usize, period: usize, scale: f64) -> Vec<f32> {
+    (0..n)
+        .map(|i| ((((i % period) as f64) / period as f64 - 0.5) * scale) as f32)
+        .collect()
+}
+
+struct Inputs {
+    params: Vec<f32>,
+    state: Vec<f32>,
+    images: Vec<f32>,
+    labels: Vec<i32>,
+    momentum: Vec<f32>,
+    grads: Vec<f32>,
+    lr: f32,
+}
+
+fn inputs() -> Inputs {
+    let e = engine();
+    let m = e.manifest();
+    let np_len = m.padded_param_count;
+    let b = m.train.batch_size;
+    let img_elems = b * m.model.image_size * m.model.image_size * m.model.channels;
+    let mut params = pattern(np_len, 101, 0.2);
+    for v in params[m.param_count..].iter_mut() {
+        *v = 0.0; // padding must be zero
+    }
+    Inputs {
+        params,
+        state: yasgd::init::init_bn_state(m),
+        images: pattern(img_elems, 97, 1.0),
+        labels: (0..b).map(|i| (i % m.model.num_classes) as i32).collect(),
+        momentum: pattern(np_len, 89, 0.02),
+        grads: pattern(np_len, 83, 0.05),
+        lr: 0.25,
+    }
+}
+
+fn check_summary(name: &str, got: &[f32], want: &Json) {
+    let l2: f64 = got.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+    let sum: f64 = got.iter().map(|&v| v as f64).sum();
+    let want_l2 = want.req_f64("l2").unwrap();
+    let want_sum = want.req_f64("sum").unwrap();
+    // Old-XLA fuses/orders reductions differently from current jax-cpu, so
+    // allow ~1e-3 relative on aggregates (pure fp accumulation noise — the
+    // corruption failure mode this test exists for is orders of magnitude
+    // larger).
+    assert!(
+        (l2 - want_l2).abs() <= 1e-3 * want_l2.max(1e-3),
+        "{name}: l2 {l2} vs golden {want_l2}"
+    );
+    // `sum` suffers catastrophic cancellation (signed gradients), so its
+    // tolerance is scaled by the buffer's l2 magnitude, not by the sum.
+    assert!(
+        (sum - want_sum).abs() <= 5e-3 * want_l2.max(1e-3),
+        "{name}: sum {sum} vs golden {want_sum}"
+    );
+    let first8 = want.req_arr("first8").unwrap();
+    for (i, w) in first8.iter().enumerate() {
+        let w = w.as_f64().unwrap();
+        let g = got[i] as f64;
+        // per-element: conv-reduction noise is absolute at the gradient's
+        // rms scale, not relative to the (possibly tiny) element
+        assert!(
+            (g - w).abs() <= (1e-3 * w.abs()).max(1e-5),
+            "{name}[{i}]: {g} vs golden {w}"
+        );
+    }
+}
+
+#[test]
+fn golden_grad_step() {
+    let e = engine();
+    let inp = inputs();
+    let g = golden().req("grad_step").unwrap();
+    let out = e
+        .grad_step(GradVariant::Smoothed, &inp.params, &inp.state, &inp.images, &inp.labels)
+        .unwrap();
+    let want_loss = g.req_f64("loss").unwrap();
+    assert!(
+        (out.loss as f64 - want_loss).abs() < 1e-5,
+        "loss {} vs golden {want_loss}",
+        out.loss
+    );
+    assert_eq!(out.correct as f64, g.req_f64("correct").unwrap());
+    check_summary("grads", &out.grads, g.req("grads").unwrap());
+    check_summary("new_state", &out.new_state, g.req("new_state").unwrap());
+}
+
+#[test]
+fn golden_eval_step() {
+    let e = engine();
+    let inp = inputs();
+    let g = golden().req("eval_step").unwrap();
+    let out = e.eval(&inp.params, &inp.state, &inp.images, &inp.labels).unwrap();
+    assert!((out.loss as f64 - g.req_f64("loss").unwrap()).abs() < 1e-5);
+    assert_eq!(out.correct as f64, g.req_f64("correct").unwrap());
+}
+
+#[test]
+fn golden_update_lars() {
+    let e = engine();
+    let inp = inputs();
+    let g = golden().req("update_lars").unwrap();
+    let (w2, m2) =
+        e.update(UpdateRule::Lars, &inp.params, &inp.momentum, &inp.grads, inp.lr).unwrap();
+    check_summary("lars new_params", &w2, g.req("new_params").unwrap());
+    check_summary("lars new_momentum", &m2, g.req("new_momentum").unwrap());
+}
+
+#[test]
+fn golden_update_sgd() {
+    let e = engine();
+    let inp = inputs();
+    let g = golden().req("update_sgd").unwrap();
+    let (w2, m2) =
+        e.update(UpdateRule::Sgd, &inp.params, &inp.momentum, &inp.grads, inp.lr).unwrap();
+    check_summary("sgd new_params", &w2, g.req("new_params").unwrap());
+    check_summary("sgd new_momentum", &m2, g.req("new_momentum").unwrap());
+}
+
+#[test]
+fn golden_perlayer_matches_lars() {
+    // The per-layer-norms ablation artifact must be numerically equivalent
+    // to the batched-kernel artifact (same math, different schedule).
+    let e = engine();
+    let inp = inputs();
+    let (w_a, m_a) =
+        e.update(UpdateRule::Lars, &inp.params, &inp.momentum, &inp.grads, inp.lr).unwrap();
+    let (w_b, m_b) = e
+        .update(UpdateRule::LarsPerLayer, &inp.params, &inp.momentum, &inp.grads, inp.lr)
+        .unwrap();
+    for (i, (a, b)) in w_a.iter().zip(&w_b).enumerate() {
+        assert!((a - b).abs() <= 1e-5 * a.abs().max(1e-5), "params[{i}]: {a} vs {b}");
+    }
+    for (i, (a, b)) in m_a.iter().zip(&m_b).enumerate() {
+        assert!((a - b).abs() <= 1e-5 * a.abs().max(1e-5), "momentum[{i}]: {a} vs {b}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Property-based tests over L3 invariants.
+//!
+//! proptest is unavailable offline, so this file carries a small seeded
+//! random-case harness: each property runs over N generated cases; on
+//! failure the case parameters are printed (the seed makes every failure
+//! reproducible).
+
+use yasgd::bucket::BucketPlan;
+use yasgd::collective::{allreduce_mean, Algorithm, Precision};
+use yasgd::model_meta::Manifest;
+use yasgd::schedule::{Decay, LrSchedule};
+use yasgd::util::fp16;
+use yasgd::util::json::Json;
+use yasgd::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Build a random-but-valid manifest with `layers` random layer sizes.
+fn random_manifest(rng: &mut Rng, max_layers: usize) -> Manifest {
+    let nl = 1 + rng.below(max_layers as u64) as usize;
+    let kinds = ["conv", "bn_gamma", "bn_beta", "fc_w", "fc_b"];
+    let mut layers = String::new();
+    let mut off = 0usize;
+    for i in 0..nl {
+        if i > 0 {
+            layers.push(',');
+        }
+        let size = 1 + rng.below(5000) as usize;
+        let kind = kinds[rng.below(kinds.len() as u64) as usize];
+        let skip = kind != "conv" && kind != "fc_w";
+        layers.push_str(&format!(
+            r#"{{"name":"l{i}","kind":"{kind}","shape":[{size}],"size":{size},"offset":{off},"lars_skip":{skip}}}"#
+        ));
+        off += size;
+    }
+    let np = ((off + 1023) / 1024) * 1024;
+    Manifest::parse(&format!(
+        r#"{{"format_version":1,
+        "model":{{"name":"r","num_classes":10,"image_size":32,"channels":3}},
+        "train":{{"momentum":0.9,"weight_decay":0.0005,"lars_eta":0.001,"lars_eps":1e-9,"label_smoothing":0.1,"batch_size":32}},
+        "param_count":{off},"padded_param_count":{np},"state_count":0,"num_layers":{nl},
+        "pallas_tile":1024,"layers":[{layers}],"states":[],"artifacts":{{}}}}"#
+    ))
+    .expect("random manifest must parse")
+}
+
+#[test]
+fn prop_bucket_plan_is_partition_for_any_target() {
+    let mut rng = Rng::new(0xB0CCE7);
+    for case in 0..CASES {
+        let m = random_manifest(&mut rng, 60);
+        let target = 1 + rng.below(1 << 22) as usize;
+        let plan = BucketPlan::build(&m, target, 4);
+        plan.validate(&m)
+            .unwrap_or_else(|e| panic!("case {case}: target={target}: {e}"));
+        // span_with_padding covers exactly [0, Np) across buckets
+        let mut covered = 0usize;
+        for i in 0..plan.buckets.len() {
+            let (lo, hi) = plan.span_with_padding(i);
+            covered += hi - lo;
+        }
+        assert_eq!(covered, m.padded_param_count, "case {case}");
+    }
+}
+
+#[test]
+fn prop_allreduce_equals_sequential_mean() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let p = 2 + rng.below(15) as usize;
+        let n = rng.below(3000) as usize;
+        let algo = match rng.below(4) {
+            0 => Algorithm::Naive,
+            1 => Algorithm::Ring,
+            2 => Algorithm::HalvingDoubling,
+            _ => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
+        };
+        let bufs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect())
+            .collect();
+        let want: Vec<f32> = (0..n)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum::<f64>() as f32 / p as f32)
+            .collect();
+        let mut got = bufs.clone();
+        allreduce_mean(&mut got, algo, Precision::F32);
+        for (r, b) in got.iter().enumerate() {
+            for (i, (&g, &w)) in b.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "case {case} algo {} rank {r} idx {i}: {g} vs {w}",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_allreduce_all_ranks_bit_identical() {
+    let mut rng = Rng::new(0xB17);
+    for case in 0..CASES {
+        let p = 2 + rng.below(11) as usize;
+        let n = 1 + rng.below(2000) as usize;
+        let algo = match rng.below(4) {
+            0 => Algorithm::Naive,
+            1 => Algorithm::Ring,
+            2 => Algorithm::HalvingDoubling,
+            _ => Algorithm::Hierarchical { ranks_per_node: 4 },
+        };
+        let precision = if rng.below(2) == 0 { Precision::F32 } else { Precision::F16 };
+        let mut bufs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect())
+            .collect();
+        allreduce_mean(&mut bufs, algo, precision);
+        for (r, b) in bufs[1..].iter().enumerate() {
+            assert_eq!(
+                &bufs[0],
+                b,
+                "case {case}: algo {} precision {precision:?} rank {} differs",
+                algo.name(),
+                r + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_warmup_monotone_and_continuous() {
+    let mut rng = Rng::new(0x5CED);
+    for case in 0..CASES {
+        let total = 10 + rng.below(5000) as usize;
+        let warmup = rng.below(total as u64 / 2) as usize;
+        let peak = 0.01 + rng.next_f64() * 10.0;
+        let decay = match rng.below(5) {
+            0 => Decay::None,
+            1 => Decay::Step { boundaries: vec![0.3, 0.6, 0.9], factor: 0.2 },
+            2 => Decay::Polynomial { power: 1.0 + rng.next_f64() * 3.0, end_lr: peak * 1e-4 },
+            3 => Decay::Linear { end_lr: peak * 1e-3 },
+            _ => Decay::Cosine { end_lr: 0.0 },
+        };
+        let s = LrSchedule {
+            base_lr: peak * 0.05,
+            peak_lr: peak,
+            warmup_steps: warmup,
+            total_steps: total,
+            decay,
+        };
+        // monotone non-decreasing during warmup
+        for i in 1..warmup {
+            assert!(
+                s.lr_at(i) >= s.lr_at(i - 1) - 1e-12,
+                "case {case}: warmup dips at {i}"
+            );
+        }
+        // continuous at the warmup boundary: jump bounded by ramp slope
+        if warmup > 0 {
+            let jump = (s.lr_at(warmup) - s.lr_at(warmup - 1)).abs();
+            let slope = (peak - s.base_lr) / warmup as f64;
+            assert!(jump <= slope + 1e-9, "case {case}: discontinuity {jump}");
+        }
+        // decay never exceeds peak, never goes negative
+        for i in warmup..total {
+            let lr = s.lr_at(i);
+            assert!(lr <= peak + 1e-9 && lr >= -1e-12, "case {case} step {i}: {lr}");
+        }
+    }
+}
+
+#[test]
+fn prop_fp16_round_trip_error_bounded() {
+    let mut rng = Rng::new(0xF16);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(4000) as usize;
+        let scale = 10f32.powi(rng.below(8) as i32 - 4); // 1e-4 .. 1e3
+        let mut buf: Vec<f32> =
+            (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * scale).collect();
+        let orig = buf.clone();
+        let max_err = fp16::quantize_inplace(&mut buf);
+        for (q, o) in buf.iter().zip(&orig) {
+            // relative error <= 2^-11 for normals, absolute <= 2^-24 near 0
+            let bound = (o.abs() * 2.0f32.powi(-11)).max(2.0f32.powi(-24));
+            assert!((q - o).abs() <= bound + 1e-12, "{o} -> {q}");
+        }
+        // quantize is idempotent
+        let mut again = buf.clone();
+        let second_err = fp16::quantize_inplace(&mut again);
+        assert_eq!(buf, again);
+        assert_eq!(second_err, 0.0);
+        let _ = max_err;
+    }
+}
+
+#[test]
+fn prop_json_round_trip_arbitrary_values() {
+    let mut rng = Rng::new(0x7501u64);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 1e3),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let v = gen(&mut rng, 0);
+        let s = v.to_string();
+        let v2 = Json::parse(&s).unwrap_or_else(|e| panic!("case {case}: {e}\n{s}"));
+        assert_eq!(v, v2, "case {case}");
+        let sp = v.to_string_pretty();
+        assert_eq!(Json::parse(&sp).unwrap(), v, "case {case} pretty");
+    }
+}
+
+#[test]
+fn prop_bucket_backward_order_is_total() {
+    // Every plan's buckets cover the packed buffer back-to-front with no
+    // overlaps; readiness index equals reverse span order.
+    let mut rng = Rng::new(0x0DE5u64);
+    for _ in 0..CASES {
+        let m = random_manifest(&mut rng, 40);
+        let target = 1 + rng.below(1 << 20) as usize;
+        let plan = BucketPlan::build(&m, target, 2);
+        for w in plan.buckets.windows(2) {
+            assert_eq!(w[0].lo, w[1].hi, "buckets not contiguous in reverse order");
+        }
+        if let (Some(first), Some(last)) = (plan.buckets.first(), plan.buckets.last()) {
+            assert_eq!(first.hi, m.param_count);
+            assert_eq!(last.lo, 0);
+        }
+    }
+}
