@@ -1,0 +1,32 @@
+# Tier-1 verify and CI entry points. All targets run offline with the
+# default feature set (stub engine); `make artifacts` needs the python/
+# toolchain and is only required for the pjrt feature.
+
+CARGO ?= cargo
+
+.PHONY: verify build test fmt clippy bench artifacts clean
+
+verify: build test
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+bench:
+	$(CARGO) bench --bench comm
+
+# AOT-lower the JAX/Pallas graphs to HLO text + manifest (PJRT path only).
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf bench_results

@@ -1,5 +1,7 @@
-//! Communication benches: A4 (bucket size sweep), A5 (overlap on/off),
-//! A8 (allreduce algorithm comparison), fp16 vs fp32 wire.
+//! Communication benches: A4 (bucket size sweep), A5 (overlap on/off +
+//! concurrent channels), A8 (allreduce algorithm comparison), fp16 vs
+//! fp32 wire, the fused fp16 codec kernels, and the headline seed-path vs
+//! CommEngine comparison.
 //!
 //! Real numeric collectives over in-process ranks (measured) PLUS the α–β
 //! model's predictions at ABCI scale for the same sweeps, so the measured
@@ -8,23 +10,44 @@
 
 use std::time::Duration;
 use yasgd::benchkit::{bench, dump_results, Table};
-use yasgd::collective::{allreduce_mean, Algorithm, Precision};
-use yasgd::simnet::{allreduce_time, bucketed_allreduce_time, ClusterSpec};
+use yasgd::collective::{allreduce_mean, Algorithm, CommEngine, Precision};
+use yasgd::simnet::{
+    allreduce_time, bucketed_allreduce_time, concurrent_bucketed_allreduce_time, ClusterSpec,
+};
+use yasgd::util::{fp16, rng::Rng};
 use yasgd::util::json::Json;
-use yasgd::util::rng::Rng;
 
+/// Rank buffers seeded LARGE (≈2^60) so repeated in-place allreduce-mean
+/// iterations (each divides by p) stay far from the subnormal range where
+/// fp32 arithmetic throughput craters and would skew the comparison.
+/// (fp32 sections only — 2^60 overflows the fp16 wire.)
 fn make_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    make_bufs_scaled(p, n, seed, (2.0f32).powi(60))
+}
+
+/// Unit-scale variant for the fp16-wire sections (values must stay inside
+/// the f16 range; tiny tails quantize to exact zeros, which stay fast).
+fn make_bufs_unit(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    make_bufs_scaled(p, n, seed, 1.0)
+}
+
+fn make_bufs_scaled(p: usize, n: usize, seed: u64, scale: f32) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
-    (0..p).map(|_| (0..n).map(|_| rng.next_f32() - 0.5).collect()).collect()
+    (0..p).map(|_| (0..n).map(|_| (rng.next_f32() - 0.5) * scale).collect()).collect()
 }
 
 fn main() {
     let mut results = Vec::new();
     let spec = ClusterSpec::abci();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    println!("(engine lanes use {threads} threads — available parallelism)\n");
 
-    // ---- A8: algorithm comparison, measured ------------------------------
-    println!("== A8: allreduce algorithms (measured, 8 ranks) ==");
-    let mut t = Table::new(&["algorithm", "64 KiB", "1 MiB", "8 MiB"]);
+    // ---- headline: seed path vs CommEngine, 8 ranks / 8 MiB ring ---------
+    // The acceptance bar for the zero-copy threaded engine: >= 2x measured
+    // throughput over the seed (reference) path on this exact shape.
+    println!("== seed path vs CommEngine (8 ranks, 8 MiB per rank, fp32) ==");
+    let n8 = 2 * 1024 * 1024usize; // f32 elems = 8 MiB
+    let mut t = Table::new(&["algorithm", "seed path", "engine", "engine GB/s", "speedup"]);
     let algos = [
         Algorithm::Naive,
         Algorithm::Ring,
@@ -32,15 +55,107 @@ fn main() {
         Algorithm::Hierarchical { ranks_per_node: 4 },
     ];
     for algo in algos {
-        let mut cells = vec![algo.name().to_string()];
-        for n in [16 * 1024, 256 * 1024, 2 * 1024 * 1024usize] {
-            let mut bufs = make_bufs(8, n, 42);
-            let r = bench(&format!("{}-{}", algo.name(), n), 2, Duration::from_millis(300), || {
+        let mut bufs = make_bufs(8, n8, 42);
+        let seed_r = bench(
+            &format!("seed-{}-8MiB", algo.name()),
+            2,
+            Duration::from_millis(400),
+            || {
                 allreduce_mean(&mut bufs, algo, Precision::F32);
+            },
+        );
+        let mut engine = CommEngine::new(algo, Precision::F32, threads);
+        let mut bufs = make_bufs(8, n8, 42);
+        let mut wire_bytes = 0usize;
+        let eng_r = bench(
+            &format!("engine-{}-8MiB", algo.name()),
+            2,
+            Duration::from_millis(400),
+            || {
+                let stats = engine.allreduce_mean_vecs(&mut bufs);
+                wire_bytes = stats.total_bytes;
+            },
+        );
+        t.row(&[
+            algo.name().to_string(),
+            format!("{:.2} ms", seed_r.mean_ms()),
+            format!("{:.2} ms", eng_r.mean_ms()),
+            format!("{:.2}", eng_r.gbps(wire_bytes)),
+            format!("{:.2}x", eng_r.speedup_over(&seed_r)),
+        ]);
+        results.push(seed_r.to_json());
+        results.push(eng_r.to_json());
+        results.push(Json::obj(vec![
+            ("name", Json::Str(format!("speedup-{}-8MiB", algo.name()))),
+            ("speedup", Json::Num(eng_r.speedup_over(&seed_r))),
+            ("engine_gbps", Json::Num(eng_r.gbps(wire_bytes))),
+        ]));
+    }
+    println!("{}", t.render());
+    println!("(engine wins come from the precomputed chunk plan, the folded fp32");
+    println!(" mean-scale, and round-parallel transfers on scoped threads)\n");
+
+    // ---- fused fp16 codec kernels ----------------------------------------
+    println!("== fp16 wire codec: two-pass encode/decode vs fused kernels ==");
+    let cn = 4 * 1024 * 1024usize; // elems
+    let src: Vec<f32> = {
+        let mut rng = Rng::new(9);
+        (0..cn).map(|_| rng.next_f32() - 0.5).collect()
+    };
+    let mut dst = vec![0.0f32; cn];
+    let mut scratch: Vec<u16> = Vec::new();
+    let mut t = Table::new(&["kernel", "mean ms", "GB/s (bytes touched)"]);
+    let enc_r = bench("codec-encode", 2, Duration::from_millis(300), || {
+        fp16::encode_slice(&src, &mut scratch);
+    });
+    let dec_r = bench("codec-decode", 2, Duration::from_millis(300), || {
+        fp16::decode_slice(&scratch, &mut dst);
+    });
+    let two_pass = bench("codec-two-pass-copy", 2, Duration::from_millis(300), || {
+        fp16::encode_slice(&src, &mut scratch);
+        fp16::decode_slice(&scratch, &mut dst);
+    });
+    let fused_copy = bench("codec-fused-encode-copy", 2, Duration::from_millis(300), || {
+        fp16::encode_copy(&src, &mut dst);
+    });
+    let fused_add = bench("codec-fused-encode-add", 2, Duration::from_millis(300), || {
+        fp16::encode_add(&src, &mut dst);
+    });
+    // Per-kernel bytes actually touched per element: encode reads f32 +
+    // writes u16 (6B), decode the reverse (6B), two-pass does both (12B),
+    // fused copy reads+writes f32 (8B), fused add read-modify-writes the
+    // f32 accumulator on top of the source read (12B).
+    for (r, bpe) in [(&enc_r, 6), (&dec_r, 6), (&two_pass, 12), (&fused_copy, 8), (&fused_add, 12)]
+    {
+        t.row(&[r.name.clone(), format!("{:.2}", r.mean_ms()), format!("{:.2}", r.gbps(cn * bpe))]);
+        results.push(r.to_json());
+    }
+    println!("{}", t.render());
+    println!(
+        "(fused copy vs two-pass: {:.2}x — one traversal, no scratch; these rows are",
+        fused_copy.speedup_over(&two_pass)
+    );
+    println!(" the regression guard for the wire's per-element cost)\n");
+
+    // ---- A8: algorithm comparison, measured (engine path) ----------------
+    println!("== A8: allreduce algorithms (engine, 8 ranks) ==");
+    let mut t = Table::new(&["algorithm", "64 KiB", "1 MiB", "8 MiB", "8 MiB GB/s"]);
+    for algo in algos {
+        let mut cells = vec![algo.name().to_string()];
+        let mut last_gbps = 0.0;
+        for n in [16 * 1024, 256 * 1024, 2 * 1024 * 1024usize] {
+            let mut engine = CommEngine::new(algo, Precision::F32, threads);
+            let mut bufs = make_bufs(8, n, 42);
+            let mut wire_bytes = 0usize;
+            let r = bench(&format!("{}-{}", algo.name(), n), 2, Duration::from_millis(300), || {
+                let stats = engine.allreduce_mean_vecs(&mut bufs);
+                wire_bytes = stats.total_bytes;
             });
             cells.push(format!("{:.2} ms", r.mean_ms()));
+            last_gbps = r.gbps(wire_bytes);
             results.push(r.to_json());
         }
+        cells.push(format!("{last_gbps:.2}"));
         t.row(&cells);
     }
     println!("{}", t.render());
@@ -59,23 +174,32 @@ fn main() {
     println!("{}", t.render());
 
     // ---- A4: bucket size sweep -------------------------------------------
-    println!("== A4: bucket size sweep (measured 8 ranks, 8 MiB total, ring) ==");
-    let total = 2 * 1024 * 1024usize; // f32 elems = 8 MiB
+    println!("== A4: bucket size sweep (engine, 8 ranks, 8 MiB total, ring) ==");
+    let total = 2 * 1024 * 1024usize;
     let mut t = Table::new(&["bucket size", "buckets", "measured", "model @512 gpus"]);
     for bucket_elems in [16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024, total] {
         let nb = total / bucket_elems;
+        let mut engine = CommEngine::new(Algorithm::Ring, Precision::F32, threads);
         let mut bufs = make_bufs(8, total, 7);
         let r = bench(&format!("bucket-{bucket_elems}"), 1, Duration::from_millis(300), || {
-            for b in 0..nb {
-                let lo = b * bucket_elems;
-                let hi = lo + bucket_elems;
-                // bucket-by-bucket allreduce over span views
-                let mut views: Vec<Vec<f32>> =
-                    bufs.iter().map(|x| x[lo..hi].to_vec()).collect();
-                allreduce_mean(&mut views, Algorithm::Ring, Precision::F32);
-                for (x, v) in bufs.iter_mut().zip(views) {
-                    x[lo..hi].copy_from_slice(&v);
+            // Bucket-by-bucket allreduce over split-borrowed spans — the
+            // coordinator's zero-copy pattern.
+            let mut views: Vec<Vec<&mut [f32]>> = Vec::with_capacity(nb);
+            let mut rests: Vec<&mut [f32]> =
+                bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            for _ in 0..nb {
+                let mut bucket: Vec<&mut [f32]> = Vec::with_capacity(rests.len());
+                let mut next: Vec<&mut [f32]> = Vec::with_capacity(rests.len());
+                for r in rests.into_iter() {
+                    let (head, tail) = r.split_at_mut(bucket_elems);
+                    bucket.push(head);
+                    next.push(tail);
                 }
+                views.push(bucket);
+                rests = next;
+            }
+            for bucket in views.iter_mut() {
+                engine.allreduce_mean(bucket);
             }
         });
         let model = bucketed_allreduce_time(
@@ -98,36 +222,43 @@ fn main() {
 
     // ---- fp16 vs fp32 wire -------------------------------------------------
     println!("== mixed precision wire (paper IV): fp16 halves bytes ==");
-    let mut t = Table::new(&["precision", "measured (8 ranks, 4 MiB)", "wire bytes"]);
+    let mut t = Table::new(&["precision", "seed path", "engine", "wire bytes"]);
     for precision in [Precision::F32, Precision::F16] {
-        let mut bufs = make_bufs(8, 1024 * 1024, 9);
+        let mut bufs = make_bufs_unit(8, 1024 * 1024, 9);
         let mut bytes = 0usize;
-        let r = bench(&format!("wire-{precision:?}"), 1, Duration::from_millis(300), || {
-            let mut b2: Vec<Vec<f32>> = bufs.clone();
-            let stats = allreduce_mean(&mut b2, Algorithm::Ring, precision);
+        let seed_r = bench(&format!("wire-seed-{precision:?}"), 1, Duration::from_millis(300), || {
+            let stats = allreduce_mean(&mut bufs, Algorithm::Ring, precision);
             bytes = stats.total_bytes;
+        });
+        let mut engine = CommEngine::new(Algorithm::Ring, precision, threads);
+        let mut bufs = make_bufs_unit(8, 1024 * 1024, 9);
+        let eng_r = bench(&format!("wire-engine-{precision:?}"), 1, Duration::from_millis(300), || {
+            engine.allreduce_mean_vecs(&mut bufs);
         });
         t.row(&[
             format!("{precision:?}"),
-            format!("{:.2} ms", r.mean_ms()),
+            format!("{:.2} ms", seed_r.mean_ms()),
+            format!("{:.2} ms", eng_r.mean_ms()),
             format!("{:.1} MiB", bytes as f64 / (1 << 20) as f64),
         ]);
-        results.push(r.to_json());
+        results.push(seed_r.to_json());
+        results.push(eng_r.to_json());
     }
     println!("{}", t.render());
 
-    // ---- A5: overlap on/off (event-driven sim over the real bucket plan) --
+    // ---- A5: overlap on/off + concurrent channels ------------------------
     println!("== A5: backward/allreduce overlap (simulated timeline, ABCI scale) ==");
-    let mut t = Table::new(&["overlap", "step span", "exposed comm", "hidden frac"]);
+    let mut t = Table::new(&["overlap", "channels", "step span", "exposed comm", "hidden frac"]);
     // ABCI-scale profile: 24 ms backward window; bucket bytes scaled up to
     // ResNet-50 size (our proxy grads x the param-count ratio ~ 51 MB).
+    // Falls back to the stub manifest when no artifacts are present.
     let man = yasgd::model_meta::Manifest::load(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts`");
+        .unwrap_or_else(|_| yasgd::runtime::stub_manifest());
     let plan = yasgd::bucket::BucketPlan::build(&man, man.grad_bytes_f16() / 8, 2);
     let profile = yasgd::overlap::BackwardProfile::from_flops(&man, 24e-3);
     let scale_to_resnet50 = 51e6 / man.grad_bytes_f16() as f64;
-    for overlap in [false, true] {
-        let rep = yasgd::overlap::simulate(&plan, &profile, overlap, |bytes| {
+    for (overlap, channels) in [(false, 1usize), (true, 1), (true, 2), (true, 4)] {
+        let rep = yasgd::overlap::simulate_channels(&plan, &profile, overlap, channels, |bytes| {
             allreduce_time(
                 &spec,
                 Algorithm::Hierarchical { ranks_per_node: 4 },
@@ -137,18 +268,34 @@ fn main() {
         });
         t.row(&[
             format!("{overlap}"),
+            format!("{channels}"),
             format!("{:.2} ms", rep.step_span_s * 1e3),
             format!("{:.2} ms", rep.exposed_comm_s * 1e3),
             format!("{:.1}%", rep.hidden_frac * 100.0),
         ]);
         results.push(Json::obj(vec![
-            ("name", Json::Str(format!("overlap-{overlap}"))),
+            ("name", Json::Str(format!("overlap-{overlap}-ch{channels}"))),
             ("step_span_s", Json::Num(rep.step_span_s)),
             ("exposed_s", Json::Num(rep.exposed_comm_s)),
             ("hidden_frac", Json::Num(rep.hidden_frac)),
         ]));
     }
     println!("{}", t.render());
+    // Pure-comm view of the same lever through the α–β model.
+    let buckets = vec![51e6 / 8.0; 8];
+    let serial = bucketed_allreduce_time(&spec, Algorithm::Hierarchical { ranks_per_node: 4 }, 2048, &buckets);
+    let two_lane = concurrent_bucketed_allreduce_time(
+        &spec,
+        Algorithm::Hierarchical { ranks_per_node: 4 },
+        2048,
+        &buckets,
+        2,
+    );
+    println!(
+        "(α–β comm only: serial buckets {:.2} ms vs 2 lanes {:.2} ms)\n",
+        serial * 1e3,
+        two_lane * 1e3
+    );
 
     let path = dump_results("comm", &Json::Arr(results)).unwrap();
     println!("wrote {}", path.display());

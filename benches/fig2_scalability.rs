@@ -19,7 +19,7 @@ fn main() {
     let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("make artifacts"));
     let b = engine.manifest().train.batch_size;
     let steps = 4;
-    println!("== measured coordinator throughput (real PJRT engine) ==");
+    println!("== measured coordinator throughput (runtime engine) ==");
     let mut t = Table::new(&["workers", "step ms", "img/s"]);
     for w in [1usize, 2, 4] {
         let cfg = RunConfig { workers: w, total_steps: steps, eval_every: 0, ..RunConfig::default() };

@@ -25,6 +25,25 @@ impl BenchResult {
         self.mean_s * 1e3
     }
 
+    /// Effective throughput for a bench whose body moves `bytes` per
+    /// iteration, in GB/s (mean-based).
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        if self.mean_s > 0.0 {
+            bytes as f64 / self.mean_s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Speedup of this result over a baseline (>1 means faster).
+    pub fn speedup_over(&self, baseline: &BenchResult) -> f64 {
+        if self.mean_s > 0.0 {
+            baseline.mean_s / self.mean_s
+        } else {
+            0.0
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::Str(self.name.clone())),
@@ -174,6 +193,16 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("name"));
         assert!(lines[2].starts_with("a  "));
+    }
+
+    #[test]
+    fn gbps_and_speedup() {
+        let mut a = bench_n("a", 0, 5, || {});
+        a.mean_s = 0.5;
+        let mut b = a.clone();
+        b.mean_s = 0.25;
+        assert!((a.gbps(1_000_000_000) - 2.0).abs() < 1e-9);
+        assert!((b.speedup_over(&a) - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,803 @@
+//! `CommEngine` — the zero-copy, threaded allreduce execution engine.
+//!
+//! The reference path in the parent module is the numerical contract;
+//! this engine is the performance path that executes the SAME per-element
+//! arithmetic from a precomputed *plan*:
+//!
+//! * **Chunk plans, built once.** For each (rank count, buffer length) the
+//!   engine compiles the algorithm into rounds of transfer ops with all
+//!   spans, byte counts and per-rank ledgers resolved ahead of time. The
+//!   plan is cached, so a steady-state allreduce performs no heap
+//!   allocation and no whole-buffer clone — ops execute directly on the
+//!   caller's rank slices.
+//! * **Fused fp16 wire.** Transfers run `fp16::encode_copy` /
+//!   `fp16::encode_add`: quantize-and-store / quantize-and-accumulate in
+//!   one cache-blocked pass, no scratch, bit-identical to the two-pass
+//!   encode/decode formulation.
+//! * **Folded mean-scale (fp32).** The trailing ÷p pass over all p·n
+//!   elements is folded to the reduced chunks *before* the gather phase:
+//!   each element is scaled exactly once by the same f32 multiply and the
+//!   gather then copies already-scaled data — bit-identical, and it turns
+//!   an O(p·n) sweep into an O(n) one. (fp16 keeps the reference order —
+//!   quantize, gather, then scale — because quantize∘scale ≠ scale∘
+//!   quantize bitwise.)
+//! * **Scoped worker threads, fixed reduction order.** Within a round all
+//!   chains touch pairwise-disjoint memory (checked by `validate_plan`),
+//!   so chains are dealt round-robin to scoped threads and a barrier
+//!   separates rounds. Accumulation order is defined entirely by the
+//!   plan — never by thread arrival — so results are bit-identical to the
+//!   reference at every thread count (grid-tested below).
+
+use super::{chunks, Algorithm, Precision, WireStats};
+use crate::util::fp16;
+use std::sync::Barrier;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpKind {
+    /// dst[lo..hi] = wire(src[lo..hi])
+    Copy,
+    /// dst[lo..hi] += wire(src[lo..hi])
+    Add,
+    /// fp16 round-trip dst[lo..hi] in place (own-data quantize)
+    Quantize,
+    /// dst[lo..hi] *= 1/p (the allreduce-mean scale)
+    Scale,
+}
+
+/// One operation on the shared rank buffers. For `Quantize`/`Scale`,
+/// `src == dst` (in-place).
+#[derive(Debug, Clone, Copy)]
+struct Op {
+    kind: OpKind,
+    src: usize,
+    dst: usize,
+    lo: usize,
+    hi: usize,
+}
+
+/// Ops that may run concurrently (one chain per thread slot, ops within a
+/// chain strictly in order — e.g. the naive root reduction is one chain).
+#[derive(Debug, Clone)]
+struct Round {
+    chains: Vec<Vec<Op>>,
+}
+
+/// A fully-resolved allreduce schedule for one (p, n) shape.
+#[derive(Debug, Clone)]
+struct Plan {
+    rounds: Vec<Round>,
+    /// Wire accounting, identical to what the reference path reports.
+    stats: WireStats,
+    /// 1/p as f32 — the exact multiplier the reference uses.
+    inv: f32,
+    /// Widest round (bounds useful thread count).
+    max_chains: usize,
+}
+
+// ---------------------------------------------------------------------
+// Plan construction
+// ---------------------------------------------------------------------
+
+struct PlanBuilder {
+    precision: Precision,
+    bpe: usize,
+    rounds: Vec<Round>,
+    stats: WireStats,
+    sent: Vec<usize>,
+    recv: Vec<usize>,
+}
+
+impl PlanBuilder {
+    fn new(precision: Precision, p: usize) -> PlanBuilder {
+        PlanBuilder {
+            precision,
+            bpe: precision.bytes_per_elem(),
+            rounds: Vec::new(),
+            stats: WireStats::default(),
+            sent: vec![0; p],
+            recv: vec![0; p],
+        }
+    }
+
+    /// Account for a transfer and return the op if it moves data.
+    /// `count_empty` mirrors the reference's message accounting: the ring
+    /// skips empty chunks entirely, while naive/HD/hierarchical send (and
+    /// count) zero-length messages.
+    fn xfer(
+        &mut self,
+        kind: OpKind,
+        src: usize,
+        dst: usize,
+        lo: usize,
+        hi: usize,
+        internode: bool,
+        count_empty: bool,
+    ) -> Option<Op> {
+        debug_assert!(matches!(kind, OpKind::Copy | OpKind::Add));
+        debug_assert_ne!(src, dst);
+        if lo < hi || count_empty {
+            let bytes = (hi - lo) * self.bpe;
+            self.stats.total_bytes += bytes;
+            self.stats.messages += 1;
+            self.sent[src] += bytes;
+            self.recv[dst] += bytes;
+            if internode {
+                self.stats.internode_bytes += bytes;
+            }
+        }
+        (lo < hi).then_some(Op { kind, src, dst, lo, hi })
+    }
+
+    /// Own-data fp16 quantize (no wire traffic; no-op plan entry on fp32).
+    fn quantize(&self, rank: usize, lo: usize, hi: usize) -> Option<Op> {
+        (self.precision == Precision::F16 && lo < hi)
+            .then_some(Op { kind: OpKind::Quantize, src: rank, dst: rank, lo, hi })
+    }
+
+    fn scale(&self, rank: usize, lo: usize, hi: usize) -> Option<Op> {
+        (lo < hi).then_some(Op { kind: OpKind::Scale, src: rank, dst: rank, lo, hi })
+    }
+
+    /// Push a round; empty chains (all ops skipped) are dropped, and a
+    /// round with no chains at all is elided.
+    fn push_round(&mut self, chains: Vec<Vec<Op>>) {
+        let chains: Vec<Vec<Op>> = chains.into_iter().filter(|c| !c.is_empty()).collect();
+        if !chains.is_empty() {
+            self.rounds.push(Round { chains });
+        }
+    }
+
+    /// One op per chain (the common fully-parallel round shape).
+    fn push_parallel(&mut self, ops: Vec<Option<Op>>) {
+        self.push_round(ops.into_iter().flatten().map(|op| vec![op]).collect());
+    }
+
+    fn finish(mut self, p: usize) -> Plan {
+        self.stats.max_bytes_per_rank = self
+            .sent
+            .iter()
+            .zip(self.recv.iter())
+            .map(|(s, r)| s + r)
+            .max()
+            .unwrap_or(0);
+        let max_chains = self.rounds.iter().map(|r| r.chains.len()).max().unwrap_or(1);
+        Plan { rounds: self.rounds, stats: self.stats, inv: 1.0 / p as f32, max_chains }
+    }
+}
+
+fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan {
+    debug_assert!(p >= 2);
+    let mut pb = PlanBuilder::new(precision, p);
+    let inv = 1.0 / p as f32;
+    // fp32 folds the mean-scale into the gather phase (bit-neutral, see
+    // module docs); fp16 must keep quantize → gather → scale order.
+    let fold = (precision == Precision::F32).then_some(inv);
+    match algo {
+        Algorithm::Naive => build_naive(&mut pb, p, n, fold),
+        Algorithm::Ring => {
+            let ids: Vec<usize> = (0..p).collect();
+            build_ring(&mut pb, &ids, n, true, fold);
+        }
+        Algorithm::HalvingDoubling => build_hd(&mut pb, p, n, fold),
+        Algorithm::Hierarchical { ranks_per_node } => {
+            build_hier(&mut pb, p, n, ranks_per_node, fold)
+        }
+    }
+    if precision == Precision::F16 {
+        // Reference epilogue: every rank scales its whole buffer by 1/p.
+        let ops = (0..p).map(|r| pb.scale(r, 0, n)).collect();
+        pb.push_parallel(ops);
+    }
+    pb.finish(p)
+}
+
+fn build_naive(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
+    // Gather-reduce at rank 0: strictly ordered, one serial chain.
+    let chain: Vec<Op> = (1..p)
+        .filter_map(|r| pb.xfer(OpKind::Add, r, 0, 0, n, true, true))
+        .collect();
+    pb.push_round(vec![chain]);
+    let q = pb.quantize(0, 0, n);
+    pb.push_parallel(vec![q]);
+    if fold.is_some() {
+        let s = pb.scale(0, 0, n);
+        pb.push_parallel(vec![s]);
+    }
+    // Broadcast: independent copies out of the root.
+    let ops = (1..p).map(|r| pb.xfer(OpKind::Copy, 0, r, 0, n, true, true)).collect();
+    pb.push_parallel(ops);
+    pb.stats.rounds += 2 * (p - 1);
+}
+
+/// Ring over the ranks listed in `ids` (global rank indices; the
+/// hierarchical phase 2 passes the node leaders). Handles the reduce-
+/// scatter, the owned-chunk quantize (fp16) or folded scale (fp32), and
+/// the all-gather.
+fn build_ring(pb: &mut PlanBuilder, ids: &[usize], n: usize, internode: bool, fold: Option<f32>) {
+    let p = ids.len();
+    debug_assert!(p >= 2);
+    let spans = chunks(n, p);
+
+    // Reduce-scatter: in round r, position i sends chunk (i - r) to i+1.
+    for r in 0..p - 1 {
+        let ops = (0..p)
+            .map(|i| {
+                let (lo, hi) = spans[(i + p - r) % p];
+                pb.xfer(OpKind::Add, ids[i], ids[(i + 1) % p], lo, hi, internode, false)
+            })
+            .collect();
+        pb.push_parallel(ops);
+    }
+    // Position i now owns fully-reduced chunk (i+1)%p.
+    if pb.precision == Precision::F16 {
+        let ops = (0..p)
+            .map(|i| {
+                let (lo, hi) = spans[(i + 1) % p];
+                pb.quantize(ids[i], lo, hi)
+            })
+            .collect();
+        pb.push_parallel(ops);
+    }
+    if fold.is_some() {
+        let ops = (0..p)
+            .map(|i| {
+                let (lo, hi) = spans[(i + 1) % p];
+                pb.scale(ids[i], lo, hi)
+            })
+            .collect();
+        pb.push_parallel(ops);
+    }
+    // All-gather: chunk (i+1-r) travels the ring.
+    for r in 0..p - 1 {
+        let ops = (0..p)
+            .map(|i| {
+                let (lo, hi) = spans[(i + 1 + p - r) % p];
+                pb.xfer(OpKind::Copy, ids[i], ids[(i + 1) % p], lo, hi, internode, false)
+            })
+            .collect();
+        pb.push_parallel(ops);
+    }
+    pb.stats.rounds += 2 * (p - 1);
+}
+
+fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
+    let pow2 = p.next_power_of_two() / if p.is_power_of_two() { 1 } else { 2 };
+    let extra = p - pow2;
+
+    // Fold the remainder into partners (disjoint pairs, one round).
+    let ops = (0..extra)
+        .map(|e| pb.xfer(OpKind::Add, pow2 + e, e, 0, n, true, true))
+        .collect();
+    pb.push_parallel(ops);
+    pb.stats.rounds += extra;
+
+    // Recursive halving among the pow2 group.
+    let mut spans = vec![(0usize, n); pow2];
+    let mut d = pow2 / 2;
+    while d >= 1 {
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(pow2);
+        for i in 0..pow2 {
+            let j = i ^ d;
+            if j < i {
+                continue;
+            }
+            let (lo_i, hi_i) = spans[i];
+            let mid = lo_i + (hi_i - lo_i) / 2;
+            ops.push(pb.xfer(OpKind::Add, i, j, mid, hi_i, true, true));
+            ops.push(pb.xfer(OpKind::Add, j, i, lo_i, mid, true, true));
+            spans[i] = (lo_i, mid);
+            spans[j] = (mid, hi_i);
+        }
+        pb.push_parallel(ops);
+        pb.stats.rounds += 1;
+        d /= 2;
+    }
+
+    if pb.precision == Precision::F16 {
+        let ops = (0..pow2).map(|i| pb.quantize(i, spans[i].0, spans[i].1)).collect();
+        pb.push_parallel(ops);
+    }
+    if fold.is_some() {
+        // The halved spans partition 0..n: each element scaled once by its
+        // owner before the gather copies it anywhere.
+        let ops = (0..pow2).map(|i| pb.scale(i, spans[i].0, spans[i].1)).collect();
+        pb.push_parallel(ops);
+    }
+
+    // Recursive doubling (all-gather).
+    let mut d = 1;
+    while d < pow2 {
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(pow2);
+        for i in 0..pow2 {
+            let j = i ^ d;
+            if j < i {
+                continue;
+            }
+            let (lo_i, hi_i) = spans[i];
+            let (lo_j, hi_j) = spans[j];
+            ops.push(pb.xfer(OpKind::Copy, j, i, lo_j, hi_j, true, true));
+            ops.push(pb.xfer(OpKind::Copy, i, j, lo_i, hi_i, true, true));
+            let merged = (lo_i.min(lo_j), hi_i.max(hi_j));
+            spans[i] = merged;
+            spans[j] = merged;
+        }
+        pb.push_parallel(ops);
+        pb.stats.rounds += 1;
+        d *= 2;
+    }
+
+    // Unfold: partners broadcast the final (already scaled, on fp32)
+    // buffer back to the folded ranks.
+    let ops = (0..extra)
+        .map(|e| pb.xfer(OpKind::Copy, e, pow2 + e, 0, n, true, true))
+        .collect();
+    pb.push_parallel(ops);
+    pb.stats.rounds += extra;
+}
+
+fn build_hier(pb: &mut PlanBuilder, p: usize, n: usize, ranks_per_node: usize, fold: Option<f32>) {
+    let rpn = ranks_per_node.max(1).min(p);
+    let nodes = (p + rpn - 1) / rpn;
+
+    // Phase 1: intra-node reduce to each leader. Member order is the
+    // reduction order, so each node is one serial chain; nodes run
+    // concurrently.
+    let chains: Vec<Vec<Op>> = (0..nodes)
+        .map(|node| {
+            let leader = node * rpn;
+            (leader + 1..((node + 1) * rpn).min(p))
+                .filter_map(|r| pb.xfer(OpKind::Add, r, leader, 0, n, false, true))
+                .collect()
+        })
+        .collect();
+    pb.push_round(chains);
+    pb.stats.rounds += rpn - 1;
+
+    // Phase 2: ring across node leaders; fp32 folds the GLOBAL 1/p scale
+    // into the leader ring's gather.
+    if nodes > 1 {
+        let leader_ids: Vec<usize> = (0..nodes).map(|nd| nd * rpn).collect();
+        build_ring(pb, &leader_ids, n, true, fold);
+    } else if fold.is_some() {
+        // Single node: the leader holds the full sum; scale it before the
+        // broadcast copies it out.
+        let s = pb.scale(0, 0, n);
+        pb.push_parallel(vec![s]);
+    }
+
+    // Phase 3: leaders quantize (fp16) then broadcast to their members.
+    if pb.precision == Precision::F16 {
+        let ops = (0..nodes).map(|node| pb.quantize(node * rpn, 0, n)).collect();
+        pb.push_parallel(ops);
+    }
+    let mut ops: Vec<Option<Op>> = Vec::new();
+    for node in 0..nodes {
+        let leader = node * rpn;
+        for r in leader + 1..((node + 1) * rpn).min(p) {
+            ops.push(pb.xfer(OpKind::Copy, leader, r, 0, n, false, true));
+        }
+    }
+    pb.push_parallel(ops);
+    pb.stats.rounds += rpn - 1;
+}
+
+// ---------------------------------------------------------------------
+// Plan validation (the safety argument for threaded execution)
+// ---------------------------------------------------------------------
+
+/// Check the invariant the unsafe executor relies on: within any round,
+/// ops in DIFFERENT chains touch pairwise-disjoint memory (no write/write
+/// and no read/write overlap), every span is in bounds, and no transfer
+/// aliases src with dst. Returns a description of the first violation.
+fn validate_plan(plan: &Plan, p: usize, n: usize) -> Result<(), String> {
+    #[derive(Clone, Copy)]
+    struct Access {
+        chain: usize,
+        rank: usize,
+        lo: usize,
+        hi: usize,
+        write: bool,
+    }
+    for (ri, round) in plan.rounds.iter().enumerate() {
+        let mut accesses: Vec<Access> = Vec::new();
+        for (ci, chain) in round.chains.iter().enumerate() {
+            for op in chain {
+                if op.src >= p || op.dst >= p || op.hi > n || op.lo > op.hi {
+                    return Err(format!("round {ri}: op out of bounds: {op:?}"));
+                }
+                match op.kind {
+                    OpKind::Copy | OpKind::Add => {
+                        if op.src == op.dst {
+                            return Err(format!("round {ri}: self-transfer: {op:?}"));
+                        }
+                        accesses.push(Access { chain: ci, rank: op.src, lo: op.lo, hi: op.hi, write: false });
+                        accesses.push(Access { chain: ci, rank: op.dst, lo: op.lo, hi: op.hi, write: true });
+                    }
+                    OpKind::Quantize | OpKind::Scale => {
+                        accesses.push(Access { chain: ci, rank: op.dst, lo: op.lo, hi: op.hi, write: true });
+                    }
+                }
+            }
+        }
+        for (i, a) in accesses.iter().enumerate() {
+            for b in &accesses[i + 1..] {
+                if a.chain != b.chain
+                    && (a.write || b.write)
+                    && a.rank == b.rank
+                    && a.lo < b.hi
+                    && b.lo < a.hi
+                {
+                    return Err(format!(
+                        "round {ri}: chains {} and {} overlap on rank {} [{},{}) vs [{},{})",
+                        a.chain, b.chain, a.rank, a.lo, a.hi, b.lo, b.hi
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------
+
+/// Borrowed view of the rank buffers as raw pointers so worker threads
+/// can address disjoint spans of the same buffers concurrently.
+struct SharedRanks<'a> {
+    bufs: &'a [(*mut f32, usize)],
+}
+
+// SAFETY: threads only dereference spans that `validate_plan` proved
+// pairwise-disjoint within a round; a barrier orders rounds, giving the
+// cross-round happens-before edges.
+unsafe impl Sync for SharedRanks<'_> {}
+
+impl SharedRanks<'_> {
+    /// SAFETY: caller must ensure no concurrently-living &mut overlaps.
+    unsafe fn slice(&self, rank: usize, lo: usize, hi: usize) -> &[f32] {
+        let (ptr, len) = self.bufs[rank];
+        debug_assert!(hi <= len);
+        std::slice::from_raw_parts(ptr.add(lo), hi - lo)
+    }
+
+    /// SAFETY: caller must ensure this span is not aliased concurrently.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, rank: usize, lo: usize, hi: usize) -> &mut [f32] {
+        let (ptr, len) = self.bufs[rank];
+        debug_assert!(hi <= len);
+        std::slice::from_raw_parts_mut(ptr.add(lo), hi - lo)
+    }
+}
+
+/// Reusable pointer arena so steady-state calls allocate nothing.
+#[derive(Default)]
+struct PtrArena {
+    bufs: Vec<(*mut f32, usize)>,
+}
+
+// SAFETY: the arena only holds pointers while `allreduce_mean` runs (it
+// is cleared before returning), during which the engine holds the
+// exclusive borrow of every rank buffer the pointers came from.
+unsafe impl Send for PtrArena {}
+
+/// SAFETY (caller): `op`'s spans are disjoint from every other op running
+/// concurrently, per `validate_plan`.
+unsafe fn exec_op(shared: &SharedRanks<'_>, op: &Op, precision: Precision, inv: f32) {
+    match op.kind {
+        OpKind::Copy => {
+            let src = shared.slice(op.src, op.lo, op.hi);
+            let dst = shared.slice_mut(op.dst, op.lo, op.hi);
+            match precision {
+                Precision::F32 => dst.copy_from_slice(src),
+                Precision::F16 => fp16::encode_copy(src, dst),
+            }
+        }
+        OpKind::Add => {
+            let src = shared.slice(op.src, op.lo, op.hi);
+            let dst = shared.slice_mut(op.dst, op.lo, op.hi);
+            match precision {
+                Precision::F32 => {
+                    for (o, s) in dst.iter_mut().zip(src) {
+                        *o += s;
+                    }
+                }
+                Precision::F16 => fp16::encode_add(src, dst),
+            }
+        }
+        OpKind::Quantize => {
+            fp16::quantize_inplace(shared.slice_mut(op.dst, op.lo, op.hi));
+        }
+        OpKind::Scale => {
+            for v in shared.slice_mut(op.dst, op.lo, op.hi) {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+fn exec_worker(
+    plan: &Plan,
+    shared: &SharedRanks<'_>,
+    barrier: &Barrier,
+    t: usize,
+    nthreads: usize,
+    precision: Precision,
+    inv: f32,
+) {
+    for round in &plan.rounds {
+        for (j, chain) in round.chains.iter().enumerate() {
+            if j % nthreads == t {
+                for op in chain {
+                    // SAFETY: see validate_plan — chains within a round are
+                    // pairwise disjoint; the barrier orders rounds.
+                    unsafe { exec_op(shared, op, precision, inv) };
+                }
+            }
+        }
+        barrier.wait();
+    }
+}
+
+/// Persistent allreduce engine: owns the plan cache and the pointer
+/// arena; one instance per communication lane.
+pub struct CommEngine {
+    algo: Algorithm,
+    precision: Precision,
+    threads: usize,
+    plans: Vec<(usize, usize, Plan)>,
+    arena: PtrArena,
+}
+
+impl CommEngine {
+    /// `threads` is the maximum worker-thread count for one allreduce
+    /// (clamped per call to the plan's widest round).
+    pub fn new(algo: Algorithm, precision: Precision, threads: usize) -> CommEngine {
+        CommEngine {
+            algo,
+            precision,
+            threads: threads.max(1),
+            plans: Vec::new(),
+            arena: PtrArena::default(),
+        }
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.algo
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Number of distinct (p, n) shapes planned so far.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Allreduce-mean across rank slices, in place, bit-identical to
+    /// [`super::allreduce_mean`]. Zero heap allocation and zero buffer
+    /// copies once the (p, n) plan is cached.
+    pub fn allreduce_mean(&mut self, ranks: &mut [&mut [f32]]) -> WireStats {
+        let p = ranks.len();
+        assert!(p > 0, "no ranks");
+        let n = ranks[0].len();
+        for r in ranks.iter() {
+            assert_eq!(r.len(), n, "rank buffer lengths differ");
+        }
+        if p == 1 {
+            return WireStats::default();
+        }
+        let t0 = Instant::now();
+
+        let idx = match self.plans.iter().position(|&(pp, nn, _)| pp == p && nn == n) {
+            Some(i) => i,
+            None => {
+                let plan = build_plan(self.algo, self.precision, p, n);
+                // Hard assert in every profile: this is the ONLY guard for
+                // the unsafe concurrent executor's disjointness invariant,
+                // it runs once per cached (p, n) shape, and it costs
+                // microseconds against multi-ms allreduces. A bad plan must
+                // never reach the threads.
+                if let Err(e) = validate_plan(&plan, p, n) {
+                    panic!(
+                        "invalid allreduce plan ({} {:?} p={p} n={n}): {e}",
+                        self.algo.name(),
+                        self.precision
+                    );
+                }
+                self.plans.push((p, n, plan));
+                self.plans.len() - 1
+            }
+        };
+        let plan = &self.plans[idx].2;
+
+        self.arena.bufs.clear();
+        self.arena.bufs.extend(ranks.iter_mut().map(|r| (r.as_mut_ptr(), r.len())));
+        let shared = SharedRanks { bufs: &self.arena.bufs };
+
+        let nthreads = self.threads.min(plan.max_chains).max(1);
+        let barrier = Barrier::new(nthreads);
+        let (precision, inv) = (self.precision, plan.inv);
+        if nthreads == 1 {
+            exec_worker(plan, &shared, &barrier, 0, 1, precision, inv);
+        } else {
+            std::thread::scope(|scope| {
+                for t in 1..nthreads {
+                    let shared = &shared;
+                    let barrier = &barrier;
+                    scope.spawn(move || {
+                        exec_worker(plan, shared, barrier, t, nthreads, precision, inv)
+                    });
+                }
+                exec_worker(plan, &shared, &barrier, 0, nthreads, precision, inv);
+            });
+        }
+
+        let mut stats = plan.stats.clone();
+        drop(shared);
+        self.arena.bufs.clear();
+        stats.elapsed_s = t0.elapsed().as_secs_f64();
+        stats
+    }
+
+    /// Convenience wrapper over owned rank buffers (tests, benches).
+    pub fn allreduce_mean_vecs(&mut self, bufs: &mut [Vec<f32>]) -> WireStats {
+        let mut views: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        self.allreduce_mean(&mut views)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{allreduce_mean, Algorithm, Precision, WireStats};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_bufs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p)
+            .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect())
+            .collect()
+    }
+
+    fn algos() -> Vec<Algorithm> {
+        vec![
+            Algorithm::Naive,
+            Algorithm::Ring,
+            Algorithm::HalvingDoubling,
+            Algorithm::Hierarchical { ranks_per_node: 4 },
+            Algorithm::Hierarchical { ranks_per_node: 3 },
+            Algorithm::Hierarchical { ranks_per_node: 1 },
+        ]
+    }
+
+    fn assert_stats_match(a: &WireStats, b: &WireStats, what: &str) {
+        assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+        assert_eq!(a.total_bytes, b.total_bytes, "{what}: total_bytes");
+        assert_eq!(a.max_bytes_per_rank, b.max_bytes_per_rank, "{what}: max_bytes_per_rank");
+        assert_eq!(a.messages, b.messages, "{what}: messages");
+        assert_eq!(a.internode_bytes, b.internode_bytes, "{what}: internode_bytes");
+    }
+
+    /// The load-bearing test: for every (algorithm, precision, p, n,
+    /// thread count) in the grid, the engine's result is BIT-identical to
+    /// the single-threaded reference, and the wire accounting matches.
+    #[test]
+    fn engine_matches_reference_bitwise() {
+        for algo in algos() {
+            for precision in [Precision::F32, Precision::F16] {
+                for p in [2usize, 3, 4, 5, 8, 16] {
+                    for n in [0usize, 1, 5, 257, 2051] {
+                        let orig = make_bufs(p, n, 0x5EED + p as u64 * 1000 + n as u64);
+                        let mut want = orig.clone();
+                        let ref_stats = allreduce_mean(&mut want, algo, precision);
+                        for threads in [1usize, 4] {
+                            let mut engine = CommEngine::new(algo, precision, threads);
+                            let mut got = orig.clone();
+                            let eng_stats = engine.allreduce_mean_vecs(&mut got);
+                            let what = format!(
+                                "{} {:?} p={p} n={n} threads={threads}",
+                                algo.name(),
+                                precision
+                            );
+                            for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                                let gb: Vec<u32> = g.iter().map(|v| v.to_bits()).collect();
+                                let wb: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+                                assert_eq!(gb, wb, "{what}: rank {r} bits differ");
+                            }
+                            assert_stats_match(&eng_stats, &ref_stats, &what);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_race_free_across_grid() {
+        for algo in algos() {
+            for precision in [Precision::F32, Precision::F16] {
+                for p in [2usize, 3, 5, 8, 13, 16] {
+                    for n in [0usize, 1, 7, 1000] {
+                        let plan = build_plan(algo, precision, p, n);
+                        assert_eq!(
+                            validate_plan(&plan, p, n),
+                            Ok(()),
+                            "{} {:?} p={p} n={n}",
+                            algo.name(),
+                            precision
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_in_steady_state() {
+        let mut engine = CommEngine::new(Algorithm::Ring, Precision::F32, 2);
+        let mut bufs = make_bufs(4, 512, 1);
+        engine.allreduce_mean_vecs(&mut bufs);
+        assert_eq!(engine.cached_plans(), 1);
+        for _ in 0..3 {
+            engine.allreduce_mean_vecs(&mut bufs);
+        }
+        assert_eq!(engine.cached_plans(), 1, "steady state must not re-plan");
+        let mut other = make_bufs(4, 100, 2);
+        engine.allreduce_mean_vecs(&mut other);
+        assert_eq!(engine.cached_plans(), 2, "new shape gets its own plan");
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let mut engine = CommEngine::new(Algorithm::Ring, Precision::F32, 2);
+        let mut bufs = make_bufs(1, 64, 3);
+        let orig = bufs.clone();
+        let stats = engine.allreduce_mean_vecs(&mut bufs);
+        assert_eq!(bufs, orig);
+        assert_eq!(stats.total_bytes, 0);
+        assert_eq!(engine.cached_plans(), 0);
+    }
+
+    #[test]
+    fn engine_reports_wall_clock() {
+        let mut engine = CommEngine::new(Algorithm::Ring, Precision::F32, 2);
+        let mut bufs = make_bufs(8, 64 * 1024, 5);
+        let stats = engine.allreduce_mean_vecs(&mut bufs);
+        assert!(stats.elapsed_s > 0.0);
+        assert!(stats.effective_gbps() > 0.0);
+    }
+
+    #[test]
+    fn works_on_disjoint_subslices_of_one_buffer() {
+        // The coordinator hands the engine per-bucket spans of each
+        // worker's single gradient buffer; emulate that here.
+        let p = 4;
+        let n = 300;
+        let orig = make_bufs(p, 2 * n, 77);
+        let mut want = orig.clone();
+        // Reference over the two halves independently.
+        let mut lo_half: Vec<Vec<f32>> = want.iter().map(|b| b[..n].to_vec()).collect();
+        let mut hi_half: Vec<Vec<f32>> = want.iter().map(|b| b[n..].to_vec()).collect();
+        allreduce_mean(&mut lo_half, Algorithm::HalvingDoubling, Precision::F16);
+        allreduce_mean(&mut hi_half, Algorithm::HalvingDoubling, Precision::F16);
+
+        let mut got = orig;
+        let mut engine = CommEngine::new(Algorithm::HalvingDoubling, Precision::F16, 2);
+        let mut los: Vec<&mut [f32]> = Vec::new();
+        let mut his: Vec<&mut [f32]> = Vec::new();
+        for b in got.iter_mut() {
+            let (l, h) = b.split_at_mut(n);
+            los.push(l);
+            his.push(h);
+        }
+        engine.allreduce_mean(&mut los);
+        engine.allreduce_mean(&mut his);
+        for r in 0..p {
+            assert_eq!(&got[r][..n], &lo_half[r][..], "rank {r} low half");
+            assert_eq!(&got[r][n..], &hi_half[r][..], "rank {r} high half");
+        }
+    }
+}

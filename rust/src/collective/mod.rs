@@ -14,8 +14,25 @@
 //! 2(p-1)/p · n bytes/rank), recursive halving-doubling (latency-optimal,
 //! log2 p rounds), and the ABCI-shaped hierarchical variant (intra-node
 //! reduce → inter-node ring over node leaders → intra-node broadcast).
+//!
+//! Two execution paths share the same per-element math:
+//!
+//! * [`allreduce_mean`] — the single-threaded reference. It IS the
+//!   numerical contract: simple, clone-free, message-by-message, with the
+//!   fp16 wire fused into one-pass kernels ([`fp16::encode_add`] /
+//!   [`fp16::encode_copy`], bit-identical to the old two-pass scratch
+//!   formulation).
+//! * [`engine::CommEngine`] — the performance path: a persistent engine
+//!   with precomputed chunk plans, zero steady-state heap traffic, scoped
+//!   worker threads, and the mean-scale folded into the gather phase where
+//!   that is bit-neutral. Its results are REQUIRED (and tested) to be
+//!   bit-identical to the reference for every (algorithm, precision).
 
 use crate::util::fp16;
+use std::time::Instant;
+
+mod engine;
+pub use engine::CommEngine;
 
 /// Wire precision for gradient exchange (paper: fp16 wire, fp32 master).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,43 +83,83 @@ pub struct WireStats {
     pub rounds: usize,
     /// Total bytes crossing any link.
     pub total_bytes: usize,
-    /// Max bytes sent by any single rank (the per-rank bottleneck).
+    /// Bytes through the busiest single rank's NIC, sent + received — the
+    /// per-rank bottleneck. For the symmetric algorithms every rank moves
+    /// 2·2(p-1)/p·n bytes; for Naive the root moves 2(p-1)·n; for
+    /// Hierarchical the node leaders move strictly more than members
+    /// (intra-node gather + inter-node ring + intra-node broadcast), which
+    /// this field now reports exactly instead of a symmetric lower bound.
     pub max_bytes_per_rank: usize,
     /// Messages sent in total.
     pub messages: usize,
     /// Bytes that crossed node boundaries (Hierarchical only; otherwise
     /// equal to total_bytes with 1 rank/node assumed).
     pub internode_bytes: usize,
+    /// Wall-clock seconds this allreduce spent executing (0 when merged
+    /// stats come from accounting-only paths).
+    pub elapsed_s: f64,
+}
+
+impl WireStats {
+    /// Effective wire throughput of this allreduce: total bytes that
+    /// crossed links divided by wall-clock, in GB/s.
+    pub fn effective_gbps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.total_bytes as f64 / self.elapsed_s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Accumulate another exchange's stats (bucketed training sums one
+    /// WireStats per bucket). `max_bytes_per_rank` sums too: for a
+    /// sequence of exchanges it upper-bounds the busiest rank's total, and
+    /// is exact when the same rank is the bottleneck throughout (true for
+    /// all our algorithms at fixed p). `elapsed_s` accumulates
+    /// engine-active seconds, which exceeds wall-clock when buckets are
+    /// reduced concurrently.
+    pub fn merge(&mut self, o: &WireStats) {
+        self.rounds += o.rounds;
+        self.total_bytes += o.total_bytes;
+        self.max_bytes_per_rank += o.max_bytes_per_rank;
+        self.messages += o.messages;
+        self.internode_bytes += o.internode_bytes;
+        self.elapsed_s += o.elapsed_s;
+    }
 }
 
 /// A "wire": moves a chunk from src to dst, applying the configured
-/// precision (fp16 encodes+decodes, quantizing like real hardware would).
+/// precision. In fp16 mode both transfer kinds run as single-pass fused
+/// kernels (quantize-and-store / quantize-and-accumulate) — no scratch
+/// buffer, one traversal — with per-element math identical to the old
+/// encode-to-scratch + decode pass.
 struct Wire {
     precision: Precision,
-    scratch: Vec<u16>,
     stats: WireStats,
+    /// Bytes sent / received per global rank id, for the exact
+    /// max_bytes_per_rank computation.
+    sent: Vec<usize>,
+    recv: Vec<usize>,
 }
 
 impl Wire {
-    fn new(precision: Precision) -> Wire {
-        Wire { precision, scratch: Vec::new(), stats: WireStats::default() }
+    fn new(precision: Precision, p: usize) -> Wire {
+        Wire { precision, stats: WireStats::default(), sent: vec![0; p], recv: vec![0; p] }
     }
 
-    /// Transfer `src` into `out` (overwrite), counting bytes.
-    fn send(&mut self, src: &[f32], out: &mut [f32], internode: bool) {
+    /// Transfer `src` (owned by rank `from`) into `out` (owned by rank
+    /// `to`), overwriting, counting bytes.
+    fn send(&mut self, src: &[f32], out: &mut [f32], internode: bool, from: usize, to: usize) {
         assert_eq!(src.len(), out.len());
         match self.precision {
             Precision::F32 => out.copy_from_slice(src),
-            Precision::F16 => {
-                fp16::encode_slice(src, &mut self.scratch);
-                fp16::decode_slice(&self.scratch, out);
-            }
+            Precision::F16 => fp16::encode_copy(src, out),
         }
-        self.count(src.len(), internode);
+        self.count(src.len(), internode, from, to);
     }
 
     /// Transfer `src` and add into `out` (the reduce half of the exchange).
-    fn send_add(&mut self, src: &[f32], out: &mut [f32], internode: bool) {
+    fn send_add(&mut self, src: &[f32], out: &mut [f32], internode: bool, from: usize, to: usize) {
         assert_eq!(src.len(), out.len());
         match self.precision {
             Precision::F32 => {
@@ -110,14 +167,9 @@ impl Wire {
                     *o += s;
                 }
             }
-            Precision::F16 => {
-                fp16::encode_slice(src, &mut self.scratch);
-                for (o, &h) in out.iter_mut().zip(self.scratch.iter()) {
-                    *o += fp16::f16_bits_to_f32(h);
-                }
-            }
+            Precision::F16 => fp16::encode_add(src, out),
         }
-        self.count(src.len(), internode);
+        self.count(src.len(), internode, from, to);
     }
 
     /// Quantize a rank's OWN data in place (no wire traffic): before a
@@ -130,18 +182,34 @@ impl Wire {
         }
     }
 
-    fn count(&mut self, elems: usize, internode: bool) {
+    fn count(&mut self, elems: usize, internode: bool, from: usize, to: usize) {
         let bytes = elems * self.precision.bytes_per_elem();
         self.stats.total_bytes += bytes;
         self.stats.messages += 1;
+        self.sent[from] += bytes;
+        self.recv[to] += bytes;
         if internode {
             self.stats.internode_bytes += bytes;
         }
+    }
+
+    /// Finalize max_bytes_per_rank from the per-rank ledgers.
+    fn finish(&mut self) {
+        self.stats.max_bytes_per_rank = self
+            .sent
+            .iter()
+            .zip(self.recv.iter())
+            .map(|(s, r)| s + r)
+            .max()
+            .unwrap_or(0);
     }
 }
 
 /// Allreduce-mean across `bufs` (one buffer per rank, equal lengths).
 /// After the call every rank holds the same mean. Returns wire stats.
+///
+/// This is the single-threaded REFERENCE path: the numerical contract the
+/// threaded [`CommEngine`] must (and is tested to) reproduce bit-for-bit.
 pub fn allreduce_mean(bufs: &mut [Vec<f32>], algo: Algorithm, precision: Precision) -> WireStats {
     let p = bufs.len();
     assert!(p > 0, "no ranks");
@@ -153,10 +221,11 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>], algo: Algorithm, precision: Precisi
         return WireStats::default();
     }
 
-    let mut wire = Wire::new(precision);
+    let t0 = Instant::now();
+    let mut wire = Wire::new(precision, p);
     match algo {
         Algorithm::Naive => naive(bufs, &mut wire),
-        Algorithm::Ring => ring(bufs, &mut wire, true),
+        Algorithm::Ring => ring(bufs, &mut wire, true, None),
         Algorithm::HalvingDoubling => halving_doubling(bufs, &mut wire),
         Algorithm::Hierarchical { ranks_per_node } => {
             hierarchical(bufs, &mut wire, ranks_per_node)
@@ -169,37 +238,28 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>], algo: Algorithm, precision: Precisi
             *v *= inv;
         }
     }
+    wire.finish();
+    wire.stats.elapsed_s = t0.elapsed().as_secs_f64();
     wire.stats
-}
-
-/// Compute per-rank max bytes for the stats (the critical-path metric).
-fn finish_max_per_rank(stats: &mut WireStats, p: usize) {
-    // total bytes spread evenly is the lower bound; use it as the estimate
-    // for symmetric algorithms. Naive overrides.
-    stats.max_bytes_per_rank = stats.total_bytes / p.max(1);
 }
 
 fn naive(bufs: &mut [Vec<f32>], wire: &mut Wire) {
     let p = bufs.len();
-    let n = bufs[0].len();
     // Gather-reduce at rank 0.
     let (root, rest) = bufs.split_first_mut().unwrap();
-    for b in rest.iter() {
-        wire.send_add(b, root, true);
+    for (r, b) in rest.iter().enumerate() {
+        wire.send_add(b, root, true, r + 1, 0);
     }
     // Broadcast (root's own copy quantized to match what it sends).
     wire.quantize_own(root);
-    let root_copy = root.clone();
-    for b in rest.iter_mut() {
-        wire.send(&root_copy, b, true);
+    for (r, b) in rest.iter_mut().enumerate() {
+        wire.send(root, b, true, 0, r + 1);
     }
     wire.stats.rounds = 2 * (p - 1);
-    // Root sends/receives everything: it is the bottleneck.
-    wire.stats.max_bytes_per_rank = 2 * (p - 1) * n * wire.precision.bytes_per_elem();
 }
 
 /// Chunk boundaries: p nearly-equal spans covering 0..n.
-fn chunks(n: usize, p: usize) -> Vec<(usize, usize)> {
+pub(crate) fn chunks(n: usize, p: usize) -> Vec<(usize, usize)> {
     let base = n / p;
     let rem = n % p;
     let mut out = Vec::with_capacity(p);
@@ -212,9 +272,13 @@ fn chunks(n: usize, p: usize) -> Vec<(usize, usize)> {
     out
 }
 
-fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool) {
+/// Ring over the ranks in `bufs`. When the ring runs over a subset of a
+/// larger machine (hierarchical phase 2 over node leaders), `ids` maps
+/// ring position -> global rank id for the per-rank byte ledgers.
+fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool, ids: Option<&[usize]>) {
     let p = bufs.len();
     let spans = chunks(bufs[0].len(), p);
+    let id = |i: usize| ids.map_or(i, |m| m[i]);
 
     // Reduce-scatter: in round r, rank i sends chunk (i - r) to rank i+1.
     for r in 0..p - 1 {
@@ -228,7 +292,7 @@ fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool) {
             }
             // Split-borrow the two rank buffers.
             let (a, b) = two_mut(bufs, src_rank, dst_rank);
-            wire.send_add(&a[lo..hi], &mut b[lo..hi], internode);
+            wire.send_add(&a[lo..hi], &mut b[lo..hi], internode, id(src_rank), id(dst_rank));
         }
     }
     // After reduce-scatter, rank i owns the fully-reduced chunk (i+1)%p;
@@ -248,11 +312,10 @@ fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool) {
                 continue;
             }
             let (a, b) = two_mut(bufs, src_rank, dst_rank);
-            wire.send(&a[lo..hi], &mut b[lo..hi], internode);
+            wire.send(&a[lo..hi], &mut b[lo..hi], internode, id(src_rank), id(dst_rank));
         }
     }
     wire.stats.rounds += 2 * (p - 1);
-    finish_max_per_rank(&mut wire.stats, p);
 }
 
 /// Borrow two distinct ranks mutably.
@@ -273,12 +336,12 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
     let extra = p - pow2;
 
     // Fold the remainder: ranks >= pow2 send their whole buffer into their
-    // partner (rank - pow2), then sit out.
+    // partner (rank - pow2), then sit out. (Distinct pairs: the split
+    // borrow makes the old defensive clones unnecessary.)
     for e in 0..extra {
         let (src, dst) = (pow2 + e, e);
         let (a, b) = two_mut(bufs, src, dst);
-        let a_copy = a.clone();
-        wire.send_add(&a_copy, b, true);
+        wire.send_add(a, b, true, src, dst);
         wire.stats.rounds += 1;
     }
 
@@ -298,11 +361,11 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
             let mid = lo_i + (hi_i - lo_i) / 2;
             // Lower-half keeper is the rank with the 0 bit at distance d.
             // i keeps [lo, mid), j keeps [mid, hi): j sends its lower half
-            // into i, i sends its upper half into j.
+            // into i, i sends its upper half into j. The two transfers
+            // touch disjoint spans, so neither needs a snapshot copy.
             let (bi, bj) = two_mut(bufs, i, j);
-            let bj_lower = bj[lo_i..mid].to_vec();
-            wire.send_add(&bi[mid..hi_i].to_vec(), &mut bj[mid..hi_i], true);
-            wire.send_add(&bj_lower, &mut bi[lo_i..mid], true);
+            wire.send_add(&bi[mid..hi_i], &mut bj[mid..hi_i], true, i, j);
+            wire.send_add(&bj[lo_i..mid], &mut bi[lo_i..mid], true, j, i);
             spans[i] = (lo_i, mid);
             spans[j] = (mid, hi_i);
         }
@@ -316,7 +379,9 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
         let (lo, hi) = spans[i];
         wire.quantize_own(&mut bufs[i][lo..hi]);
     }
-    // Recursive doubling (all-gather): reverse the halving.
+    // Recursive doubling (all-gather): reverse the halving. Each side
+    // reads its own (already final) span and writes the partner's span —
+    // disjoint, so again no snapshot copies.
     let mut d = 1;
     while d < pow2 {
         for i in 0..pow2 {
@@ -327,10 +392,8 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
             let (lo_i, hi_i) = spans[i];
             let (lo_j, hi_j) = spans[j];
             let (bi, bj) = two_mut(bufs, i, j);
-            let bi_span = bi[lo_i..hi_i].to_vec();
-            let bj_span = bj[lo_j..hi_j].to_vec();
-            wire.send(&bj_span, &mut bi[lo_j..hi_j], true);
-            wire.send(&bi_span, &mut bj[lo_i..hi_i], true);
+            wire.send(&bj[lo_j..hi_j], &mut bi[lo_j..hi_j], true, j, i);
+            wire.send(&bi[lo_i..hi_i], &mut bj[lo_i..hi_i], true, i, j);
             let merged = (lo_i.min(lo_j), hi_i.max(hi_j));
             spans[i] = merged;
             spans[j] = merged;
@@ -343,11 +406,9 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
     for e in 0..extra {
         let (src, dst) = (e, pow2 + e);
         let (a, b) = two_mut(bufs, src, dst);
-        let a_copy = a.clone();
-        wire.send(&a_copy, b, true);
+        wire.send(a, b, true, src, dst);
         wire.stats.rounds += 1;
     }
-    finish_max_per_rank(&mut wire.stats, p);
 }
 
 fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
@@ -360,19 +421,19 @@ fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
         let leader = node * rpn;
         for r in leader + 1..((node + 1) * rpn).min(p) {
             let (l, m) = two_mut(bufs, leader, r);
-            let m_copy = m.clone();
-            wire.send_add(&m_copy, l, false);
+            wire.send_add(m, l, false, r, leader);
         }
     }
     wire.stats.rounds += rpn - 1;
 
     // Phase 2: ring allreduce across node leaders (inter-node wires).
     if nodes > 1 {
+        let leader_ids: Vec<usize> = (0..nodes).map(|nd| nd * rpn).collect();
         let mut leaders: Vec<Vec<f32>> =
-            (0..nodes).map(|nd| std::mem::take(&mut bufs[nd * rpn])).collect();
-        ring(&mut leaders, wire, true);
-        for (nd, lb) in leaders.into_iter().enumerate() {
-            bufs[nd * rpn] = lb;
+            leader_ids.iter().map(|&l| std::mem::take(&mut bufs[l])).collect();
+        ring(&mut leaders, wire, true, Some(&leader_ids));
+        for (&l, lb) in leader_ids.iter().zip(leaders.into_iter()) {
+            bufs[l] = lb;
         }
     }
 
@@ -380,13 +441,12 @@ fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
     for node in 0..nodes {
         let leader = node * rpn;
         wire.quantize_own(&mut bufs[leader]);
-        let leader_copy = bufs[leader].clone();
         for r in leader + 1..((node + 1) * rpn).min(p) {
-            wire.send(&leader_copy, &mut bufs[r], false);
+            let (l, m) = two_mut(bufs, leader, r);
+            wire.send(l, m, false, leader, r);
         }
     }
     wire.stats.rounds += rpn - 1;
-    finish_max_per_rank(&mut wire.stats, p);
 }
 
 #[cfg(test)]
@@ -507,8 +567,23 @@ mod tests {
         let ring_stats = allreduce_mean(&mut a, Algorithm::Ring, Precision::F32);
         let mut b = make_bufs(p, n, 3);
         let naive_stats = allreduce_mean(&mut b, Algorithm::Naive, Precision::F32);
-        // Per-rank bottleneck: ring ~ 2n bytes, naive root ~ 2(p-1)n bytes.
-        assert!(ring_stats.max_bytes_per_rank * 4 < naive_stats.max_bytes_per_rank);
+        // Per-rank bottleneck (sent + received): ring ~ 4n(p-1)/p bytes per
+        // rank, naive root ~ 2(p-1)n — a factor of p/2 = 4 apart at p = 8.
+        assert!(ring_stats.max_bytes_per_rank * 3 < naive_stats.max_bytes_per_rank);
+    }
+
+    #[test]
+    fn per_rank_bytes_exact_for_ring_and_naive() {
+        // With n divisible by p the ledgers have closed forms.
+        let (p, n) = (8usize, 8192usize);
+        let mut a = make_bufs(p, n, 21);
+        let ring_stats = allreduce_mean(&mut a, Algorithm::Ring, Precision::F32);
+        // Every rank sends and receives 2(p-1)·(n/p) elems of 4 bytes.
+        assert_eq!(ring_stats.max_bytes_per_rank, 2 * 2 * (p - 1) * (n / p) * 4);
+        let mut b = make_bufs(p, n, 21);
+        let naive_stats = allreduce_mean(&mut b, Algorithm::Naive, Precision::F32);
+        // Root receives (p-1)·n and sends (p-1)·n.
+        assert_eq!(naive_stats.max_bytes_per_rank, 2 * (p - 1) * n * 4);
     }
 
     #[test]
@@ -537,6 +612,23 @@ mod tests {
             hier.internode_bytes,
             flat.internode_bytes
         );
+        // The flip side the old symmetric estimate hid: node leaders are a
+        // genuine per-rank hotspot — they absorb the intra-node gather,
+        // run the inter-node ring AND source the intra-node broadcast, so
+        // their NIC moves strictly more bytes than any rank of the flat
+        // ring.
+        assert!(
+            hier.max_bytes_per_rank > flat.max_bytes_per_rank,
+            "leader bottleneck {} should exceed flat ring per-rank {}",
+            hier.max_bytes_per_rank,
+            flat.max_bytes_per_rank
+        );
+        // Exact leader ledger: recv (rpn-1)·n  [phase 1]
+        //   + ring sent+recv 2·2(nodes-1)/nodes·n  [phase 2 over leaders]
+        //   + sent (rpn-1)·n  [phase 3], all fp32.
+        let (rpn, nodes) = (4usize, 4usize);
+        let expect = (rpn - 1) * n * 4 + 2 * 2 * (nodes - 1) * (n / nodes) * 4 + (rpn - 1) * n * 4;
+        assert_eq!(hier.max_bytes_per_rank, expect);
     }
 
     #[test]
@@ -553,5 +645,41 @@ mod tests {
                 assert_eq!(&bufs[0], b, "{}", algo.name());
             }
         }
+    }
+
+    #[test]
+    fn stats_report_wall_clock_and_throughput() {
+        let mut bufs = make_bufs(8, 64 * 1024, 13);
+        let stats = allreduce_mean(&mut bufs, Algorithm::Ring, Precision::F32);
+        assert!(stats.elapsed_s > 0.0);
+        assert!(stats.effective_gbps() > 0.0);
+        assert_eq!(WireStats::default().effective_gbps(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_all_counters() {
+        let mut a = WireStats {
+            rounds: 2,
+            total_bytes: 100,
+            max_bytes_per_rank: 40,
+            messages: 3,
+            internode_bytes: 60,
+            elapsed_s: 0.5,
+        };
+        let b = WireStats {
+            rounds: 1,
+            total_bytes: 10,
+            max_bytes_per_rank: 4,
+            messages: 1,
+            internode_bytes: 0,
+            elapsed_s: 0.25,
+        };
+        a.merge(&b);
+        assert_eq!(a.rounds, 3);
+        assert_eq!(a.total_bytes, 110);
+        assert_eq!(a.max_bytes_per_rank, 44);
+        assert_eq!(a.messages, 4);
+        assert_eq!(a.internode_bytes, 60);
+        assert!((a.elapsed_s - 0.75).abs() < 1e-12);
     }
 }

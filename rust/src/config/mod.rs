@@ -38,6 +38,12 @@ pub struct RunConfig {
     /// Bucket target size in bytes (paper III-C-1: "several megabytes" at
     /// ResNet-50 scale; default scales down with our smaller models).
     pub bucket_bytes: usize,
+    /// OS-thread budget for the communication phase: independent buckets
+    /// are reduced on up to this many concurrent engine lanes, and any
+    /// leftover budget parallelizes transfers inside each allreduce.
+    /// Results are bit-identical at every setting (the reduction order is
+    /// fixed by the algorithm, not by thread arrival).
+    pub comm_threads: usize,
     pub overlap: bool,
     /// Synthetic dataset size (images per epoch) and noise.
     pub train_size: usize,
@@ -66,6 +72,7 @@ impl Default for RunConfig {
             ranks_per_node: 4,
             wire: "f16".into(),
             bucket_bytes: 16 * 1024,
+            comm_threads: 2,
             overlap: true,
             train_size: 4096,
             val_size: 512,
@@ -127,6 +134,7 @@ impl RunConfig {
         c.ranks_per_node = args.get_usize("ranks-per-node", c.ranks_per_node)?;
         c.wire = args.get_or("wire", &c.wire).to_string();
         c.bucket_bytes = args.get_usize("bucket-bytes", c.bucket_bytes)?;
+        c.comm_threads = args.get_usize("comm-threads", c.comm_threads)?;
         if args.flag("no-overlap") {
             c.overlap = false;
         }
@@ -165,6 +173,7 @@ impl RunConfig {
             ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
             wire: get_str("wire", &d.wire),
             bucket_bytes: get_usize("bucket_bytes", d.bucket_bytes),
+            comm_threads: get_usize("comm_threads", d.comm_threads),
             overlap: get_bool("overlap", d.overlap),
             train_size: get_usize("train_size", d.train_size),
             val_size: get_usize("val_size", d.val_size),
@@ -185,6 +194,7 @@ impl RunConfig {
             "warmup_frac must be in [0, 0.9)"
         );
         anyhow::ensure!(self.bucket_bytes > 0, "bucket_bytes must be > 0");
+        anyhow::ensure!(self.comm_threads >= 1, "comm_threads must be >= 1");
         self.algorithm()?;
         self.precision()?;
         Ok(())
@@ -246,11 +256,12 @@ mod tests {
     #[test]
     fn json_round() {
         let c = RunConfig::from_json(
-            r#"{"workers": 2, "allreduce": "ring", "overlap": false, "peak_lr": 0.8}"#,
+            r#"{"workers": 2, "allreduce": "ring", "overlap": false, "peak_lr": 0.8, "comm_threads": 4}"#,
         )
         .unwrap();
         assert_eq!(c.workers, 2);
         assert!(!c.overlap);
+        assert_eq!(c.comm_threads, 4);
         assert_eq!(c.algorithm().unwrap(), Algorithm::Ring);
     }
 
@@ -259,6 +270,7 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"workers": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"allreduce": "smoke-signals"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"wire": "f8"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"comm_threads": 0}"#).is_err());
     }
 
     #[test]

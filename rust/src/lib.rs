@@ -6,9 +6,11 @@
 //!
 //! * **L3 (this crate)** — the distributed-training coordinator: worker
 //!   pool, gradient bucketing, backward/allreduce overlap, real numeric
-//!   collectives, mixed-precision communication, LR scheduling, parallel
-//!   same-seed init, MLPerf-style logging, and an α–β network model that
-//!   extrapolates measured step costs to the paper's 2,048-GPU scale.
+//!   collectives (with a zero-copy threaded `collective::CommEngine` on
+//!   the hot path and fused fp16 wire kernels), mixed-precision
+//!   communication, LR scheduling, parallel same-seed init, MLPerf-style
+//!   logging, and an α–β network model that extrapolates measured step
+//!   costs to the paper's 2,048-GPU scale.
 //! * **L2 (python/compile/model.py)** — ResNet fwd/bwd + LARS update
 //!   graphs in JAX, AOT-lowered to `artifacts/*.hlo.txt` once at build
 //!   time.
@@ -17,7 +19,11 @@
 //!   fused LARS update, label-smoothed cross-entropy.
 //!
 //! Python never runs at training time; the rust binary is self-contained
-//! once `make artifacts` has produced the HLO text + manifest.
+//! once `make artifacts` has produced the HLO text + manifest. Offline
+//! builds (the default) swap the PJRT runtime for a deterministic pure-
+//! Rust stub model (`runtime::stub`) so the full stack builds and tests
+//! with no artifacts, no network and no native libraries; enable
+//! `--features pjrt` (with a real `xla` binding) for the artifact path.
 
 pub mod benchkit;
 pub mod bucket;

@@ -9,7 +9,8 @@
 //!
 //! Common options: --artifacts DIR, --workers N, --steps N, --lr X,
 //! --allreduce ring|hd|hier|naive, --wire f16|f32, --bucket-bytes N,
-//! --no-lars, --no-smoothing, --no-overlap, --mlperf-log, --threaded.
+//! --comm-threads N, --no-lars, --no-smoothing, --no-overlap,
+//! --mlperf-log, --threaded.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -22,8 +23,9 @@ use yasgd::util::cli::Args;
 const KNOWN_OPTS: &[&str] = &[
     "artifacts", "config", "workers", "grad-accum", "steps", "eval-every", "eval-batches",
     "seed", "lr", "warmup-frac", "decay", "no-lars", "no-smoothing", "allreduce",
-    "ranks-per-node", "wire", "bucket-bytes", "no-overlap", "train-size", "val-size", "noise",
-    "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json", "save-checkpoint", "resume",
+    "ranks-per-node", "wire", "bucket-bytes", "comm-threads", "no-overlap", "train-size",
+    "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",
+    "save-checkpoint", "resume",
 ];
 
 fn main() -> Result<()> {
@@ -114,9 +116,11 @@ fn train(args: &Args) -> Result<()> {
     }
     println!("step breakdown:\n{}", trainer.breakdown.report());
     println!(
-        "wire: {} messages, {:.2} MiB total",
+        "wire: {} messages, {:.2} MiB total, {:.2} GB/s effective ({:.1} ms engine-active)",
         report.wire_totals.messages,
-        report.wire_totals.total_bytes as f64 / (1024.0 * 1024.0)
+        report.wire_totals.total_bytes as f64 / (1024.0 * 1024.0),
+        report.wire_totals.effective_gbps(),
+        report.wire_totals.elapsed_s * 1e3
     );
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_json().to_string_pretty())?;

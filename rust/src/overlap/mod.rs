@@ -116,8 +116,25 @@ pub fn simulate(
     overlap: bool,
     comm_time: impl Fn(usize) -> f64,
 ) -> OverlapReport {
+    simulate_channels(plan, profile, overlap, 1, comm_time)
+}
+
+/// Overlap simulation over `channels` parallel communication lanes — the
+/// timing model of `CommEngine`-style concurrent bucket reduction (several
+/// NCCL communicators / engine lanes instead of one serial NIC queue).
+///
+/// Buckets become eligible in readiness order and each takes an
+/// earliest-free channel, so `channels = 1` reduces exactly to the serial
+/// model.
+pub fn simulate_channels(
+    plan: &BucketPlan,
+    profile: &BackwardProfile,
+    overlap: bool,
+    channels: usize,
+    comm_time: impl Fn(usize) -> f64,
+) -> OverlapReport {
     let mut spans = Vec::with_capacity(plan.buckets.len());
-    let mut chan_free = 0.0f64;
+    let mut chan_free = vec![0.0f64; channels.max(1)];
     let mut total_comm = 0.0;
 
     for (i, b) in plan.buckets.iter().enumerate() {
@@ -135,10 +152,13 @@ pub fn simulate(
         let (lo, hi) = plan.span_with_padding(i);
         let bytes = (hi - lo) * plan.bytes_per_elem;
         let t = comm_time(bytes);
-        let start = ready.max(chan_free);
+        let ch = (0..chan_free.len())
+            .min_by(|&a, &b| chan_free[a].partial_cmp(&chan_free[b]).unwrap())
+            .unwrap();
+        let start = ready.max(chan_free[ch]);
         let end = start + t;
         spans.push((start, end));
-        chan_free = end;
+        chan_free[ch] = end;
         total_comm += t;
     }
 
@@ -263,6 +283,54 @@ mod tests {
         let prof = BackwardProfile::from_flops(&m, 0.001);
         let rep = simulate(&plan, &prof, true, |_| 1.0);
         assert!(rep.hidden_frac < 0.1);
+    }
+
+    #[test]
+    fn more_channels_never_slower() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        let prof = BackwardProfile::from_flops(&m, 0.01);
+        let comm = |bytes: usize| bytes as f64 * 1e-7 + 1e-3;
+        let mut prev = f64::INFINITY;
+        for channels in [1, 2, 4, 8] {
+            let rep = simulate_channels(&plan, &prof, true, channels, comm);
+            assert!(
+                rep.step_span_s <= prev + 1e-12,
+                "{channels} channels regressed: {} vs {prev}",
+                rep.step_span_s
+            );
+            prev = rep.step_span_s;
+        }
+    }
+
+    #[test]
+    fn one_channel_matches_serial_simulate() {
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 2);
+        let prof = BackwardProfile::from_flops(&m, 0.5);
+        let comm = |bytes: usize| bytes as f64 * 3e-8 + 5e-4;
+        let serial = simulate(&plan, &prof, true, comm);
+        let one = simulate_channels(&plan, &prof, true, 1, comm);
+        assert_eq!(serial.comm_spans, one.comm_spans);
+        assert_eq!(serial.step_span_s, one.step_span_s);
+    }
+
+    #[test]
+    fn unlimited_channels_bounded_by_last_ready_plus_one_bucket() {
+        // With a channel per bucket nothing queues: every bucket starts at
+        // its ready time, so the step ends at max(ready + t) — for equal
+        // bucket times that is the last bucket's ready time + one t.
+        let m = manifest();
+        let plan = BucketPlan::build(&m, 4096, 4);
+        let prof = BackwardProfile::from_flops(&m, 1.0);
+        let t = 2e-3;
+        let rep = simulate_channels(&plan, &prof, true, plan.buckets.len(), |_| t);
+        assert!(
+            (rep.step_span_s - (prof.total_backward_s + t)).abs() < 1e-12,
+            "step span {} vs expected {}",
+            rep.step_span_s,
+            prof.total_backward_s + t
+        );
     }
 
     #[test]

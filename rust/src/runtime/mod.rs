@@ -1,20 +1,34 @@
-//! PJRT runtime: load AOT artifacts, execute them on the training hot path.
+//! Runtime engines: execute the training-step computations behind one
+//! typed API (`grad_step`, `update`, `eval`).
 //!
-//! `Engine` owns one PJRT CPU client plus one compiled executable per
-//! artifact, and exposes typed wrappers (`grad_step`, `update`, `eval`)
-//! over the packed-buffer calling convention recorded in manifest.json.
+//! Two interchangeable backends:
 //!
-//! HLO *text* is the interchange format (see python/compile/aot.py): the
-//! text parser reassigns instruction ids, which is what lets jax >= 0.5
-//! output load into xla_extension 0.5.1.
+//! * **PJRT** (`--features pjrt`, [`pjrt::Engine`]) — loads the AOT HLO
+//!   artifacts produced by `python/compile` and executes them on a PJRT
+//!   CPU client. This is the faithful paper pipeline; it needs an `xla`
+//!   binding and the `artifacts/` directory from `make artifacts`.
+//! * **Stub** (default, [`stub::Engine`]) — a deterministic, pure-Rust
+//!   MLP-with-BatchNorm proxy model with real forward/backward math, real
+//!   LARS semantics and BN running statistics. It needs no artifacts and
+//!   no native libraries, which is what lets `cargo build && cargo test`
+//!   run offline while still exercising every coordinator/collective code
+//!   path with live gradients.
 //!
-//! Python never appears here — `make artifacts` ran once at build time and
-//! this module is the only consumer of its output.
+//! Both backends expose the same `Engine` type name, so the coordinator,
+//! tests, benches and examples are backend-agnostic.
 
-use crate::model_meta::Manifest;
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+use anyhow::Result;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
+
+#[cfg_attr(feature = "pjrt", allow(dead_code))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+pub use stub::stub_manifest;
 
 /// Which grad-step variant to run (ablation A3 swaps smoothing off).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,227 +73,8 @@ pub struct CompileStats {
     pub per_artifact_ms: Vec<(String, f64)>,
 }
 
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    grad_smoothed: xla::PjRtLoadedExecutable,
-    grad_nosmooth: xla::PjRtLoadedExecutable,
-    update_lars: xla::PjRtLoadedExecutable,
-    update_sgd: xla::PjRtLoadedExecutable,
-    update_lars_perlayer: xla::PjRtLoadedExecutable,
-    eval_step: xla::PjRtLoadedExecutable,
-    /// Layer-id map (i32[Np], padding -> num_layers) fed to update_step at
-    /// every call: the old XLA text parser mangles large baked integer
-    /// constants, so these cross the boundary as runtime inputs.
-    layer_ids: Vec<i32>,
-    /// LARS-skip mask (i32[num_layers]).
-    lars_skip: Vec<i32>,
-    pub compile_stats: CompileStats,
-}
-
-// SAFETY: the PJRT C++ objects behind these raw pointers are thread-safe:
-// PjRtLoadedExecutable::Execute and PjRtClient buffer creation take no
-// mutable aliasing (XLA documents them as thread-compatible and the CPU
-// client serializes internally); Literal is plain host memory. The xla
-// crate just never declared it. Worker threads only call `execute` +
-// literal conversions through &Engine.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
-impl Engine {
-    /// Load every artifact from `dir` and compile on the CPU client.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
-        let mut stats = CompileStats::default();
-
-        let mut compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path: PathBuf = dir.join(file);
-            let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(anyhow_xla)
-                .with_context(|| format!("loading HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(anyhow_xla)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            stats
-                .per_artifact_ms
-                .push((file.to_string(), t0.elapsed().as_secs_f64() * 1e3));
-            Ok(exe)
-        };
-
-        let grad_smoothed = compile("grad_step.hlo.txt")?;
-        let grad_nosmooth = compile("grad_step_nosmooth.hlo.txt")?;
-        let update_lars = compile("update_lars.hlo.txt")?;
-        let update_sgd = compile("update_sgd.hlo.txt")?;
-        let update_lars_perlayer = compile("update_lars_perlayer.hlo.txt")?;
-        let eval_step = compile("eval_step.hlo.txt")?;
-
-        // Build the packed layer-id map + LARS-skip mask from the manifest.
-        let nl = manifest.layers.len() as i32;
-        let mut layer_ids = vec![nl; manifest.padded_param_count];
-        for (li, l) in manifest.layers.iter().enumerate() {
-            layer_ids[l.offset..l.offset + l.size].fill(li as i32);
-        }
-        let lars_skip: Vec<i32> =
-            manifest.layers.iter().map(|l| i32::from(l.lars_skip)).collect();
-
-        Ok(Engine {
-            client,
-            manifest,
-            grad_smoothed,
-            grad_nosmooth,
-            update_lars,
-            update_sgd,
-            update_lars_perlayer,
-            eval_step,
-            layer_ids,
-            lars_skip,
-            compile_stats: stats,
-        })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Run fwd+bwd on one per-worker micro-batch.
-    pub fn grad_step(
-        &self,
-        variant: GradVariant,
-        params: &[f32],
-        bn_state: &[f32],
-        images: &[f32],
-        labels: &[i32],
-    ) -> Result<GradOutput> {
-        let m = &self.manifest;
-        self.check_len("params", params.len(), m.padded_param_count)?;
-        self.check_len("bn_state", bn_state.len(), m.state_count)?;
-        let b = m.train.batch_size;
-        let img_elems = b * m.model.image_size * m.model.image_size * m.model.channels;
-        self.check_len("images", images.len(), img_elems)?;
-        self.check_len("labels", labels.len(), b)?;
-
-        let img_dims = [
-            b as i64,
-            m.model.image_size as i64,
-            m.model.image_size as i64,
-            m.model.channels as i64,
-        ];
-        let args = [
-            xla::Literal::vec1(params),
-            xla::Literal::vec1(bn_state),
-            xla::Literal::vec1(images).reshape(&img_dims).map_err(anyhow_xla)?,
-            xla::Literal::vec1(labels),
-        ];
-        let exe = match variant {
-            GradVariant::Smoothed => &self.grad_smoothed,
-            GradVariant::NoSmoothing => &self.grad_nosmooth,
-        };
-        let mut out = execute_tuple(exe, &args)?;
-        anyhow::ensure!(out.len() == 4, "grad_step returned {} outputs", out.len());
-        let new_state = out.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?;
-        let grads = out.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?;
-        let correct = scalar_f32(&out.pop().unwrap())?;
-        let loss = scalar_f32(&out.pop().unwrap())?;
-        Ok(GradOutput { loss, correct, grads, new_state })
-    }
-
-    /// Apply the master-weight update to (params, momentum) given the
-    /// allreduced gradient. Returns (new_params, new_momentum).
-    pub fn update(
-        &self,
-        rule: UpdateRule,
-        params: &[f32],
-        momentum: &[f32],
-        grads: &[f32],
-        lr: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let m = &self.manifest;
-        self.check_len("params", params.len(), m.padded_param_count)?;
-        self.check_len("momentum", momentum.len(), m.padded_param_count)?;
-        self.check_len("grads", grads.len(), m.padded_param_count)?;
-        let args = [
-            xla::Literal::vec1(params),
-            xla::Literal::vec1(momentum),
-            xla::Literal::vec1(grads),
-            xla::Literal::vec1(&[lr]),
-            xla::Literal::vec1(&self.layer_ids),
-            xla::Literal::vec1(&self.lars_skip),
-        ];
-        let exe = match rule {
-            UpdateRule::Lars => &self.update_lars,
-            UpdateRule::Sgd => &self.update_sgd,
-            UpdateRule::LarsPerLayer => &self.update_lars_perlayer,
-        };
-        let mut out = execute_tuple(exe, &args)?;
-        anyhow::ensure!(out.len() == 2, "update returned {} outputs", out.len());
-        let new_momentum = out.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?;
-        let new_params = out.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?;
-        Ok((new_params, new_momentum))
-    }
-
-    /// Run inference on one batch; returns mean loss + correct count.
-    pub fn eval(
-        &self,
-        params: &[f32],
-        bn_state: &[f32],
-        images: &[f32],
-        labels: &[i32],
-    ) -> Result<EvalOutput> {
-        let m = &self.manifest;
-        let b = m.train.batch_size;
-        let img_dims = [
-            b as i64,
-            m.model.image_size as i64,
-            m.model.image_size as i64,
-            m.model.channels as i64,
-        ];
-        let args = [
-            xla::Literal::vec1(params),
-            xla::Literal::vec1(bn_state),
-            xla::Literal::vec1(images).reshape(&img_dims).map_err(anyhow_xla)?,
-            xla::Literal::vec1(labels),
-        ];
-        let mut out = execute_tuple(&self.eval_step, &args)?;
-        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
-        let correct = scalar_f32(&out.pop().unwrap())?;
-        let loss = scalar_f32(&out.pop().unwrap())?;
-        Ok(EvalOutput { loss, correct })
-    }
-
-    fn check_len(&self, what: &str, got: usize, want: usize) -> Result<()> {
-        anyhow::ensure!(got == want, "{what}: length {got}, manifest says {want}");
-        Ok(())
-    }
-}
-
-/// Execute and unpack the single-tuple output convention
-/// (aot.py lowers with return_tuple=True).
-fn execute_tuple(
-    exe: &xla::PjRtLoadedExecutable,
-    args: &[xla::Literal],
-) -> Result<Vec<xla::Literal>> {
-    let result = exe.execute::<xla::Literal>(args).map_err(anyhow_xla)?;
-    anyhow::ensure!(
-        result.len() == 1 && result[0].len() == 1,
-        "expected single replica/single output"
-    );
-    let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
-    lit.to_tuple().map_err(anyhow_xla)
-}
-
-fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>().map_err(anyhow_xla)?;
-    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
-    Ok(v[0])
-}
-
-/// The xla crate error type doesn't implement std::error::Error + Send+Sync
-/// uniformly enough for `?` into anyhow; wrap by formatting.
-fn anyhow_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
-    anyhow::anyhow!("{e:?}")
+/// Length validation shared by both backends.
+pub(crate) fn check_len(what: &str, got: usize, want: usize) -> Result<()> {
+    anyhow::ensure!(got == want, "{what}: length {got}, manifest says {want}");
+    Ok(())
 }

@@ -1,0 +1,675 @@
+//! Deterministic in-process stub engine (the default, offline backend).
+//!
+//! A real two-hidden-layer MLP with BatchNorm on the 32×32×3 input space:
+//! fc1(3072→96) → BN → ReLU → fc2(96→96) → BN → ReLU → fc3(96→10) → bias,
+//! label-smoothed softmax cross-entropy, hand-written forward/backward in
+//! pure Rust, and a faithful LARS/momentum-SGD update. The layer table it
+//! publishes has the same packed-buffer layout contract as the PJRT
+//! artifacts, so bucketing, allreduce, checkpointing and the LARS ledger
+//! all run unchanged against live gradients.
+//!
+//! Deliberate semantic matches with the real ResNet artifacts:
+//! * training-mode BN uses BATCH statistics — gradients do not depend on
+//!   the running-stats input (which is why `BnStatsMode::Local` vs `Mean`
+//!   changes evaluation but not the weight trajectory);
+//! * `new_state` is the running-stats EMA update from batch moments;
+//! * the smoothing variant changes the loss surface but not the logits'
+//!   argmax;
+//! * `UpdateRule::LarsPerLayer` is numerically identical to `Lars` (the
+//!   artifact pair differs only in kernel schedule);
+//! * the padded tail of every Np-length buffer is passed through
+//!   untouched.
+//!
+//! Hyperparameters (lars_eta = 0.02, wd = 5e-4) are calibrated so the
+//! synthetic-data trainer reproduces the paper's qualitative regimes:
+//! lr 0.6 converges in a dozen steps, lr 6.0 trains only with LARS.
+//!
+//! `Engine::load` ignores the artifacts directory (there is nothing to
+//! load); it exists so call sites are backend-agnostic with the PJRT
+//! engine.
+
+use super::{check_len, CompileStats, EvalOutput, GradOutput, GradVariant, UpdateRule};
+use crate::model_meta::{BakedHyperparams, Layer, LayerKind, Manifest, ModelInfo, StateEntry};
+use anyhow::Result;
+use std::path::Path;
+
+const IMG: usize = 32;
+const CH: usize = 3;
+const D: usize = IMG * IMG * CH; // 3072
+const H1: usize = 96;
+const H2: usize = 96;
+const K: usize = 10;
+const BATCH: usize = 32;
+const BN_EPS: f32 = 1e-5;
+const BN_RHO: f32 = 0.9;
+const TILE: usize = 1024;
+
+// Packed parameter offsets (layer order is the manifest contract).
+const O_W1: usize = 0;
+const O_G1: usize = O_W1 + D * H1;
+const O_B1: usize = O_G1 + H1;
+const O_W2: usize = O_B1 + H1;
+const O_G2: usize = O_W2 + H1 * H2;
+const O_B2: usize = O_G2 + H2;
+const O_W3: usize = O_B2 + H2;
+const O_B3: usize = O_W3 + H2 * K;
+const PARAMS: usize = O_B3 + K;
+const PADDED: usize = (PARAMS + TILE - 1) / TILE * TILE;
+const STATES: usize = 2 * H1 + 2 * H2;
+
+/// The stub model's manifest — the same packed-buffer contract the AOT
+/// artifacts publish, for a model the Rust process can execute itself.
+pub fn stub_manifest() -> Manifest {
+    let layer = |name: &str, kind: LayerKind, shape: Vec<usize>, offset: usize, skip: bool| Layer {
+        name: name.to_string(),
+        kind,
+        size: shape.iter().product(),
+        shape,
+        offset,
+        lars_skip: skip,
+    };
+    let state = |name: &str, size: usize, offset: usize| StateEntry {
+        name: name.to_string(),
+        size,
+        offset,
+    };
+    Manifest {
+        model: ModelInfo {
+            name: "stub_mlp".to_string(),
+            num_classes: K,
+            image_size: IMG,
+            channels: CH,
+        },
+        train: BakedHyperparams {
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            lars_eta: 0.02,
+            lars_eps: 1e-9,
+            label_smoothing: 0.1,
+            batch_size: BATCH,
+        },
+        param_count: PARAMS,
+        padded_param_count: PADDED,
+        state_count: STATES,
+        pallas_tile: TILE,
+        layers: vec![
+            layer("fc1.w", LayerKind::FcW, vec![D, H1], O_W1, false),
+            layer("fc1.bn.gamma", LayerKind::BnGamma, vec![H1], O_G1, true),
+            layer("fc1.bn.beta", LayerKind::BnBeta, vec![H1], O_B1, true),
+            layer("fc2.w", LayerKind::FcW, vec![H1, H2], O_W2, false),
+            layer("fc2.bn.gamma", LayerKind::BnGamma, vec![H2], O_G2, true),
+            layer("fc2.bn.beta", LayerKind::BnBeta, vec![H2], O_B2, true),
+            layer("fc3.w", LayerKind::FcW, vec![H2, K], O_W3, false),
+            layer("fc3.b", LayerKind::FcB, vec![K], O_B3, true),
+        ],
+        states: vec![
+            state("fc1.bn.mean", H1, 0),
+            state("fc1.bn.var", H1, H1),
+            state("fc2.bn.mean", H2, 2 * H1),
+            state("fc2.bn.var", H2, 2 * H1 + H2),
+        ],
+    }
+}
+
+pub struct Engine {
+    manifest: Manifest,
+    pub compile_stats: CompileStats,
+}
+
+impl Engine {
+    /// Backend-agnostic entry point; the stub has nothing to load, so the
+    /// directory is ignored and construction always succeeds.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        let manifest = stub_manifest();
+        debug_assert!(manifest.validate().is_ok());
+        Ok(Engine { manifest, compile_stats: CompileStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run fwd+bwd on one per-worker micro-batch.
+    pub fn grad_step(
+        &self,
+        variant: GradVariant,
+        params: &[f32],
+        bn_state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<GradOutput> {
+        let m = &self.manifest;
+        check_len("params", params.len(), m.padded_param_count)?;
+        check_len("bn_state", bn_state.len(), m.state_count)?;
+        check_len("images", images.len(), BATCH * D)?;
+        check_len("labels", labels.len(), BATCH)?;
+        let smoothing = match variant {
+            GradVariant::Smoothed => m.train.label_smoothing as f32,
+            GradVariant::NoSmoothing => 0.0,
+        };
+
+        let (w1, g1, b1) = (&params[O_W1..O_G1], &params[O_G1..O_B1], &params[O_B1..O_W2]);
+        let (w2, g2, b2) = (&params[O_W2..O_G2], &params[O_G2..O_B2], &params[O_B2..O_W3]);
+        let (w3, b3) = (&params[O_W3..O_B3], &params[O_B3..PARAMS]);
+
+        // ---- forward -------------------------------------------------
+        let mut z1 = vec![0.0f32; BATCH * H1];
+        matmul(images, w1, &mut z1, BATCH, D, H1);
+        let mut bn1 = BnFwd::new(H1);
+        let mut xh1 = vec![0.0f32; BATCH * H1];
+        let mut a1 = vec![0.0f32; BATCH * H1];
+        bn1.forward(&z1, g1, b1, BATCH, &mut xh1, &mut a1);
+        let r1: Vec<f32> = a1.iter().map(|&v| v.max(0.0)).collect();
+
+        let mut z2 = vec![0.0f32; BATCH * H2];
+        matmul(&r1, w2, &mut z2, BATCH, H1, H2);
+        let mut bn2 = BnFwd::new(H2);
+        let mut xh2 = vec![0.0f32; BATCH * H2];
+        let mut a2 = vec![0.0f32; BATCH * H2];
+        bn2.forward(&z2, g2, b2, BATCH, &mut xh2, &mut a2);
+        let r2: Vec<f32> = a2.iter().map(|&v| v.max(0.0)).collect();
+
+        let mut logits = vec![0.0f32; BATCH * K];
+        matmul(&r2, w3, &mut logits, BATCH, H2, K);
+        for row in logits.chunks_exact_mut(K) {
+            for (l, bias) in row.iter_mut().zip(b3) {
+                *l += bias;
+            }
+        }
+
+        let mut dlogits = vec![0.0f32; BATCH * K];
+        let (loss, correct) = softmax_ce(&logits, labels, smoothing, &mut dlogits);
+
+        // ---- backward ------------------------------------------------
+        let mut grads = vec![0.0f32; m.padded_param_count];
+        // fc3
+        matmul_xt_dy(&r2, &dlogits, &mut grads[O_W3..O_B3], BATCH, H2, K);
+        col_sums(&dlogits, &mut grads[O_B3..PARAMS], BATCH, K);
+        let mut dr2 = vec![0.0f32; BATCH * H2];
+        matmul_dy_wt(&dlogits, w3, &mut dr2, BATCH, H2, K);
+        // relu2 + bn2
+        let da2: Vec<f32> = dr2.iter().zip(&a2).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
+        let mut dz2 = vec![0.0f32; BATCH * H2];
+        {
+            let (dgamma, dbeta) = grads_pair(&mut grads, O_G2, O_B2, H2);
+            bn2.backward(&da2, &xh2, g2, BATCH, &mut dz2, dgamma, dbeta);
+        }
+        // fc2
+        matmul_xt_dy(&r1, &dz2, &mut grads[O_W2..O_G2], BATCH, H1, H2);
+        let mut dr1 = vec![0.0f32; BATCH * H1];
+        matmul_dy_wt(&dz2, w2, &mut dr1, BATCH, H1, H2);
+        // relu1 + bn1
+        let da1: Vec<f32> = dr1.iter().zip(&a1).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
+        let mut dz1 = vec![0.0f32; BATCH * H1];
+        {
+            let (dgamma, dbeta) = grads_pair(&mut grads, O_G1, O_B1, H1);
+            bn1.backward(&da1, &xh1, g1, BATCH, &mut dz1, dgamma, dbeta);
+        }
+        // fc1
+        matmul_xt_dy(images, &dz1, &mut grads[O_W1..O_G1], BATCH, D, H1);
+
+        // ---- BN running statistics (EMA of batch moments) ------------
+        let mut new_state = bn_state.to_vec();
+        ema(&mut new_state[0..H1], &bn1.mu);
+        ema(&mut new_state[H1..2 * H1], &bn1.var);
+        ema(&mut new_state[2 * H1..2 * H1 + H2], &bn2.mu);
+        ema(&mut new_state[2 * H1 + H2..STATES], &bn2.var);
+
+        Ok(GradOutput { loss, correct, grads, new_state })
+    }
+
+    /// Apply the master-weight update. LARS trust ratio per layer with the
+    /// manifest's eta/eps/wd; skip layers (BN params, fc bias) use ratio 1
+    /// and no weight decay, matching the artifact kernels.
+    pub fn update(
+        &self,
+        rule: UpdateRule,
+        params: &[f32],
+        momentum: &[f32],
+        grads: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        check_len("params", params.len(), m.padded_param_count)?;
+        check_len("momentum", momentum.len(), m.padded_param_count)?;
+        check_len("grads", grads.len(), m.padded_param_count)?;
+        let t = &m.train;
+        // Padding lanes pass through untouched (the real kernel masks them).
+        let mut new_p = params.to_vec();
+        let mut new_m = momentum.to_vec();
+        for l in &m.layers {
+            let (lo, hi) = (l.offset, l.offset + l.size);
+            let (ratio, with_wd) = if l.lars_skip {
+                (1.0f64, false)
+            } else {
+                match rule {
+                    UpdateRule::Sgd => (1.0, true),
+                    UpdateRule::Lars | UpdateRule::LarsPerLayer => {
+                        let wn = l2_norm(&params[lo..hi]);
+                        let gn = l2_norm(&grads[lo..hi]);
+                        let r = if wn > 0.0 {
+                            t.lars_eta * wn / (gn + t.weight_decay * wn + t.lars_eps)
+                        } else {
+                            1.0
+                        };
+                        (r, true)
+                    }
+                }
+            };
+            for i in lo..hi {
+                let w = params[i] as f64;
+                let g = grads[i] as f64;
+                let d = if with_wd { g + t.weight_decay * w } else { g };
+                let m2 = t.momentum * momentum[i] as f64 + ratio * d;
+                new_m[i] = m2 as f32;
+                new_p[i] = (w - lr as f64 * m2) as f32;
+            }
+        }
+        Ok((new_p, new_m))
+    }
+
+    /// Inference with RUNNING BN statistics (this is where bn_state
+    /// actually matters). Plain CE loss, no smoothing.
+    pub fn eval(
+        &self,
+        params: &[f32],
+        bn_state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalOutput> {
+        let m = &self.manifest;
+        check_len("params", params.len(), m.padded_param_count)?;
+        check_len("bn_state", bn_state.len(), m.state_count)?;
+        check_len("images", images.len(), BATCH * D)?;
+        check_len("labels", labels.len(), BATCH)?;
+        let (w1, g1, b1) = (&params[O_W1..O_G1], &params[O_G1..O_B1], &params[O_B1..O_W2]);
+        let (w2, g2, b2) = (&params[O_W2..O_G2], &params[O_G2..O_B2], &params[O_B2..O_W3]);
+        let (w3, b3) = (&params[O_W3..O_B3], &params[O_B3..PARAMS]);
+        let (rm1, rv1) = (&bn_state[0..H1], &bn_state[H1..2 * H1]);
+        let (rm2, rv2) = (&bn_state[2 * H1..2 * H1 + H2], &bn_state[2 * H1 + H2..STATES]);
+
+        let mut z1 = vec![0.0f32; BATCH * H1];
+        matmul(images, w1, &mut z1, BATCH, D, H1);
+        let r1 = bn_inference_relu(&z1, g1, b1, rm1, rv1, BATCH, H1);
+        let mut z2 = vec![0.0f32; BATCH * H2];
+        matmul(&r1, w2, &mut z2, BATCH, H1, H2);
+        let r2 = bn_inference_relu(&z2, g2, b2, rm2, rv2, BATCH, H2);
+        let mut logits = vec![0.0f32; BATCH * K];
+        matmul(&r2, w3, &mut logits, BATCH, H2, K);
+        for row in logits.chunks_exact_mut(K) {
+            for (l, bias) in row.iter_mut().zip(b3) {
+                *l += bias;
+            }
+        }
+        let mut scratch = vec![0.0f32; BATCH * K];
+        let (loss, correct) = softmax_ce(&logits, labels, 0.0, &mut scratch);
+        Ok(EvalOutput { loss, correct })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Math helpers (fixed iteration order — all results bit-deterministic)
+// ---------------------------------------------------------------------
+
+/// out[b, j] = Σ_d x[b, d] · w[d, j]   (k-outer loop; inner j autovectorizes)
+fn matmul(x: &[f32], w: &[f32], out: &mut [f32], bsz: usize, din: usize, dout: usize) {
+    debug_assert_eq!(x.len(), bsz * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(out.len(), bsz * dout);
+    out.fill(0.0);
+    for b in 0..bsz {
+        let xr = &x[b * din..(b + 1) * din];
+        let or = &mut out[b * dout..(b + 1) * dout];
+        for (xv, wrow) in xr.iter().zip(w.chunks_exact(dout)) {
+            for (o, wv) in or.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// dw[d, j] = Σ_b x[b, d] · dy[b, j]
+fn matmul_xt_dy(x: &[f32], dy: &[f32], dw: &mut [f32], bsz: usize, din: usize, dout: usize) {
+    debug_assert_eq!(dw.len(), din * dout);
+    dw.fill(0.0);
+    for b in 0..bsz {
+        let xr = &x[b * din..(b + 1) * din];
+        let dyr = &dy[b * dout..(b + 1) * dout];
+        for (xv, wrow) in xr.iter().zip(dw.chunks_exact_mut(dout)) {
+            for (o, dv) in wrow.iter_mut().zip(dyr) {
+                *o += xv * dv;
+            }
+        }
+    }
+}
+
+/// dx[b, i] = Σ_j dy[b, j] · w[i, j]
+fn matmul_dy_wt(dy: &[f32], w: &[f32], dx: &mut [f32], bsz: usize, din: usize, dout: usize) {
+    debug_assert_eq!(dx.len(), bsz * din);
+    for b in 0..bsz {
+        let dyr = &dy[b * dout..(b + 1) * dout];
+        let dxr = &mut dx[b * din..(b + 1) * din];
+        for (o, wrow) in dxr.iter_mut().zip(w.chunks_exact(dout)) {
+            *o = dyr.iter().zip(wrow).map(|(d, wv)| d * wv).sum();
+        }
+    }
+}
+
+fn col_sums(x: &[f32], out: &mut [f32], bsz: usize, dout: usize) {
+    out.fill(0.0);
+    for row in x.chunks_exact(dout).take(bsz) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// Training-mode batch norm: batch moments + normalized activations,
+/// keeping what backward needs.
+struct BnFwd {
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    istd: Vec<f32>,
+}
+
+impl BnFwd {
+    fn new(h: usize) -> BnFwd {
+        BnFwd { mu: vec![0.0; h], var: vec![0.0; h], istd: vec![0.0; h] }
+    }
+
+    fn forward(
+        &mut self,
+        z: &[f32],
+        gamma: &[f32],
+        beta: &[f32],
+        bsz: usize,
+        xh: &mut [f32],
+        a: &mut [f32],
+    ) {
+        let h = self.mu.len();
+        let inv_b = 1.0 / bsz as f32;
+        for j in 0..h {
+            let mut s = 0.0f32;
+            for b in 0..bsz {
+                s += z[b * h + j];
+            }
+            self.mu[j] = s * inv_b;
+        }
+        for j in 0..h {
+            let mut s = 0.0f32;
+            for b in 0..bsz {
+                let d = z[b * h + j] - self.mu[j];
+                s += d * d;
+            }
+            self.var[j] = s * inv_b;
+            self.istd[j] = 1.0 / (self.var[j] + BN_EPS).sqrt();
+        }
+        for b in 0..bsz {
+            for j in 0..h {
+                let x = (z[b * h + j] - self.mu[j]) * self.istd[j];
+                xh[b * h + j] = x;
+                a[b * h + j] = gamma[j] * x + beta[j];
+            }
+        }
+    }
+
+    /// Standard BN backward through batch statistics:
+    /// dz = γ/σ · (da − mean(da) − x̂ · mean(da·x̂))
+    fn backward(
+        &self,
+        da: &[f32],
+        xh: &[f32],
+        gamma: &[f32],
+        bsz: usize,
+        dz: &mut [f32],
+        dgamma: &mut [f32],
+        dbeta: &mut [f32],
+    ) {
+        let h = self.mu.len();
+        let inv_b = 1.0 / bsz as f32;
+        for j in 0..h {
+            let mut sd = 0.0f32;
+            let mut sdx = 0.0f32;
+            for b in 0..bsz {
+                let v = da[b * h + j];
+                sd += v;
+                sdx += v * xh[b * h + j];
+            }
+            dbeta[j] = sd;
+            dgamma[j] = sdx;
+            let mean_d = sd * inv_b;
+            let mean_dx = sdx * inv_b;
+            let gi = gamma[j] * self.istd[j];
+            for b in 0..bsz {
+                dz[b * h + j] = gi * (da[b * h + j] - mean_d - xh[b * h + j] * mean_dx);
+            }
+        }
+    }
+}
+
+/// Inference-mode BN (+ReLU) with running statistics.
+fn bn_inference_relu(
+    z: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rmean: &[f32],
+    rvar: &[f32],
+    bsz: usize,
+    h: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; bsz * h];
+    for b in 0..bsz {
+        for j in 0..h {
+            let istd = 1.0 / (rvar[j] + BN_EPS).sqrt();
+            let a = gamma[j] * (z[b * h + j] - rmean[j]) * istd + beta[j];
+            out[b * h + j] = a.max(0.0);
+        }
+    }
+    out
+}
+
+/// Label-smoothed softmax cross-entropy. Returns (mean loss, correct
+/// count) and writes dL/dlogits = (p − q)/B into `dlogits`.
+fn softmax_ce(logits: &[f32], labels: &[i32], smoothing: f32, dlogits: &mut [f32]) -> (f32, f32) {
+    let bsz = labels.len();
+    let k = logits.len() / bsz;
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    for b in 0..bsz {
+        let row = &logits[b * k..(b + 1) * k];
+        let drow = &mut dlogits[b * k..(b + 1) * k];
+        let mut mx = row[0];
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                arg = j;
+            }
+        }
+        let lbl = labels[b] as usize;
+        if arg == lbl {
+            correct += 1.0;
+        }
+        let mut denom = 0.0f32;
+        for (d, &v) in drow.iter_mut().zip(row) {
+            let e = (v - mx).exp();
+            *d = e;
+            denom += e;
+        }
+        let log_denom = denom.ln();
+        let uniform = smoothing / k as f32;
+        for j in 0..k {
+            let q = uniform + if j == lbl { 1.0 - smoothing } else { 0.0 };
+            let logp = (row[j] - mx) - log_denom;
+            loss_sum -= q * logp;
+            drow[j] = drow[j] / denom - q;
+        }
+    }
+    let inv_b = 1.0 / bsz as f32;
+    for d in dlogits.iter_mut() {
+        *d *= inv_b;
+    }
+    (loss_sum * inv_b, correct)
+}
+
+fn ema(state: &mut [f32], batch: &[f32]) {
+    for (s, &b) in state.iter_mut().zip(batch) {
+        *s = BN_RHO * *s + (1.0 - BN_RHO) * b;
+    }
+}
+
+fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt()
+}
+
+/// Disjoint (dgamma, dbeta) slices out of the packed grads buffer.
+fn grads_pair(grads: &mut [f32], lo_g: usize, lo_b: usize, h: usize) -> (&mut [f32], &mut [f32]) {
+    debug_assert_eq!(lo_g + h, lo_b);
+    let (head, tail) = grads.split_at_mut(lo_b);
+    (&mut head[lo_g..], &mut tail[..h])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::load(Path::new("unused")).unwrap()
+    }
+
+    fn inputs(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let m = stub_manifest();
+        let params = crate::init::parallel_seed_init(&m, seed);
+        let state = crate::init::init_bn_state(&m);
+        let images: Vec<f32> =
+            (0..BATCH * D).map(|i| ((i % 89) as f32 / 89.0 - 0.5) * 1.5).collect();
+        let labels: Vec<i32> = (0..BATCH).map(|i| (i % K) as i32).collect();
+        (params, state, images, labels)
+    }
+
+    #[test]
+    fn manifest_is_valid_and_buckets_build() {
+        let m = stub_manifest();
+        m.validate().unwrap();
+        assert_eq!(m.param_count, 305_482);
+        assert_eq!(m.padded_param_count, 306_176);
+        assert_eq!(m.state_count, 384);
+        // The default 16 KiB fp16 bucket target must split the model into
+        // more than one bucket (the concurrent-bucket path needs >1).
+        let plan = crate::bucket::BucketPlan::build(&m, 16 * 1024, 2);
+        plan.validate(&m).unwrap();
+        assert!(plan.buckets.len() >= 2, "got {} buckets", plan.buckets.len());
+    }
+
+    #[test]
+    fn grad_step_is_deterministic_and_finite() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(7);
+        let a = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        let b = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.grads, b.grads);
+        assert!(a.loss.is_finite() && a.loss > 0.0);
+        assert!(a.grads.iter().all(|g| g.is_finite()));
+        assert_eq!(a.grads.len(), PADDED);
+        assert!(a.grads[PARAMS..].iter().all(|&g| g == 0.0), "padding grads must stay zero");
+    }
+
+    #[test]
+    fn every_layer_receives_gradient() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(11);
+        let out = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        for l in &e.manifest.layers {
+            let g = &out.grads[l.offset..l.offset + l.size];
+            assert!(
+                g.iter().any(|&v| v != 0.0),
+                "layer {} got an all-zero gradient",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn smoothing_changes_loss_not_argmax() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(13);
+        let sm = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        let ns = e.grad_step(GradVariant::NoSmoothing, &params, &state, &images, &labels).unwrap();
+        assert_ne!(sm.loss, ns.loss);
+        assert_eq!(sm.correct, ns.correct);
+    }
+
+    #[test]
+    fn grads_do_not_depend_on_running_stats() {
+        // Training-mode BN uses batch statistics; the running-stats input
+        // must only affect new_state, never the gradients (this is what
+        // lets BnStatsMode::Local/Mean share a weight trajectory).
+        let e = engine();
+        let (params, state, images, labels) = inputs(17);
+        let mut other_state = state.clone();
+        for v in other_state.iter_mut() {
+            *v += 0.37;
+        }
+        let a = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        let b = e.grad_step(GradVariant::Smoothed, &params, &other_state, &images, &labels).unwrap();
+        assert_eq!(a.grads, b.grads);
+        assert_eq!(a.loss, b.loss);
+        assert_ne!(a.new_state, b.new_state);
+    }
+
+    #[test]
+    fn update_rules_behave() {
+        let e = engine();
+        let (params, _, _, _) = inputs(19);
+        let momentum = vec![0.0f32; PADDED];
+        let grads: Vec<f32> =
+            (0..PADDED).map(|i| if i < PARAMS { ((i % 23) as f32 - 11.0) * 1e-3 } else { 0.0 }).collect();
+        let (lars_p, lars_m) = e.update(UpdateRule::Lars, &params, &momentum, &grads, 0.5).unwrap();
+        let (sgd_p, _) = e.update(UpdateRule::Sgd, &params, &momentum, &grads, 0.5).unwrap();
+        let (pl_p, pl_m) =
+            e.update(UpdateRule::LarsPerLayer, &params, &momentum, &grads, 0.5).unwrap();
+        assert_ne!(lars_p, sgd_p, "LARS must differ from SGD");
+        assert_eq!(lars_p, pl_p, "per-layer LARS is numerically identical");
+        assert_eq!(lars_m, pl_m);
+        // Padding passes through untouched.
+        assert_eq!(&lars_p[PARAMS..], &params[PARAMS..]);
+        assert_eq!(&lars_m[PARAMS..], &momentum[PARAMS..]);
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(23);
+        let a = e.eval(&params, &state, &images, &labels).unwrap();
+        assert!(a.loss.is_finite());
+        assert!((0.0..=BATCH as f32).contains(&a.correct));
+        let mut shifted = state.clone();
+        for v in shifted.iter_mut() {
+            *v += 1.0;
+        }
+        let b = e.eval(&params, &shifted, &images, &labels).unwrap();
+        assert_ne!(a.loss, b.loss, "running stats must affect inference");
+    }
+
+    #[test]
+    fn new_state_moves_toward_batch_moments() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(29);
+        let out = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        assert_ne!(out.new_state, state);
+        // EMA with rho=0.9 from zeros: |new_mean| <= 0.1 * |batch stat|,
+        // so the state stays bounded by plausible activation scales.
+        assert!(out.new_state.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_wrong_lengths() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(31);
+        assert!(e.grad_step(GradVariant::Smoothed, &params[1..], &state, &images, &labels).is_err());
+        assert!(e.grad_step(GradVariant::Smoothed, &params, &state[1..], &images, &labels).is_err());
+        assert!(e.eval(&params, &state, &images[1..], &labels).is_err());
+        assert!(e.update(UpdateRule::Lars, &params, &params[1..], &params, 0.1).is_err());
+    }
+}

@@ -126,6 +126,32 @@ pub fn bucketed_allreduce_time(
     bucket_bytes.iter().map(|&b| allreduce_time(spec, algo, p, b)).sum()
 }
 
+/// Critical-path time for a bucketed exchange over `channels` concurrent
+/// communication lanes (several communicators / CommEngine lanes sharing
+/// the fabric): greedy list scheduling in bucket order, makespan of the
+/// busiest lane. `channels = 1` equals [`bucketed_allreduce_time`].
+///
+/// This deliberately models LANES, not extra bandwidth: each bucket still
+/// pays its full α–β cost; concurrency only overlaps independent buckets,
+/// which is exactly what the coordinator's concurrent bucket reduction
+/// does on real hardware with per-lane network resources.
+pub fn concurrent_bucketed_allreduce_time(
+    spec: &ClusterSpec,
+    algo: Algorithm,
+    p: usize,
+    bucket_bytes: &[f64],
+    channels: usize,
+) -> f64 {
+    let mut lane_busy = vec![0.0f64; channels.max(1)];
+    for &b in bucket_bytes {
+        let lane = (0..lane_busy.len())
+            .min_by(|&a, &c| lane_busy[a].partial_cmp(&lane_busy[c]).unwrap())
+            .unwrap();
+        lane_busy[lane] += allreduce_time(spec, algo, p, b);
+    }
+    lane_busy.into_iter().fold(0.0, f64::max)
+}
+
 /// One training step under the paper's overlap scheme.
 #[derive(Debug, Clone, Copy)]
 pub struct StepModel {
@@ -318,6 +344,28 @@ mod tests {
         let t_pl = bucketed_allreduce_time(&s, Algorithm::Ring, p, &per_layer);
         let t_b = bucketed_allreduce_time(&s, Algorithm::Ring, p, &bucketed);
         assert!(t_b < t_pl, "bucketed {t_b} vs per-layer {t_pl}");
+    }
+
+    #[test]
+    fn concurrent_lanes_cut_makespan_without_free_bandwidth() {
+        let s = ClusterSpec::abci();
+        let buckets = vec![6.4e6; 8];
+        let serial = bucketed_allreduce_time(&s, Algorithm::Ring, 64, &buckets);
+        let one = concurrent_bucketed_allreduce_time(&s, Algorithm::Ring, 64, &buckets, 1);
+        assert!((serial - one).abs() < 1e-12, "1 lane must equal the serial sum");
+        let two = concurrent_bucketed_allreduce_time(&s, Algorithm::Ring, 64, &buckets, 2);
+        assert!((two - serial / 2.0).abs() < 1e-9, "8 equal buckets over 2 lanes halve");
+        // Lanes beyond the bucket count stop helping: floor is the
+        // single-bucket time, never less.
+        let many = concurrent_bucketed_allreduce_time(&s, Algorithm::Ring, 64, &buckets, 64);
+        let single = allreduce_time(&s, Algorithm::Ring, 64, 6.4e6);
+        assert!((many - single).abs() < 1e-12);
+        let mut prev = serial;
+        for ch in [2, 3, 4, 8, 16] {
+            let t = concurrent_bucketed_allreduce_time(&s, Algorithm::Ring, 64, &buckets, ch);
+            assert!(t <= prev + 1e-12, "{ch} lanes regressed");
+            prev = t;
+        }
     }
 
     #[test]

@@ -88,6 +88,39 @@ pub fn decode_slice(src: &[u16], dst: &mut [f32]) {
     }
 }
 
+/// Elements per cache block for the fused wire kernels: 4 KiB of f32
+/// source + 4 KiB of f32 destination sit comfortably in L1 alongside the
+/// stack, and the fixed trip count lets the autovectorizer unroll the
+/// inner loop without a scalar prologue on the hot path.
+const FUSE_BLOCK: usize = 1024;
+
+/// Fused fp16-wire transfer: `out[i] = decode(encode(src[i]))` in one
+/// cache-blocked pass — the single-kernel replacement for the old
+/// encode-to-scratch + decode-from-scratch dance in the collective `Wire`.
+/// Per-element math is exactly `f16_bits_to_f32(f32_to_f16_bits(x))`, so
+/// results are bit-identical to the two-pass formulation (regression test
+/// below) while touching each cache line once and allocating nothing.
+pub fn encode_copy(src: &[f32], out: &mut [f32]) {
+    assert_eq!(src.len(), out.len());
+    for (s_blk, o_blk) in src.chunks(FUSE_BLOCK).zip(out.chunks_mut(FUSE_BLOCK)) {
+        for (o, &s) in o_blk.iter_mut().zip(s_blk.iter()) {
+            *o = f16_bits_to_f32(f32_to_f16_bits(s));
+        }
+    }
+}
+
+/// Fused fp16-wire reduce: `out[i] += decode(encode(src[i]))` in one
+/// cache-blocked pass — quantize-and-accumulate with no scratch buffer.
+/// Bit-identical to encode_slice + decode-and-add (regression test below).
+pub fn encode_add(src: &[f32], out: &mut [f32]) {
+    assert_eq!(src.len(), out.len());
+    for (s_blk, o_blk) in src.chunks(FUSE_BLOCK).zip(out.chunks_mut(FUSE_BLOCK)) {
+        for (o, &s) in o_blk.iter_mut().zip(s_blk.iter()) {
+            *o += f16_bits_to_f32(f32_to_f16_bits(s));
+        }
+    }
+}
+
 /// Round-trip an fp32 buffer through fp16 in place — what the wire does to
 /// a gradient bucket. Returns the max absolute quantization error.
 pub fn quantize_inplace(buf: &mut [f32]) -> f32 {
@@ -192,6 +225,90 @@ mod tests {
             x *= 1.037;
         }
         assert!(worst <= 2.0f32.powi(-11), "worst rel err {worst}");
+    }
+
+    /// Deterministic value mix covering normals, subnormals, zeros, huge
+    /// (overflowing) magnitudes and exact-f16 values, at an awkward length
+    /// that exercises the partial tail block of the fused kernels.
+    fn kernel_test_buf(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n)
+            .map(|i| match i % 7 {
+                0 => (rng.next_f64() as f32 - 0.5) * 2.0,
+                1 => (rng.next_f64() as f32) * 1e-6, // subnormal-range after quantize
+                2 => 0.0,
+                3 => -(rng.next_f64() as f32) * 1e5, // overflows f16 sometimes
+                4 => rng.next_f64() as f32 * 65504.0,
+                5 => 1.0,
+                _ => (rng.next_f64() as f32 - 0.5) * 1e-2,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_encode_copy_matches_two_pass() {
+        let src = kernel_test_buf(FUSE_BLOCK * 3 + 117, 0xC0FE);
+        // Two-pass reference: encode to scratch, decode out (the old wire).
+        let mut enc = Vec::new();
+        encode_slice(&src, &mut enc);
+        let mut want = vec![0.0f32; src.len()];
+        decode_slice(&enc, &mut want);
+        let mut got = vec![0.0f32; src.len()];
+        encode_copy(&src, &mut got);
+        assert_eq!(got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   want.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fused_encode_add_matches_two_pass() {
+        let src = kernel_test_buf(FUSE_BLOCK * 2 + 31, 0xADD);
+        let acc0 = kernel_test_buf(src.len(), 0xACC);
+        // Two-pass reference: encode to scratch, then decode-and-add.
+        let mut enc = Vec::new();
+        encode_slice(&src, &mut enc);
+        let mut want = acc0.clone();
+        for (o, &h) in want.iter_mut().zip(enc.iter()) {
+            *o += f16_bits_to_f32(h);
+        }
+        let mut got = acc0;
+        encode_add(&src, &mut got);
+        assert_eq!(got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   want.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fused_kernels_exhaustive_over_f16_space() {
+        // Every decodable f16 value, pushed through the fused kernels: the
+        // copy must be a fixed point and add-into-zero must equal the copy.
+        let src: Vec<f32> = (0u16..=0xffff)
+            .filter(|h| (h >> 10) & 0x1f != 0x1f) // finite only
+            .map(f16_bits_to_f32)
+            .collect();
+        let mut copied = vec![0.0f32; src.len()];
+        encode_copy(&src, &mut copied);
+        let mut added = vec![0.0f32; src.len()];
+        encode_add(&src, &mut added);
+        for i in 0..src.len() {
+            assert_eq!(copied[i].to_bits(), src[i].to_bits(), "copy not fixed point at {i}");
+            // IEEE: (+0) + x == x bitwise for every finite x except -0.0,
+            // where the sum is +0.0 — compare against exactly that.
+            assert_eq!(
+                added[i].to_bits(),
+                (0.0f32 + src[i]).to_bits(),
+                "add-into-zero differs at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_kernels_empty_and_single() {
+        encode_copy(&[], &mut []);
+        encode_add(&[], &mut []);
+        let mut out = [1.0f32];
+        encode_copy(&[2.5], &mut out);
+        assert_eq!(out[0], 2.5);
+        encode_add(&[0.5], &mut out);
+        assert_eq!(out[0], 3.0);
     }
 
     #[test]

@@ -130,6 +130,48 @@ fn sequential_and_threaded_agree_bitwise() {
 }
 
 #[test]
+fn comm_thread_budget_does_not_change_bits() {
+    // The allreduce engine's reduction order is fixed by the algorithm,
+    // so any comm_threads setting (serial, per-bucket lanes, threaded
+    // transfers) must yield bit-identical training trajectories.
+    let mut baseline = {
+        let mut cfg = quick_cfg();
+        cfg.workers = 4;
+        cfg.comm_threads = 1;
+        Trainer::new(cfg, engine()).unwrap()
+    };
+    for _ in 0..3 {
+        baseline.step().unwrap();
+    }
+    for comm_threads in [2, 4, 8] {
+        let mut cfg = quick_cfg();
+        cfg.workers = 4;
+        cfg.comm_threads = comm_threads;
+        let mut t = Trainer::new(cfg, engine()).unwrap();
+        for _ in 0..3 {
+            t.step().unwrap();
+        }
+        assert_eq!(
+            baseline.params(),
+            t.params(),
+            "comm_threads={comm_threads} diverged from serial comm"
+        );
+    }
+}
+
+#[test]
+fn comm_engine_reports_throughput_in_training() {
+    let mut t = Trainer::new(quick_cfg(), engine()).unwrap();
+    for _ in 0..2 {
+        t.step().unwrap();
+    }
+    let totals = t.wire_totals();
+    assert!(totals.total_bytes > 0);
+    assert!(totals.elapsed_s > 0.0, "engine must report wall-clock");
+    assert!(totals.effective_gbps() > 0.0);
+}
+
+#[test]
 fn wire_precision_changes_but_tracks_f32() {
     let mut cfg16 = quick_cfg();
     cfg16.wire = "f16".into();

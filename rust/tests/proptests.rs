@@ -6,7 +6,7 @@
 //! reproducible).
 
 use yasgd::bucket::BucketPlan;
-use yasgd::collective::{allreduce_mean, Algorithm, Precision};
+use yasgd::collective::{allreduce_mean, Algorithm, CommEngine, Precision};
 use yasgd::model_meta::Manifest;
 use yasgd::schedule::{Decay, LrSchedule};
 use yasgd::util::fp16;
@@ -121,6 +121,87 @@ fn prop_allreduce_all_ranks_bit_identical() {
                 r + 1
             );
         }
+    }
+}
+
+#[test]
+fn prop_comm_engine_bit_identical_to_reference() {
+    // The threaded zero-copy engine must reproduce the reference
+    // allreduce bit-for-bit for random (algo, precision, p, n, threads),
+    // including reuse of one engine across differently-shaped calls.
+    let mut rng = Rng::new(0xE7617E);
+    for case in 0..CASES {
+        let p = 2 + rng.below(15) as usize;
+        let algo = match rng.below(4) {
+            0 => Algorithm::Naive,
+            1 => Algorithm::Ring,
+            2 => Algorithm::HalvingDoubling,
+            _ => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
+        };
+        let precision = if rng.below(2) == 0 { Precision::F32 } else { Precision::F16 };
+        let threads = 1 + rng.below(4) as usize;
+        let mut engine = CommEngine::new(algo, precision, threads);
+        for shape in 0..3 {
+            let n = rng.below(2500) as usize;
+            let bufs: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect())
+                .collect();
+            let mut want = bufs.clone();
+            let ref_stats = allreduce_mean(&mut want, algo, precision);
+            let mut got = bufs;
+            let eng_stats = engine.allreduce_mean_vecs(&mut got);
+            for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                let gb: Vec<u32> = g.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    gb, wb,
+                    "case {case} shape {shape}: algo {} precision {precision:?} p={p} n={n} threads={threads} rank {r}",
+                    algo.name()
+                );
+            }
+            assert_eq!(eng_stats.total_bytes, ref_stats.total_bytes, "case {case} bytes");
+            assert_eq!(eng_stats.messages, ref_stats.messages, "case {case} messages");
+            assert_eq!(eng_stats.rounds, ref_stats.rounds, "case {case} rounds");
+            assert_eq!(
+                eng_stats.max_bytes_per_rank, ref_stats.max_bytes_per_rank,
+                "case {case} max/rank"
+            );
+            assert_eq!(
+                eng_stats.internode_bytes, ref_stats.internode_bytes,
+                "case {case} internode"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fused_wire_kernels_match_two_pass_codec() {
+    // The fused encode_add/encode_copy kernels must be bit-identical to
+    // encode-to-scratch + decode(+add) for arbitrary value mixes.
+    let mut rng = Rng::new(0xF05ED);
+    for case in 0..CASES {
+        let n = rng.below(5000) as usize;
+        let scale = 10f32.powi(rng.below(10) as i32 - 5); // 1e-5 .. 1e4
+        let src: Vec<f32> =
+            (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * scale).collect();
+        let acc: Vec<f32> = (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect();
+
+        let mut enc = Vec::new();
+        fp16::encode_slice(&src, &mut enc);
+        let mut want_copy = vec![0.0f32; n];
+        fp16::decode_slice(&enc, &mut want_copy);
+        let mut got_copy = vec![0.0f32; n];
+        fp16::encode_copy(&src, &mut got_copy);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&got_copy), bits(&want_copy), "case {case}: encode_copy");
+
+        let mut want_add = acc.clone();
+        for (o, &h) in want_add.iter_mut().zip(enc.iter()) {
+            *o += fp16::f16_bits_to_f32(h);
+        }
+        let mut got_add = acc;
+        fp16::encode_add(&src, &mut got_add);
+        assert_eq!(bits(&got_add), bits(&want_add), "case {case}: encode_add");
     }
 }
 

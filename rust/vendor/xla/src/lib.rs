@@ -1,0 +1,105 @@
+//! Typed placeholder for the `xla` PJRT binding.
+//!
+//! The `pjrt` feature of yasgd compiles the real PJRT runtime against this
+//! API surface. Offline images carry no XLA shared library, so this
+//! placeholder keeps the feature *compilable* everywhere and fails fast —
+//! with an actionable message — at `PjRtClient::cpu()`. To run the real
+//! artifacts, override the `xla` path dependency in Cargo.toml with an
+//! actual binding exposing this same surface (the subset of
+//! xla_extension-style bindings yasgd uses).
+
+use std::path::Path;
+
+/// Opaque error; yasgd converts it via `Debug` formatting.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+const UNAVAILABLE: &str =
+    "xla placeholder backend: no PJRT client available in this build; \
+     override the `xla` path dependency with a real binding (see Cargo.toml) \
+     or build without --features pjrt to use the stub engine";
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types that can cross the Literal boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u16 {}
+impl NativeType for u8 {}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    pub fn len(&self) -> usize {
+        0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        true
+    }
+}

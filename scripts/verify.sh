@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify: release build + quiet test run (offline, stub engine).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+cargo build --release
+cargo test -q
