@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench artifacts clean
+.PHONY: verify build test fmt clippy bench bench-pipeline artifacts clean
 
 verify: build test
 
@@ -22,6 +22,10 @@ clippy:
 
 bench:
 	$(CARGO) bench --bench comm
+
+# Pipelined vs sequential executor headline numbers -> BENCH_pipeline.json
+bench-pipeline:
+	$(CARGO) bench --bench pipeline
 
 # AOT-lower the JAX/Pallas graphs to HLO text + manifest (PJRT path only).
 artifacts:

@@ -33,7 +33,7 @@ fn run(engine: Arc<Engine>, name: &str, f: impl FnOnce(&mut RunConfig)) -> (Stri
     let mut tr = Trainer::new(cfg, engine).unwrap();
     tr.threaded = true;
     let rep = tr.train().unwrap();
-    (name.to_string(), rep.final_val_acc, rep.final_train_loss)
+    (name.to_string(), rep.final_val_acc.unwrap_or(f32::NAN), rep.final_train_loss)
 }
 
 fn main() {

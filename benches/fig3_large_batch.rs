@@ -35,16 +35,17 @@ fn main() {
         let mut tr = Trainer::new(cfg, engine.clone()).unwrap();
         tr.threaded = true;
         let rep = tr.train().unwrap();
+        let val_acc = rep.final_val_acc.unwrap_or(f32::NAN);
         t.row(&[
             format!("{global}"),
             format!("{steps}"),
-            format!("{:.4}", rep.final_val_acc),
+            format!("{val_acc:.4}"),
             format!("{:.4}", rep.final_train_loss),
         ]);
         rows.push(Json::obj(vec![
             ("global_batch", Json::Num(global as f64)),
             ("updates", Json::Num(steps as f64)),
-            ("val_acc", Json::Num(rep.final_val_acc as f64)),
+            ("val_acc", Json::Num(val_acc as f64)),
         ]));
     }
     println!("Fig 3 regeneration (fixed {budget}-sample budget):\n");

@@ -1,0 +1,139 @@
+//! Pipelined vs sequential step executor: throughput, exposed-comm
+//! fraction, and the simulator calibration loop (measured trace → overlap
+//! replay + α–β fit). Writes the headline numbers to BENCH_pipeline.json
+//! (repo root) to seed the perf trajectory, plus the usual raw dump under
+//! bench_results/pipeline.json.
+
+use std::sync::Arc;
+use std::time::Instant;
+use yasgd::benchkit::{dump_results, Table};
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::runtime::Engine;
+use yasgd::simnet::fit_alpha_beta;
+use yasgd::util::json::Json;
+
+fn bench_cfg() -> RunConfig {
+    RunConfig {
+        workers: 4,
+        grad_accum: 1,
+        total_steps: 1, // steps are driven manually below
+        eval_every: 0,
+        train_size: 2048,
+        val_size: 256,
+        comm_threads: 2,
+        // Small buckets -> several buckets -> real overlap opportunity.
+        bucket_bytes: 4 * 1024,
+        wire: "f16".into(),
+        allreduce: "hier".into(),
+        ..RunConfig::default()
+    }
+}
+
+/// Drive `steps` steps and return images/sec (plus the trainer for
+/// post-hoc inspection of breakdown/trace).
+fn run(mut trainer: Trainer, warmup: usize, steps: usize) -> (f64, Trainer) {
+    for _ in 0..warmup {
+        trainer.step().unwrap();
+    }
+    let per_step = trainer.global_batch();
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        trainer.step().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    ((steps * per_step) as f64 / elapsed, trainer)
+}
+
+fn main() {
+    let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("engine load"));
+    let warmup = 3;
+    let steps = 25;
+
+    // ---- sequential reference (threaded grad phase, barrier comm) -------
+    let mut seq_cfg = bench_cfg();
+    seq_cfg.overlap = false;
+    let mut seq_trainer = Trainer::new(seq_cfg, engine.clone()).unwrap();
+    seq_trainer.threaded = true;
+    let (seq_ips, seq_trainer) = run(seq_trainer, warmup, steps);
+
+    // ---- pipelined executor ---------------------------------------------
+    let pipe_cfg = bench_cfg();
+    let pipe_trainer = Trainer::new(pipe_cfg, engine).unwrap();
+    assert!(pipe_trainer.pipeline, "stub engine must support the pipeline");
+    let (pipe_ips, pipe_trainer) = run(pipe_trainer, warmup, steps);
+
+    let speedup = if seq_ips > 0.0 { pipe_ips / seq_ips } else { 0.0 };
+    let bd = &pipe_trainer.breakdown;
+    let comm_total = bd.comm_s.mean() * bd.comm_s.count() as f64;
+    let exposed_total = bd.comm_exposed_s.mean() * bd.comm_exposed_s.count() as f64;
+    let exposed_frac = if comm_total > 0.0 { exposed_total / comm_total } else { 0.0 };
+
+    println!("== pipelined vs sequential executor ==");
+    let mut t = Table::new(&["executor", "img/s", "comm exposed", "overlap eff"]);
+    let seq_bd = &seq_trainer.breakdown;
+    t.row(&[
+        "sequential".into(),
+        format!("{seq_ips:.1}"),
+        "100.0%".into(),
+        format!("{:.1}%", seq_bd.overlap_efficiency() * 100.0),
+    ]);
+    t.row(&[
+        "pipelined".into(),
+        format!("{pipe_ips:.1}"),
+        format!("{:.1}%", exposed_frac * 100.0),
+        format!("{:.1}%", bd.overlap_efficiency() * 100.0),
+    ]);
+    println!("{}", t.render());
+    println!("speedup: {speedup:.2}x (pipelined over sequential)\n");
+
+    // ---- calibration loop: measured trace → overlap replay + α–β fit ----
+    let trace = pipe_trainer.pipeline_trace().expect("pipelined trace").clone();
+    let measured = trace.report();
+    let replay = trace.replay(pipe_trainer.cfg.comm_threads);
+    println!("== calibration: measured pipeline vs overlap simulator ==");
+    println!(
+        "measured: step span {:.3} ms, hidden {:.1}%  |  replay: step span {:.3} ms, hidden {:.1}%",
+        measured.step_span_s * 1e3,
+        measured.hidden_frac * 100.0,
+        replay.step_span_s * 1e3,
+        replay.hidden_frac * 100.0
+    );
+    let plan = pipe_trainer.bucket_plan();
+    let samples: Vec<(f64, f64)> = (0..plan.buckets.len())
+        .map(|i| {
+            let (lo, hi) = plan.span_with_padding(i);
+            let bytes = ((hi - lo) * plan.bytes_per_elem) as f64;
+            let (s, e) = trace.comm_spans[i];
+            (bytes, e - s)
+        })
+        .collect();
+    match fit_alpha_beta(&samples) {
+        Some(link) => println!(
+            "α–β fit of measured per-bucket allreduces: α = {:.2} µs, β = {:.3} GB/s",
+            link.latency_s * 1e6,
+            link.bandwidth_bps / 1e9
+        ),
+        None => println!("α–β fit: samples degenerate (timings noise-dominated)"),
+    }
+
+    // ---- result files -----------------------------------------------------
+    let headline = Json::obj(vec![
+        ("sequential_images_per_sec", Json::Num(seq_ips)),
+        ("pipelined_images_per_sec", Json::Num(pipe_ips)),
+        ("pipelined_speedup", Json::Num(speedup)),
+        ("exposed_comm_frac", Json::Num(exposed_frac)),
+        ("overlap_efficiency", Json::Num(bd.overlap_efficiency())),
+        ("measured_hidden_frac", Json::Num(measured.hidden_frac)),
+        ("replay_hidden_frac", Json::Num(replay.hidden_frac)),
+        ("buckets", Json::Num(plan.buckets.len() as f64)),
+        ("workers", Json::Num(pipe_trainer.cfg.workers as f64)),
+        ("comm_threads", Json::Num(pipe_trainer.cfg.comm_threads as f64)),
+        ("steps", Json::Num(steps as f64)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", headline.to_string_pretty())
+        .expect("writing BENCH_pipeline.json");
+    println!("\nwrote BENCH_pipeline.json");
+    let path = dump_results("pipeline", &headline).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -53,7 +53,7 @@ fn main() -> Result<()> {
         let mut t = Trainer::new(cfg, engine.clone())?;
         t.threaded = true;
         let report = t.train()?;
-        let va = report.final_val_acc;
+        let va = report.final_val_acc.unwrap_or(f32::NAN);
         println!(
             "{:>12} {:>8} {:>8} {:>10.4} {:>10.4}",
             global_batch, accum, steps, va, report.final_train_loss

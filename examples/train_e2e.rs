@@ -74,7 +74,8 @@ fn main() -> Result<()> {
     );
     println!(
         "final train_loss={:.4} val_acc={:.4}",
-        report.final_train_loss, report.final_val_acc
+        report.final_train_loss,
+        report.final_val_acc.unwrap_or(f32::NAN)
     );
     println!("step breakdown:\n{}", trainer.breakdown.report());
     println!(

@@ -132,6 +132,13 @@ impl BucketPlan {
         }
     }
 
+    /// Every bucket's span (with padding attached), in readiness order —
+    /// the exact tiling of `[0, padded_param_count)` the pipelined
+    /// executor publishes and reduces against.
+    pub fn spans_with_padding(&self) -> Vec<(usize, usize)> {
+        (0..self.buckets.len()).map(|i| self.span_with_padding(i)).collect()
+    }
+
     /// Structural invariants; used by tests and debug assertions.
     pub fn validate(&self, manifest: &Manifest) -> anyhow::Result<()> {
         let nl = manifest.layers.len();

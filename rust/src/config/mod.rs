@@ -44,6 +44,12 @@ pub struct RunConfig {
     /// Results are bit-identical at every setting (the reduction order is
     /// fixed by the algorithm, not by thread arrival).
     pub comm_threads: usize,
+    /// Run the PIPELINED step executor (paper III-C-2): a persistent
+    /// worker pool streams gradient buckets in backward-readiness order
+    /// and each bucket's allreduce + master update runs while later
+    /// buckets are still being computed. `false` (or `--no-overlap`)
+    /// falls back to the barrier-sequential reference executor. The two
+    /// are bit-identical — this flag trades wall-clock, never numerics.
     pub overlap: bool,
     /// Synthetic dataset size (images per epoch) and noise.
     pub train_size: usize,

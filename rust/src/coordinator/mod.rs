@@ -1,42 +1,50 @@
 //! The L3 coordinator: data-parallel training orchestration.
 //!
-//! This is the paper's *system* contribution assembled into one loop.
-//! Per step:
+//! This is the paper's *system* contribution assembled into one loop, with
+//! TWO step executors behind one `Trainer::step()`:
 //!
-//! 1. every worker runs the AOT `grad_step` executable on its own shard
-//!    micro-batch(es) (grad accumulation reaches arbitrarily large global
-//!    batches with a fixed-shape artifact);
-//! 2. gradients are exchanged bucket-by-bucket in backward-readiness order
-//!    (bucket::BucketPlan, paper III-C-1/2) with a REAL numeric allreduce
-//!    over the configured algorithm and wire precision (fp16 on the wire,
-//!    paper IV). Buckets are split-borrowed straight out of each worker's
-//!    packed gradient buffer (zero copies) and reduced concurrently across
-//!    persistent `collective::CommEngine` lanes — independent buckets
-//!    overlap on the wall clock exactly the way the paper overlaps
-//!    per-group allreduces;
-//! 3. the leader applies the LARS/momentum update via the `update_lars`
-//!    artifact — whose body is the L1 batched-norms + fused-update Pallas
-//!    kernels (paper III-A-1, III-B-2);
-//! 4. BN running statistics are either kept process-local (the paper's
-//!    default, III-A-2) or mean-synced.
+//! * **Pipelined** (`cfg.overlap = true`, the default; `pipeline.rs` +
+//!   `worker_pool.rs`) — the paper's III-C-2 scheme executed for real: a
+//!   PERSISTENT worker pool (grad workers + comm lanes living for the
+//!   whole run, fed per step over channels) where each worker streams
+//!   gradient buckets in backward-readiness order through the engine's
+//!   `grad_step_streamed` API, a per-bucket readiness ledger triggers each
+//!   bucket's allreduce the moment all workers published it — while later
+//!   buckets are still being computed — and the leader streams the
+//!   LARS/momentum update per bucket as reductions land. Communication
+//!   genuinely hides behind backward; `StepBreakdown` accounts the
+//!   exposed-vs-hidden split and `Trainer::pipeline_trace` hands the
+//!   measured timeline to `overlap::MeasuredPipeline` for simulator
+//!   calibration.
+//! * **Sequential** (`cfg.overlap = false`, and the PJRT backend) — the
+//!   barrier reference: full grad phase, then bucketed allreduce
+//!   (split-borrowed spans over concurrent `CommEngine` lanes), then a
+//!   whole-buffer update. This is the numerical contract; the pipelined
+//!   executor is REQUIRED (and grid-tested in `rust/tests/pipeline.rs`)
+//!   to reproduce it bit-for-bit at every (workers, lanes, accum,
+//!   precision, algorithm) point — reduction order is fixed by the bucket
+//!   plan and the collective's schedule, never by thread arrival.
 //!
-//! Workers are in-process ranks. `threaded = true` runs them on real OS
-//! threads against the shared PJRT engine; either mode is bit-identical
-//! because the collective's reduction order is fixed by the algorithm,
-//! not by thread arrival (determinism test in rust/tests).
+//! Both executors share phases 1/4: per-worker gradients with
+//! accumulation (fixed-shape artifact, paper III-B), and the BN
+//! running-statistics policy (paper III-A-2).
 
 use crate::bucket::BucketPlan;
-use crate::collective::{CommEngine, WireStats};
+use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
 use crate::config::RunConfig;
 use crate::data::{make_batch, Batch, DataConfig, Shard, Split, Synthetic};
 use crate::init;
 use crate::metrics::{StepBreakdown, Throughput, Timer};
 use crate::mlperf::{tags, MlperfLogger};
+use crate::overlap::MeasuredPipeline;
 use crate::runtime::{Engine, GradVariant, UpdateRule};
 use crate::schedule::LrSchedule;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::sync::Arc;
+
+mod pipeline;
+mod worker_pool;
 
 /// How BN running statistics are combined across workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,10 +75,17 @@ pub struct TrainReport {
     pub elapsed_s: f64,
     pub images_per_sec: f64,
     pub final_train_loss: f32,
-    pub final_val_acc: f32,
+    /// Accuracy of the last evaluation, `None` when no eval ever ran — a
+    /// run without one must not masquerade as 0% accuracy.
+    pub final_val_acc: Option<f32>,
     pub loss_history: Vec<f32>,
     pub evals: Vec<EvalPoint>,
     pub wire_totals: WireStats,
+    /// Total comm wall-clock NOT hidden behind backward across the run
+    /// (sequential executor: the whole comm phase every step).
+    pub comm_exposed_total_s: f64,
+    /// 1 − exposed/active comm, see `StepBreakdown::overlap_efficiency`.
+    pub overlap_efficiency: f64,
     pub mlperf_elapsed_s: Option<f64>,
 }
 
@@ -82,7 +97,13 @@ impl TrainReport {
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("images_per_sec", Json::Num(self.images_per_sec)),
             ("final_train_loss", Json::Num(self.final_train_loss as f64)),
-            ("final_val_acc", Json::Num(self.final_val_acc as f64)),
+            (
+                "final_val_acc",
+                match self.final_val_acc {
+                    Some(v) => Json::Num(v as f64),
+                    None => Json::Null,
+                },
+            ),
             (
                 "loss_history",
                 Json::arr_f64(&self.loss_history.iter().map(|&x| x as f64).collect::<Vec<_>>()),
@@ -111,6 +132,8 @@ impl TrainReport {
             // clock when buckets reduce concurrently) + derived rate.
             ("wire_comm_active_s", Json::Num(self.wire_totals.elapsed_s)),
             ("wire_effective_gbps", Json::Num(self.wire_totals.effective_gbps())),
+            ("comm_exposed_total_s", Json::Num(self.comm_exposed_total_s)),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
         ])
     }
 }
@@ -122,10 +145,19 @@ pub struct Trainer {
     data: Arc<Synthetic>,
     shards: Vec<Shard>,
     plan: BucketPlan,
+    /// `plan.spans_with_padding()`, shared with pool threads every step.
+    bucket_spans: Arc<Vec<(usize, usize)>>,
+    algo: Algorithm,
+    precision: Precision,
     schedule: LrSchedule,
     pub logger: MlperfLogger,
     pub bn_mode: BnStatsMode,
+    /// Sequential executor only: run the grad phase on scoped threads.
+    /// (The pipelined executor always runs on the persistent pool.)
     pub threaded: bool,
+    /// Use the pipelined streaming executor (`cfg.overlap` ∧ backend
+    /// support). Public so tests/benches can force either executor.
+    pub pipeline: bool,
     /// Smith et al. ("Don't Decay the Learning Rate, Increase the Batch
     /// Size") baseline: when set, the per-step gradient-accumulation count
     /// follows the ramp instead of cfg.grad_accum. Related-work row of
@@ -141,10 +173,18 @@ pub struct Trainer {
     worker_grads: Vec<Vec<f32>>,
     worker_states: Vec<Vec<f32>>,
     batches: Vec<Batch>,
-    /// Persistent allreduce engines, one per concurrent bucket lane; the
-    /// chunk plans they cache make the steady-state comm phase free of
-    /// heap allocation and buffer copies.
+    /// Persistent allreduce engines for the SEQUENTIAL executor, one per
+    /// concurrent bucket lane; the chunk plans they cache make the
+    /// steady-state comm phase free of heap allocation and buffer copies.
+    /// Built lazily on the first sequential step (the pipelined executor's
+    /// lanes own their engines inside the pool).
     comm: Vec<CommEngine>,
+    /// Persistent worker runtime for the pipelined executor; spun up
+    /// lazily on the first pipelined step.
+    pool: Option<worker_pool::WorkerPool>,
+    /// Measured timeline of the most recent pipelined step — the
+    /// calibration hook for `overlap`/`simnet`.
+    last_pipeline: Option<MeasuredPipeline>,
 
     pub breakdown: StepBreakdown,
     wire_totals: WireStats,
@@ -172,12 +212,6 @@ impl Trainer {
         let algo = cfg.algorithm()?;
         let plan = BucketPlan::build(m, cfg.bucket_bytes, precision.bytes_per_elem());
         plan.validate(m)?;
-        // Thread budget: up to `comm_threads` bucket lanes; leftover
-        // budget parallelizes transfers inside each lane's allreduce.
-        let lanes = cfg.comm_threads.min(plan.buckets.len()).max(1);
-        let threads_per_lane = (cfg.comm_threads / lanes).max(1);
-        let comm: Vec<CommEngine> =
-            (0..lanes).map(|_| CommEngine::new(algo, precision, threads_per_lane)).collect();
         let schedule = cfg.schedule();
         let logger = MlperfLogger::new("yasgd/coordinator.rs", cfg.mlperf_echo);
 
@@ -192,16 +226,22 @@ impl Trainer {
         let np = m.padded_param_count;
         let sc = m.state_count;
         let workers = cfg.workers;
+        let bucket_spans = Arc::new(plan.spans_with_padding());
+        let pipeline = cfg.overlap && engine.supports_pipeline();
         Ok(Trainer {
             cfg,
             engine,
             data,
             shards,
             plan,
+            bucket_spans,
+            algo,
+            precision,
             schedule,
             logger,
             bn_mode: BnStatsMode::Local,
             threaded: false,
+            pipeline,
             batch_ramp: None,
             params,
             momentum,
@@ -211,7 +251,9 @@ impl Trainer {
             batches: (0..workers)
                 .map(|_| Batch { images: Vec::new(), labels: Vec::new() })
                 .collect(),
-            comm,
+            comm: Vec::new(),
+            pool: None,
+            last_pipeline: None,
             breakdown: StepBreakdown::default(),
             wire_totals: WireStats::default(),
             images_seen: 0,
@@ -261,20 +303,38 @@ impl Trainer {
         self.images_seen as f64 / self.cfg.train_size as f64
     }
 
+    /// Measured timeline of the most recent pipelined step (None until a
+    /// pipelined step ran) — feed it to `overlap::MeasuredPipeline::replay`
+    /// / `simnet::fit_alpha_beta` to calibrate the simulators.
+    pub fn pipeline_trace(&self) -> Option<&MeasuredPipeline> {
+        self.last_pipeline.as_ref()
+    }
+
+    /// Split the `comm_threads` budget into (bucket lanes, threads per
+    /// lane): up to one lane per bucket, leftover budget parallelizing
+    /// transfers inside each lane's allreduce. The ONE sizing rule both
+    /// executors share, so they can never silently diverge.
+    pub(crate) fn comm_lane_split(&self) -> (usize, usize) {
+        let lanes = self.cfg.comm_threads.min(self.plan.buckets.len()).max(1);
+        (lanes, (self.cfg.comm_threads / lanes).max(1))
+    }
+
     /// Run one optimization step. Returns (mean loss, train accuracy).
+    ///
+    /// Dispatches to the pipelined streaming executor (`self.pipeline`,
+    /// the default) or the sequential barrier reference — bit-identical by
+    /// contract, so flipping the flag changes wall-clock only.
     pub fn step(&mut self) -> Result<(f32, f32)> {
-        let m = self.engine.manifest();
-        let b = m.train.batch_size;
+        let b = self.engine.manifest().train.batch_size;
         let variant = if self.cfg.label_smoothing {
             GradVariant::Smoothed
         } else {
             GradVariant::NoSmoothing
         };
 
-        // ---- phase 1: per-worker gradients (with accumulation) ----------
+        // ---- phase 0: draw sample indices (shards are stateful) ---------
         let accum = self.accum_at(self.step_idx);
         let t_data = Timer::start();
-        // Pre-draw all sample indices (shards are stateful).
         let mut all_idxs: Vec<Vec<Vec<usize>>> = Vec::with_capacity(self.cfg.workers);
         for w in 0..self.cfg.workers {
             let mut per_micro = Vec::with_capacity(accum);
@@ -285,12 +345,42 @@ impl Trainer {
         }
         t_data.stop_into(&mut self.breakdown.data_s);
 
-        let t_grad = Timer::start();
         let accum_inv = 1.0f32 / accum as f32;
-        let (loss_sum, correct_sum) = if self.threaded && self.cfg.workers > 1 {
-            self.grad_phase_threaded(variant, &all_idxs, accum_inv)?
+        let (loss_sum, correct_sum) = if self.pipeline {
+            self.step_pipelined(variant, &all_idxs, accum_inv)?
         } else {
-            self.grad_phase_sequential(variant, &all_idxs, accum_inv)?
+            self.step_sequential(variant, &all_idxs, accum_inv)?
+        };
+
+        self.images_seen += (self.cfg.workers * accum * b) as u64;
+        self.step_idx += 1;
+
+        let denom = (self.cfg.workers * accum) as f32;
+        Ok((loss_sum / denom, correct_sum / (denom * b as f32)))
+    }
+
+    /// The barrier reference executor: grad phase, then comm, then a
+    /// whole-buffer update. Returns (Σ loss, Σ correct) over workers.
+    fn step_sequential(
+        &mut self,
+        variant: GradVariant,
+        all_idxs: &[Vec<Vec<usize>>],
+        accum_inv: f32,
+    ) -> Result<(f32, f32)> {
+        // Lane engines, built on first use (pipelined trainers never do).
+        if self.comm.is_empty() {
+            let (lanes, threads_per_lane) = self.comm_lane_split();
+            self.comm = (0..lanes)
+                .map(|_| CommEngine::new(self.algo, self.precision, threads_per_lane))
+                .collect();
+        }
+
+        // ---- phase 1: per-worker gradients (with accumulation) ----------
+        let t_grad = Timer::start();
+        let (loss_sum, correct_sum) = if self.threaded && self.cfg.workers > 1 {
+            self.grad_phase_threaded(variant, all_idxs, accum_inv)?
+        } else {
+            self.grad_phase_sequential(variant, all_idxs, accum_inv)?
         };
         t_grad.stop_into(&mut self.breakdown.grad_s);
 
@@ -348,7 +438,10 @@ impl Trainer {
         for stats in all_stats.iter().flatten() {
             self.wire_totals.merge(stats);
         }
-        t_comm.stop_into(&mut self.breakdown.comm_s);
+        let comm_wall = t_comm.stop_into(&mut self.breakdown.comm_s);
+        // Barrier executor: every comm second extends the step (nothing
+        // overlaps backward), so the whole phase is exposed.
+        self.breakdown.comm_exposed_s.push(comm_wall);
 
         // ---- phase 3: master update (LARS via L1 kernels) -----------------
         let t_up = Timer::start();
@@ -358,8 +451,17 @@ impl Trainer {
             self.engine.update(rule, &self.params, &self.momentum, &self.worker_grads[0], lr)?;
         self.params = new_p;
         self.momentum = new_m;
+        // Outside the update timer so `update_s` means the same thing in
+        // both executors (pure master update, no BN bookkeeping).
+        t_up.stop_into(&mut self.breakdown.update_s);
+        self.apply_bn_policy();
 
-        // ---- BN statistics policy (paper III-A-2) -------------------------
+        Ok((loss_sum, correct_sum))
+    }
+
+    /// BN statistics policy (paper III-A-2): worker-local (adopt worker
+    /// 0's) or mean-synced. Shared by both executors.
+    fn apply_bn_policy(&mut self) {
         match self.bn_mode {
             BnStatsMode::Local => self.bn_state.copy_from_slice(&self.worker_states[0]),
             BnStatsMode::Mean => {
@@ -369,15 +471,6 @@ impl Trainer {
                 }
             }
         }
-        t_up.stop_into(&mut self.breakdown.update_s);
-
-        self.images_seen += (self.cfg.workers * accum * b) as u64;
-        self.step_idx += 1;
-
-        let denom = (self.cfg.workers * accum) as f32;
-        let loss = loss_sum / denom;
-        let acc = correct_sum / (denom * b as f32);
-        Ok((loss, acc))
     }
 
     fn grad_phase_sequential(
@@ -477,20 +570,28 @@ impl Trainer {
         self.bn_state.copy_from_slice(&ckpt.bn_state);
         self.step_idx = ckpt.step;
         // Fast-forward the data shards so resumed runs draw the batches the
-        // uninterrupted run would have drawn.
+        // uninterrupted run would have drawn. Each replayed step consumes
+        // THAT step's accumulation count — under an active `batch_ramp`
+        // that is `accum_at(s)`, not `cfg.grad_accum` (set the ramp BEFORE
+        // restoring, or the replay diverges from the uninterrupted run) —
+        // and `images_seen` accumulates the per-step global batch the same
+        // way.
         for w in 0..self.cfg.workers {
             self.shards[w] =
                 crate::data::Shard::new(w, self.cfg.workers, self.cfg.train_size, self.cfg.seed);
         }
         let b = m.train.batch_size;
-        for _ in 0..ckpt.step {
+        let mut images = 0u64;
+        for s in 0..ckpt.step {
+            let accum = self.accum_at(s);
             for shard in self.shards.iter_mut() {
-                for _ in 0..self.cfg.grad_accum {
+                for _ in 0..accum {
                     shard.next_batch(b);
                 }
             }
+            images += (self.cfg.workers * accum * b) as u64;
         }
-        self.images_seen = (ckpt.step * self.global_batch()) as u64;
+        self.images_seen = images;
         Ok(())
     }
 
@@ -576,16 +677,19 @@ impl Trainer {
         self.logger.log(tags::RUN_FINAL);
         let elapsed = run_timer.elapsed_s();
         let tp = Throughput { images: self.images_seen, seconds: elapsed };
+        let exposed = &self.breakdown.comm_exposed_s;
         Ok(TrainReport {
             steps: self.cfg.total_steps,
             global_batch: self.global_batch(),
             elapsed_s: elapsed,
             images_per_sec: tp.images_per_sec(),
             final_train_loss: last_train.0,
-            final_val_acc: evals.last().map(|e| e.val_acc).unwrap_or(0.0),
+            final_val_acc: evals.last().map(|e| e.val_acc),
             loss_history,
             evals,
             wire_totals: self.wire_totals.clone(),
+            comm_exposed_total_s: exposed.mean() * exposed.count() as f64,
+            overlap_efficiency: self.breakdown.overlap_efficiency(),
             mlperf_elapsed_s: self.logger.run_elapsed_s(),
         })
     }

@@ -1,0 +1,200 @@
+//! The pipelined step executor (paper III-C-2, for real this time).
+//!
+//! `Trainer::step_pipelined` drives one optimization step through the
+//! persistent [`worker_pool`](super::worker_pool): grad workers stream
+//! bucket publications in backward-readiness order, comm lanes reduce each
+//! bucket the moment every worker has published it (while later buckets
+//! are still being computed), and the leader streams the LARS/SGD master
+//! update per bucket as reductions land — so communication and the update
+//! hide behind the backward pass instead of waiting for a full-buffer
+//! barrier. The sequential path in `coordinator::mod` remains the
+//! reference; the determinism grid test holds this executor to bitwise
+//! equality with it.
+
+use super::worker_pool::{LaneJob, LaneMsg, Ledger, RawBuf, WorkerJob, WorkerPool};
+use super::Trainer;
+use crate::overlap::MeasuredPipeline;
+use crate::runtime::{GradVariant, UpdateRule};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+impl Trainer {
+    /// Spin up the persistent pool on first use (so trainers running the
+    /// sequential executor never spawn it).
+    fn ensure_pool(&mut self) {
+        if self.pool.is_some() {
+            return;
+        }
+        let (lanes, threads_per_lane) = self.comm_lane_split();
+        self.pool = Some(WorkerPool::spawn(
+            self.cfg.workers,
+            lanes,
+            threads_per_lane,
+            self.algo,
+            self.precision,
+            self.engine.clone(),
+            self.data.clone(),
+        ));
+    }
+
+    /// One pipelined step: returns (Σ loss, Σ correct) over workers, like
+    /// the sequential grad phase does.
+    pub(super) fn step_pipelined(
+        &mut self,
+        variant: GradVariant,
+        all_idxs: &[Vec<Vec<usize>>],
+        accum_inv: f32,
+    ) -> Result<(f32, f32)> {
+        self.ensure_pool();
+        let nb = self.bucket_spans.len();
+        let workers = self.cfg.workers;
+        let t0 = Instant::now();
+        let ready = Arc::new(Ledger::new(nb, workers, t0));
+        let reduced = Arc::new(Ledger::new(nb, 1, t0));
+
+        // Shared raw views for this step (see worker_pool safety model).
+        let params_buf = RawBuf::new(&mut self.params);
+        let bn_buf = RawBuf::new(&mut self.bn_state);
+        let grad_bufs: Vec<RawBuf> =
+            self.worker_grads.iter_mut().map(|g| RawBuf::new(g)).collect();
+        let state_bufs: Vec<RawBuf> =
+            self.worker_states.iter_mut().map(|s| RawBuf::new(s)).collect();
+
+        // ---- dispatch: one job per grad worker, one per comm lane ------
+        let pool = self.pool.as_ref().expect("pool just ensured");
+        for w in 0..workers {
+            pool.send_worker(
+                w,
+                WorkerJob {
+                    worker: w,
+                    params: params_buf,
+                    bn_state: bn_buf,
+                    grads: grad_bufs[w],
+                    states: state_bufs[w],
+                    idxs: all_idxs[w].clone(),
+                    accum_inv,
+                    variant,
+                    spans: self.bucket_spans.clone(),
+                    ready: ready.clone(),
+                },
+            );
+        }
+        for l in 0..pool.lanes() {
+            pool.send_lane(
+                l,
+                LaneJob {
+                    grads: grad_bufs.clone(),
+                    spans: self.bucket_spans.clone(),
+                    ready: ready.clone(),
+                    reduced: reduced.clone(),
+                    t0,
+                },
+            );
+        }
+
+        // ---- wait out the grad phase -----------------------------------
+        // Workers publish every bucket before reporting (their failure
+        // guard guarantees it), so once all reports are in, (a) every
+        // bucket is at least READY — comm lanes are never blocked again —
+        // and (b) no worker holds a reference to params/bn_state any more,
+        // which is what makes the streamed parameter writes below plainly
+        // race-free. Early buckets have typically ALREADY been reduced at
+        // this point: their allreduce ran underneath backward — that is
+        // the overlap this executor exists for.
+        let mut worker_results: Vec<Option<(f32, f32)>> = vec![None; workers];
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..workers {
+            let msg = pool.recv_worker();
+            if let Some(e) = msg.error {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("worker {}: {e}", msg.worker));
+                }
+            }
+            worker_results[msg.worker] = Some((msg.loss, msg.correct));
+        }
+
+        // ---- streamed master update (leader) ---------------------------
+        // Applied per bucket as its reduction lands, overlapping the comm
+        // tail: bucket i's layers are updated while later buckets are
+        // still on the wire. Buckets hold whole layers and the layer
+        // kernel is shared with Engine::update, so the stream is
+        // bit-identical to one whole-buffer update. Skipped entirely when
+        // the grad phase failed — params stay at their pre-step values.
+        let lr = self.schedule.lr_at(self.step_idx) as f32;
+        let rule = if self.cfg.lars { UpdateRule::Lars } else { UpdateRule::Sgd };
+        let mut update_active_s = 0.0f64;
+        if first_err.is_none() {
+            for i in 0..nb {
+                reduced.wait(i);
+                let (lo, hi) = self.bucket_spans[i];
+                let tu = Instant::now();
+                // SAFETY: the span is quiescent — bucket i's lane dropped
+                // its views before publishing `reduced` (mutex ordering),
+                // the leader is past the worker barrier above, and other
+                // lanes only touch other buckets' disjoint spans.
+                let g_span = unsafe { grad_bufs[0].slice(lo, hi) };
+                let res = self.engine.update_span(
+                    rule,
+                    &mut self.params[lo..hi],
+                    &mut self.momentum[lo..hi],
+                    g_span,
+                    lo,
+                    &self.plan.buckets[i].layer_indices,
+                    lr,
+                );
+                update_active_s += tu.elapsed().as_secs_f64();
+                if let Err(e) = res {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+
+        // ---- drain the lanes (always fully, even on error: the next step
+        // must find empty result channels and quiescent threads) ---------
+        let mut per_bucket: Vec<Option<LaneMsg>> = (0..nb).map(|_| None).collect();
+        for _ in 0..nb {
+            let msg = pool.recv_lane();
+            per_bucket[msg.bucket] = Some(msg);
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+
+        // ---- accounting -------------------------------------------------
+        // Backward ends when the LAST bucket becomes ready; comm activity
+        // past that point is the exposed tail the step actually pays for.
+        let ready_s = ready.ready_times();
+        let backward_s = ready_s.last().copied().unwrap_or(0.0);
+        let mut comm_active_s = 0.0f64;
+        let mut last_comm_end = 0.0f64;
+        let mut comm_spans = Vec::with_capacity(nb);
+        for (i, slot) in per_bucket.into_iter().enumerate() {
+            let msg = slot.unwrap_or_else(|| panic!("bucket {i} missing its lane report"));
+            comm_active_s += msg.end_s - msg.start_s;
+            last_comm_end = last_comm_end.max(msg.end_s);
+            comm_spans.push((msg.start_s, msg.end_s));
+            self.wire_totals.merge(&msg.stats);
+        }
+        let exposed_s = (last_comm_end - backward_s).max(0.0);
+        self.breakdown.grad_s.push(backward_s);
+        self.breakdown.comm_s.push(comm_active_s);
+        self.breakdown.comm_exposed_s.push(exposed_s);
+        self.breakdown.update_s.push(update_active_s);
+        self.last_pipeline = Some(MeasuredPipeline { backward_s, ready_s, comm_spans });
+
+        // ---- BN statistics policy (threads are quiescent again) --------
+        self.apply_bn_policy();
+
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
+        for (w, r) in worker_results.into_iter().enumerate() {
+            let (l, c) = r.unwrap_or_else(|| panic!("worker {w} missing its report"));
+            loss_sum += l;
+            correct_sum += c;
+        }
+        Ok((loss_sum, correct_sum))
+    }
+}

@@ -1,0 +1,468 @@
+//! The persistent worker runtime behind the pipelined step executor.
+//!
+//! One pool lives for the whole training run (no per-step thread spawns):
+//!
+//! * `workers` GRAD threads, each owning its batch scratch and an
+//!   `Arc<Engine>`/`Arc<Synthetic>`; fed one [`WorkerJob`] per step over a
+//!   private channel. A worker runs its micro-batches, accumulates into
+//!   its packed gradient buffer and — on the final micro-batch — streams
+//!   the engine's backward-order span emissions into the per-bucket
+//!   readiness [`Ledger`].
+//! * `lanes` COMM threads, each owning a persistent `CommEngine` (so chunk
+//!   plans stay cached across steps). Lane `l` handles buckets
+//!   `l, l+lanes, …`: it blocks until ALL workers have published a bucket,
+//!   split-borrows that span out of every worker's gradient buffer,
+//!   reduces it in place, then publishes it to the `reduced` ledger so the
+//!   leader can stream the master update for those layers.
+//!
+//! # Safety model
+//!
+//! Buffers are shared between the leader and the pool as raw pointers
+//! ([`RawBuf`]). Every access is ordered by the ledgers' mutexes, and the
+//! protocol guarantees the usual exclusive-XOR-shared discipline:
+//!
+//! * a worker has EXCLUSIVE access to its own `grads`/`states` buffers
+//!   from job receipt until it publishes a span — and never touches a
+//!   published span again (the engine's streaming contract: emitted spans
+//!   are final, and emission order is monotone back-to-front). Its
+//!   whole-buffer borrows (`fill`, non-final accumulation) all happen
+//!   strictly BEFORE its first publication; after that it only takes
+//!   short-lived borrows of still-unpublished spans;
+//! * a lane takes exclusive access to bucket `i`'s span of every worker's
+//!   grads only after all `workers` publishes of `i` (ledger
+//!   happens-before), and drops it before publishing to `reduced`;
+//! * `params`/`bn_state` are READ-ONLY to the whole pool. The leader
+//!   streams parameter writes only after every worker has sent its
+//!   end-of-step report (channel happens-before), at which point no
+//!   reference into params exists anywhere; it reads worker 0's reduced
+//!   grads span only after `reduced[i]` (mutex happens-before), through a
+//!   raw-derived slice covering exactly the quiescent span while other
+//!   lanes write only other buckets' disjoint spans.
+//!
+//! Reduction order inside a bucket is fixed by the `CommEngine` plan and
+//! the update arithmetic is the engine's layer kernel, so the pipelined
+//! schedule changes WHEN things happen, never what is computed — the
+//! determinism grid test in `rust/tests/pipeline.rs` holds the executor to
+//! bit-identity with the sequential reference at every
+//! (workers, lanes, accum, precision, algorithm) point.
+
+use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
+use crate::data::{make_batch, Batch, Split, Synthetic};
+use crate::runtime::{Engine, GradVariant};
+use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Raw-pointer view of one `f32` buffer owned by the `Trainer`, shareable
+/// with pool threads for the duration of one step.
+///
+/// SAFETY: the leader constructs these from live `&mut [f32]` at step
+/// start, the pointee never moves during a step (no buffer is resized),
+/// and the step protocol (module docs) keeps all concurrent span accesses
+/// disjoint and mutex-ordered. The leader does not return from the step
+/// until every pool thread has sent its end-of-step message, after which
+/// no pointer derived from this step's bufs is dereferenced again.
+#[derive(Clone, Copy)]
+pub(crate) struct RawBuf {
+    ptr: *mut f32,
+    pub(crate) len: usize,
+}
+
+unsafe impl Send for RawBuf {}
+
+impl RawBuf {
+    pub(crate) fn new(buf: &mut [f32]) -> RawBuf {
+        RawBuf { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// SAFETY: caller must ensure no concurrently-living `&mut` overlaps
+    /// `[lo, hi)` (see module docs).
+    pub(crate) unsafe fn slice(&self, lo: usize, hi: usize) -> &[f32] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(lo), hi - lo)
+    }
+
+    /// SAFETY: caller must ensure `[lo, hi)` is not aliased concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+/// Per-step, per-bucket readiness ledger: a counter per bucket plus the
+/// instant it reached `target`. Mutex+condvar (not atomics) on purpose —
+/// publishes are per BUCKET, not per element, so contention is trivial,
+/// and the mutex gives the cross-thread happens-before edges the raw-
+/// pointer safety argument leans on.
+pub(crate) struct Ledger {
+    target: usize,
+    t0: Instant,
+    state: Mutex<LedgerState>,
+    cv: Condvar,
+}
+
+struct LedgerState {
+    counts: Vec<usize>,
+    ready_s: Vec<f64>,
+}
+
+impl Ledger {
+    pub(crate) fn new(buckets: usize, target: usize, t0: Instant) -> Ledger {
+        Ledger {
+            target: target.max(1),
+            t0,
+            state: Mutex::new(LedgerState {
+                counts: vec![0; buckets],
+                ready_s: vec![0.0; buckets],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Record one publication of bucket `i`; stamps the readiness time and
+    /// wakes waiters when the count reaches the target. Lock poisoning is
+    /// deliberately survived (`into_inner`): a panicking peer must not
+    /// convert into a deadlock here — the leader surfaces the failure from
+    /// the end-of-step messages instead.
+    pub(crate) fn publish(&self, i: usize) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.counts[i] += 1;
+        debug_assert!(s.counts[i] <= self.target, "bucket {i} over-published");
+        if s.counts[i] >= self.target {
+            s.ready_s[i] = self.t0.elapsed().as_secs_f64();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until bucket `i` has all its publications; returns the
+    /// readiness instant (seconds from the step's t0).
+    pub(crate) fn wait(&self, i: usize) -> f64 {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while s.counts[i] < self.target {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        s.ready_s[i]
+    }
+
+    /// Readiness instants of all buckets (valid once each reached target).
+    pub(crate) fn ready_times(&self) -> Vec<f64> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).ready_s.clone()
+    }
+}
+
+/// Tracks which buckets this worker has already published and publishes
+/// new ones as the emitted frontier descends. Buckets are stored in
+/// readiness order with strictly descending spans, so in-order publication
+/// is exactly "everything whose span lies at or above the frontier".
+pub(crate) struct BucketCursor {
+    spans: Arc<Vec<(usize, usize)>>,
+    ledger: Arc<Ledger>,
+    next: usize,
+}
+
+impl BucketCursor {
+    pub(crate) fn new(spans: Arc<Vec<(usize, usize)>>, ledger: Arc<Ledger>) -> BucketCursor {
+        BucketCursor { spans, ledger, next: 0 }
+    }
+
+    /// The emitted frontier moved down to `frontier`: publish every not-
+    /// yet-published bucket fully contained in `[frontier, …)`.
+    pub(crate) fn advance(&mut self, frontier: usize) {
+        while self.next < self.spans.len() && self.spans[self.next].0 >= frontier {
+            self.ledger.publish(self.next);
+            self.next += 1;
+        }
+    }
+
+    /// Publish everything left. Called unconditionally after a job (also
+    /// on the error/panic path) so a failed worker can never starve the
+    /// comm lanes into a deadlock — the leader still learns of the failure
+    /// from the end-of-step message and fails the step.
+    pub(crate) fn finish(&mut self) {
+        self.advance(0);
+    }
+}
+
+/// One step's worth of work for one grad worker.
+pub(crate) struct WorkerJob {
+    pub(crate) worker: usize,
+    pub(crate) params: RawBuf,
+    pub(crate) bn_state: RawBuf,
+    pub(crate) grads: RawBuf,
+    pub(crate) states: RawBuf,
+    /// Pre-drawn sample indices, one list per micro-batch.
+    pub(crate) idxs: Vec<Vec<usize>>,
+    pub(crate) accum_inv: f32,
+    pub(crate) variant: GradVariant,
+    pub(crate) spans: Arc<Vec<(usize, usize)>>,
+    pub(crate) ready: Arc<Ledger>,
+}
+
+/// One step's worth of work for one comm lane.
+pub(crate) struct LaneJob {
+    pub(crate) grads: Vec<RawBuf>,
+    pub(crate) spans: Arc<Vec<(usize, usize)>>,
+    pub(crate) ready: Arc<Ledger>,
+    pub(crate) reduced: Arc<Ledger>,
+    pub(crate) t0: Instant,
+}
+
+/// End-of-step report from one grad worker.
+pub(crate) struct WorkerMsg {
+    pub(crate) worker: usize,
+    pub(crate) loss: f32,
+    pub(crate) correct: f32,
+    pub(crate) error: Option<String>,
+}
+
+/// Per-bucket report from a comm lane.
+pub(crate) struct LaneMsg {
+    pub(crate) bucket: usize,
+    pub(crate) stats: WireStats,
+    pub(crate) start_s: f64,
+    pub(crate) end_s: f64,
+}
+
+/// The persistent pool: thread handles plus the per-role channels.
+pub(crate) struct WorkerPool {
+    job_txs: Vec<Sender<WorkerJob>>,
+    lane_txs: Vec<Sender<LaneJob>>,
+    worker_rx: Receiver<WorkerMsg>,
+    lane_rx: Receiver<LaneMsg>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub(crate) fn spawn(
+        workers: usize,
+        lanes: usize,
+        threads_per_lane: usize,
+        algo: Algorithm,
+        precision: Precision,
+        engine: Arc<Engine>,
+        data: Arc<Synthetic>,
+    ) -> WorkerPool {
+        let (worker_tx, worker_rx) = channel();
+        let (lane_tx, lane_rx) = channel();
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut lane_txs = Vec::with_capacity(lanes);
+        let mut handles = Vec::with_capacity(workers + lanes);
+        for w in 0..workers {
+            let (tx, rx) = channel::<WorkerJob>();
+            job_txs.push(tx);
+            let engine = engine.clone();
+            let data = data.clone();
+            let results = worker_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("yasgd-grad-{w}"))
+                    .spawn(move || worker_thread(engine, data, rx, results))
+                    .expect("spawning grad worker thread"),
+            );
+        }
+        for l in 0..lanes {
+            let (tx, rx) = channel::<LaneJob>();
+            lane_txs.push(tx);
+            let results = lane_tx.clone();
+            let comm = CommEngine::new(algo, precision, threads_per_lane);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("yasgd-lane-{l}"))
+                    .spawn(move || lane_thread(l, lanes, comm, rx, results))
+                    .expect("spawning comm lane thread"),
+            );
+        }
+        WorkerPool { job_txs, lane_txs, worker_rx, lane_rx, handles }
+    }
+
+    pub(crate) fn lanes(&self) -> usize {
+        self.lane_txs.len()
+    }
+
+    pub(crate) fn send_worker(&self, w: usize, job: WorkerJob) {
+        self.job_txs[w].send(job).expect("grad worker thread is gone");
+    }
+
+    pub(crate) fn send_lane(&self, l: usize, job: LaneJob) {
+        self.lane_txs[l].send(job).expect("comm lane thread is gone");
+    }
+
+    pub(crate) fn recv_worker(&self) -> WorkerMsg {
+        self.worker_rx.recv().expect("grad worker pool hung up")
+    }
+
+    pub(crate) fn recv_lane(&self) -> LaneMsg {
+        self.lane_rx.recv().expect("comm lane pool hung up")
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels is the shutdown signal; join so no
+        // detached thread outlives the Trainer.
+        self.job_txs.clear();
+        self.lane_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_thread(
+    engine: Arc<Engine>,
+    data: Arc<Synthetic>,
+    jobs: Receiver<WorkerJob>,
+    results: Sender<WorkerMsg>,
+) {
+    let mut batch = Batch { images: Vec::new(), labels: Vec::new() };
+    while let Ok(job) = jobs.recv() {
+        let mut cursor = BucketCursor::new(job.spans.clone(), job.ready.clone());
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_grad_job(&engine, &data, &mut batch, &job, &mut cursor)
+        }));
+        // Whatever happened, every bucket gets published so the lanes (and
+        // through them the leader) always complete the step and can report
+        // the failure instead of deadlocking on it.
+        cursor.finish();
+        let msg = match outcome {
+            Ok(Ok((loss, correct))) => {
+                WorkerMsg { worker: job.worker, loss, correct, error: None }
+            }
+            Ok(Err(e)) => WorkerMsg {
+                worker: job.worker,
+                loss: 0.0,
+                correct: 0.0,
+                error: Some(e.to_string()),
+            },
+            Err(_) => WorkerMsg {
+                worker: job.worker,
+                loss: 0.0,
+                correct: 0.0,
+                error: Some("grad worker panicked".to_string()),
+            },
+        };
+        let _ = results.send(msg);
+    }
+}
+
+/// One worker's grad phase: `accum` micro-batches averaged into its packed
+/// gradient buffer; the FINAL micro-batch streams span-by-span through the
+/// engine's backward-order emission, publishing buckets as their spans
+/// become final. Per-element arithmetic is identical to the sequential
+/// path (`g += d · accum_inv` once per micro-batch, elements independent),
+/// so splitting the accumulation across spans cannot change a single bit.
+fn run_grad_job(
+    engine: &Engine,
+    data: &Synthetic,
+    batch: &mut Batch,
+    job: &WorkerJob,
+    cursor: &mut BucketCursor,
+) -> Result<(f32, f32)> {
+    // SAFETY: params/bn_state are read-only to every pool thread for the
+    // whole grad phase (the leader only rewrites params spans after all
+    // workers published the covering bucket — at which point the engine's
+    // streaming contract says this worker no longer reads them).
+    let params = unsafe { job.params.slice(0, job.params.len) };
+    let bn_state = unsafe { job.bn_state.slice(0, job.bn_state.len) };
+    {
+        // SAFETY: exclusive — nothing is published yet, so no lane touches
+        // any span of this worker's buffer.
+        let grads = unsafe { job.grads.slice_mut(0, job.grads.len) };
+        grads.fill(0.0);
+    }
+    let mut loss_sum = 0.0f32;
+    let mut correct_sum = 0.0f32;
+    let n_micro = job.idxs.len();
+    for (k, idxs) in job.idxs.iter().enumerate() {
+        make_batch(data, Split::Train, idxs, batch);
+        if k + 1 < n_micro {
+            // Non-final micro-batch: whole-buffer accumulate (still fully
+            // pre-publication, so the full-span borrow is exclusive).
+            let out =
+                engine.grad_step(job.variant, params, bn_state, &batch.images, &batch.labels)?;
+            {
+                // SAFETY: exclusive, see above.
+                let grads = unsafe { job.grads.slice_mut(0, job.grads.len) };
+                for (g, d) in grads.iter_mut().zip(out.grads.iter()) {
+                    *g += d * job.accum_inv;
+                }
+            }
+            {
+                // SAFETY: states are this worker's own; the leader reads
+                // them only after the end-of-step message.
+                let states = unsafe { job.states.slice_mut(0, job.states.len) };
+                states.copy_from_slice(&out.new_state);
+            }
+            loss_sum += out.loss;
+            correct_sum += out.correct;
+        } else {
+            // Final micro-batch: stream. Each emitted span is accumulated
+            // through a SHORT-LIVED exclusive borrow that is dropped
+            // before the bucket is published (after which a comm lane may
+            // legitimately alias it).
+            let grads_buf = job.grads;
+            let accum_inv = job.accum_inv;
+            let out = engine.grad_step_streamed(
+                job.variant,
+                params,
+                bn_state,
+                &batch.images,
+                &batch.labels,
+                &mut |lo, hi, src| {
+                    {
+                        // SAFETY: span [lo, hi) is unpublished (the cursor
+                        // only publishes at/above the frontier, and the
+                        // engine emits each span exactly once, descending).
+                        let dst = unsafe { grads_buf.slice_mut(lo, hi) };
+                        for (g, d) in dst.iter_mut().zip(src) {
+                            *g += d * accum_inv;
+                        }
+                    }
+                    cursor.advance(lo);
+                },
+            )?;
+            {
+                // SAFETY: see the states note above.
+                let states = unsafe { job.states.slice_mut(0, job.states.len) };
+                states.copy_from_slice(&out.new_state);
+            }
+            loss_sum += out.loss;
+            correct_sum += out.correct;
+        }
+    }
+    Ok((loss_sum, correct_sum))
+}
+
+fn lane_thread(
+    lane: usize,
+    lanes: usize,
+    mut comm: CommEngine,
+    jobs: Receiver<LaneJob>,
+    results: Sender<LaneMsg>,
+) {
+    while let Ok(job) = jobs.recv() {
+        for i in (lane..job.spans.len()).step_by(lanes.max(1)) {
+            job.ready.wait(i);
+            let (lo, hi) = job.spans[i];
+            let start_s = job.t0.elapsed().as_secs_f64();
+            {
+                // SAFETY: all workers have published bucket i (ledger
+                // happens-before), no other lane owns index i (static
+                // i % lanes assignment), and the leader won't touch the
+                // span until `reduced.publish(i)` below — this lane holds
+                // the only live references to these spans.
+                let mut views: Vec<&mut [f32]> =
+                    job.grads.iter().map(|g| unsafe { g.slice_mut(lo, hi) }).collect();
+                let stats = comm.allreduce_mean(&mut views);
+                drop(views);
+                let end_s = job.t0.elapsed().as_secs_f64();
+                job.reduced.publish(i);
+                let _ = results.send(LaneMsg { bucket: i, stats, start_s, end_s });
+            }
+        }
+    }
+}

@@ -104,10 +104,11 @@ fn train(args: &Args) -> Result<()> {
         "train done: steps={} global_batch={} elapsed={:.2}s ({:.1} img/s)",
         report.steps, report.global_batch, report.elapsed_s, report.images_per_sec
     );
-    println!(
-        "final: train_loss={:.4} val_acc={:.4}",
-        report.final_train_loss, report.final_val_acc
-    );
+    let val_acc = report
+        .final_val_acc
+        .map(|v| format!("{v:.4}"))
+        .unwrap_or_else(|| "n/a".to_string());
+    println!("final: train_loss={:.4} val_acc={val_acc}", report.final_train_loss);
     for e in &report.evals {
         println!(
             "  eval @step {:>4} (epoch {:.1}): train_acc={:.4} val_acc={:.4} val_loss={:.4}",
@@ -121,6 +122,12 @@ fn train(args: &Args) -> Result<()> {
         report.wire_totals.total_bytes as f64 / (1024.0 * 1024.0),
         report.wire_totals.effective_gbps(),
         report.wire_totals.elapsed_s * 1e3
+    );
+    println!(
+        "overlap: {:.1}% of comm hidden behind backward ({:.1} ms exposed total, executor={})",
+        report.overlap_efficiency * 100.0,
+        report.comm_exposed_total_s * 1e3,
+        if trainer.pipeline { "pipelined" } else { "sequential" }
     );
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_json().to_string_pretty())?;

@@ -80,16 +80,38 @@ impl Timer {
 
 /// Per-phase timing breakdown of a training step — the profile that the
 /// §Perf optimization loop reads.
+///
+/// Communication is accounted twice, deliberately:
+/// * `comm_s` — engine-ACTIVE seconds per step (sum over buckets; exceeds
+///   any wall-clock interval when buckets reduce on concurrent lanes);
+/// * `comm_exposed_s` — wall-clock the comm tail extends the step past the
+///   end of backward. Under the pipelined executor this is the only comm
+///   the step actually *pays for*; the sequential executor exposes its
+///   whole comm phase (nothing overlaps backward there).
 #[derive(Debug, Clone, Default)]
 pub struct StepBreakdown {
     pub data_s: Summary,
     pub grad_s: Summary,
     pub comm_s: Summary,
+    /// Comm wall-clock NOT hidden behind backward (see struct docs).
+    pub comm_exposed_s: Summary,
     pub update_s: Summary,
     pub step_s: Summary,
 }
 
 impl StepBreakdown {
+    /// Fraction of communication activity hidden under backward across the
+    /// run: `1 − Σ exposed / Σ comm`, clamped to [0, 1]. Reports 1.0 when
+    /// no communication was recorded (nothing to hide).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let total = self.comm_s.mean() * self.comm_s.count() as f64;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let exposed = self.comm_exposed_s.mean() * self.comm_exposed_s.count() as f64;
+        (1.0 - exposed / total).clamp(0.0, 1.0)
+    }
+
     pub fn report(&self) -> String {
         let f = |name: &str, s: &Summary| {
             format!(
@@ -105,8 +127,13 @@ impl StepBreakdown {
             f("data", &self.data_s),
             f("grad", &self.grad_s),
             f("comm", &self.comm_s),
+            f("exposed", &self.comm_exposed_s),
             f("update", &self.update_s),
             f("step", &self.step_s),
+            format!(
+                "  overlap  {:.1}% of comm hidden behind backward",
+                self.overlap_efficiency() * 100.0
+            ),
         ]
         .join("\n")
     }
@@ -183,6 +210,28 @@ mod tests {
         b.step_s.push(0.01);
         let r = b.report();
         assert!(r.contains("step"));
+        assert!(r.contains("exposed"));
         assert!(r.contains("n=1"));
+    }
+
+    #[test]
+    fn overlap_efficiency_bounds_and_math() {
+        let mut b = StepBreakdown::default();
+        // No comm recorded: vacuously fully hidden.
+        assert_eq!(b.overlap_efficiency(), 1.0);
+        // 10 ms of comm activity, 4 ms exposed past backward -> 60% hidden.
+        b.comm_s.push(0.010);
+        b.comm_exposed_s.push(0.004);
+        assert!((b.overlap_efficiency() - 0.6).abs() < 1e-9);
+        // Sequential-style step: everything exposed -> 0% hidden.
+        let mut s = StepBreakdown::default();
+        s.comm_s.push(0.010);
+        s.comm_exposed_s.push(0.010);
+        assert!((s.overlap_efficiency() - 0.0).abs() < 1e-9);
+        // Timer noise can push exposed past active; clamp holds the floor.
+        let mut n = StepBreakdown::default();
+        n.comm_s.push(0.010);
+        n.comm_exposed_s.push(0.011);
+        assert_eq!(n.overlap_efficiency(), 0.0);
     }
 }

@@ -1,5 +1,14 @@
 //! Runtime engines: execute the training-step computations behind one
-//! typed API (`grad_step`, `update`, `eval`).
+//! typed API (`grad_step`, `grad_step_streamed`, `update`, `update_span`,
+//! `eval`).
+//!
+//! The streaming pair is what the pipelined step executor builds on:
+//! `grad_step_streamed` publishes packed-buffer gradient spans in
+//! backward-readiness order (so allreduce can start while backward is
+//! still running), and `update_span` applies the LARS/SGD master update to
+//! one bucket's layers in place as its reduction lands. The stub engine
+//! streams for real; the PJRT engine keeps a whole-buffer fallback
+//! (`supports_pipeline` tells the coordinator which executor to pick).
 //!
 //! Two interchangeable backends:
 //!

@@ -104,6 +104,52 @@ impl Engine {
         &self.manifest
     }
 
+    /// The PJRT backend cannot stream per-bucket updates (the update is a
+    /// single whole-buffer AOT artifact), so the coordinator falls back to
+    /// the sequential step executor on this backend.
+    pub fn supports_pipeline(&self) -> bool {
+        false
+    }
+
+    /// Whole-buffer fallback for the bucket-streaming grad API: XLA runs
+    /// the entire backward as one fused executable, so per-layer readiness
+    /// is not observable — the full gradient is emitted as ONE span once
+    /// the executable returns. Callers get correct (if unoverlapped)
+    /// pipeline semantics; real streaming would need a multi-output
+    /// artifact (ROADMAP).
+    pub fn grad_step_streamed(
+        &self,
+        variant: GradVariant,
+        params: &[f32],
+        bn_state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        emit: &mut dyn FnMut(usize, usize, &[f32]),
+    ) -> Result<GradOutput> {
+        let out = self.grad_step(variant, params, bn_state, images, labels)?;
+        emit(0, out.grads.len(), &out.grads);
+        Ok(out)
+    }
+
+    /// Unsupported on this backend (see [`Engine::supports_pipeline`]);
+    /// present so call sites stay backend-agnostic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_span(
+        &self,
+        _rule: UpdateRule,
+        _params: &mut [f32],
+        _momentum: &mut [f32],
+        _grads: &[f32],
+        _span_lo: usize,
+        _layer_indices: &[usize],
+        _lr: f32,
+    ) -> Result<()> {
+        anyhow::bail!(
+            "per-bucket streamed update requires the stub engine \
+             (PJRT runs whole-buffer artifacts)"
+        )
+    }
+
     /// Run fwd+bwd on one per-worker micro-batch.
     pub fn grad_step(
         &self,

@@ -129,7 +129,17 @@ impl Engine {
         &self.manifest
     }
 
+    /// Whether this backend supports the pipelined step executor
+    /// (bucket-streaming gradients + per-span master updates).
+    pub fn supports_pipeline(&self) -> bool {
+        true
+    }
+
     /// Run fwd+bwd on one per-worker micro-batch.
+    ///
+    /// Exactly [`Engine::grad_step_streamed`] with a no-op emit — one code
+    /// path, so the streamed and whole-buffer results are bit-identical by
+    /// construction.
     pub fn grad_step(
         &self,
         variant: GradVariant,
@@ -137,6 +147,31 @@ impl Engine {
         bn_state: &[f32],
         images: &[f32],
         labels: &[i32],
+    ) -> Result<GradOutput> {
+        self.grad_step_streamed(variant, params, bn_state, images, labels, &mut |_, _, _| {})
+    }
+
+    /// Streaming gradient step (the pipelined executor's backbone): runs
+    /// the same fwd+bwd as [`Engine::grad_step`], but invokes
+    /// `emit(lo, hi, &grads[lo..hi])` the moment the packed-buffer span
+    /// `[lo, hi)` is FINAL, walking the buffer back-to-front in
+    /// backward-readiness order. The emitted spans are contiguous,
+    /// descending, and tile `[0, padded_param_count)` exactly (the padded
+    /// tail rides with the first span).
+    ///
+    /// Contract (what the pipelined executor's safety argument rests on):
+    /// after `emit(lo, hi, ..)` returns, this call never again READS
+    /// `params[lo..hi]` nor writes `grads[lo..hi]` — so the caller may
+    /// hand the span to a concurrent allreduce and then overwrite those
+    /// parameters while backward continues on earlier layers.
+    pub fn grad_step_streamed(
+        &self,
+        variant: GradVariant,
+        params: &[f32],
+        bn_state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        emit: &mut dyn FnMut(usize, usize, &[f32]),
     ) -> Result<GradOutput> {
         let m = &self.manifest;
         check_len("params", params.len(), m.padded_param_count)?;
@@ -180,13 +215,16 @@ impl Engine {
         let mut dlogits = vec![0.0f32; BATCH * K];
         let (loss, correct) = softmax_ce(&logits, labels, smoothing, &mut dlogits);
 
-        // ---- backward ------------------------------------------------
+        // ---- backward (streaming: spans emitted back-to-front) --------
         let mut grads = vec![0.0f32; m.padded_param_count];
         // fc3
         matmul_xt_dy(&r2, &dlogits, &mut grads[O_W3..O_B3], BATCH, H2, K);
         col_sums(&dlogits, &mut grads[O_B3..PARAMS], BATCH, K);
         let mut dr2 = vec![0.0f32; BATCH * H2];
+        // Last read of w3 — after this, params[O_W3..] are dead to this call,
+        // so the fc3 span (plus the zero padded tail) can be published.
         matmul_dy_wt(&dlogits, w3, &mut dr2, BATCH, H2, K);
+        emit(O_W3, PADDED, &grads[O_W3..PADDED]);
         // relu2 + bn2
         let da2: Vec<f32> = dr2.iter().zip(&a2).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
         let mut dz2 = vec![0.0f32; BATCH * H2];
@@ -194,10 +232,12 @@ impl Engine {
             let (dgamma, dbeta) = grads_pair(&mut grads, O_G2, O_B2, H2);
             bn2.backward(&da2, &xh2, g2, BATCH, &mut dz2, dgamma, dbeta);
         }
+        emit(O_G2, O_W3, &grads[O_G2..O_W3]);
         // fc2
         matmul_xt_dy(&r1, &dz2, &mut grads[O_W2..O_G2], BATCH, H1, H2);
         let mut dr1 = vec![0.0f32; BATCH * H1];
         matmul_dy_wt(&dz2, w2, &mut dr1, BATCH, H1, H2);
+        emit(O_W2, O_G2, &grads[O_W2..O_G2]);
         // relu1 + bn1
         let da1: Vec<f32> = dr1.iter().zip(&a1).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
         let mut dz1 = vec![0.0f32; BATCH * H1];
@@ -205,8 +245,10 @@ impl Engine {
             let (dgamma, dbeta) = grads_pair(&mut grads, O_G1, O_B1, H1);
             bn1.backward(&da1, &xh1, g1, BATCH, &mut dz1, dgamma, dbeta);
         }
+        emit(O_G1, O_W2, &grads[O_G1..O_W2]);
         // fc1
         matmul_xt_dy(images, &dz1, &mut grads[O_W1..O_G1], BATCH, D, H1);
+        emit(O_W1, O_G1, &grads[O_W1..O_G1]);
 
         // ---- BN running statistics (EMA of batch moments) ------------
         let mut new_state = bn_state.to_vec();
@@ -221,6 +263,11 @@ impl Engine {
     /// Apply the master-weight update. LARS trust ratio per layer with the
     /// manifest's eta/eps/wd; skip layers (BN params, fc bias) use ratio 1
     /// and no weight decay, matching the artifact kernels.
+    ///
+    /// Implemented as [`Engine::update_span`] over every layer of cloned
+    /// buffers, so the whole-buffer and per-bucket streamed updates share
+    /// one code path (bit-identical by construction). Padding lanes pass
+    /// through untouched (the real kernel masks them).
     pub fn update(
         &self,
         rule: UpdateRule,
@@ -233,39 +280,65 @@ impl Engine {
         check_len("params", params.len(), m.padded_param_count)?;
         check_len("momentum", momentum.len(), m.padded_param_count)?;
         check_len("grads", grads.len(), m.padded_param_count)?;
-        let t = &m.train;
-        // Padding lanes pass through untouched (the real kernel masks them).
         let mut new_p = params.to_vec();
         let mut new_m = momentum.to_vec();
-        for l in &m.layers {
-            let (lo, hi) = (l.offset, l.offset + l.size);
-            let (ratio, with_wd) = if l.lars_skip {
-                (1.0f64, false)
-            } else {
-                match rule {
-                    UpdateRule::Sgd => (1.0, true),
-                    UpdateRule::Lars | UpdateRule::LarsPerLayer => {
-                        let wn = l2_norm(&params[lo..hi]);
-                        let gn = l2_norm(&grads[lo..hi]);
-                        let r = if wn > 0.0 {
-                            t.lars_eta * wn / (gn + t.weight_decay * wn + t.lars_eps)
-                        } else {
-                            1.0
-                        };
-                        (r, true)
-                    }
-                }
-            };
-            for i in lo..hi {
-                let w = params[i] as f64;
-                let g = grads[i] as f64;
-                let d = if with_wd { g + t.weight_decay * w } else { g };
-                let m2 = t.momentum * momentum[i] as f64 + ratio * d;
-                new_m[i] = m2 as f32;
-                new_p[i] = (w - lr as f64 * m2) as f32;
-            }
-        }
+        let all: Vec<usize> = (0..m.layers.len()).collect();
+        self.update_span(rule, &mut new_p, &mut new_m, grads, 0, &all, lr)?;
         Ok((new_p, new_m))
+    }
+
+    /// In-place master update restricted to the manifest layers listed in
+    /// `layer_indices` — the streamed per-bucket update the pipelined
+    /// executor applies as each bucket's allreduce lands. `params` /
+    /// `momentum` / `grads` are the SPAN `[span_lo, span_lo + len)` of the
+    /// packed buffers (layer offsets are absolute; `span_lo` rebases
+    /// them). Layers are whole-contained in buckets, so per-bucket calls
+    /// over a step are bit-identical to one whole-buffer [`Engine::update`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_span(
+        &self,
+        rule: UpdateRule,
+        params: &mut [f32],
+        momentum: &mut [f32],
+        grads: &[f32],
+        span_lo: usize,
+        layer_indices: &[usize],
+        lr: f32,
+    ) -> Result<()> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            params.len() == momentum.len() && params.len() == grads.len(),
+            "update_span: buffer lengths differ ({}, {}, {})",
+            params.len(),
+            momentum.len(),
+            grads.len()
+        );
+        for &li in layer_indices {
+            let l = m
+                .layers
+                .get(li)
+                .ok_or_else(|| anyhow::anyhow!("update_span: no layer index {li}"))?;
+            anyhow::ensure!(
+                l.offset >= span_lo && l.offset + l.size <= span_lo + params.len(),
+                "update_span: layer '{}' [{}, {}) outside span [{}, {})",
+                l.name,
+                l.offset,
+                l.offset + l.size,
+                span_lo,
+                span_lo + params.len()
+            );
+            let (lo, hi) = (l.offset - span_lo, l.offset + l.size - span_lo);
+            update_layer(
+                &m.train,
+                rule,
+                l.lars_skip,
+                &mut params[lo..hi],
+                &mut momentum[lo..hi],
+                &grads[lo..hi],
+                lr,
+            );
+        }
+        Ok(())
     }
 
     /// Inference with RUNNING BN statistics (this is where bn_state
@@ -522,6 +595,47 @@ fn l2_norm(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt()
 }
 
+/// One layer's LARS/momentum-SGD update, in place. The single source of
+/// truth for the update arithmetic: both `Engine::update` (whole buffer)
+/// and `Engine::update_span` (streamed per-bucket) funnel here, and the
+/// in-place form reads each element before writing it, so it computes
+/// exactly what the old out-of-place formulation did.
+fn update_layer(
+    t: &BakedHyperparams,
+    rule: UpdateRule,
+    lars_skip: bool,
+    params: &mut [f32],
+    momentum: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+) {
+    let (ratio, with_wd) = if lars_skip {
+        (1.0f64, false)
+    } else {
+        match rule {
+            UpdateRule::Sgd => (1.0, true),
+            UpdateRule::Lars | UpdateRule::LarsPerLayer => {
+                let wn = l2_norm(params);
+                let gn = l2_norm(grads);
+                let r = if wn > 0.0 {
+                    t.lars_eta * wn / (gn + t.weight_decay * wn + t.lars_eps)
+                } else {
+                    1.0
+                };
+                (r, true)
+            }
+        }
+    };
+    for ((p, mo), &gv) in params.iter_mut().zip(momentum.iter_mut()).zip(grads) {
+        let w = *p as f64;
+        let g = gv as f64;
+        let d = if with_wd { g + t.weight_decay * w } else { g };
+        let m2 = t.momentum * *mo as f64 + ratio * d;
+        *mo = m2 as f32;
+        *p = (w - lr as f64 * m2) as f32;
+    }
+}
+
 /// Disjoint (dgamma, dbeta) slices out of the packed grads buffer.
 fn grads_pair(grads: &mut [f32], lo_g: usize, lo_b: usize, h: usize) -> (&mut [f32], &mut [f32]) {
     debug_assert_eq!(lo_g + h, lo_b);
@@ -661,6 +775,95 @@ mod tests {
         // EMA with rho=0.9 from zeros: |new_mean| <= 0.1 * |batch stat|,
         // so the state stays bounded by plausible activation scales.
         assert!(out.new_state.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn streamed_spans_tile_buffer_in_backward_order() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(37);
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        e.grad_step_streamed(
+            GradVariant::Smoothed,
+            &params,
+            &state,
+            &images,
+            &labels,
+            &mut |lo, hi, src| {
+                assert_eq!(src.len(), hi - lo);
+                spans.push((lo, hi));
+            },
+        )
+        .unwrap();
+        // Spans are contiguous, strictly descending, and tile [0, PADDED).
+        assert!(spans.len() >= 2, "streaming needs more than one span");
+        assert_eq!(spans.first().unwrap().1, PADDED, "first span carries the padded tail");
+        assert_eq!(spans.last().unwrap().0, 0, "last span reaches the stem");
+        for w in spans.windows(2) {
+            assert_eq!(w[1].1, w[0].0, "spans must be contiguous back-to-front");
+        }
+    }
+
+    #[test]
+    fn streamed_grads_match_grad_step_bitwise() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(41);
+        let whole = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        let mut assembled = vec![0.0f32; PADDED];
+        let out = e
+            .grad_step_streamed(
+                GradVariant::Smoothed,
+                &params,
+                &state,
+                &images,
+                &labels,
+                &mut |lo, hi, src| assembled[lo..hi].copy_from_slice(src),
+            )
+            .unwrap();
+        assert_eq!(whole.loss, out.loss);
+        assert_eq!(whole.correct, out.correct);
+        assert_eq!(whole.new_state, out.new_state);
+        assert_eq!(whole.grads, assembled, "emitted spans must reassemble the exact gradient");
+        assert_eq!(whole.grads, out.grads, "returned buffer must match too");
+    }
+
+    #[test]
+    fn update_span_per_bucket_matches_whole_update() {
+        let e = engine();
+        let m = stub_manifest();
+        let (params, _, _, _) = inputs(43);
+        let momentum: Vec<f32> =
+            (0..PADDED).map(|i| if i < PARAMS { ((i % 13) as f32 - 6.0) * 1e-3 } else { 0.0 }).collect();
+        let grads: Vec<f32> =
+            (0..PADDED).map(|i| if i < PARAMS { ((i % 29) as f32 - 14.0) * 1e-3 } else { 0.0 }).collect();
+        for rule in [UpdateRule::Lars, UpdateRule::Sgd] {
+            let (want_p, want_m) = e.update(rule, &params, &momentum, &grads, 0.3).unwrap();
+            // Stream the update bucket-by-bucket over a multi-bucket plan.
+            let plan = crate::bucket::BucketPlan::build(&m, 16 * 1024, 2);
+            assert!(plan.buckets.len() >= 2);
+            let mut got_p = params.clone();
+            let mut got_m = momentum.clone();
+            for (i, b) in plan.buckets.iter().enumerate() {
+                let (lo, hi) = plan.span_with_padding(i);
+                let (p_span, m_span) = (&mut got_p[lo..hi], &mut got_m[lo..hi]);
+                e.update_span(rule, p_span, m_span, &grads[lo..hi], lo, &b.layer_indices, 0.3)
+                    .unwrap();
+            }
+            assert_eq!(want_p, got_p, "{rule:?}: streamed params diverged");
+            assert_eq!(want_m, got_m, "{rule:?}: streamed momentum diverged");
+        }
+    }
+
+    #[test]
+    fn update_span_rejects_out_of_span_layers() {
+        let e = engine();
+        let (params, _, _, _) = inputs(47);
+        let mut p = params[O_W2..O_W3].to_vec();
+        let mut mo = vec![0.0f32; p.len()];
+        let g = vec![0.0f32; p.len()];
+        // Layer 0 (fc1.w) lies outside the [O_W2, O_W3) span.
+        assert!(e.update_span(UpdateRule::Lars, &mut p, &mut mo, &g, O_W2, &[0], 0.1).is_err());
+        // Layers 3..6 (fc2.w, bn2) lie inside and must succeed.
+        assert!(e.update_span(UpdateRule::Lars, &mut p, &mut mo, &g, O_W2, &[3, 4, 5], 0.1).is_ok());
     }
 
     #[test]

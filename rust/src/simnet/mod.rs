@@ -152,6 +152,38 @@ pub fn concurrent_bucketed_allreduce_time(
     lane_busy.into_iter().fold(0.0, f64::max)
 }
 
+/// Least-squares fit of the α–β link model `t = α + bytes/β` to measured
+/// `(bytes, seconds)` samples — the calibration hook from the pipelined
+/// executor's measured per-bucket allreduce times back to a [`LinkParams`]
+/// every model in this module accepts. Returns `None` when the samples
+/// cannot identify a physical link (fewer than two distinct byte sizes, or
+/// a non-positive fitted bandwidth, as happens when timings are noise-
+/// dominated); α is clamped at zero — a negative fitted latency is
+/// measurement noise, not physics.
+pub fn fit_alpha_beta(samples: &[(f64, f64)]) -> Option<LinkParams> {
+    if samples.len() < 2 {
+        return None;
+    }
+    let n = samples.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for &(x, y) in samples {
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-30 {
+        return None; // all samples at one byte size: slope unidentifiable
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    if slope <= 0.0 {
+        return None;
+    }
+    let alpha = (sy - slope * sx) / n;
+    Some(LinkParams { latency_s: alpha.max(0.0), bandwidth_bps: 1.0 / slope })
+}
+
 /// One training step under the paper's overlap scheme.
 #[derive(Debug, Clone, Copy)]
 pub struct StepModel {
@@ -366,6 +398,33 @@ mod tests {
             assert!(t <= prev + 1e-12, "{ch} lanes regressed");
             prev = t;
         }
+    }
+
+    #[test]
+    fn fit_alpha_beta_recovers_exact_link() {
+        let link = LinkParams { latency_s: 5e-6, bandwidth_bps: 10e9 };
+        let samples: Vec<(f64, f64)> = [1e3, 1e5, 1e6, 8e6]
+            .iter()
+            .map(|&b| (b, link.transfer_time(b)))
+            .collect();
+        let fit = fit_alpha_beta(&samples).unwrap();
+        assert!((fit.latency_s - link.latency_s).abs() < 1e-12);
+        assert!((fit.bandwidth_bps - link.bandwidth_bps).abs() / link.bandwidth_bps < 1e-9);
+        // Round-trips through the model it calibrates.
+        assert!((fit.transfer_time(2e6) - link.transfer_time(2e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_alpha_beta_rejects_degenerate_samples() {
+        assert!(fit_alpha_beta(&[]).is_none());
+        assert!(fit_alpha_beta(&[(1e6, 1e-3)]).is_none());
+        // One byte size repeated: slope unidentifiable.
+        assert!(fit_alpha_beta(&[(1e6, 1e-3), (1e6, 2e-3)]).is_none());
+        // Time DECREASING with size: no physical link, reject.
+        assert!(fit_alpha_beta(&[(1e3, 2e-3), (1e6, 1e-3)]).is_none());
+        // Negative implied latency clamps to zero instead of going acausal.
+        let fit = fit_alpha_beta(&[(1e6, 1e-4), (2e6, 3e-4)]).unwrap();
+        assert_eq!(fit.latency_s, 0.0);
     }
 
     #[test]
