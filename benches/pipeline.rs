@@ -1,8 +1,13 @@
 //! Pipelined vs sequential step executor: throughput, exposed-comm
-//! fraction, and the simulator calibration loop (measured trace → overlap
-//! replay + α–β fit). Writes the headline numbers to BENCH_pipeline.json
-//! (repo root) to seed the perf trajectory, plus the usual raw dump under
-//! bench_results/pipeline.json.
+//! fraction for CHUNKED vs whole-layer bucket plans, and the simulator
+//! calibration loop (measured trace → overlap replay + α–β fit with
+//! residuals). Writes the headline numbers to BENCH_pipeline.json (repo
+//! root; uploaded as a CI artifact) to seed the perf trajectory, plus the
+//! usual raw dump under bench_results/pipeline.json. Also prints a
+//! markdown row ready to append to EXPERIMENTS.md.
+//!
+//! Quick mode (`BENCH_QUICK=1`, the CI smoke setting) trims warmup/steps
+//! so the bench finishes in seconds while still producing every field.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -10,7 +15,7 @@ use yasgd::benchkit::{dump_results, Table};
 use yasgd::config::RunConfig;
 use yasgd::coordinator::Trainer;
 use yasgd::runtime::Engine;
-use yasgd::simnet::fit_alpha_beta;
+use yasgd::simnet::{fit_alpha_beta, fit_residuals};
 use yasgd::util::json::Json;
 
 fn bench_cfg() -> RunConfig {
@@ -24,6 +29,8 @@ fn bench_cfg() -> RunConfig {
         comm_threads: 2,
         // Small buckets -> several buckets -> real overlap opportunity.
         bucket_bytes: 4 * 1024,
+        // Whole-layer buckets by default here; the chunked run overrides.
+        chunk_bytes: 0,
         wire: "f16".into(),
         allreduce: "hier".into(),
         ..RunConfig::default()
@@ -47,8 +54,12 @@ fn run(mut trainer: Trainer, warmup: usize, steps: usize) -> (f64, Trainer) {
 
 fn main() {
     let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("engine load"));
-    let warmup = 3;
-    let steps = 25;
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let (warmup, steps) = if quick { (1, 6) } else { (3, 25) };
+    if quick {
+        println!("(BENCH_QUICK: {steps} steps after {warmup} warmup)\n");
+    }
+    let chunk_bytes = 4 * 1024usize; // = the bucket target: one chunk per bucket
 
     // ---- sequential reference (threaded grad phase, barrier comm) -------
     let mut seq_cfg = bench_cfg();
@@ -57,49 +68,75 @@ fn main() {
     seq_trainer.threaded = true;
     let (seq_ips, seq_trainer) = run(seq_trainer, warmup, steps);
 
-    // ---- pipelined executor ---------------------------------------------
-    let pipe_cfg = bench_cfg();
-    let pipe_trainer = Trainer::new(pipe_cfg, engine).unwrap();
-    assert!(pipe_trainer.pipeline, "stub engine must support the pipeline");
-    let (pipe_ips, pipe_trainer) = run(pipe_trainer, warmup, steps);
+    // ---- pipelined executor, whole-layer buckets -------------------------
+    let unchunked_cfg = bench_cfg();
+    let unchunked_trainer = Trainer::new(unchunked_cfg, engine.clone()).unwrap();
+    assert!(unchunked_trainer.pipeline, "stub engine must support the pipeline");
+    let (unchunked_ips, unchunked_trainer) = run(unchunked_trainer, warmup, steps);
 
-    let speedup = if seq_ips > 0.0 { pipe_ips / seq_ips } else { 0.0 };
-    let bd = &pipe_trainer.breakdown;
-    let comm_total = bd.comm_s.mean() * bd.comm_s.count() as f64;
-    let exposed_total = bd.comm_exposed_s.mean() * bd.comm_exposed_s.count() as f64;
-    let exposed_frac = if comm_total > 0.0 { exposed_total / comm_total } else { 0.0 };
+    // ---- pipelined executor, row-chunked buckets -------------------------
+    let mut chunked_cfg = bench_cfg();
+    chunked_cfg.chunk_bytes = chunk_bytes;
+    let chunked_trainer = Trainer::new(chunked_cfg, engine).unwrap();
+    let chunked_plan_buckets = chunked_trainer.bucket_plan().buckets.len();
+    let unchunked_plan_buckets = unchunked_trainer.bucket_plan().buckets.len();
+    let (chunked_ips, chunked_trainer) = run(chunked_trainer, warmup, steps);
+
+    let speedup = if seq_ips > 0.0 { chunked_ips / seq_ips } else { 0.0 };
+    let exposed_unchunked = unchunked_trainer.breakdown.exposed_comm_frac();
+    let exposed_chunked = chunked_trainer.breakdown.exposed_comm_frac();
 
     println!("== pipelined vs sequential executor ==");
-    let mut t = Table::new(&["executor", "img/s", "comm exposed", "overlap eff"]);
-    let seq_bd = &seq_trainer.breakdown;
+    let mut t = Table::new(&["executor", "buckets", "img/s", "comm exposed", "overlap eff"]);
     t.row(&[
         "sequential".into(),
+        format!("{unchunked_plan_buckets}"),
         format!("{seq_ips:.1}"),
         "100.0%".into(),
-        format!("{:.1}%", seq_bd.overlap_efficiency() * 100.0),
+        format!("{:.1}%", seq_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
     t.row(&[
-        "pipelined".into(),
-        format!("{pipe_ips:.1}"),
-        format!("{:.1}%", exposed_frac * 100.0),
-        format!("{:.1}%", bd.overlap_efficiency() * 100.0),
+        "pipelined (whole-layer)".into(),
+        format!("{unchunked_plan_buckets}"),
+        format!("{unchunked_ips:.1}"),
+        format!("{:.1}%", exposed_unchunked * 100.0),
+        format!("{:.1}%", unchunked_trainer.breakdown.overlap_efficiency() * 100.0),
+    ]);
+    t.row(&[
+        "pipelined (row-chunked)".into(),
+        format!("{chunked_plan_buckets}"),
+        format!("{chunked_ips:.1}"),
+        format!("{:.1}%", exposed_chunked * 100.0),
+        format!("{:.1}%", chunked_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
     println!("{}", t.render());
-    println!("speedup: {speedup:.2}x (pipelined over sequential)\n");
+    println!("speedup: {speedup:.2}x (chunked pipelined over sequential)");
+    println!(
+        "chunking: exposed comm {:.1}% -> {:.1}% at {} lanes\n",
+        exposed_unchunked * 100.0,
+        exposed_chunked * 100.0,
+        chunked_trainer.cfg.comm_threads
+    );
 
     // ---- calibration loop: measured trace → overlap replay + α–β fit ----
-    let trace = pipe_trainer.pipeline_trace().expect("pipelined trace").clone();
+    let trace = chunked_trainer.pipeline_trace().expect("pipelined trace").clone();
     let measured = trace.report();
-    let replay = trace.replay(pipe_trainer.cfg.comm_threads);
+    let replay = trace.replay(chunked_trainer.cfg.comm_threads);
+    let replay_residual_frac = if measured.step_span_s > 0.0 {
+        (replay.step_span_s - measured.step_span_s).abs() / measured.step_span_s
+    } else {
+        0.0
+    };
     println!("== calibration: measured pipeline vs overlap simulator ==");
     println!(
-        "measured: step span {:.3} ms, hidden {:.1}%  |  replay: step span {:.3} ms, hidden {:.1}%",
+        "measured: step span {:.3} ms, hidden {:.1}%  |  replay: step span {:.3} ms, hidden {:.1}%  |  residual {:.1}%",
         measured.step_span_s * 1e3,
         measured.hidden_frac * 100.0,
         replay.step_span_s * 1e3,
-        replay.hidden_frac * 100.0
+        replay.hidden_frac * 100.0,
+        replay_residual_frac * 100.0
     );
-    let plan = pipe_trainer.bucket_plan();
+    let plan = chunked_trainer.bucket_plan();
     let samples: Vec<(f64, f64)> = (0..plan.buckets.len())
         .map(|i| {
             let (lo, hi) = plan.span_with_padding(i);
@@ -108,28 +145,65 @@ fn main() {
             (bytes, e - s)
         })
         .collect();
-    match fit_alpha_beta(&samples) {
-        Some(link) => println!(
-            "α–β fit of measured per-bucket allreduces: α = {:.2} µs, β = {:.3} GB/s",
-            link.latency_s * 1e6,
-            link.bandwidth_bps / 1e9
-        ),
-        None => println!("α–β fit: samples degenerate (timings noise-dominated)"),
-    }
+    let fit = fit_alpha_beta(&samples);
+    let (alpha_us, beta_gbps, fit_rms_us, fit_max_us) = match &fit {
+        Some(link) => {
+            let q = fit_residuals(&samples, link);
+            println!(
+                "α–β fit of measured per-bucket allreduces: α = {:.2} µs, β = {:.3} GB/s \
+                 (residuals over {} buckets: rms {:.2} µs, max {:.2} µs)",
+                link.latency_s * 1e6,
+                link.bandwidth_bps / 1e9,
+                q.n,
+                q.rms_s * 1e6,
+                q.max_abs_s * 1e6
+            );
+            (link.latency_s * 1e6, link.bandwidth_bps / 1e9, q.rms_s * 1e6, q.max_abs_s * 1e6)
+        }
+        None => {
+            println!("α–β fit: samples degenerate (timings noise-dominated)");
+            (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
+        }
+    };
+    println!(
+        "\nEXPERIMENTS.md row:\n| {} | {:.2} | {:.1}% | {:.1}% | {:.2} | {:.3} | {:.2} | {:.1}% |",
+        if quick { "quick" } else { "full" },
+        speedup,
+        exposed_unchunked * 100.0,
+        exposed_chunked * 100.0,
+        alpha_us,
+        beta_gbps,
+        fit_rms_us,
+        replay_residual_frac * 100.0
+    );
 
     // ---- result files -----------------------------------------------------
+    // A degenerate fit leaves NaNs; serialize those as null, not bare NaN.
+    let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
     let headline = Json::obj(vec![
         ("sequential_images_per_sec", Json::Num(seq_ips)),
-        ("pipelined_images_per_sec", Json::Num(pipe_ips)),
-        ("pipelined_speedup", Json::Num(speedup)),
-        ("exposed_comm_frac", Json::Num(exposed_frac)),
-        ("overlap_efficiency", Json::Num(bd.overlap_efficiency())),
+        ("pipelined_unchunked_images_per_sec", Json::Num(unchunked_ips)),
+        ("pipelined_chunked_images_per_sec", Json::Num(chunked_ips)),
+        // New key (vs pre-chunking runs): the speedup numerator is now the
+        // CHUNKED pipelined config, so the perf trajectory stays honest.
+        ("pipelined_chunked_speedup", Json::Num(speedup)),
+        ("exposed_comm_frac_unchunked", Json::Num(exposed_unchunked)),
+        ("exposed_comm_frac_chunked", Json::Num(exposed_chunked)),
+        ("overlap_efficiency_chunked", Json::Num(chunked_trainer.breakdown.overlap_efficiency())),
         ("measured_hidden_frac", Json::Num(measured.hidden_frac)),
         ("replay_hidden_frac", Json::Num(replay.hidden_frac)),
-        ("buckets", Json::Num(plan.buckets.len() as f64)),
-        ("workers", Json::Num(pipe_trainer.cfg.workers as f64)),
-        ("comm_threads", Json::Num(pipe_trainer.cfg.comm_threads as f64)),
+        ("replay_step_span_residual_frac", Json::Num(replay_residual_frac)),
+        ("fit_alpha_us", num_or_null(alpha_us)),
+        ("fit_beta_gbps", num_or_null(beta_gbps)),
+        ("fit_rms_residual_us", num_or_null(fit_rms_us)),
+        ("fit_max_residual_us", num_or_null(fit_max_us)),
+        ("buckets_unchunked", Json::Num(unchunked_plan_buckets as f64)),
+        ("buckets_chunked", Json::Num(chunked_plan_buckets as f64)),
+        ("chunk_bytes", Json::Num(chunk_bytes as f64)),
+        ("workers", Json::Num(chunked_trainer.cfg.workers as f64)),
+        ("comm_threads", Json::Num(chunked_trainer.cfg.comm_threads as f64)),
         ("steps", Json::Num(steps as f64)),
+        ("quick", Json::Bool(quick)),
     ]);
     std::fs::write("BENCH_pipeline.json", headline.to_string_pretty())
         .expect("writing BENCH_pipeline.json");

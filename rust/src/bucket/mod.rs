@@ -1,4 +1,4 @@
-//! Gradient bucketing (paper Section III-C-1).
+//! Gradient bucketing (paper Section III-C-1) with row-granular chunking.
 //!
 //! "Allreduce operation per each layer leads to large overhead due to
 //! frequent callings ... it is important to enlarge the data size of
@@ -15,10 +15,132 @@
 //! (fc first, stem last), so buckets are assembled in REVERSE layer order —
 //! bucket 0 becomes ready first during backprop. `overlap::Schedule`
 //! consumes that ordering.
+//!
+//! # Row-granular chunking
+//!
+//! Whole-layer buckets fail when one layer dominates the model: the stub's
+//! fc1.w holds ~96% of all parameters, so a whole-layer plan emits it as a
+//! single monolithic span at the very end of backward — structurally
+//! exposing almost all communication exactly as the pre-overlap baselines
+//! did (Akiba et al. 1711.04325; Mikami et al. 1811.05233). To fix that,
+//! every bucket is a run of [`Piece`]s, and an oversized 2-D fc weight
+//! layer is pre-split into ROW blocks (`(layer, row_lo, row_hi)`
+//! provenance): a weight-gradient row `dW[r] = x[:, r]ᵀ · dy` is final the
+//! moment its outer products complete, so the engine can stream row blocks
+//! back-to-front while backward continues — and because per-element
+//! accumulation stays in batch order, the chunked gradient is bit-identical
+//! to the whole-layer one. Readiness ordering is then per CHUNK, not per
+//! layer: the tail layer's early (high-row) chunks reach the wire
+//! mid-backward instead of serializing the pipeline at the end.
+//!
+//! LARS stays chunk-boundary-safe: the trust ratio is computed once per
+//! layer from FULL-layer norms, never per chunk — the pipelined executor
+//! defers a split layer's update until its final (row 0) chunk is reduced
+//! (see `coordinator::pipeline`).
 
-use crate::model_meta::Manifest;
+use crate::model_meta::{LayerKind, Manifest};
 
-/// One allreduce bucket: a contiguous span of the packed gradient buffer.
+/// One piece of a bucket: a whole layer, or a row-granular chunk of an
+/// oversized 2-D layer. `row_lo == 0 && row_hi == nrows` means the whole
+/// layer; anything else is a chunk of the layer's leading dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Piece {
+    /// Index into `manifest.layers`.
+    pub layer: usize,
+    /// Packed-buffer element span [lo, hi) this piece covers.
+    pub lo: usize,
+    pub hi: usize,
+    /// Leading-dimension rows [row_lo, row_hi) of the layer this piece
+    /// covers.
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// The layer's total leading-dimension extent.
+    pub nrows: usize,
+}
+
+impl Piece {
+    pub fn elems(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Whole layer (not a sub-layer chunk).
+    pub fn is_whole(&self) -> bool {
+        self.row_lo == 0 && self.row_hi == self.nrows
+    }
+
+    /// The LAST piece of its layer to materialize during backward: rows
+    /// stream top-down, so the piece containing row 0 completes when the
+    /// whole layer gradient is final. The pipelined executor's LARS update
+    /// keys off this (full-layer norms are only available then).
+    pub fn is_layer_tail(&self) -> bool {
+        self.row_lo == 0
+    }
+}
+
+/// Row-block boundaries for splitting a layer with `nrows` rows of
+/// `row_size` elements into chunks of ~`chunk_elems` elements, in FORWARD
+/// (ascending-row) order. `chunk_elems == 0` disables splitting (one block
+/// covering every row). Shared by the plan builder and the stub engine's
+/// streamed backward so emitted spans line up with planned chunk
+/// boundaries.
+pub fn row_blocks(nrows: usize, chunk_elems: usize, row_size: usize) -> Vec<(usize, usize)> {
+    debug_assert!(nrows > 0);
+    if chunk_elems == 0 || row_size == 0 {
+        return vec![(0, nrows)];
+    }
+    let rows_per_chunk = (chunk_elems / row_size).max(1);
+    if rows_per_chunk >= nrows {
+        return vec![(0, nrows)];
+    }
+    let mut blocks = Vec::with_capacity(nrows / rows_per_chunk + 1);
+    let mut lo = 0;
+    while lo < nrows {
+        let hi = (lo + rows_per_chunk).min(nrows);
+        blocks.push((lo, hi));
+        lo = hi;
+    }
+    blocks
+}
+
+/// Whether a layer is eligible for row splitting: a 2-D (or higher) fc
+/// weight, whose gradient rows `dW[r] = x[:, r]ᵀ · dy` are independent
+/// outer products an engine can genuinely finalize early. Conv kernels
+/// are deliberately NOT split: their leading dim is kernel height (a
+/// couple of huge slabs, not chunk-sized rows), no engine streams conv
+/// row gradients (PJRT coalesces everything), and splitting them would
+/// make `overlap::piece_ready` credit mid-layer readiness no backend
+/// provides — biasing the simulator's exposed-comm numbers low.
+fn splittable(manifest: &Manifest, li: usize) -> bool {
+    let l = &manifest.layers[li];
+    matches!(l.kind, LayerKind::FcW) && l.shape.len() >= 2
+}
+
+/// The pieces of layer `li` under chunk granularity `chunk_elems`, in
+/// FORWARD (ascending) packed order.
+fn layer_pieces(manifest: &Manifest, li: usize, chunk_elems: usize) -> Vec<Piece> {
+    let l = &manifest.layers[li];
+    let nrows = l.shape.first().copied().unwrap_or(l.size).max(1);
+    let row_size = l.size / nrows;
+    let blocks = if splittable(manifest, li) {
+        row_blocks(nrows, chunk_elems, row_size)
+    } else {
+        vec![(0, nrows)]
+    };
+    blocks
+        .into_iter()
+        .map(|(row_lo, row_hi)| Piece {
+            layer: li,
+            lo: l.offset + row_lo * row_size,
+            hi: l.offset + row_hi * row_size,
+            row_lo,
+            row_hi,
+            nrows,
+        })
+        .collect()
+}
+
+/// One allreduce bucket: a contiguous span of the packed gradient buffer,
+/// made of whole-layer and/or row-chunk pieces.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bucket {
     /// Dense bucket index in READINESS order (0 = first ready in backward).
@@ -26,9 +148,8 @@ pub struct Bucket {
     /// Packed-buffer element span [lo, hi).
     pub lo: usize,
     pub hi: usize,
-    /// Indices into `manifest.layers` covered by this bucket, in packed
-    /// (forward) order.
-    pub layer_indices: Vec<usize>,
+    /// The pieces covering [lo, hi), in packed (ascending) order.
+    pub pieces: Vec<Piece>,
 }
 
 impl Bucket {
@@ -39,6 +160,19 @@ impl Bucket {
     pub fn bytes(&self, bytes_per_elem: usize) -> usize {
         self.elems() * bytes_per_elem
     }
+
+    /// Manifest layer indices this bucket touches, ascending, deduped
+    /// (chunks of one layer count once).
+    pub fn layers_touched(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.pieces.iter().map(|p| p.layer).collect();
+        v.dedup();
+        v
+    }
+
+    /// Whether any piece is a sub-layer chunk.
+    pub fn has_chunks(&self) -> bool {
+        self.pieces.iter().any(|p| !p.is_whole())
+    }
 }
 
 /// The bucket partition of a model's packed gradient buffer.
@@ -48,37 +182,58 @@ pub struct BucketPlan {
     /// Target bucket size used to build the plan, in BYTES of wire data.
     pub target_bytes: usize,
     pub bytes_per_elem: usize,
+    /// Chunk granularity in ELEMENTS used to split oversized layers
+    /// (0 = whole-layer buckets). The pipelined executor hands this to the
+    /// engine so streamed emission boundaries match the plan's chunks.
+    pub chunk_elems: usize,
     /// Trailing padding span (tile alignment), allreduced with the last
     /// bucket so the whole Np buffer stays consistent across ranks.
     pub padding: (usize, usize),
 }
 
 impl BucketPlan {
-    /// Greedy assembly in reverse layer order: walk layers fc -> stem,
-    /// open a new bucket whenever the current one has reached the target.
-    /// A single layer larger than the target gets its own bucket.
+    /// Greedy whole-layer assembly in reverse layer order (no chunking):
+    /// walk layers fc -> stem, open a new bucket whenever the current one
+    /// has reached the target. A single layer larger than the target gets
+    /// its own bucket.
     pub fn build(manifest: &Manifest, target_bytes: usize, bytes_per_elem: usize) -> BucketPlan {
+        Self::build_chunked(manifest, target_bytes, bytes_per_elem, 0)
+    }
+
+    /// Greedy assembly over PIECES in reverse packed order: oversized 2-D
+    /// fc weight layers are pre-split into row chunks of ~`chunk_bytes`
+    /// wire bytes, then pieces are packed into buckets of ~`target_bytes`.
+    /// `chunk_bytes == 0` disables splitting (whole-layer buckets — the
+    /// behavior of [`BucketPlan::build`]).
+    pub fn build_chunked(
+        manifest: &Manifest,
+        target_bytes: usize,
+        bytes_per_elem: usize,
+        chunk_bytes: usize,
+    ) -> BucketPlan {
         assert!(target_bytes > 0 && bytes_per_elem > 0);
+        let chunk_elems = if chunk_bytes == 0 { 0 } else { (chunk_bytes / bytes_per_elem).max(1) };
         let nl = manifest.layers.len();
         let mut buckets: Vec<Bucket> = Vec::new();
-        let mut cur: Vec<usize> = Vec::new();
+        let mut cur: Vec<Piece> = Vec::new(); // reverse packed order
         let mut cur_bytes = 0usize;
 
         for li in (0..nl).rev() {
-            let l = &manifest.layers[li];
-            cur.push(li);
-            cur_bytes += l.size * bytes_per_elem;
-            if cur_bytes >= target_bytes {
-                buckets.push(Self::seal(manifest, std::mem::take(&mut cur), buckets.len()));
-                cur_bytes = 0;
+            for piece in layer_pieces(manifest, li, chunk_elems).into_iter().rev() {
+                cur_bytes += piece.elems() * bytes_per_elem;
+                cur.push(piece);
+                if cur_bytes >= target_bytes {
+                    buckets.push(Self::seal(std::mem::take(&mut cur), buckets.len()));
+                    cur_bytes = 0;
+                }
             }
         }
         if !cur.is_empty() {
-            buckets.push(Self::seal(manifest, cur, buckets.len()));
+            buckets.push(Self::seal(cur, buckets.len()));
         }
 
         let padding = (manifest.param_count, manifest.padded_param_count);
-        BucketPlan { buckets, target_bytes, bytes_per_elem, padding }
+        BucketPlan { buckets, target_bytes, bytes_per_elem, chunk_elems, padding }
     }
 
     /// One bucket per layer — the unbucketed baseline the paper improves on.
@@ -86,45 +241,51 @@ impl BucketPlan {
         let buckets = (0..manifest.layers.len())
             .rev()
             .enumerate()
-            .map(|(index, li)| Self::seal(manifest, vec![li], index))
+            .map(|(index, li)| {
+                let mut pieces = layer_pieces(manifest, li, 0);
+                pieces.reverse();
+                Self::seal(pieces, index)
+            })
             .collect();
         BucketPlan {
             buckets,
             target_bytes: 0,
             bytes_per_elem,
+            chunk_elems: 0,
             padding: (manifest.param_count, manifest.padded_param_count),
         }
     }
 
     /// Single bucket covering everything (the "fully fused" extreme).
     pub fn single(manifest: &Manifest, bytes_per_elem: usize) -> BucketPlan {
-        let all: Vec<usize> = (0..manifest.layers.len()).rev().collect();
-        let bucket = Self::seal(manifest, all, 0);
+        let mut pieces: Vec<Piece> = (0..manifest.layers.len())
+            .flat_map(|li| layer_pieces(manifest, li, 0))
+            .collect();
+        pieces.reverse();
+        let bucket = Self::seal(pieces, 0);
         BucketPlan {
             buckets: vec![bucket],
             target_bytes: usize::MAX,
             bytes_per_elem,
+            chunk_elems: 0,
             padding: (manifest.param_count, manifest.padded_param_count),
         }
     }
 
-    fn seal(manifest: &Manifest, mut reversed_layers: Vec<usize>, index: usize) -> Bucket {
-        // reversed_layers came in reverse packed order; contiguity in the
-        // packed buffer means min offset .. max end.
-        reversed_layers.reverse();
-        let lo = manifest.layers[reversed_layers[0]].offset;
-        let last = &manifest.layers[*reversed_layers.last().unwrap()];
-        let hi = last.offset + last.size;
-        Bucket { index, lo, hi, layer_indices: reversed_layers }
+    fn seal(mut reversed_pieces: Vec<Piece>, index: usize) -> Bucket {
+        // Pieces came in reverse packed order; contiguity in the packed
+        // buffer means first lo .. last hi once re-reversed.
+        reversed_pieces.reverse();
+        let lo = reversed_pieces[0].lo;
+        let hi = reversed_pieces.last().unwrap().hi;
+        Bucket { index, lo, hi, pieces: reversed_pieces }
     }
 
     /// The span to allreduce for bucket `i`, with padding attached to the
-    /// stem-most (last ready) bucket so it also reaches every rank.
+    /// bucket whose span ends at param_count (bucket 0 in backward order,
+    /// since fc is packed last) so the padded tail also reaches every rank.
     pub fn span_with_padding(&self, i: usize) -> (usize, usize) {
         let b = &self.buckets[i];
-        // Padding lives at the tail of the packed buffer, so it rides with
-        // the bucket whose span ends at param_count (bucket 0 in backward
-        // order, since fc is packed last).
         if b.hi == self.padding.0 {
             (b.lo, self.padding.1)
         } else {
@@ -139,29 +300,83 @@ impl BucketPlan {
         (0..self.buckets.len()).map(|i| self.span_with_padding(i)).collect()
     }
 
-    /// Structural invariants; used by tests and debug assertions.
+    /// Structural invariants; used by tests and debug assertions. Covers
+    /// chunked plans: pieces tile each bucket, each layer is either one
+    /// whole piece or a descending run of chunks tiling its rows exactly,
+    /// and buckets tile the packed buffer back-to-front.
     pub fn validate(&self, manifest: &Manifest) -> anyhow::Result<()> {
         let nl = manifest.layers.len();
-        let mut seen = vec![false; nl];
-        for b in &self.buckets {
-            anyhow::ensure!(b.lo < b.hi, "bucket {} empty", b.index);
-            for &li in &b.layer_indices {
-                anyhow::ensure!(!seen[li], "layer {li} in two buckets");
-                seen[li] = true;
-                let l = &manifest.layers[li];
+        anyhow::ensure!(!self.buckets.is_empty(), "empty plan");
+        for (i, b) in self.buckets.iter().enumerate() {
+            anyhow::ensure!(b.index == i, "bucket {i} has index {}", b.index);
+            anyhow::ensure!(b.lo < b.hi, "bucket {i} empty");
+            anyhow::ensure!(!b.pieces.is_empty(), "bucket {i} has no pieces");
+            anyhow::ensure!(
+                b.pieces[0].lo == b.lo && b.pieces.last().unwrap().hi == b.hi,
+                "bucket {i} pieces do not span the bucket"
+            );
+            for w in b.pieces.windows(2) {
+                anyhow::ensure!(w[1].lo == w[0].hi, "bucket {i} pieces have holes");
+            }
+            for p in &b.pieces {
+                let l = manifest
+                    .layers
+                    .get(p.layer)
+                    .ok_or_else(|| anyhow::anyhow!("bucket {i}: no layer {}", p.layer))?;
+                let nrows = l.shape.first().copied().unwrap_or(l.size).max(1);
+                let row_size = l.size / nrows;
+                anyhow::ensure!(p.nrows == nrows, "piece of '{}' has wrong nrows", l.name);
                 anyhow::ensure!(
-                    l.offset >= b.lo && l.offset + l.size <= b.hi,
-                    "layer {li} outside bucket span"
+                    p.row_lo < p.row_hi && p.row_hi <= nrows,
+                    "piece of '{}' has bad row range [{}, {})",
+                    l.name,
+                    p.row_lo,
+                    p.row_hi
+                );
+                anyhow::ensure!(
+                    p.lo == l.offset + p.row_lo * row_size
+                        && p.hi == l.offset + p.row_hi * row_size,
+                    "piece of '{}' span/rows mismatch",
+                    l.name
+                );
+                anyhow::ensure!(
+                    p.is_whole() || splittable(manifest, p.layer),
+                    "layer '{}' chunked but not splittable",
+                    l.name
                 );
             }
-            // contiguity: span exactly covers its layers
-            let span_elems: usize = b.layer_indices.iter().map(|&li| manifest.layers[li].size).sum();
-            anyhow::ensure!(span_elems == b.elems(), "bucket {} has holes", b.index);
         }
-        anyhow::ensure!(seen.iter().all(|&s| s), "some layer missing from plan");
-        // readiness order: bucket i must cover strictly later layers than i+1
+        // Buckets tile the packed buffer in backward (descending) order.
         for w in self.buckets.windows(2) {
-            anyhow::ensure!(w[0].lo >= w[1].hi, "buckets out of backward order");
+            anyhow::ensure!(w[0].lo == w[1].hi, "buckets out of backward order or holed");
+        }
+        anyhow::ensure!(
+            self.buckets[0].hi == manifest.param_count,
+            "first bucket must end at param_count"
+        );
+        anyhow::ensure!(self.buckets.last().unwrap().lo == 0, "last bucket must reach offset 0");
+        // Per layer: walking the buffer DESCENDING, each layer's pieces
+        // must tile its rows [0, nrows) top-down exactly once.
+        let mut next_hi: Vec<Option<usize>> = vec![None; nl];
+        for b in &self.buckets {
+            for p in b.pieces.iter().rev() {
+                match next_hi[p.layer] {
+                    None => anyhow::ensure!(
+                        p.row_hi == p.nrows,
+                        "layer {} first piece does not start at the top row",
+                        p.layer
+                    ),
+                    Some(want) => anyhow::ensure!(
+                        p.row_hi == want,
+                        "layer {} pieces overlap or skip rows",
+                        p.layer
+                    ),
+                }
+                next_hi[p.layer] = Some(p.row_lo);
+            }
+        }
+        for (li, nh) in next_hi.iter().enumerate() {
+            anyhow::ensure!(*nh == Some(0), "layer {li} rows not fully covered");
         }
         Ok(())
     }
@@ -208,6 +423,20 @@ mod tests {
         Manifest::parse(&text).unwrap()
     }
 
+    /// A manifest whose fc_w is a giant 2-D layer dominating the params —
+    /// the shape the chunking exists for.
+    fn chunky_manifest() -> Manifest {
+        Manifest::from_layer_specs(
+            "c",
+            &[
+                ("stem", "conv", &[432]),
+                ("bn", "bn_gamma", &[64]),
+                ("fc1.w", "fc_w", &[2048, 32]),
+                ("fc1.b", "fc_b", &[32]),
+            ],
+        )
+    }
+
     #[test]
     fn plan_is_partition() {
         let m = manifest();
@@ -234,7 +463,7 @@ mod tests {
         let plan = BucketPlan::build(&m, 4096, 4);
         let first = &plan.buckets[0];
         // fc.b is the last layer (index 10) and must be in the first bucket
-        assert!(first.layer_indices.contains(&10));
+        assert!(first.layers_touched().contains(&10));
     }
 
     #[test]
@@ -290,5 +519,95 @@ mod tests {
         let f32_plan = BucketPlan::build(&m, 4096, 4);
         let f16_plan = BucketPlan::build(&m, 4096, 2);
         assert_eq!(f16_plan.total_bytes() * 2, f32_plan.total_bytes());
+    }
+
+    #[test]
+    fn row_blocks_tile_rows() {
+        assert_eq!(row_blocks(10, 0, 4), vec![(0, 10)]);
+        assert_eq!(row_blocks(10, 100, 4), vec![(0, 10)]); // 25 rows/chunk >= 10
+        assert_eq!(row_blocks(10, 8, 4), vec![(0, 2), (2, 4), (4, 6), (6, 8), (8, 10)]);
+        // Chunk smaller than one row: single-row blocks.
+        assert_eq!(row_blocks(3, 2, 4), vec![(0, 1), (1, 2), (2, 3)]);
+        // Remainder block at the top.
+        assert_eq!(row_blocks(7, 12, 4), vec![(0, 3), (3, 6), (6, 7)]);
+    }
+
+    #[test]
+    fn chunked_plan_splits_only_oversized_2d_layers() {
+        let m = chunky_manifest();
+        // fc1.w = 2048x32 = 65536 elems = 128 KiB f16; chunk at 8 KiB.
+        let plan = BucketPlan::build_chunked(&m, 8 * 1024, 2, 8 * 1024);
+        plan.validate(&m).unwrap();
+        assert!(plan.chunk_elems > 0);
+        let fc_chunks: Vec<&Piece> = plan
+            .buckets
+            .iter()
+            .flat_map(|b| &b.pieces)
+            .filter(|p| p.layer == 2)
+            .collect();
+        assert!(fc_chunks.len() > 1, "giant fc layer must be split");
+        assert!(fc_chunks.iter().all(|p| !p.is_whole()));
+        // Exactly one tail chunk (row 0), and it is the LAST fc piece in
+        // readiness order.
+        let tails: Vec<_> = fc_chunks.iter().filter(|p| p.is_layer_tail()).collect();
+        assert_eq!(tails.len(), 1);
+        // 1-D layers stay whole.
+        for b in &plan.buckets {
+            for p in &b.pieces {
+                if p.layer != 2 {
+                    assert!(p.is_whole(), "layer {} wrongly chunked", p.layer);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_plan_readiness_streams_the_tail_layer() {
+        let m = chunky_manifest();
+        let whole = BucketPlan::build(&m, 8 * 1024, 2);
+        let chunked = BucketPlan::build_chunked(&m, 8 * 1024, 2, 8 * 1024);
+        chunked.validate(&m).unwrap();
+        assert!(
+            chunked.buckets.len() > whole.buckets.len(),
+            "chunking must produce more readiness points ({} vs {})",
+            chunked.buckets.len(),
+            whole.buckets.len()
+        );
+        // The giant layer's high-row chunks come EARLIER in readiness
+        // order than its row-0 tail.
+        let fc_buckets: Vec<usize> = chunked
+            .buckets
+            .iter()
+            .filter(|b| b.pieces.iter().any(|p| p.layer == 2))
+            .map(|b| b.index)
+            .collect();
+        assert!(fc_buckets.len() > 1);
+        for w in fc_buckets.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn chunk_zero_is_whole_layer_plan() {
+        let m = chunky_manifest();
+        let a = BucketPlan::build(&m, 4096, 2);
+        let b = BucketPlan::build_chunked(&m, 4096, 2, 0);
+        assert_eq!(a.buckets, b.buckets);
+        assert_eq!(a.chunk_elems, 0);
+    }
+
+    #[test]
+    fn chunked_plans_validate_across_grain_sizes() {
+        let m = chunky_manifest();
+        for chunk in [1, 64, 512, 4096, 64 * 1024, 1 << 22] {
+            for target in [1, 2048, 16 * 1024, 1 << 22] {
+                let plan = BucketPlan::build_chunked(&m, target, 2, chunk);
+                plan.validate(&m)
+                    .unwrap_or_else(|e| panic!("chunk={chunk} target={target}: {e}"));
+                let covered: usize =
+                    plan.spans_with_padding().iter().map(|(lo, hi)| hi - lo).sum();
+                assert_eq!(covered, m.padded_param_count);
+            }
+        }
     }
 }

@@ -38,6 +38,15 @@ pub struct RunConfig {
     /// Bucket target size in bytes (paper III-C-1: "several megabytes" at
     /// ResNet-50 scale; default scales down with our smaller models).
     pub bucket_bytes: usize,
+    /// Row-chunk granularity in WIRE bytes for splitting oversized 2-D
+    /// fc weight layers into sub-layer bucket chunks, so a layer holding
+    /// most of the parameters streams to the wire mid-backward instead of
+    /// as one tail bucket. 0 disables chunking (whole-layer buckets).
+    /// Chunking changes the plan, so it changes the (deterministic)
+    /// reduction order — but never the schedule-vs-numerics contract: at
+    /// any fixed setting the pipelined and sequential executors stay
+    /// bit-identical.
+    pub chunk_bytes: usize,
     /// OS-thread budget for the communication phase: independent buckets
     /// are reduced on up to this many concurrent engine lanes, and any
     /// leftover budget parallelizes transfers inside each allreduce.
@@ -78,6 +87,7 @@ impl Default for RunConfig {
             ranks_per_node: 4,
             wire: "f16".into(),
             bucket_bytes: 16 * 1024,
+            chunk_bytes: 16 * 1024,
             comm_threads: 2,
             overlap: true,
             train_size: 4096,
@@ -140,6 +150,7 @@ impl RunConfig {
         c.ranks_per_node = args.get_usize("ranks-per-node", c.ranks_per_node)?;
         c.wire = args.get_or("wire", &c.wire).to_string();
         c.bucket_bytes = args.get_usize("bucket-bytes", c.bucket_bytes)?;
+        c.chunk_bytes = args.get_usize("chunk-bytes", c.chunk_bytes)?;
         c.comm_threads = args.get_usize("comm-threads", c.comm_threads)?;
         if args.flag("no-overlap") {
             c.overlap = false;
@@ -179,6 +190,7 @@ impl RunConfig {
             ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
             wire: get_str("wire", &d.wire),
             bucket_bytes: get_usize("bucket_bytes", d.bucket_bytes),
+            chunk_bytes: get_usize("chunk_bytes", d.chunk_bytes),
             comm_threads: get_usize("comm_threads", d.comm_threads),
             overlap: get_bool("overlap", d.overlap),
             train_size: get_usize("train_size", d.train_size),
@@ -262,12 +274,13 @@ mod tests {
     #[test]
     fn json_round() {
         let c = RunConfig::from_json(
-            r#"{"workers": 2, "allreduce": "ring", "overlap": false, "peak_lr": 0.8, "comm_threads": 4}"#,
+            r#"{"workers": 2, "allreduce": "ring", "overlap": false, "peak_lr": 0.8, "comm_threads": 4, "chunk_bytes": 0}"#,
         )
         .unwrap();
         assert_eq!(c.workers, 2);
         assert!(!c.overlap);
         assert_eq!(c.comm_threads, 4);
+        assert_eq!(c.chunk_bytes, 0, "chunk_bytes 0 (chunking off) must round-trip");
         assert_eq!(c.algorithm().unwrap(), Algorithm::Ring);
     }
 

@@ -8,14 +8,17 @@
 //!   PERSISTENT worker pool (grad workers + comm lanes living for the
 //!   whole run, fed per step over channels) where each worker streams
 //!   gradient buckets in backward-readiness order through the engine's
-//!   `grad_step_streamed` API, a per-bucket readiness ledger triggers each
-//!   bucket's allreduce the moment all workers published it — while later
-//!   buckets are still being computed — and the leader streams the
-//!   LARS/momentum update per bucket as reductions land. Communication
-//!   genuinely hides behind backward; `StepBreakdown` accounts the
-//!   exposed-vs-hidden split and `Trainer::pipeline_trace` hands the
-//!   measured timeline to `overlap::MeasuredPipeline` for simulator
-//!   calibration.
+//!   `grad_step_streamed` API — at row-CHUNK granularity under a chunked
+//!   `BucketPlan` (`cfg.chunk_bytes`), so even a layer holding ~96% of
+//!   the parameters reaches the wire mid-backward — a readiness ledger
+//!   triggers each bucket's allreduce the moment all workers published it
+//!   (while later chunks are still being computed), and the leader
+//!   streams the LARS/momentum update per layer as its last chunk's
+//!   reduction lands (full-layer norms, so LARS stays chunk-safe).
+//!   Communication genuinely hides behind backward; `StepBreakdown`
+//!   accounts the exposed-vs-hidden split and `Trainer::pipeline_trace`
+//!   hands the measured timeline to `overlap::MeasuredPipeline` for
+//!   simulator calibration.
 //! * **Sequential** (`cfg.overlap = false`, and the PJRT backend) — the
 //!   barrier reference: full grad phase, then bucketed allreduce
 //!   (split-borrowed spans over concurrent `CommEngine` lanes), then a
@@ -210,7 +213,12 @@ impl Trainer {
             .collect();
         let precision = cfg.precision()?;
         let algo = cfg.algorithm()?;
-        let plan = BucketPlan::build(m, cfg.bucket_bytes, precision.bytes_per_elem());
+        let plan = BucketPlan::build_chunked(
+            m,
+            cfg.bucket_bytes,
+            precision.bytes_per_elem(),
+            cfg.chunk_bytes,
+        );
         plan.validate(m)?;
         let schedule = cfg.schedule();
         let logger = MlperfLogger::new("yasgd/coordinator.rs", cfg.mlperf_echo);

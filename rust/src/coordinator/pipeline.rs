@@ -75,6 +75,7 @@ impl Trainer {
                     idxs: all_idxs[w].clone(),
                     accum_inv,
                     variant,
+                    chunk_elems: self.plan.chunk_elems,
                     spans: self.bucket_spans.clone(),
                     ready: ready.clone(),
                 },
@@ -117,38 +118,54 @@ impl Trainer {
         // ---- streamed master update (leader) ---------------------------
         // Applied per bucket as its reduction lands, overlapping the comm
         // tail: bucket i's layers are updated while later buckets are
-        // still on the wire. Buckets hold whole layers and the layer
-        // kernel is shared with Engine::update, so the stream is
-        // bit-identical to one whole-buffer update. Skipped entirely when
-        // the grad phase failed — params stay at their pre-step values.
+        // still on the wire. A layer updates the moment its LAST piece is
+        // reduced — for whole-layer pieces that is its own bucket; for a
+        // row-chunked layer it is the bucket carrying the row-0 chunk
+        // (every higher-row chunk lives in an earlier, already-reduced
+        // bucket). Deferring to that point is what keeps LARS
+        // chunk-boundary-safe: `update_span` sees the full layer, so the
+        // trust ratio always comes from FULL-layer norms, never a chunk's
+        // — and the layer kernel is shared with `Engine::update`, so the
+        // stream is bit-identical to one whole-buffer update. Skipped
+        // entirely when the grad phase failed — params stay at their
+        // pre-step values.
         let lr = self.schedule.lr_at(self.step_idx) as f32;
         let rule = if self.cfg.lars { UpdateRule::Lars } else { UpdateRule::Sgd };
+        let engine = self.engine.clone();
         let mut update_active_s = 0.0f64;
         if first_err.is_none() {
             for i in 0..nb {
                 reduced.wait(i);
-                let (lo, hi) = self.bucket_spans[i];
                 let tu = Instant::now();
-                // SAFETY: the span is quiescent — bucket i's lane dropped
-                // its views before publishing `reduced` (mutex ordering),
-                // the leader is past the worker barrier above, and other
-                // lanes only touch other buckets' disjoint spans.
-                let g_span = unsafe { grad_bufs[0].slice(lo, hi) };
-                let res = self.engine.update_span(
-                    rule,
-                    &mut self.params[lo..hi],
-                    &mut self.momentum[lo..hi],
-                    g_span,
-                    lo,
-                    &self.plan.buckets[i].layer_indices,
-                    lr,
-                );
-                update_active_s += tu.elapsed().as_secs_f64();
-                if let Err(e) = res {
-                    if first_err.is_none() {
-                        first_err = Some(e);
+                for piece in &self.plan.buckets[i].pieces {
+                    if !piece.is_layer_tail() {
+                        continue; // higher-row chunk: deferred to the row-0 chunk
+                    }
+                    let l = &engine.manifest().layers[piece.layer];
+                    let (lo, hi) = (l.offset, l.offset + l.size);
+                    // SAFETY: the layer span is quiescent — it lies inside
+                    // buckets 0..=i, whose lanes dropped their views
+                    // before publishing `reduced` (mutex ordering, waited
+                    // in order above), the leader is past the worker
+                    // barrier, and other lanes only touch later buckets'
+                    // disjoint spans.
+                    let g_span = unsafe { grad_bufs[0].slice(lo, hi) };
+                    let res = engine.update_span(
+                        rule,
+                        &mut self.params[lo..hi],
+                        &mut self.momentum[lo..hi],
+                        g_span,
+                        lo,
+                        &[piece.layer],
+                        lr,
+                    );
+                    if let Err(e) = res {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
                     }
                 }
+                update_active_s += tu.elapsed().as_secs_f64();
             }
         }
 

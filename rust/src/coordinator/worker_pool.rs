@@ -6,8 +6,12 @@
 //!   `Arc<Engine>`/`Arc<Synthetic>`; fed one [`WorkerJob`] per step over a
 //!   private channel. A worker runs its micro-batches, accumulates into
 //!   its packed gradient buffer and — on the final micro-batch — streams
-//!   the engine's backward-order span emissions into the per-bucket
-//!   readiness [`Ledger`].
+//!   the engine's backward-order span emissions into the readiness
+//!   [`Ledger`]. Under a chunked `BucketPlan` the emissions (and hence the
+//!   ledger's readiness points) are per row-CHUNK, not per layer: the
+//!   frontier crosses a giant fc layer's bucket boundaries while its
+//!   backward is still running, which is what lets the tail layer stop
+//!   serializing the pipeline.
 //! * `lanes` COMM threads, each owning a persistent `CommEngine` (so chunk
 //!   plans stay cached across steps). Lane `l` handles buckets
 //!   `l, l+lanes, …`: it blocks until ALL workers have published a bucket,
@@ -198,6 +202,10 @@ pub(crate) struct WorkerJob {
     pub(crate) idxs: Vec<Vec<usize>>,
     pub(crate) accum_inv: f32,
     pub(crate) variant: GradVariant,
+    /// Engine emission granularity (`BucketPlan::chunk_elems`): fc weight
+    /// gradients stream in row blocks of ~this many elements so the
+    /// frontier crosses chunked bucket boundaries mid-backward.
+    pub(crate) chunk_elems: usize,
     pub(crate) spans: Arc<Vec<(usize, usize)>>,
     pub(crate) ready: Arc<Ledger>,
 }
@@ -412,6 +420,7 @@ fn run_grad_job(
                 bn_state,
                 &batch.images,
                 &batch.labels,
+                job.chunk_elems,
                 &mut |lo, hi, src| {
                     {
                         // SAFETY: span [lo, hi) is unpublished (the cursor

@@ -9,8 +9,8 @@
 //!
 //! Common options: --artifacts DIR, --workers N, --steps N, --lr X,
 //! --allreduce ring|hd|hier|naive, --wire f16|f32, --bucket-bytes N,
-//! --comm-threads N, --no-lars, --no-smoothing, --no-overlap,
-//! --mlperf-log, --threaded.
+//! --chunk-bytes N (0 = whole-layer buckets), --comm-threads N,
+//! --no-lars, --no-smoothing, --no-overlap, --mlperf-log, --threaded.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -23,7 +23,8 @@ use yasgd::util::cli::Args;
 const KNOWN_OPTS: &[&str] = &[
     "artifacts", "config", "workers", "grad-accum", "steps", "eval-every", "eval-batches",
     "seed", "lr", "warmup-frac", "decay", "no-lars", "no-smoothing", "allreduce",
-    "ranks-per-node", "wire", "bucket-bytes", "comm-threads", "no-overlap", "train-size",
+    "ranks-per-node", "wire", "bucket-bytes", "chunk-bytes", "comm-threads", "no-overlap",
+    "train-size",
     "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",
     "save-checkpoint", "resume",
 ];

@@ -112,6 +112,20 @@ impl StepBreakdown {
         (1.0 - exposed / total).clamp(0.0, 1.0)
     }
 
+    /// Fraction of communication activity the step actually PAID for
+    /// (`Σ exposed / Σ comm`, clamped to [0, 1]; 0 when no comm was
+    /// recorded) — the headline number `benches/pipeline.rs` tracks for
+    /// chunked vs unchunked plans. Complements [`Self::overlap_efficiency`]
+    /// except in the vacuous no-comm case.
+    pub fn exposed_comm_frac(&self) -> f64 {
+        let total = self.comm_s.mean() * self.comm_s.count() as f64;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let exposed = self.comm_exposed_s.mean() * self.comm_exposed_s.count() as f64;
+        (exposed / total).clamp(0.0, 1.0)
+    }
+
     pub fn report(&self) -> String {
         let f = |name: &str, s: &Summary| {
             format!(
@@ -233,5 +247,22 @@ mod tests {
         n.comm_s.push(0.010);
         n.comm_exposed_s.push(0.011);
         assert_eq!(n.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn exposed_comm_frac_complements_overlap_efficiency() {
+        let b = StepBreakdown::default();
+        // No comm recorded: nothing was exposed.
+        assert_eq!(b.exposed_comm_frac(), 0.0);
+        let mut p = StepBreakdown::default();
+        p.comm_s.push(0.010);
+        p.comm_exposed_s.push(0.004);
+        assert!((p.exposed_comm_frac() - 0.4).abs() < 1e-9);
+        assert!((p.exposed_comm_frac() + p.overlap_efficiency() - 1.0).abs() < 1e-9);
+        // Clamped against timer noise.
+        let mut n = StepBreakdown::default();
+        n.comm_s.push(0.010);
+        n.comm_exposed_s.push(0.012);
+        assert_eq!(n.exposed_comm_frac(), 1.0);
     }
 }

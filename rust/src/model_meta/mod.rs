@@ -198,6 +198,40 @@ impl Manifest {
         Ok(())
     }
 
+    /// Test-fixture builder: a valid manifest from `(name, kind, shape)`
+    /// layer specs, routed through [`Manifest::parse`] so fixtures keep
+    /// exercising the parser. `lars_skip` follows the production rule
+    /// (everything but conv / fc_w weights skips). The one builder shared
+    /// by the `bucket` / `overlap` unit-test fixtures — extend it here
+    /// rather than hand-rolling another manifest-JSON assembler.
+    #[cfg(test)]
+    pub(crate) fn from_layer_specs(model: &str, specs: &[(&str, &str, &[usize])]) -> Manifest {
+        let mut layers = String::new();
+        let mut off = 0usize;
+        for (i, (name, kind, shape)) in specs.iter().enumerate() {
+            if i > 0 {
+                layers.push(',');
+            }
+            let size: usize = shape.iter().product();
+            let shape_s = shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",");
+            let skip = *kind != "conv" && *kind != "fc_w";
+            layers.push_str(&format!(
+                r#"{{"name":"{name}","kind":"{kind}","shape":[{shape_s}],"size":{size},"offset":{off},"lars_skip":{skip}}}"#
+            ));
+            off += size;
+        }
+        let np = ((off + 1023) / 1024) * 1024;
+        Manifest::parse(&format!(
+            r#"{{"format_version":1,
+            "model":{{"name":"{model}","num_classes":10,"image_size":32,"channels":3}},
+            "train":{{"momentum":0.9,"weight_decay":0.0005,"lars_eta":0.001,"lars_eps":1e-9,"label_smoothing":0.1,"batch_size":32}},
+            "param_count":{off},"padded_param_count":{np},"state_count":0,"num_layers":{nl},
+            "pallas_tile":1024,"layers":[{layers}],"states":[],"artifacts":{{}}}}"#,
+            nl = specs.len()
+        ))
+        .expect("spec-built manifest must parse")
+    }
+
     /// Bytes of one full gradient exchange in fp32 / fp16.
     pub fn grad_bytes_f32(&self) -> usize {
         self.param_count * 4

@@ -18,7 +18,7 @@
 //!   (un-hidden) communication, and the hidden fraction — the numbers the
 //!   A5 ablation and Fig 2's overlap factor come from.
 
-use crate::bucket::BucketPlan;
+use crate::bucket::{BucketPlan, Piece};
 use crate::model_meta::{LayerKind, Manifest};
 
 /// Per-layer backward completion times, normalized to a total duration.
@@ -58,6 +58,25 @@ impl BackwardProfile {
         }
         BackwardProfile { ready_s: ready, total_backward_s }
     }
+}
+
+/// When `piece`'s gradient materializes during backward (seconds from
+/// backward start). A whole layer completes at the layer's completion
+/// instant; a row CHUNK completes partway through the layer's backward
+/// interval — weight-gradient rows stream top-down, so a chunk covering
+/// rows [row_lo, row_hi) is final when the row frontier reaches `row_lo`,
+/// i.e. after a `(nrows - row_lo) / nrows` fraction of the layer's
+/// backward (rows modelled as uniform cost). This is the chunk-aware
+/// readiness model: it is exactly why chunked plans hide the tail layer's
+/// communication — its early chunks become eligible mid-layer.
+pub fn piece_ready(profile: &BackwardProfile, piece: &Piece) -> f64 {
+    let nl = profile.ready_s.len();
+    let end = profile.ready_s[piece.layer];
+    // Backward visits layers back-to-front, so layer li starts when layer
+    // li+1 completes (the model's last layer starts at t = 0).
+    let start = if piece.layer + 1 < nl { profile.ready_s[piece.layer + 1] } else { 0.0 };
+    let frac = (piece.nrows - piece.row_lo) as f64 / piece.nrows as f64;
+    start + (end - start) * frac
 }
 
 /// Relative backward cost per layer: convs dominate and scale with
@@ -138,14 +157,11 @@ pub fn simulate_channels(
     let mut total_comm = 0.0;
 
     for (i, b) in plan.buckets.iter().enumerate() {
-        // Bucket ready when its LAST layer (in backward order) completes;
-        // layers are stored in forward order, so that is the minimum index
-        // = the earliest layer in forward order = the last to finish.
+        // Bucket ready when its LAST piece (in backward order) completes —
+        // the piece with the lowest packed offset, which [`piece_ready`]
+        // prices chunk-aware (a row chunk finishes mid-layer).
         let ready = if overlap {
-            b.layer_indices
-                .iter()
-                .map(|&li| profile.ready_s[li])
-                .fold(0.0f64, f64::max)
+            b.pieces.iter().map(|p| piece_ready(profile, p)).fold(0.0f64, f64::max)
         } else {
             profile.total_backward_s
         };
@@ -335,7 +351,7 @@ mod tests {
         let rep = simulate(&plan, &prof, true, |_| 1e-3);
         for (i, b) in plan.buckets.iter().enumerate() {
             let ready =
-                b.layer_indices.iter().map(|&li| prof.ready_s[li]).fold(0.0f64, f64::max);
+                b.pieces.iter().map(|p| piece_ready(&prof, p)).fold(0.0f64, f64::max);
             assert!(rep.comm_spans[i].0 >= ready - 1e-12);
         }
     }
@@ -467,5 +483,78 @@ mod tests {
         let w = layer_flop_weights(&m);
         // conv l0 (432 elems x 1024 px) >> bn l1 (64 elems)
         assert!(w[0] > w[1] * 100.0);
+    }
+
+    /// A manifest dominated by one giant 2-D fc layer — the tail-bucket
+    /// pathology row-chunking exists for.
+    fn fc_heavy_manifest() -> Manifest {
+        Manifest::from_layer_specs(
+            "fh",
+            &[("l0", "conv", &[432]), ("l1", "fc_w", &[8192, 32]), ("l2", "fc_b", &[32])],
+        )
+    }
+
+    #[test]
+    fn chunk_readiness_interpolates_within_the_layer() {
+        let m = fc_heavy_manifest();
+        let prof = BackwardProfile::uniform(&m, 3.0);
+        let plan = BucketPlan::build_chunked(&m, 16 * 1024, 2, 16 * 1024);
+        plan.validate(&m).unwrap();
+        let chunks: Vec<&Piece> = plan
+            .buckets
+            .iter()
+            .flat_map(|b| &b.pieces)
+            .filter(|p| p.layer == 1 && !p.is_whole())
+            .collect();
+        assert!(chunks.len() >= 2, "fc layer must be split");
+        // Layer 1's backward runs in (ready_s[2], ready_s[1]]; every chunk
+        // lands strictly inside except the row-0 tail, which lands exactly
+        // at the layer's completion.
+        let (start, end) = (prof.ready_s[2], prof.ready_s[1]);
+        for p in &chunks {
+            let r = piece_ready(&prof, p);
+            assert!(r > start - 1e-12 && r <= end + 1e-12, "chunk ready {r} outside layer");
+            if p.is_layer_tail() {
+                assert!((r - end).abs() < 1e-12, "row-0 chunk must land at layer completion");
+            } else {
+                assert!(r < end - 1e-12, "higher-row chunk must land before layer completion");
+            }
+        }
+        // Readiness decreases with row_lo: higher rows finish earlier.
+        let mut by_bucket: Vec<f64> = Vec::new();
+        for b in &plan.buckets {
+            if let Some(p) = b.pieces.iter().find(|p| p.layer == 1) {
+                by_bucket.push(piece_ready(&prof, p));
+            }
+        }
+        for w in by_bucket.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "chunk readiness must follow bucket order");
+        }
+    }
+
+    #[test]
+    fn chunking_reduces_simulated_exposed_comm() {
+        // The acceptance-shaped property, in the deterministic simulator:
+        // with a giant tail fc layer, a chunked plan exposes LESS
+        // communication than the whole-layer plan at 1 and 2 lanes.
+        // (Uniform profile + a comm rate that makes the whole-fc bucket's
+        // allreduce spill past the end of backward.)
+        let m = fc_heavy_manifest();
+        let prof = BackwardProfile::uniform(&m, 0.002);
+        let comm = |bytes: usize| bytes as f64 * 2e-9 + 2e-6;
+        let whole = BucketPlan::build(&m, 16 * 1024, 2);
+        let chunked = BucketPlan::build_chunked(&m, 16 * 1024, 2, 16 * 1024);
+        assert!(chunked.buckets.len() > whole.buckets.len());
+        for channels in [1usize, 2] {
+            let w = simulate_channels(&whole, &prof, true, channels, comm);
+            let c = simulate_channels(&chunked, &prof, true, channels, comm);
+            assert!(
+                c.exposed_comm_s < w.exposed_comm_s,
+                "{channels} lanes: chunked exposed {} !< whole exposed {}",
+                c.exposed_comm_s,
+                w.exposed_comm_s
+            );
+            assert!(c.step_span_s <= w.step_span_s + 1e-12);
+        }
     }
 }

@@ -5,10 +5,16 @@
 //! The streaming pair is what the pipelined step executor builds on:
 //! `grad_step_streamed` publishes packed-buffer gradient spans in
 //! backward-readiness order (so allreduce can start while backward is
-//! still running), and `update_span` applies the LARS/SGD master update to
-//! one bucket's layers in place as its reduction lands. The stub engine
-//! streams for real; the PJRT engine keeps a whole-buffer fallback
-//! (`supports_pipeline` tells the coordinator which executor to pick).
+//! still running) — with `chunk_elems > 0` it additionally splits fc
+//! weight gradients into row chunks emitted as their outer products
+//! complete, so even a layer holding ~96% of the parameters streams to
+//! the wire mid-backward instead of as one tail span — and `update_span`
+//! applies the LARS/SGD master update to whole layers in place as their
+//! reductions land (for a chunked layer, once its final chunk lands, so
+//! the trust ratio always comes from full-layer norms). The stub engine
+//! streams for real; the PJRT engine coalesces chunks back to a
+//! whole-buffer fallback (`supports_pipeline` tells the coordinator which
+//! executor to pick).
 //!
 //! Two interchangeable backends:
 //!

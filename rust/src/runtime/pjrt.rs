@@ -112,11 +112,13 @@ impl Engine {
     }
 
     /// Whole-buffer fallback for the bucket-streaming grad API: XLA runs
-    /// the entire backward as one fused executable, so per-layer readiness
-    /// is not observable — the full gradient is emitted as ONE span once
-    /// the executable returns. Callers get correct (if unoverlapped)
-    /// pipeline semantics; real streaming would need a multi-output
-    /// artifact (ROADMAP).
+    /// the entire backward as one fused executable, so per-layer (let
+    /// alone per row-chunk) readiness is not observable — chunk requests
+    /// are coalesced and the full gradient is emitted as ONE span once the
+    /// executable returns. Callers get correct (if unoverlapped) pipeline
+    /// semantics; real streaming would need a multi-output artifact
+    /// (ROADMAP).
+    #[allow(clippy::too_many_arguments)]
     pub fn grad_step_streamed(
         &self,
         variant: GradVariant,
@@ -124,6 +126,7 @@ impl Engine {
         bn_state: &[f32],
         images: &[f32],
         labels: &[i32],
+        _chunk_elems: usize,
         emit: &mut dyn FnMut(usize, usize, &[f32]),
     ) -> Result<GradOutput> {
         let out = self.grad_step(variant, params, bn_state, images, labels)?;

@@ -148,7 +148,7 @@ impl Engine {
         images: &[f32],
         labels: &[i32],
     ) -> Result<GradOutput> {
-        self.grad_step_streamed(variant, params, bn_state, images, labels, &mut |_, _, _| {})
+        self.grad_step_streamed(variant, params, bn_state, images, labels, 0, &mut |_, _, _| {})
     }
 
     /// Streaming gradient step (the pipelined executor's backbone): runs
@@ -159,11 +159,20 @@ impl Engine {
     /// descending, and tile `[0, padded_param_count)` exactly (the padded
     /// tail rides with the first span).
     ///
+    /// `chunk_elems > 0` additionally streams every fc WEIGHT gradient in
+    /// row blocks of ~`chunk_elems` elements (boundaries from
+    /// [`crate::bucket::row_blocks`], so they line up with a chunked
+    /// `BucketPlan` built at the same granularity), emitted back-to-front
+    /// as the `dW[r] = x[:, r]ᵀ · dy` outer products complete. Per-element
+    /// accumulation runs in batch order exactly as the whole-layer kernel
+    /// does, so chunked emission is bit-identical to `chunk_elems == 0`.
+    ///
     /// Contract (what the pipelined executor's safety argument rests on):
     /// after `emit(lo, hi, ..)` returns, this call never again READS
     /// `params[lo..hi]` nor writes `grads[lo..hi]` — so the caller may
     /// hand the span to a concurrent allreduce and then overwrite those
     /// parameters while backward continues on earlier layers.
+    #[allow(clippy::too_many_arguments)]
     pub fn grad_step_streamed(
         &self,
         variant: GradVariant,
@@ -171,6 +180,7 @@ impl Engine {
         bn_state: &[f32],
         images: &[f32],
         labels: &[i32],
+        chunk_elems: usize,
         emit: &mut dyn FnMut(usize, usize, &[f32]),
     ) -> Result<GradOutput> {
         let m = &self.manifest;
@@ -215,16 +225,19 @@ impl Engine {
         let mut dlogits = vec![0.0f32; BATCH * K];
         let (loss, correct) = softmax_ce(&logits, labels, smoothing, &mut dlogits);
 
-        // ---- backward (streaming: spans emitted back-to-front) --------
+        // ---- backward (streaming: spans emitted back-to-front; fc weight
+        // gradients additionally stream in row chunks) ------------------
         let mut grads = vec![0.0f32; m.padded_param_count];
-        // fc3
-        matmul_xt_dy(&r2, &dlogits, &mut grads[O_W3..O_B3], BATCH, H2, K);
+        // fc3: bias gradient, then dx (the LAST read of w3 — after it,
+        // params[O_W3..] are dead to this call), then the weight gradient
+        // streamed in row blocks. The bias span plus the zero padded tail
+        // is published first; each dW3 row block is final (and emitted)
+        // the moment its outer products complete.
         col_sums(&dlogits, &mut grads[O_B3..PARAMS], BATCH, K);
         let mut dr2 = vec![0.0f32; BATCH * H2];
-        // Last read of w3 — after this, params[O_W3..] are dead to this call,
-        // so the fc3 span (plus the zero padded tail) can be published.
         matmul_dy_wt(&dlogits, w3, &mut dr2, BATCH, H2, K);
-        emit(O_W3, PADDED, &grads[O_W3..PADDED]);
+        emit(O_B3, PADDED, &grads[O_B3..PADDED]);
+        stream_fc_grad(&r2, &dlogits, &mut grads, O_W3, BATCH, H2, K, chunk_elems, emit);
         // relu2 + bn2
         let da2: Vec<f32> = dr2.iter().zip(&a2).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
         let mut dz2 = vec![0.0f32; BATCH * H2];
@@ -233,11 +246,10 @@ impl Engine {
             bn2.backward(&da2, &xh2, g2, BATCH, &mut dz2, dgamma, dbeta);
         }
         emit(O_G2, O_W3, &grads[O_G2..O_W3]);
-        // fc2
-        matmul_xt_dy(&r1, &dz2, &mut grads[O_W2..O_G2], BATCH, H1, H2);
+        // fc2: dx first (the last read of w2), then the streamed dW2.
         let mut dr1 = vec![0.0f32; BATCH * H1];
         matmul_dy_wt(&dz2, w2, &mut dr1, BATCH, H1, H2);
-        emit(O_W2, O_G2, &grads[O_W2..O_G2]);
+        stream_fc_grad(&r1, &dz2, &mut grads, O_W2, BATCH, H1, H2, chunk_elems, emit);
         // relu1 + bn1
         let da1: Vec<f32> = dr1.iter().zip(&a1).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
         let mut dz1 = vec![0.0f32; BATCH * H1];
@@ -246,9 +258,9 @@ impl Engine {
             bn1.backward(&da1, &xh1, g1, BATCH, &mut dz1, dgamma, dbeta);
         }
         emit(O_G1, O_W2, &grads[O_G1..O_W2]);
-        // fc1
-        matmul_xt_dy(images, &dz1, &mut grads[O_W1..O_G1], BATCH, D, H1);
-        emit(O_W1, O_G1, &grads[O_W1..O_G1]);
+        // fc1: the giant layer this streaming exists for — no dx needed,
+        // its weight-gradient rows flow straight to the wire.
+        stream_fc_grad(images, &dz1, &mut grads, O_W1, BATCH, D, H1, chunk_elems, emit);
 
         // ---- BN running statistics (EMA of batch moments) ------------
         let mut new_state = bn_state.to_vec();
@@ -288,12 +300,18 @@ impl Engine {
     }
 
     /// In-place master update restricted to the manifest layers listed in
-    /// `layer_indices` — the streamed per-bucket update the pipelined
-    /// executor applies as each bucket's allreduce lands. `params` /
-    /// `momentum` / `grads` are the SPAN `[span_lo, span_lo + len)` of the
-    /// packed buffers (layer offsets are absolute; `span_lo` rebases
-    /// them). Layers are whole-contained in buckets, so per-bucket calls
-    /// over a step are bit-identical to one whole-buffer [`Engine::update`].
+    /// `layer_indices` — the streamed update the pipelined executor
+    /// applies as reductions land. `params` / `momentum` / `grads` are
+    /// the SPAN `[span_lo, span_lo + len)` of the packed buffers (layer
+    /// offsets are absolute; `span_lo` rebases them).
+    ///
+    /// Every listed layer must be WHOLE-contained in the span: the LARS
+    /// trust ratio is computed from the slice this call sees, so passing
+    /// a row chunk of a split layer would silently use partial-layer
+    /// norms. Under a chunked `BucketPlan` the caller must therefore
+    /// defer a split layer to its row-0 chunk and pass the full layer
+    /// span (what `coordinator::pipeline` does); whole-layer calls over a
+    /// step are then bit-identical to one whole-buffer [`Engine::update`].
     #[allow(clippy::too_many_arguments)]
     pub fn update_span(
         &self,
@@ -401,18 +419,56 @@ fn matmul(x: &[f32], w: &[f32], out: &mut [f32], bsz: usize, din: usize, dout: u
     }
 }
 
-/// dw[d, j] = Σ_b x[b, d] · dy[b, j]
-fn matmul_xt_dy(x: &[f32], dy: &[f32], dw: &mut [f32], bsz: usize, din: usize, dout: usize) {
-    debug_assert_eq!(dw.len(), din * dout);
+/// dw[d - r_lo, j] = Σ_b x[b, d] · dy[b, j] for rows d in
+/// [r_lo, r_lo + dw.len()/dout). Per-element accumulation runs in batch
+/// order regardless of the row window, so computing a layer's gradient in
+/// any row-block partition is bit-identical to one whole-layer call.
+fn matmul_xt_dy_rows(
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    r_lo: usize,
+) {
+    debug_assert_eq!(dw.len() % dout, 0, "gradient span must cover whole rows");
+    let rows = dw.len() / dout;
+    debug_assert!(r_lo + rows <= din);
     dw.fill(0.0);
     for b in 0..bsz {
-        let xr = &x[b * din..(b + 1) * din];
+        let xr = &x[b * din + r_lo..b * din + r_lo + rows];
         let dyr = &dy[b * dout..(b + 1) * dout];
         for (xv, wrow) in xr.iter().zip(dw.chunks_exact_mut(dout)) {
             for (o, dv) in wrow.iter_mut().zip(dyr) {
                 *o += xv * dv;
             }
         }
+    }
+}
+
+/// Stream one fc layer's weight gradient dW = xᵀ·dy into
+/// `grads[o_w .. o_w + din*dout]` in row blocks, BACK-TO-FRONT (highest
+/// rows first), emitting each block the moment it is final. Block
+/// boundaries come from [`crate::bucket::row_blocks`] so they line up
+/// with a chunked `BucketPlan` of the same granularity; `chunk_elems == 0`
+/// emits the whole matrix as one span.
+#[allow(clippy::too_many_arguments)]
+fn stream_fc_grad(
+    x: &[f32],
+    dy: &[f32],
+    grads: &mut [f32],
+    o_w: usize,
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    chunk_elems: usize,
+    emit: &mut dyn FnMut(usize, usize, &[f32]),
+) {
+    for &(r_lo, r_hi) in crate::bucket::row_blocks(din, chunk_elems, dout).iter().rev() {
+        let (lo, hi) = (o_w + r_lo * dout, o_w + r_hi * dout);
+        matmul_xt_dy_rows(x, dy, &mut grads[lo..hi], bsz, din, dout, r_lo);
+        emit(lo, hi, &grads[lo..hi]);
     }
 }
 
@@ -788,6 +844,7 @@ mod tests {
             &state,
             &images,
             &labels,
+            0,
             &mut |lo, hi, src| {
                 assert_eq!(src.len(), hi - lo);
                 spans.push((lo, hi));
@@ -816,6 +873,7 @@ mod tests {
                 &state,
                 &images,
                 &labels,
+                0,
                 &mut |lo, hi, src| assembled[lo..hi].copy_from_slice(src),
             )
             .unwrap();
@@ -845,11 +903,147 @@ mod tests {
             for (i, b) in plan.buckets.iter().enumerate() {
                 let (lo, hi) = plan.span_with_padding(i);
                 let (p_span, m_span) = (&mut got_p[lo..hi], &mut got_m[lo..hi]);
-                e.update_span(rule, p_span, m_span, &grads[lo..hi], lo, &b.layer_indices, 0.3)
+                e.update_span(rule, p_span, m_span, &grads[lo..hi], lo, &b.layers_touched(), 0.3)
                     .unwrap();
             }
             assert_eq!(want_p, got_p, "{rule:?}: streamed params diverged");
             assert_eq!(want_m, got_m, "{rule:?}: streamed momentum diverged");
+        }
+    }
+
+    /// Chunked streaming must emit contiguous descending spans that tile
+    /// the padded buffer and reassemble the whole-buffer gradient
+    /// bit-identically at every chunk granularity.
+    #[test]
+    fn chunked_streaming_reassembles_bitwise() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(53);
+        let whole = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        let mut prev_span_count = 0usize;
+        for chunk_elems in [0usize, 8192, 1024, 96] {
+            let mut assembled = vec![f32::NAN; PADDED];
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            let out = e
+                .grad_step_streamed(
+                    GradVariant::Smoothed,
+                    &params,
+                    &state,
+                    &images,
+                    &labels,
+                    chunk_elems,
+                    &mut |lo, hi, src| {
+                        assembled[lo..hi].copy_from_slice(src);
+                        spans.push((lo, hi));
+                    },
+                )
+                .unwrap();
+            assert_eq!(spans.first().unwrap().1, PADDED, "chunk={chunk_elems}");
+            assert_eq!(spans.last().unwrap().0, 0, "chunk={chunk_elems}");
+            for w in spans.windows(2) {
+                assert_eq!(w[1].1, w[0].0, "chunk={chunk_elems}: spans must descend contiguously");
+            }
+            assert_eq!(whole.loss, out.loss, "chunk={chunk_elems}");
+            assert_eq!(whole.grads, out.grads, "chunk={chunk_elems}: returned grads diverged");
+            assert_eq!(whole.grads, assembled, "chunk={chunk_elems}: reassembly diverged");
+            // Finer chunks -> strictly more spans (the list above descends).
+            assert!(
+                prev_span_count == 0 || spans.len() > prev_span_count,
+                "chunk={chunk_elems}: {} spans, previous {}",
+                spans.len(),
+                prev_span_count
+            );
+            prev_span_count = spans.len();
+        }
+    }
+
+    /// The point of chunked emission: under a chunked plan, buckets become
+    /// publishable THROUGHOUT backward instead of piling up on the final
+    /// fc1.w emission. Simulates the worker pool's frontier cursor over
+    /// the emitted spans: with matching chunk granularity every bucket but
+    /// the last is publishable before the final emission, while unchunked
+    /// emission leaves every fc1.w bucket stuck behind the last span.
+    #[test]
+    fn chunked_emission_publishes_buckets_early() {
+        let e = engine();
+        let m = stub_manifest();
+        let (params, state, images, labels) = inputs(59);
+        // How many buckets become publishable strictly before the FINAL
+        // emitted span, under a frontier cursor (publish bucket i once the
+        // emitted frontier has descended to or past its span lo).
+        let published_early = |chunk_elems: usize, spans: &[(usize, usize)]| -> usize {
+            let mut frontiers: Vec<usize> = Vec::new();
+            e.grad_step_streamed(
+                GradVariant::Smoothed,
+                &params,
+                &state,
+                &images,
+                &labels,
+                chunk_elems,
+                &mut |lo, _, _| frontiers.push(lo),
+            )
+            .unwrap();
+            let before_last = frontiers[frontiers.len() - 2]; // frontier before the final span
+            spans.iter().filter(|&&(lo, _)| lo >= before_last).count()
+        };
+        let plan = crate::bucket::BucketPlan::build_chunked(&m, 2 * 1024, 2, 2 * 1024);
+        plan.validate(&m).unwrap();
+        assert!(plan.buckets.iter().any(|b| b.has_chunks()), "fc1.w must be split");
+        let spans = plan.spans_with_padding();
+        let nb = spans.len();
+        let early_chunked = published_early(plan.chunk_elems, &spans);
+        let early_unchunked = published_early(0, &spans);
+        assert_eq!(
+            early_chunked,
+            nb - 1,
+            "chunked emission must make every bucket but the last publishable early"
+        );
+        assert!(
+            early_unchunked < nb - 1,
+            "unchunked emission should leave fc1.w buckets stuck behind the final span \
+             ({early_unchunked} of {nb} early)"
+        );
+    }
+
+    /// LARS chunk-safety regression (the per-layer-norm / per-chunk-apply
+    /// split): replaying the pipelined executor's deferred update order —
+    /// a split layer is updated as ONE span when its row-0 chunk lands, so
+    /// the trust ratio always comes from full-layer norms — must be
+    /// bit-identical to the whole-buffer update.
+    #[test]
+    fn chunk_deferred_lars_matches_whole_update() {
+        let e = engine();
+        let m = stub_manifest();
+        let (params, _, _, _) = inputs(61);
+        let momentum: Vec<f32> =
+            (0..PADDED).map(|i| if i < PARAMS { ((i % 17) as f32 - 8.0) * 1e-3 } else { 0.0 }).collect();
+        let grads: Vec<f32> =
+            (0..PADDED).map(|i| if i < PARAMS { ((i % 31) as f32 - 15.0) * 1e-3 } else { 0.0 }).collect();
+        for chunk_bytes in [512usize, 4 * 1024, 16 * 1024] {
+            let plan = crate::bucket::BucketPlan::build_chunked(&m, 2 * 1024, 2, chunk_bytes);
+            assert!(plan.buckets.iter().any(|b| b.has_chunks()), "fc1.w must be split");
+            for rule in [UpdateRule::Lars, UpdateRule::Sgd] {
+                let (want_p, want_m) = e.update(rule, &params, &momentum, &grads, 0.3).unwrap();
+                let mut got_p = params.clone();
+                let mut got_m = momentum.clone();
+                let mut updated = vec![false; m.layers.len()];
+                for b in &plan.buckets {
+                    for piece in &b.pieces {
+                        if !piece.is_layer_tail() {
+                            continue; // deferred until the row-0 chunk
+                        }
+                        let l = &m.layers[piece.layer];
+                        let (lo, hi) = (l.offset, l.offset + l.size);
+                        let (p_span, m_span) = (&mut got_p[lo..hi], &mut got_m[lo..hi]);
+                        e.update_span(rule, p_span, m_span, &grads[lo..hi], lo, &[piece.layer], 0.3)
+                            .unwrap();
+                        assert!(!updated[piece.layer], "layer updated twice");
+                        updated[piece.layer] = true;
+                    }
+                }
+                assert!(updated.iter().all(|&u| u), "some layer never updated");
+                assert_eq!(want_p, got_p, "{rule:?} chunk={chunk_bytes}: params diverged");
+                assert_eq!(want_m, got_m, "{rule:?} chunk={chunk_bytes}: momentum diverged");
+            }
         }
     }
 

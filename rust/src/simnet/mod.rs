@@ -184,6 +184,36 @@ pub fn fit_alpha_beta(samples: &[(f64, f64)]) -> Option<LinkParams> {
     Some(LinkParams { latency_s: alpha.max(0.0), bandwidth_bps: 1.0 / slope })
 }
 
+/// Goodness-of-fit of an α–β link against the measured samples it was
+/// fitted from — the residual report the auto-calibration loop records in
+/// EXPERIMENTS.md (large residuals mean the affine latency/bandwidth model
+/// does not describe the measured transport, so extrapolations from the
+/// fit inherit that error).
+#[derive(Debug, Clone, Copy)]
+pub struct FitQuality {
+    /// Root-mean-square residual of t − (α + bytes/β), in seconds.
+    pub rms_s: f64,
+    /// Largest absolute residual, in seconds.
+    pub max_abs_s: f64,
+    /// Number of samples scored.
+    pub n: usize,
+}
+
+/// Residuals of `link` against measured `(bytes, seconds)` samples.
+pub fn fit_residuals(samples: &[(f64, f64)], link: &LinkParams) -> FitQuality {
+    if samples.is_empty() {
+        return FitQuality { rms_s: 0.0, max_abs_s: 0.0, n: 0 };
+    }
+    let mut sq = 0.0f64;
+    let mut max_abs = 0.0f64;
+    for &(bytes, secs) in samples {
+        let r = secs - link.transfer_time(bytes);
+        sq += r * r;
+        max_abs = max_abs.max(r.abs());
+    }
+    FitQuality { rms_s: (sq / samples.len() as f64).sqrt(), max_abs_s: max_abs, n: samples.len() }
+}
+
 /// One training step under the paper's overlap scheme.
 #[derive(Debug, Clone, Copy)]
 pub struct StepModel {
@@ -412,6 +442,25 @@ mod tests {
         assert!((fit.bandwidth_bps - link.bandwidth_bps).abs() / link.bandwidth_bps < 1e-9);
         // Round-trips through the model it calibrates.
         assert!((fit.transfer_time(2e6) - link.transfer_time(2e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_residuals_score_the_fit() {
+        let link = LinkParams { latency_s: 5e-6, bandwidth_bps: 10e9 };
+        // Exact samples: residuals vanish.
+        let exact: Vec<(f64, f64)> =
+            [1e3, 1e5, 1e6].iter().map(|&b| (b, link.transfer_time(b))).collect();
+        let q = fit_residuals(&exact, &link);
+        assert_eq!(q.n, 3);
+        assert!(q.rms_s < 1e-15 && q.max_abs_s < 1e-15);
+        // Perturbed samples: residuals reflect the perturbation.
+        let noisy: Vec<(f64, f64)> =
+            exact.iter().map(|&(b, t)| (b, t + 3e-6)).collect();
+        let qn = fit_residuals(&noisy, &link);
+        assert!((qn.rms_s - 3e-6).abs() < 1e-12);
+        assert!((qn.max_abs_s - 3e-6).abs() < 1e-12);
+        // Empty input is safe.
+        assert_eq!(fit_residuals(&[], &link).n, 0);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Pipelined-executor system tests: the determinism grid (pipelined vs
 //! sequential bit-identity across workers × lanes × accum × precision ×
-//! algorithm), exposed-vs-hidden comm accounting, the measured-pipeline
+//! algorithm × chunk granularity), chunk numerical-neutrality at one
+//! worker, exposed-vs-hidden comm accounting, the measured-pipeline
 //! calibration hook, checkpoint/restore under a batch ramp, and the
 //! `final_val_acc` Option semantics.
 
@@ -39,23 +40,27 @@ fn base_cfg() -> RunConfig {
 
 /// The load-bearing test: for every grid point, the pipelined executor's
 /// trajectory (losses, accuracies, params, momentum-derived params,
-/// bn_state) is BIT-identical to the sequential barrier reference.
+/// bn_state) is BIT-identical to the sequential barrier reference. The
+/// grid covers chunking too (0 = whole-layer buckets, plus several row
+/// chunk granularities): both executors share the plan, so chunking must
+/// change WHEN spans move, never what is computed.
 #[test]
 fn pipelined_matches_sequential_across_grid() {
-    // (workers, comm_threads, grad_accum, wire, allreduce)
+    // (workers, comm_threads, grad_accum, wire, allreduce, chunk_bytes)
     let grid = [
-        (1usize, 1usize, 1usize, "f32", "ring"),
-        (2, 1, 1, "f16", "ring"),
-        (2, 2, 2, "f16", "hier"),
-        (2, 4, 1, "f32", "hd"),
-        (3, 2, 1, "f32", "hd"),
-        (3, 1, 2, "f16", "naive"),
-        (4, 2, 1, "f16", "hier"),
-        (4, 4, 2, "f32", "ring"),
+        (1usize, 1usize, 1usize, "f32", "ring", 0usize),
+        (2, 1, 1, "f16", "ring", 16 * 1024),
+        (2, 2, 2, "f16", "hier", 1024),
+        (2, 4, 1, "f32", "hd", 4096),
+        (3, 2, 1, "f32", "hd", 0),
+        (3, 1, 2, "f16", "naive", 2048),
+        (4, 2, 1, "f16", "hier", 16 * 1024),
+        (4, 4, 2, "f32", "ring", 1024),
     ];
-    for (workers, comm_threads, grad_accum, wire, allreduce) in grid {
+    for (workers, comm_threads, grad_accum, wire, allreduce, chunk_bytes) in grid {
         let what = format!(
-            "workers={workers} lanes<=({comm_threads}) accum={grad_accum} {wire} {allreduce}"
+            "workers={workers} lanes<=({comm_threads}) accum={grad_accum} {wire} {allreduce} \
+             chunk={chunk_bytes}"
         );
         let mut cfg = base_cfg();
         cfg.workers = workers;
@@ -63,6 +68,7 @@ fn pipelined_matches_sequential_across_grid() {
         cfg.grad_accum = grad_accum;
         cfg.wire = wire.into();
         cfg.allreduce = allreduce.into();
+        cfg.chunk_bytes = chunk_bytes;
         cfg.total_steps = 3;
 
         let mut seq_cfg = cfg.clone();
@@ -104,6 +110,67 @@ fn pipelined_pool_stays_bit_locked_over_many_steps() {
         assert_eq!(l1, l2);
     }
     assert_eq!(seq.checkpoint(), pipe.checkpoint(), "checkpoints must be identical");
+}
+
+/// Chunking changes the bucket plan — and with it the (deterministic)
+/// cross-rank reduction order — so chunked and unchunked runs are only
+/// directly comparable where no reduction happens: ONE worker on an f32
+/// wire (the 1-rank allreduce is the identity). There, every chunk
+/// granularity must reproduce the unchunked sequential trajectory
+/// bitwise: row-chunked gradient emission and the deferred full-layer
+/// LARS update are numerically invisible.
+#[test]
+fn chunking_is_numerically_neutral_at_one_worker() {
+    let mut ref_cfg = base_cfg();
+    ref_cfg.workers = 1;
+    ref_cfg.wire = "f32".into();
+    ref_cfg.chunk_bytes = 0;
+    ref_cfg.overlap = false;
+    let mut reference = Trainer::new(ref_cfg, engine()).unwrap();
+    for _ in 0..3 {
+        reference.step().unwrap();
+    }
+    for chunk_bytes in [512usize, 2048, 16 * 1024] {
+        let mut cfg = base_cfg();
+        cfg.workers = 1;
+        cfg.wire = "f32".into();
+        cfg.chunk_bytes = chunk_bytes;
+        cfg.overlap = true;
+        let mut t = Trainer::new(cfg, engine()).unwrap();
+        assert!(
+            t.bucket_plan().buckets.iter().any(|b| b.has_chunks()),
+            "chunk={chunk_bytes}: fc1.w must be split"
+        );
+        for _ in 0..3 {
+            t.step().unwrap();
+        }
+        assert_eq!(reference.params(), t.params(), "chunk={chunk_bytes}: params diverged");
+        assert_eq!(reference.bn_state(), t.bn_state(), "chunk={chunk_bytes}: bn diverged");
+    }
+}
+
+/// Structural guarantees of the default (chunked) trainer plan: fc1.w is
+/// split, spans tile the padded buffer, the plan validates, and the
+/// readiness ledger/trace dimensions follow the chunked bucket count.
+#[test]
+fn trainer_builds_chunked_plan_by_default() {
+    let cfg = base_cfg(); // default chunk_bytes = 16 KiB
+    let m = engine().manifest().clone();
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    let plan = t.bucket_plan().clone();
+    plan.validate(&m).unwrap();
+    assert!(plan.chunk_elems > 0);
+    assert!(plan.buckets.iter().any(|b| b.has_chunks()), "fc1.w must be split by default");
+    // Whole-layer plan for comparison: chunking multiplies readiness points.
+    let whole = yasgd::bucket::BucketPlan::build(&m, t.cfg.bucket_bytes, 2);
+    assert!(plan.buckets.len() > whole.buckets.len());
+    let covered: usize = plan.spans_with_padding().iter().map(|(lo, hi)| hi - lo).sum();
+    assert_eq!(covered, m.padded_param_count);
+    // A step's measured trace follows the chunked bucket count.
+    t.step().unwrap();
+    let trace = t.pipeline_trace().expect("pipelined step must leave a trace");
+    assert_eq!(trace.ready_s.len(), plan.buckets.len());
+    assert_eq!(trace.comm_spans.len(), plan.buckets.len());
 }
 
 /// Acceptance criterion: with a multi-bucket plan the pipelined executor

@@ -16,6 +16,8 @@ use yasgd::util::rng::Rng;
 const CASES: usize = 60;
 
 /// Build a random-but-valid manifest with `layers` random layer sizes.
+/// Weight layers (conv / fc_w) are 2-D half the time — the shape class
+/// row-granular bucket chunking applies to.
 fn random_manifest(rng: &mut Rng, max_layers: usize) -> Manifest {
     let nl = 1 + rng.below(max_layers as u64) as usize;
     let kinds = ["conv", "bn_gamma", "bn_beta", "fc_w", "fc_b"];
@@ -25,11 +27,19 @@ fn random_manifest(rng: &mut Rng, max_layers: usize) -> Manifest {
         if i > 0 {
             layers.push(',');
         }
-        let size = 1 + rng.below(5000) as usize;
         let kind = kinds[rng.below(kinds.len() as u64) as usize];
+        let two_d = (kind == "conv" || kind == "fc_w") && rng.below(2) == 0;
+        let (shape, size) = if two_d {
+            let rows = 1 + rng.below(300) as usize;
+            let cols = 1 + rng.below(64) as usize;
+            (format!("{rows},{cols}"), rows * cols)
+        } else {
+            let size = 1 + rng.below(5000) as usize;
+            (size.to_string(), size)
+        };
         let skip = kind != "conv" && kind != "fc_w";
         layers.push_str(&format!(
-            r#"{{"name":"l{i}","kind":"{kind}","shape":[{size}],"size":{size},"offset":{off},"lars_skip":{skip}}}"#
+            r#"{{"name":"l{i}","kind":"{kind}","shape":[{shape}],"size":{size},"offset":{off},"lars_skip":{skip}}}"#
         ));
         off += size;
     }
@@ -60,6 +70,43 @@ fn prop_bucket_plan_is_partition_for_any_target() {
             covered += hi - lo;
         }
         assert_eq!(covered, m.padded_param_count, "case {case}");
+    }
+}
+
+#[test]
+fn prop_chunked_bucket_plan_is_partition() {
+    // For ANY manifest, bucket target and chunk granularity, the chunked
+    // plan must exactly tile [0, padded_param_count) with no overlaps —
+    // per bucket (pieces tile the bucket), per layer (chunks tile the
+    // layer's rows top-down), and globally (buckets tile the buffer
+    // back-to-front, padding attached once). `validate` checks all of
+    // that; the span sum is asserted independently here.
+    let mut rng = Rng::new(0xC4A2C);
+    for case in 0..CASES {
+        let m = random_manifest(&mut rng, 40);
+        let target = 1 + rng.below(1 << 20) as usize;
+        let bpe = if rng.below(2) == 0 { 2 } else { 4 };
+        let chunk = match rng.below(4) {
+            0 => 0,
+            1 => 1 + rng.below(256) as usize,
+            2 => 1 + rng.below(1 << 14) as usize,
+            _ => 1 + rng.below(1 << 22) as usize,
+        };
+        let plan = BucketPlan::build_chunked(&m, target, bpe, chunk);
+        plan.validate(&m)
+            .unwrap_or_else(|e| panic!("case {case}: target={target} chunk={chunk}: {e}"));
+        let covered: usize = plan.spans_with_padding().iter().map(|(lo, hi)| hi - lo).sum();
+        assert_eq!(covered, m.padded_param_count, "case {case}");
+        // Wire bytes are invariant under chunking.
+        assert_eq!(
+            plan.total_bytes(),
+            m.param_count * bpe,
+            "case {case}: chunking changed total wire bytes"
+        );
+        // Each bucket except the last reaches the target (greedy seal).
+        for b in &plan.buckets[..plan.buckets.len() - 1] {
+            assert!(b.bytes(bpe) >= target, "case {case}: bucket {} under target", b.index);
+        }
     }
 }
 
