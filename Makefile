@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench bench-pipeline artifacts clean
+.PHONY: verify build test fmt clippy bench bench-pipeline bench-check artifacts clean
 
 verify: build test
 
@@ -26,6 +26,11 @@ bench:
 # Pipelined vs sequential executor headline numbers -> BENCH_pipeline.json
 bench-pipeline:
 	$(CARGO) bench --bench pipeline
+
+# Assert the bench artifact's structural invariants (depth-2 section
+# present, whole-run exposed comm no worse than depth 1).
+bench-check:
+	python3 scripts/check_bench.py BENCH_pipeline.json
 
 # AOT-lower the JAX/Pallas graphs to HLO text + manifest (PJRT path only).
 artifacts:

@@ -2,15 +2,34 @@
 //!
 //! Measures the REAL coordinator at 1..4 in-process workers (compute-bound
 //! on this box) and regenerates the paper's 4..2048-GPU curve from the
-//! ABCI α–β model. `cargo bench --bench fig2_scalability`
+//! ABCI α–β model. When a `BENCH_pipeline.json` from a prior
+//! `make bench-pipeline` run is present, its FITTED α–β link (the replay
+//! calibration of the measured per-bucket allreduces) is fed back into
+//! the `ClusterSpec` generators as a third, measured-link curve — closing
+//! the measure → fit → model loop instead of hardcoding α–β.
+//! `cargo bench --bench fig2_scalability`
 
 use std::sync::Arc;
 use yasgd::benchkit::{dump_results, Table};
 use yasgd::config::RunConfig;
 use yasgd::coordinator::Trainer;
 use yasgd::runtime::Engine;
-use yasgd::simnet::{scaling_curve, ClusterSpec};
+use yasgd::simnet::{scaling_curve, ClusterSpec, LinkParams};
 use yasgd::util::json::Json;
+
+/// The α–β link `benches/pipeline.rs` fitted from its measured trace, if
+/// a BENCH_pipeline.json is lying around (repo root — same place that
+/// bench writes it). None when the file, the keys or the fit are absent.
+fn fitted_link() -> Option<LinkParams> {
+    let text = std::fs::read_to_string("BENCH_pipeline.json").ok()?;
+    let j = Json::parse(&text).ok()?;
+    let alpha_us = j.get("fit_alpha_us").and_then(Json::as_f64)?;
+    let beta_gbps = j.get("fit_beta_gbps").and_then(Json::as_f64)?;
+    if !(alpha_us.is_finite() && beta_gbps.is_finite() && beta_gbps > 0.0) {
+        return None;
+    }
+    Some(LinkParams { latency_s: alpha_us * 1e-6, bandwidth_bps: beta_gbps * 1e9 })
+}
 
 fn main() {
     let mut results = Vec::new();
@@ -26,10 +45,13 @@ fn main() {
         let mut tr = Trainer::new(cfg, engine.clone()).unwrap();
         tr.threaded = true;
         tr.step().unwrap(); // warmup
+        tr.flush().unwrap(); // retire the warmup tail outside the timer
         let t0 = std::time::Instant::now();
         for _ in 0..steps {
             tr.step().unwrap();
         }
+        // The last step's cross-step tail belongs to the timed window.
+        tr.flush().unwrap();
         let dt = t0.elapsed().as_secs_f64();
         let ips = (steps * w * b) as f64 / dt;
         t.row(&[format!("{w}"), format!("{:.1}", dt / steps as f64 * 1e3), format!("{ips:.1}")]);
@@ -66,6 +88,41 @@ fn main() {
         last.model_images_per_sec / 1e6,
         last.efficiency * 100.0
     );
+
+    // ---- measured-link curve (fitted α–β fed back from the pipeline
+    // bench replay, closing the calibration loop) --------------------------
+    match fitted_link() {
+        Some(link) => {
+            println!(
+                "== Fig 2 curve (MEASURED link: α = {:.2} µs, β = {:.3} GB/s from \
+                 BENCH_pipeline.json) ==",
+                link.latency_s * 1e6,
+                link.bandwidth_bps / 1e9
+            );
+            let mspec = ClusterSpec::calibrated(link);
+            let mpts = scaling_curve(&mspec, &counts, 40, 51e6, 8, 0.66);
+            let mut t = Table::new(&["gpus", "model Mimg/s", "efficiency"]);
+            for p in &mpts {
+                t.row(&[
+                    format!("{}", p.gpus),
+                    format!("{:.3}", p.model_images_per_sec / 1e6),
+                    format!("{:.1}%", p.efficiency * 100.0),
+                ]);
+                results.push(Json::obj(vec![
+                    ("name", Json::Str(format!("measured-link-{}g", p.gpus))),
+                    ("model_images_per_sec", Json::Num(p.model_images_per_sec)),
+                    ("efficiency", Json::Num(p.efficiency)),
+                ]));
+            }
+            println!("{}", t.render());
+        }
+        None => {
+            println!(
+                "(no usable α–β fit in BENCH_pipeline.json — run `make bench-pipeline` first \
+                 for the measured-link curve)"
+            );
+        }
+    }
     let path = dump_results("fig2_scalability", &Json::Arr(results)).unwrap();
     println!("wrote {}", path.display());
 }

@@ -1,10 +1,13 @@
 //! Pipelined vs sequential step executor: throughput, exposed-comm
-//! fraction for CHUNKED vs whole-layer bucket plans, and the simulator
-//! calibration loop (measured trace → overlap replay + α–β fit with
-//! residuals). Writes the headline numbers to BENCH_pipeline.json (repo
-//! root; uploaded as a CI artifact) to seed the perf trajectory, plus the
-//! usual raw dump under bench_results/pipeline.json. Also prints a
-//! markdown row ready to append to EXPERIMENTS.md.
+//! fraction for CHUNKED vs whole-layer bucket plans, the cross-step
+//! double-buffering (depth 1 vs depth 2) comparison with steady-state vs
+//! cold-start accounting, and the simulator calibration loop (measured
+//! trace → overlap replay + α–β fit with residuals → `--chunk-bytes
+//! auto` plan derived from the fit). Writes the headline numbers to
+//! BENCH_pipeline.json (repo root; uploaded as a CI artifact and
+//! assertion-checked by scripts/check_bench.py) to seed the perf
+//! trajectory, plus the usual raw dump under bench_results/pipeline.json.
+//! Also prints a markdown row ready to append to EXPERIMENTS.md.
 //!
 //! Quick mode (`BENCH_QUICK=1`, the CI smoke setting) trims warmup/steps
 //! so the bench finishes in seconds while still producing every field.
@@ -15,7 +18,7 @@ use yasgd::benchkit::{dump_results, Table};
 use yasgd::config::RunConfig;
 use yasgd::coordinator::Trainer;
 use yasgd::runtime::Engine;
-use yasgd::simnet::{fit_alpha_beta, fit_residuals};
+use yasgd::simnet::{auto_chunk_bytes, fit_alpha_beta, fit_residuals};
 use yasgd::util::json::Json;
 
 fn bench_cfg() -> RunConfig {
@@ -29,27 +32,43 @@ fn bench_cfg() -> RunConfig {
         comm_threads: 2,
         // Small buckets -> several buckets -> real overlap opportunity.
         bucket_bytes: 4 * 1024,
-        // Whole-layer buckets by default here; the chunked run overrides.
+        // Whole-layer buckets by default here; chunked runs override.
         chunk_bytes: 0,
+        // Depth 1 by default here; the depth-2 run overrides.
+        pipeline_depth: 1,
         wire: "f16".into(),
         allreduce: "hier".into(),
         ..RunConfig::default()
     }
 }
 
-/// Drive `steps` steps and return images/sec (plus the trainer for
-/// post-hoc inspection of breakdown/trace).
-fn run(mut trainer: Trainer, warmup: usize, steps: usize) -> (f64, Trainer) {
+/// Drive `steps` steps and return (img/s overall, img/s excluding the
+/// first step) plus the trainer for post-hoc inspection. The trainer is
+/// flushed, so `breakdown` covers every step.
+fn run(mut trainer: Trainer, warmup: usize, steps: usize) -> (f64, f64, Trainer) {
     for _ in 0..warmup {
         trainer.step().unwrap();
     }
+    trainer.flush().unwrap();
     let per_step = trainer.global_batch();
     let t0 = Instant::now();
-    for _ in 0..steps {
+    let mut first_step_s = 0.0;
+    for s in 0..steps {
+        let ts = Instant::now();
         trainer.step().unwrap();
+        if s == 0 {
+            first_step_s = ts.elapsed().as_secs_f64();
+        }
     }
+    trainer.flush().unwrap();
     let elapsed = t0.elapsed().as_secs_f64();
-    ((steps * per_step) as f64 / elapsed, trainer)
+    let all = (steps * per_step) as f64 / elapsed;
+    let steady = if steps > 1 && elapsed > first_step_s {
+        ((steps - 1) * per_step) as f64 / (elapsed - first_step_s)
+    } else {
+        all
+    };
+    (all, steady, trainer)
 }
 
 fn main() {
@@ -66,62 +85,92 @@ fn main() {
     seq_cfg.overlap = false;
     let mut seq_trainer = Trainer::new(seq_cfg, engine.clone()).unwrap();
     seq_trainer.threaded = true;
-    let (seq_ips, seq_trainer) = run(seq_trainer, warmup, steps);
+    let (seq_ips, _, seq_trainer) = run(seq_trainer, warmup, steps);
 
-    // ---- pipelined executor, whole-layer buckets -------------------------
+    // ---- pipelined depth 1, whole-layer buckets --------------------------
     let unchunked_cfg = bench_cfg();
     let unchunked_trainer = Trainer::new(unchunked_cfg, engine.clone()).unwrap();
     assert!(unchunked_trainer.pipeline, "stub engine must support the pipeline");
-    let (unchunked_ips, unchunked_trainer) = run(unchunked_trainer, warmup, steps);
+    let (unchunked_ips, _, unchunked_trainer) = run(unchunked_trainer, warmup, steps);
 
-    // ---- pipelined executor, row-chunked buckets -------------------------
-    let mut chunked_cfg = bench_cfg();
-    chunked_cfg.chunk_bytes = chunk_bytes;
-    let chunked_trainer = Trainer::new(chunked_cfg, engine).unwrap();
-    let chunked_plan_buckets = chunked_trainer.bucket_plan().buckets.len();
+    // ---- pipelined depth 1, row-chunked buckets --------------------------
+    let mut d1_cfg = bench_cfg();
+    d1_cfg.chunk_bytes = chunk_bytes;
+    let d1_trainer = Trainer::new(d1_cfg, engine.clone()).unwrap();
+    let chunked_plan_buckets = d1_trainer.bucket_plan().buckets.len();
     let unchunked_plan_buckets = unchunked_trainer.bucket_plan().buckets.len();
-    let (chunked_ips, chunked_trainer) = run(chunked_trainer, warmup, steps);
+    let (d1_ips, d1_steady_ips, d1_trainer) = run(d1_trainer, warmup, steps);
 
-    let speedup = if seq_ips > 0.0 { chunked_ips / seq_ips } else { 0.0 };
+    // ---- pipelined depth 2 (cross-step double buffering), chunked --------
+    let mut d2_cfg = bench_cfg();
+    d2_cfg.chunk_bytes = chunk_bytes;
+    d2_cfg.pipeline_depth = 2;
+    let d2_trainer = Trainer::new(d2_cfg, engine.clone()).unwrap();
+    let (d2_ips, d2_steady_ips, mut d2_trainer) = run(d2_trainer, warmup, steps);
+
+    let speedup = if seq_ips > 0.0 { d2_ips / seq_ips } else { 0.0 };
     let exposed_unchunked = unchunked_trainer.breakdown.exposed_comm_frac();
-    let exposed_chunked = chunked_trainer.breakdown.exposed_comm_frac();
+    let exposed_d1 = d1_trainer.breakdown.exposed_comm_frac();
+    let exposed_d2 = d2_trainer.breakdown.exposed_comm_frac();
+    let cross_hidden_ms = d2_trainer.breakdown.cross_hidden_s.mean() * 1e3;
 
     println!("== pipelined vs sequential executor ==");
-    let mut t = Table::new(&["executor", "buckets", "img/s", "comm exposed", "overlap eff"]);
+    let mut t = Table::new(&[
+        "executor",
+        "buckets",
+        "img/s",
+        "steady img/s",
+        "comm exposed",
+        "overlap eff",
+    ]);
     t.row(&[
         "sequential".into(),
         format!("{unchunked_plan_buckets}"),
         format!("{seq_ips:.1}"),
+        "-".into(),
         "100.0%".into(),
         format!("{:.1}%", seq_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
     t.row(&[
-        "pipelined (whole-layer)".into(),
+        "pipelined d1 (whole-layer)".into(),
         format!("{unchunked_plan_buckets}"),
         format!("{unchunked_ips:.1}"),
+        "-".into(),
         format!("{:.1}%", exposed_unchunked * 100.0),
         format!("{:.1}%", unchunked_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
     t.row(&[
-        "pipelined (row-chunked)".into(),
+        "pipelined d1 (chunked)".into(),
         format!("{chunked_plan_buckets}"),
-        format!("{chunked_ips:.1}"),
-        format!("{:.1}%", exposed_chunked * 100.0),
-        format!("{:.1}%", chunked_trainer.breakdown.overlap_efficiency() * 100.0),
+        format!("{d1_ips:.1}"),
+        format!("{d1_steady_ips:.1}"),
+        format!("{:.1}%", exposed_d1 * 100.0),
+        format!("{:.1}%", d1_trainer.breakdown.overlap_efficiency() * 100.0),
+    ]);
+    t.row(&[
+        "pipelined d2 (double-buffered)".into(),
+        format!("{chunked_plan_buckets}"),
+        format!("{d2_ips:.1}"),
+        format!("{d2_steady_ips:.1}"),
+        format!("{:.1}%", exposed_d2 * 100.0),
+        format!("{:.1}%", d2_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
     println!("{}", t.render());
-    println!("speedup: {speedup:.2}x (chunked pipelined over sequential)");
+    println!("speedup: {speedup:.2}x (depth-2 chunked pipelined over sequential)");
     println!(
-        "chunking: exposed comm {:.1}% -> {:.1}% at {} lanes\n",
+        "chunking: exposed comm {:.1}% -> {:.1}% at {} lanes; double buffering: {:.1}% -> \
+         {:.1}% ({cross_hidden_ms:.3} ms/step hidden by the next step's ramp-up)\n",
         exposed_unchunked * 100.0,
-        exposed_chunked * 100.0,
-        chunked_trainer.cfg.comm_threads
+        exposed_d1 * 100.0,
+        d1_trainer.cfg.comm_threads,
+        exposed_d1 * 100.0,
+        exposed_d2 * 100.0,
     );
 
     // ---- calibration loop: measured trace → overlap replay + α–β fit ----
-    let trace = chunked_trainer.pipeline_trace().expect("pipelined trace").clone();
+    let trace = d2_trainer.pipeline_trace().expect("pipelined trace").clone();
     let measured = trace.report();
-    let replay = trace.replay(chunked_trainer.cfg.comm_threads);
+    let replay = trace.replay(d2_trainer.cfg.comm_threads);
     let replay_residual_frac = if measured.step_span_s > 0.0 {
         (replay.step_span_s - measured.step_span_s).abs() / measured.step_span_s
     } else {
@@ -129,14 +178,17 @@ fn main() {
     };
     println!("== calibration: measured pipeline vs overlap simulator ==");
     println!(
-        "measured: step span {:.3} ms, hidden {:.1}%  |  replay: step span {:.3} ms, hidden {:.1}%  |  residual {:.1}%",
+        "measured: step span {:.3} ms, hidden {:.1}%, next-step window {:.3} ms (cross-step \
+         exposed {:.3} ms)  |  replay: step span {:.3} ms, hidden {:.1}%  |  residual {:.1}%",
         measured.step_span_s * 1e3,
         measured.hidden_frac * 100.0,
+        trace.next_step_window_s * 1e3,
+        trace.cross_step_exposed_s() * 1e3,
         replay.step_span_s * 1e3,
         replay.hidden_frac * 100.0,
         replay_residual_frac * 100.0
     );
-    let plan = chunked_trainer.bucket_plan();
+    let plan = d2_trainer.bucket_plan();
     let samples: Vec<(f64, f64)> = (0..plan.buckets.len())
         .map(|i| {
             let (lo, hi) = plan.span_with_padding(i);
@@ -165,15 +217,55 @@ fn main() {
             (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
         }
     };
+
+    // ---- chunk auto-tuning from the fit ----------------------------------
+    // Close the measure → fit → tune loop: derive the `--chunk-bytes auto`
+    // grain from the FITTED link and record the per-layer plan an auto run
+    // would train with.
+    let (auto_grain, auto_plan_json) = match &fit {
+        Some(link) => {
+            let mut auto_cfg = bench_cfg();
+            auto_cfg.chunk_auto = true;
+            auto_cfg.link_alpha_us = link.latency_s * 1e6;
+            auto_cfg.link_beta_gbps = link.bandwidth_bps / 1e9;
+            // Same derivation the Trainer performs (via cfg.link(), so the
+            // µs/GB-s round trip is identical on both sides).
+            let grain = auto_chunk_bytes(&auto_cfg.link(), 512, 4 * auto_cfg.bucket_bytes);
+            let auto_trainer = Trainer::new(auto_cfg, engine.clone()).unwrap();
+            assert_eq!(auto_trainer.chunk_bytes_used(), grain);
+            let m = engine.manifest();
+            let plan_entries: Vec<Json> = auto_trainer
+                .bucket_plan()
+                .per_layer_chunk_bytes()
+                .into_iter()
+                .filter(|&(_, b)| b > 0)
+                .map(|(li, b)| {
+                    Json::obj(vec![
+                        ("layer", Json::Str(m.layers[li].name.clone())),
+                        ("chunk_bytes", Json::Num(b as f64)),
+                    ])
+                })
+                .collect();
+            println!(
+                "auto chunk grain from fit: {grain} bytes ({} split layers)",
+                plan_entries.len()
+            );
+            (grain as f64, Json::Arr(plan_entries))
+        }
+        None => (f64::NAN, Json::Null),
+    };
     println!(
-        "\nEXPERIMENTS.md row:\n| {} | {:.2} | {:.1}% | {:.1}% | {:.2} | {:.3} | {:.2} | {:.1}% |",
+        "\nEXPERIMENTS.md row:\n| {} | {:.2} | {:.1}% | {:.1}% | {:.1}% | {:.1} | {:.1} | {:.2} \
+         | {:.3} | {:.1}% |",
         if quick { "quick" } else { "full" },
         speedup,
         exposed_unchunked * 100.0,
-        exposed_chunked * 100.0,
+        exposed_d1 * 100.0,
+        exposed_d2 * 100.0,
+        d1_steady_ips,
+        d2_steady_ips,
         alpha_us,
         beta_gbps,
-        fit_rms_us,
         replay_residual_frac * 100.0
     );
 
@@ -183,13 +275,34 @@ fn main() {
     let headline = Json::obj(vec![
         ("sequential_images_per_sec", Json::Num(seq_ips)),
         ("pipelined_unchunked_images_per_sec", Json::Num(unchunked_ips)),
-        ("pipelined_chunked_images_per_sec", Json::Num(chunked_ips)),
-        // New key (vs pre-chunking runs): the speedup numerator is now the
-        // CHUNKED pipelined config, so the perf trajectory stays honest.
+        ("pipelined_chunked_images_per_sec", Json::Num(d1_ips)),
+        // The speedup numerator is now the DEPTH-2 chunked config — the
+        // default executor — so the perf trajectory stays honest.
         ("pipelined_chunked_speedup", Json::Num(speedup)),
         ("exposed_comm_frac_unchunked", Json::Num(exposed_unchunked)),
-        ("exposed_comm_frac_chunked", Json::Num(exposed_chunked)),
-        ("overlap_efficiency_chunked", Json::Num(chunked_trainer.breakdown.overlap_efficiency())),
+        ("exposed_comm_frac_chunked", Json::Num(exposed_d1)),
+        ("overlap_efficiency_chunked", Json::Num(d1_trainer.breakdown.overlap_efficiency())),
+        (
+            "depth1",
+            Json::obj(vec![
+                ("images_per_sec", Json::Num(d1_ips)),
+                ("steady_state_images_per_sec", Json::Num(d1_steady_ips)),
+                ("exposed_comm_frac", Json::Num(exposed_d1)),
+            ]),
+        ),
+        (
+            "depth2",
+            Json::obj(vec![
+                ("images_per_sec", Json::Num(d2_ips)),
+                ("steady_state_images_per_sec", Json::Num(d2_steady_ips)),
+                ("exposed_comm_frac", Json::Num(exposed_d2)),
+                ("cross_hidden_ms_per_step", Json::Num(cross_hidden_ms)),
+                (
+                    "next_step_window_ms",
+                    Json::Num(trace.next_step_window_s * 1e3),
+                ),
+            ]),
+        ),
         ("measured_hidden_frac", Json::Num(measured.hidden_frac)),
         ("replay_hidden_frac", Json::Num(replay.hidden_frac)),
         ("replay_step_span_residual_frac", Json::Num(replay_residual_frac)),
@@ -197,11 +310,13 @@ fn main() {
         ("fit_beta_gbps", num_or_null(beta_gbps)),
         ("fit_rms_residual_us", num_or_null(fit_rms_us)),
         ("fit_max_residual_us", num_or_null(fit_max_us)),
+        ("auto_chunk_bytes", num_or_null(auto_grain)),
+        ("auto_chunk_plan", auto_plan_json),
         ("buckets_unchunked", Json::Num(unchunked_plan_buckets as f64)),
         ("buckets_chunked", Json::Num(chunked_plan_buckets as f64)),
         ("chunk_bytes", Json::Num(chunk_bytes as f64)),
-        ("workers", Json::Num(chunked_trainer.cfg.workers as f64)),
-        ("comm_threads", Json::Num(chunked_trainer.cfg.comm_threads as f64)),
+        ("workers", Json::Num(d2_trainer.cfg.workers as f64)),
+        ("comm_threads", Json::Num(d2_trainer.cfg.comm_threads as f64)),
         ("steps", Json::Num(steps as f64)),
         ("quick", Json::Bool(quick)),
     ]);

@@ -39,6 +39,8 @@
 //! (see `coordinator::pipeline`).
 
 use crate::model_meta::{LayerKind, Manifest};
+use std::ops::Range;
+use std::sync::Arc;
 
 /// One piece of a bucket: a whole layer, or a row-granular chunk of an
 /// oversized 2-D layer. `row_lo == 0 && row_hi == nrows` means the whole
@@ -385,6 +387,88 @@ impl BucketPlan {
     pub fn total_bytes(&self) -> usize {
         self.buckets.iter().map(|b| b.bytes(self.bytes_per_elem)).sum()
     }
+
+    /// The chunk granularity each layer actually ENDED UP with under this
+    /// plan, in wire bytes: `(layer_index, chunk_bytes)` where 0 means the
+    /// layer was not split (one whole piece). For a split layer the figure
+    /// is its largest piece (the remainder block can be smaller). This is
+    /// the per-layer record `TrainReport` publishes for `--chunk-bytes
+    /// auto` runs, so a recorded run states the plan it trained with.
+    pub fn per_layer_chunk_bytes(&self) -> Vec<(usize, usize)> {
+        let nl = self
+            .buckets
+            .iter()
+            .flat_map(|b| &b.pieces)
+            .map(|p| p.layer + 1)
+            .max()
+            .unwrap_or(0);
+        let mut out: Vec<(usize, usize)> = (0..nl).map(|li| (li, 0)).collect();
+        for b in &self.buckets {
+            for p in &b.pieces {
+                if !p.is_whole() {
+                    let bytes = p.elems() * self.bytes_per_elem;
+                    out[p.layer].1 = out[p.layer].1.max(bytes);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Tracks which buckets a gradient worker has already published for the
+/// CURRENT step generation, and yields newly-publishable bucket indices as
+/// the engine's emitted frontier descends. Buckets are stored in readiness
+/// order with strictly descending spans, so in-order publication is
+/// exactly "everything whose span lies at or above the frontier".
+///
+/// The cursor is generation-TAGGED: under the double-buffered cross-step
+/// executor a worker alternates between two packed gradient buffers, and
+/// `begin(gen)` re-arms the cursor for the next generation — carrying the
+/// tag along is what lets the publish side (the coordinator's
+/// `GenLedger`) assert that a frontier advance is credited to the step it
+/// belongs to, never to the other in-flight generation.
+#[derive(Debug)]
+pub struct FrontierCursor {
+    spans: Arc<Vec<(usize, usize)>>,
+    next: usize,
+    gen: u64,
+}
+
+impl FrontierCursor {
+    pub fn new(spans: Arc<Vec<(usize, usize)>>) -> FrontierCursor {
+        FrontierCursor { spans, next: 0, gen: 0 }
+    }
+
+    /// Re-arm for step generation `gen`: the frontier restarts above the
+    /// first bucket, with nothing published.
+    pub fn begin(&mut self, gen: u64) {
+        self.next = 0;
+        self.gen = gen;
+    }
+
+    /// The generation this cursor is currently publishing for.
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// The emitted frontier moved down to `frontier`: returns the dense
+    /// range of not-yet-published bucket indices now fully contained in
+    /// `[frontier, …)`. The caller publishes them (in order) to its
+    /// readiness ledger.
+    pub fn advance(&mut self, frontier: usize) -> Range<usize> {
+        let lo = self.next;
+        while self.next < self.spans.len() && self.spans[self.next].0 >= frontier {
+            self.next += 1;
+        }
+        lo..self.next
+    }
+
+    /// Everything left unpublished. Called unconditionally after a job
+    /// (also on the error/panic path) so a failed worker can never starve
+    /// the comm lanes into a deadlock.
+    pub fn finish(&mut self) -> Range<usize> {
+        self.advance(0)
+    }
 }
 
 #[cfg(test)]
@@ -594,6 +678,54 @@ mod tests {
         let b = BucketPlan::build_chunked(&m, 4096, 2, 0);
         assert_eq!(a.buckets, b.buckets);
         assert_eq!(a.chunk_elems, 0);
+    }
+
+    #[test]
+    fn frontier_cursor_publishes_in_span_order_and_reseeds_per_generation() {
+        let m = chunky_manifest();
+        let plan = BucketPlan::build_chunked(&m, 2 * 1024, 2, 2 * 1024);
+        let spans = Arc::new(plan.spans_with_padding());
+        let mut cursor = FrontierCursor::new(spans.clone());
+        for gen in [0u64, 1, 2] {
+            cursor.begin(gen);
+            assert_eq!(cursor.gen(), gen);
+            let mut published: Vec<usize> = Vec::new();
+            // Walk the emission frontier down span by span, as the engine
+            // emits: after each span [lo, hi), every bucket with span.0 >=
+            // lo is publishable.
+            for &(lo, _) in spans.iter() {
+                published.extend(cursor.advance(lo));
+            }
+            assert_eq!(published, (0..spans.len()).collect::<Vec<_>>());
+            // Idempotent at the bottom; finish() has nothing left.
+            assert_eq!(cursor.advance(0).count(), 0);
+            assert_eq!(cursor.finish().count(), 0);
+        }
+        // A mid-stream failure: finish() publishes the remainder.
+        cursor.begin(7);
+        let first = cursor.advance(spans[1].0).count();
+        assert!(first >= 1);
+        assert_eq!(first + cursor.finish().count(), spans.len());
+    }
+
+    #[test]
+    fn per_layer_chunk_bytes_reports_the_plan() {
+        let m = chunky_manifest();
+        let chunk = 8 * 1024;
+        let plan = BucketPlan::build_chunked(&m, 8 * 1024, 2, chunk);
+        let per = plan.per_layer_chunk_bytes();
+        assert_eq!(per.len(), m.layers.len());
+        for (li, bytes) in &per {
+            if *li == 2 {
+                // fc1.w is split: chunk bytes reported, at most the grain.
+                assert!(*bytes > 0 && *bytes <= chunk, "layer 2 chunk {bytes}");
+            } else {
+                assert_eq!(*bytes, 0, "layer {li} must be whole");
+            }
+        }
+        // Unchunked plan: nothing split anywhere.
+        let whole = BucketPlan::build(&m, 8 * 1024, 2);
+        assert!(whole.per_layer_chunk_bytes().iter().all(|&(_, b)| b == 0));
     }
 
     #[test]

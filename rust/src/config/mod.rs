@@ -2,10 +2,30 @@
 //! JSON file with CLI overrides (`--key value` wins over file values).
 
 use crate::collective::{Algorithm, Precision};
+use crate::simnet::LinkParams;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
+
+/// Strictness of the cross-step parameter-version fence (pipelined
+/// executor, `pipeline_depth = 2`): how much of step s's master update
+/// step s+1's workers must observe before reading parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FenceMode {
+    /// Conservative full-update fence: wait for EVERY layer (and the BN
+    /// state) before the first parameter read. The reference strictness —
+    /// depth-2 runs are bitwise equal to depth-1 under it.
+    Full,
+    /// Per-layer expression of the same wait, in forward-read order.
+    /// Today this releases at the same instant as `Full` on every backend
+    /// (all waits still complete before the first parameter read); it
+    /// exists to exercise the per-layer wait path that true
+    /// forward-interleaved fencing (an engine-hook ROADMAP item) will
+    /// build on. Reads the exact same values, so it is also
+    /// bit-identical.
+    PerLayer,
+}
 
 /// Everything the training loop needs to know.
 #[derive(Debug, Clone)]
@@ -47,6 +67,31 @@ pub struct RunConfig {
     /// any fixed setting the pipelined and sequential executors stay
     /// bit-identical.
     pub chunk_bytes: usize,
+    /// `--chunk-bytes auto`: ignore `chunk_bytes` and derive the grain
+    /// from the α–β link model (`link_alpha_us`/`link_beta_gbps`) — the
+    /// α·β latency floor, clamped; see `simnet::auto_chunk_bytes`. The
+    /// chosen value (and the resulting per-layer plan) is recorded in
+    /// `TrainReport`.
+    pub chunk_auto: bool,
+    /// α–β link model of this process's "wire" for chunk auto-tuning:
+    /// per-message latency in MICROSECONDS. Feed a fitted value from
+    /// `benches/pipeline.rs` (`fit_alpha_us` in BENCH_pipeline.json) to
+    /// close the measure → fit → tune loop; the default (2 µs × 8 GB/s →
+    /// a 16 000-byte floor) lands close to — but not exactly at — the
+    /// fixed 16 KiB (16 384 B) `chunk_bytes` default, so an `auto` plan's
+    /// chunk boundaries differ slightly from a fixed-default plan's.
+    pub link_alpha_us: f64,
+    /// α–β link model: bandwidth in GB/s (see `link_alpha_us`).
+    pub link_beta_gbps: f64,
+    /// Cross-step pipeline depth (pipelined executor only): 1 = each
+    /// step's comm/update tail finishes inside the step; 2 = the tail
+    /// overlaps the next step's micro-batch draw + ramp-up (double
+    /// buffering, the default). Bit-identical either way — depth trades
+    /// wall-clock, never numerics.
+    pub pipeline_depth: usize,
+    /// Cross-step parameter fence strictness: "full" (default) or
+    /// "layer" (see [`FenceMode`]).
+    pub fence: String,
     /// OS-thread budget for the communication phase: independent buckets
     /// are reduced on up to this many concurrent engine lanes, and any
     /// leftover budget parallelizes transfers inside each allreduce.
@@ -88,6 +133,11 @@ impl Default for RunConfig {
             wire: "f16".into(),
             bucket_bytes: 16 * 1024,
             chunk_bytes: 16 * 1024,
+            chunk_auto: false,
+            link_alpha_us: 2.0,
+            link_beta_gbps: 8.0,
+            pipeline_depth: 2,
+            fence: "full".into(),
             comm_threads: 2,
             overlap: true,
             train_size: 4096,
@@ -117,6 +167,22 @@ impl RunConfig {
             "f32" => Precision::F32,
             other => anyhow::bail!("unknown wire precision '{other}'"),
         })
+    }
+
+    pub fn fence_mode(&self) -> Result<FenceMode> {
+        Ok(match self.fence.as_str() {
+            "full" => FenceMode::Full,
+            "layer" | "per-layer" | "per_layer" => FenceMode::PerLayer,
+            other => anyhow::bail!("unknown fence mode '{other}' (full | layer)"),
+        })
+    }
+
+    /// The configured α–β link model (chunk auto-tuning input).
+    pub fn link(&self) -> LinkParams {
+        LinkParams {
+            latency_s: self.link_alpha_us * 1e-6,
+            bandwidth_bps: self.link_beta_gbps * 1e9,
+        }
     }
 
     /// Load from JSON file if `--config path` given, then apply CLI
@@ -150,7 +216,18 @@ impl RunConfig {
         c.ranks_per_node = args.get_usize("ranks-per-node", c.ranks_per_node)?;
         c.wire = args.get_or("wire", &c.wire).to_string();
         c.bucket_bytes = args.get_usize("bucket-bytes", c.bucket_bytes)?;
-        c.chunk_bytes = args.get_usize("chunk-bytes", c.chunk_bytes)?;
+        match args.get("chunk-bytes") {
+            Some("auto") => c.chunk_auto = true,
+            Some(_) => {
+                c.chunk_auto = false;
+                c.chunk_bytes = args.get_usize("chunk-bytes", c.chunk_bytes)?;
+            }
+            None => {}
+        }
+        c.link_alpha_us = args.get_f64("link-alpha-us", c.link_alpha_us)?;
+        c.link_beta_gbps = args.get_f64("link-beta-gbps", c.link_beta_gbps)?;
+        c.pipeline_depth = args.get_usize("pipeline-depth", c.pipeline_depth)?;
+        c.fence = args.get_or("fence", &c.fence).to_string();
         c.comm_threads = args.get_usize("comm-threads", c.comm_threads)?;
         if args.flag("no-overlap") {
             c.overlap = false;
@@ -190,7 +267,14 @@ impl RunConfig {
             ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
             wire: get_str("wire", &d.wire),
             bucket_bytes: get_usize("bucket_bytes", d.bucket_bytes),
+            // `"chunk_bytes": "auto"` selects α–β-derived chunking.
             chunk_bytes: get_usize("chunk_bytes", d.chunk_bytes),
+            chunk_auto: j.get("chunk_bytes").and_then(Json::as_str) == Some("auto")
+                || get_bool("chunk_auto", d.chunk_auto),
+            link_alpha_us: get_f64("link_alpha_us", d.link_alpha_us),
+            link_beta_gbps: get_f64("link_beta_gbps", d.link_beta_gbps),
+            pipeline_depth: get_usize("pipeline_depth", d.pipeline_depth),
+            fence: get_str("fence", &d.fence),
             comm_threads: get_usize("comm_threads", d.comm_threads),
             overlap: get_bool("overlap", d.overlap),
             train_size: get_usize("train_size", d.train_size),
@@ -213,6 +297,15 @@ impl RunConfig {
         );
         anyhow::ensure!(self.bucket_bytes > 0, "bucket_bytes must be > 0");
         anyhow::ensure!(self.comm_threads >= 1, "comm_threads must be >= 1");
+        anyhow::ensure!(
+            (1..=2).contains(&self.pipeline_depth),
+            "pipeline_depth must be 1 or 2"
+        );
+        anyhow::ensure!(
+            self.link_alpha_us >= 0.0 && self.link_beta_gbps > 0.0,
+            "link alpha must be >= 0 and beta > 0"
+        );
+        self.fence_mode()?;
         self.algorithm()?;
         self.precision()?;
         Ok(())
@@ -290,6 +383,56 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"allreduce": "smoke-signals"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"wire": "f8"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"comm_threads": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"pipeline_depth": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"pipeline_depth": 3}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"fence": "vibes"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"link_beta_gbps": 0}"#).is_err());
+    }
+
+    #[test]
+    fn chunk_auto_parses_from_cli_and_json() {
+        let c = RunConfig::from_args(&args(&["train", "--chunk-bytes", "auto"])).unwrap();
+        assert!(c.chunk_auto);
+        let c = RunConfig::from_args(&args(&["train", "--chunk-bytes", "2048"])).unwrap();
+        assert!(!c.chunk_auto);
+        assert_eq!(c.chunk_bytes, 2048);
+        let c = RunConfig::from_json(r#"{"chunk_bytes": "auto"}"#).unwrap();
+        assert!(c.chunk_auto);
+        let c = RunConfig::from_json(r#"{"chunk_bytes": 4096}"#).unwrap();
+        assert!(!c.chunk_auto);
+        assert_eq!(c.chunk_bytes, 4096);
+    }
+
+    #[test]
+    fn depth_and_fence_round_trip() {
+        let d = RunConfig::default();
+        assert_eq!(d.pipeline_depth, 2, "cross-step double buffering is the default");
+        assert_eq!(d.fence_mode().unwrap(), FenceMode::Full);
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--pipeline-depth",
+            "1",
+            "--fence",
+            "layer",
+        ]))
+        .unwrap();
+        assert_eq!(c.pipeline_depth, 1);
+        assert_eq!(c.fence_mode().unwrap(), FenceMode::PerLayer);
+        let c = RunConfig::from_json(r#"{"pipeline_depth": 1, "fence": "layer"}"#).unwrap();
+        assert_eq!(c.pipeline_depth, 1);
+        assert_eq!(c.fence_mode().unwrap(), FenceMode::PerLayer);
+    }
+
+    #[test]
+    fn link_defaults_land_near_the_fixed_chunk_default() {
+        // α = 2 µs, β = 8 GB/s → α·β = 16 000 bytes: `--chunk-bytes auto`
+        // with defaults lands NEAR (not exactly at) the fixed 16 KiB
+        // default — close enough that auto is a drop-in, distinct enough
+        // that plans are not boundary-identical (documented on the field).
+        let link = RunConfig::default().link();
+        let floor = (link.latency_s * link.bandwidth_bps) as usize;
+        assert_eq!(floor, 16_000);
+        assert_ne!(floor, RunConfig::default().chunk_bytes);
     }
 
     #[test]

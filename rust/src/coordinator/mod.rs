@@ -8,17 +8,25 @@
 //!   PERSISTENT worker pool (grad workers + comm lanes living for the
 //!   whole run, fed per step over channels) where each worker streams
 //!   gradient buckets in backward-readiness order through the engine's
-//!   `grad_step_streamed` API — at row-CHUNK granularity under a chunked
-//!   `BucketPlan` (`cfg.chunk_bytes`), so even a layer holding ~96% of
-//!   the parameters reaches the wire mid-backward — a readiness ledger
-//!   triggers each bucket's allreduce the moment all workers published it
-//!   (while later chunks are still being computed), and the leader
-//!   streams the LARS/momentum update per layer as its last chunk's
-//!   reduction lands (full-layer norms, so LARS stays chunk-safe).
-//!   Communication genuinely hides behind backward; `StepBreakdown`
-//!   accounts the exposed-vs-hidden split and `Trainer::pipeline_trace`
-//!   hands the measured timeline to `overlap::MeasuredPipeline` for
-//!   simulator calibration.
+//!   allocation-free `grad_step_streamed_into` API — at row-CHUNK
+//!   granularity under a chunked `BucketPlan` (`cfg.chunk_bytes`), so
+//!   even a layer holding ~96% of the parameters reaches the wire
+//!   mid-backward — a generation-tagged readiness ledger triggers each
+//!   bucket's allreduce the moment all workers published it (while later
+//!   chunks are still being computed), and the leader streams the
+//!   LARS/momentum update per layer as its last chunk's reduction lands
+//!   (full-layer norms, so LARS stays chunk-safe). At
+//!   `cfg.pipeline_depth = 2` (the default) steps are DOUBLE-BUFFERED
+//!   across each other: each worker owns two generation-tagged gradient
+//!   buffers, step s+1's micro-batch draw and buffer zero start while
+//!   step s's tail buckets are still reducing and its updates are still
+//!   streaming, and a per-layer parameter-version fence holds step s+1's
+//!   forward until the updates it reads have landed — so the depth-1
+//!   executor's exposed tail is overlapped with the next step's ramp-up
+//!   without moving a single bit of the trajectory. `StepBreakdown`
+//!   accounts the exposed/hidden/cross-step split and
+//!   `Trainer::pipeline_trace` hands the measured timeline to
+//!   `overlap::MeasuredPipeline` for simulator calibration.
 //! * **Sequential** (`cfg.overlap = false`, and the PJRT backend) — the
 //!   barrier reference: full grad phase, then bucketed allreduce
 //!   (split-borrowed spans over concurrent `CommEngine` lanes), then a
@@ -34,7 +42,7 @@
 
 use crate::bucket::BucketPlan;
 use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
-use crate::config::RunConfig;
+use crate::config::{FenceMode, RunConfig};
 use crate::data::{make_batch, Batch, DataConfig, Shard, Split, Synthetic};
 use crate::init;
 use crate::metrics::{StepBreakdown, Throughput, Timer};
@@ -77,6 +85,30 @@ pub struct TrainReport {
     pub global_batch: usize,
     pub elapsed_s: f64,
     pub images_per_sec: f64,
+    /// Throughput excluding the FIRST step — the cross-step pipeline's
+    /// steady state. The first step has no predecessor tail to overlap
+    /// with (and carries pool spin-up), so at depth 2 the run splits into
+    /// a cold-start step and a steadily overlapped remainder; this is the
+    /// number the double-buffered executor is judged on. Equals
+    /// `images_per_sec` when the run has a single step.
+    pub steady_state_images_per_sec: f64,
+    /// Wall-clock of the first step (pool spin-up + no overlap partner).
+    pub cold_start_s: f64,
+    /// Total comm wall-clock hidden specifically by CROSS-STEP overlap
+    /// (tail comm that ran between a step's backward end and the moment
+    /// the next step's leader needed it finished). 0 at depth 1.
+    pub cross_step_hidden_total_s: f64,
+    /// Step executor depth the run used (1 = intra-step overlap only,
+    /// 2 = cross-step double buffering).
+    pub pipeline_depth: usize,
+    /// Row-chunk granularity the run's bucket plan was built with, in
+    /// wire bytes (0 = whole-layer buckets). Under `--chunk-bytes auto`
+    /// this is the α–β-derived value actually chosen.
+    pub chunk_bytes: usize,
+    /// Per-layer chunk bytes the plan ended up with — only layers that
+    /// were actually split appear. Records the chosen plan so an `auto`
+    /// run's report states what it trained with.
+    pub chunk_plan: Vec<(String, usize)>,
     pub final_train_loss: f32,
     /// Accuracy of the last evaluation, `None` when no eval ever ran — a
     /// run without one must not masquerade as 0% accuracy.
@@ -99,6 +131,31 @@ impl TrainReport {
             ("global_batch", Json::Num(self.global_batch as f64)),
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("images_per_sec", Json::Num(self.images_per_sec)),
+            (
+                "steady_state_images_per_sec",
+                Json::Num(self.steady_state_images_per_sec),
+            ),
+            ("cold_start_s", Json::Num(self.cold_start_s)),
+            (
+                "cross_step_hidden_total_s",
+                Json::Num(self.cross_step_hidden_total_s),
+            ),
+            ("pipeline_depth", Json::Num(self.pipeline_depth as f64)),
+            ("chunk_bytes", Json::Num(self.chunk_bytes as f64)),
+            (
+                "chunk_plan",
+                Json::Arr(
+                    self.chunk_plan
+                        .iter()
+                        .map(|(name, bytes)| {
+                            Json::obj(vec![
+                                ("layer", Json::Str(name.clone())),
+                                ("chunk_bytes", Json::Num(*bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("final_train_loss", Json::Num(self.final_train_loss as f64)),
             (
                 "final_val_acc",
@@ -172,9 +229,15 @@ pub struct Trainer {
     momentum: Vec<f32>,
     bn_state: Vec<f32>,
 
-    // scratch reused across steps (no hot-loop allocation)
+    // scratch reused across steps (no hot-loop allocation). The primary
+    // buffers serve the sequential executor and EVEN step generations of
+    // the pipelined one; the `_alt` set is the second generation slot of
+    // the cross-step double buffer (odd generations at depth 2),
+    // allocated lazily on the first depth-2 pipelined step.
     worker_grads: Vec<Vec<f32>>,
+    worker_grads_alt: Vec<Vec<f32>>,
     worker_states: Vec<Vec<f32>>,
+    worker_states_alt: Vec<Vec<f32>>,
     batches: Vec<Batch>,
     /// Persistent allreduce engines for the SEQUENTIAL executor, one per
     /// concurrent bucket lane; the chunk plans they cache make the
@@ -185,6 +248,29 @@ pub struct Trainer {
     /// Persistent worker runtime for the pipelined executor; spun up
     /// lazily on the first pipelined step.
     pool: Option<worker_pool::WorkerPool>,
+    /// Run clock shared by the pool, the generation ledgers and the
+    /// leader's cross-step accounting (set with the pool).
+    run_t0: Option<std::time::Instant>,
+    /// Generation-tagged per-bucket ledgers: all workers published a
+    /// bucket (`ready`, target = workers) / its reduction landed
+    /// (`reduced`, target = 1). Two slots each, so two step generations
+    /// can be in flight.
+    ready: Option<Arc<worker_pool::GenLedger>>,
+    reduced: Option<Arc<worker_pool::GenLedger>>,
+    /// Per-layer parameter-version fence gating each generation's reads
+    /// of `params`/`bn_state` on the previous generation's update.
+    fence: Option<Arc<worker_pool::ParamFence>>,
+    /// Fence strictness (from `cfg.fence`), resolved once.
+    fence_mode: FenceMode,
+    /// The dispatched-but-unfinished step generation (depth 2 parks each
+    /// step's comm/update tail here; retired by the next step or `flush`).
+    inflight: Option<pipeline::InflightTail>,
+    /// Lane reports that arrived for a generation other than the one
+    /// being drained (see `drain_lane_msgs`).
+    pending_lane_msgs: Vec<worker_pool::LaneMsg>,
+    /// Chunk granularity the plan was actually built with (differs from
+    /// `cfg.chunk_bytes` under `--chunk-bytes auto`).
+    chunk_bytes_used: usize,
     /// Measured timeline of the most recent pipelined step — the
     /// calibration hook for `overlap`/`simnet`.
     last_pipeline: Option<MeasuredPipeline>,
@@ -213,11 +299,19 @@ impl Trainer {
             .collect();
         let precision = cfg.precision()?;
         let algo = cfg.algorithm()?;
+        // `--chunk-bytes auto`: derive the row-chunk grain from the α–β
+        // link model (chunks below the α·β latency floor pay more
+        // latency than backward can hide; see simnet::auto_chunk_bytes).
+        let chunk_bytes_used = if cfg.chunk_auto {
+            crate::simnet::auto_chunk_bytes(&cfg.link(), 512, 4 * cfg.bucket_bytes)
+        } else {
+            cfg.chunk_bytes
+        };
         let plan = BucketPlan::build_chunked(
             m,
             cfg.bucket_bytes,
             precision.bytes_per_elem(),
-            cfg.chunk_bytes,
+            chunk_bytes_used,
         );
         plan.validate(m)?;
         let schedule = cfg.schedule();
@@ -236,6 +330,7 @@ impl Trainer {
         let workers = cfg.workers;
         let bucket_spans = Arc::new(plan.spans_with_padding());
         let pipeline = cfg.overlap && engine.supports_pipeline();
+        let fence_mode = cfg.fence_mode()?;
         Ok(Trainer {
             cfg,
             engine,
@@ -255,12 +350,24 @@ impl Trainer {
             momentum,
             bn_state,
             worker_grads: (0..workers).map(|_| vec![0.0; np]).collect(),
+            // Second generation slot: allocated lazily by `ensure_pool`
+            // the first time a depth-2 pipelined step runs.
+            worker_grads_alt: Vec::new(),
             worker_states: (0..workers).map(|_| vec![0.0; sc]).collect(),
+            worker_states_alt: Vec::new(),
             batches: (0..workers)
                 .map(|_| Batch { images: Vec::new(), labels: Vec::new() })
                 .collect(),
             comm: Vec::new(),
             pool: None,
+            run_t0: None,
+            ready: None,
+            reduced: None,
+            fence: None,
+            fence_mode,
+            inflight: None,
+            pending_lane_msgs: Vec::new(),
+            chunk_bytes_used,
             last_pipeline: None,
             breakdown: StepBreakdown::default(),
             wire_totals: WireStats::default(),
@@ -286,11 +393,43 @@ impl Trainer {
         }
     }
 
-    pub fn params(&self) -> &[f32] {
+    /// Effective step-pipeline depth: 1 = each step's comm/update tail is
+    /// finished inside the step; 2 = the tail is overlapped with the next
+    /// step (cross-step double buffering). Always 1 on the sequential
+    /// executor.
+    pub fn depth(&self) -> usize {
+        if self.pipeline {
+            self.cfg.pipeline_depth
+        } else {
+            1
+        }
+    }
+
+    /// Retire the in-flight step generation, if any: wait out its
+    /// remaining reductions, apply its streamed master update and BN
+    /// policy, and book its accounting. Every master-state reader below
+    /// calls this first, so observers never see a half-finished step; it
+    /// is public for benches/tests that read `breakdown` directly.
+    ///
+    /// Error contract: `step()`/`train()`/`evaluate()`/`restore()`
+    /// propagate flush errors as `Result`. The infallible read accessors
+    /// (`params`, `bn_state`, `wire_totals`, `pipeline_trace`,
+    /// `checkpoint`) instead `expect` — a failed tail update means the
+    /// master state is structurally broken (an `update_span` layer-span
+    /// violation, not an environmental condition), so reading on is
+    /// meaningless; callers that want to recover should call `flush()`
+    /// themselves first.
+    pub fn flush(&mut self) -> Result<()> {
+        self.finish_inflight()
+    }
+
+    pub fn params(&mut self) -> &[f32] {
+        self.flush().expect("flushing in-flight step");
         &self.params
     }
 
-    pub fn bn_state(&self) -> &[f32] {
+    pub fn bn_state(&mut self) -> &[f32] {
+        self.flush().expect("flushing in-flight step");
         &self.bn_state
     }
 
@@ -298,8 +437,16 @@ impl Trainer {
         &self.plan
     }
 
+    /// Row-chunk granularity (wire bytes) the bucket plan was built with —
+    /// `cfg.chunk_bytes`, or the α–β-derived value under `--chunk-bytes
+    /// auto`.
+    pub fn chunk_bytes_used(&self) -> usize {
+        self.chunk_bytes_used
+    }
+
     /// Cumulative wire accounting across all steps so far.
-    pub fn wire_totals(&self) -> &WireStats {
+    pub fn wire_totals(&mut self) -> &WireStats {
+        self.flush().expect("flushing in-flight step");
         &self.wire_totals
     }
 
@@ -311,10 +458,12 @@ impl Trainer {
         self.images_seen as f64 / self.cfg.train_size as f64
     }
 
-    /// Measured timeline of the most recent pipelined step (None until a
-    /// pipelined step ran) — feed it to `overlap::MeasuredPipeline::replay`
-    /// / `simnet::fit_alpha_beta` to calibrate the simulators.
-    pub fn pipeline_trace(&self) -> Option<&MeasuredPipeline> {
+    /// Measured timeline of the most recent FINISHED pipelined step (None
+    /// until one ran; flushes the in-flight generation so the latest step
+    /// is included) — feed it to `overlap::MeasuredPipeline::replay` /
+    /// `simnet::fit_alpha_beta` to calibrate the simulators.
+    pub fn pipeline_trace(&mut self) -> Option<&MeasuredPipeline> {
+        self.flush().expect("flushing in-flight step");
         self.last_pipeline.as_ref()
     }
 
@@ -357,6 +506,9 @@ impl Trainer {
         let (loss_sum, correct_sum) = if self.pipeline {
             self.step_pipelined(variant, &all_idxs, accum_inv)?
         } else {
+            // A trainer switched to the sequential executor mid-run must
+            // not run it over a still-in-flight pipelined generation.
+            self.flush()?;
             self.step_sequential(variant, &all_idxs, accum_inv)?
         };
 
@@ -462,20 +614,23 @@ impl Trainer {
         // Outside the update timer so `update_s` means the same thing in
         // both executors (pure master update, no BN bookkeeping).
         t_up.stop_into(&mut self.breakdown.update_s);
-        self.apply_bn_policy();
+        self.apply_bn_policy(false);
 
         Ok((loss_sum, correct_sum))
     }
 
     /// BN statistics policy (paper III-A-2): worker-local (adopt worker
-    /// 0's) or mean-synced. Shared by both executors.
-    fn apply_bn_policy(&mut self) {
+    /// 0's) or mean-synced. Shared by both executors; `alt` selects which
+    /// generation's states buffers to read (the sequential executor and
+    /// even pipelined generations use the primary set).
+    pub(crate) fn apply_bn_policy(&mut self, alt: bool) {
+        let states = if alt { &self.worker_states_alt } else { &self.worker_states };
         match self.bn_mode {
-            BnStatsMode::Local => self.bn_state.copy_from_slice(&self.worker_states[0]),
+            BnStatsMode::Local => self.bn_state.copy_from_slice(&states[0]),
             BnStatsMode::Mean => {
                 let inv = 1.0 / self.cfg.workers as f32;
                 for (i, dst) in self.bn_state.iter_mut().enumerate() {
-                    *dst = self.worker_states.iter().map(|s| s[i]).sum::<f32>() * inv;
+                    *dst = states.iter().map(|s| s[i]).sum::<f32>() * inv;
                 }
             }
         }
@@ -546,8 +701,10 @@ impl Trainer {
         Ok((loss_sum, correct_sum))
     }
 
-    /// Snapshot the full training state.
-    pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
+    /// Snapshot the full training state (flushes the in-flight generation
+    /// first, so the snapshot is a clean step boundary).
+    pub fn checkpoint(&mut self) -> crate::checkpoint::Checkpoint {
+        self.flush().expect("flushing in-flight step");
         crate::checkpoint::Checkpoint {
             model_name: self.engine.manifest().model.name.clone(),
             step: self.step_idx,
@@ -559,7 +716,13 @@ impl Trainer {
     }
 
     /// Restore a snapshot (model identity and buffer lengths must match).
+    /// Any in-flight generation is retired first, and the cross-step
+    /// machinery re-seeds on the restored step: the next dispatched
+    /// generation is `ckpt.step`, and the parameter fence's versions jump
+    /// there so its workers pass their fence immediately (the restored
+    /// params already carry every update through that step).
     pub fn restore(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<()> {
+        self.flush()?;
         let m = self.engine.manifest();
         anyhow::ensure!(
             ckpt.model_name == m.model.name,
@@ -577,6 +740,9 @@ impl Trainer {
         self.momentum.copy_from_slice(&ckpt.momentum);
         self.bn_state.copy_from_slice(&ckpt.bn_state);
         self.step_idx = ckpt.step;
+        if let Some(fence) = &self.fence {
+            fence.reset(ckpt.step as u64);
+        }
         // Fast-forward the data shards so resumed runs draw the batches the
         // uninterrupted run would have drawn. Each replayed step consumes
         // THAT step's accumulation count — under an active `batch_ramp`
@@ -603,8 +769,11 @@ impl Trainer {
         Ok(())
     }
 
-    /// Evaluate on `n_batches` of the validation split.
+    /// Evaluate on `n_batches` of the validation split. Flushes the
+    /// in-flight generation first: evaluation reads the master state, so
+    /// it must observe a whole number of steps.
     pub fn evaluate(&mut self, n_batches: usize) -> Result<(f32, f32)> {
+        self.flush()?;
         let m = self.engine.manifest();
         let b = m.train.batch_size;
         let mut batch = Batch { images: Vec::new(), labels: Vec::new() };
@@ -644,11 +813,21 @@ impl Trainer {
         let mut loss_history = Vec::with_capacity(self.cfg.total_steps);
         let mut evals: Vec<EvalPoint> = Vec::new();
         let mut last_train = (f32::NAN, 0.0f32);
+        // Cross-step methodology (EXPERIMENTS.md): the FIRST step is the
+        // cold start — pool spin-up, no predecessor tail to overlap — and
+        // is excluded from the steady-state throughput window.
+        let mut cold_start_s = 0.0f64;
+        let mut cold_start_images = 0u64;
 
         for s in 0..self.cfg.total_steps {
+            let images_before = self.images_seen;
             let t_step = Timer::start();
             let (loss, acc) = self.step()?;
-            t_step.stop_into(&mut self.breakdown.step_s);
+            let step_wall = t_step.stop_into(&mut self.breakdown.step_s);
+            if s == 0 {
+                cold_start_s = step_wall;
+                cold_start_images = self.images_seen - images_before;
+            }
             loss_history.push(loss);
             last_train = (loss, acc);
 
@@ -681,16 +860,42 @@ impl Trainer {
             }
         }
 
+        // Retire the final step's tail before the clock stops, so elapsed
+        // and the per-step accounting cover every step completely.
+        self.flush()?;
         self.logger.log(tags::RUN_STOP);
         self.logger.log(tags::RUN_FINAL);
         let elapsed = run_timer.elapsed_s();
         let tp = Throughput { images: self.images_seen, seconds: elapsed };
+        let steady = Throughput {
+            images: self.images_seen - cold_start_images,
+            seconds: (elapsed - cold_start_s).max(0.0),
+        };
         let exposed = &self.breakdown.comm_exposed_s;
+        let cross = &self.breakdown.cross_hidden_s;
+        let manifest = self.engine.manifest();
+        let chunk_plan: Vec<(String, usize)> = self
+            .plan
+            .per_layer_chunk_bytes()
+            .into_iter()
+            .filter(|&(_, bytes)| bytes > 0)
+            .map(|(li, bytes)| (manifest.layers[li].name.clone(), bytes))
+            .collect();
         Ok(TrainReport {
             steps: self.cfg.total_steps,
             global_batch: self.global_batch(),
             elapsed_s: elapsed,
             images_per_sec: tp.images_per_sec(),
+            steady_state_images_per_sec: if self.cfg.total_steps > 1 && steady.seconds > 0.0 {
+                steady.images_per_sec()
+            } else {
+                tp.images_per_sec()
+            },
+            cold_start_s,
+            cross_step_hidden_total_s: cross.mean() * cross.count() as f64,
+            pipeline_depth: self.depth(),
+            chunk_bytes: self.chunk_bytes_used,
+            chunk_plan,
             final_train_loss: last_train.0,
             final_val_acc: evals.last().map(|e| e.val_acc),
             loss_history,
@@ -700,6 +905,20 @@ impl Trainer {
             overlap_efficiency: self.breakdown.overlap_efficiency(),
             mlperf_elapsed_s: self.logger.run_elapsed_s(),
         })
+    }
+}
+
+impl Drop for Trainer {
+    /// Retire any in-flight generation BEFORE the field drops run: pool
+    /// lanes may still hold raw views into this Trainer's gradient
+    /// buffers, and Rust drops fields in declaration order — the buffers
+    /// would be freed before the pool's Drop joins its threads. Flushing
+    /// waits out every reduction and drains every report, leaving the
+    /// pool quiescent. Errors are deliberately swallowed (the step that
+    /// produced them already surfaced a Result, or the Trainer is being
+    /// torn down anyway).
+    fn drop(&mut self) {
+        let _ = self.flush();
     }
 }
 

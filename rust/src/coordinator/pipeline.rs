@@ -1,33 +1,107 @@
-//! The pipelined step executor (paper III-C-2, for real this time).
+//! The pipelined step executor (paper III-C-2), double-buffered across
+//! steps.
 //!
 //! `Trainer::step_pipelined` drives one optimization step through the
 //! persistent [`worker_pool`](super::worker_pool): grad workers stream
 //! bucket publications in backward-readiness order, comm lanes reduce each
 //! bucket the moment every worker has published it (while later buckets
 //! are still being computed), and the leader streams the LARS/SGD master
-//! update per bucket as reductions land — so communication and the update
-//! hide behind the backward pass instead of waiting for a full-buffer
-//! barrier. The sequential path in `coordinator::mod` remains the
-//! reference; the determinism grid test holds this executor to bitwise
-//! equality with it.
+//! update per bucket as reductions land.
+//!
+//! # Cross-step double buffering (`cfg.pipeline_depth = 2`, the default)
+//!
+//! The step's TAIL — the last buckets' reductions, the streamed master
+//! update, the lane drain and all accounting — is not finished inside the
+//! step that produced it. `step_pipelined(s)` instead:
+//!
+//! 1. arms the generation-tagged ledgers for generation s and dispatches
+//!    step s's jobs into grad buffer s % 2 (workers immediately zero it
+//!    and draw their first micro-batch, then block on the parameter
+//!    fence);
+//! 2. finishes step s−1's tail ([`Trainer::finish_inflight`]): waits out
+//!    its remaining reductions from buffer (s−1) % 2, streams its
+//!    per-bucket updates — publishing the fence layer by layer, which is
+//!    what releases step s's workers into forward/backward — applies the
+//!    BN policy and drains its lane reports;
+//! 3. collects step s's worker reports (the loss) and parks step s's tail
+//!    as the new in-flight generation.
+//!
+//! So while step s−1's tail buckets are still on the wire and its updates
+//! are streaming, step s's micro-batch draw (and, once the fence opens,
+//! its forward/backward) is already running — the exposed tail the
+//! depth-1 executor pays every step is overlapped with the next step's
+//! ramp-up. With the fence at full-update strictness the weight
+//! trajectory is BIT-identical to depth 1 (and to the sequential
+//! reference): the fence forces step s to read exactly the post-update
+//! parameters, and nothing else about the arithmetic moves. The
+//! determinism grid in `rust/tests/pipeline.rs` enforces this at every
+//! (depth, workers, lanes, accum, precision, algorithm, chunk) point.
+//!
+//! Anything that reads master state (`params()`, `checkpoint()`,
+//! `evaluate()`, `train()`'s report, Drop) first calls
+//! [`Trainer::flush`], which retires the in-flight generation.
 
-use super::worker_pool::{LaneJob, LaneMsg, Ledger, RawBuf, WorkerJob, WorkerPool};
+use super::worker_pool::{LaneJob, LaneMsg, RawBuf, WorkerJob};
 use super::Trainer;
 use crate::overlap::MeasuredPipeline;
 use crate::runtime::{GradVariant, UpdateRule};
 use anyhow::Result;
-use std::sync::Arc;
-use std::time::Instant;
+
+/// The parked tail of a dispatched-but-unfinished step generation.
+pub(super) struct InflightTail {
+    pub(super) gen: u64,
+    /// LR at the step's index (captured at dispatch — the schedule moves
+    /// on before the tail is finished).
+    pub(super) lr: f32,
+    pub(super) rule: UpdateRule,
+    /// Which buffer set the generation was dispatched into (captured at
+    /// dispatch: `pipeline`/`cfg.pipeline_depth` are public and could be
+    /// flipped while a tail is parked — the retire path must read the
+    /// buffers the jobs actually wrote, not re-derive the slot).
+    pub(super) alt: bool,
+    /// Effective depth at dispatch (same flip-proofing: exposure
+    /// accounting keys off the depth the step actually ran at).
+    pub(super) depth: usize,
+    /// Run-clock instant the generation's jobs were dispatched.
+    pub(super) dispatch_abs_s: f64,
+}
 
 impl Trainer {
-    /// Spin up the persistent pool on first use (so trainers running the
-    /// sequential executor never spawn it).
+    /// Spin up the persistent pool + generation ledgers + parameter fence
+    /// on first use (so trainers running the sequential executor never
+    /// spawn any of it).
     fn ensure_pool(&mut self) {
+        // The second generation's buffers exist only once a depth-2
+        // pipelined step actually runs (sequential and PJRT trainers —
+        // where depth 2 is configured by default but unusable — never pay
+        // the extra workers × Np allocation). Checked outside the
+        // pool-exists early-return so a depth flipped up mid-run still
+        // gets its buffers.
+        if self.depth() == 2 && self.worker_grads_alt.is_empty() {
+            let np = self.engine.manifest().padded_param_count;
+            let sc = self.engine.manifest().state_count;
+            self.worker_grads_alt = (0..self.cfg.workers).map(|_| vec![0.0; np]).collect();
+            self.worker_states_alt = (0..self.cfg.workers).map(|_| vec![0.0; sc]).collect();
+        }
         if self.pool.is_some() {
             return;
         }
         let (lanes, threads_per_lane) = self.comm_lane_split();
-        self.pool = Some(WorkerPool::spawn(
+        let run_t0 = std::time::Instant::now();
+        let nb = self.bucket_spans.len();
+        self.run_t0 = Some(run_t0);
+        self.ready = Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(
+            nb,
+            self.cfg.workers,
+            run_t0,
+        )));
+        self.reduced =
+            Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(nb, 1, run_t0)));
+        self.fence = Some(std::sync::Arc::new(super::worker_pool::ParamFence::new(
+            self.engine.manifest().layers.len(),
+            self.step_idx as u64,
+        )));
+        self.pool = Some(super::worker_pool::WorkerPool::spawn(
             self.cfg.workers,
             lanes,
             threads_per_lane,
@@ -35,11 +109,21 @@ impl Trainer {
             self.precision,
             self.engine.clone(),
             self.data.clone(),
+            run_t0,
         ));
     }
 
+    /// Which generation buffer set step generation `gen` uses: the `_alt`
+    /// slot on odd generations at depth 2, the primary slot otherwise.
+    fn gen_uses_alt(&self, gen: u64) -> bool {
+        self.depth() == 2 && gen % 2 == 1
+    }
+
     /// One pipelined step: returns (Σ loss, Σ correct) over workers, like
-    /// the sequential grad phase does.
+    /// the sequential grad phase does. At depth 2 the step's own comm/
+    /// update tail is left in flight (finished inside the NEXT step or by
+    /// `flush`); at depth 1 it is finished before returning, reproducing
+    /// the single-buffered executor.
     pub(super) fn step_pipelined(
         &mut self,
         variant: GradVariant,
@@ -49,24 +133,45 @@ impl Trainer {
         self.ensure_pool();
         let nb = self.bucket_spans.len();
         let workers = self.cfg.workers;
-        let t0 = Instant::now();
-        let ready = Arc::new(Ledger::new(nb, workers, t0));
-        let reduced = Arc::new(Ledger::new(nb, 1, t0));
+        let gen = self.step_idx as u64;
+        let alt = self.gen_uses_alt(gen);
+        // Normally consecutive generations alternate buffer slots, so the
+        // parked tail and the new dispatch never collide. A mid-run flip
+        // of the public `cfg.pipeline_depth`/`pipeline` knobs can break
+        // that parity (e.g. depth 2 → 1 with an odd tail parked): the new
+        // generation would then be dispatched into buffers the tail's
+        // lanes are still reducing. Retire the tail first in that case —
+        // correctness over overlap.
+        if matches!(&self.inflight, Some(tail) if tail.alt == alt) {
+            self.finish_inflight()?;
+        }
+        let ready = self.ready.as_ref().expect("pool ensured").clone();
+        let reduced = self.reduced.as_ref().expect("pool ensured").clone();
+        let fence = self.fence.as_ref().expect("pool ensured").clone();
+        let run_t0 = self.run_t0.expect("pool ensured");
+        ready.begin(gen);
+        reduced.begin(gen);
 
-        // Shared raw views for this step (see worker_pool safety model).
+        // Shared raw views for this generation (see worker_pool safety
+        // model). Gradients/states go to the generation-selected slot.
         let params_buf = RawBuf::new(&mut self.params);
         let bn_buf = RawBuf::new(&mut self.bn_state);
-        let grad_bufs: Vec<RawBuf> =
-            self.worker_grads.iter_mut().map(|g| RawBuf::new(g)).collect();
-        let state_bufs: Vec<RawBuf> =
-            self.worker_states.iter_mut().map(|s| RawBuf::new(s)).collect();
+        let (grad_vecs, state_vecs) = if alt {
+            (&mut self.worker_grads_alt, &mut self.worker_states_alt)
+        } else {
+            (&mut self.worker_grads, &mut self.worker_states)
+        };
+        let grad_bufs: Vec<RawBuf> = grad_vecs.iter_mut().map(|g| RawBuf::new(g)).collect();
+        let state_bufs: Vec<RawBuf> = state_vecs.iter_mut().map(|s| RawBuf::new(s)).collect();
 
         // ---- dispatch: one job per grad worker, one per comm lane ------
+        let dispatch_abs_s = run_t0.elapsed().as_secs_f64();
         let pool = self.pool.as_ref().expect("pool just ensured");
         for w in 0..workers {
             pool.send_worker(
                 w,
                 WorkerJob {
+                    gen,
                     worker: w,
                     params: params_buf,
                     bn_state: bn_buf,
@@ -78,6 +183,8 @@ impl Trainer {
                     chunk_elems: self.plan.chunk_elems,
                     spans: self.bucket_spans.clone(),
                     ready: ready.clone(),
+                    fence: fence.clone(),
+                    fence_mode: self.fence_mode,
                 },
             );
         }
@@ -85,28 +192,37 @@ impl Trainer {
             pool.send_lane(
                 l,
                 LaneJob {
+                    gen,
                     grads: grad_bufs.clone(),
                     spans: self.bucket_spans.clone(),
                     ready: ready.clone(),
                     reduced: reduced.clone(),
-                    t0,
                 },
             );
         }
 
+        // ---- finish the PREVIOUS step's tail ---------------------------
+        // This is the cross-step overlap: while we wait out step s−1's
+        // last reductions and stream its updates, step s's workers are
+        // already zeroing their buffers and materializing batches; the
+        // per-layer fence publishes below then release them into
+        // forward/backward. (Depth 1, or the first step: nothing parked,
+        // no-op.)
+        let mut first_err: Option<anyhow::Error> = self.finish_inflight().err();
+
         // ---- wait out the grad phase -----------------------------------
         // Workers publish every bucket before reporting (their failure
         // guard guarantees it), so once all reports are in, (a) every
-        // bucket is at least READY — comm lanes are never blocked again —
-        // and (b) no worker holds a reference to params/bn_state any more,
-        // which is what makes the streamed parameter writes below plainly
-        // race-free. Early buckets have typically ALREADY been reduced at
-        // this point: their allreduce ran underneath backward — that is
-        // the overlap this executor exists for.
+        // bucket of this generation is at least READY — comm lanes are
+        // never blocked again — and (b) no worker holds a reference to
+        // params/bn_state any more, which is what makes the NEXT
+        // finish_inflight's parameter writes race-free. Early buckets have
+        // typically ALREADY been reduced at this point: their allreduce
+        // ran underneath backward.
         let mut worker_results: Vec<Option<(f32, f32)>> = vec![None; workers];
-        let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..workers {
-            let msg = pool.recv_worker();
+            let msg = self.pool.as_ref().expect("pool").recv_worker();
+            debug_assert_eq!(msg.gen, gen, "worker report from a displaced generation");
             if let Some(e) = msg.error {
                 if first_err.is_none() {
                     first_err = Some(anyhow::anyhow!("worker {}: {e}", msg.worker));
@@ -115,95 +231,32 @@ impl Trainer {
             worker_results[msg.worker] = Some((msg.loss, msg.correct));
         }
 
-        // ---- streamed master update (leader) ---------------------------
-        // Applied per bucket as its reduction lands, overlapping the comm
-        // tail: bucket i's layers are updated while later buckets are
-        // still on the wire. A layer updates the moment its LAST piece is
-        // reduced — for whole-layer pieces that is its own bucket; for a
-        // row-chunked layer it is the bucket carrying the row-0 chunk
-        // (every higher-row chunk lives in an earlier, already-reduced
-        // bucket). Deferring to that point is what keeps LARS
-        // chunk-boundary-safe: `update_span` sees the full layer, so the
-        // trust ratio always comes from FULL-layer norms, never a chunk's
-        // — and the layer kernel is shared with `Engine::update`, so the
-        // stream is bit-identical to one whole-buffer update. Skipped
-        // entirely when the grad phase failed — params stay at their
-        // pre-step values.
-        let lr = self.schedule.lr_at(self.step_idx) as f32;
-        let rule = if self.cfg.lars { UpdateRule::Lars } else { UpdateRule::Sgd };
-        let engine = self.engine.clone();
-        let mut update_active_s = 0.0f64;
-        if first_err.is_none() {
-            for i in 0..nb {
-                reduced.wait(i);
-                let tu = Instant::now();
-                for piece in &self.plan.buckets[i].pieces {
-                    if !piece.is_layer_tail() {
-                        continue; // higher-row chunk: deferred to the row-0 chunk
-                    }
-                    let l = &engine.manifest().layers[piece.layer];
-                    let (lo, hi) = (l.offset, l.offset + l.size);
-                    // SAFETY: the layer span is quiescent — it lies inside
-                    // buckets 0..=i, whose lanes dropped their views
-                    // before publishing `reduced` (mutex ordering, waited
-                    // in order above), the leader is past the worker
-                    // barrier, and other lanes only touch later buckets'
-                    // disjoint spans.
-                    let g_span = unsafe { grad_bufs[0].slice(lo, hi) };
-                    let res = engine.update_span(
-                        rule,
-                        &mut self.params[lo..hi],
-                        &mut self.momentum[lo..hi],
-                        g_span,
-                        lo,
-                        &[piece.layer],
-                        lr,
-                    );
-                    if let Err(e) = res {
-                        if first_err.is_none() {
-                            first_err = Some(e);
-                        }
-                    }
-                }
-                update_active_s += tu.elapsed().as_secs_f64();
-            }
-        }
-
-        // ---- drain the lanes (always fully, even on error: the next step
-        // must find empty result channels and quiescent threads) ---------
-        let mut per_bucket: Vec<Option<LaneMsg>> = (0..nb).map(|_| None).collect();
-        for _ in 0..nb {
-            let msg = pool.recv_lane();
-            per_bucket[msg.bucket] = Some(msg);
-        }
         if let Some(e) = first_err {
+            // Failed step: skip the update entirely (params stay at their
+            // pre-step values), but leave the pool quiescent — drain this
+            // generation's lanes and retire the ledgers so a retry (or
+            // Drop) finds clean slots.
+            let _ = self.drain_lane_msgs(gen, nb);
+            ready.close(gen);
+            reduced.close(gen);
             return Err(e);
         }
 
-        // ---- accounting -------------------------------------------------
-        // Backward ends when the LAST bucket becomes ready; comm activity
-        // past that point is the exposed tail the step actually pays for.
-        let ready_s = ready.ready_times();
-        let backward_s = ready_s.last().copied().unwrap_or(0.0);
-        let mut comm_active_s = 0.0f64;
-        let mut last_comm_end = 0.0f64;
-        let mut comm_spans = Vec::with_capacity(nb);
-        for (i, slot) in per_bucket.into_iter().enumerate() {
-            let msg = slot.unwrap_or_else(|| panic!("bucket {i} missing its lane report"));
-            comm_active_s += msg.end_s - msg.start_s;
-            last_comm_end = last_comm_end.max(msg.end_s);
-            comm_spans.push((msg.start_s, msg.end_s));
-            self.wire_totals.merge(&msg.stats);
+        // ---- park this step's tail -------------------------------------
+        let rule = if self.cfg.lars { UpdateRule::Lars } else { UpdateRule::Sgd };
+        self.inflight = Some(InflightTail {
+            gen,
+            lr: self.schedule.lr_at(self.step_idx) as f32,
+            rule,
+            alt,
+            depth: self.depth(),
+            dispatch_abs_s,
+        });
+        if self.depth() == 1 {
+            // Single-buffered: finish inline — the classic pipelined
+            // executor, bit- and schedule-compatible with PR 2/3.
+            self.finish_inflight()?;
         }
-        let exposed_s = (last_comm_end - backward_s).max(0.0);
-        self.breakdown.grad_s.push(backward_s);
-        self.breakdown.comm_s.push(comm_active_s);
-        self.breakdown.comm_exposed_s.push(exposed_s);
-        self.breakdown.update_s.push(update_active_s);
-        self.last_pipeline = Some(MeasuredPipeline { backward_s, ready_s, comm_spans });
-
-        // ---- BN statistics policy (threads are quiescent again) --------
-        self.apply_bn_policy();
 
         let mut loss_sum = 0.0f32;
         let mut correct_sum = 0.0f32;
@@ -213,5 +266,175 @@ impl Trainer {
             correct_sum += c;
         }
         Ok((loss_sum, correct_sum))
+    }
+
+    /// Retire the in-flight generation, if any: wait out its remaining
+    /// reductions, stream its per-bucket master updates (publishing the
+    /// parameter fence as layers land), apply the BN policy, drain its
+    /// lane reports and book the step's overlap accounting. No-op when
+    /// nothing is parked.
+    pub(super) fn finish_inflight(&mut self) -> Result<()> {
+        let Some(tail) = self.inflight.take() else {
+            return Ok(());
+        };
+        let gen = tail.gen;
+        let nb = self.bucket_spans.len();
+        let ready = self.ready.as_ref().expect("inflight implies pool").clone();
+        let reduced = self.reduced.as_ref().expect("inflight implies pool").clone();
+        let fence = self.fence.as_ref().expect("inflight implies pool").clone();
+        let run_t0 = self.run_t0.expect("inflight implies pool");
+        let entry_abs_s = run_t0.elapsed().as_secs_f64();
+        let engine = self.engine.clone();
+        let mut first_err: Option<anyhow::Error> = None;
+
+        // ---- streamed master update (leader) ---------------------------
+        // Applied per bucket as its reduction lands. A layer updates the
+        // moment its LAST piece is reduced — for whole-layer pieces that
+        // is its own bucket; for a row-chunked layer it is the bucket
+        // carrying the row-0 chunk. Deferring to that point keeps LARS
+        // chunk-boundary-safe: `update_span` sees the full layer, so the
+        // trust ratio always comes from FULL-layer norms — and the layer
+        // kernel is shared with `Engine::update`, so the stream is
+        // bit-identical to one whole-buffer update. Each layer's fence
+        // version is published right after its update: that (not the end
+        // of the loop) is what admits the next generation's per-layer
+        // waiters.
+        let alt = tail.alt;
+        let g0 = RawBuf::new(if alt {
+            &mut self.worker_grads_alt[0]
+        } else {
+            &mut self.worker_grads[0]
+        });
+        let mut update_active_s = 0.0f64;
+        for i in 0..nb {
+            reduced.wait(gen, i);
+            let tu = std::time::Instant::now();
+            for piece in &self.plan.buckets[i].pieces {
+                if !piece.is_layer_tail() {
+                    continue; // higher-row chunk: deferred to the row-0 chunk
+                }
+                let l = &engine.manifest().layers[piece.layer];
+                let (lo, hi) = (l.offset, l.offset + l.size);
+                if first_err.is_none() {
+                    // SAFETY: the layer span is quiescent — it lies inside
+                    // buckets 0..=i of THIS generation, whose lanes
+                    // dropped their views before publishing `reduced`
+                    // (mutex ordering, waited in order above); lanes of
+                    // the other in-flight generation touch the other
+                    // buffer set; and every reader of params is either
+                    // reported (this gen) or fence-blocked (next gen).
+                    let g_span = unsafe { g0.slice(lo, hi) };
+                    let res = engine.update_span(
+                        tail.rule,
+                        &mut self.params[lo..hi],
+                        &mut self.momentum[lo..hi],
+                        g_span,
+                        lo,
+                        &[piece.layer],
+                        tail.lr,
+                    );
+                    if let Err(e) = res {
+                        first_err = Some(e);
+                    }
+                }
+                fence.publish_layer(piece.layer, gen + 1);
+            }
+            update_active_s += tu.elapsed().as_secs_f64();
+        }
+
+        // ---- BN statistics policy (this generation's workers reported
+        // before it was parked, so their states buffers are final) -------
+        self.apply_bn_policy(alt);
+        fence.publish_bn(gen + 1);
+        if first_err.is_some() {
+            // A failed update must still never strand fence waiters.
+            fence.publish_all(gen + 1);
+        }
+
+        // ---- drain the lanes (always fully, even on error: the next
+        // generation must find quiescent threads) ------------------------
+        let per_bucket = self.drain_lane_msgs(gen, nb);
+
+        // ---- accounting -------------------------------------------------
+        // Backward ends when the LAST bucket became ready; comm activity
+        // past that point is the step's structural tail. Under depth 2 the
+        // tail only costs wall-clock from `entry_abs_s` on — everything
+        // that completed between the end of backward and this call ran
+        // UNDER the next step's ramp-up, which is the cross-step win
+        // `cross_hidden_s` books.
+        let ready_abs = ready.ready_times(gen);
+        let backward_end_abs = ready_abs.last().copied().unwrap_or(tail.dispatch_abs_s);
+        let mut comm_active_s = 0.0f64;
+        let mut last_comm_end_abs = 0.0f64;
+        let mut comm_spans = Vec::with_capacity(nb);
+        for msg in &per_bucket {
+            comm_active_s += msg.end_s - msg.start_s;
+            last_comm_end_abs = last_comm_end_abs.max(msg.end_s);
+            comm_spans.push((msg.start_s - tail.dispatch_abs_s, msg.end_s - tail.dispatch_abs_s));
+            self.wire_totals.merge(&msg.stats);
+        }
+        let (exposed_ref_abs, next_step_window_s) = if tail.depth == 1 {
+            (backward_end_abs, 0.0)
+        } else {
+            (
+                entry_abs_s.max(backward_end_abs),
+                (entry_abs_s - backward_end_abs).max(0.0),
+            )
+        };
+        let exposed_s = (last_comm_end_abs - exposed_ref_abs).max(0.0);
+        let cross_hidden_s =
+            (last_comm_end_abs.min(exposed_ref_abs) - backward_end_abs).max(0.0);
+        let backward_s = backward_end_abs - tail.dispatch_abs_s;
+        self.breakdown.grad_s.push(backward_s);
+        self.breakdown.comm_s.push(comm_active_s);
+        self.breakdown.comm_exposed_s.push(exposed_s);
+        self.breakdown.cross_hidden_s.push(cross_hidden_s);
+        self.breakdown.update_s.push(update_active_s);
+        self.last_pipeline = Some(MeasuredPipeline {
+            backward_s,
+            ready_s: ready_abs.iter().map(|&t| t - tail.dispatch_abs_s).collect(),
+            comm_spans,
+            next_step_window_s,
+        });
+
+        ready.close(gen);
+        reduced.close(gen);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Collect exactly this generation's `nb` lane reports, in bucket
+    /// order. Reports from the OTHER in-flight generation can interleave
+    /// on the shared channel (a fast lane may finish its share of gen s
+    /// and start gen s+1 while another lane is still on gen s) — those are
+    /// stashed for the drain that owns them.
+    fn drain_lane_msgs(&mut self, gen: u64, nb: usize) -> Vec<LaneMsg> {
+        let mut got: Vec<Option<LaneMsg>> = (0..nb).map(|_| None).collect();
+        let mut count = 0usize;
+        for msg in std::mem::take(&mut self.pending_lane_msgs) {
+            if msg.gen == gen {
+                debug_assert!(got[msg.bucket].is_none(), "duplicate lane report");
+                got[msg.bucket] = Some(msg);
+                count += 1;
+            } else {
+                self.pending_lane_msgs.push(msg);
+            }
+        }
+        while count < nb {
+            let msg = self.pool.as_ref().expect("pool").recv_lane();
+            if msg.gen == gen {
+                debug_assert!(got[msg.bucket].is_none(), "duplicate lane report");
+                got[msg.bucket] = Some(msg);
+                count += 1;
+            } else {
+                self.pending_lane_msgs.push(msg);
+            }
+        }
+        got.into_iter()
+            .enumerate()
+            .map(|(i, slot)| slot.unwrap_or_else(|| panic!("bucket {i} missing its lane report")))
+            .collect()
     }
 }

@@ -2,55 +2,97 @@
 //!
 //! One pool lives for the whole training run (no per-step thread spawns):
 //!
-//! * `workers` GRAD threads, each owning its batch scratch and an
-//!   `Arc<Engine>`/`Arc<Synthetic>`; fed one [`WorkerJob`] per step over a
-//!   private channel. A worker runs its micro-batches, accumulates into
-//!   its packed gradient buffer and — on the final micro-batch — streams
-//!   the engine's backward-order span emissions into the readiness
-//!   [`Ledger`]. Under a chunked `BucketPlan` the emissions (and hence the
-//!   ledger's readiness points) are per row-CHUNK, not per layer: the
-//!   frontier crosses a giant fc layer's bucket boundaries while its
-//!   backward is still running, which is what lets the tail layer stop
-//!   serializing the pipeline.
+//! * `workers` GRAD threads, each owning its batch scratch, a persistent
+//!   gradient scratch buffer (fed to the engine's allocation-free
+//!   `grad_step_streamed_into`) and an `Arc<Engine>`/`Arc<Synthetic>`;
+//!   fed one [`WorkerJob`] per step over a private channel. A worker runs
+//!   its micro-batches, accumulates into the GENERATION-selected packed
+//!   gradient buffer the job names (under cross-step double buffering the
+//!   leader alternates each worker between two buffers, step s using slot
+//!   s % 2) and — on the final micro-batch — streams the engine's
+//!   backward-order span emissions into the readiness [`GenLedger`].
+//!   Under a chunked `BucketPlan` the emissions (and hence the ledger's
+//!   readiness points) are per row-CHUNK, not per layer.
 //! * `lanes` COMM threads, each owning a persistent `CommEngine` (so chunk
 //!   plans stay cached across steps). Lane `l` handles buckets
-//!   `l, l+lanes, …`: it blocks until ALL workers have published a bucket,
-//!   split-borrows that span out of every worker's gradient buffer,
-//!   reduces it in place, then publishes it to the `reduced` ledger so the
-//!   leader can stream the master update for those layers.
+//!   `l, l+lanes, …` of each generation in dispatch order: it blocks until
+//!   ALL workers have published a bucket, split-borrows that span out of
+//!   every worker's generation buffer, reduces it in place, then publishes
+//!   it to the `reduced` ledger so the leader can stream the master update
+//!   for those layers — possibly one whole step LATER than the backward
+//!   that produced it, which is the cross-step overlap.
+//!
+//! # Generations
+//!
+//! The ledgers are generation-TAGGED ([`GenLedger`]): two slots, slot
+//! g % 2 serving step generation g. The leader `begin`s a generation at
+//! dispatch, pool threads `publish`/`wait` against the (gen, bucket) pair,
+//! and the leader `close`s the generation once it has drained every lane
+//! report. Wraparound is deadlock-free by protocol, not by luck: the
+//! leader never begins generation g+2 before it has fully closed
+//! generation g (the double-buffered executor finishes step s's tail
+//! inside step s+1, strictly before dispatching step s+2), so when a slot
+//! is re-armed no thread can still be waiting on its previous occupant —
+//! `begin` asserts the slot was closed.
+//!
+//! # Parameter-version fence
+//!
+//! Cross-step overlap lets step s+1's workers start (zero their buffer,
+//! draw their first batch) while the leader is still streaming step s's
+//! updates. The [`ParamFence`] is what keeps the weight trajectory exactly
+//! sequential: it tracks, per layer (plus one slot for the BN state), how
+//! many step-updates have been applied. A worker for generation g blocks
+//! until every layer it reads carries version >= g before deriving any
+//! view of `params`/`bn_state` — conservative full-update strictness
+//! (`FenceMode::Full`, the default) waits for all layers at once;
+//! `FenceMode::PerLayer` expresses the same wait as one wait per layer in
+//! forward-read order. Because BOTH modes complete before the worker's
+//! first parameter read, they release at the same instant on every
+//! backend today — PerLayer is the stepping stone (and grid-tested
+//! equivalence proof) for interleaving those waits INTO the engine's
+//! forward pass, which is what would let early-forward layers start
+//! before late updates land and needs per-layer engine hooks (see
+//! ROADMAP: PJRT streaming). Either way the values read are identical,
+//! so the fence mode can never change numerics.
 //!
 //! # Safety model
 //!
 //! Buffers are shared between the leader and the pool as raw pointers
-//! ([`RawBuf`]). Every access is ordered by the ledgers' mutexes, and the
-//! protocol guarantees the usual exclusive-XOR-shared discipline:
+//! ([`RawBuf`]). Every access is ordered by the ledgers'/fence's mutexes,
+//! and the protocol guarantees the usual exclusive-XOR-shared discipline:
 //!
-//! * a worker has EXCLUSIVE access to its own `grads`/`states` buffers
-//!   from job receipt until it publishes a span — and never touches a
-//!   published span again (the engine's streaming contract: emitted spans
-//!   are final, and emission order is monotone back-to-front). Its
-//!   whole-buffer borrows (`fill`, non-final accumulation) all happen
-//!   strictly BEFORE its first publication; after that it only takes
-//!   short-lived borrows of still-unpublished spans;
+//! * a worker has EXCLUSIVE access to its generation's `grads`/`states`
+//!   buffers from job receipt until it publishes a span — and never
+//!   touches a published span again (the engine's streaming contract).
+//!   Its whole-buffer borrows (`fill`, non-final accumulation) all happen
+//!   strictly BEFORE its first publication. The buffer it receives for
+//!   generation g was last used by generation g−2, which the leader fully
+//!   retired (updates applied, lanes drained) before dispatching g;
 //! * a lane takes exclusive access to bucket `i`'s span of every worker's
-//!   grads only after all `workers` publishes of `i` (ledger
-//!   happens-before), and drops it before publishing to `reduced`;
-//! * `params`/`bn_state` are READ-ONLY to the whole pool. The leader
-//!   streams parameter writes only after every worker has sent its
-//!   end-of-step report (channel happens-before), at which point no
-//!   reference into params exists anywhere; it reads worker 0's reduced
-//!   grads span only after `reduced[i]` (mutex happens-before), through a
-//!   raw-derived slice covering exactly the quiescent span while other
-//!   lanes write only other buckets' disjoint spans.
+//!   generation-g grads only after all `workers` publishes of `(g, i)`
+//!   (ledger happens-before), and drops it before publishing to `reduced`;
+//! * `params`/`bn_state` are READ-ONLY to the whole pool, and a worker
+//!   derives its views only after its fence wait. The leader writes a
+//!   layer's params span only while every worker that could read it is
+//!   either finished (its end-of-step report was received — channel
+//!   happens-before) or still blocked on the fence (mutex happens-before
+//!   via the fence publish that follows the write); it reads worker 0's
+//!   reduced grads span only after `reduced[(g, i)]`, through a
+//!   raw-derived slice covering exactly the quiescent span while lanes
+//!   write only other buckets' disjoint spans of the same generation or
+//!   spans of the OTHER generation's buffers.
 //!
 //! Reduction order inside a bucket is fixed by the `CommEngine` plan and
 //! the update arithmetic is the engine's layer kernel, so the pipelined
-//! schedule changes WHEN things happen, never what is computed — the
-//! determinism grid test in `rust/tests/pipeline.rs` holds the executor to
-//! bit-identity with the sequential reference at every
-//! (workers, lanes, accum, precision, algorithm) point.
+//! schedule — single- or double-buffered — changes WHEN things happen,
+//! never what is computed: the determinism grid test in
+//! `rust/tests/pipeline.rs` holds every (depth, workers, lanes, accum,
+//! precision, algorithm, chunk) point to bit-identity with the sequential
+//! reference.
 
+use crate::bucket::FrontierCursor;
 use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
+use crate::config::FenceMode;
 use crate::data::{make_batch, Batch, Split, Synthetic};
 use crate::runtime::{Engine, GradVariant};
 use anyhow::Result;
@@ -61,14 +103,14 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Raw-pointer view of one `f32` buffer owned by the `Trainer`, shareable
-/// with pool threads for the duration of one step.
+/// with pool threads for the duration of one step generation.
 ///
-/// SAFETY: the leader constructs these from live `&mut [f32]` at step
-/// start, the pointee never moves during a step (no buffer is resized),
-/// and the step protocol (module docs) keeps all concurrent span accesses
-/// disjoint and mutex-ordered. The leader does not return from the step
-/// until every pool thread has sent its end-of-step message, after which
-/// no pointer derived from this step's bufs is dereferenced again.
+/// SAFETY: the leader constructs these from live `&mut [f32]` at dispatch,
+/// the pointee never moves while any pool thread can hold a derived view
+/// (no buffer is resized mid-run, and `Trainer`'s Drop flushes the
+/// in-flight generation before its buffers are freed), and the
+/// generation/fence protocol (module docs) keeps all concurrent span
+/// accesses disjoint and mutex-ordered.
 #[derive(Clone, Copy)]
 pub(crate) struct RawBuf {
     ptr: *mut f32,
@@ -97,138 +139,251 @@ impl RawBuf {
     }
 }
 
-/// Per-step, per-bucket readiness ledger: a counter per bucket plus the
-/// instant it reached `target`. Mutex+condvar (not atomics) on purpose —
-/// publishes are per BUCKET, not per element, so contention is trivial,
-/// and the mutex gives the cross-thread happens-before edges the raw-
-/// pointer safety argument leans on.
-pub(crate) struct Ledger {
+/// Generation-tagged per-bucket readiness ledger: TWO slots of (counter,
+/// readiness instant) per bucket, slot g % 2 serving step generation g, so
+/// two consecutive steps can be in flight at once. Mutex+condvar (not
+/// atomics) on purpose — publishes are per BUCKET, so contention is
+/// trivial, and the mutexes give the cross-thread happens-before edges the
+/// raw-pointer safety argument leans on. Readiness instants are stamped on
+/// the shared RUN clock (`t0` from pool spawn), so cross-step accounting
+/// can compare times from different generations directly.
+pub(crate) struct GenLedger {
     target: usize,
     t0: Instant,
-    state: Mutex<LedgerState>,
+    slots: [LedgerSlot; 2],
+}
+
+struct LedgerSlot {
+    state: Mutex<SlotState>,
     cv: Condvar,
 }
 
-struct LedgerState {
+struct SlotState {
+    /// Generation this slot currently serves (meaningful while `open` and
+    /// until the next `begin`).
+    gen: u64,
+    /// Armed by `begin`, cleared by `close`. `begin` asserts it is clear —
+    /// the deadlock-free-wraparound check: a slot may only be re-armed
+    /// once the leader drained its previous generation, at which point no
+    /// thread can still be waiting on it.
+    open: bool,
     counts: Vec<usize>,
     ready_s: Vec<f64>,
 }
 
-impl Ledger {
-    pub(crate) fn new(buckets: usize, target: usize, t0: Instant) -> Ledger {
-        Ledger {
-            target: target.max(1),
-            t0,
-            state: Mutex::new(LedgerState {
+impl GenLedger {
+    pub(crate) fn new(buckets: usize, target: usize, t0: Instant) -> GenLedger {
+        let slot = || LedgerSlot {
+            state: Mutex::new(SlotState {
+                gen: u64::MAX,
+                open: false,
                 counts: vec![0; buckets],
                 ready_s: vec![0.0; buckets],
             }),
             cv: Condvar::new(),
-        }
+        };
+        GenLedger { target: target.max(1), t0, slots: [slot(), slot()] }
     }
 
-    /// Record one publication of bucket `i`; stamps the readiness time and
-    /// wakes waiters when the count reaches the target. Lock poisoning is
-    /// deliberately survived (`into_inner`): a panicking peer must not
-    /// convert into a deadlock here — the leader surfaces the failure from
-    /// the end-of-step messages instead.
-    pub(crate) fn publish(&self, i: usize) {
-        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+    fn slot(&self, gen: u64) -> &LedgerSlot {
+        &self.slots[(gen % 2) as usize]
+    }
+
+    /// Arm slot `gen % 2` for generation `gen`. Panics if the slot's
+    /// previous generation was never closed — that would mean the leader
+    /// is wrapping around onto a generation that may still have waiters.
+    pub(crate) fn begin(&self, gen: u64) {
+        let slot = self.slot(gen);
+        let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(
+            !s.open,
+            "ledger slot reopened for gen {gen} while gen {} is still in flight",
+            s.gen
+        );
+        s.gen = gen;
+        s.open = true;
+        s.counts.fill(0);
+        s.ready_s.fill(0.0);
+    }
+
+    /// Retire generation `gen` after the leader drained everything that
+    /// publishes or waits on it.
+    pub(crate) fn close(&self, gen: u64) {
+        let slot = self.slot(gen);
+        let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(s.open && s.gen == gen, "closing a generation that is not open");
+        s.open = false;
+    }
+
+    /// Record one publication of bucket `i` in generation `gen`; stamps
+    /// the readiness time and wakes waiters when the count reaches the
+    /// target. Lock poisoning is deliberately survived (`into_inner`): a
+    /// panicking peer must not convert into a deadlock here — the leader
+    /// surfaces the failure from the end-of-step messages instead.
+    pub(crate) fn publish(&self, gen: u64, i: usize) {
+        let slot = self.slot(gen);
+        let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(s.open && s.gen == gen, "publish to a generation that is not open");
         s.counts[i] += 1;
         debug_assert!(s.counts[i] <= self.target, "bucket {i} over-published");
         if s.counts[i] >= self.target {
             s.ready_s[i] = self.t0.elapsed().as_secs_f64();
-            self.cv.notify_all();
+            slot.cv.notify_all();
         }
     }
 
-    /// Block until bucket `i` has all its publications; returns the
-    /// readiness instant (seconds from the step's t0).
-    pub(crate) fn wait(&self, i: usize) -> f64 {
-        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        while s.counts[i] < self.target {
-            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+    /// Block until bucket `i` of generation `gen` has all its
+    /// publications; returns the readiness instant (run-clock seconds).
+    /// By protocol a waiter only names generations whose jobs were already
+    /// dispatched (so the slot is, or will momentarily be, armed for
+    /// exactly `gen`).
+    pub(crate) fn wait(&self, gen: u64, i: usize) -> f64 {
+        let slot = self.slot(gen);
+        let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        while !(s.gen == gen && s.counts[i] >= self.target) {
+            s = slot.cv.wait(s).unwrap_or_else(|e| e.into_inner());
         }
         s.ready_s[i]
     }
 
-    /// Readiness instants of all buckets (valid once each reached target).
-    pub(crate) fn ready_times(&self) -> Vec<f64> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner()).ready_s.clone()
+    /// Readiness instants of all buckets of `gen` (valid once each reached
+    /// target; the leader calls this after draining the generation).
+    pub(crate) fn ready_times(&self, gen: u64) -> Vec<f64> {
+        let s = self.slot(gen).state.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(s.gen == gen, "ready_times for a displaced generation");
+        s.ready_s.clone()
     }
 }
 
-/// Tracks which buckets this worker has already published and publishes
-/// new ones as the emitted frontier descends. Buckets are stored in
-/// readiness order with strictly descending spans, so in-order publication
-/// is exactly "everything whose span lies at or above the frontier".
-pub(crate) struct BucketCursor {
-    spans: Arc<Vec<(usize, usize)>>,
-    ledger: Arc<Ledger>,
-    next: usize,
+/// Per-layer parameter-version fence (see module docs). `layers[li]` / `bn`
+/// count how many step-updates have been applied; a worker for generation
+/// g requires version >= g before reading.
+pub(crate) struct ParamFence {
+    state: Mutex<FenceState>,
+    cv: Condvar,
 }
 
-impl BucketCursor {
-    pub(crate) fn new(spans: Arc<Vec<(usize, usize)>>, ledger: Arc<Ledger>) -> BucketCursor {
-        BucketCursor { spans, ledger, next: 0 }
-    }
+struct FenceState {
+    layers: Vec<u64>,
+    bn: u64,
+}
 
-    /// The emitted frontier moved down to `frontier`: publish every not-
-    /// yet-published bucket fully contained in `[frontier, …)`.
-    pub(crate) fn advance(&mut self, frontier: usize) {
-        while self.next < self.spans.len() && self.spans[self.next].0 >= frontier {
-            self.ledger.publish(self.next);
-            self.next += 1;
+impl ParamFence {
+    pub(crate) fn new(num_layers: usize, base: u64) -> ParamFence {
+        ParamFence {
+            state: Mutex::new(FenceState { layers: vec![base; num_layers], bn: base }),
+            cv: Condvar::new(),
         }
     }
 
-    /// Publish everything left. Called unconditionally after a job (also
-    /// on the error/panic path) so a failed worker can never starve the
-    /// comm lanes into a deadlock — the leader still learns of the failure
-    /// from the end-of-step message and fails the step.
-    pub(crate) fn finish(&mut self) {
-        self.advance(0);
+    pub(crate) fn num_layers(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).layers.len()
+    }
+
+    /// Re-seed every version (checkpoint restore: versions jump to the
+    /// restored step, so the next dispatched generation's waits line up).
+    pub(crate) fn reset(&self, base: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.layers.fill(base);
+        s.bn = base;
+        self.cv.notify_all();
+    }
+
+    /// Layer `li`'s params now carry every update through `version` steps.
+    pub(crate) fn publish_layer(&self, li: usize, version: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.layers[li] = s.layers[li].max(version);
+        self.cv.notify_all();
+    }
+
+    /// The BN running-statistics buffer is at `version` (published after
+    /// the leader's BN policy for the step).
+    pub(crate) fn publish_bn(&self, version: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.bn = s.bn.max(version);
+        self.cv.notify_all();
+    }
+
+    /// Error path: move everything to `version` so already-dispatched
+    /// waiters can never deadlock on a step whose update was skipped.
+    pub(crate) fn publish_all(&self, version: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        for v in s.layers.iter_mut() {
+            *v = (*v).max(version);
+        }
+        s.bn = s.bn.max(version);
+        self.cv.notify_all();
+    }
+
+    /// Conservative full-update fence: every layer and the BN state at
+    /// `version` or later.
+    pub(crate) fn wait_full(&self, version: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while s.bn < version || s.layers.iter().any(|&v| v < version) {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    pub(crate) fn wait_layer(&self, li: usize, version: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while s.layers[li] < version {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    pub(crate) fn wait_bn(&self, version: u64) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while s.bn < version {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
     }
 }
 
-/// One step's worth of work for one grad worker.
+/// One step generation's worth of work for one grad worker.
 pub(crate) struct WorkerJob {
+    /// Step generation (== step index). Selects the ledger slot, the
+    /// fence version this worker must see, and tags the report.
+    pub(crate) gen: u64,
     pub(crate) worker: usize,
     pub(crate) params: RawBuf,
     pub(crate) bn_state: RawBuf,
+    /// The generation-selected packed gradient accumulation buffer.
     pub(crate) grads: RawBuf,
+    /// The generation-selected BN running-stats output buffer.
     pub(crate) states: RawBuf,
     /// Pre-drawn sample indices, one list per micro-batch.
     pub(crate) idxs: Vec<Vec<usize>>,
     pub(crate) accum_inv: f32,
     pub(crate) variant: GradVariant,
-    /// Engine emission granularity (`BucketPlan::chunk_elems`): fc weight
-    /// gradients stream in row blocks of ~this many elements so the
-    /// frontier crosses chunked bucket boundaries mid-backward.
+    /// Engine emission granularity (`BucketPlan::chunk_elems`).
     pub(crate) chunk_elems: usize,
     pub(crate) spans: Arc<Vec<(usize, usize)>>,
-    pub(crate) ready: Arc<Ledger>,
+    pub(crate) ready: Arc<GenLedger>,
+    pub(crate) fence: Arc<ParamFence>,
+    pub(crate) fence_mode: FenceMode,
 }
 
-/// One step's worth of work for one comm lane.
+/// One step generation's worth of work for one comm lane.
 pub(crate) struct LaneJob {
+    pub(crate) gen: u64,
     pub(crate) grads: Vec<RawBuf>,
     pub(crate) spans: Arc<Vec<(usize, usize)>>,
-    pub(crate) ready: Arc<Ledger>,
-    pub(crate) reduced: Arc<Ledger>,
-    pub(crate) t0: Instant,
+    pub(crate) ready: Arc<GenLedger>,
+    pub(crate) reduced: Arc<GenLedger>,
 }
 
 /// End-of-step report from one grad worker.
 pub(crate) struct WorkerMsg {
+    pub(crate) gen: u64,
     pub(crate) worker: usize,
     pub(crate) loss: f32,
     pub(crate) correct: f32,
     pub(crate) error: Option<String>,
 }
 
-/// Per-bucket report from a comm lane.
+/// Per-bucket report from a comm lane. Times are RUN-clock seconds.
 pub(crate) struct LaneMsg {
+    pub(crate) gen: u64,
     pub(crate) bucket: usize,
     pub(crate) stats: WireStats,
     pub(crate) start_s: f64,
@@ -245,6 +400,7 @@ pub(crate) struct WorkerPool {
 }
 
 impl WorkerPool {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn spawn(
         workers: usize,
         lanes: usize,
@@ -253,6 +409,7 @@ impl WorkerPool {
         precision: Precision,
         engine: Arc<Engine>,
         data: Arc<Synthetic>,
+        run_t0: Instant,
     ) -> WorkerPool {
         let (worker_tx, worker_rx) = channel();
         let (lane_tx, lane_rx) = channel();
@@ -280,7 +437,7 @@ impl WorkerPool {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("yasgd-lane-{l}"))
-                    .spawn(move || lane_thread(l, lanes, comm, rx, results))
+                    .spawn(move || lane_thread(l, lanes, run_t0, comm, rx, results))
                     .expect("spawning comm lane thread"),
             );
         }
@@ -311,7 +468,9 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         // Closing the job channels is the shutdown signal; join so no
-        // detached thread outlives the Trainer.
+        // detached thread outlives the Trainer. (The Trainer's own Drop
+        // flushed the in-flight generation first, so every thread is idle
+        // on its job channel by the time the channels close.)
         self.job_txs.clear();
         self.lane_txs.clear();
         for h in self.handles.drain(..) {
@@ -327,26 +486,45 @@ fn worker_thread(
     results: Sender<WorkerMsg>,
 ) {
     let mut batch = Batch { images: Vec::new(), labels: Vec::new() };
+    // Persistent engine scratch: the gradient is computed here and
+    // streamed span-by-span into the job's generation buffer — no
+    // gradient-sized allocation after the first step.
+    let mut scratch: Vec<f32> = Vec::new();
+    // ONE frontier cursor per worker for the whole run, re-armed per step
+    // generation — the publish paths below credit advances to the
+    // cursor's CURRENT tag, so a stale re-arm would be caught by the
+    // ledger's generation asserts rather than corrupting a neighbor step.
+    let mut cursor: Option<FrontierCursor> = None;
     while let Ok(job) = jobs.recv() {
-        let mut cursor = BucketCursor::new(job.spans.clone(), job.ready.clone());
+        if cursor.is_none() {
+            cursor = Some(FrontierCursor::new(job.spans.clone()));
+        }
+        let cur = cursor.as_mut().expect("cursor just initialized");
+        cur.begin(job.gen);
         let outcome = catch_unwind(AssertUnwindSafe(|| {
-            run_grad_job(&engine, &data, &mut batch, &job, &mut cursor)
+            run_grad_job(&engine, &data, &mut batch, &mut scratch, &job, &mut *cur)
         }));
         // Whatever happened, every bucket gets published so the lanes (and
         // through them the leader) always complete the step and can report
         // the failure instead of deadlocking on it.
-        cursor.finish();
+        let finish_gen = cur.gen();
+        debug_assert_eq!(finish_gen, job.gen, "cursor re-armed for the wrong generation");
+        for i in cur.finish() {
+            job.ready.publish(finish_gen, i);
+        }
         let msg = match outcome {
             Ok(Ok((loss, correct))) => {
-                WorkerMsg { worker: job.worker, loss, correct, error: None }
+                WorkerMsg { gen: job.gen, worker: job.worker, loss, correct, error: None }
             }
             Ok(Err(e)) => WorkerMsg {
+                gen: job.gen,
                 worker: job.worker,
                 loss: 0.0,
                 correct: 0.0,
                 error: Some(e.to_string()),
             },
             Err(_) => WorkerMsg {
+                gen: job.gen,
                 worker: job.worker,
                 loss: 0.0,
                 correct: 0.0,
@@ -357,90 +535,147 @@ fn worker_thread(
     }
 }
 
-/// One worker's grad phase: `accum` micro-batches averaged into its packed
-/// gradient buffer; the FINAL micro-batch streams span-by-span through the
-/// engine's backward-order emission, publishing buckets as their spans
-/// become final. Per-element arithmetic is identical to the sequential
-/// path (`g += d · accum_inv` once per micro-batch, elements independent),
-/// so splitting the accumulation across spans cannot change a single bit.
+/// One worker's grad phase for one generation: `accum` micro-batches
+/// averaged into its generation buffer; the FINAL micro-batch streams
+/// span-by-span through the engine's backward-order emission, publishing
+/// buckets as their spans become final. Per-element arithmetic is
+/// identical to the sequential path (`g += d · accum_inv` once per
+/// micro-batch, elements independent; a single micro-batch writes
+/// `d · accum_inv` directly into the otherwise-untouched buffer), so the
+/// schedule cannot change the numbers.
+///
+/// Cross-step ordering: the first batch draw and the buffer zero run
+/// BEFORE the parameter fence — they touch no shared state the previous
+/// step's tail still owns — which is exactly the work double buffering
+/// hides under the previous step's comm/update tail. Views of
+/// `params`/`bn_state` are derived only after the fence admits this
+/// generation.
 fn run_grad_job(
     engine: &Engine,
     data: &Synthetic,
     batch: &mut Batch,
+    scratch: &mut Vec<f32>,
     job: &WorkerJob,
-    cursor: &mut BucketCursor,
+    cursor: &mut FrontierCursor,
 ) -> Result<(f32, f32)> {
-    // SAFETY: params/bn_state are read-only to every pool thread for the
-    // whole grad phase (the leader only rewrites params spans after all
-    // workers published the covering bucket — at which point the engine's
-    // streaming contract says this worker no longer reads them).
-    let params = unsafe { job.params.slice(0, job.params.len) };
-    let bn_state = unsafe { job.bn_state.slice(0, job.bn_state.len) };
-    {
-        // SAFETY: exclusive — nothing is published yet, so no lane touches
-        // any span of this worker's buffer.
+    let n_micro = job.idxs.len();
+    anyhow::ensure!(n_micro >= 1, "worker job with no micro-batches");
+    // ---- pre-fence window (overlaps the previous step's tail) ----------
+    make_batch(data, Split::Train, &job.idxs[0], batch);
+    let multi = n_micro > 1;
+    if multi {
+        // SAFETY: exclusive — nothing of this generation is published yet,
+        // and the buffer's previous generation was fully retired before
+        // this job was dispatched.
         let grads = unsafe { job.grads.slice_mut(0, job.grads.len) };
         grads.fill(0.0);
     }
+    // ---- parameter-version fence ---------------------------------------
+    match job.fence_mode {
+        FenceMode::Full => job.fence.wait_full(job.gen),
+        FenceMode::PerLayer => {
+            // Forward-read order = manifest order. All waits still run
+            // BEFORE the first parameter read, so this releases at the
+            // same instant as Full (see module docs) — it exists to keep
+            // the per-layer wait path exercised until an engine exposes
+            // the forward hooks that would let these waits interleave
+            // with compute.
+            for li in 0..job.fence.num_layers() {
+                job.fence.wait_layer(li, job.gen);
+            }
+            job.fence.wait_bn(job.gen);
+        }
+    }
+    // SAFETY: params/bn_state are read-only to every pool thread; the
+    // leader's writes for earlier generations happened-before the fence
+    // publishes we just waited on, and its next writes wait for this
+    // worker's end-of-step report.
+    let params = unsafe { job.params.slice(0, job.params.len) };
+    let bn_state = unsafe { job.bn_state.slice(0, job.bn_state.len) };
+
     let mut loss_sum = 0.0f32;
     let mut correct_sum = 0.0f32;
-    let n_micro = job.idxs.len();
     for (k, idxs) in job.idxs.iter().enumerate() {
-        make_batch(data, Split::Train, idxs, batch);
+        if k > 0 {
+            make_batch(data, Split::Train, idxs, batch);
+        }
         if k + 1 < n_micro {
-            // Non-final micro-batch: whole-buffer accumulate (still fully
-            // pre-publication, so the full-span borrow is exclusive).
-            let out =
-                engine.grad_step(job.variant, params, bn_state, &batch.images, &batch.labels)?;
+            // Non-final micro-batch: compute into the scratch, whole-buffer
+            // accumulate (still fully pre-publication, so the full-span
+            // borrow is exclusive).
+            let (loss, correct) = {
+                // SAFETY: states are this generation's own buffer; the
+                // leader reads them only after the end-of-step message.
+                let states = unsafe { job.states.slice_mut(0, job.states.len) };
+                engine.grad_step_streamed_into(
+                    job.variant,
+                    params,
+                    bn_state,
+                    &batch.images,
+                    &batch.labels,
+                    0,
+                    scratch,
+                    states,
+                    &mut |_, _, _| {},
+                )?
+            };
             {
                 // SAFETY: exclusive, see above.
                 let grads = unsafe { job.grads.slice_mut(0, job.grads.len) };
-                for (g, d) in grads.iter_mut().zip(out.grads.iter()) {
+                for (g, d) in grads.iter_mut().zip(scratch.iter()) {
                     *g += d * job.accum_inv;
                 }
             }
-            {
-                // SAFETY: states are this worker's own; the leader reads
-                // them only after the end-of-step message.
-                let states = unsafe { job.states.slice_mut(0, job.states.len) };
-                states.copy_from_slice(&out.new_state);
-            }
-            loss_sum += out.loss;
-            correct_sum += out.correct;
+            loss_sum += loss;
+            correct_sum += correct;
         } else {
-            // Final micro-batch: stream. Each emitted span is accumulated
-            // through a SHORT-LIVED exclusive borrow that is dropped
-            // before the bucket is published (after which a comm lane may
-            // legitimately alias it).
+            // Final micro-batch: stream. Each emitted span is moved into
+            // the generation buffer through a SHORT-LIVED exclusive borrow
+            // that is dropped before the bucket is published (after which
+            // a comm lane may legitimately alias it).
             let grads_buf = job.grads;
             let accum_inv = job.accum_inv;
-            let out = engine.grad_step_streamed(
-                job.variant,
-                params,
-                bn_state,
-                &batch.images,
-                &batch.labels,
-                job.chunk_elems,
-                &mut |lo, hi, src| {
-                    {
-                        // SAFETY: span [lo, hi) is unpublished (the cursor
-                        // only publishes at/above the frontier, and the
-                        // engine emits each span exactly once, descending).
-                        let dst = unsafe { grads_buf.slice_mut(lo, hi) };
-                        for (g, d) in dst.iter_mut().zip(src) {
-                            *g += d * accum_inv;
-                        }
-                    }
-                    cursor.advance(lo);
-                },
-            )?;
-            {
+            let ready = &job.ready;
+            let (loss, correct) = {
                 // SAFETY: see the states note above.
                 let states = unsafe { job.states.slice_mut(0, job.states.len) };
-                states.copy_from_slice(&out.new_state);
-            }
-            loss_sum += out.loss;
-            correct_sum += out.correct;
+                engine.grad_step_streamed_into(
+                    job.variant,
+                    params,
+                    bn_state,
+                    &batch.images,
+                    &batch.labels,
+                    job.chunk_elems,
+                    scratch,
+                    states,
+                    &mut |lo, hi, src| {
+                        {
+                            // SAFETY: span [lo, hi) is unpublished (the
+                            // cursor only publishes at/above the frontier,
+                            // and the engine emits each span exactly once,
+                            // descending).
+                            let dst = unsafe { grads_buf.slice_mut(lo, hi) };
+                            if multi {
+                                for (g, d) in dst.iter_mut().zip(src) {
+                                    *g += d * accum_inv;
+                                }
+                            } else {
+                                for (g, d) in dst.iter_mut().zip(src) {
+                                    *g = d * accum_inv;
+                                }
+                            }
+                        }
+                        // Credit the advance to the cursor's OWN tag: a
+                        // mis-armed cursor trips the ledger's generation
+                        // assert instead of corrupting a neighbor step.
+                        for i in cursor.advance(lo) {
+                            ready.publish(cursor.gen(), i);
+                        }
+                    },
+                )?
+            };
+            loss_sum += loss;
+            correct_sum += correct;
         }
     }
     Ok((loss_sum, correct_sum))
@@ -449,28 +684,29 @@ fn run_grad_job(
 fn lane_thread(
     lane: usize,
     lanes: usize,
+    run_t0: Instant,
     mut comm: CommEngine,
     jobs: Receiver<LaneJob>,
     results: Sender<LaneMsg>,
 ) {
     while let Ok(job) = jobs.recv() {
         for i in (lane..job.spans.len()).step_by(lanes.max(1)) {
-            job.ready.wait(i);
+            job.ready.wait(job.gen, i);
             let (lo, hi) = job.spans[i];
-            let start_s = job.t0.elapsed().as_secs_f64();
+            let start_s = run_t0.elapsed().as_secs_f64();
             {
-                // SAFETY: all workers have published bucket i (ledger
-                // happens-before), no other lane owns index i (static
-                // i % lanes assignment), and the leader won't touch the
-                // span until `reduced.publish(i)` below — this lane holds
-                // the only live references to these spans.
+                // SAFETY: all workers have published (gen, i) — ledger
+                // happens-before — no other lane owns index i of this
+                // generation (static i % lanes assignment), and the leader
+                // won't touch the span until `reduced.publish` below —
+                // this lane holds the only live references to these spans.
                 let mut views: Vec<&mut [f32]> =
                     job.grads.iter().map(|g| unsafe { g.slice_mut(lo, hi) }).collect();
                 let stats = comm.allreduce_mean(&mut views);
                 drop(views);
-                let end_s = job.t0.elapsed().as_secs_f64();
-                job.reduced.publish(i);
-                let _ = results.send(LaneMsg { bucket: i, stats, start_s, end_s });
+                let end_s = run_t0.elapsed().as_secs_f64();
+                job.reduced.publish(job.gen, i);
+                let _ = results.send(LaneMsg { gen: job.gen, bucket: i, stats, start_s, end_s });
             }
         }
     }

@@ -9,8 +9,11 @@
 //!
 //! Common options: --artifacts DIR, --workers N, --steps N, --lr X,
 //! --allreduce ring|hd|hier|naive, --wire f16|f32, --bucket-bytes N,
-//! --chunk-bytes N (0 = whole-layer buckets), --comm-threads N,
-//! --no-lars, --no-smoothing, --no-overlap, --mlperf-log, --threaded.
+//! --chunk-bytes N|auto (0 = whole-layer buckets; auto = α–β-derived,
+//! see --link-alpha-us/--link-beta-gbps), --comm-threads N,
+//! --pipeline-depth 1|2 (2 = cross-step double buffering, the default),
+//! --fence full|layer, --no-lars, --no-smoothing, --no-overlap,
+//! --mlperf-log, --threaded.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -23,7 +26,8 @@ use yasgd::util::cli::Args;
 const KNOWN_OPTS: &[&str] = &[
     "artifacts", "config", "workers", "grad-accum", "steps", "eval-every", "eval-batches",
     "seed", "lr", "warmup-frac", "decay", "no-lars", "no-smoothing", "allreduce",
-    "ranks-per-node", "wire", "bucket-bytes", "chunk-bytes", "comm-threads", "no-overlap",
+    "ranks-per-node", "wire", "bucket-bytes", "chunk-bytes", "link-alpha-us", "link-beta-gbps",
+    "pipeline-depth", "fence", "comm-threads", "no-overlap",
     "train-size",
     "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",
     "save-checkpoint", "resume",
@@ -102,9 +106,24 @@ fn train(args: &Args) -> Result<()> {
     }
 
     println!(
-        "train done: steps={} global_batch={} elapsed={:.2}s ({:.1} img/s)",
-        report.steps, report.global_batch, report.elapsed_s, report.images_per_sec
+        "train done: steps={} global_batch={} elapsed={:.2}s ({:.1} img/s; steady-state {:.1} \
+         img/s after a {:.1} ms cold start; depth={})",
+        report.steps,
+        report.global_batch,
+        report.elapsed_s,
+        report.images_per_sec,
+        report.steady_state_images_per_sec,
+        report.cold_start_s * 1e3,
+        report.pipeline_depth
     );
+    if !report.chunk_plan.is_empty() {
+        let plan: Vec<String> = report
+            .chunk_plan
+            .iter()
+            .map(|(l, b)| format!("{l}:{b}B"))
+            .collect();
+        println!("chunk plan ({} B grain): {}", report.chunk_bytes, plan.join(" "));
+    }
     let val_acc = report
         .final_val_acc
         .map(|v| format!("{v:.4}"))

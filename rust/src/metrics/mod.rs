@@ -94,7 +94,15 @@ pub struct StepBreakdown {
     pub grad_s: Summary,
     pub comm_s: Summary,
     /// Comm wall-clock NOT hidden behind backward (see struct docs).
+    /// Under the depth-2 (double-buffered) executor this counts only the
+    /// tail that survived BOTH overlap stages — behind backward and
+    /// behind the next step's ramp-up.
     pub comm_exposed_s: Summary,
+    /// Comm wall-clock hidden specifically by CROSS-STEP overlap: tail
+    /// activity that ran between the end of a step's backward and the
+    /// moment the next step's leader needed it finished. Always 0 under
+    /// the depth-1 executor (no next-step window exists there).
+    pub cross_hidden_s: Summary,
     pub update_s: Summary,
     pub step_s: Summary,
 }
@@ -142,11 +150,13 @@ impl StepBreakdown {
             f("grad", &self.grad_s),
             f("comm", &self.comm_s),
             f("exposed", &self.comm_exposed_s),
+            f("xstep", &self.cross_hidden_s),
             f("update", &self.update_s),
             f("step", &self.step_s),
             format!(
-                "  overlap  {:.1}% of comm hidden behind backward",
-                self.overlap_efficiency() * 100.0
+                "  overlap  {:.1}% of comm hidden (cross-step: {:.3} ms/step)",
+                self.overlap_efficiency() * 100.0,
+                self.cross_hidden_s.mean() * 1e3
             ),
         ]
         .join("\n")
@@ -222,9 +232,11 @@ mod tests {
     fn breakdown_report_renders() {
         let mut b = StepBreakdown::default();
         b.step_s.push(0.01);
+        b.cross_hidden_s.push(0.002);
         let r = b.report();
         assert!(r.contains("step"));
         assert!(r.contains("exposed"));
+        assert!(r.contains("xstep"), "cross-step row missing: {r}");
         assert!(r.contains("n=1"));
     }
 

@@ -212,6 +212,22 @@ pub struct MeasuredPipeline {
     pub ready_s: Vec<f64>,
     /// Per-bucket (start, end) of the measured allreduce.
     pub comm_spans: Vec<(f64, f64)>,
+    /// Cross-step double buffering: how long after backward ended the
+    /// NEXT step's leader actually needed this step's tail (its ramp-up
+    /// window — data draw, dispatch, batch prep). Tail comm inside this
+    /// window is hidden BY THE NEXT STEP rather than by backward. 0 under
+    /// the depth-1 executor.
+    pub next_step_window_s: f64,
+}
+
+/// Cross-step double-buffering model: the exposed tail that SURVIVES when
+/// the next step grants a `window_s`-second ramp-up during which tail
+/// communication is overlapped (step s+1's data draw + batch prep running
+/// under step s's last reductions). `window_s = 0` returns the intra-step
+/// exposure unchanged; the simulator-side counterpart of
+/// `StepBreakdown::cross_hidden_s`.
+pub fn cross_step_exposed(report: &OverlapReport, window_s: f64) -> f64 {
+    (report.exposed_comm_s - window_s.max(0.0)).max(0.0)
 }
 
 impl MeasuredPipeline {
@@ -232,6 +248,15 @@ impl MeasuredPipeline {
             total_comm_s: total,
             hidden_frac: if total > 0.0 { 1.0 - exposed / total } else { 1.0 },
         }
+    }
+
+    /// The exposed tail that remained after cross-step overlap: the
+    /// measured intra-step exposure minus this step's measured
+    /// `next_step_window_s` — what the run actually paid under the
+    /// double-buffered executor. Equals `report().exposed_comm_s` at
+    /// depth 1 (window 0).
+    pub fn cross_step_exposed_s(&self) -> f64 {
+        cross_step_exposed(&self.report(), self.next_step_window_s)
     }
 
     /// Re-schedule the measured buckets (their ready times and measured
@@ -433,12 +458,38 @@ mod tests {
             backward_s: 0.010,
             ready_s: vec![0.002, 0.010],
             comm_spans: vec![(0.002, 0.005), (0.010, 0.014)],
+            next_step_window_s: 0.0,
         };
         let r = m.report();
         assert!((r.step_span_s - 0.014).abs() < 1e-12);
         assert!((r.total_comm_s - 0.007).abs() < 1e-12);
         assert!((r.exposed_comm_s - 0.004).abs() < 1e-12);
         assert!((r.hidden_frac - (1.0 - 0.004 / 0.007)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_step_window_eats_the_exposed_tail() {
+        // 10 ms backward, 4 ms of tail comm past it.
+        let m = MeasuredPipeline {
+            backward_s: 0.010,
+            ready_s: vec![0.002, 0.010],
+            comm_spans: vec![(0.002, 0.005), (0.010, 0.014)],
+            next_step_window_s: 0.0,
+        };
+        let r = m.report();
+        assert!((r.exposed_comm_s - 0.004).abs() < 1e-12);
+        // No window (depth 1): nothing changes.
+        assert!((cross_step_exposed(&r, 0.0) - 0.004).abs() < 1e-12);
+        assert!((m.cross_step_exposed_s() - 0.004).abs() < 1e-12);
+        // A 2.5 ms next-step ramp-up hides 2.5 ms of the tail.
+        assert!((cross_step_exposed(&r, 0.0025) - 0.0015).abs() < 1e-12);
+        // Saturates at zero — a long window can't go negative.
+        assert_eq!(cross_step_exposed(&r, 1.0), 0.0);
+        // Negative windows are treated as zero, not as extra exposure.
+        assert!((cross_step_exposed(&r, -1.0) - 0.004).abs() < 1e-12);
+        // With a measured window, the struct-level helper applies it.
+        let m2 = MeasuredPipeline { next_step_window_s: 0.003, ..m };
+        assert!((m2.cross_step_exposed_s() - 0.001).abs() < 1e-12);
     }
 
     #[test]
@@ -449,6 +500,7 @@ mod tests {
             backward_s: 0.010,
             ready_s: vec![0.002, 0.006, 0.010],
             comm_spans: vec![(0.002, 0.007), (0.007, 0.009), (0.010, 0.013)],
+            next_step_window_s: 0.0,
         };
         let r = m.replay(1);
         for (got, want) in r.comm_spans.iter().zip(&m.comm_spans) {
@@ -463,6 +515,7 @@ mod tests {
             backward_s: 0.004,
             ready_s: vec![0.001, 0.002, 0.003, 0.004],
             comm_spans: vec![(0.001, 0.004), (0.004, 0.007), (0.007, 0.008), (0.008, 0.011)],
+            next_step_window_s: 0.0,
         };
         let mut prev = f64::INFINITY;
         for ch in [1, 2, 4] {

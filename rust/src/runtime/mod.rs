@@ -1,20 +1,24 @@
 //! Runtime engines: execute the training-step computations behind one
-//! typed API (`grad_step`, `grad_step_streamed`, `update`, `update_span`,
-//! `eval`).
+//! typed API (`grad_step`, `grad_step_streamed`,
+//! `grad_step_streamed_into`, `update`, `update_span`, `eval`).
 //!
-//! The streaming pair is what the pipelined step executor builds on:
-//! `grad_step_streamed` publishes packed-buffer gradient spans in
+//! The streaming trio is what the pipelined step executor builds on:
+//! `grad_step_streamed_into` computes the gradient into a CALLER-selected
+//! scratch buffer (no per-call gradient allocation — the persistent
+//! workers reuse one scratch for the whole run, and under cross-step
+//! double buffering route each emitted span into the step generation's
+//! own accumulation buffer) and publishes packed-buffer spans in
 //! backward-readiness order (so allreduce can start while backward is
 //! still running) — with `chunk_elems > 0` it additionally splits fc
 //! weight gradients into row chunks emitted as their outer products
 //! complete, so even a layer holding ~96% of the parameters streams to
-//! the wire mid-backward instead of as one tail span — and `update_span`
-//! applies the LARS/SGD master update to whole layers in place as their
-//! reductions land (for a chunked layer, once its final chunk lands, so
-//! the trust ratio always comes from full-layer norms). The stub engine
-//! streams for real; the PJRT engine coalesces chunks back to a
-//! whole-buffer fallback (`supports_pipeline` tells the coordinator which
-//! executor to pick).
+//! the wire mid-backward instead of as one tail span. `grad_step_streamed`
+//! is its allocating façade, and `update_span` applies the LARS/SGD
+//! master update to whole layers in place as their reductions land (for a
+//! chunked layer, once its final chunk lands, so the trust ratio always
+//! comes from full-layer norms). The stub engine streams for real; the
+//! PJRT engine coalesces chunks back to a whole-buffer fallback
+//! (`supports_pipeline` tells the coordinator which executor to pick).
 //!
 //! Two interchangeable backends:
 //!

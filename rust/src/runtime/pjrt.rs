@@ -134,6 +134,34 @@ impl Engine {
         Ok(out)
     }
 
+    /// Allocation-free form of [`Engine::grad_step_streamed`], same
+    /// whole-buffer coalescing: the executable's full gradient is copied
+    /// into the caller's scratch and emitted as ONE span. (The PJRT
+    /// boundary materializes a fresh literal per call anyway, so "into"
+    /// here only standardizes the signature with the stub engine for the
+    /// pipelined worker pool.)
+    #[allow(clippy::too_many_arguments)]
+    pub fn grad_step_streamed_into(
+        &self,
+        variant: GradVariant,
+        params: &[f32],
+        bn_state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        _chunk_elems: usize,
+        scratch: &mut Vec<f32>,
+        new_state: &mut [f32],
+        emit: &mut dyn FnMut(usize, usize, &[f32]),
+    ) -> Result<(f32, f32)> {
+        let out = self.grad_step(variant, params, bn_state, images, labels)?;
+        check_len("new_state", new_state.len(), out.new_state.len())?;
+        scratch.clear();
+        scratch.extend_from_slice(&out.grads);
+        new_state.copy_from_slice(&out.new_state);
+        emit(0, scratch.len(), scratch);
+        Ok((out.loss, out.correct))
+    }
+
     /// Unsupported on this backend (see [`Engine::supports_pipeline`]);
     /// present so call sites stay backend-agnostic.
     #[allow(clippy::too_many_arguments)]

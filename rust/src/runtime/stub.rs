@@ -151,27 +151,9 @@ impl Engine {
         self.grad_step_streamed(variant, params, bn_state, images, labels, 0, &mut |_, _, _| {})
     }
 
-    /// Streaming gradient step (the pipelined executor's backbone): runs
-    /// the same fwd+bwd as [`Engine::grad_step`], but invokes
-    /// `emit(lo, hi, &grads[lo..hi])` the moment the packed-buffer span
-    /// `[lo, hi)` is FINAL, walking the buffer back-to-front in
-    /// backward-readiness order. The emitted spans are contiguous,
-    /// descending, and tile `[0, padded_param_count)` exactly (the padded
-    /// tail rides with the first span).
-    ///
-    /// `chunk_elems > 0` additionally streams every fc WEIGHT gradient in
-    /// row blocks of ~`chunk_elems` elements (boundaries from
-    /// [`crate::bucket::row_blocks`], so they line up with a chunked
-    /// `BucketPlan` built at the same granularity), emitted back-to-front
-    /// as the `dW[r] = x[:, r]ᵀ · dy` outer products complete. Per-element
-    /// accumulation runs in batch order exactly as the whole-layer kernel
-    /// does, so chunked emission is bit-identical to `chunk_elems == 0`.
-    ///
-    /// Contract (what the pipelined executor's safety argument rests on):
-    /// after `emit(lo, hi, ..)` returns, this call never again READS
-    /// `params[lo..hi]` nor writes `grads[lo..hi]` — so the caller may
-    /// hand the span to a concurrent allreduce and then overwrite those
-    /// parameters while backward continues on earlier layers.
+    /// Streaming gradient step (the pipelined executor's backbone):
+    /// allocating façade over [`Engine::grad_step_streamed_into`] that
+    /// returns a fresh [`GradOutput`]. Same emission contract.
     #[allow(clippy::too_many_arguments)]
     pub fn grad_step_streamed(
         &self,
@@ -183,11 +165,62 @@ impl Engine {
         chunk_elems: usize,
         emit: &mut dyn FnMut(usize, usize, &[f32]),
     ) -> Result<GradOutput> {
+        let mut scratch = Vec::new();
+        let mut new_state = vec![0.0f32; self.manifest.state_count];
+        let (loss, correct) = self.grad_step_streamed_into(
+            variant, params, bn_state, images, labels, chunk_elems, &mut scratch, &mut new_state,
+            emit,
+        )?;
+        Ok(GradOutput { loss, correct, grads: scratch, new_state })
+    }
+
+    /// Allocation-free streaming gradient step: runs the same fwd+bwd as
+    /// [`Engine::grad_step`], computing the packed gradient into the
+    /// CALLER-selected `scratch` buffer (resized to Np; reuse it across
+    /// calls and no gradient-sized allocation survives on the hot path)
+    /// and the BN running-statistics update into `new_state`, invoking
+    /// `emit(lo, hi, &scratch[lo..hi])` the moment the packed-buffer span
+    /// `[lo, hi)` is FINAL, walking the buffer back-to-front in
+    /// backward-readiness order. The emitted spans are contiguous,
+    /// descending, and tile `[0, padded_param_count)` exactly (the padded
+    /// tail rides with the first span). This is the form the pipelined
+    /// executor's persistent workers call: under cross-step double
+    /// buffering each worker owns one scratch plus two generation-tagged
+    /// accumulation buffers, and the emit callback streams each span into
+    /// the generation the step belongs to.
+    ///
+    /// `chunk_elems > 0` additionally streams every fc WEIGHT gradient in
+    /// row blocks of ~`chunk_elems` elements (boundaries from
+    /// [`crate::bucket::row_blocks`], so they line up with a chunked
+    /// `BucketPlan` built at the same granularity), emitted back-to-front
+    /// as the `dW[r] = x[:, r]ᵀ · dy` outer products complete. Per-element
+    /// accumulation runs in batch order exactly as the whole-layer kernel
+    /// does, so chunked emission is bit-identical to `chunk_elems == 0`.
+    ///
+    /// Contract (what the pipelined executor's safety argument rests on):
+    /// after `emit(lo, hi, ..)` returns, this call never again READS
+    /// `params[lo..hi]` nor writes `scratch[lo..hi]` — so the caller may
+    /// hand the span to a concurrent allreduce and then overwrite those
+    /// parameters while backward continues on earlier layers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn grad_step_streamed_into(
+        &self,
+        variant: GradVariant,
+        params: &[f32],
+        bn_state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        chunk_elems: usize,
+        scratch: &mut Vec<f32>,
+        new_state: &mut [f32],
+        emit: &mut dyn FnMut(usize, usize, &[f32]),
+    ) -> Result<(f32, f32)> {
         let m = &self.manifest;
         check_len("params", params.len(), m.padded_param_count)?;
         check_len("bn_state", bn_state.len(), m.state_count)?;
         check_len("images", images.len(), BATCH * D)?;
         check_len("labels", labels.len(), BATCH)?;
+        check_len("new_state", new_state.len(), m.state_count)?;
         let smoothing = match variant {
             GradVariant::Smoothed => m.train.label_smoothing as f32,
             GradVariant::NoSmoothing => 0.0,
@@ -227,7 +260,13 @@ impl Engine {
 
         // ---- backward (streaming: spans emitted back-to-front; fc weight
         // gradients additionally stream in row chunks) ------------------
-        let mut grads = vec![0.0f32; m.padded_param_count];
+        // The scratch is reused across calls: every parameter span below is
+        // fully overwritten before it is emitted (matmul_xt_dy_rows and
+        // col_sums fill their outputs, BN backward writes every element),
+        // so only the padded tail needs an explicit clear.
+        scratch.resize(m.padded_param_count, 0.0);
+        scratch[PARAMS..].fill(0.0);
+        let grads: &mut [f32] = scratch.as_mut_slice();
         // fc3: bias gradient, then dx (the LAST read of w3 — after it,
         // params[O_W3..] are dead to this call), then the weight gradient
         // streamed in row blocks. The bias span plus the zero padded tail
@@ -237,39 +276,39 @@ impl Engine {
         let mut dr2 = vec![0.0f32; BATCH * H2];
         matmul_dy_wt(&dlogits, w3, &mut dr2, BATCH, H2, K);
         emit(O_B3, PADDED, &grads[O_B3..PADDED]);
-        stream_fc_grad(&r2, &dlogits, &mut grads, O_W3, BATCH, H2, K, chunk_elems, emit);
+        stream_fc_grad(&r2, &dlogits, grads, O_W3, BATCH, H2, K, chunk_elems, emit);
         // relu2 + bn2
         let da2: Vec<f32> = dr2.iter().zip(&a2).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
         let mut dz2 = vec![0.0f32; BATCH * H2];
         {
-            let (dgamma, dbeta) = grads_pair(&mut grads, O_G2, O_B2, H2);
+            let (dgamma, dbeta) = grads_pair(grads, O_G2, O_B2, H2);
             bn2.backward(&da2, &xh2, g2, BATCH, &mut dz2, dgamma, dbeta);
         }
         emit(O_G2, O_W3, &grads[O_G2..O_W3]);
         // fc2: dx first (the last read of w2), then the streamed dW2.
         let mut dr1 = vec![0.0f32; BATCH * H1];
         matmul_dy_wt(&dz2, w2, &mut dr1, BATCH, H1, H2);
-        stream_fc_grad(&r1, &dz2, &mut grads, O_W2, BATCH, H1, H2, chunk_elems, emit);
+        stream_fc_grad(&r1, &dz2, grads, O_W2, BATCH, H1, H2, chunk_elems, emit);
         // relu1 + bn1
         let da1: Vec<f32> = dr1.iter().zip(&a1).map(|(&d, &a)| if a > 0.0 { d } else { 0.0 }).collect();
         let mut dz1 = vec![0.0f32; BATCH * H1];
         {
-            let (dgamma, dbeta) = grads_pair(&mut grads, O_G1, O_B1, H1);
+            let (dgamma, dbeta) = grads_pair(grads, O_G1, O_B1, H1);
             bn1.backward(&da1, &xh1, g1, BATCH, &mut dz1, dgamma, dbeta);
         }
         emit(O_G1, O_W2, &grads[O_G1..O_W2]);
         // fc1: the giant layer this streaming exists for — no dx needed,
         // its weight-gradient rows flow straight to the wire.
-        stream_fc_grad(images, &dz1, &mut grads, O_W1, BATCH, D, H1, chunk_elems, emit);
+        stream_fc_grad(images, &dz1, grads, O_W1, BATCH, D, H1, chunk_elems, emit);
 
         // ---- BN running statistics (EMA of batch moments) ------------
-        let mut new_state = bn_state.to_vec();
+        new_state.copy_from_slice(bn_state);
         ema(&mut new_state[0..H1], &bn1.mu);
         ema(&mut new_state[H1..2 * H1], &bn1.var);
         ema(&mut new_state[2 * H1..2 * H1 + H2], &bn2.mu);
         ema(&mut new_state[2 * H1 + H2..STATES], &bn2.var);
 
-        Ok(GradOutput { loss, correct, grads, new_state })
+        Ok((loss, correct))
     }
 
     /// Apply the master-weight update. LARS trust ratio per layer with the
@@ -1002,6 +1041,69 @@ mod tests {
             "unchunked emission should leave fc1.w buckets stuck behind the final span \
              ({early_unchunked} of {nb} early)"
         );
+    }
+
+    /// The allocation-free `_into` form must be bit-identical to the
+    /// allocating API even when its scratch buffer is REUSED dirty across
+    /// calls (the persistent-worker usage): every span is fully
+    /// overwritten, the padded tail is re-zeroed, and new_state lands in
+    /// the caller's buffer.
+    #[test]
+    fn streamed_into_with_dirty_scratch_matches_grad_step() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(67);
+        let whole = e.grad_step(GradVariant::Smoothed, &params, &state, &images, &labels).unwrap();
+        // Poison the scratch with garbage from a DIFFERENT call first.
+        let mut scratch: Vec<f32> = vec![f32::NAN; 17];
+        let mut new_state = vec![f32::NAN; STATES];
+        for chunk_elems in [0usize, 1024] {
+            let mut spans = 0usize;
+            let (loss, correct) = e
+                .grad_step_streamed_into(
+                    GradVariant::Smoothed,
+                    &params,
+                    &state,
+                    &images,
+                    &labels,
+                    chunk_elems,
+                    &mut scratch,
+                    &mut new_state,
+                    &mut |lo, hi, src| {
+                        assert_eq!(src.len(), hi - lo);
+                        spans += 1;
+                    },
+                )
+                .unwrap();
+            assert!(spans >= 2);
+            assert_eq!(loss, whole.loss, "chunk={chunk_elems}");
+            assert_eq!(correct, whole.correct, "chunk={chunk_elems}");
+            assert_eq!(scratch, whole.grads, "chunk={chunk_elems}: dirty scratch leaked through");
+            assert_eq!(new_state, whole.new_state, "chunk={chunk_elems}");
+            // Leave the scratch dirty-but-sized for the next iteration: the
+            // reuse path (no realloc) must stay bit-identical too.
+            scratch[O_W1] = -1234.5;
+        }
+    }
+
+    #[test]
+    fn streamed_into_rejects_wrong_new_state_len() {
+        let e = engine();
+        let (params, state, images, labels) = inputs(71);
+        let mut scratch = Vec::new();
+        let mut short = vec![0.0f32; STATES - 1];
+        assert!(e
+            .grad_step_streamed_into(
+                GradVariant::Smoothed,
+                &params,
+                &state,
+                &images,
+                &labels,
+                0,
+                &mut scratch,
+                &mut short,
+                &mut |_, _, _| {},
+            )
+            .is_err());
     }
 
     /// LARS chunk-safety regression (the per-layer-norm / per-chunk-apply

@@ -68,6 +68,34 @@ impl ClusterSpec {
             ..Self::abci()
         }
     }
+
+    /// A spec whose links are a MEASURED α–β fit instead of the hardcoded
+    /// ABCI numbers — the feedback edge from `benches/pipeline.rs`'s
+    /// replay (`fit_alpha_beta` over the measured per-bucket allreduces)
+    /// into the Fig-2 generators. Both link classes take the fitted pair:
+    /// the in-process fabric has no NVLink/IB distinction, so the curve
+    /// this produces reads "our transport, scaled out", next to the ABCI
+    /// curve rather than replacing it.
+    pub fn calibrated(link: LinkParams) -> ClusterSpec {
+        ClusterSpec { intra: link, inter: link, ..Self::abci() }
+    }
+}
+
+/// Bytes at which a link's serialization time equals its latency
+/// (`α · β`): messages below this floor spend more time on latency than
+/// on payload, so sub-chunking below it adds readiness points that cost
+/// more than they can hide.
+pub fn latency_floor_bytes(link: &LinkParams) -> usize {
+    (link.latency_s * link.bandwidth_bps).ceil() as usize
+}
+
+/// `--chunk-bytes auto`: the row-chunk grain derived from a (fitted or
+/// configured) α–β link — the latency floor, clamped to `[min_bytes,
+/// max_bytes]` (floors below `min_bytes` mean latency is negligible and
+/// the finest useful grain wins; above `max_bytes` chunking would stop
+/// creating readiness points inside a bucket target).
+pub fn auto_chunk_bytes(link: &LinkParams, min_bytes: usize, max_bytes: usize) -> usize {
+    latency_floor_bytes(link).clamp(min_bytes, max_bytes.max(min_bytes))
 }
 
 /// Predicted allreduce time for `bytes` of wire data across `p` ranks.
@@ -234,6 +262,20 @@ impl StepModel {
     pub fn step_time(&self) -> f64 {
         let window = self.compute_s * self.overlap_window_frac;
         let exposed = (self.comm_s - window).max(0.0);
+        self.compute_s + exposed + self.overhead_s
+    }
+
+    /// Steady-state step time under CROSS-STEP double buffering: the
+    /// comm/update tail that survives the intra-step window additionally
+    /// overlaps the NEXT step's ramp-up (its data draw + batch prep +
+    /// pre-fence work), modelled as a `next_prep_s`-second grace window.
+    /// `next_prep_s = 0` reduces exactly to [`StepModel::step_time`];
+    /// the first step of a run (no predecessor) always pays
+    /// `step_time()` — that is the cold start `TrainReport` reports.
+    pub fn step_time_double_buffered(&self, next_prep_s: f64) -> f64 {
+        let window = self.compute_s * self.overlap_window_frac;
+        let exposed = (self.comm_s - window).max(0.0);
+        let exposed = (exposed - next_prep_s.max(0.0)).max(0.0);
         self.compute_s + exposed + self.overhead_s
     }
 
@@ -474,6 +516,56 @@ mod tests {
         // Negative implied latency clamps to zero instead of going acausal.
         let fit = fit_alpha_beta(&[(1e6, 1e-4), (2e6, 3e-4)]).unwrap();
         assert_eq!(fit.latency_s, 0.0);
+    }
+
+    #[test]
+    fn auto_chunk_tracks_the_latency_floor() {
+        // α·β inside the clamp: the floor wins.
+        let link = LinkParams { latency_s: 2e-6, bandwidth_bps: 8e9 };
+        assert_eq!(latency_floor_bytes(&link), 16_000);
+        assert_eq!(auto_chunk_bytes(&link, 512, 64 * 1024), 16_000);
+        // Negligible latency: clamp to the finest useful grain.
+        let fast = LinkParams { latency_s: 1e-9, bandwidth_bps: 8e9 };
+        assert_eq!(auto_chunk_bytes(&fast, 512, 64 * 1024), 512);
+        // Latency-dominated link: cap so chunks still fit a bucket target.
+        let slow = LinkParams { latency_s: 1e-3, bandwidth_bps: 10e9 };
+        assert_eq!(auto_chunk_bytes(&slow, 512, 64 * 1024), 64 * 1024);
+        // Degenerate clamp (max < min) stays sane.
+        assert_eq!(auto_chunk_bytes(&fast, 4096, 1024), 4096);
+    }
+
+    #[test]
+    fn calibrated_spec_uses_the_fitted_link() {
+        let link = LinkParams { latency_s: 7e-6, bandwidth_bps: 3e9 };
+        let spec = ClusterSpec::calibrated(link);
+        assert_eq!(spec.inter.latency_s, link.latency_s);
+        assert_eq!(spec.intra.bandwidth_bps, link.bandwidth_bps);
+        // Everything else inherits the ABCI calibration anchors.
+        assert_eq!(spec.gpus_per_node, ClusterSpec::abci().gpus_per_node);
+        // And the curve generator runs on it.
+        let pts = scaling_curve(&spec, &[16, 64], 40, 51e6, 8, 0.66);
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.model_images_per_sec > 0.0));
+    }
+
+    #[test]
+    fn double_buffered_step_hides_the_tail_up_to_the_prep_window() {
+        let m = StepModel {
+            compute_s: 40e-3,
+            overlap_window_frac: 0.5,
+            comm_s: 30e-3,   // 20 ms hidden intra-step, 10 ms tail
+            overhead_s: 1e-3,
+        };
+        let single = m.step_time();
+        assert!((single - (40e-3 + 10e-3 + 1e-3)).abs() < 1e-12);
+        // No prep window: identical to depth 1.
+        assert!((m.step_time_double_buffered(0.0) - single).abs() < 1e-15);
+        // A 4 ms ramp-up eats 4 ms of the tail.
+        assert!((m.step_time_double_buffered(4e-3) - (single - 4e-3)).abs() < 1e-12);
+        // The win saturates at the tail: compute + overhead is the floor.
+        let floor = m.compute_s + m.overhead_s;
+        assert!((m.step_time_double_buffered(1.0) - floor).abs() < 1e-12);
+        assert!(m.step_time_double_buffered(-3.0) <= single + 1e-15);
     }
 
     #[test]

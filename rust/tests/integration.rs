@@ -305,7 +305,7 @@ fn checkpoint_resume_is_bitwise_identical() {
 
 #[test]
 fn checkpoint_rejects_wrong_model() {
-    let t = Trainer::new(quick_cfg(), engine()).unwrap();
+    let mut t = Trainer::new(quick_cfg(), engine()).unwrap();
     let mut ckpt = t.checkpoint();
     ckpt.model_name = "resnet_mega".into();
     let mut t2 = Trainer::new(quick_cfg(), engine()).unwrap();

@@ -1,9 +1,11 @@
 //! Pipelined-executor system tests: the determinism grid (pipelined vs
-//! sequential bit-identity across workers × lanes × accum × precision ×
-//! algorithm × chunk granularity), chunk numerical-neutrality at one
-//! worker, exposed-vs-hidden comm accounting, the measured-pipeline
-//! calibration hook, checkpoint/restore under a batch ramp, and the
-//! `final_val_acc` Option semantics.
+//! sequential bit-identity across depth ∈ {1, 2} × workers × lanes ×
+//! accum × precision × algorithm × chunk granularity), the parameter-
+//! fence modes, chunk numerical-neutrality at one worker, exposed /
+//! hidden / cross-step comm accounting, the measured-pipeline calibration
+//! hook, chunk auto-tuning, checkpoint/restore under a batch ramp and
+//! under cross-step double buffering, and the `final_val_acc` Option
+//! semantics.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -38,12 +40,14 @@ fn base_cfg() -> RunConfig {
     }
 }
 
-/// The load-bearing test: for every grid point, the pipelined executor's
-/// trajectory (losses, accuracies, params, momentum-derived params,
-/// bn_state) is BIT-identical to the sequential barrier reference. The
-/// grid covers chunking too (0 = whole-layer buckets, plus several row
-/// chunk granularities): both executors share the plan, so chunking must
-/// change WHEN spans move, never what is computed.
+/// The load-bearing test: for every grid point, BOTH pipelined executors —
+/// depth 1 (intra-step overlap only) and depth 2 (cross-step double
+/// buffering with the full-update parameter fence) — produce a trajectory
+/// (losses, accuracies, params, momentum-derived params, bn_state)
+/// BIT-identical to the sequential barrier reference. The grid covers
+/// chunking too (0 = whole-layer buckets, plus several row chunk
+/// granularities): all executors share the plan, so depth/chunking must
+/// change WHEN things happen, never what is computed.
 #[test]
 fn pipelined_matches_sequential_across_grid() {
     // (workers, comm_threads, grad_accum, wire, allreduce, chunk_bytes)
@@ -77,19 +81,56 @@ fn pipelined_matches_sequential_across_grid() {
         assert!(!seq.pipeline, "{what}: overlap=false must pick the sequential executor");
 
         cfg.overlap = true;
-        let mut pipe = Trainer::new(cfg, engine()).unwrap();
-        assert!(pipe.pipeline, "{what}: overlap=true must pick the pipelined executor");
+        let mut d1_cfg = cfg.clone();
+        d1_cfg.pipeline_depth = 1;
+        let mut d1 = Trainer::new(d1_cfg, engine()).unwrap();
+        assert!(d1.pipeline, "{what}: overlap=true must pick the pipelined executor");
+        assert_eq!(d1.depth(), 1);
+
+        cfg.pipeline_depth = 2;
+        let mut d2 = Trainer::new(cfg, engine()).unwrap();
+        assert_eq!(d2.depth(), 2, "{what}: depth-2 trainer must double-buffer");
 
         for s in 0..3 {
             let (l1, a1) = seq.step().unwrap();
-            let (l2, a2) = pipe.step().unwrap();
-            assert_eq!(l1, l2, "{what}: step {s} loss differs");
-            assert_eq!(a1, a2, "{what}: step {s} acc differs");
+            let (l2, a2) = d1.step().unwrap();
+            let (l3, a3) = d2.step().unwrap();
+            assert_eq!(l1, l2, "{what}: step {s} depth-1 loss differs");
+            assert_eq!(a1, a2, "{what}: step {s} depth-1 acc differs");
+            assert_eq!(l1, l3, "{what}: step {s} depth-2 loss differs");
+            assert_eq!(a1, a3, "{what}: step {s} depth-2 acc differs");
         }
-        assert_eq!(seq.params(), pipe.params(), "{what}: params diverged");
-        assert_eq!(seq.bn_state(), pipe.bn_state(), "{what}: bn state diverged");
-        assert_eq!(seq.epoch(), pipe.epoch(), "{what}: epoch accounting diverged");
+        assert_eq!(seq.params(), d1.params(), "{what}: depth-1 params diverged");
+        assert_eq!(seq.params(), d2.params(), "{what}: depth-2 params diverged");
+        assert_eq!(seq.bn_state(), d1.bn_state(), "{what}: depth-1 bn state diverged");
+        assert_eq!(seq.bn_state(), d2.bn_state(), "{what}: depth-2 bn state diverged");
+        assert_eq!(seq.epoch(), d2.epoch(), "{what}: epoch accounting diverged");
     }
+}
+
+/// The per-layer fence relaxation reads the exact same parameter versions
+/// as the full fence (each layer is awaited at the version the full fence
+/// would have provided), so it must also be bitwise neutral — across
+/// depths.
+#[test]
+fn per_layer_fence_is_bitwise_neutral() {
+    let mut cfg = base_cfg();
+    cfg.workers = 3;
+    cfg.comm_threads = 2;
+    cfg.grad_accum = 2;
+    let mut full_cfg = cfg.clone();
+    full_cfg.fence = "full".into();
+    let mut full = Trainer::new(full_cfg, engine()).unwrap();
+    let mut layer_cfg = cfg.clone();
+    layer_cfg.fence = "layer".into();
+    let mut layer = Trainer::new(layer_cfg, engine()).unwrap();
+    for s in 0..4 {
+        let (l1, _) = full.step().unwrap();
+        let (l2, _) = layer.step().unwrap();
+        assert_eq!(l1, l2, "step {s}: per-layer fence changed the loss");
+    }
+    assert_eq!(full.params(), layer.params(), "per-layer fence changed the params");
+    assert_eq!(full.bn_state(), layer.bn_state(), "per-layer fence changed bn state");
 }
 
 /// A longer single-config soak: many steps through the SAME persistent
@@ -195,9 +236,13 @@ fn pipelined_step_hides_some_communication() {
     for _ in 0..6 {
         t.step().unwrap();
     }
+    // Depth 2 parks the last step's tail; retire it so the breakdown
+    // covers all 6 steps.
+    t.flush().unwrap();
     let bd = &t.breakdown;
     assert_eq!(bd.comm_s.count(), 6);
     assert_eq!(bd.comm_exposed_s.count(), 6);
+    assert_eq!(bd.cross_hidden_s.count(), 6);
     let total = bd.comm_s.mean() * bd.comm_s.count() as f64;
     let exposed = bd.comm_exposed_s.mean() * bd.comm_exposed_s.count() as f64;
     assert!(total > 0.0, "comm activity must be recorded");
@@ -206,6 +251,30 @@ fn pipelined_step_hides_some_communication() {
         "exposed comm ({exposed:.6}s) must be < total comm ({total:.6}s) for multi-bucket"
     );
     assert!(bd.overlap_efficiency() > 0.0, "some comm must be hidden");
+    // Cross-step window accounting is well-formed (non-negative; it can
+    // legitimately be ~0 when every bucket reduced before backward ended).
+    assert!(bd.cross_hidden_s.min() >= 0.0);
+}
+
+/// Depth-1 runs must never book cross-step hiding (there is no next-step
+/// window), and their exposed accounting keeps the PR-2 semantics.
+#[test]
+fn depth1_books_no_cross_step_hiding() {
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    cfg.comm_threads = 2;
+    cfg.pipeline_depth = 1;
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    for _ in 0..4 {
+        t.step().unwrap();
+    }
+    t.flush().unwrap();
+    let bd = &t.breakdown;
+    assert_eq!(bd.cross_hidden_s.count(), 4);
+    assert_eq!(bd.cross_hidden_s.max(), 0.0, "depth 1 must not claim cross-step hiding");
+    // And its trace carries no next-step window either.
+    let trace = t.pipeline_trace().unwrap();
+    assert_eq!(trace.next_step_window_s, 0.0);
 }
 
 /// The calibration hook end-to-end: a pipelined step leaves a measured
@@ -303,6 +372,112 @@ fn checkpoint_restore_under_batch_ramp_is_bitwise() {
     assert_eq!(straight.bn_state(), resumed.bn_state(), "bn state diverged");
     assert_eq!(straight.epoch(), resumed.epoch(), "epoch accounting diverged");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite regression: a mid-run checkpoint taken from a DOUBLE-BUFFERED
+/// run (in-flight tail parked at checkpoint time) restores into a warm
+/// trainer whose generation counter is elsewhere — the fence/ledger
+/// machinery must re-seed on the restored step and the resumed trajectory
+/// must be bitwise identical to the uninterrupted run.
+#[test]
+fn restore_reseeds_generations_under_double_buffering() {
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    cfg.comm_threads = 2;
+    cfg.total_steps = 6;
+    assert_eq!(cfg.pipeline_depth, 2, "test exists for the double-buffered default");
+
+    let mut straight = Trainer::new(cfg.clone(), engine()).unwrap();
+    for _ in 0..6 {
+        straight.step().unwrap();
+    }
+
+    let mut first = Trainer::new(cfg.clone(), engine()).unwrap();
+    for _ in 0..4 {
+        first.step().unwrap();
+    }
+    // checkpoint() flushes the parked step-3 tail: the snapshot is a clean
+    // 4-step boundary even though the tail was still in flight.
+    let ckpt = first.checkpoint();
+    assert_eq!(ckpt.step, 4);
+
+    // Restore into a WARM trainer: its pool has run generations 0..2 and
+    // its fence sits at version 2; restore must jump both to step 4.
+    let mut resumed = Trainer::new(cfg, engine()).unwrap();
+    for _ in 0..2 {
+        resumed.step().unwrap();
+    }
+    resumed.restore(&ckpt).unwrap();
+    assert_eq!(resumed.step_index(), 4);
+    for _ in 0..2 {
+        resumed.step().unwrap();
+    }
+    assert_eq!(straight.params(), resumed.params(), "weights diverged after warm resume");
+    assert_eq!(straight.bn_state(), resumed.bn_state(), "bn state diverged after warm resume");
+    assert_eq!(straight.epoch(), resumed.epoch(), "epoch accounting diverged");
+}
+
+/// Satellite: `--chunk-bytes auto` derives the grain from the α–β link
+/// (the α·β latency floor), builds a chunked plan with it, and the
+/// TrainReport records both the grain and the per-layer plan.
+#[test]
+fn chunk_auto_derives_grain_and_records_plan() {
+    let mut cfg = base_cfg();
+    cfg.chunk_auto = true;
+    cfg.chunk_bytes = 0; // must be ignored under auto
+    cfg.total_steps = 2;
+    cfg.eval_every = 0;
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    // Default link (2 µs, 8 GB/s) → 16 000-byte grain.
+    assert_eq!(t.chunk_bytes_used(), 16_000);
+    assert!(t.bucket_plan().chunk_elems > 0);
+    assert!(
+        t.bucket_plan().buckets.iter().any(|b| b.has_chunks()),
+        "auto grain must still split fc1.w"
+    );
+    let report = t.train().unwrap();
+    assert_eq!(report.chunk_bytes, 16_000);
+    assert!(
+        report.chunk_plan.iter().any(|(name, bytes)| name == "fc1.w" && *bytes > 0),
+        "chunk plan must record the split fc1.w: {:?}",
+        report.chunk_plan
+    );
+    // Only split layers are recorded.
+    assert!(report.chunk_plan.iter().all(|(_, bytes)| *bytes > 0));
+    let j = report.to_json().to_string_pretty();
+    assert!(j.contains("chunk_plan"), "report JSON must carry the plan: {j}");
+
+    // A fast link clamps to the finest grain; a slow link caps out.
+    let mut fast_cfg = base_cfg();
+    fast_cfg.chunk_auto = true;
+    fast_cfg.link_alpha_us = 0.001;
+    let fast = Trainer::new(fast_cfg, engine()).unwrap();
+    assert_eq!(fast.chunk_bytes_used(), 512);
+    let mut slow_cfg = base_cfg();
+    slow_cfg.chunk_auto = true;
+    slow_cfg.link_alpha_us = 10_000.0;
+    let slow = Trainer::new(slow_cfg, engine()).unwrap();
+    assert_eq!(slow.chunk_bytes_used(), 4 * slow.cfg.bucket_bytes);
+}
+
+/// The cross-step report fields: steady-state throughput excludes the
+/// cold-start step, and the depth is recorded.
+#[test]
+fn train_report_carries_steady_state_and_depth() {
+    let mut cfg = base_cfg();
+    cfg.total_steps = 5;
+    cfg.eval_every = 0;
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    let report = t.train().unwrap();
+    assert_eq!(report.pipeline_depth, 2);
+    assert!(report.cold_start_s > 0.0);
+    assert!(report.cold_start_s < report.elapsed_s);
+    assert!(report.steady_state_images_per_sec > 0.0);
+    assert!(report.cross_step_hidden_total_s >= 0.0);
+    let j = report.to_json();
+    use yasgd::util::json::Json;
+    assert!(j.get("steady_state_images_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(j.get("pipeline_depth").and_then(Json::as_f64).unwrap(), 2.0);
 }
 
 /// Satellite regression: `final_val_acc` is an Option — present when an

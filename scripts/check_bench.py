@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""CI gate over BENCH_pipeline.json (the bench-smoke artifact).
+
+Asserts the structural invariants the cross-step pipeline PR promises:
+
+  1. the new depth-2 section exists (with its steady-state throughput
+     fields), and
+  2. the depth-2 WHOLE-RUN exposed-comm fraction (cold-start step
+     included — `StepBreakdown.exposed_comm_frac()` over every step) is
+     no worse than the depth-1 value, within a scheduling-noise
+     tolerance. The measurement reference for depth 2 is the moment the
+     NEXT step's leader needs the tail, which is never earlier than
+     depth 1's end-of-backward reference, so a real regression here
+     means the executor stopped overlapping across steps.
+
+Tolerance-guarded on purpose: CI runners are noisy and the exposed
+fractions are wall-clock measurements; the gate catches structural
+regressions (section missing, depth 2 clearly worse), not micro-jitter.
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.05  # absolute, on a [0, 1] fraction
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_pipeline.json"
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    for section in ("depth1", "depth2"):
+        if not isinstance(bench.get(section), dict):
+            fail(f"missing '{section}' section")
+    for key in ("images_per_sec", "steady_state_images_per_sec", "exposed_comm_frac"):
+        for section in ("depth1", "depth2"):
+            v = bench[section].get(key)
+            if not isinstance(v, (int, float)):
+                fail(f"'{section}.{key}' missing or non-numeric: {v!r}")
+    for key in ("cross_hidden_ms_per_step", "next_step_window_ms"):
+        v = bench["depth2"].get(key)
+        if not isinstance(v, (int, float)) or v < 0:
+            fail(f"'depth2.{key}' missing or negative: {v!r}")
+
+    d1 = bench["depth1"]["exposed_comm_frac"]
+    d2 = bench["depth2"]["exposed_comm_frac"]
+    if not (0.0 <= d1 <= 1.0 and 0.0 <= d2 <= 1.0):
+        fail(f"exposed fractions out of [0, 1]: depth1={d1}, depth2={d2}")
+    if d2 > d1 + TOLERANCE:
+        fail(
+            f"depth-2 whole-run exposed-comm fraction regressed: "
+            f"{d2:.4f} > depth-1 {d1:.4f} + {TOLERANCE}"
+        )
+
+    print(
+        f"check_bench: OK: exposed comm depth1={d1:.4f} -> depth2={d2:.4f} "
+        f"(cross-step hidden {bench['depth2']['cross_hidden_ms_per_step']:.4f} ms/step)"
+    )
+
+
+if __name__ == "__main__":
+    main()
