@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench bench-pipeline bench-check artifacts clean
+.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-check artifacts clean
 
 verify: build test
 
@@ -21,6 +21,11 @@ clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
 bench:
+	$(CARGO) bench --bench comm
+
+# Wire-codec + collective headline numbers -> BENCH_comm.json (same
+# suite as `bench`; the alias exists for the CI artifact step).
+bench-comm:
 	$(CARGO) bench --bench comm
 
 # Pipelined vs sequential executor headline numbers -> BENCH_pipeline.json

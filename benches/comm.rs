@@ -1,12 +1,18 @@
 //! Communication benches: A4 (bucket size sweep), A5 (overlap on/off +
-//! concurrent channels), A8 (allreduce algorithm comparison), fp16 vs
-//! fp32 wire, the fused fp16 codec kernels, and the headline seed-path vs
-//! CommEngine comparison.
+//! concurrent channels), A8 (allreduce algorithm comparison), the wire
+//! codec sections (fused fp16 AND int8 kernels, f32/f16/q8 wire-bytes-
+//! per-step comparison), and the headline seed-path vs CommEngine
+//! comparison.
 //!
 //! Real numeric collectives over in-process ranks (measured) PLUS the α–β
 //! model's predictions at ABCI scale for the same sweeps, so the measured
 //! small-scale trend and the modelled large-scale trend can be compared
-//! side by side. Results land in bench_results/comm.json.
+//! side by side. Raw results land in bench_results/comm.json; the codec
+//! headline numbers (kernel GB/s + exact per-step wire bytes per codec)
+//! are also written to BENCH_comm.json at the repo root, uploaded as a CI
+//! artifact alongside BENCH_pipeline.json. Quick mode (`BENCH_QUICK=1`,
+//! the CI smoke setting) trims measurement windows so the suite finishes
+//! in seconds while still producing every field.
 
 use std::time::Duration;
 use yasgd::benchkit::{bench, dump_results, Table};
@@ -14,7 +20,7 @@ use yasgd::collective::{allreduce_mean, Algorithm, CommEngine, Precision};
 use yasgd::simnet::{
     allreduce_time, bucketed_allreduce_time, concurrent_bucketed_allreduce_time, ClusterSpec,
 };
-use yasgd::util::{fp16, rng::Rng};
+use yasgd::util::{codec, fp16, rng::Rng};
 use yasgd::util::json::Json;
 
 /// Rank buffers seeded LARGE (≈2^60) so repeated in-place allreduce-mean
@@ -40,6 +46,11 @@ fn main() {
     let mut results = Vec::new();
     let spec = ClusterSpec::abci();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let meas = |ms: u64| Duration::from_millis(if quick { 40 } else { ms });
+    if quick {
+        println!("(BENCH_QUICK: 40 ms measurement windows)");
+    }
     println!("(engine lanes use {threads} threads — available parallelism)\n");
 
     // ---- headline: seed path vs CommEngine, 8 ranks / 8 MiB ring ---------
@@ -59,7 +70,7 @@ fn main() {
         let seed_r = bench(
             &format!("seed-{}-8MiB", algo.name()),
             2,
-            Duration::from_millis(400),
+            meas(400),
             || {
                 allreduce_mean(&mut bufs, algo, Precision::F32);
             },
@@ -70,7 +81,7 @@ fn main() {
         let eng_r = bench(
             &format!("engine-{}-8MiB", algo.name()),
             2,
-            Duration::from_millis(400),
+            meas(400),
             || {
                 let stats = engine.allreduce_mean_vecs(&mut bufs);
                 wire_bytes = stats.total_bytes;
@@ -105,20 +116,20 @@ fn main() {
     let mut dst = vec![0.0f32; cn];
     let mut scratch: Vec<u16> = Vec::new();
     let mut t = Table::new(&["kernel", "mean ms", "GB/s (bytes touched)"]);
-    let enc_r = bench("codec-encode", 2, Duration::from_millis(300), || {
+    let enc_r = bench("codec-encode", 2, meas(300), || {
         fp16::encode_slice(&src, &mut scratch);
     });
-    let dec_r = bench("codec-decode", 2, Duration::from_millis(300), || {
+    let dec_r = bench("codec-decode", 2, meas(300), || {
         fp16::decode_slice(&scratch, &mut dst);
     });
-    let two_pass = bench("codec-two-pass-copy", 2, Duration::from_millis(300), || {
+    let two_pass = bench("codec-two-pass-copy", 2, meas(300), || {
         fp16::encode_slice(&src, &mut scratch);
         fp16::decode_slice(&scratch, &mut dst);
     });
-    let fused_copy = bench("codec-fused-encode-copy", 2, Duration::from_millis(300), || {
+    let fused_copy = bench("codec-fused-encode-copy", 2, meas(300), || {
         fp16::encode_copy(&src, &mut dst);
     });
-    let fused_add = bench("codec-fused-encode-add", 2, Duration::from_millis(300), || {
+    let fused_add = bench("codec-fused-encode-add", 2, meas(300), || {
         fp16::encode_add(&src, &mut dst);
     });
     // Per-kernel bytes actually touched per element: encode reads f32 +
@@ -137,6 +148,63 @@ fn main() {
     );
     println!(" the regression guard for the wire's per-element cost)\n");
 
+    // ---- int8 (q8) codec kernels -----------------------------------------
+    // The fused one-pass q8 kernels (per-chunk absmax scale computed in
+    // the same traversal) against the fp16 fused kernels and a raw f32
+    // memcpy baseline — same buffers, same bytes-touched convention.
+    println!("== int8 (q8) wire codec: fused kernels vs fp16 and f32 memcpy ==");
+    let mut t = Table::new(&["kernel", "mean ms", "GB/s (bytes touched)"]);
+    let memcpy_r = bench("codec-f32-memcpy", 2, meas(300), || {
+        dst.copy_from_slice(&src);
+    });
+    let q8_copy = bench("codec-q8-encode-copy", 2, meas(300), || {
+        codec::q8_encode_copy(&src, &mut dst);
+    });
+    let q8_add = bench("codec-q8-encode-add", 2, meas(300), || {
+        codec::q8_encode_add(&src, &mut dst);
+    });
+    // memcpy and q8 copy read+write f32 (8B/elem); q8 add reads the source
+    // and read-modify-writes the f32 accumulator (12B/elem).
+    for (r, bpe) in [(&memcpy_r, 8usize), (&q8_copy, 8), (&q8_add, 12)] {
+        t.row(&[r.name.clone(), format!("{:.2}", r.mean_ms()), format!("{:.2}", r.gbps(cn * bpe))]);
+        results.push(r.to_json());
+    }
+    println!("{}", t.render());
+    println!(
+        "(q8 copy runs at {:.2}x the fp16 fused copy and {:.2}x raw memcpy — the scale",
+        q8_copy.speedup_over(&fused_copy),
+        q8_copy.speedup_over(&memcpy_r)
+    );
+    println!(" search + round are the extra per-element work the 2x wire saving buys)\n");
+
+    // ---- wire bytes per step: f32 vs f16 vs q8 ---------------------------
+    // EXACT per-codec accounting of one full-gradient exchange under the
+    // stub model's shape (8 ranks, ring): the table the q8 acceptance bar
+    // reads (q8 must be >= 1.9x below f16).
+    println!("== wire bytes per step (stub gradient, 8 ranks, ring) ==");
+    let stub_n = yasgd::runtime::stub_manifest().padded_param_count;
+    let mut t = Table::new(&["codec", "wire bytes", "vs f32", "vs f16"]);
+    let mut per_codec: Vec<(Precision, usize, f64)> = Vec::new();
+    for codec_p in [Precision::F32, Precision::F16, Precision::Q8] {
+        let mut bufs = make_bufs_unit(8, stub_n, 11);
+        let stats = allreduce_mean(&mut bufs, Algorithm::Ring, codec_p);
+        per_codec.push((codec_p, stats.total_bytes, stats.compression_ratio()));
+    }
+    let f32_bytes = per_codec[0].1;
+    let f16_bytes = per_codec[1].1;
+    let q8_bytes = per_codec[2].1;
+    for &(codec_p, bytes, ratio) in &per_codec {
+        t.row(&[
+            codec_p.name().to_string(),
+            format!("{bytes}"),
+            format!("{ratio:.3}x"),
+            format!("{:.3}x", f16_bytes as f64 / bytes as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    let q8_over_f16 = f16_bytes as f64 / q8_bytes as f64;
+    println!("(q8 cuts per-step wire bytes {q8_over_f16:.3}x below f16, scale headers included)\n");
+
     // ---- A8: algorithm comparison, measured (engine path) ----------------
     println!("== A8: allreduce algorithms (engine, 8 ranks) ==");
     let mut t = Table::new(&["algorithm", "64 KiB", "1 MiB", "8 MiB", "8 MiB GB/s"]);
@@ -147,7 +215,7 @@ fn main() {
             let mut engine = CommEngine::new(algo, Precision::F32, threads);
             let mut bufs = make_bufs(8, n, 42);
             let mut wire_bytes = 0usize;
-            let r = bench(&format!("{}-{}", algo.name(), n), 2, Duration::from_millis(300), || {
+            let r = bench(&format!("{}-{}", algo.name(), n), 2, meas(300), || {
                 let stats = engine.allreduce_mean_vecs(&mut bufs);
                 wire_bytes = stats.total_bytes;
             });
@@ -181,7 +249,7 @@ fn main() {
         let nb = total / bucket_elems;
         let mut engine = CommEngine::new(Algorithm::Ring, Precision::F32, threads);
         let mut bufs = make_bufs(8, total, 7);
-        let r = bench(&format!("bucket-{bucket_elems}"), 1, Duration::from_millis(300), || {
+        let r = bench(&format!("bucket-{bucket_elems}"), 1, meas(300), || {
             // Bucket-by-bucket allreduce over split-borrowed spans — the
             // coordinator's zero-copy pattern.
             let mut views: Vec<Vec<&mut [f32]>> = Vec::with_capacity(nb);
@@ -226,13 +294,13 @@ fn main() {
     for precision in [Precision::F32, Precision::F16] {
         let mut bufs = make_bufs_unit(8, 1024 * 1024, 9);
         let mut bytes = 0usize;
-        let seed_r = bench(&format!("wire-seed-{precision:?}"), 1, Duration::from_millis(300), || {
+        let seed_r = bench(&format!("wire-seed-{precision:?}"), 1, meas(300), || {
             let stats = allreduce_mean(&mut bufs, Algorithm::Ring, precision);
             bytes = stats.total_bytes;
         });
         let mut engine = CommEngine::new(Algorithm::Ring, precision, threads);
         let mut bufs = make_bufs_unit(8, 1024 * 1024, 9);
-        let eng_r = bench(&format!("wire-engine-{precision:?}"), 1, Duration::from_millis(300), || {
+        let eng_r = bench(&format!("wire-engine-{precision:?}"), 1, meas(300), || {
             engine.allreduce_mean_vecs(&mut bufs);
         });
         t.row(&[
@@ -281,6 +349,54 @@ fn main() {
         ]));
     }
     println!("{}", t.render());
+
+    // ---- A5b: codec-aware exposure model ---------------------------------
+    // The SAME plan priced at each codec's exact wire bytes
+    // (`overlap::simulate_wire` / `simnet::concurrent_codec_allreduce_time`)
+    // — the deterministic counterpart of the pipeline bench's measured
+    // wire_q8-vs-wire_f16 gate, at ABCI scale.
+    println!("== A5b: wire codec vs modelled exposure (2 lanes, ABCI scale) ==");
+    let mut t = Table::new(&["codec", "step span", "exposed comm", "pure comm (2 lanes)"]);
+    let bucket_elems: Vec<usize> = (0..plan.buckets.len())
+        .map(|i| {
+            let (lo, hi) = plan.span_with_padding(i);
+            hi - lo
+        })
+        .collect();
+    let mut sim_exposed_s = Vec::new();
+    for codec_p in [Precision::F32, Precision::F16, Precision::Q8] {
+        let rep = yasgd::overlap::simulate_wire(&plan, &profile, true, 2, codec_p, |bytes| {
+            allreduce_time(
+                &spec,
+                Algorithm::Hierarchical { ranks_per_node: 4 },
+                2048,
+                bytes as f64 * scale_to_resnet50,
+            )
+        });
+        let comm = yasgd::simnet::concurrent_codec_allreduce_time(
+            &spec,
+            Algorithm::Hierarchical { ranks_per_node: 4 },
+            2048,
+            &bucket_elems,
+            codec_p,
+            2,
+        );
+        t.row(&[
+            codec_p.name().to_string(),
+            format!("{:.2} ms", rep.step_span_s * 1e3),
+            format!("{:.2} ms", rep.exposed_comm_s * 1e3),
+            format!("{:.2} ms", comm * 1e3),
+        ]);
+        sim_exposed_s.push((codec_p, rep.exposed_comm_s));
+        results.push(Json::obj(vec![
+            ("name", Json::Str(format!("sim-exposure-{}", codec_p.name()))),
+            ("step_span_s", Json::Num(rep.step_span_s)),
+            ("exposed_s", Json::Num(rep.exposed_comm_s)),
+            ("model_comm_s", Json::Num(comm)),
+        ]));
+    }
+    println!("{}", t.render());
+
     // Pure-comm view of the same lever through the α–β model.
     let buckets = vec![51e6 / 8.0; 8];
     let serial = bucketed_allreduce_time(&spec, Algorithm::Hierarchical { ranks_per_node: 4 }, 2048, &buckets);
@@ -297,6 +413,38 @@ fn main() {
         two_lane * 1e3
     );
 
+    // ---- headline artifact (CI uploads this next to BENCH_pipeline.json) --
+    let headline = Json::obj(vec![
+        ("f16_encode_copy_gbps", Json::Num(fused_copy.gbps(cn * 8))),
+        ("f16_encode_add_gbps", Json::Num(fused_add.gbps(cn * 12))),
+        ("q8_encode_copy_gbps", Json::Num(q8_copy.gbps(cn * 8))),
+        ("q8_encode_add_gbps", Json::Num(q8_add.gbps(cn * 12))),
+        ("f32_memcpy_gbps", Json::Num(memcpy_r.gbps(cn * 8))),
+        (
+            "wire_bytes_per_step",
+            Json::obj(vec![
+                ("f32", Json::Num(f32_bytes as f64)),
+                ("f16", Json::Num(f16_bytes as f64)),
+                ("q8", Json::Num(q8_bytes as f64)),
+                ("q8_over_f16_ratio", Json::Num(q8_over_f16)),
+                ("q8_compression_ratio", Json::Num(per_codec[2].2)),
+            ]),
+        ),
+        (
+            "simulated_exposed_comm_s",
+            Json::obj(
+                sim_exposed_s
+                    .iter()
+                    .map(|&(codec_p, s)| (codec_p.name(), Json::Num(s)))
+                    .collect(),
+            ),
+        ),
+        ("quick", Json::Bool(quick)),
+    ]);
+    std::fs::write("BENCH_comm.json", headline.to_string_pretty())
+        .expect("writing BENCH_comm.json");
+    println!("wrote BENCH_comm.json");
+    results.push(headline);
     let path = dump_results("comm", &Json::Arr(results)).unwrap();
     println!("wrote {}", path.display());
 }

@@ -108,11 +108,25 @@ fn main() {
     let d2_trainer = Trainer::new(d2_cfg, engine.clone()).unwrap();
     let (d2_ips, d2_steady_ips, mut d2_trainer) = run(d2_trainer, warmup, steps);
 
+    // ---- same depth-2 chunked config on the q8 wire (int8 + EF) ----------
+    let mut q8_cfg = bench_cfg();
+    q8_cfg.chunk_bytes = chunk_bytes;
+    q8_cfg.pipeline_depth = 2;
+    q8_cfg.wire = "q8".into();
+    let q8_trainer = Trainer::new(q8_cfg, engine.clone()).unwrap();
+    assert!(q8_trainer.error_feedback(), "bench q8 run must carry EF residuals");
+    let (q8_ips, q8_steady_ips, mut q8_trainer) = run(q8_trainer, warmup, steps);
+
     let speedup = if seq_ips > 0.0 { d2_ips / seq_ips } else { 0.0 };
     let exposed_unchunked = unchunked_trainer.breakdown.exposed_comm_frac();
     let exposed_d1 = d1_trainer.breakdown.exposed_comm_frac();
     let exposed_d2 = d2_trainer.breakdown.exposed_comm_frac();
+    let exposed_q8 = q8_trainer.breakdown.exposed_comm_frac();
     let cross_hidden_ms = d2_trainer.breakdown.cross_hidden_s.mean() * 1e3;
+    let f16_wire = d2_trainer.wire_totals().clone();
+    let q8_wire = q8_trainer.wire_totals().clone();
+    let f16_over_q8_bytes = f16_wire.total_bytes as f64 / q8_wire.total_bytes.max(1) as f64;
+    let q8_quant_err = q8_trainer.quant_error_norm();
 
     println!("== pipelined vs sequential executor ==");
     let mut t = Table::new(&[
@@ -155,7 +169,24 @@ fn main() {
         format!("{:.1}%", exposed_d2 * 100.0),
         format!("{:.1}%", d2_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
+    t.row(&[
+        "pipelined d2 (q8 wire + EF)".into(),
+        format!("{}", q8_trainer.bucket_plan().buckets.len()),
+        format!("{q8_ips:.1}"),
+        format!("{q8_steady_ips:.1}"),
+        format!("{:.1}%", exposed_q8 * 100.0),
+        format!("{:.1}%", q8_trainer.breakdown.overlap_efficiency() * 100.0),
+    ]);
     println!("{}", t.render());
+    println!(
+        "wire: q8 moved {:.3}x fewer bytes than f16 ({} vs {} total; q8 {:.2}x vs f32, \
+         cumulative quant-error norm {:.3e})",
+        f16_over_q8_bytes,
+        q8_wire.total_bytes,
+        f16_wire.total_bytes,
+        q8_wire.compression_ratio(),
+        q8_quant_err
+    );
     println!("speedup: {speedup:.2}x (depth-2 chunked pipelined over sequential)");
     println!(
         "chunking: exposed comm {:.1}% -> {:.1}% at {} lanes; double buffering: {:.1}% -> \
@@ -301,6 +332,30 @@ fn main() {
                     "next_step_window_ms",
                     Json::Num(trace.next_step_window_s * 1e3),
                 ),
+            ]),
+        ),
+        // Wire-codec sections (both at depth 2, chunked): the CI gate
+        // requires wire_q8.exposed_comm_frac <= wire_f16's + tolerance
+        // and the deterministic byte ratio >= 1.9.
+        (
+            "wire_f16",
+            Json::obj(vec![
+                ("steady_state_images_per_sec", Json::Num(d2_steady_ips)),
+                ("exposed_comm_frac", Json::Num(exposed_d2)),
+                ("compression_ratio", Json::Num(f16_wire.compression_ratio())),
+                ("wire_total_bytes", Json::Num(f16_wire.total_bytes as f64)),
+            ]),
+        ),
+        (
+            "wire_q8",
+            Json::obj(vec![
+                ("steady_state_images_per_sec", Json::Num(q8_steady_ips)),
+                ("exposed_comm_frac", Json::Num(exposed_q8)),
+                ("compression_ratio", Json::Num(q8_wire.compression_ratio())),
+                ("wire_total_bytes", Json::Num(q8_wire.total_bytes as f64)),
+                ("f16_over_q8_bytes", Json::Num(f16_over_q8_bytes)),
+                ("error_feedback", Json::Bool(true)),
+                ("quant_error_norm", Json::Num(q8_quant_err)),
             ]),
         ),
         ("measured_hidden_frac", Json::Num(measured.hidden_frac)),

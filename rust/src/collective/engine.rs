@@ -10,10 +10,12 @@
 //!   plan is cached, so a steady-state allreduce performs no heap
 //!   allocation and no whole-buffer clone — ops execute directly on the
 //!   caller's rank slices.
-//! * **Fused fp16 wire.** Transfers run `fp16::encode_copy` /
-//!   `fp16::encode_add`: quantize-and-store / quantize-and-accumulate in
-//!   one cache-blocked pass, no scratch, bit-identical to the two-pass
-//!   encode/decode formulation.
+//! * **Fused wire codecs.** Transfers dispatch through the codec layer
+//!   (`Codec::copy` / `Codec::reduce_add` — fp16 runs `fp16::encode_*`,
+//!   q8 the fused int8 kernels): quantize-and-store / quantize-and-
+//!   accumulate in one cache-blocked pass, no scratch, bit-identical to
+//!   a two-pass encode/decode formulation. Plan byte accounting is the
+//!   codec's EXACT wire cost (q8 scale headers included).
 //! * **Folded mean-scale (fp32).** The trailing ÷p pass over all p·n
 //!   elements is folded to the reduced chunks *before* the gather phase:
 //!   each element is scaled exactly once by the same f32 multiply and the
@@ -29,7 +31,6 @@
 //!   reference at every thread count (grid-tested below).
 
 use super::{chunks, Algorithm, Precision, WireStats};
-use crate::util::fp16;
 use std::sync::Barrier;
 use std::time::Instant;
 
@@ -39,7 +40,7 @@ enum OpKind {
     Copy,
     /// dst[lo..hi] += wire(src[lo..hi])
     Add,
-    /// fp16 round-trip dst[lo..hi] in place (own-data quantize)
+    /// wire-codec round-trip dst[lo..hi] in place (own-data quantize)
     Quantize,
     /// dst[lo..hi] *= 1/p (the allreduce-mean scale)
     Scale,
@@ -81,7 +82,6 @@ struct Plan {
 
 struct PlanBuilder {
     precision: Precision,
-    bpe: usize,
     rounds: Vec<Round>,
     stats: WireStats,
     sent: Vec<usize>,
@@ -92,7 +92,6 @@ impl PlanBuilder {
     fn new(precision: Precision, p: usize) -> PlanBuilder {
         PlanBuilder {
             precision,
-            bpe: precision.bytes_per_elem(),
             rounds: Vec::new(),
             stats: WireStats::default(),
             sent: vec![0; p],
@@ -100,7 +99,9 @@ impl PlanBuilder {
         }
     }
 
-    /// Account for a transfer and return the op if it moves data.
+    /// Account for a transfer and return the op if it moves data. Bytes
+    /// are the codec's EXACT wire cost (q8 scale headers included), with
+    /// the fp32-equivalent booked alongside for the compression ratio.
     /// `count_empty` mirrors the reference's message accounting: the ring
     /// skips empty chunks entirely, while naive/HD/hierarchical send (and
     /// count) zero-length messages.
@@ -117,8 +118,9 @@ impl PlanBuilder {
         debug_assert!(matches!(kind, OpKind::Copy | OpKind::Add));
         debug_assert_ne!(src, dst);
         if lo < hi || count_empty {
-            let bytes = (hi - lo) * self.bpe;
+            let bytes = self.precision.wire_bytes(hi - lo);
             self.stats.total_bytes += bytes;
+            self.stats.uncompressed_bytes += (hi - lo) * 4;
             self.stats.messages += 1;
             self.sent[src] += bytes;
             self.recv[dst] += bytes;
@@ -129,9 +131,9 @@ impl PlanBuilder {
         (lo < hi).then_some(Op { kind, src, dst, lo, hi })
     }
 
-    /// Own-data fp16 quantize (no wire traffic; no-op plan entry on fp32).
+    /// Own-data wire quantize (no wire traffic; no-op plan entry on fp32).
     fn quantize(&self, rank: usize, lo: usize, hi: usize) -> Option<Op> {
-        (self.precision == Precision::F16 && lo < hi)
+        (self.precision.quantizes() && lo < hi)
             .then_some(Op { kind: OpKind::Quantize, src: rank, dst: rank, lo, hi })
     }
 
@@ -171,7 +173,8 @@ fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan
     let mut pb = PlanBuilder::new(precision, p);
     let inv = 1.0 / p as f32;
     // fp32 folds the mean-scale into the gather phase (bit-neutral, see
-    // module docs); fp16 must keep quantize → gather → scale order.
+    // module docs); quantizing codecs must keep quantize → gather → scale
+    // order (quantize∘scale ≠ scale∘quantize bitwise).
     let fold = (precision == Precision::F32).then_some(inv);
     match algo {
         Algorithm::Naive => build_naive(&mut pb, p, n, fold),
@@ -184,7 +187,7 @@ fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan
             build_hier(&mut pb, p, n, ranks_per_node, fold)
         }
     }
-    if precision == Precision::F16 {
+    if precision.quantizes() {
         // Reference epilogue: every rank scales its whole buffer by 1/p.
         let ops = (0..p).map(|r| pb.scale(r, 0, n)).collect();
         pb.push_parallel(ops);
@@ -230,7 +233,7 @@ fn build_ring(pb: &mut PlanBuilder, ids: &[usize], n: usize, internode: bool, fo
         pb.push_parallel(ops);
     }
     // Position i now owns fully-reduced chunk (i+1)%p.
-    if pb.precision == Precision::F16 {
+    if pb.precision.quantizes() {
         let ops = (0..p)
             .map(|i| {
                 let (lo, hi) = spans[(i + 1) % p];
@@ -294,7 +297,7 @@ fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
         d /= 2;
     }
 
-    if pb.precision == Precision::F16 {
+    if pb.precision.quantizes() {
         let ops = (0..pow2).map(|i| pb.quantize(i, spans[i].0, spans[i].1)).collect();
         pb.push_parallel(ops);
     }
@@ -366,8 +369,8 @@ fn build_hier(pb: &mut PlanBuilder, p: usize, n: usize, ranks_per_node: usize, f
         pb.push_parallel(vec![s]);
     }
 
-    // Phase 3: leaders quantize (fp16) then broadcast to their members.
-    if pb.precision == Precision::F16 {
+    // Phase 3: leaders quantize (lossy wires) then broadcast to members.
+    if pb.precision.quantizes() {
         let ops = (0..nodes).map(|node| pb.quantize(node * rpn, 0, n)).collect();
         pb.push_parallel(ops);
     }
@@ -489,25 +492,15 @@ unsafe fn exec_op(shared: &SharedRanks<'_>, op: &Op, precision: Precision, inv: 
         OpKind::Copy => {
             let src = shared.slice(op.src, op.lo, op.hi);
             let dst = shared.slice_mut(op.dst, op.lo, op.hi);
-            match precision {
-                Precision::F32 => dst.copy_from_slice(src),
-                Precision::F16 => fp16::encode_copy(src, dst),
-            }
+            precision.copy(src, dst);
         }
         OpKind::Add => {
             let src = shared.slice(op.src, op.lo, op.hi);
             let dst = shared.slice_mut(op.dst, op.lo, op.hi);
-            match precision {
-                Precision::F32 => {
-                    for (o, s) in dst.iter_mut().zip(src) {
-                        *o += s;
-                    }
-                }
-                Precision::F16 => fp16::encode_add(src, dst),
-            }
+            precision.reduce_add(src, dst);
         }
         OpKind::Quantize => {
-            fp16::quantize_inplace(shared.slice_mut(op.dst, op.lo, op.hi));
+            precision.quantize_own(shared.slice_mut(op.dst, op.lo, op.hi));
         }
         OpKind::Scale => {
             for v in shared.slice_mut(op.dst, op.lo, op.hi) {
@@ -679,15 +672,17 @@ mod tests {
         assert_eq!(a.max_bytes_per_rank, b.max_bytes_per_rank, "{what}: max_bytes_per_rank");
         assert_eq!(a.messages, b.messages, "{what}: messages");
         assert_eq!(a.internode_bytes, b.internode_bytes, "{what}: internode_bytes");
+        assert_eq!(a.uncompressed_bytes, b.uncompressed_bytes, "{what}: uncompressed_bytes");
     }
 
     /// The load-bearing test: for every (algorithm, precision, p, n,
-    /// thread count) in the grid, the engine's result is BIT-identical to
-    /// the single-threaded reference, and the wire accounting matches.
+    /// thread count) in the grid — q8 included — the engine's result is
+    /// BIT-identical to the single-threaded reference, and the wire
+    /// accounting matches.
     #[test]
     fn engine_matches_reference_bitwise() {
         for algo in algos() {
-            for precision in [Precision::F32, Precision::F16] {
+            for precision in [Precision::F32, Precision::F16, Precision::Q8] {
                 for p in [2usize, 3, 4, 5, 8, 16] {
                     for n in [0usize, 1, 5, 257, 2051] {
                         let orig = make_bufs(p, n, 0x5EED + p as u64 * 1000 + n as u64);
@@ -718,7 +713,7 @@ mod tests {
     #[test]
     fn plans_are_race_free_across_grid() {
         for algo in algos() {
-            for precision in [Precision::F32, Precision::F16] {
+            for precision in [Precision::F32, Precision::F16, Precision::Q8] {
                 for p in [2usize, 3, 5, 8, 13, 16] {
                     for n in [0usize, 1, 7, 1000] {
                         let plan = build_plan(algo, precision, p, n);

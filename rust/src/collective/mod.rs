@@ -19,36 +19,39 @@
 //!
 //! * [`allreduce_mean`] — the single-threaded reference. It IS the
 //!   numerical contract: simple, clone-free, message-by-message, with the
-//!   fp16 wire fused into one-pass kernels ([`fp16::encode_add`] /
-//!   [`fp16::encode_copy`], bit-identical to the old two-pass scratch
-//!   formulation).
+//!   quantizing wires fused into one-pass kernels (`fp16::encode_add` /
+//!   `codec::q8_encode_add` and friends, bit-identical to a two-pass
+//!   scratch formulation).
 //! * [`engine::CommEngine`] — the performance path: a persistent engine
 //!   with precomputed chunk plans, zero steady-state heap traffic, scoped
 //!   worker threads, and the mean-scale folded into the gather phase where
 //!   that is bit-neutral. Its results are REQUIRED (and tested) to be
 //!   bit-identical to the reference for every (algorithm, precision).
+//!
+//! # Wire codecs
+//!
+//! The wire format is selected by [`Precision`] (an alias of
+//! [`crate::util::codec::Codec`]): `F32` passthrough, the paper's `F16`,
+//! or `Q8` — int8 payload + one f32 absmax scale per 256-element chunk in
+//! the chunk header. Every message is billed at the codec's canonical
+//! framing (`Codec::wire_bytes`, q8 scale headers included; see its docs
+//! for the one ≲0.1% caveat on HD's merged-span relays) and also books
+//! its fp32-equivalent size in [`WireStats::uncompressed_bytes`], so
+//! [`WireStats::compression_ratio`] reports the real on-wire saving.
+//! Quantizing codecs follow quantize → gather → scale order; q8's copy
+//! hops forward the encoded payload exactly (see `util::codec` for why
+//! re-encoding on relay hops is both wrong and unfaithful).
 
-use crate::util::fp16;
 use std::time::Instant;
 
 mod engine;
 pub use engine::CommEngine;
 
-/// Wire precision for gradient exchange (paper: fp16 wire, fp32 master).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Precision {
-    F32,
-    F16,
-}
-
-impl Precision {
-    pub fn bytes_per_elem(self) -> usize {
-        match self {
-            Precision::F32 => 4,
-            Precision::F16 => 2,
-        }
-    }
-}
+/// Wire precision for gradient exchange (paper: fp16 wire, fp32 master;
+/// q8 extends the same lever). Alias of the codec-layer selector so
+/// existing `Precision::F32`/`F16` call sites pick up `Q8` unchanged.
+pub use crate::util::codec::Codec as Precision;
+pub use crate::util::codec::WireCodec;
 
 /// Which collective algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +98,10 @@ pub struct WireStats {
     /// Bytes that crossed node boundaries (Hierarchical only; otherwise
     /// equal to total_bytes with 1 rank/node assumed).
     pub internode_bytes: usize,
+    /// What the same messages would have cost uncompressed (elems × 4
+    /// bytes) — the denominator-free side of the compression accounting,
+    /// booked per message alongside `total_bytes`.
+    pub uncompressed_bytes: usize,
     /// Wall-clock seconds this allreduce spent executing (0 when merged
     /// stats come from accounting-only paths).
     pub elapsed_s: f64,
@@ -111,6 +118,17 @@ impl WireStats {
         }
     }
 
+    /// On-wire compression ratio vs an fp32 exchange of the same
+    /// elements: exactly 1.0 for f32, 2.0 for f16, ≈3.94 for q8 (payload
+    /// + scale headers). 1.0 when nothing was sent.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.total_bytes > 0 {
+            self.uncompressed_bytes as f64 / self.total_bytes as f64
+        } else {
+            1.0
+        }
+    }
+
     /// Accumulate another exchange's stats (bucketed training sums one
     /// WireStats per bucket). `max_bytes_per_rank` sums too: for a
     /// sequence of exchanges it upper-bounds the busiest rank's total, and
@@ -124,15 +142,17 @@ impl WireStats {
         self.max_bytes_per_rank += o.max_bytes_per_rank;
         self.messages += o.messages;
         self.internode_bytes += o.internode_bytes;
+        self.uncompressed_bytes += o.uncompressed_bytes;
         self.elapsed_s += o.elapsed_s;
     }
 }
 
 /// A "wire": moves a chunk from src to dst, applying the configured
-/// precision. In fp16 mode both transfer kinds run as single-pass fused
-/// kernels (quantize-and-store / quantize-and-accumulate) — no scratch
-/// buffer, one traversal — with per-element math identical to the old
-/// encode-to-scratch + decode pass.
+/// codec. Quantizing transfers run as single-pass fused kernels
+/// (quantize-and-store / quantize-and-accumulate) — no scratch buffer,
+/// one traversal. q8 copies forward the encoded payload exactly (the
+/// sources are always `quantize_own`'d by the algorithms before any
+/// gather phase — see `util::codec`).
 struct Wire {
     precision: Precision,
     stats: WireStats,
@@ -151,40 +171,30 @@ impl Wire {
     /// `to`), overwriting, counting bytes.
     fn send(&mut self, src: &[f32], out: &mut [f32], internode: bool, from: usize, to: usize) {
         assert_eq!(src.len(), out.len());
-        match self.precision {
-            Precision::F32 => out.copy_from_slice(src),
-            Precision::F16 => fp16::encode_copy(src, out),
-        }
+        self.precision.copy(src, out);
         self.count(src.len(), internode, from, to);
     }
 
     /// Transfer `src` and add into `out` (the reduce half of the exchange).
     fn send_add(&mut self, src: &[f32], out: &mut [f32], internode: bool, from: usize, to: usize) {
         assert_eq!(src.len(), out.len());
-        match self.precision {
-            Precision::F32 => {
-                for (o, s) in out.iter_mut().zip(src) {
-                    *o += s;
-                }
-            }
-            Precision::F16 => fp16::encode_add(src, out),
-        }
+        self.precision.reduce_add(src, out);
         self.count(src.len(), internode, from, to);
     }
 
     /// Quantize a rank's OWN data in place (no wire traffic): before a
     /// gather phase every rank must hold the same bits it is about to
     /// send, or the owner's copy would silently stay fp32 and ranks would
-    /// diverge — fatal for data-parallel weight sync.
+    /// diverge — fatal for data-parallel weight sync. (For q8 this is
+    /// also the ONE encode of the gather path: copies forward it.)
     fn quantize_own(&mut self, buf: &mut [f32]) {
-        if self.precision == Precision::F16 {
-            fp16::quantize_inplace(buf);
-        }
+        self.precision.quantize_own(buf);
     }
 
     fn count(&mut self, elems: usize, internode: bool, from: usize, to: usize) {
-        let bytes = elems * self.precision.bytes_per_elem();
+        let bytes = self.precision.wire_bytes(elems);
         self.stats.total_bytes += bytes;
+        self.stats.uncompressed_bytes += elems * 4;
         self.stats.messages += 1;
         self.sent[from] += bytes;
         self.recv[to] += bytes;
@@ -664,6 +674,7 @@ mod tests {
             max_bytes_per_rank: 40,
             messages: 3,
             internode_bytes: 60,
+            uncompressed_bytes: 200,
             elapsed_s: 0.5,
         };
         let b = WireStats {
@@ -672,6 +683,7 @@ mod tests {
             max_bytes_per_rank: 4,
             messages: 1,
             internode_bytes: 0,
+            uncompressed_bytes: 20,
             elapsed_s: 0.25,
         };
         a.merge(&b);
@@ -680,6 +692,69 @@ mod tests {
         assert_eq!(a.max_bytes_per_rank, 44);
         assert_eq!(a.messages, 4);
         assert_eq!(a.internode_bytes, 60);
+        assert_eq!(a.uncompressed_bytes, 220);
         assert!((a.elapsed_s - 0.75).abs() < 1e-12);
+        assert!((a.compression_ratio() - 2.0).abs() < 1e-12);
+        assert_eq!(WireStats::default().compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn q8_wire_quantizes_but_all_ranks_agree() {
+        // The q8 rank-agreement argument (quantize own data once, copies
+        // forward the encoded payload exactly) must hold on every
+        // algorithm, including HD's merged-span gather and hierarchical's
+        // full-buffer leader re-quantize.
+        for algo in [
+            Algorithm::Naive,
+            Algorithm::Ring,
+            Algorithm::HalvingDoubling,
+            Algorithm::Hierarchical { ranks_per_node: 4 },
+            Algorithm::Hierarchical { ranks_per_node: 3 },
+        ] {
+            let orig = make_bufs(8, 2048, 77);
+            let want = expected_mean(&orig);
+            let mut bufs = orig.clone();
+            allreduce_mean(&mut bufs, algo, Precision::Q8);
+            for b in &bufs[1..] {
+                assert_eq!(&bufs[0], b, "{}: ranks diverged under q8", algo.name());
+            }
+            let mut max_err = 0.0f32;
+            for (&got, &w) in bufs[0].iter().zip(&want) {
+                max_err = max_err.max((got - w).abs());
+            }
+            assert!(max_err > 0.0, "{}: q8 should not be bit-exact", algo.name());
+            // Per-hop absmax/254 errors across ≤ 2(p-1) touches stay well
+            // under 0.05 for unit-scale data.
+            assert!(max_err < 0.05, "{}: q8 error too large: {max_err}", algo.name());
+        }
+    }
+
+    #[test]
+    fn q8_wire_bytes_beat_f16_by_at_least_1p9x() {
+        // The acceptance bar: exact WireStats accounting shows q8 moving
+        // ≥ 1.9× fewer bytes than f16 for the same exchange, and the
+        // per-codec compression ratios are exact.
+        for algo in [Algorithm::Ring, Algorithm::Hierarchical { ranks_per_node: 4 }] {
+            let n = 64 * 1024;
+            let mut a = make_bufs(8, n, 5);
+            let f16 = allreduce_mean(&mut a, algo, Precision::F16);
+            let mut b = make_bufs(8, n, 5);
+            let q8 = allreduce_mean(&mut b, algo, Precision::Q8);
+            assert_eq!(
+                f16.uncompressed_bytes, q8.uncompressed_bytes,
+                "{}: same elements must be booked",
+                algo.name()
+            );
+            assert_eq!(f16.messages, q8.messages, "{}", algo.name());
+            let ratio = f16.total_bytes as f64 / q8.total_bytes as f64;
+            assert!(ratio >= 1.9, "{}: q8 only {ratio:.3}x smaller than f16", algo.name());
+            assert!((f16.compression_ratio() - 2.0).abs() < 1e-12, "{}", algo.name());
+            assert!(q8.compression_ratio() > 3.8, "{}: {}", algo.name(), q8.compression_ratio());
+        }
+        // f32 is the 1.0 baseline.
+        let mut c = make_bufs(4, 1000, 6);
+        let f32_stats = allreduce_mean(&mut c, Algorithm::Ring, Precision::F32);
+        assert!((f32_stats.compression_ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(f32_stats.total_bytes, f32_stats.uncompressed_bytes);
     }
 }

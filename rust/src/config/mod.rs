@@ -53,8 +53,21 @@ pub struct RunConfig {
     /// "ring" | "hd" | "hier" | "naive"
     pub allreduce: String,
     pub ranks_per_node: usize,
-    /// Wire precision: "f16" (paper) or "f32".
+    /// Wire codec: "f16" (paper), "f32", or "q8" (int8 payload + per-
+    /// chunk absmax scale; pairs with `error_feedback`).
     pub wire: String,
+    /// Error feedback for the q8 wire: each worker carries the
+    /// quantization residual of its gradient contribution to the next
+    /// step and re-injects it before quantizing (EF-SGD), so the
+    /// accumulated WORKER-SIDE quantization telescopes to within ONE
+    /// step's error per element. The allreduce's own hop quantization
+    /// (partial-sum re-encodes, reduced-span quantize_own) is NOT
+    /// compensated — it is the same per-step wire error an EF-off run
+    /// pays, just without the worker-side drift on top. Ignored on
+    /// lossless/f16 wires (fp16's error is small enough that the paper
+    /// ships it uncompensated). `--error-feedback on|off`; on by
+    /// default.
+    pub error_feedback: bool,
     /// Bucket target size in bytes (paper III-C-1: "several megabytes" at
     /// ResNet-50 scale; default scales down with our smaller models).
     pub bucket_bytes: usize,
@@ -131,6 +144,7 @@ impl Default for RunConfig {
             allreduce: "hier".into(),
             ranks_per_node: 4,
             wire: "f16".into(),
+            error_feedback: true,
             bucket_bytes: 16 * 1024,
             chunk_bytes: 16 * 1024,
             chunk_auto: false,
@@ -165,8 +179,15 @@ impl RunConfig {
         Ok(match self.wire.as_str() {
             "f16" => Precision::F16,
             "f32" => Precision::F32,
-            other => anyhow::bail!("unknown wire precision '{other}'"),
+            "q8" | "int8" => Precision::Q8,
+            other => anyhow::bail!("unknown wire precision '{other}' (f32 | f16 | q8)"),
         })
+    }
+
+    /// Whether the run carries error-feedback residuals: the q8 wire with
+    /// the ablation switch on.
+    pub fn error_feedback_active(&self) -> Result<bool> {
+        Ok(self.error_feedback && self.precision()? == Precision::Q8)
     }
 
     pub fn fence_mode(&self) -> Result<FenceMode> {
@@ -215,6 +236,13 @@ impl RunConfig {
         c.allreduce = args.get_or("allreduce", &c.allreduce).to_string();
         c.ranks_per_node = args.get_usize("ranks-per-node", c.ranks_per_node)?;
         c.wire = args.get_or("wire", &c.wire).to_string();
+        if let Some(v) = args.get("error-feedback") {
+            c.error_feedback = match v {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                other => anyhow::bail!("--error-feedback expects on|off, got '{other}'"),
+            };
+        }
         c.bucket_bytes = args.get_usize("bucket-bytes", c.bucket_bytes)?;
         match args.get("chunk-bytes") {
             Some("auto") => c.chunk_auto = true,
@@ -266,6 +294,7 @@ impl RunConfig {
             allreduce: get_str("allreduce", &d.allreduce),
             ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
             wire: get_str("wire", &d.wire),
+            error_feedback: get_bool("error_feedback", d.error_feedback),
             bucket_bytes: get_usize("bucket_bytes", d.bucket_bytes),
             // `"chunk_bytes": "auto"` selects α–β-derived chunking.
             chunk_bytes: get_usize("chunk_bytes", d.chunk_bytes),
@@ -375,6 +404,31 @@ mod tests {
         assert_eq!(c.comm_threads, 4);
         assert_eq!(c.chunk_bytes, 0, "chunk_bytes 0 (chunking off) must round-trip");
         assert_eq!(c.algorithm().unwrap(), Algorithm::Ring);
+    }
+
+    #[test]
+    fn wire_codec_and_error_feedback_round_trip() {
+        let d = RunConfig::default();
+        assert_eq!(d.precision().unwrap(), Precision::F16);
+        assert!(d.error_feedback, "EF defaults on");
+        assert!(!d.error_feedback_active().unwrap(), "EF is inert on the f16 wire");
+        let c = RunConfig::from_args(&args(&["train", "--wire", "q8"])).unwrap();
+        assert_eq!(c.precision().unwrap(), Precision::Q8);
+        assert!(c.error_feedback_active().unwrap(), "q8 + default flag = EF on");
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--wire",
+            "q8",
+            "--error-feedback",
+            "off",
+        ]))
+        .unwrap();
+        assert!(!c.error_feedback);
+        assert!(!c.error_feedback_active().unwrap());
+        assert!(RunConfig::from_args(&args(&["train", "--error-feedback", "maybe"])).is_err());
+        let c = RunConfig::from_json(r#"{"wire": "q8", "error_feedback": false}"#).unwrap();
+        assert_eq!(c.precision().unwrap(), Precision::Q8);
+        assert!(!c.error_feedback_active().unwrap());
     }
 
     #[test]

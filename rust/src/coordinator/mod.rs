@@ -50,6 +50,7 @@ use crate::mlperf::{tags, MlperfLogger};
 use crate::overlap::MeasuredPipeline;
 use crate::runtime::{Engine, GradVariant, UpdateRule};
 use crate::schedule::LrSchedule;
+use crate::util::codec;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::sync::Arc;
@@ -109,6 +110,20 @@ pub struct TrainReport {
     /// were actually split appear. Records the chosen plan so an `auto`
     /// run's report states what it trained with.
     pub chunk_plan: Vec<(String, usize)>,
+    /// Wire codec the run exchanged gradients with ("f32" | "f16" |
+    /// "q8") — BENCH artifacts must be self-describing about the wire
+    /// precision they were produced under.
+    pub wire_codec: String,
+    /// Exact on-wire compression ratio vs an fp32 exchange of the same
+    /// elements (`WireStats::compression_ratio`): 1.0 / 2.0 / ≈3.94.
+    pub compression_ratio: f64,
+    /// Whether error-feedback residuals were active (q8 wire with
+    /// `--error-feedback on`).
+    pub error_feedback: bool,
+    /// Cumulative quantization-error norm: √(Σ residual²) over every
+    /// error-feedback application of the run (0 when EF is off). The
+    /// magnitude the EF machinery carried forward instead of dropping.
+    pub quant_error_norm: f64,
     pub final_train_loss: f32,
     /// Accuracy of the last evaluation, `None` when no eval ever ran — a
     /// run without one must not masquerade as 0% accuracy.
@@ -156,6 +171,10 @@ impl TrainReport {
                         .collect(),
                 ),
             ),
+            ("wire_codec", Json::Str(self.wire_codec.clone())),
+            ("compression_ratio", Json::Num(self.compression_ratio)),
+            ("error_feedback", Json::Bool(self.error_feedback)),
+            ("quant_error_norm", Json::Num(self.quant_error_norm)),
             ("final_train_loss", Json::Num(self.final_train_loss as f64)),
             (
                 "final_val_acc",
@@ -228,6 +247,21 @@ pub struct Trainer {
     params: Vec<f32>,
     momentum: Vec<f32>,
     bn_state: Vec<f32>,
+
+    /// Error feedback active this run (q8 wire ∧ `cfg.error_feedback`).
+    ef: bool,
+    /// Per-worker quantization residual buffers (workers × Np), carried
+    /// across steps. NOT generation-tagged, on purpose: residual `w` is
+    /// only ever touched by grad worker `w` (pipelined executor, at
+    /// publish time — and a worker processes its step generations
+    /// strictly in order on one thread) or by the leader between steps
+    /// (sequential executor), so even under depth-2 double buffering the
+    /// step-s update happens-before the step-s+1 read on the same
+    /// thread. Empty when `ef` is off.
+    ef_residuals: Vec<Vec<f32>>,
+    /// Σ residual² over every EF application (the cumulative
+    /// quantization-error accounting `TrainReport` publishes).
+    ef_err_sq: f64,
 
     // scratch reused across steps (no hot-loop allocation). The primary
     // buffers serve the sequential executor and EVEN step generations of
@@ -331,6 +365,7 @@ impl Trainer {
         let bucket_spans = Arc::new(plan.spans_with_padding());
         let pipeline = cfg.overlap && engine.supports_pipeline();
         let fence_mode = cfg.fence_mode()?;
+        let ef = cfg.error_feedback_active()?;
         Ok(Trainer {
             cfg,
             engine,
@@ -349,6 +384,13 @@ impl Trainer {
             params,
             momentum,
             bn_state,
+            ef,
+            ef_residuals: if ef {
+                (0..workers).map(|_| vec![0.0; np]).collect()
+            } else {
+                Vec::new()
+            },
+            ef_err_sq: 0.0,
             worker_grads: (0..workers).map(|_| vec![0.0; np]).collect(),
             // Second generation slot: allocated lazily by `ensure_pool`
             // the first time a depth-2 pipelined step runs.
@@ -448,6 +490,18 @@ impl Trainer {
     pub fn wire_totals(&mut self) -> &WireStats {
         self.flush().expect("flushing in-flight step");
         &self.wire_totals
+    }
+
+    /// Whether error-feedback residuals are active this run.
+    pub fn error_feedback(&self) -> bool {
+        self.ef
+    }
+
+    /// Cumulative quantization-error norm √(Σ residual²) over every
+    /// error-feedback application so far (0 when EF is off).
+    pub fn quant_error_norm(&mut self) -> f64 {
+        self.flush().expect("flushing in-flight step");
+        self.ef_err_sq.sqrt()
     }
 
     pub fn step_index(&self) -> usize {
@@ -552,6 +606,20 @@ impl Trainer {
         // algorithm, and buckets are disjoint, so the result is
         // bit-identical at every lane/thread count.
         let t_comm = Timer::start();
+        // Error feedback (q8 wire): per worker, per bucket span —
+        // re-inject last step's quantization residual, quantize the
+        // corrected gradient, carry the new residual. Spans and chunk
+        // boundaries are identical to the pipelined executor's
+        // publish-time application, so the two executors stay
+        // bit-identical (grid-tested with the wire-codec axis).
+        if self.ef {
+            let spans = self.bucket_spans.clone();
+            for (g, r) in self.worker_grads.iter_mut().zip(self.ef_residuals.iter_mut()) {
+                for &(lo, hi) in spans.iter() {
+                    self.ef_err_sq += codec::q8_ef_apply(&mut g[lo..hi], &mut r[lo..hi]);
+                }
+            }
+        }
         let nb = self.plan.buckets.len();
         let plan = &self.plan;
         let mut bucket_views: Vec<Vec<&mut [f32]>> =
@@ -743,6 +811,14 @@ impl Trainer {
         if let Some(fence) = &self.fence {
             fence.reset(ckpt.step as u64);
         }
+        // Error-feedback residuals are NOT checkpointed (they are a
+        // per-worker compression artifact, not model state): a resumed
+        // q8 run restarts with zero residuals, so its trajectory may
+        // drift from the uninterrupted run by up to one step's
+        // quantization error — the same bound EF guarantees overall.
+        for r in self.ef_residuals.iter_mut() {
+            r.fill(0.0);
+        }
         // Fast-forward the data shards so resumed runs draw the batches the
         // uninterrupted run would have drawn. Each replayed step consumes
         // THAT step's accumulation count — under an active `batch_ramp`
@@ -896,6 +972,10 @@ impl Trainer {
             pipeline_depth: self.depth(),
             chunk_bytes: self.chunk_bytes_used,
             chunk_plan,
+            wire_codec: self.precision.name().to_string(),
+            compression_ratio: self.wire_totals.compression_ratio(),
+            error_feedback: self.ef,
+            quant_error_norm: self.ef_err_sq.sqrt(),
             final_train_loss: last_train.0,
             final_val_acc: evals.last().map(|e| e.val_acc),
             loss_history,

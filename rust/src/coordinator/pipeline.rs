@@ -163,6 +163,14 @@ impl Trainer {
         };
         let grad_bufs: Vec<RawBuf> = grad_vecs.iter_mut().map(|g| RawBuf::new(g)).collect();
         let state_bufs: Vec<RawBuf> = state_vecs.iter_mut().map(|s| RawBuf::new(s)).collect();
+        // Error-feedback residuals: one buffer per worker, shared with
+        // that worker only (not generation-tagged — see the field docs:
+        // a worker's generations are serialized on its own thread).
+        let ef_bufs: Vec<Option<RawBuf>> = if self.ef {
+            self.ef_residuals.iter_mut().map(|r| Some(RawBuf::new(r))).collect()
+        } else {
+            vec![None; workers]
+        };
 
         // ---- dispatch: one job per grad worker, one per comm lane ------
         let dispatch_abs_s = run_t0.elapsed().as_secs_f64();
@@ -182,6 +190,7 @@ impl Trainer {
                     variant,
                     chunk_elems: self.plan.chunk_elems,
                     spans: self.bucket_spans.clone(),
+                    ef_residual: ef_bufs[w],
                     ready: ready.clone(),
                     fence: fence.clone(),
                     fence_mode: self.fence_mode,
@@ -228,6 +237,7 @@ impl Trainer {
                     first_err = Some(anyhow::anyhow!("worker {}: {e}", msg.worker));
                 }
             }
+            self.ef_err_sq += msg.ef_err_sq;
             worker_results[msg.worker] = Some((msg.loss, msg.correct));
         }
 

@@ -358,6 +358,13 @@ pub(crate) struct WorkerJob {
     /// Engine emission granularity (`BucketPlan::chunk_elems`).
     pub(crate) chunk_elems: usize,
     pub(crate) spans: Arc<Vec<(usize, usize)>>,
+    /// This worker's error-feedback residual buffer (q8 wire with EF on;
+    /// None otherwise). Applied per bucket span at publish time, while
+    /// the span is still exclusively this worker's. The buffer is only
+    /// ever touched by THIS worker's thread — jobs are processed
+    /// serially per worker, so step s's residual write happens-before
+    /// step s+1's read even under depth-2 double buffering.
+    pub(crate) ef_residual: Option<RawBuf>,
     pub(crate) ready: Arc<GenLedger>,
     pub(crate) fence: Arc<ParamFence>,
     pub(crate) fence_mode: FenceMode,
@@ -378,6 +385,9 @@ pub(crate) struct WorkerMsg {
     pub(crate) worker: usize,
     pub(crate) loss: f32,
     pub(crate) correct: f32,
+    /// Σ residual² this worker's error-feedback applications wrote this
+    /// generation (0 when EF is off or the job failed).
+    pub(crate) ef_err_sq: f64,
     pub(crate) error: Option<String>,
 }
 
@@ -513,14 +523,20 @@ fn worker_thread(
             job.ready.publish(finish_gen, i);
         }
         let msg = match outcome {
-            Ok(Ok((loss, correct))) => {
-                WorkerMsg { gen: job.gen, worker: job.worker, loss, correct, error: None }
-            }
+            Ok(Ok((loss, correct, ef_err_sq))) => WorkerMsg {
+                gen: job.gen,
+                worker: job.worker,
+                loss,
+                correct,
+                ef_err_sq,
+                error: None,
+            },
             Ok(Err(e)) => WorkerMsg {
                 gen: job.gen,
                 worker: job.worker,
                 loss: 0.0,
                 correct: 0.0,
+                ef_err_sq: 0.0,
                 error: Some(e.to_string()),
             },
             Err(_) => WorkerMsg {
@@ -528,6 +544,7 @@ fn worker_thread(
                 worker: job.worker,
                 loss: 0.0,
                 correct: 0.0,
+                ef_err_sq: 0.0,
                 error: Some("grad worker panicked".to_string()),
             },
         };
@@ -550,6 +567,13 @@ fn worker_thread(
 /// hides under the previous step's comm/update tail. Views of
 /// `params`/`bn_state` are derived only after the fence admits this
 /// generation.
+///
+/// Error feedback (q8): each bucket's residual-corrected quantization
+/// runs at PUBLISH time, inside the emit callback — the span is complete
+/// (frontier passed it) and still exclusively this worker's, and the
+/// engine's streaming contract says it will never re-read the span, so
+/// mutating it there is race-free. Returns Σ residual² alongside the
+/// loss/accuracy pair.
 fn run_grad_job(
     engine: &Engine,
     data: &Synthetic,
@@ -557,7 +581,7 @@ fn run_grad_job(
     scratch: &mut Vec<f32>,
     job: &WorkerJob,
     cursor: &mut FrontierCursor,
-) -> Result<(f32, f32)> {
+) -> Result<(f32, f32, f64)> {
     let n_micro = job.idxs.len();
     anyhow::ensure!(n_micro >= 1, "worker job with no micro-batches");
     // ---- pre-fence window (overlaps the previous step's tail) ----------
@@ -595,6 +619,7 @@ fn run_grad_job(
 
     let mut loss_sum = 0.0f32;
     let mut correct_sum = 0.0f32;
+    let mut ef_err_sq = 0.0f64;
     for (k, idxs) in job.idxs.iter().enumerate() {
         if k > 0 {
             make_batch(data, Split::Train, idxs, batch);
@@ -636,6 +661,9 @@ fn run_grad_job(
             let grads_buf = job.grads;
             let accum_inv = job.accum_inv;
             let ready = &job.ready;
+            let ef_residual = job.ef_residual;
+            let spans = &job.spans;
+            let ef_err = &mut ef_err_sq;
             let (loss, correct) = {
                 // SAFETY: see the states note above.
                 let states = unsafe { job.states.slice_mut(0, job.states.len) };
@@ -669,6 +697,20 @@ fn run_grad_job(
                         // mis-armed cursor trips the ledger's generation
                         // assert instead of corrupting a neighbor step.
                         for i in cursor.advance(lo) {
+                            // Error feedback: the bucket's span is now
+                            // complete and still pre-publication — the
+                            // last moment it is exclusively ours.
+                            if let Some(res) = ef_residual {
+                                let (blo, bhi) = spans[i];
+                                // SAFETY: span unpublished (exclusive to
+                                // this worker; the engine never re-reads
+                                // an emitted span), and the residual
+                                // buffer is touched only by this
+                                // worker's thread, generations in order.
+                                let g = unsafe { grads_buf.slice_mut(blo, bhi) };
+                                let r = unsafe { res.slice_mut(blo, bhi) };
+                                *ef_err += crate::util::codec::q8_ef_apply(g, r);
+                            }
                             ready.publish(cursor.gen(), i);
                         }
                     },
@@ -678,7 +720,7 @@ fn run_grad_job(
             correct_sum += correct;
         }
     }
-    Ok((loss_sum, correct_sum))
+    Ok((loss_sum, correct_sum, ef_err_sq))
 }
 
 fn lane_thread(

@@ -7,10 +7,11 @@
 //! * **L3 (this crate)** — the distributed-training coordinator: worker
 //!   pool, gradient bucketing, backward/allreduce overlap, real numeric
 //!   collectives (with a zero-copy threaded `collective::CommEngine` on
-//!   the hot path and fused fp16 wire kernels), mixed-precision
-//!   communication, LR scheduling, parallel same-seed init, MLPerf-style
-//!   logging, and an α–β network model that extrapolates measured step
-//!   costs to the paper's 2,048-GPU scale.
+//!   the hot path and fused wire codecs — fp16 and int8-with-per-chunk-
+//!   scale in `util::codec`, plus error-feedback residuals for the q8
+//!   wire), mixed-precision communication, LR scheduling, parallel
+//!   same-seed init, MLPerf-style logging, and an α–β network model that
+//!   extrapolates measured step costs to the paper's 2,048-GPU scale.
 //! * **L2 (python/compile/model.py)** — ResNet fwd/bwd + LARS update
 //!   graphs in JAX, AOT-lowered to `artifacts/*.hlo.txt` once at build
 //!   time.

@@ -8,7 +8,8 @@
 //!   smoke                     one grad+update+eval round trip (CI check)
 //!
 //! Common options: --artifacts DIR, --workers N, --steps N, --lr X,
-//! --allreduce ring|hd|hier|naive, --wire f16|f32, --bucket-bytes N,
+//! --allreduce ring|hd|hier|naive, --wire f16|f32|q8,
+//! --error-feedback on|off (q8 residual carrying), --bucket-bytes N,
 //! --chunk-bytes N|auto (0 = whole-layer buckets; auto = α–β-derived,
 //! see --link-alpha-us/--link-beta-gbps), --comm-threads N,
 //! --pipeline-depth 1|2 (2 = cross-step double buffering, the default),
@@ -26,7 +27,8 @@ use yasgd::util::cli::Args;
 const KNOWN_OPTS: &[&str] = &[
     "artifacts", "config", "workers", "grad-accum", "steps", "eval-every", "eval-batches",
     "seed", "lr", "warmup-frac", "decay", "no-lars", "no-smoothing", "allreduce",
-    "ranks-per-node", "wire", "bucket-bytes", "chunk-bytes", "link-alpha-us", "link-beta-gbps",
+    "ranks-per-node", "wire", "error-feedback", "bucket-bytes", "chunk-bytes",
+    "link-alpha-us", "link-beta-gbps",
     "pipeline-depth", "fence", "comm-threads", "no-overlap",
     "train-size",
     "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",
@@ -142,6 +144,13 @@ fn train(args: &Args) -> Result<()> {
         report.wire_totals.total_bytes as f64 / (1024.0 * 1024.0),
         report.wire_totals.effective_gbps(),
         report.wire_totals.elapsed_s * 1e3
+    );
+    println!(
+        "codec: {} ({:.2}x vs f32 wire; error feedback {}, cumulative quant-error norm {:.3e})",
+        report.wire_codec,
+        report.compression_ratio,
+        if report.error_feedback { "on" } else { "off" },
+        report.quant_error_norm
     );
     println!(
         "overlap: {:.1}% of comm hidden behind backward ({:.1} ms exposed total, executor={})",

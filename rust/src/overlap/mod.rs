@@ -20,6 +20,7 @@
 
 use crate::bucket::{BucketPlan, Piece};
 use crate::model_meta::{LayerKind, Manifest};
+use crate::util::codec::Codec;
 
 /// Per-layer backward completion times, normalized to a total duration.
 #[derive(Debug, Clone)]
@@ -144,12 +145,43 @@ pub fn simulate(
 ///
 /// Buckets become eligible in readiness order and each takes an
 /// earliest-free channel, so `channels = 1` reduces exactly to the serial
-/// model.
+/// model. Buckets are priced at `elems × plan.bytes_per_elem` (payload
+/// density); use [`simulate_wire`] for a codec's EXACT wire bytes.
 pub fn simulate_channels(
     plan: &BucketPlan,
     profile: &BackwardProfile,
     overlap: bool,
     channels: usize,
+    comm_time: impl Fn(usize) -> f64,
+) -> OverlapReport {
+    let bpe = plan.bytes_per_elem;
+    simulate_impl(plan, profile, overlap, channels, |elems| elems * bpe, comm_time)
+}
+
+/// Compression-aware overlap simulation: each bucket is priced at
+/// `codec`'s exact wire bytes (q8 scale headers included) via
+/// [`crate::util::codec::Codec::wire_bytes`], so shrinking the payload
+/// shrinks the exposed tail deterministically in the model — the
+/// simulator-side counterpart of the q8 wire's measured win (asserted
+/// codec-ordered in this module's tests; `benches/comm.rs` reports the
+/// per-codec exposure next to the measured `wire_q8` bench gate).
+pub fn simulate_wire(
+    plan: &BucketPlan,
+    profile: &BackwardProfile,
+    overlap: bool,
+    channels: usize,
+    codec: Codec,
+    comm_time: impl Fn(usize) -> f64,
+) -> OverlapReport {
+    simulate_impl(plan, profile, overlap, channels, |elems| codec.wire_bytes(elems), comm_time)
+}
+
+fn simulate_impl(
+    plan: &BucketPlan,
+    profile: &BackwardProfile,
+    overlap: bool,
+    channels: usize,
+    bucket_bytes: impl Fn(usize) -> usize,
     comm_time: impl Fn(usize) -> f64,
 ) -> OverlapReport {
     let mut spans = Vec::with_capacity(plan.buckets.len());
@@ -166,7 +198,7 @@ pub fn simulate_channels(
             profile.total_backward_s
         };
         let (lo, hi) = plan.span_with_padding(i);
-        let bytes = (hi - lo) * plan.bytes_per_elem;
+        let bytes = bucket_bytes(hi - lo);
         let t = comm_time(bytes);
         let ch = (0..chan_free.len())
             .min_by(|&a, &b| chan_free[a].partial_cmp(&chan_free[b]).unwrap())
@@ -583,6 +615,39 @@ mod tests {
         for w in by_bucket.windows(2) {
             assert!(w[1] >= w[0] - 1e-12, "chunk readiness must follow bucket order");
         }
+    }
+
+    #[test]
+    fn q8_wire_exposes_less_simulated_comm_than_f16() {
+        // The deterministic counterpart of the wire_q8 bench gate: on an
+        // exposure-bound profile, pricing the SAME plan at q8 wire bytes
+        // exposes less communication than f16, which exposes less than
+        // f32 — and the one-lane schedule degenerates to
+        // simulate_channels when the codec density matches
+        // plan.bytes_per_elem exactly.
+        let m = fc_heavy_manifest();
+        let prof = BackwardProfile::uniform(&m, 0.002);
+        let comm = |bytes: usize| bytes as f64 * 2e-9 + 2e-6;
+        let plan = BucketPlan::build_chunked(&m, 16 * 1024, 2, 16 * 1024);
+        for channels in [1usize, 2] {
+            let f32_r = simulate_wire(&plan, &prof, true, channels, Codec::F32, comm);
+            let f16_r = simulate_wire(&plan, &prof, true, channels, Codec::F16, comm);
+            let q8_r = simulate_wire(&plan, &prof, true, channels, Codec::Q8, comm);
+            assert!(
+                q8_r.exposed_comm_s < f16_r.exposed_comm_s,
+                "{channels} lanes: q8 exposed {} !< f16 exposed {}",
+                q8_r.exposed_comm_s,
+                f16_r.exposed_comm_s
+            );
+            assert!(f16_r.exposed_comm_s < f32_r.exposed_comm_s, "{channels} lanes");
+            assert!(q8_r.total_comm_s < f16_r.total_comm_s);
+        }
+        // Density match: the plan was built at 2 bytes/elem = f16, so the
+        // codec-aware and density-based simulators agree exactly there.
+        let a = simulate_channels(&plan, &prof, true, 2, comm);
+        let b = simulate_wire(&plan, &prof, true, 2, Codec::F16, comm);
+        assert_eq!(a.comm_spans, b.comm_spans);
+        assert_eq!(a.step_span_s, b.step_span_s);
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //! PJRT engine coalesces chunks back to a whole-buffer fallback
 //! (`supports_pipeline` tells the coordinator which executor to pick).
 //!
+//! The emit contract ("after `emit(lo, hi, ..)` returns, this call never
+//! again reads `params[lo..hi]` nor writes the emitted span") is also
+//! what makes the q8 wire's ERROR FEEDBACK race-free: the coordinator's
+//! workers mutate a published bucket's gradient span inside the emit
+//! callback (residual re-injection + quantization) before handing it to
+//! a comm lane, and the update path then consumes the EF-corrected,
+//! already-quantized gradients exactly as it would any other reduced
+//! bucket — the engine itself never observes the difference.
+//!
 //! Two interchangeable backends:
 //!
 //! * **PJRT** (`--features pjrt`, [`pjrt::Engine`]) — loads the AOT HLO

@@ -10,7 +10,7 @@
 //! split Fig 2 needs: its y-axis is throughput, its x-axis is GPU count,
 //! and the paper's own "ideal" line is the same linear extrapolation.
 
-use crate::collective::Algorithm;
+use crate::collective::{Algorithm, Precision};
 
 /// One link class: time to move n bytes = latency + n / bandwidth.
 #[derive(Debug, Clone, Copy)]
@@ -94,8 +94,39 @@ pub fn latency_floor_bytes(link: &LinkParams) -> usize {
 /// max_bytes]` (floors below `min_bytes` mean latency is negligible and
 /// the finest useful grain wins; above `max_bytes` chunking would stop
 /// creating readiness points inside a bucket target).
+///
+/// The grain is in WIRE bytes, so it is automatically compression-aware:
+/// `BucketPlan` converts it to elements at the codec's payload density
+/// (`Precision::bytes_per_elem`), and a 4×-smaller q8 payload therefore
+/// yields a 4×-COARSER element grain for the same latency floor — fewer,
+/// bigger chunks, each still worth one α on the compressed wire.
 pub fn auto_chunk_bytes(link: &LinkParams, min_bytes: usize, max_bytes: usize) -> usize {
     latency_floor_bytes(link).clamp(min_bytes, max_bytes.max(min_bytes))
+}
+
+/// Exact bytes a message of `elems` gradient elements occupies on the
+/// wire under `codec` (q8 scale headers included) — the compression-
+/// aware input every α–β model in this module prices.
+pub fn bytes_on_wire(codec: Precision, elems: usize) -> f64 {
+    codec.wire_bytes(elems) as f64
+}
+
+/// Compression-aware form of [`concurrent_bucketed_allreduce_time`]:
+/// buckets given in ELEMENTS, priced at their codec's exact wire bytes
+/// via [`bytes_on_wire`]. This is how the simulator sees the q8 win: the
+/// β (bandwidth) term shrinks with the payload while each bucket still
+/// pays its full α, which is exactly why `--chunk-bytes auto` picks a
+/// coarser grain under compression.
+pub fn concurrent_codec_allreduce_time(
+    spec: &ClusterSpec,
+    algo: Algorithm,
+    p: usize,
+    bucket_elems: &[usize],
+    codec: Precision,
+    channels: usize,
+) -> f64 {
+    let bytes: Vec<f64> = bucket_elems.iter().map(|&e| bytes_on_wire(codec, e)).collect();
+    concurrent_bucketed_allreduce_time(spec, algo, p, &bytes, channels)
 }
 
 /// Predicted allreduce time for `bytes` of wire data across `p` ranks.
@@ -516,6 +547,45 @@ mod tests {
         // Negative implied latency clamps to zero instead of going acausal.
         let fit = fit_alpha_beta(&[(1e6, 1e-4), (2e6, 3e-4)]).unwrap();
         assert_eq!(fit.latency_s, 0.0);
+    }
+
+    #[test]
+    fn bytes_on_wire_is_exact_per_codec() {
+        assert_eq!(bytes_on_wire(Precision::F32, 1000), 4000.0);
+        assert_eq!(bytes_on_wire(Precision::F16, 1000), 2000.0);
+        // 1000 elems = 4 scale headers of 4 bytes on top of the payload.
+        assert_eq!(bytes_on_wire(Precision::Q8, 1000), 1016.0);
+        assert_eq!(bytes_on_wire(Precision::Q8, 0), 0.0);
+    }
+
+    #[test]
+    fn q8_shrinks_modelled_comm_and_coarsens_the_auto_grain() {
+        // Same buckets in elements: the modelled allreduce time drops
+        // monotonically with the codec's wire density, but by LESS than
+        // the byte ratio — each bucket still pays its α.
+        let s = ClusterSpec::abci();
+        let elems = vec![1_000_000usize; 8];
+        let f32_t =
+            concurrent_codec_allreduce_time(&s, Algorithm::Ring, 64, &elems, Precision::F32, 2);
+        let f16_t =
+            concurrent_codec_allreduce_time(&s, Algorithm::Ring, 64, &elems, Precision::F16, 2);
+        let q8_t =
+            concurrent_codec_allreduce_time(&s, Algorithm::Ring, 64, &elems, Precision::Q8, 2);
+        assert!(f16_t < f32_t && q8_t < f16_t, "{f32_t} {f16_t} {q8_t}");
+        assert!(q8_t > f16_t / 2.0, "latency must keep q8 above half of f16");
+        // One lane equals the serial bucketed sum over the same bytes.
+        let one =
+            concurrent_codec_allreduce_time(&s, Algorithm::Ring, 64, &elems, Precision::Q8, 1);
+        let bytes: Vec<f64> = elems.iter().map(|&e| bytes_on_wire(Precision::Q8, e)).collect();
+        let serial = bucketed_allreduce_time(&s, Algorithm::Ring, 64, &bytes);
+        assert!((one - serial).abs() < 1e-12);
+        // Same byte floor → coarser ELEMENT grain when the payload
+        // shrinks: the plan divides the byte grain by the codec density.
+        let link = LinkParams { latency_s: 2e-6, bandwidth_bps: 8e9 };
+        let grain = auto_chunk_bytes(&link, 512, 64 * 1024);
+        let f16_elems = grain / Precision::F16.bytes_per_elem();
+        let q8_elems = grain / Precision::Q8.bytes_per_elem();
+        assert_eq!(q8_elems, 2 * f16_elems, "q8 grain must be 2x coarser than f16's");
     }
 
     #[test]

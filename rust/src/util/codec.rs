@@ -1,0 +1,651 @@
+//! Wire codecs for gradient communication — the general form of the fp16
+//! wire (paper Section IV), extended with an int8 format for when halving
+//! traffic is not enough.
+//!
+//! The paper communicates in half precision with fp32 master weights; the
+//! ROADMAP's next lever is "int8 + per-bucket scale with error
+//! accounting". This module is the codec layer both precisions (and fp32
+//! passthrough) share:
+//!
+//! * [`Codec`] — the wire format selector. It is re-exported as
+//!   `collective::Precision`, so every call site that already matched on
+//!   `F32`/`F16` picks up `Q8` through the same type.
+//! * [`WireCodec`] — the transfer-kernel interface the collective's wire
+//!   and the `CommEngine` executor dispatch through: `copy` (move encoded
+//!   payload), `reduce_add` (encode-and-accumulate), `quantize_own`
+//!   (round-trip a rank's own data to wire precision), and exact
+//!   [`WireCodec::wire_bytes`] accounting.
+//! * Fused one-pass q8 kernels ([`q8_encode_copy`], [`q8_encode_add`],
+//!   [`q8_quantize_inplace`]) mirroring the fp16 fusion from
+//!   [`super::fp16`]: the per-chunk absmax scale is computed in the same
+//!   cache-blocked pass that quantizes, no scratch buffer, no second
+//!   traversal.
+//! * [`q8_ef_apply`] — the error-feedback kernel: add the residual carried
+//!   from the previous step, quantize, and store the new quantization
+//!   error back into the residual buffer (EF-SGD; Seide et al. 2014,
+//!   Karimireddy et al. 2019). Over T steps the quantized contributions
+//!   telescope: Σ Q(g_t + e_{t-1}) = Σ g_t − e_T, so a worker's
+//!   accumulated QUANTIZED contribution differs from its exact f32 sum
+//!   by at most ONE step's quantization error per element — the
+//!   provable bound `rust/tests/proptests.rs` asserts. The bound covers
+//!   the worker-side encode EF compensates; the collective's own hop
+//!   quantization (fresh partial-sum encodes, reduced-span
+//!   `quantize_own`) remains an uncompensated per-step wire error,
+//!   identical to what an EF-off run pays.
+//!
+//! # Q8 wire format
+//!
+//! Payload is one signed byte per element plus one f32 scale per
+//! [`Q8_CHUNK`]-element chunk, carried in the chunk header:
+//!
+//! ```text
+//! value  = q * scale          q ∈ [-127, 127] (i8; -128 unused)
+//! scale  = absmax(chunk)/127  one f32 per ≤256-elem chunk (1.6% overhead)
+//! bytes  = elems + ceil(elems/256)·4
+//! ```
+//!
+//! Chunk boundaries are relative to the message span, so the reference
+//! wire and the engine's planned ops (which pass identical spans) encode
+//! identical chunks — bit-identity between the two paths is structural.
+//!
+//! Unlike fp16, q8 round-tripping is NOT elementwise idempotent (the
+//! absmax scale shifts when data is re-chunked), so the COPY path does not
+//! re-encode: a rank quantizes its own reduced data once
+//! (`quantize_own`), and every subsequent copy hop forwards the encoded
+//! payload exactly — modelled here as an f32 copy of already-quantized
+//! values, counted at q8 wire bytes. That is also what a real int8
+//! allreduce does: relay hops forward the i8 buffer + scales verbatim
+//! instead of decoding and re-encoding. Reduce (`reduce_add`) hops encode
+//! their current partial sum fresh, exactly like int8 ring
+//! implementations re-quantize partial sums. Chunks whose absmax is
+//! non-finite pass through unquantized (deterministic, and idempotent by
+//! construction) — a NaN/inf gradient has already ended the run.
+
+use super::fp16;
+
+/// Wire codec selector: how gradient bytes travel between ranks.
+/// Re-exported as `collective::Precision`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Full fp32 — 4 bytes/elem, lossless.
+    F32,
+    /// IEEE binary16 (the paper's wire) — 2 bytes/elem.
+    F16,
+    /// Int8 with a per-chunk absmax scale in the chunk header —
+    /// 1 byte/elem + 4 bytes per [`Q8_CHUNK`] elements.
+    Q8,
+}
+
+/// Elements sharing one q8 scale. 256 keeps the header overhead at
+/// 4/256 = 1.6% (so q8 stays ≥ 1.9× smaller than f16 on the wire) while
+/// one chunk of f32 source + output still sits in L1 for the fused pass.
+pub const Q8_CHUNK: usize = 256;
+
+impl Codec {
+    /// Payload density in bytes per element (excludes the q8 scale
+    /// headers — plan GRAIN sizing uses this; exact per-message byte
+    /// accounting goes through [`WireCodec::wire_bytes`]).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Codec::F32 => 4,
+            Codec::F16 => 2,
+            Codec::Q8 => 1,
+        }
+    }
+
+    /// Whether the codec is lossy (quantizes on the wire).
+    pub fn quantizes(self) -> bool {
+        !matches!(self, Codec::F32)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::Q8 => "q8",
+        }
+    }
+
+    /// Bytes on the wire for a message of `elems` elements, including
+    /// any scale headers — the codec's CANONICAL framing of the span
+    /// (q8: `elems + ceil(elems/256)·4`). Every message is billed at
+    /// this framing. One deliberate approximation hides here: a q8 Copy
+    /// that forwards a span MERGED from independently-encoded sub-spans
+    /// (halving-doubling's allgather) physically carries the sub-spans'
+    /// own headers, which can exceed the canonical count by 4 bytes per
+    /// extra partial chunk — at most `4·(sub_spans−1)` bytes per
+    /// message, ≲0.1% of any real payload. Billing the canonical
+    /// framing keeps the accounting a pure function of (codec, elems),
+    /// identical between the reference wire and the engine's plans.
+    pub fn wire_bytes(self, elems: usize) -> usize {
+        match self {
+            Codec::F32 => elems * 4,
+            Codec::F16 => elems * 2,
+            Codec::Q8 => {
+                if elems == 0 {
+                    0
+                } else {
+                    elems + ((elems + Q8_CHUNK - 1) / Q8_CHUNK) * 4
+                }
+            }
+        }
+    }
+
+    /// Move `src` into `out`, as the wire would deliver it. For q8 the
+    /// source must already be encoded (`quantize_own` /
+    /// [`q8_encode_add`] output): the copy forwards the payload exactly.
+    pub fn copy(self, src: &[f32], out: &mut [f32]) {
+        match self {
+            Codec::F32 | Codec::Q8 => out.copy_from_slice(src),
+            Codec::F16 => fp16::encode_copy(src, out),
+        }
+    }
+
+    /// Accumulate `src` into `out` through the wire (the reduce half of
+    /// an exchange): quantizing codecs encode `src` fresh, then add the
+    /// decoded values.
+    pub fn reduce_add(self, src: &[f32], out: &mut [f32]) {
+        match self {
+            Codec::F32 => {
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+            Codec::F16 => fp16::encode_add(src, out),
+            Codec::Q8 => q8_encode_add(src, out),
+        }
+    }
+
+    /// Round-trip a rank's OWN data to wire precision in place, so the
+    /// owner holds exactly the bits it is about to send.
+    pub fn quantize_own(self, buf: &mut [f32]) {
+        match self {
+            Codec::F32 => {}
+            Codec::F16 => {
+                fp16::quantize_inplace(buf);
+            }
+            Codec::Q8 => {
+                q8_quantize_inplace(buf);
+            }
+        }
+    }
+}
+
+/// The transfer-kernel interface of a wire codec — four operations are
+/// ALL a format needs to ride the collective. [`Codec`]'s inherent
+/// kernels implement it today (the hot paths call those directly for
+/// static dispatch); the trait is the deliberate extension seam for
+/// formats that won't fit a dense enum variant — the ROADMAP's top-k
+/// sparsification codec carries per-message index payloads and will
+/// implement this trait rather than grow `Codec`. Object-safety is
+/// part of the contract (tested below).
+pub trait WireCodec {
+    /// Exact bytes on the wire for `elems` elements, headers included.
+    fn wire_bytes(&self, elems: usize) -> usize;
+    /// Deliver `src` into `out` (see [`Codec::copy`]).
+    fn copy(&self, src: &[f32], out: &mut [f32]);
+    /// Encode-and-accumulate `src` into `out` (see [`Codec::reduce_add`]).
+    fn reduce_add(&self, src: &[f32], out: &mut [f32]);
+    /// Round-trip own data to wire precision in place.
+    fn quantize_own(&self, buf: &mut [f32]);
+}
+
+impl WireCodec for Codec {
+    fn wire_bytes(&self, elems: usize) -> usize {
+        Codec::wire_bytes(*self, elems)
+    }
+
+    fn copy(&self, src: &[f32], out: &mut [f32]) {
+        Codec::copy(*self, src, out)
+    }
+
+    fn reduce_add(&self, src: &[f32], out: &mut [f32]) {
+        Codec::reduce_add(*self, src, out)
+    }
+
+    fn quantize_own(&self, buf: &mut [f32]) {
+        Codec::quantize_own(*self, buf)
+    }
+}
+
+/// Per-chunk q8 scale: absmax/127, so the extreme element maps (to
+/// within an ulp) to ±127. Zero for an all-zero chunk; non-finite when
+/// the chunk contains ±inf/NaN-dominated data.
+#[inline]
+fn q8_scale(chunk: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in chunk {
+        let a = x.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    m / 127.0
+}
+
+/// How one q8 chunk is handled.
+enum Q8Chunk {
+    /// All-zero chunk: clears to +0.0 (nothing to encode).
+    Zero,
+    /// No usable quantization grid — the chunk passes through
+    /// unquantized. Two ways here: absmax is ±inf/NaN (no grid at all),
+    /// or absmax is tiny enough that the scale is SUBNORMAL — its
+    /// reciprocal can overflow to +inf, and `0.0 × inf = NaN` would
+    /// inject NaN into a chunk's zero elements, permanently poisoning
+    /// gradients and error-feedback residuals. Such chunks are below
+    /// ~1e-36 in magnitude — numerically zero for gradient purposes —
+    /// and pass-through is idempotent, so rank agreement holds.
+    PassThrough,
+    /// Quantize on the (inv, scale) grid; scale is NORMAL, so
+    /// `inv = 1/scale` is finite.
+    Quant { inv: f32, scale: f32 },
+}
+
+#[inline]
+fn q8_chunk_mode(chunk: &[f32]) -> Q8Chunk {
+    let scale = q8_scale(chunk);
+    if scale == 0.0 {
+        // absmax 0 usually means an all-zero chunk — but NaN hides from
+        // the absmax scan (it fails every `>` comparison), and zeroing a
+        // NaN-poisoned chunk would silently mask a diverged gradient
+        // that the f32/f16 wires would have propagated. The scan only
+        // runs on zero-absmax chunks (padding, dead layers), never on
+        // the quantizing hot path.
+        if chunk.iter().any(|x| x.is_nan()) {
+            Q8Chunk::PassThrough
+        } else {
+            Q8Chunk::Zero
+        }
+    } else if !scale.is_normal() {
+        Q8Chunk::PassThrough
+    } else {
+        Q8Chunk::Quant { inv: 1.0 / scale, scale }
+    }
+}
+
+/// `dequant(quant(x))` for one element given the chunk's scale inverse
+/// and scale. NaN propagates (round/clamp/mul all pass it through).
+#[inline]
+fn q8_roundtrip(x: f32, inv: f32, scale: f32) -> f32 {
+    (x * inv).round().clamp(-127.0, 127.0) * scale
+}
+
+/// Fused q8 wire transfer: `out[i] = dequant(quant(src[i]))`, the per-
+/// chunk absmax scale computed in the same pass. One traversal, no
+/// scratch — the int8 sibling of [`fp16::encode_copy`]. (The collective's
+/// COPY path does not call this — it forwards already-encoded payloads —
+/// but `quantize_own`, the error-feedback kernel and the codec benches
+/// share the per-element math through it.)
+pub fn q8_encode_copy(src: &[f32], out: &mut [f32]) {
+    assert_eq!(src.len(), out.len());
+    for (s_blk, o_blk) in src.chunks(Q8_CHUNK).zip(out.chunks_mut(Q8_CHUNK)) {
+        match q8_chunk_mode(s_blk) {
+            Q8Chunk::Zero => o_blk.fill(0.0),
+            Q8Chunk::PassThrough => o_blk.copy_from_slice(s_blk),
+            Q8Chunk::Quant { inv, scale } => {
+                for (o, &s) in o_blk.iter_mut().zip(s_blk.iter()) {
+                    *o = q8_roundtrip(s, inv, scale);
+                }
+            }
+        }
+    }
+}
+
+/// Fused q8 wire reduce: `out[i] += dequant(quant(src[i]))` — quantize-
+/// and-accumulate in one cache-blocked pass, scale computed inline. The
+/// int8 sibling of [`fp16::encode_add`].
+pub fn q8_encode_add(src: &[f32], out: &mut [f32]) {
+    assert_eq!(src.len(), out.len());
+    for (s_blk, o_blk) in src.chunks(Q8_CHUNK).zip(out.chunks_mut(Q8_CHUNK)) {
+        match q8_chunk_mode(s_blk) {
+            Q8Chunk::Zero => {} // chunk contributes exact zeros
+            Q8Chunk::PassThrough => {
+                for (o, &s) in o_blk.iter_mut().zip(s_blk.iter()) {
+                    *o += s;
+                }
+            }
+            Q8Chunk::Quant { inv, scale } => {
+                for (o, &s) in o_blk.iter_mut().zip(s_blk.iter()) {
+                    *o += q8_roundtrip(s, inv, scale);
+                }
+            }
+        }
+    }
+}
+
+/// Round-trip a buffer through the q8 wire in place (what `quantize_own`
+/// does to a rank's reduced data before a gather phase). Returns the max
+/// absolute quantization error — bounded by scale/2 per chunk.
+pub fn q8_quantize_inplace(buf: &mut [f32]) -> f32 {
+    let mut max_err = 0.0f32;
+    for blk in buf.chunks_mut(Q8_CHUNK) {
+        match q8_chunk_mode(blk) {
+            Q8Chunk::Zero => blk.fill(0.0),
+            Q8Chunk::PassThrough => {}
+            Q8Chunk::Quant { inv, scale } => {
+                for v in blk.iter_mut() {
+                    let q = q8_roundtrip(*v, inv, scale);
+                    let e = (q - *v).abs();
+                    if e > max_err {
+                        max_err = e;
+                    }
+                    *v = q;
+                }
+            }
+        }
+    }
+    max_err
+}
+
+/// Error-feedback quantization of one gradient span (EF-SGD):
+///
+/// ```text
+/// corrected = grads + residual      (re-inject last step's error)
+/// grads     = Q8(corrected)         (what reaches the wire)
+/// residual  = corrected − grads     (carried to the next step)
+/// ```
+///
+/// performed chunk-by-chunk in one pass over both buffers. Returns the
+/// sum of squared residuals written (f64), which the coordinator
+/// accumulates into `TrainReport`'s cumulative quantization-error norm.
+/// All-zero corrected chunks clear their residual; gridless chunks
+/// (non-finite or subnormal-scale, see `Q8Chunk::PassThrough`) pass
+/// through unquantized with a zero residual (nothing was lost).
+pub fn q8_ef_apply(grads: &mut [f32], residual: &mut [f32]) -> f64 {
+    assert_eq!(grads.len(), residual.len());
+    let mut err_sq = 0.0f64;
+    for (g_blk, r_blk) in grads.chunks_mut(Q8_CHUNK).zip(residual.chunks_mut(Q8_CHUNK)) {
+        for (g, r) in g_blk.iter_mut().zip(r_blk.iter()) {
+            *g += *r;
+        }
+        match q8_chunk_mode(g_blk) {
+            // Zero or gridless chunk: the corrected value goes through
+            // losslessly, so the residual clears (nothing was dropped).
+            Q8Chunk::Zero | Q8Chunk::PassThrough => r_blk.fill(0.0),
+            Q8Chunk::Quant { inv, scale } => {
+                for (g, r) in g_blk.iter_mut().zip(r_blk.iter_mut()) {
+                    let c = *g;
+                    let q = q8_roundtrip(c, inv, scale);
+                    let e = c - q;
+                    *r = e;
+                    *g = q;
+                    err_sq += e as f64 * e as f64;
+                }
+            }
+        }
+    }
+    err_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn buf(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    #[test]
+    fn codec_names_and_density() {
+        assert_eq!(Codec::F32.bytes_per_elem(), 4);
+        assert_eq!(Codec::F16.bytes_per_elem(), 2);
+        assert_eq!(Codec::Q8.bytes_per_elem(), 1);
+        assert_eq!(Codec::Q8.name(), "q8");
+        assert!(Codec::Q8.quantizes() && Codec::F16.quantizes() && !Codec::F32.quantizes());
+    }
+
+    #[test]
+    fn wire_bytes_exact() {
+        assert_eq!(Codec::F32.wire_bytes(1000), 4000);
+        assert_eq!(Codec::F16.wire_bytes(1000), 2000);
+        // 1000 elems = 4 chunks (3×256 + 232) → 1000 + 16 header bytes.
+        assert_eq!(Codec::Q8.wire_bytes(1000), 1016);
+        assert_eq!(Codec::Q8.wire_bytes(0), 0);
+        assert_eq!(Codec::Q8.wire_bytes(1), 5);
+        assert_eq!(Codec::Q8.wire_bytes(256), 260);
+        assert_eq!(Codec::Q8.wire_bytes(257), 265);
+        // The acceptance-bar ratio: q8 ≥ 1.9× smaller than f16 for any
+        // span of at least half a chunk.
+        for elems in [128usize, 256, 1000, 4096, 305_482] {
+            let ratio = Codec::F16.wire_bytes(elems) as f64 / Codec::Q8.wire_bytes(elems) as f64;
+            assert!(ratio >= 1.9, "elems={elems}: ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn q8_round_trip_error_bounded_by_half_scale() {
+        let src = buf(Q8_CHUNK * 3 + 77, 0x51, 3.0);
+        let mut out = vec![0.0f32; src.len()];
+        q8_encode_copy(&src, &mut out);
+        for (s_blk, o_blk) in src.chunks(Q8_CHUNK).zip(out.chunks(Q8_CHUNK)) {
+            let absmax = s_blk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = absmax / 127.0;
+            for (&s, &o) in s_blk.iter().zip(o_blk) {
+                assert!(
+                    (o - s).abs() <= 0.5 * scale * (1.0 + 1e-5) + 1e-30,
+                    "|{o} - {s}| > scale/2 = {}",
+                    scale / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_extreme_element_is_exact_and_zero_chunks_clear() {
+        // The absmax element maps to ±127·scale — for this value the
+        // division and multiplication round back to exactly ±absmax
+        // (in general the extreme element is exact to within an ulp).
+        let mut src = vec![0.125f32; 40];
+        src[7] = -4.0;
+        let mut out = vec![0.0f32; src.len()];
+        q8_encode_copy(&src, &mut out);
+        assert_eq!(out[7], -4.0);
+        // All-zero chunk: stays zero, and -0.0 normalizes to +0.0.
+        let mut z = vec![-0.0f32; 10];
+        assert_eq!(q8_quantize_inplace(&mut z), 0.0);
+        assert!(z.iter().all(|v| v.to_bits() == 0));
+    }
+
+    #[test]
+    fn q8_quantize_then_copy_forwards_exactly() {
+        // The collective's gather invariant: once a span is quantized,
+        // the Copy path (raw forward) delivers identical bits — no
+        // re-encode, no idempotence requirement.
+        let mut owned = buf(700, 0xF0, 2.0);
+        q8_quantize_inplace(&mut owned);
+        let mut hop1 = vec![0.0f32; owned.len()];
+        Codec::Q8.copy(&owned, &mut hop1);
+        let mut hop2 = vec![0.0f32; owned.len()];
+        Codec::Q8.copy(&hop1, &mut hop2);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&owned), bits(&hop1));
+        assert_eq!(bits(&hop1), bits(&hop2));
+    }
+
+    #[test]
+    fn q8_encode_add_matches_copy_into_zero() {
+        let src = buf(Q8_CHUNK * 2 + 31, 0xADD, 1.5);
+        let mut copied = vec![0.0f32; src.len()];
+        q8_encode_copy(&src, &mut copied);
+        let mut added = vec![0.0f32; src.len()];
+        q8_encode_add(&src, &mut added);
+        for (a, c) in added.iter().zip(&copied) {
+            assert_eq!(a.to_bits(), (0.0f32 + c).to_bits());
+        }
+        // And accumulation really adds: a second pass doubles.
+        q8_encode_add(&src, &mut added);
+        for (a, c) in added.iter().zip(&copied) {
+            assert_eq!(*a, c + c);
+        }
+    }
+
+    #[test]
+    fn q8_quantize_inplace_matches_encode_copy() {
+        let src = buf(777, 0x77, 0.3);
+        let mut via_copy = vec![0.0f32; src.len()];
+        q8_encode_copy(&src, &mut via_copy);
+        let mut inplace = src.clone();
+        let max_err = q8_quantize_inplace(&mut inplace);
+        assert_eq!(inplace, via_copy);
+        assert!(max_err > 0.0 && max_err <= 0.3 / 127.0 * 0.5 * 1.001);
+    }
+
+    #[test]
+    fn q8_subnormal_scale_chunks_pass_through_without_nan() {
+        // Regression: a chunk whose absmax is tiny-but-nonzero yields a
+        // SUBNORMAL scale whose reciprocal overflows to +inf, and
+        // 0·inf = NaN would have poisoned the chunk's zero elements (and
+        // through EF, every later step). Such chunks must pass through.
+        for absmax in [1e-40f32, 1e-38, 1e-37] {
+            let mut src = vec![0.0f32; 10];
+            src[4] = absmax;
+            src[7] = -absmax / 2.0;
+            let mut out = vec![f32::NAN; src.len()];
+            q8_encode_copy(&src, &mut out);
+            assert!(out.iter().all(|v| v.is_finite()), "absmax={absmax}: NaN leaked");
+            assert_eq!(out, src, "absmax={absmax}: tiny chunk must pass through");
+            // The reduce path must not poison its accumulator either.
+            let mut acc = vec![1.0f32; src.len()];
+            q8_encode_add(&src, &mut acc);
+            assert!(acc.iter().all(|v| v.is_finite()));
+            // And EF clears the residual (nothing was dropped).
+            let mut g = src.clone();
+            let mut r = vec![0.0f32; src.len()];
+            let err = q8_ef_apply(&mut g, &mut r);
+            assert_eq!(err, 0.0);
+            assert!(g.iter().chain(r.iter()).all(|v| v.is_finite()));
+            assert_eq!(g, src);
+        }
+        // A NORMAL-scale chunk sharing zeros must still quantize zeros
+        // to zero, never NaN.
+        let mut src = vec![0.0f32; 8];
+        src[0] = 0.5;
+        let mut out = vec![f32::NAN; 8];
+        q8_encode_copy(&src, &mut out);
+        assert_eq!(out[1], 0.0);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn q8_nonfinite_chunks_pass_through() {
+        let mut src = buf(Q8_CHUNK + 10, 0x1F, 1.0);
+        src[3] = f32::INFINITY; // poisons chunk 0 only
+        let mut out = vec![0.0f32; src.len()];
+        q8_encode_copy(&src, &mut out);
+        assert_eq!(&out[..Q8_CHUNK], &src[..Q8_CHUNK], "inf chunk must pass through");
+        assert_ne!(&out[Q8_CHUNK..], &src[Q8_CHUNK..], "clean chunk must quantize");
+        // NaN propagates per element without derailing its chunk.
+        let mut nsrc = vec![1.0f32; 8];
+        nsrc[2] = f32::NAN;
+        let mut nout = vec![0.0f32; 8];
+        q8_encode_copy(&nsrc, &mut nout);
+        assert!(nout[2].is_nan());
+        assert_eq!(nout[0], 1.0);
+        // A NaN hiding in an otherwise-zero chunk (absmax scan can't see
+        // it) must still pass through, never be silently zeroed.
+        let mut zsrc = vec![0.0f32; 8];
+        zsrc[5] = f32::NAN;
+        let mut zout = vec![0.0f32; 8];
+        q8_encode_copy(&zsrc, &mut zout);
+        assert!(zout[5].is_nan(), "NaN in a zero chunk must not be masked");
+        assert_eq!(zout[0], 0.0);
+        let mut zq = zsrc.clone();
+        q8_quantize_inplace(&mut zq);
+        assert!(zq[5].is_nan());
+    }
+
+    #[test]
+    fn ef_apply_telescopes_and_reports_error() {
+        // One chunk, three steps of the same gradient: with EF the summed
+        // quantized contributions track the exact sum to within ONE
+        // step's quantization error.
+        let g0 = buf(Q8_CHUNK, 0xEF, 1.0);
+        let mut residual = vec![0.0f32; g0.len()];
+        let mut q_sum = vec![0.0f64; g0.len()];
+        let steps = 3usize;
+        let mut total_err = 0.0f64;
+        for _ in 0..steps {
+            let mut g = g0.clone();
+            total_err += q8_ef_apply(&mut g, &mut residual);
+            for (s, &q) in q_sum.iter_mut().zip(&g) {
+                *s += q as f64;
+            }
+        }
+        assert!(total_err > 0.0, "quantization must report a nonzero error");
+        // Σ Q(g+e) = Σ g − e_T exactly (up to f32 addition rounding).
+        for ((&s, &g), &e) in q_sum.iter().zip(&g0).zip(&residual) {
+            let want = g as f64 * steps as f64 - e as f64;
+            assert!(
+                (s - want).abs() <= 1e-5,
+                "telescoping broke: sum {s} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_apply_zero_residual_equals_plain_quantize() {
+        let src = buf(500, 0xE0, 0.7);
+        let mut g = src.clone();
+        let mut r = vec![0.0f32; src.len()];
+        q8_ef_apply(&mut g, &mut r);
+        let mut want = src.clone();
+        q8_quantize_inplace(&mut want);
+        assert_eq!(g, want, "EF with a zero residual is plain quantization");
+        for ((&gq, &s), &res) in g.iter().zip(&src).zip(&r) {
+            assert!((gq + res - s).abs() <= 1e-6, "residual must be the exact loss");
+        }
+    }
+
+    #[test]
+    fn wire_codec_is_object_safe_and_dispatches() {
+        // The extension-seam contract: a future codec (ROADMAP: top-k)
+        // plugs in through `dyn WireCodec`; the enum's impl must behave
+        // identically through dynamic dispatch.
+        let codecs: Vec<Box<dyn WireCodec>> =
+            vec![Box::new(Codec::F32), Box::new(Codec::F16), Box::new(Codec::Q8)];
+        let src = buf(300, 0xD7, 1.0);
+        for (c, inherent) in codecs.iter().zip([Codec::F32, Codec::F16, Codec::Q8]) {
+            assert_eq!(c.wire_bytes(1000), inherent.wire_bytes(1000));
+            let mut own = src.clone();
+            c.quantize_own(&mut own);
+            let mut got = vec![0.0f32; src.len()];
+            c.copy(&own, &mut got);
+            let mut want_own = src.clone();
+            inherent.quantize_own(&mut want_own);
+            let mut want = vec![0.0f32; src.len()];
+            inherent.copy(&want_own, &mut want);
+            assert_eq!(got, want);
+            let mut acc = vec![0.5f32; src.len()];
+            c.reduce_add(&src, &mut acc);
+            let mut want_acc = vec![0.5f32; src.len()];
+            inherent.reduce_add(&src, &mut want_acc);
+            assert_eq!(acc, want_acc);
+        }
+    }
+
+    #[test]
+    fn trait_dispatch_matches_kernels() {
+        let src = buf(300, 0xD15, 1.0);
+        // F16 path is the existing fused kernel.
+        let mut a = vec![0.0f32; src.len()];
+        Codec::F16.copy(&src, &mut a);
+        let mut b = vec![0.0f32; src.len()];
+        fp16::encode_copy(&src, &mut b);
+        assert_eq!(a, b);
+        // Q8 reduce path is the fused q8 kernel.
+        let mut c = vec![1.0f32; src.len()];
+        Codec::Q8.reduce_add(&src, &mut c);
+        let mut d = vec![1.0f32; src.len()];
+        q8_encode_add(&src, &mut d);
+        assert_eq!(c, d);
+        // F32 is exact.
+        let mut e = vec![0.0f32; src.len()];
+        Codec::F32.copy(&src, &mut e);
+        assert_eq!(e, src);
+        let mut f = src.clone();
+        Codec::F32.quantize_own(&mut f);
+        assert_eq!(f, src);
+    }
+}

@@ -1,9 +1,14 @@
 //! In-tree substrates: the offline build reaches only the `xla` and
-//! `anyhow` crates, so JSON, CLI parsing, RNG and the fp16 wire codec are
+//! `anyhow` crates, so JSON, CLI parsing, RNG and the wire codecs are
 //! implemented here (each with its own test suite) instead of pulled in as
 //! dependencies.
+//!
+//! `codec` is the wire-format front door (f32 / f16 / q8 selection, the
+//! `WireCodec` trait, the fused int8 kernels and the error-feedback
+//! kernel); `fp16` keeps the scalar binary16 primitives it builds on.
 
 pub mod cli;
+pub mod codec;
 pub mod fp16;
 pub mod json;
 pub mod rng;

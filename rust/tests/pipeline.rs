@@ -45,9 +45,13 @@ fn base_cfg() -> RunConfig {
 /// buffering with the full-update parameter fence) — produce a trajectory
 /// (losses, accuracies, params, momentum-derived params, bn_state)
 /// BIT-identical to the sequential barrier reference. The grid covers
-/// chunking too (0 = whole-layer buckets, plus several row chunk
-/// granularities): all executors share the plan, so depth/chunking must
-/// change WHEN things happen, never what is computed.
+/// chunking (0 = whole-layer buckets, plus several row chunk
+/// granularities) and the WIRE-CODEC axis: the q8 rows run with error
+/// feedback on (the default), so the residual-carrying quantization must
+/// be deterministic and bitwise-reproducible across workers × lanes ×
+/// depth × chunk — not bit-equal to f32, but bit-equal across executors.
+/// All executors share the plan, so depth/chunking/codec must change
+/// WHEN (and how lossily) bytes move, never break executor equivalence.
 #[test]
 fn pipelined_matches_sequential_across_grid() {
     // (workers, comm_threads, grad_accum, wire, allreduce, chunk_bytes)
@@ -60,6 +64,10 @@ fn pipelined_matches_sequential_across_grid() {
         (3, 1, 2, "f16", "naive", 2048),
         (4, 2, 1, "f16", "hier", 16 * 1024),
         (4, 4, 2, "f32", "ring", 1024),
+        // Wire-codec axis: q8 with error feedback (the default pairing).
+        (2, 2, 1, "q8", "hier", 16 * 1024),
+        (3, 2, 2, "q8", "ring", 2048),
+        (4, 1, 1, "q8", "hd", 0),
     ];
     for (workers, comm_threads, grad_accum, wire, allreduce, chunk_bytes) in grid {
         let what = format!(
@@ -500,4 +508,104 @@ fn final_val_acc_is_explicit() {
     none_report.final_val_acc = None;
     let pretty = none_report.to_json().to_string_pretty();
     assert!(pretty.contains("\"final_val_acc\": null"), "got: {pretty}");
+}
+
+/// Acceptance criterion: the q8 wire moves ≥ 1.9× fewer bytes per step
+/// than f16 under EXACT WireStats accounting, and the TrainReport is
+/// self-describing about the codec it trained with.
+#[test]
+fn q8_wire_halves_step_bytes_vs_f16_and_report_is_self_describing() {
+    let mut cfg = base_cfg();
+    cfg.total_steps = 2;
+    cfg.eval_every = 0;
+
+    let mut f16_cfg = cfg.clone();
+    f16_cfg.wire = "f16".into();
+    let mut f16_t = Trainer::new(f16_cfg, engine()).unwrap();
+    for _ in 0..2 {
+        f16_t.step().unwrap();
+    }
+    let f16_bytes = f16_t.wire_totals().total_bytes;
+
+    let mut q8_cfg = cfg.clone();
+    q8_cfg.wire = "q8".into();
+    let mut q8_t = Trainer::new(q8_cfg, engine()).unwrap();
+    assert!(q8_t.error_feedback(), "q8 defaults to error feedback on");
+    for _ in 0..2 {
+        q8_t.step().unwrap();
+    }
+    let q8_stats = q8_t.wire_totals().clone();
+    assert!(f16_bytes > 0 && q8_stats.total_bytes > 0);
+    let ratio = f16_bytes as f64 / q8_stats.total_bytes as f64;
+    assert!(ratio >= 1.9, "q8 per-step wire bytes only {ratio:.3}x below f16");
+    assert!(q8_stats.compression_ratio() > 3.8, "vs f32: {}", q8_stats.compression_ratio());
+    assert!(q8_t.quant_error_norm() > 0.0, "EF must record quantization error");
+
+    // Report self-description (run a fresh short train for the report).
+    let mut rep_cfg = cfg.clone();
+    rep_cfg.wire = "q8".into();
+    let mut rep_t = Trainer::new(rep_cfg, engine()).unwrap();
+    let report = rep_t.train().unwrap();
+    assert_eq!(report.wire_codec, "q8");
+    assert!(report.error_feedback);
+    assert!(report.compression_ratio > 3.8, "{}", report.compression_ratio);
+    assert!(report.quant_error_norm > 0.0);
+    let j = report.to_json().to_string_pretty();
+    for field in ["wire_codec", "compression_ratio", "error_feedback", "quant_error_norm"] {
+        assert!(j.contains(field), "report JSON missing {field}: {j}");
+    }
+    // And an f32 run reports the lossless identity.
+    let mut f32_cfg = cfg;
+    f32_cfg.wire = "f32".into();
+    let mut f32_t = Trainer::new(f32_cfg, engine()).unwrap();
+    let f32_report = f32_t.train().unwrap();
+    assert_eq!(f32_report.wire_codec, "f32");
+    assert!(!f32_report.error_feedback, "EF is inert on a lossless wire");
+    assert!((f32_report.compression_ratio - 1.0).abs() < 1e-12);
+    assert_eq!(f32_report.quant_error_norm, 0.0);
+}
+
+/// Acceptance criterion: error feedback keeps the q8 loss trajectory
+/// within the documented bound of the f32 run (EXPERIMENTS.md,
+/// "Compression runs": per-step |Δloss| ≤ 0.05 and final |Δloss| ≤ 0.03
+/// over the 8-step stub smoke), and the `--error-feedback off` ablation
+/// actually changes the trajectory.
+#[test]
+fn q8_error_feedback_tracks_the_f32_loss_trajectory() {
+    let steps = 8usize;
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    cfg.comm_threads = 2;
+    cfg.total_steps = steps;
+    cfg.eval_every = 0;
+
+    let run = |wire: &str, ef: bool| -> Vec<f32> {
+        let mut c = cfg.clone();
+        c.wire = wire.into();
+        c.error_feedback = ef;
+        let mut t = Trainer::new(c, engine()).unwrap();
+        let losses: Vec<f32> = (0..steps).map(|_| t.step().unwrap().0).collect();
+        t.flush().unwrap();
+        losses
+    };
+
+    let f32_losses = run("f32", true);
+    let ef_losses = run("q8", true);
+    let no_ef_losses = run("q8", false);
+
+    assert_ne!(f32_losses, ef_losses, "q8 must actually quantize");
+    assert_ne!(ef_losses, no_ef_losses, "the EF switch must change the trajectory");
+
+    for (s, (&a, &b)) in f32_losses.iter().zip(&ef_losses).enumerate() {
+        assert!(
+            (a - b).abs() <= 0.05,
+            "step {s}: q8+EF loss {b} drifted from f32 {a} past the documented bound"
+        );
+    }
+    let final_gap = (f32_losses[steps - 1] - ef_losses[steps - 1]).abs();
+    assert!(final_gap <= 0.03, "final q8+EF loss gap {final_gap} > documented 0.03");
+    // Both quantized runs must still be LEARNING (loss decreasing), so
+    // the bound above is not vacuously met by a diverged pair.
+    assert!(ef_losses[steps - 1] < ef_losses[0]);
+    assert!(no_ef_losses[steps - 1] < no_ef_losses[0]);
 }

@@ -9,6 +9,7 @@ use yasgd::bucket::BucketPlan;
 use yasgd::collective::{allreduce_mean, Algorithm, CommEngine, Precision};
 use yasgd::model_meta::Manifest;
 use yasgd::schedule::{Decay, LrSchedule};
+use yasgd::util::codec::{q8_ef_apply, q8_encode_copy, Q8_CHUNK};
 use yasgd::util::fp16;
 use yasgd::util::json::Json;
 use yasgd::util::rng::Rng;
@@ -154,7 +155,11 @@ fn prop_allreduce_all_ranks_bit_identical() {
             2 => Algorithm::HalvingDoubling,
             _ => Algorithm::Hierarchical { ranks_per_node: 4 },
         };
-        let precision = if rng.below(2) == 0 { Precision::F32 } else { Precision::F16 };
+        let precision = match rng.below(3) {
+            0 => Precision::F32,
+            1 => Precision::F16,
+            _ => Precision::Q8,
+        };
         let mut bufs: Vec<Vec<f32>> = (0..p)
             .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect())
             .collect();
@@ -185,7 +190,11 @@ fn prop_comm_engine_bit_identical_to_reference() {
             2 => Algorithm::HalvingDoubling,
             _ => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
         };
-        let precision = if rng.below(2) == 0 { Precision::F32 } else { Precision::F16 };
+        let precision = match rng.below(3) {
+            0 => Precision::F32,
+            1 => Precision::F16,
+            _ => Precision::Q8,
+        };
         let threads = 1 + rng.below(4) as usize;
         let mut engine = CommEngine::new(algo, precision, threads);
         for shape in 0..3 {
@@ -290,6 +299,95 @@ fn prop_warmup_monotone_and_continuous() {
         for i in warmup..total {
             let lr = s.lr_at(i);
             assert!(lr <= peak + 1e-9 && lr >= -1e-12, "case {case} step {i}: {lr}");
+        }
+    }
+}
+
+#[test]
+fn prop_q8_round_trip_bounded_by_half_chunk_scale() {
+    // For ANY value mix and length, |dequant(quant(x)) − x| ≤ scale/2 per
+    // chunk, where scale = absmax(chunk)/127 — the q8 codec's contract.
+    let mut rng = Rng::new(0xAB08);
+    for case in 0..CASES {
+        let n = 1 + rng.below(4000) as usize;
+        let scale_mag = 10f32.powi(rng.below(10) as i32 - 5); // 1e-5 .. 1e4
+        let src: Vec<f32> =
+            (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * scale_mag).collect();
+        let mut out = vec![0.0f32; n];
+        q8_encode_copy(&src, &mut out);
+        for (ci, (s_blk, o_blk)) in src.chunks(Q8_CHUNK).zip(out.chunks(Q8_CHUNK)).enumerate() {
+            let absmax = s_blk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = absmax / 127.0;
+            let bound = 0.5 * scale * (1.0 + 1e-5) + 1e-38;
+            for (&s, &o) in s_blk.iter().zip(o_blk) {
+                assert!(
+                    (o - s).abs() <= bound,
+                    "case {case} chunk {ci}: |{o} - {s}| > {bound}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_q8_error_feedback_accumulation_bound() {
+    // EF-SGD telescoping: over T steps, Σ Q(g_t + e_{t-1}) = Σ g_t − e_T,
+    // so the residual-corrected sum of T quantized steps matches the f32
+    // sum to within ONE step's quantization error per element — |e_T| ≤
+    // scale_T/2, the scale of the LAST corrected chunk. Random gradients,
+    // lengths and step counts.
+    let mut rng = Rng::new(0xEFEF);
+    for case in 0..CASES {
+        let n = 1 + rng.below(1500) as usize;
+        let steps = 1 + rng.below(8) as usize;
+        let mag = 10f32.powi(rng.below(6) as i32 - 3); // 1e-3 .. 1e2
+        let grads: Vec<Vec<f32>> = (0..steps)
+            .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0 * mag).collect())
+            .collect();
+        let mut residual = vec![0.0f32; n];
+        let mut q_sum = vec![0.0f64; n];
+        let mut g_sum = vec![0.0f64; n];
+        let mut last_corrected: Vec<f32> = Vec::new();
+        for g_t in &grads {
+            for (s, &g) in g_sum.iter_mut().zip(g_t) {
+                *s += g as f64;
+            }
+            let mut g = g_t.clone();
+            // Capture the corrected value the final step quantizes, to
+            // compute the bound's scale from the right data.
+            last_corrected = g
+                .iter()
+                .zip(&residual)
+                .map(|(&x, &r)| x + r)
+                .collect();
+            q8_ef_apply(&mut g, &mut residual);
+            for (s, &q) in q_sum.iter_mut().zip(&g) {
+                *s += q as f64;
+            }
+        }
+        // (a) Exact telescoping up to f32 addition rounding.
+        for ((&qs, &gs), &e) in q_sum.iter().zip(&g_sum).zip(&residual) {
+            let slack = 1e-5 * mag as f64 * steps as f64 + 1e-30;
+            assert!(
+                (qs - (gs - e as f64)).abs() <= slack,
+                "case {case}: telescoping identity broke: {qs} vs {}",
+                gs - e as f64
+            );
+        }
+        // (b) The provable bound: |Σq − Σg| = |e_T| ≤ scale_T/2 per chunk.
+        for (ci, blk) in last_corrected.chunks(Q8_CHUNK).enumerate() {
+            let absmax = blk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = absmax / 127.0;
+            let bound = (0.5 * scale * (1.0 + 1e-4) + 1e-38) as f64
+                + 1e-5 * mag as f64 * steps as f64;
+            for i in ci * Q8_CHUNK..(ci * Q8_CHUNK + blk.len()) {
+                assert!(
+                    (q_sum[i] - g_sum[i]).abs() <= bound,
+                    "case {case} elem {i}: |{} - {}| > {bound}",
+                    q_sum[i],
+                    g_sum[i]
+                );
+            }
         }
     }
 }

@@ -12,10 +12,17 @@ Asserts the structural invariants the cross-step pipeline PR promises:
      NEXT step's leader needs the tail, which is never earlier than
      depth 1's end-of-backward reference, so a real regression here
      means the executor stopped overlapping across steps.
+  3. the wire-codec sections exist and hold the int8 PR's promises:
+     q8's exposed-comm fraction is no worse than f16's (same tolerance —
+     fewer bytes on the wire must not expose MORE communication), the
+     deterministic per-step byte accounting shows q8 moving >= 1.9x
+     fewer bytes than f16 (exact WireStats counting, so NO tolerance),
+     and the q8-vs-f32 compression ratio is > 3.8.
 
-Tolerance-guarded on purpose: CI runners are noisy and the exposed
-fractions are wall-clock measurements; the gate catches structural
-regressions (section missing, depth 2 clearly worse), not micro-jitter.
+Tolerance-guarded on purpose for the wall-clock fields: CI runners are
+noisy and the exposed fractions are measurements; the gate catches
+structural regressions (section missing, depth 2 / q8 clearly worse),
+not micro-jitter. Byte accounting is deterministic and gated strictly.
 """
 
 import json
@@ -62,9 +69,34 @@ def main() -> None:
             f"{d2:.4f} > depth-1 {d1:.4f} + {TOLERANCE}"
         )
 
+    # Wire-codec sections (int8 wire-compression PR).
+    for section in ("wire_f16", "wire_q8"):
+        if not isinstance(bench.get(section), dict):
+            fail(f"missing '{section}' section")
+        for key in ("steady_state_images_per_sec", "exposed_comm_frac", "compression_ratio"):
+            v = bench[section].get(key)
+            if not isinstance(v, (int, float)):
+                fail(f"'{section}.{key}' missing or non-numeric: {v!r}")
+    ef16 = bench["wire_f16"]["exposed_comm_frac"]
+    eq8 = bench["wire_q8"]["exposed_comm_frac"]
+    if not (0.0 <= ef16 <= 1.0 and 0.0 <= eq8 <= 1.0):
+        fail(f"wire exposed fractions out of [0, 1]: f16={ef16}, q8={eq8}")
+    if eq8 > ef16 + TOLERANCE:
+        fail(
+            f"q8 exposed-comm fraction regressed past f16: "
+            f"{eq8:.4f} > {ef16:.4f} + {TOLERANCE}"
+        )
+    byte_ratio = bench["wire_q8"].get("f16_over_q8_bytes")
+    if not isinstance(byte_ratio, (int, float)) or byte_ratio < 1.9:
+        fail(f"q8 wire bytes must be >= 1.9x below f16 (exact accounting): {byte_ratio!r}")
+    if bench["wire_q8"]["compression_ratio"] <= 3.8:
+        fail(f"q8 compression ratio vs f32 too low: {bench['wire_q8']['compression_ratio']}")
+
     print(
         f"check_bench: OK: exposed comm depth1={d1:.4f} -> depth2={d2:.4f} "
-        f"(cross-step hidden {bench['depth2']['cross_hidden_ms_per_step']:.4f} ms/step)"
+        f"(cross-step hidden {bench['depth2']['cross_hidden_ms_per_step']:.4f} ms/step); "
+        f"wire q8 exposed {eq8:.4f} <= f16 {ef16:.4f} + tol, "
+        f"bytes {byte_ratio:.3f}x below f16"
     )
 
 
