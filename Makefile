@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-check artifacts clean
+.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-check chaos-smoke artifacts clean
 
 verify: build test
 
@@ -33,9 +33,16 @@ bench-pipeline:
 	$(CARGO) bench --bench pipeline
 
 # Assert the bench artifact's structural invariants (depth-2 section
-# present, whole-run exposed comm no worse than depth 1).
+# present, whole-run exposed comm no worse than depth 1, crash recovery
+# bitwise with bounded overhead).
 bench-check:
 	python3 scripts/check_bench.py BENCH_pipeline.json
+
+# Fault-injection system tests only: the chaos grid (crash/stall/panic/
+# lane faults × depth × wire recover bitwise), plus the seeded random
+# fault-plan never-deadlock sweep. CHAOS_FULL=1 widens the random sweep.
+chaos-smoke:
+	$(CARGO) test -q --test faults
 
 # AOT-lower the JAX/Pallas graphs to HLO text + manifest (PJRT path only).
 artifacts:

@@ -300,6 +300,49 @@ fn main() {
         replay_residual_frac * 100.0
     );
 
+    // ---- fault tolerance: recovery overhead under an injected crash ------
+    // Same depth-2 chunked config, one worker crashed mid-run: the run
+    // must finish bitwise identical to the clean one, and the gate in
+    // scripts/check_bench.py bounds the recovery overhead (faulted
+    // elapsed / clean elapsed − 1).
+    let fault_steps = if quick { 6 } else { 12 };
+    let fault_run = |spec: &str| {
+        let mut cfg = bench_cfg();
+        cfg.chunk_bytes = chunk_bytes;
+        cfg.pipeline_depth = 2;
+        cfg.total_steps = fault_steps;
+        cfg.fault_spec = spec.into();
+        // Short detection deadline: it is pure dead time in the recovery
+        // cost, and the overhead gate compares against a short clean run.
+        cfg.fault_deadline_ms = 100;
+        let mut t = Trainer::new(cfg, engine.clone()).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..fault_steps {
+            t.step().unwrap();
+        }
+        t.flush_recovering().unwrap();
+        (t0.elapsed().as_secs_f64(), t)
+    };
+    let (clean_s, mut clean_t) = fault_run("");
+    let crash_step = fault_steps / 2;
+    let (faulted_s, mut faulted_t) = fault_run(&format!("crash@{crash_step}:1"));
+    let bitwise_equal = clean_t.params() == faulted_t.params()
+        && clean_t.bn_state() == faulted_t.bn_state();
+    let recovery_count = faulted_t.recovery_count();
+    let recovery_cost_s = faulted_t.recovery_cost_s();
+    let fault_overhead_frac = if clean_s > 0.0 { faulted_s / clean_s - 1.0 } else { 0.0 };
+    println!(
+        "\n== fault tolerance (crash@{crash_step}:1, {} surviving threads) ==",
+        faulted_t.phys_workers_alive()
+    );
+    println!(
+        "clean {clean_s:.3}s vs faulted {faulted_s:.3}s -> overhead {:.1}% \
+         ({recovery_count} recoveries, {:.1} ms recovery cost, bitwise_equal={bitwise_equal})",
+        fault_overhead_frac * 100.0,
+        recovery_cost_s * 1e3
+    );
+    assert!(bitwise_equal, "crash recovery must be bitwise identical");
+
     // ---- result files -----------------------------------------------------
     // A degenerate fit leaves NaNs; serialize those as null, not bare NaN.
     let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
@@ -356,6 +399,22 @@ fn main() {
                 ("f16_over_q8_bytes", Json::Num(f16_over_q8_bytes)),
                 ("error_feedback", Json::Bool(true)),
                 ("quant_error_norm", Json::Num(q8_quant_err)),
+            ]),
+        ),
+        // Fault-tolerance section: gated by scripts/check_bench.py (the
+        // recovery must have happened, stayed bitwise, and cost less than
+        // one clean run).
+        (
+            "faults",
+            Json::obj(vec![
+                ("steps", Json::Num(fault_steps as f64)),
+                ("clean_elapsed_s", Json::Num(clean_s)),
+                ("faulted_elapsed_s", Json::Num(faulted_s)),
+                ("recovery_count", Json::Num(recovery_count as f64)),
+                ("recovery_cost_s", Json::Num(recovery_cost_s)),
+                ("overhead_frac", Json::Num(fault_overhead_frac)),
+                ("bitwise_equal", Json::Bool(bitwise_equal)),
+                ("surviving_workers", Json::Num(faulted_t.phys_workers_alive() as f64)),
             ]),
         ),
         ("measured_hidden_frac", Json::Num(measured.hidden_frac)),

@@ -1,17 +1,30 @@
 //! Checkpointing: save/restore the full training state (master weights,
-//! momentum, BN statistics, step counter) to a self-describing binary
+//! momentum, BN statistics, step counter — and, for q8+EF runs, the
+//! per-worker error-feedback residuals) to a self-describing binary
 //! format. The MLPerf-style runs this repo reproduces are short, but any
 //! framework a team would deploy needs resumable state — and the packed
-//! flat-buffer layout makes the format trivial: one JSON header + three
-//! raw little-endian f32 sections.
+//! flat-buffer layout makes the format trivial: one JSON header + raw
+//! little-endian f32 sections.
 //!
 //! Format:
 //!   bytes 0..8   magic "YASGD1\n\0"
 //!   u32 LE       header length H
-//!   H bytes      JSON header: model name, buffer lengths, step, seed
+//!   H bytes      JSON header: model name, buffer lengths, step, seed,
+//!                payload_len + crc32 (integrity), EF section shape
 //!   raw f32 LE   params (padded_param_count)
 //!   raw f32 LE   momentum (padded_param_count)
 //!   raw f32 LE   bn_state (state_count)
+//!   raw f32 LE   ef residuals, ef_workers × ef_len (omitted when EF off)
+//!
+//! Durability: `save` writes to `<path>.tmp`, fsyncs the file, renames it
+//! over the target and best-effort-fsyncs the parent directory — a crash
+//! at ANY point leaves either the old checkpoint or the new one, never a
+//! torn file at the target path. Integrity: the header carries the exact
+//! payload byte length and a CRC32 of the payload; `load` verifies both,
+//! so a truncated or bit-flipped checkpoint is rejected with a clear
+//! error instead of silently resuming from garbage. Headers written
+//! before these fields existed (legacy files) still load — the checks are
+//! skipped, matching the old behavior exactly.
 
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -19,6 +32,19 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"YASGD1\n\0";
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), bitwise — the
+/// payload is read once at load time anyway, so a table buys nothing.
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            crc = (crc >> 1) ^ (0xEDB8_8320 & (0u32.wrapping_sub(crc & 1)));
+        }
+    }
+    !crc
+}
 
 /// A complete training state snapshot.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,10 +55,47 @@ pub struct Checkpoint {
     pub params: Vec<f32>,
     pub momentum: Vec<f32>,
     pub bn_state: Vec<f32>,
+    /// Per-worker error-feedback residual buffers (empty when the run had
+    /// EF off — the writer then omits the section entirely, and legacy
+    /// checkpoints load as empty). Carried optimizer state for a q8+EF
+    /// run: dropping it forks the resumed trajectory by one step's
+    /// quantization error.
+    pub ef_residuals: Vec<Vec<f32>>,
+    /// Σ residual² accumulated through `step` (restores the report's
+    /// cumulative quantization-error accounting).
+    pub ef_err_sq: f64,
 }
 
 impl Checkpoint {
+    /// Payload = every f32 section, in file order, as LE bytes.
+    fn payload_bytes(&self) -> Vec<u8> {
+        let n = self.params.len()
+            + self.momentum.len()
+            + self.bn_state.len()
+            + self.ef_residuals.iter().map(Vec::len).sum::<usize>();
+        let mut bytes = Vec::with_capacity(n * 4);
+        let mut put = |buf: &[f32]| {
+            for v in buf {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        put(&self.params);
+        put(&self.momentum);
+        put(&self.bn_state);
+        for r in &self.ef_residuals {
+            put(r);
+        }
+        bytes
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
+        let ef_workers = self.ef_residuals.len();
+        let ef_len = self.ef_residuals.first().map_or(0, Vec::len);
+        anyhow::ensure!(
+            self.ef_residuals.iter().all(|r| r.len() == ef_len),
+            "EF residual buffers must all have the same length"
+        );
+        let payload = self.payload_bytes();
         let header = Json::obj(vec![
             ("model_name", Json::Str(self.model_name.clone())),
             ("step", Json::Num(self.step as f64)),
@@ -40,11 +103,16 @@ impl Checkpoint {
             ("params_len", Json::Num(self.params.len() as f64)),
             ("momentum_len", Json::Num(self.momentum.len() as f64)),
             ("bn_state_len", Json::Num(self.bn_state.len() as f64)),
+            ("ef_workers", Json::Num(ef_workers as f64)),
+            ("ef_len", Json::Num(ef_len as f64)),
+            ("ef_err_sq", Json::Num(self.ef_err_sq)),
+            ("payload_len", Json::Num(payload.len() as f64)),
+            ("crc32", Json::Num(crc32(&payload) as f64)),
         ])
         .to_string();
 
-        // Write to a temp file + rename so a crash never leaves a torn
-        // checkpoint at the target path.
+        // Temp file + fsync + rename: a crash at any point leaves either
+        // the complete old checkpoint or the complete new one at `path`.
         let tmp = path.with_extension("tmp");
         {
             let mut f = std::io::BufWriter::new(
@@ -53,14 +121,21 @@ impl Checkpoint {
             f.write_all(MAGIC)?;
             f.write_all(&(header.len() as u32).to_le_bytes())?;
             f.write_all(header.as_bytes())?;
-            for buf in [&self.params, &self.momentum, &self.bn_state] {
-                for v in buf.iter() {
-                    f.write_all(&v.to_le_bytes())?;
-                }
-            }
+            f.write_all(&payload)?;
             f.flush()?;
+            // The rename below is only atomic-durable if the DATA reached
+            // the disk first; without this a post-crash file can be the
+            // right name around unwritten blocks.
+            f.get_ref().sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
         }
         std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
+        // Durability of the rename itself (the directory entry). Best
+        // effort: directory fsync is not supported everywhere.
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
         Ok(())
     }
 
@@ -80,23 +155,59 @@ impl Checkpoint {
         let header = Json::parse(std::str::from_utf8(&hbytes)?)
             .map_err(|e| anyhow::anyhow!("header: {e}"))?;
 
-        let read_f32s = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
-            let mut bytes = vec![0u8; n * 4];
-            f.read_exact(&mut bytes)?;
-            Ok(bytes
+        let params_len = header.req_usize("params_len")?;
+        let momentum_len = header.req_usize("momentum_len")?;
+        let bn_state_len = header.req_usize("bn_state_len")?;
+        // EF section + integrity fields are absent from legacy headers:
+        // those files load with no residuals and no verification.
+        let opt_usize =
+            |key: &str| header.get(key).and_then(Json::as_f64).map(|v| v as usize);
+        let ef_workers = opt_usize("ef_workers").unwrap_or(0);
+        let ef_len = opt_usize("ef_len").unwrap_or(0);
+        let ef_err_sq = header.get("ef_err_sq").and_then(Json::as_f64).unwrap_or(0.0);
+
+        let expect_len =
+            (params_len + momentum_len + bn_state_len + ef_workers * ef_len) * 4;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)
+            .with_context(|| format!("reading checkpoint payload from {path:?}"))?;
+        if let Some(recorded) = opt_usize("payload_len") {
+            anyhow::ensure!(
+                payload.len() == recorded,
+                "checkpoint {path:?} is corrupt: payload is {} bytes, header \
+                 records {recorded} (truncated or overwritten file)",
+                payload.len(),
+            );
+        }
+        anyhow::ensure!(
+            payload.len() == expect_len,
+            "checkpoint {path:?} is corrupt: payload is {} bytes, sections \
+             need {expect_len} (truncated file or trailing bytes)",
+            payload.len(),
+        );
+        if let Some(recorded) = header.get("crc32").and_then(Json::as_f64) {
+            let actual = crc32(&payload);
+            anyhow::ensure!(
+                actual == recorded as u32,
+                "checkpoint {path:?} is corrupt: payload CRC32 {actual:#010x} \
+                 does not match the header's {:#010x} (bit rot or a torn write)",
+                recorded as u32,
+            );
+        }
+
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Vec<f32> {
+            let sect = payload[off..off + n * 4]
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect())
+                .collect();
+            off += n * 4;
+            sect
         };
-        let params = read_f32s(&mut f, header.req_usize("params_len")?)?;
-        let momentum = read_f32s(&mut f, header.req_usize("momentum_len")?)?;
-        let bn_state = read_f32s(&mut f, header.req_usize("bn_state_len")?)?;
-        // Trailing garbage check.
-        let mut extra = [0u8; 1];
-        anyhow::ensure!(
-            f.read(&mut extra)? == 0,
-            "trailing bytes after checkpoint payload"
-        );
+        let params = take(params_len);
+        let momentum = take(momentum_len);
+        let bn_state = take(bn_state_len);
+        let ef_residuals: Vec<Vec<f32>> = (0..ef_workers).map(|_| take(ef_len)).collect();
         Ok(Checkpoint {
             model_name: header.req_str("model_name")?.to_string(),
             step: header.req_usize("step")?,
@@ -104,6 +215,8 @@ impl Checkpoint {
             params,
             momentum,
             bn_state,
+            ef_residuals,
+            ef_err_sq,
         })
     }
 }
@@ -120,7 +233,24 @@ mod tests {
             params: (0..1024).map(|i| i as f32 * 0.001).collect(),
             momentum: (0..1024).map(|i| -(i as f32) * 0.002).collect(),
             bn_state: vec![0.0, 1.0, 0.5, 2.0],
+            ef_residuals: Vec::new(),
+            ef_err_sq: 0.0,
         }
+    }
+
+    fn sample_ef() -> Checkpoint {
+        let mut c = sample();
+        c.ef_residuals =
+            (0..3).map(|w| (0..1024).map(|i| (w * 1024 + i) as f32 * 1e-4).collect()).collect();
+        c.ef_err_sq = 0.125;
+        c
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
     }
 
     #[test]
@@ -136,6 +266,19 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_with_ef_residuals() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_ef");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ef.ckpt");
+        let c = sample_ef();
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(c2.ef_residuals.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let dir = std::env::temp_dir().join("yasgd_ckpt_test_magic");
         std::fs::create_dir_all(&dir).unwrap();
@@ -146,14 +289,32 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn rejects_truncated_with_clear_error() {
         let dir = std::env::temp_dir().join("yasgd_ckpt_test_trunc");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.ckpt");
-        sample().save(&path).unwrap();
+        sample_ef().save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "want a clear corruption error, got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bitflip_via_crc() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_flip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.ckpt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit deep inside the params section — same length, so
+        // only the CRC can catch it.
+        let n = bytes.len();
+        bytes[n - 100] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC32"), "want a CRC error, got: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -167,6 +328,42 @@ mod tests {
         bytes.extend_from_slice(b"junk");
         std::fs::write(&path, &bytes).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_legacy_header_without_integrity_fields() {
+        // A pre-PR-6 checkpoint: no payload_len/crc32/EF fields. Hand-craft
+        // one and check it still loads (with empty residuals).
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.ckpt");
+        let header = r#"{"model_name": "m", "step": 3, "seed": 7,
+                         "params_len": 2, "momentum_len": 2, "bn_state_len": 1}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        assert_eq!(c.step, 3);
+        assert_eq!(c.params, vec![1.0, 2.0]);
+        assert!(c.ef_residuals.is_empty());
+        assert_eq!(c.ef_err_sq, 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn no_tmp_file_left_behind() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_tmp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        sample().save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists(), "tmp file must be renamed away");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -541,6 +541,12 @@ pub struct CommEngine {
     threads: usize,
     plans: Vec<(usize, usize, Plan)>,
     arena: PtrArena,
+    /// Fault-injection throttle (`faults::FaultKind::CommSlow`): dilate
+    /// each allreduce's wall-clock ×factor by sleeping `elapsed·(f−1)`
+    /// after the reduction. Purely temporal — the reduced values are the
+    /// throttle-free bits — so an injected slowdown can only ever trip the
+    /// straggler detector, never the numerics contract. 1.0 = healthy.
+    slowdown: f64,
 }
 
 impl CommEngine {
@@ -553,7 +559,13 @@ impl CommEngine {
             threads: threads.max(1),
             plans: Vec::new(),
             arena: PtrArena::default(),
+            slowdown: 1.0,
         }
+    }
+
+    /// Set the fault-injection slowdown factor (>= 1; see field docs).
+    pub fn set_slowdown(&mut self, factor: f64) {
+        self.slowdown = factor.max(1.0);
     }
 
     pub fn algorithm(&self) -> Algorithm {
@@ -631,6 +643,10 @@ impl CommEngine {
         let mut stats = plan.stats.clone();
         drop(shared);
         self.arena.bufs.clear();
+        if self.slowdown > 1.0 {
+            let pad = t0.elapsed().as_secs_f64() * (self.slowdown - 1.0);
+            std::thread::sleep(std::time::Duration::from_secs_f64(pad));
+        }
         stats.elapsed_s = t0.elapsed().as_secs_f64();
         stats
     }

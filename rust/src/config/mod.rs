@@ -124,6 +124,43 @@ pub struct RunConfig {
     pub noise: f64,
     /// Echo MLPerf log lines to stderr.
     pub mlperf_echo: bool,
+    /// Explicit fault-injection schedule: `;`-separated
+    /// `kind@step:target[:arg]` directives (see `faults::FaultPlan::parse`
+    /// — `crash@3:1;stall@5:0:800;slow@2:0:8`). Empty = no explicit plan.
+    /// Faults are injected into the PIPELINED executor's worker pool; the
+    /// sequential reference executor ignores the plan.
+    pub fault_spec: String,
+    /// Seed for randomly generated fault plans (`fault_count > 0`) and the
+    /// replay key recorded in `TrainReport`.
+    pub fault_seed: u64,
+    /// Number of random faults to draw from `fault_seed` when no explicit
+    /// `fault_spec` is given. 0 = none.
+    pub fault_count: usize,
+    /// Supervise the worker pool: bounded-deadline waits + heartbeat
+    /// staleness detection, so a crashed/stalled thread surfaces as a
+    /// typed error instead of wedging the step forever. `--no-supervise`
+    /// restores the legacy unbounded waits.
+    pub supervise: bool,
+    /// Recover in-process from detected losses: poison + drain the broken
+    /// generation, re-shard the pool over the survivors, restore the last
+    /// in-memory snapshot and replay — bitwise-identically to a fault-free
+    /// run. `--no-recover` fails fast with the typed error instead.
+    pub recover: bool,
+    /// Supervision deadline in milliseconds: how long a wait may starve —
+    /// with NO heartbeat from the thread it is waiting on — before that
+    /// thread is declared lost. Threads with fresh heartbeats are waited
+    /// on indefinitely (slow ≠ dead), so a generous default costs nothing
+    /// on healthy runs.
+    pub fault_deadline_ms: u64,
+    /// Auto-snapshot interval in steps for in-process recovery (params +
+    /// momentum + BN + EF residuals cloned at a step boundary inside the
+    /// leader's tail-retire, so depth-2 overlap is preserved). 0 disables
+    /// snapshots — and with them, recovery.
+    pub ckpt_every: usize,
+    /// Straggler flagging threshold: a bucket reduction running longer
+    /// than this multiple of the rolling median is logged as a
+    /// `FaultEvent::Straggler` (detection only; never triggers recovery).
+    pub straggler_factor: f64,
 }
 
 impl Default for RunConfig {
@@ -158,6 +195,14 @@ impl Default for RunConfig {
             val_size: 512,
             noise: 0.25,
             mlperf_echo: false,
+            fault_spec: String::new(),
+            fault_seed: 0,
+            fault_count: 0,
+            supervise: true,
+            recover: true,
+            fault_deadline_ms: 30_000,
+            ckpt_every: 1,
+            straggler_factor: 4.0,
         }
     }
 }
@@ -266,6 +311,18 @@ impl RunConfig {
         if args.flag("mlperf-log") {
             c.mlperf_echo = true;
         }
+        c.fault_spec = args.get_or("fault", &c.fault_spec).to_string();
+        c.fault_seed = args.get_u64("fault-seed", c.fault_seed)?;
+        c.fault_count = args.get_usize("fault-count", c.fault_count)?;
+        if args.flag("no-supervise") {
+            c.supervise = false;
+        }
+        if args.flag("no-recover") {
+            c.recover = false;
+        }
+        c.fault_deadline_ms = args.get_u64("fault-deadline-ms", c.fault_deadline_ms)?;
+        c.ckpt_every = args.get_usize("ckpt-every", c.ckpt_every)?;
+        c.straggler_factor = args.get_f64("straggler-factor", c.straggler_factor)?;
         c.validate()?;
         Ok(c)
     }
@@ -310,6 +367,22 @@ impl RunConfig {
             val_size: get_usize("val_size", d.val_size),
             noise: get_f64("noise", d.noise),
             mlperf_echo: get_bool("mlperf_echo", d.mlperf_echo),
+            fault_spec: get_str("fault_spec", &d.fault_spec),
+            fault_seed: j
+                .get("fault_seed")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64)
+                .unwrap_or(d.fault_seed),
+            fault_count: get_usize("fault_count", d.fault_count),
+            supervise: get_bool("supervise", d.supervise),
+            recover: get_bool("recover", d.recover),
+            fault_deadline_ms: j
+                .get("fault_deadline_ms")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64)
+                .unwrap_or(d.fault_deadline_ms),
+            ckpt_every: get_usize("ckpt_every", d.ckpt_every),
+            straggler_factor: get_f64("straggler_factor", d.straggler_factor),
         };
         c.validate()?;
         Ok(c)
@@ -334,6 +407,19 @@ impl RunConfig {
             self.link_alpha_us >= 0.0 && self.link_beta_gbps > 0.0,
             "link alpha must be >= 0 and beta > 0"
         );
+        anyhow::ensure!(
+            self.straggler_factor > 1.0,
+            "straggler_factor must be > 1 (it multiplies the rolling median)"
+        );
+        anyhow::ensure!(
+            self.fault_deadline_ms >= 10,
+            "fault_deadline_ms must be >= 10 (shorter deadlines misfire on scheduling jitter)"
+        );
+        if !self.fault_spec.is_empty() {
+            // Parse eagerly so a typo'd schedule fails at config load, not
+            // mid-run at the injection step.
+            crate::faults::FaultPlan::parse(&self.fault_spec, self.fault_seed)?;
+        }
         self.fence_mode()?;
         self.algorithm()?;
         self.precision()?;
@@ -487,6 +573,55 @@ mod tests {
         let floor = (link.latency_s * link.bandwidth_bps) as usize;
         assert_eq!(floor, 16_000);
         assert_ne!(floor, RunConfig::default().chunk_bytes);
+    }
+
+    #[test]
+    fn fault_knobs_round_trip() {
+        let d = RunConfig::default();
+        assert!(d.supervise, "supervision defaults on");
+        assert!(d.recover, "recovery defaults on");
+        assert!(d.fault_spec.is_empty() && d.fault_count == 0, "no faults by default");
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--fault",
+            "crash@3:1;stall@5:0:800",
+            "--fault-seed",
+            "42",
+            "--fault-deadline-ms",
+            "500",
+            "--ckpt-every",
+            "2",
+            "--straggler-factor",
+            "3.5",
+            "--no-recover",
+        ]))
+        .unwrap();
+        assert_eq!(c.fault_spec, "crash@3:1;stall@5:0:800");
+        assert_eq!(c.fault_seed, 42);
+        assert_eq!(c.fault_deadline_ms, 500);
+        assert_eq!(c.ckpt_every, 2);
+        assert!((c.straggler_factor - 3.5).abs() < 1e-12);
+        assert!(c.supervise && !c.recover);
+        let c = RunConfig::from_json(
+            r#"{"fault_spec": "slow@2:0:8", "fault_seed": 7, "fault_count": 3,
+                "supervise": false, "fault_deadline_ms": 1000, "ckpt_every": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fault_spec, "slow@2:0:8");
+        assert_eq!(c.fault_seed, 7);
+        assert_eq!(c.fault_count, 3);
+        assert!(!c.supervise);
+        assert_eq!(c.fault_deadline_ms, 1000);
+        assert_eq!(c.ckpt_every, 4);
+    }
+
+    #[test]
+    fn bad_fault_values_rejected() {
+        // Malformed schedules fail at config load, not mid-run.
+        assert!(RunConfig::from_json(r#"{"fault_spec": "crash@oops"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"fault_spec": "meteor@1:0"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"straggler_factor": 1.0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"fault_deadline_ms": 5}"#).is_err());
     }
 
     #[test]

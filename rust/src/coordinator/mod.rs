@@ -44,6 +44,7 @@ use crate::bucket::BucketPlan;
 use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
 use crate::config::{FenceMode, RunConfig};
 use crate::data::{make_batch, Batch, DataConfig, Shard, Split, Synthetic};
+use crate::faults::{FaultEvent, FaultPlan, Heartbeats, StragglerTracker};
 use crate::init;
 use crate::metrics::{StepBreakdown, Throughput, Timer};
 use crate::mlperf::{tags, MlperfLogger};
@@ -54,6 +55,11 @@ use crate::util::codec;
 use crate::util::json::Json;
 use anyhow::Result;
 use std::sync::Arc;
+
+/// In-process recoveries one `step()`/`flush_recovering()` call will
+/// attempt before giving up and surfacing the error: bounds the retry
+/// loop when the fault is not transient (e.g. every replay keeps dying).
+const MAX_RECOVERIES: usize = 3;
 
 mod pipeline;
 mod worker_pool;
@@ -137,6 +143,19 @@ pub struct TrainReport {
     /// 1 − exposed/active comm, see `StepBreakdown::overlap_efficiency`.
     pub overlap_efficiency: f64,
     pub mlperf_elapsed_s: Option<f64>,
+    /// Replay key for the run's deterministic fault plan (0 when no plan;
+    /// an explicit `--fault` schedule still records the seed it was
+    /// parsed with). Re-running with the same config + seed reproduces
+    /// the exact same injections.
+    pub fault_seed: u64,
+    /// Typed fault log: injections, detections (worker/lane loss, panics,
+    /// stragglers) and recoveries, in occurrence order.
+    pub fault_events: Vec<FaultEvent>,
+    /// In-process recoveries performed (re-shard + snapshot restore).
+    pub recovery_count: usize,
+    /// Total wall-clock spent recovering: detection → caught back up to
+    /// the step that faulted (teardown + restore + replay).
+    pub recovery_cost_s: f64,
 }
 
 impl TrainReport {
@@ -213,8 +232,30 @@ impl TrainReport {
             ("wire_effective_gbps", Json::Num(self.wire_totals.effective_gbps())),
             ("comm_exposed_total_s", Json::Num(self.comm_exposed_total_s)),
             ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
+            ("fault_seed", Json::Num(self.fault_seed as f64)),
+            (
+                "fault_events",
+                Json::Arr(self.fault_events.iter().map(FaultEvent::to_json).collect()),
+            ),
+            ("recovery_count", Json::Num(self.recovery_count as f64)),
+            ("recovery_cost_s", Json::Num(self.recovery_cost_s)),
         ])
     }
+}
+
+/// In-memory recovery snapshot: the full training state at a step
+/// boundary, captured by the auto-snapshot policy (`cfg.ckpt_every`) so a
+/// detected loss can restore and replay WITHOUT a process restart or a
+/// disk round-trip. Carries everything `restore()` needs plus the
+/// error-feedback state a disk checkpoint now also carries.
+#[derive(Clone)]
+pub(crate) struct Snapshot {
+    pub(crate) step: usize,
+    pub(crate) params: Vec<f32>,
+    pub(crate) momentum: Vec<f32>,
+    pub(crate) bn_state: Vec<f32>,
+    pub(crate) ef_residuals: Vec<Vec<f32>>,
+    pub(crate) ef_err_sq: f64,
 }
 
 /// The leader: owns master state, the worker pool and the step pipeline.
@@ -309,6 +350,29 @@ pub struct Trainer {
     /// calibration hook for `overlap`/`simnet`.
     last_pipeline: Option<MeasuredPipeline>,
 
+    // ---- fault tolerance (faults module + supervisor + recovery) -------
+    /// The run's deterministic fault plan (None = healthy run). Specs are
+    /// one-shot: a replayed step after recovery re-draws nothing.
+    fault_plan: Option<FaultPlan>,
+    /// Typed event log (injections, detections, recoveries, stragglers),
+    /// cloned into `TrainReport`.
+    fault_events: Vec<FaultEvent>,
+    /// Shared progress stamps for the live pool: cells 0..phys are grad
+    /// threads, phys.. are comm lanes (rebuilt with the pool).
+    heartbeats: Option<Arc<Heartbeats>>,
+    /// Surviving PHYSICAL grad-thread budget. Starts at `cfg.workers`;
+    /// each detected worker loss shrinks it (floor 1). The LOGICAL worker
+    /// count — shards, buffers, ledger targets, numerics — never moves.
+    phys_alive: usize,
+    /// Comm lanes lost to detected stalls; shrinks `comm_lane_split`.
+    lanes_lost: usize,
+    /// Latest auto-snapshot (the in-process restore point).
+    last_snapshot: Option<Snapshot>,
+    /// Rolling-median tracker over per-bucket reduction durations.
+    straggler: StragglerTracker,
+    recovery_count: usize,
+    recovery_cost_s: f64,
+
     pub breakdown: StepBreakdown,
     wire_totals: WireStats,
     images_seen: u64,
@@ -366,6 +430,24 @@ impl Trainer {
         let pipeline = cfg.overlap && engine.supports_pipeline();
         let fence_mode = cfg.fence_mode()?;
         let ef = cfg.error_feedback_active()?;
+        // Deterministic fault plan: an explicit `--fault` schedule wins;
+        // otherwise `--fault-count N` draws N random faults from
+        // `--fault-seed`. Replayable from (config, seed) alone.
+        let fault_lanes = cfg.comm_threads.min(plan.buckets.len()).max(1);
+        let fault_plan = if !cfg.fault_spec.is_empty() {
+            Some(FaultPlan::parse(&cfg.fault_spec, cfg.fault_seed)?)
+        } else if cfg.fault_count > 0 {
+            Some(FaultPlan::generate(
+                cfg.fault_seed,
+                cfg.total_steps,
+                workers,
+                fault_lanes,
+                cfg.fault_count,
+            ))
+        } else {
+            None
+        };
+        let phys_alive = workers;
         Ok(Trainer {
             cfg,
             engine,
@@ -411,6 +493,15 @@ impl Trainer {
             pending_lane_msgs: Vec::new(),
             chunk_bytes_used,
             last_pipeline: None,
+            fault_plan,
+            fault_events: Vec::new(),
+            heartbeats: None,
+            phys_alive,
+            lanes_lost: 0,
+            last_snapshot: None,
+            straggler: StragglerTracker::default(),
+            recovery_count: 0,
+            recovery_cost_s: 0.0,
             breakdown: StepBreakdown::default(),
             wire_totals: WireStats::default(),
             images_seen: 0,
@@ -508,6 +599,32 @@ impl Trainer {
         self.step_idx
     }
 
+    /// Replay key for the run's fault plan (0 when none is active).
+    pub fn fault_seed(&self) -> u64 {
+        self.fault_plan.as_ref().map_or(0, |p| p.seed)
+    }
+
+    /// Typed fault log so far: injections, detections, recoveries,
+    /// stragglers, in occurrence order.
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        &self.fault_events
+    }
+
+    /// In-process recoveries performed so far.
+    pub fn recovery_count(&self) -> usize {
+        self.recovery_count
+    }
+
+    /// Total wall-clock spent in recovery so far (detection → caught up).
+    pub fn recovery_cost_s(&self) -> f64 {
+        self.recovery_cost_s
+    }
+
+    /// Surviving physical grad threads the next pool spawn will use.
+    pub fn phys_workers_alive(&self) -> usize {
+        self.phys_alive
+    }
+
     pub fn epoch(&self) -> f64 {
         self.images_seen as f64 / self.cfg.train_size as f64
     }
@@ -526,16 +643,96 @@ impl Trainer {
     /// transfers inside each lane's allreduce. The ONE sizing rule both
     /// executors share, so they can never silently diverge.
     pub(crate) fn comm_lane_split(&self) -> (usize, usize) {
-        let lanes = self.cfg.comm_threads.min(self.plan.buckets.len()).max(1);
+        // Lanes detected as lost shrink the budget (floor 1): the respawned
+        // pool simply runs with fewer lanes — bucket→lane assignment is
+        // round-robin by bucket index, so the REDUCTION order (and thus the
+        // bits) never depends on the lane count.
+        let budget = self.cfg.comm_threads.saturating_sub(self.lanes_lost).max(1);
+        let lanes = budget.min(self.plan.buckets.len()).max(1);
         (lanes, (self.cfg.comm_threads / lanes).max(1))
     }
 
     /// Run one optimization step. Returns (mean loss, train accuracy).
     ///
+    /// This is the SUPERVISED wrapper: it runs `step_attempt`, and when an
+    /// attempt fails on a detected fault (lost worker/lane, panic) with
+    /// recovery enabled, it tears the pool down, restores the last
+    /// in-memory snapshot, replays the lost steps over the surviving
+    /// threads and returns the requested step's result — bitwise identical
+    /// to the unfaulted run, because shards re-seed deterministically and
+    /// injected faults are one-shot. Bounded by `MAX_RECOVERIES` per call.
+    pub fn step(&mut self) -> Result<(f32, f32)> {
+        // Lazy step-0 restore point: taken before the first pipelined
+        // dispatch (and again right after a disk `restore()`), so recovery
+        // always has somewhere to go back to even before the periodic
+        // `ckpt_every` snapshots start landing.
+        if self.pipeline
+            && self.cfg.recover
+            && self.cfg.ckpt_every > 0
+            && self.last_snapshot.is_none()
+            && self.inflight.is_none()
+        {
+            self.last_snapshot = Some(Snapshot {
+                step: self.step_idx,
+                params: self.params.clone(),
+                momentum: self.momentum.clone(),
+                bn_state: self.bn_state.clone(),
+                ef_residuals: self.ef_residuals.clone(),
+                ef_err_sq: self.ef_err_sq,
+            });
+        }
+        let target = self.step_idx;
+        let mut recoveries = 0usize;
+        let mut recovery_t0: Option<std::time::Instant> = None;
+        let mut restored_from = 0usize;
+        loop {
+            match self.step_attempt() {
+                Ok(out) => {
+                    // Replaying restored steps: keep going until the step
+                    // this call was asked for has run.
+                    if self.step_idx <= target {
+                        continue;
+                    }
+                    if let Some(t0) = recovery_t0.take() {
+                        let cost = t0.elapsed().as_secs_f64();
+                        self.recovery_cost_s += cost;
+                        let (lanes, _) = self.comm_lane_split();
+                        self.fault_events.push(FaultEvent::Recovered {
+                            step: target,
+                            restored_step: restored_from,
+                            phys_workers: self.phys_alive,
+                            lanes,
+                            cost_ms: cost * 1e3,
+                        });
+                    }
+                    return Ok(out);
+                }
+                Err(e) => {
+                    recovery_t0.get_or_insert_with(std::time::Instant::now);
+                    // Poison + join the pool FIRST, on every error path —
+                    // even when recovery is off, so Drop never blocks on a
+                    // wedged lane.
+                    self.fault_teardown();
+                    if !(self.pipeline && self.cfg.recover) || recoveries >= MAX_RECOVERIES {
+                        return Err(e);
+                    }
+                    let Some(snap_step) = self.restore_snapshot() else {
+                        return Err(e);
+                    };
+                    recoveries += 1;
+                    self.recovery_count += 1;
+                    restored_from = snap_step;
+                }
+            }
+        }
+    }
+
+    /// One UNSUPERVISED optimization step attempt.
+    ///
     /// Dispatches to the pipelined streaming executor (`self.pipeline`,
     /// the default) or the sequential barrier reference — bit-identical by
     /// contract, so flipping the flag changes wall-clock only.
-    pub fn step(&mut self) -> Result<(f32, f32)> {
+    fn step_attempt(&mut self) -> Result<(f32, f32)> {
         let b = self.engine.manifest().train.batch_size;
         let variant = if self.cfg.label_smoothing {
             GradVariant::Smoothed
@@ -780,6 +977,12 @@ impl Trainer {
             params: self.params.clone(),
             momentum: self.momentum.clone(),
             bn_state: self.bn_state.clone(),
+            // Error-feedback residuals ARE model state for a q8+EF run:
+            // without them a resume drops one step's worth of carried
+            // quantization error and the trajectory forks. Empty when EF
+            // is off (and the writer omits the section entirely).
+            ef_residuals: self.ef_residuals.clone(),
+            ef_err_sq: self.ef_err_sq,
         }
     }
 
@@ -811,28 +1014,58 @@ impl Trainer {
         if let Some(fence) = &self.fence {
             fence.reset(ckpt.step as u64);
         }
-        // Error-feedback residuals are NOT checkpointed (they are a
-        // per-worker compression artifact, not model state): a resumed
-        // q8 run restarts with zero residuals, so its trajectory may
-        // drift from the uninterrupted run by up to one step's
-        // quantization error — the same bound EF guarantees overall.
-        for r in self.ef_residuals.iter_mut() {
-            r.fill(0.0);
+        // Error-feedback residuals ARE checkpointed now (they are carried
+        // optimizer state for a q8 run — dropping them forks the
+        // trajectory by one step's quantization error). Restore them when
+        // the checkpoint has them; a LEGACY checkpoint without an EF
+        // section restores zeros, the old documented drift bound.
+        if self.ef {
+            if ckpt.ef_residuals.len() == self.ef_residuals.len() {
+                for (dst, src) in self.ef_residuals.iter_mut().zip(ckpt.ef_residuals.iter()) {
+                    anyhow::ensure!(
+                        dst.len() == src.len(),
+                        "checkpoint EF residual length {} does not match the manifest ({})",
+                        src.len(),
+                        dst.len()
+                    );
+                    dst.copy_from_slice(src);
+                }
+                self.ef_err_sq = ckpt.ef_err_sq;
+            } else if ckpt.ef_residuals.is_empty() {
+                for r in self.ef_residuals.iter_mut() {
+                    r.fill(0.0);
+                }
+                self.ef_err_sq = 0.0;
+            } else {
+                anyhow::bail!(
+                    "checkpoint carries {} EF residual buffers, run has {} workers",
+                    ckpt.ef_residuals.len(),
+                    self.ef_residuals.len()
+                );
+            }
         }
-        // Fast-forward the data shards so resumed runs draw the batches the
-        // uninterrupted run would have drawn. Each replayed step consumes
-        // THAT step's accumulation count — under an active `batch_ramp`
-        // that is `accum_at(s)`, not `cfg.grad_accum` (set the ramp BEFORE
-        // restoring, or the replay diverges from the uninterrupted run) —
-        // and `images_seen` accumulates the per-step global batch the same
-        // way.
+        self.reseed_shards_to(ckpt.step);
+        // Any in-memory recovery snapshot predates the restore and would
+        // rewind past it; drop it and let `step()` re-capture lazily.
+        self.last_snapshot = None;
+        Ok(())
+    }
+
+    /// Rebuild every data shard from the run seed and fast-forward it
+    /// through `step` steps, so the next draw is exactly what the
+    /// uninterrupted run would have drawn; `images_seen` is reset to
+    /// match. Each replayed step consumes THAT step's accumulation count —
+    /// under an active `batch_ramp` that is `accum_at(s)`, not
+    /// `cfg.grad_accum` (set the ramp BEFORE restoring, or the replay
+    /// diverges from the uninterrupted run).
+    fn reseed_shards_to(&mut self, step: usize) {
         for w in 0..self.cfg.workers {
             self.shards[w] =
                 crate::data::Shard::new(w, self.cfg.workers, self.cfg.train_size, self.cfg.seed);
         }
-        let b = m.train.batch_size;
+        let b = self.engine.manifest().train.batch_size;
         let mut images = 0u64;
-        for s in 0..ckpt.step {
+        for s in 0..step {
             let accum = self.accum_at(s);
             for shard in self.shards.iter_mut() {
                 for _ in 0..accum {
@@ -842,14 +1075,81 @@ impl Trainer {
             images += (self.cfg.workers * accum * b) as u64;
         }
         self.images_seen = images;
-        Ok(())
+    }
+
+    /// Restore the last in-memory auto-snapshot in place. The pool must
+    /// already be torn down (`fault_teardown`): the joins are the
+    /// happens-before edge that makes rewriting `params`/`ef_residuals`
+    /// race-free. Returns the restored step, or `None` when no snapshot
+    /// exists (recovery then gives up and surfaces the original error).
+    fn restore_snapshot(&mut self) -> Option<usize> {
+        let snap = self.last_snapshot.take()?;
+        self.params.copy_from_slice(&snap.params);
+        self.momentum.copy_from_slice(&snap.momentum);
+        self.bn_state.copy_from_slice(&snap.bn_state);
+        if self.ef {
+            for (dst, src) in self.ef_residuals.iter_mut().zip(snap.ef_residuals.iter()) {
+                dst.copy_from_slice(src);
+            }
+        }
+        self.ef_err_sq = snap.ef_err_sq;
+        self.step_idx = snap.step;
+        let step = snap.step;
+        self.last_snapshot = Some(snap);
+        self.reseed_shards_to(step);
+        Some(step)
+    }
+
+    /// `flush()` with the recovery loop around it: retire the in-flight
+    /// tail, and if a fault surfaces while doing so (at depth 2 the LAST
+    /// step's faults land here, not in any `step()` call), tear down,
+    /// restore, replay to the current step and re-flush. Used everywhere a
+    /// reader must not abandon a recoverable run (`train`'s final flush,
+    /// `evaluate`).
+    pub fn flush_recovering(&mut self) -> Result<()> {
+        let target = self.step_idx;
+        let mut recoveries = 0usize;
+        loop {
+            match self.flush() {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    let t0 = std::time::Instant::now();
+                    self.fault_teardown();
+                    if !(self.pipeline && self.cfg.recover) || recoveries >= MAX_RECOVERIES {
+                        return Err(e);
+                    }
+                    let Some(restored) = self.restore_snapshot() else {
+                        return Err(e);
+                    };
+                    recoveries += 1;
+                    self.recovery_count += 1;
+                    while self.step_idx < target {
+                        self.step()?;
+                    }
+                    let cost = t0.elapsed().as_secs_f64();
+                    self.recovery_cost_s += cost;
+                    let (lanes, _) = self.comm_lane_split();
+                    self.fault_events.push(FaultEvent::Recovered {
+                        step: target,
+                        restored_step: restored,
+                        phys_workers: self.phys_alive,
+                        lanes,
+                        cost_ms: cost * 1e3,
+                    });
+                    // Loop: the replayed final step may have left a fresh
+                    // tail in flight; flush it (and recover again if THAT
+                    // flush faults, up to the recovery budget).
+                }
+            }
+        }
     }
 
     /// Evaluate on `n_batches` of the validation split. Flushes the
-    /// in-flight generation first: evaluation reads the master state, so
-    /// it must observe a whole number of steps.
+    /// in-flight generation first (recovering from faults if the tail
+    /// surfaces one): evaluation reads the master state, so it must
+    /// observe a whole number of steps.
     pub fn evaluate(&mut self, n_batches: usize) -> Result<(f32, f32)> {
-        self.flush()?;
+        self.flush_recovering()?;
         let m = self.engine.manifest();
         let b = m.train.batch_size;
         let mut batch = Batch { images: Vec::new(), labels: Vec::new() };
@@ -937,8 +1237,9 @@ impl Trainer {
         }
 
         // Retire the final step's tail before the clock stops, so elapsed
-        // and the per-step accounting cover every step completely.
-        self.flush()?;
+        // and the per-step accounting cover every step completely (the
+        // final step's faults surface HERE at depth 2 — recover in place).
+        self.flush_recovering()?;
         self.logger.log(tags::RUN_STOP);
         self.logger.log(tags::RUN_FINAL);
         let elapsed = run_timer.elapsed_s();
@@ -984,6 +1285,10 @@ impl Trainer {
             comm_exposed_total_s: exposed.mean() * exposed.count() as f64,
             overlap_efficiency: self.breakdown.overlap_efficiency(),
             mlperf_elapsed_s: self.logger.run_elapsed_s(),
+            fault_seed: self.fault_seed(),
+            fault_events: self.fault_events.clone(),
+            recovery_count: self.recovery_count,
+            recovery_cost_s: self.recovery_cost_s,
         })
     }
 }
@@ -996,9 +1301,14 @@ impl Drop for Trainer {
     /// waits out every reduction and drains every report, leaving the
     /// pool quiescent. Errors are deliberately swallowed (the step that
     /// produced them already surfaced a Result, or the Trainer is being
-    /// torn down anyway).
+    /// torn down anyway) — but an ERRORED flush means the pool may hold
+    /// lost/wedged threads, so fall back to the fault teardown: poison
+    /// both ledgers, release the fence and join what remains, instead of
+    /// letting the pool's own Drop block on a dead lane.
     fn drop(&mut self) {
-        let _ = self.flush();
+        if self.flush().is_err() {
+            self.fault_teardown();
+        }
     }
 }
 

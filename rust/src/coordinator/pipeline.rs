@@ -41,11 +41,22 @@
 //! `evaluate()`, `train()`'s report, Drop) first calls
 //! [`Trainer::flush`], which retires the in-flight generation.
 
-use super::worker_pool::{LaneJob, LaneMsg, RawBuf, WorkerJob};
+use super::worker_pool::{LaneJob, LaneMsg, RawBuf, WaitOutcome, WorkerJob};
 use super::Trainer;
+use crate::faults::{FaultEvent, FaultKind, Heartbeats};
 use crate::overlap::MeasuredPipeline;
 use crate::runtime::{GradVariant, UpdateRule};
 use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Supervisor poll slice: the collect loop re-checks heartbeats at this
+/// cadence while waiting for worker reports (short enough for prompt
+/// detection, long enough to stay invisible in profiles).
+const SUPERVISE_SLICE: Duration = Duration::from_millis(50);
+
+/// Straggler events recorded per run — a persistently slow lane would
+/// otherwise flood the report with one event per bucket per step.
+const MAX_STRAGGLER_EVENTS: usize = 64;
 
 /// The parked tail of a dispatched-but-unfinished step generation.
 pub(super) struct InflightTail {
@@ -87,6 +98,11 @@ impl Trainer {
             return;
         }
         let (lanes, threads_per_lane) = self.comm_lane_split();
+        // PHYSICAL grad threads: the survivors. The run's LOGICAL worker
+        // count (`cfg.workers`) fixes the shards, buffers and ledger
+        // targets — i.e. the numerics — forever; after a loss the leader
+        // just routes several logical workers onto each surviving thread.
+        let phys = self.phys_alive.min(self.cfg.workers).max(1);
         let run_t0 = std::time::Instant::now();
         let nb = self.bucket_spans.len();
         self.run_t0 = Some(run_t0);
@@ -101,8 +117,10 @@ impl Trainer {
             self.engine.manifest().layers.len(),
             self.step_idx as u64,
         )));
+        let hb = std::sync::Arc::new(Heartbeats::new(phys + lanes));
+        self.heartbeats = Some(hb.clone());
         self.pool = Some(super::worker_pool::WorkerPool::spawn(
-            self.cfg.workers,
+            phys,
             lanes,
             threads_per_lane,
             self.algo,
@@ -110,7 +128,40 @@ impl Trainer {
             self.engine.clone(),
             self.data.clone(),
             run_t0,
+            hb,
         ));
+    }
+
+    /// Tear the pipelined runtime down after a detected fault: poison the
+    /// ledgers (releasing every pool-side waiter into the error state),
+    /// unblock fence waiters, drop the pool (closing the job channels and
+    /// JOINING every thread — a stalled thread finishes its sleep, finds
+    /// poisoned ledgers and a closed channel, and exits; its zombie
+    /// publishes are absorbed) and discard all in-flight bookkeeping. The
+    /// join is the happens-before edge that makes the subsequent snapshot
+    /// restore race-free: no survivor of the old pool can touch a buffer
+    /// after this returns. `ensure_pool` respawns everything — fresh
+    /// ledgers, fresh fence seeded at the restored step, surviving thread
+    /// count — on the next pipelined step.
+    pub(super) fn fault_teardown(&mut self) {
+        if let Some(l) = &self.ready {
+            l.poison_all();
+        }
+        if let Some(l) = &self.reduced {
+            l.poison_all();
+        }
+        if let Some(f) = &self.fence {
+            f.publish_all(u64::MAX);
+        }
+        self.inflight = None;
+        self.pending_lane_msgs.clear();
+        self.pool = None; // Drop: close channels, join every thread
+        self.ready = None;
+        self.reduced = None;
+        self.fence = None;
+        self.heartbeats = None;
+        self.run_t0 = None;
+        self.last_pipeline = None;
     }
 
     /// Which generation buffer set step generation `gen` uses: the `_alt`
@@ -148,7 +199,40 @@ impl Trainer {
         let ready = self.ready.as_ref().expect("pool ensured").clone();
         let reduced = self.reduced.as_ref().expect("pool ensured").clone();
         let fence = self.fence.as_ref().expect("pool ensured").clone();
+        let hb = self.heartbeats.as_ref().expect("pool ensured").clone();
         let run_t0 = self.run_t0.expect("pool ensured");
+
+        // ---- fault injection (deterministic, one-shot) -----------------
+        // Drawn from the plan BEFORE the pool borrow and recorded as
+        // `Injected` events — the replay key for the whole run is the
+        // plan's seed in `TrainReport`.
+        let step = self.step_idx;
+        let (lanes, _) = self.comm_lane_split();
+        let worker_faults: Vec<Option<FaultKind>> = (0..workers)
+            .map(|w| self.fault_plan.as_mut().and_then(|p| p.take_worker(step, w)))
+            .collect();
+        let lane_faults: Vec<Option<FaultKind>> = (0..lanes)
+            .map(|l| self.fault_plan.as_mut().and_then(|p| p.take_lane(step, l, lanes)))
+            .collect();
+        for (w, f) in worker_faults.iter().enumerate() {
+            if let Some(k) = f {
+                self.fault_events.push(FaultEvent::Injected {
+                    step,
+                    target: w,
+                    desc: k.describe(),
+                });
+            }
+        }
+        for (l, f) in lane_faults.iter().enumerate() {
+            if let Some(k) = f {
+                self.fault_events.push(FaultEvent::Injected {
+                    step,
+                    target: l,
+                    desc: format!("lane: {}", k.describe()),
+                });
+            }
+        }
+
         ready.begin(gen);
         reduced.begin(gen);
 
@@ -172,12 +256,18 @@ impl Trainer {
             vec![None; workers]
         };
 
-        // ---- dispatch: one job per grad worker, one per comm lane ------
+        // ---- dispatch: one job per LOGICAL grad worker, one per lane ---
+        // Jobs route onto the surviving physical threads (`w % phys`): a
+        // full-strength pool gets the identity routing, a post-recovery
+        // pool serializes several logical workers per thread — same
+        // shards, same buffers, same publishes, same bits.
         let dispatch_abs_s = run_t0.elapsed().as_secs_f64();
         let pool = self.pool.as_ref().expect("pool just ensured");
+        let phys = pool.phys_workers();
+        debug_assert_eq!(lanes, pool.lanes(), "lane split drifted from the live pool");
         for w in 0..workers {
             pool.send_worker(
-                w,
+                w % phys,
                 WorkerJob {
                     gen,
                     worker: w,
@@ -194,6 +284,7 @@ impl Trainer {
                     ready: ready.clone(),
                     fence: fence.clone(),
                     fence_mode: self.fence_mode,
+                    fault: worker_faults[w],
                 },
             );
         }
@@ -206,6 +297,7 @@ impl Trainer {
                     spans: self.bucket_spans.clone(),
                     ready: ready.clone(),
                     reduced: reduced.clone(),
+                    fault: lane_faults[l],
                 },
             );
         }
@@ -216,10 +308,15 @@ impl Trainer {
         // already zeroing their buffers and materializing batches; the
         // per-layer fence publishes below then release them into
         // forward/backward. (Depth 1, or the first step: nothing parked,
-        // no-op.)
-        let mut first_err: Option<anyhow::Error> = self.finish_inflight().err();
+        // no-op.) A fault detected in the tail aborts the step right here
+        // — this generation's workers are still fence-blocked and will be
+        // released (and absorbed) by the caller's `fault_teardown`.
+        if let Err(e) = self.finish_inflight() {
+            return Err(e);
+        }
+        let mut first_err: Option<anyhow::Error> = None;
 
-        // ---- wait out the grad phase -----------------------------------
+        // ---- wait out the grad phase (supervised) ----------------------
         // Workers publish every bucket before reporting (their failure
         // guard guarantees it), so once all reports are in, (a) every
         // bucket of this generation is at least READY — comm lanes are
@@ -228,27 +325,81 @@ impl Trainer {
         // finish_inflight's parameter writes race-free. Early buckets have
         // typically ALREADY been reduced at this point: their allreduce
         // ran underneath backward.
+        //
+        // The supervised receive polls in short slices; a worker is
+        // declared LOST only when BOTH (a) the collect loop itself has
+        // starved past the deadline and (b) the physical thread serving it
+        // has not heartbeat for the deadline. (a) alone is not enough —
+        // early in the loop a healthy worker may still be fence-blocked
+        // behind a long previous tail with its last stamp minutes old;
+        // (b) alone is not enough for the symmetric reason.
+        let deadline = Duration::from_millis(self.cfg.fault_deadline_ms);
+        let supervise = self.cfg.supervise;
+        let collect_t0 = Instant::now();
         let mut worker_results: Vec<Option<(f32, f32)>> = vec![None; workers];
-        for _ in 0..workers {
-            let msg = self.pool.as_ref().expect("pool").recv_worker();
-            debug_assert_eq!(msg.gen, gen, "worker report from a displaced generation");
+        let mut got = 0usize;
+        while got < workers {
+            let pool = self.pool.as_ref().expect("pool");
+            let msg = match pool.recv_worker_timeout(SUPERVISE_SLICE) {
+                Some(msg) => msg,
+                None => {
+                    if !supervise || collect_t0.elapsed() < deadline {
+                        continue;
+                    }
+                    let now_ms = run_t0.elapsed().as_millis() as u64;
+                    let lost: Vec<usize> = (0..workers)
+                        .filter(|&w| {
+                            worker_results[w].is_none()
+                                && hb.stale(w % phys, now_ms, self.cfg.fault_deadline_ms)
+                        })
+                        .collect();
+                    if lost.is_empty() {
+                        continue; // starved but heartbeats are fresh: slow ≠ dead
+                    }
+                    let mut dead_threads: Vec<usize> = lost.iter().map(|&w| w % phys).collect();
+                    dead_threads.sort_unstable();
+                    dead_threads.dedup();
+                    let detect_ms = collect_t0.elapsed().as_millis() as u64;
+                    self.fault_events.push(FaultEvent::WorkerLost {
+                        step,
+                        workers: lost.clone(),
+                        detect_ms,
+                    });
+                    self.phys_alive = self.phys_alive.saturating_sub(dead_threads.len()).max(1);
+                    first_err = Some(anyhow::anyhow!(
+                        "worker(s) {lost:?} lost at step {step}: no heartbeat for {} ms \
+                         ({} surviving grad thread(s))",
+                        self.cfg.fault_deadline_ms,
+                        self.phys_alive,
+                    ));
+                    break;
+                }
+            };
+            if msg.gen != gen {
+                debug_assert!(false, "worker report from a displaced generation");
+                continue;
+            }
             if let Some(e) = msg.error {
                 if first_err.is_none() {
                     first_err = Some(anyhow::anyhow!("worker {}: {e}", msg.worker));
+                    self.fault_events.push(FaultEvent::WorkerPanic {
+                        step,
+                        worker: msg.worker,
+                        error: e,
+                    });
                 }
             }
             self.ef_err_sq += msg.ef_err_sq;
             worker_results[msg.worker] = Some((msg.loss, msg.correct));
+            got += 1;
         }
 
         if let Some(e) = first_err {
-            // Failed step: skip the update entirely (params stay at their
-            // pre-step values), but leave the pool quiescent — drain this
-            // generation's lanes and retire the ledgers so a retry (or
-            // Drop) finds clean slots.
-            let _ = self.drain_lane_msgs(gen, nb);
-            ready.close(gen);
-            reduced.close(gen);
+            // Failed step: no update was applied (params hold their
+            // pre-step values). The caller runs `fault_teardown` — which
+            // poisons this generation's ledgers, releases every blocked
+            // thread and joins the pool — before recovering or surfacing
+            // the error; nothing here may block on the broken generation.
             return Err(e);
         }
 
@@ -292,10 +443,34 @@ impl Trainer {
         let ready = self.ready.as_ref().expect("inflight implies pool").clone();
         let reduced = self.reduced.as_ref().expect("inflight implies pool").clone();
         let fence = self.fence.as_ref().expect("inflight implies pool").clone();
+        let hb = self.heartbeats.as_ref().expect("inflight implies pool").clone();
+        let phys = self.pool.as_ref().expect("inflight implies pool").phys_workers();
+        let lanes = self.pool.as_ref().expect("inflight implies pool").lanes();
         let run_t0 = self.run_t0.expect("inflight implies pool");
         let entry_abs_s = run_t0.elapsed().as_secs_f64();
         let engine = self.engine.clone();
         let mut first_err: Option<anyhow::Error> = None;
+
+        // ---- recovery snapshot, part 1: error-feedback state -----------
+        // The EF residuals must be captured at ENTRY, before the first
+        // fence publish below: generation gen+1's workers are still
+        // fence-blocked (in either fence mode every wait precedes the
+        // first parameter read, which precedes backward, which is where EF
+        // applies), so right now the residuals hold exactly the post-gen
+        // state. After the first `publish_layer` they may start moving.
+        let snap_due = self.cfg.recover
+            && self.cfg.ckpt_every > 0
+            && (gen + 1) % self.cfg.ckpt_every as u64 == 0;
+        let ef_snap = if snap_due {
+            Some((self.ef_residuals.clone(), self.ef_err_sq))
+        } else {
+            None
+        };
+        let deadline = if self.cfg.supervise {
+            Some(Duration::from_millis(self.cfg.fault_deadline_ms))
+        } else {
+            None
+        };
 
         // ---- streamed master update (leader) ---------------------------
         // Applied per bucket as its reduction lands. A layer updates the
@@ -317,7 +492,49 @@ impl Trainer {
         });
         let mut update_active_s = 0.0f64;
         for i in 0..nb {
-            reduced.wait(gen, i);
+            // Supervised wait on the bucket's reduction. TimedOut alone
+            // does not condemn the lane — a `CommSlow`-throttled (or just
+            // busy) lane heartbeats every bucket, so its staleness check
+            // fails and we simply keep waiting. Only a lane that is BOTH
+            // past the deadline and silent is declared lost.
+            let wait_t0 = Instant::now();
+            loop {
+                match reduced.wait_deadline(gen, i, deadline) {
+                    WaitOutcome::Ready(_) => break,
+                    WaitOutcome::Poisoned => {
+                        let lane = i % lanes.max(1);
+                        let detect_ms = wait_t0.elapsed().as_millis() as u64;
+                        self.fault_events.push(FaultEvent::LaneLost {
+                            step: gen as usize,
+                            lane,
+                            detect_ms,
+                        });
+                        return Err(anyhow::anyhow!(
+                            "comm lane panicked at step {gen} (bucket {i} poisoned); \
+                             step abandoned"
+                        ));
+                    }
+                    WaitOutcome::TimedOut => {
+                        let lane = i % lanes.max(1);
+                        let now_ms = run_t0.elapsed().as_millis() as u64;
+                        if !hb.stale(phys + lane, now_ms, self.cfg.fault_deadline_ms) {
+                            continue; // alive, just slow: wait again
+                        }
+                        let detect_ms = wait_t0.elapsed().as_millis() as u64;
+                        self.fault_events.push(FaultEvent::LaneLost {
+                            step: gen as usize,
+                            lane,
+                            detect_ms,
+                        });
+                        self.lanes_lost += 1;
+                        return Err(anyhow::anyhow!(
+                            "comm lane {lane} lost at step {gen}: bucket {i} unreduced and \
+                             no heartbeat for {} ms",
+                            self.cfg.fault_deadline_ms,
+                        ));
+                    }
+                }
+            }
             let tu = std::time::Instant::now();
             for piece in &self.plan.buckets[i].pieces {
                 if !piece.is_layer_tail() {
@@ -400,15 +617,55 @@ impl Trainer {
         self.breakdown.comm_exposed_s.push(exposed_s);
         self.breakdown.cross_hidden_s.push(cross_hidden_s);
         self.breakdown.update_s.push(update_active_s);
-        self.last_pipeline = Some(MeasuredPipeline {
+        let measured = MeasuredPipeline {
             backward_s,
             ready_s: ready_abs.iter().map(|&t| t - tail.dispatch_abs_s).collect(),
             comm_spans,
             next_step_window_s,
-        });
+        };
+
+        // ---- straggler detection ---------------------------------------
+        // Fed from the same per-bucket timeline `pipeline_trace` exposes:
+        // a bucket whose reduction ran longer than `straggler_factor` ×
+        // the rolling median is flagged (detection only — a straggler is
+        // slow, not wrong, so it never triggers recovery).
+        for (i, d) in measured.bucket_durations_s().iter().enumerate() {
+            if let Some(median_s) = self.straggler.observe(*d, self.cfg.straggler_factor) {
+                let n_straggler = self
+                    .fault_events
+                    .iter()
+                    .filter(|e| matches!(e, FaultEvent::Straggler { .. }))
+                    .count();
+                if n_straggler < MAX_STRAGGLER_EVENTS {
+                    self.fault_events.push(FaultEvent::Straggler {
+                        step: gen as usize,
+                        bucket: i,
+                        duration_ms: d * 1e3,
+                        median_ms: median_s * 1e3,
+                    });
+                }
+            }
+        }
+        self.last_pipeline = Some(measured);
 
         ready.close(gen);
         reduced.close(gen);
+
+        // ---- recovery snapshot, part 2: master state -------------------
+        // Params/momentum/BN are cloned at EXIT, after the streamed update
+        // and the BN policy: together with the entry-captured EF state
+        // this is exactly the run's state at step boundary gen+1 — the
+        // restore point an in-process recovery replays from.
+        if let (Some((ef_residuals, ef_err_sq)), None) = (ef_snap, &first_err) {
+            self.last_snapshot = Some(super::Snapshot {
+                step: gen as usize + 1,
+                params: self.params.clone(),
+                momentum: self.momentum.clone(),
+                bn_state: self.bn_state.clone(),
+                ef_residuals,
+                ef_err_sq,
+            });
+        }
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),

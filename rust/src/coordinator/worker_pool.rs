@@ -94,13 +94,14 @@ use crate::bucket::FrontierCursor;
 use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
 use crate::config::FenceMode;
 use crate::data::{make_batch, Batch, Split, Synthetic};
+use crate::faults::{FaultKind, Heartbeats};
 use crate::runtime::{Engine, GradVariant};
 use anyhow::Result;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Raw-pointer view of one `f32` buffer owned by the `Trainer`, shareable
 /// with pool threads for the duration of one step generation.
@@ -167,8 +168,28 @@ struct SlotState {
     /// once the leader drained its previous generation, at which point no
     /// thread can still be waiting on it.
     open: bool,
+    /// Error state (fault teardown / lane panic): waits return immediately
+    /// and publishes become no-ops. A zombie thread that wakes up AFTER
+    /// the supervisor tore a generation down must be able to run its
+    /// force-publish epilogue against the abandoned ledger without
+    /// tripping the protocol asserts. Cleared by `begin`; ledgers replaced
+    /// wholesale on pool respawn, so a stale `Arc` stays poisoned forever.
+    poisoned: bool,
     counts: Vec<usize>,
     ready_s: Vec<f64>,
+}
+
+/// Result of a bounded-deadline ledger wait (leader side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum WaitOutcome {
+    /// Bucket complete; carries the readiness instant (run-clock seconds).
+    Ready(f64),
+    /// The ledger was poisoned (lane panic / fault teardown).
+    Poisoned,
+    /// The deadline expired with the bucket still incomplete. The caller
+    /// decides whether that means a lost thread (heartbeat stale) or just
+    /// a slow one (keep waiting).
+    TimedOut,
 }
 
 impl GenLedger {
@@ -177,6 +198,7 @@ impl GenLedger {
             state: Mutex::new(SlotState {
                 gen: u64::MAX,
                 open: false,
+                poisoned: false,
                 counts: vec![0; buckets],
                 ready_s: vec![0.0; buckets],
             }),
@@ -202,8 +224,21 @@ impl GenLedger {
         );
         s.gen = gen;
         s.open = true;
+        s.poisoned = false;
         s.counts.fill(0);
         s.ready_s.fill(0.0);
+    }
+
+    /// Error state: release every waiter on BOTH slots and turn further
+    /// publishes into no-ops. Pool-side waiters see `None`/`Poisoned` and
+    /// abandon their generation; zombie publishes from threads that wake
+    /// up later are silently absorbed.
+    pub(crate) fn poison_all(&self) {
+        for slot in &self.slots {
+            let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+            s.poisoned = true;
+            slot.cv.notify_all();
+        }
     }
 
     /// Retire generation `gen` after the leader drained everything that
@@ -223,6 +258,10 @@ impl GenLedger {
     pub(crate) fn publish(&self, gen: u64, i: usize) {
         let slot = self.slot(gen);
         let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        if s.poisoned {
+            // Zombie publish against a torn-down generation: absorb it.
+            return;
+        }
         debug_assert!(s.open && s.gen == gen, "publish to a generation that is not open");
         s.counts[i] += 1;
         debug_assert!(s.counts[i] <= self.target, "bucket {i} over-published");
@@ -232,18 +271,61 @@ impl GenLedger {
         }
     }
 
-    /// Block until bucket `i` of generation `gen` has all its
-    /// publications; returns the readiness instant (run-clock seconds).
-    /// By protocol a waiter only names generations whose jobs were already
-    /// dispatched (so the slot is, or will momentarily be, armed for
-    /// exactly `gen`).
-    pub(crate) fn wait(&self, gen: u64, i: usize) -> f64 {
+    /// Pool-side wait: block until bucket `i` of generation `gen` has all
+    /// its publications (returning the readiness instant) or the ledger is
+    /// poisoned (returning `None` — abandon the generation). By protocol a
+    /// waiter only names generations whose jobs were already dispatched
+    /// (so the slot is, or will momentarily be, armed for exactly `gen`).
+    pub(crate) fn wait_or_poison(&self, gen: u64, i: usize) -> Option<f64> {
         let slot = self.slot(gen);
         let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
-        while !(s.gen == gen && s.counts[i] >= self.target) {
+        loop {
+            if s.poisoned {
+                return None;
+            }
+            if s.gen == gen && s.counts[i] >= self.target {
+                return Some(s.ready_s[i]);
+            }
             s = slot.cv.wait(s).unwrap_or_else(|e| e.into_inner());
         }
-        s.ready_s[i]
+    }
+
+    /// Leader-side supervised wait: like [`wait_or_poison`], but with an
+    /// optional deadline. `deadline: None` waits unboundedly (legacy
+    /// `--no-supervise` behavior, still poison-aware). On `TimedOut` the
+    /// caller cross-checks the owning thread's heartbeat before declaring
+    /// it lost — a timeout alone only means "slower than the deadline".
+    pub(crate) fn wait_deadline(
+        &self,
+        gen: u64,
+        i: usize,
+        deadline: Option<Duration>,
+    ) -> WaitOutcome {
+        let slot = self.slot(gen);
+        let t_start = Instant::now();
+        let mut s = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if s.poisoned {
+                return WaitOutcome::Poisoned;
+            }
+            if s.gen == gen && s.counts[i] >= self.target {
+                return WaitOutcome::Ready(s.ready_s[i]);
+            }
+            match deadline {
+                None => s = slot.cv.wait(s).unwrap_or_else(|e| e.into_inner()),
+                Some(d) => {
+                    let elapsed = t_start.elapsed();
+                    if elapsed >= d {
+                        return WaitOutcome::TimedOut;
+                    }
+                    s = slot
+                        .cv
+                        .wait_timeout(s, d - elapsed)
+                        .unwrap_or_else(|e| e.into_inner())
+                        .0;
+                }
+            }
+        }
     }
 
     /// Readiness instants of all buckets of `gen` (valid once each reached
@@ -368,6 +450,10 @@ pub(crate) struct WorkerJob {
     pub(crate) ready: Arc<GenLedger>,
     pub(crate) fence: Arc<ParamFence>,
     pub(crate) fence_mode: FenceMode,
+    /// Deterministic fault injection (one-shot, from the run's
+    /// `FaultPlan`): the worker acts it out at a protocol-defined point —
+    /// see `worker_thread`. `None` on healthy steps.
+    pub(crate) fault: Option<FaultKind>,
 }
 
 /// One step generation's worth of work for one comm lane.
@@ -377,6 +463,8 @@ pub(crate) struct LaneJob {
     pub(crate) spans: Arc<Vec<(usize, usize)>>,
     pub(crate) ready: Arc<GenLedger>,
     pub(crate) reduced: Arc<GenLedger>,
+    /// Deterministic fault injection for this lane (see `lane_thread`).
+    pub(crate) fault: Option<FaultKind>,
 }
 
 /// End-of-step report from one grad worker.
@@ -410,6 +498,15 @@ pub(crate) struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// Spawn `workers` PHYSICAL grad threads and `lanes` comm lanes.
+    /// After an in-run recovery the physical count can be smaller than
+    /// the run's LOGICAL worker count (`cfg.workers`, which fixes the
+    /// numerics): the leader then routes several logical workers onto one
+    /// thread (`w % phys`), serially — same shards, same buffers, same
+    /// bits, fewer threads.
+    ///
+    /// Heartbeat cells: grad thread `w` stamps `hb[w]`; lane `l` stamps
+    /// `hb[workers + l]`. Stamps are milliseconds on the shared run clock.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn spawn(
         workers: usize,
@@ -420,7 +517,9 @@ impl WorkerPool {
         engine: Arc<Engine>,
         data: Arc<Synthetic>,
         run_t0: Instant,
+        hb: Arc<Heartbeats>,
     ) -> WorkerPool {
+        debug_assert!(hb.len() >= workers + lanes, "heartbeat table too small");
         let (worker_tx, worker_rx) = channel();
         let (lane_tx, lane_rx) = channel();
         let mut job_txs = Vec::with_capacity(workers);
@@ -432,10 +531,11 @@ impl WorkerPool {
             let engine = engine.clone();
             let data = data.clone();
             let results = worker_tx.clone();
+            let pulse = Pulse { hb: hb.clone(), cell: w, t0: run_t0 };
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("yasgd-grad-{w}"))
-                    .spawn(move || worker_thread(engine, data, rx, results))
+                    .spawn(move || worker_thread(engine, data, rx, results, pulse))
                     .expect("spawning grad worker thread"),
             );
         }
@@ -444,10 +544,11 @@ impl WorkerPool {
             lane_txs.push(tx);
             let results = lane_tx.clone();
             let comm = CommEngine::new(algo, precision, threads_per_lane);
+            let pulse = Pulse { hb: hb.clone(), cell: workers + l, t0: run_t0 };
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("yasgd-lane-{l}"))
-                    .spawn(move || lane_thread(l, lanes, run_t0, comm, rx, results))
+                    .spawn(move || lane_thread(l, lanes, run_t0, comm, rx, results, pulse))
                     .expect("spawning comm lane thread"),
             );
         }
@@ -456,6 +557,12 @@ impl WorkerPool {
 
     pub(crate) fn lanes(&self) -> usize {
         self.lane_txs.len()
+    }
+
+    /// Physical grad-thread count (== logical workers until a recovery
+    /// shrinks the pool).
+    pub(crate) fn phys_workers(&self) -> usize {
+        self.job_txs.len()
     }
 
     pub(crate) fn send_worker(&self, w: usize, job: WorkerJob) {
@@ -470,8 +577,43 @@ impl WorkerPool {
         self.worker_rx.recv().expect("grad worker pool hung up")
     }
 
+    /// Supervised receive: `None` after `timeout` with no report (also on
+    /// a fully-disconnected channel — every grad thread gone is the
+    /// extreme form of the same loss, and the supervisor's heartbeat
+    /// cross-check attributes it).
+    pub(crate) fn recv_worker_timeout(&self, timeout: Duration) -> Option<WorkerMsg> {
+        match self.worker_rx.recv_timeout(timeout) {
+            Ok(msg) => Some(msg),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
     pub(crate) fn recv_lane(&self) -> LaneMsg {
         self.lane_rx.recv().expect("comm lane pool hung up")
+    }
+
+    pub(crate) fn recv_lane_timeout(&self, timeout: Duration) -> Option<LaneMsg> {
+        match self.lane_rx.recv_timeout(timeout) {
+            Ok(msg) => Some(msg),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+}
+
+/// One thread's handle on the shared heartbeat table: `beat()` stamps the
+/// thread's cell with the current run-clock millisecond. Threads beat at
+/// job receipt and at every protocol step that can take real time (per
+/// micro-batch, per span emission, per bucket reduction), so a fresh
+/// stamp means "making progress", not just "alive at spawn".
+struct Pulse {
+    hb: Arc<Heartbeats>,
+    cell: usize,
+    t0: Instant,
+}
+
+impl Pulse {
+    fn beat(&self) {
+        self.hb.stamp(self.cell, self.t0.elapsed().as_millis() as u64);
     }
 }
 
@@ -494,6 +636,7 @@ fn worker_thread(
     data: Arc<Synthetic>,
     jobs: Receiver<WorkerJob>,
     results: Sender<WorkerMsg>,
+    pulse: Pulse,
 ) {
     let mut batch = Batch { images: Vec::new(), labels: Vec::new() };
     // Persistent engine scratch: the gradient is computed here and
@@ -506,13 +649,45 @@ fn worker_thread(
     // ledger's generation asserts rather than corrupting a neighbor step.
     let mut cursor: Option<FrontierCursor> = None;
     while let Ok(job) = jobs.recv() {
+        pulse.beat();
+        // Fault injection, acted out at the protocol point each kind
+        // models (the plan already recorded the injection; here we only
+        // misbehave):
+        //   Crash    — the thread dies silently: no publishes, no report.
+        //              Detection is heartbeat-only, like a real dead rank.
+        //   Stall    — wedge WITHOUT heartbeats for `ms`: indistinguish-
+        //              able from a crash while it lasts, so a stall past
+        //              the deadline is declared lost (then wakes into a
+        //              poisoned generation and is absorbed).
+        //   Delay    — wedge WITH heartbeats: the supervisor sees life
+        //              and keeps waiting — slow ≠ dead — so the step
+        //              completes late but bitwise intact, no recovery.
+        //   Panic    — raised INSIDE the grad job (below), exercising the
+        //              catch-unwind + force-publish + error-report path.
+        match job.fault {
+            Some(FaultKind::Crash) => return,
+            Some(FaultKind::Stall { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(FaultKind::Delay { ms }) => {
+                let t_end = Instant::now() + Duration::from_millis(ms);
+                while Instant::now() < t_end {
+                    pulse.beat();
+                    std::thread::sleep(Duration::from_millis(10).min(
+                        t_end.saturating_duration_since(Instant::now()),
+                    ));
+                }
+                pulse.beat();
+            }
+            _ => {}
+        }
         if cursor.is_none() {
             cursor = Some(FrontierCursor::new(job.spans.clone()));
         }
         let cur = cursor.as_mut().expect("cursor just initialized");
         cur.begin(job.gen);
         let outcome = catch_unwind(AssertUnwindSafe(|| {
-            run_grad_job(&engine, &data, &mut batch, &mut scratch, &job, &mut *cur)
+            run_grad_job(&engine, &data, &mut batch, &mut scratch, &job, &mut *cur, &pulse)
         }));
         // Whatever happened, every bucket gets published so the lanes (and
         // through them the leader) always complete the step and can report
@@ -581,7 +756,13 @@ fn run_grad_job(
     scratch: &mut Vec<f32>,
     job: &WorkerJob,
     cursor: &mut FrontierCursor,
+    pulse: &Pulse,
 ) -> Result<(f32, f32, f64)> {
+    if matches!(job.fault, Some(FaultKind::Panic)) {
+        // Injected before any publish or buffer write, so the catch-unwind
+        // epilogue's force-publish path carries the whole step.
+        panic!("injected fault: grad worker panic (gen {})", job.gen);
+    }
     let n_micro = job.idxs.len();
     anyhow::ensure!(n_micro >= 1, "worker job with no micro-batches");
     // ---- pre-fence window (overlaps the previous step's tail) ----------
@@ -621,6 +802,7 @@ fn run_grad_job(
     let mut correct_sum = 0.0f32;
     let mut ef_err_sq = 0.0f64;
     for (k, idxs) in job.idxs.iter().enumerate() {
+        pulse.beat();
         if k > 0 {
             make_batch(data, Split::Train, idxs, batch);
         }
@@ -677,6 +859,7 @@ fn run_grad_job(
                     scratch,
                     states,
                     &mut |lo, hi, src| {
+                        pulse.beat();
                         {
                             // SAFETY: span [lo, hi) is unpublished (the
                             // cursor only publishes at/above the frontier,
@@ -730,26 +913,73 @@ fn lane_thread(
     mut comm: CommEngine,
     jobs: Receiver<LaneJob>,
     results: Sender<LaneMsg>,
+    pulse: Pulse,
 ) {
     while let Ok(job) = jobs.recv() {
-        for i in (lane..job.spans.len()).step_by(lanes.max(1)) {
-            job.ready.wait(job.gen, i);
-            let (lo, hi) = job.spans[i];
-            let start_s = run_t0.elapsed().as_secs_f64();
-            {
-                // SAFETY: all workers have published (gen, i) — ledger
-                // happens-before — no other lane owns index i of this
-                // generation (static i % lanes assignment), and the leader
-                // won't touch the span until `reduced.publish` below —
-                // this lane holds the only live references to these spans.
-                let mut views: Vec<&mut [f32]> =
-                    job.grads.iter().map(|g| unsafe { g.slice_mut(lo, hi) }).collect();
-                let stats = comm.allreduce_mean(&mut views);
-                drop(views);
-                let end_s = run_t0.elapsed().as_secs_f64();
-                job.reduced.publish(job.gen, i);
-                let _ = results.send(LaneMsg { gen: job.gen, bucket: i, stats, start_s, end_s });
+        pulse.beat();
+        // Lane-side fault injection (see `worker_thread` for the taxonomy):
+        //   LaneStall — wedge without heartbeats; a stall past the deadline
+        //               is declared lost on the leader's reduced-wait.
+        //   CommSlow  — dilate this generation's allreduces ×factor via
+        //               the engine's slowdown throttle. Numerics are
+        //               untouched (pure added sleep), heartbeats keep
+        //               flowing — only the straggler detector notices.
+        //   LanePanic — raised inside the guarded job (below).
+        match job.fault {
+            Some(FaultKind::LaneStall { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms));
             }
+            Some(FaultKind::CommSlow { factor }) => comm.set_slowdown(factor),
+            _ => {}
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_lane_job(lane, lanes, run_t0, &mut comm, &job, &results, &pulse)
+        }));
+        comm.set_slowdown(1.0);
+        if outcome.is_err() {
+            // A panicking lane can never finish its buckets, so every
+            // waiter — peers on `ready`, the leader on `reduced` — must be
+            // released into the error state instead of sleeping forever.
+            job.ready.poison_all();
+            job.reduced.poison_all();
+        }
+    }
+}
+
+fn run_lane_job(
+    lane: usize,
+    lanes: usize,
+    run_t0: Instant,
+    comm: &mut CommEngine,
+    job: &LaneJob,
+    results: &Sender<LaneMsg>,
+    pulse: &Pulse,
+) {
+    if matches!(job.fault, Some(FaultKind::LanePanic)) {
+        panic!("injected fault: comm lane panic (gen {})", job.gen);
+    }
+    for i in (lane..job.spans.len()).step_by(lanes.max(1)) {
+        if job.ready.wait_or_poison(job.gen, i).is_none() {
+            // Generation torn down while we waited: abandon the job.
+            return;
+        }
+        pulse.beat();
+        let (lo, hi) = job.spans[i];
+        let start_s = run_t0.elapsed().as_secs_f64();
+        {
+            // SAFETY: all workers have published (gen, i) — ledger
+            // happens-before — no other lane owns index i of this
+            // generation (static i % lanes assignment), and the leader
+            // won't touch the span until `reduced.publish` below —
+            // this lane holds the only live references to these spans.
+            let mut views: Vec<&mut [f32]> =
+                job.grads.iter().map(|g| unsafe { g.slice_mut(lo, hi) }).collect();
+            let stats = comm.allreduce_mean(&mut views);
+            drop(views);
+            let end_s = run_t0.elapsed().as_secs_f64();
+            job.reduced.publish(job.gen, i);
+            let _ = results.send(LaneMsg { gen: job.gen, bucket: i, stats, start_s, end_s });
+            pulse.beat();
         }
     }
 }

@@ -1,0 +1,564 @@
+//! Deterministic fault injection + the supervision primitives.
+//!
+//! The paper's 74.7-second run assumes 2,048 healthy ranks for the whole
+//! run; this module is the machinery that lets the in-process fleet
+//! SURVIVE ranks that fall out of lockstep — and lets tests prove the
+//! recovery path is numerically invisible.
+//!
+//! Three pieces:
+//!
+//! * [`FaultPlan`] — a seeded, deterministic schedule of injected faults
+//!   (worker crash / panic / stall / delay, comm-lane stall / panic /
+//!   slowdown), either parsed from an explicit `--fault` spec or
+//!   generated from a single u64 seed (`--fault-seed` + `--fault-count`).
+//!   Every fault is ONE-SHOT: consumed at dispatch, so the recovery
+//!   replay of the same step runs clean. The seed is recorded in
+//!   `TrainReport`, which is what makes a chaos run replayable.
+//! * [`Heartbeats`] — per-pool-thread liveness stamps on the shared run
+//!   clock. Grad workers stamp at job receipt, per micro-batch and per
+//!   emitted chunk; comm lanes stamp at job receipt and per reduced
+//!   bucket. The supervisor (the leader's bounded-deadline waits in
+//!   `coordinator::pipeline`) distinguishes a SLOW thread (fresh stamps —
+//!   keep waiting, no false positive) from a LOST one (stale past the
+//!   deadline — declare, tear down, re-shard, recover).
+//! * [`FaultEvent`] — the typed log `TrainReport` carries: what was
+//!   injected, what the supervisor detected, what recovery did and what
+//!   it cost. [`StragglerTracker`] feeds the `Straggler` variant from the
+//!   measured per-bucket comm timeline (duration > k× rolling median).
+//!
+//! Nothing here touches numerics: faults perturb WHEN things happen
+//! (sleeps, dead threads), never what is computed — which is why the
+//! chaos grid in `rust/tests/faults.rs` can hold a faulted-and-recovered
+//! run to BITWISE equality with the fault-free reference.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One injectable fault. Worker-targeted kinds are consumed by
+/// `take_worker`, lane-targeted kinds by `take_lane`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The grad worker's thread exits silently at job receipt — no
+    /// publish, no report, no unwind. The harshest loss: only the
+    /// heartbeat deadline can detect it.
+    Crash,
+    /// The grad worker panics inside its job (exercises the existing
+    /// catch-at-thread-boundary path: buckets force-published, error
+    /// report sent — the leader fails fast without any deadline).
+    Panic,
+    /// The grad worker freezes for `ms` WITHOUT stamping its heartbeat,
+    /// then resumes. Past the deadline this is indistinguishable from a
+    /// loss, and the supervisor treats it as one.
+    Stall { ms: u64 },
+    /// The grad worker sleeps `ms` WHILE stamping its heartbeat — a slow
+    /// network, not a dead rank. The supervisor must keep waiting: a
+    /// delay must never trigger recovery (tested).
+    Delay { ms: u64 },
+    /// A comm lane freezes for `ms` without stamping, then resumes.
+    /// Detected by the leader's bounded wait on the `reduced` ledger.
+    LaneStall { ms: u64 },
+    /// A comm lane panics mid-generation. The lane's catch boundary
+    /// poisons both ledgers so the leader fails fast.
+    LanePanic,
+    /// The lane's `CommEngine` runs every allreduce `factor`× slower
+    /// (injected via the engine's slowdown hook; pure added sleep, so
+    /// numerics are untouched). Flagged by straggler detection, never
+    /// recovered from.
+    CommSlow { factor: f64 },
+}
+
+impl FaultKind {
+    /// True for kinds consumed at WORKER dispatch (vs comm-lane dispatch).
+    pub fn targets_worker(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::Crash | FaultKind::Panic | FaultKind::Stall { .. } | FaultKind::Delay { .. }
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Panic => "panic",
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::Delay { .. } => "delay",
+            FaultKind::LaneStall { .. } => "lanestall",
+            FaultKind::LanePanic => "lanepanic",
+            FaultKind::CommSlow { .. } => "slow",
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            FaultKind::Stall { ms } | FaultKind::Delay { ms } | FaultKind::LaneStall { ms } => {
+                format!("{} {}ms", self.name(), ms)
+            }
+            FaultKind::CommSlow { factor } => format!("slow x{factor}"),
+            _ => self.name().to_string(),
+        }
+    }
+}
+
+/// One scheduled fault: `kind` fires when step `step` dispatches work to
+/// worker (or lane) `target`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub step: usize,
+    pub target: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, replayable fault schedule. Faults are one-shot: the
+/// retry of a recovered step finds its fault already consumed.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// The seed the plan is replayable from (0 for hand-written specs —
+    /// the spec string itself is then the replay key).
+    pub seed: u64,
+    specs: Vec<FaultSpec>,
+    taken: Vec<bool>,
+}
+
+impl FaultPlan {
+    /// Parse an explicit spec: `;`-separated `kind@step:target[:arg]`
+    /// directives, e.g. `crash@3:1;stall@5:0:800;slow@2:0:8`.
+    ///
+    /// * `crash@S:W` / `panic@S:W` — worker W at step S
+    /// * `stall@S:W:MS` / `delay@S:W:MS` — worker W frozen/delayed MS ms
+    /// * `lanestall@S:L:MS` — comm lane L frozen MS ms
+    /// * `lanepanic@S:L` — comm lane L panics
+    /// * `slow@S:L:K` — lane L's collective runs K× slower for step S
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, rest) = part
+                .split_once('@')
+                .with_context(|| format!("fault directive '{part}': expected kind@step:target"))?;
+            let fields: Vec<&str> = rest.split(':').collect();
+            let num = |i: usize, what: &str| -> Result<u64> {
+                fields
+                    .get(i)
+                    .with_context(|| format!("fault directive '{part}': missing {what}"))?
+                    .trim()
+                    .parse::<u64>()
+                    .with_context(|| format!("fault directive '{part}': bad {what}"))
+            };
+            let step = num(0, "step")? as usize;
+            let target = num(1, "target")? as usize;
+            let arity = |n: usize| -> Result<()> {
+                if fields.len() != n {
+                    bail!("fault directive '{part}': expected {n} ':'-fields");
+                }
+                Ok(())
+            };
+            let kind = match kind_s.trim() {
+                "crash" => {
+                    arity(2)?;
+                    FaultKind::Crash
+                }
+                "panic" => {
+                    arity(2)?;
+                    FaultKind::Panic
+                }
+                "stall" => {
+                    arity(3)?;
+                    FaultKind::Stall { ms: num(2, "ms")? }
+                }
+                "delay" => {
+                    arity(3)?;
+                    FaultKind::Delay { ms: num(2, "ms")? }
+                }
+                "lanestall" => {
+                    arity(3)?;
+                    FaultKind::LaneStall { ms: num(2, "ms")? }
+                }
+                "lanepanic" => {
+                    arity(2)?;
+                    FaultKind::LanePanic
+                }
+                "slow" => {
+                    arity(3)?;
+                    let factor = num(2, "factor")? as f64;
+                    if factor < 1.0 {
+                        bail!("fault directive '{part}': slowdown factor must be >= 1");
+                    }
+                    FaultKind::CommSlow { factor }
+                }
+                other => bail!(
+                    "fault directive '{part}': unknown kind '{other}' \
+                     (crash|panic|stall|delay|lanestall|lanepanic|slow)"
+                ),
+            };
+            specs.push(FaultSpec { step, target, kind });
+        }
+        let taken = vec![false; specs.len()];
+        Ok(FaultPlan { seed, specs, taken })
+    }
+
+    /// Generate `count` random faults from a single seed — the chaos-grid
+    /// and proptest entry point. Same (seed, steps, workers, lanes,
+    /// count) → same plan, bit-for-bit, on every platform.
+    pub fn generate(
+        seed: u64,
+        steps: usize,
+        workers: usize,
+        lanes: usize,
+        count: usize,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let mut specs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let step = rng.below(steps.max(1) as u64) as usize;
+            let ms = 50 + rng.below(250);
+            let kind = match rng.below(7) {
+                0 => FaultKind::Crash,
+                1 => FaultKind::Panic,
+                2 => FaultKind::Stall { ms },
+                3 => FaultKind::Delay { ms },
+                4 => FaultKind::LaneStall { ms },
+                5 => FaultKind::LanePanic,
+                _ => FaultKind::CommSlow { factor: 2.0 + rng.below(8) as f64 },
+            };
+            let target = if kind.targets_worker() {
+                rng.below(workers.max(1) as u64) as usize
+            } else {
+                rng.below(lanes.max(1) as u64) as usize
+            };
+            specs.push(FaultSpec { step, target, kind });
+        }
+        let taken = vec![false; specs.len()];
+        FaultPlan { seed, specs, taken }
+    }
+
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Consume (one-shot) the first unconsumed worker fault scheduled for
+    /// (`step`, logical worker `worker`).
+    pub fn take_worker(&mut self, step: usize, worker: usize) -> Option<FaultKind> {
+        self.take(|s| s.kind.targets_worker() && s.step == step && s.target == worker)
+    }
+
+    /// Consume (one-shot) the first unconsumed lane fault scheduled for
+    /// (`step`, lane `lane`). Lane targets are taken modulo the CURRENT
+    /// lane count, so a plan generated for the original fleet still lands
+    /// on a live lane after a re-shard.
+    pub fn take_lane(&mut self, step: usize, lane: usize, lanes: usize) -> Option<FaultKind> {
+        let lanes = lanes.max(1);
+        self.take(|s| !s.kind.targets_worker() && s.step == step && s.target % lanes == lane)
+    }
+
+    fn take(&mut self, pred: impl Fn(&FaultSpec) -> bool) -> Option<FaultKind> {
+        for (i, s) in self.specs.iter().enumerate() {
+            if !self.taken[i] && pred(s) {
+                self.taken[i] = true;
+                return Some(s.kind);
+            }
+        }
+        None
+    }
+}
+
+/// The typed fault log `TrainReport` records: injections, detections,
+/// recoveries. The `step` on every variant is the step index the event
+/// belongs to.
+#[derive(Debug, Clone)]
+pub enum FaultEvent {
+    /// A planned fault was attached to a dispatched job.
+    Injected { step: usize, target: usize, desc: String },
+    /// A grad worker's job failed with a caught panic/error — surfaced by
+    /// its end-of-step report, no deadline needed.
+    WorkerPanic { step: usize, worker: usize, error: String },
+    /// Logical workers whose reports never arrived and whose serving
+    /// threads' heartbeats went stale past the deadline.
+    WorkerLost { step: usize, workers: Vec<usize>, detect_ms: u64 },
+    /// A comm lane stopped making progress (stale heartbeat past the
+    /// deadline, or a poisoned ledger from its panic boundary).
+    LaneLost { step: usize, lane: usize, detect_ms: u64 },
+    /// A bucket's reduction ran `duration_ms` against a rolling median of
+    /// `median_ms` — flagged, never recovered from.
+    Straggler { step: usize, bucket: usize, duration_ms: f64, median_ms: f64 },
+    /// In-process recovery completed: pool re-sharded over the survivors,
+    /// state restored from the in-memory snapshot at `restored_step`, the
+    /// lost steps replayed. `cost_ms` covers detection-to-caught-up.
+    Recovered {
+        step: usize,
+        restored_step: usize,
+        phys_workers: usize,
+        lanes: usize,
+        cost_ms: f64,
+    },
+}
+
+impl FaultEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::Injected { .. } => "injected",
+            FaultEvent::WorkerPanic { .. } => "worker_panic",
+            FaultEvent::WorkerLost { .. } => "worker_lost",
+            FaultEvent::LaneLost { .. } => "lane_lost",
+            FaultEvent::Straggler { .. } => "straggler",
+            FaultEvent::Recovered { .. } => "recovered",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::Str(self.kind().to_string()))];
+        match self {
+            FaultEvent::Injected { step, target, desc } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("target", Json::Num(*target as f64)));
+                pairs.push(("desc", Json::Str(desc.clone())));
+            }
+            FaultEvent::WorkerPanic { step, worker, error } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("worker", Json::Num(*worker as f64)));
+                pairs.push(("error", Json::Str(error.clone())));
+            }
+            FaultEvent::WorkerLost { step, workers, detect_ms } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("workers", Json::arr_usize(workers)));
+                pairs.push(("detect_ms", Json::Num(*detect_ms as f64)));
+            }
+            FaultEvent::LaneLost { step, lane, detect_ms } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("lane", Json::Num(*lane as f64)));
+                pairs.push(("detect_ms", Json::Num(*detect_ms as f64)));
+            }
+            FaultEvent::Straggler { step, bucket, duration_ms, median_ms } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("bucket", Json::Num(*bucket as f64)));
+                pairs.push(("duration_ms", Json::Num(*duration_ms)));
+                pairs.push(("median_ms", Json::Num(*median_ms)));
+            }
+            FaultEvent::Recovered { step, restored_step, phys_workers, lanes, cost_ms } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("restored_step", Json::Num(*restored_step as f64)));
+                pairs.push(("phys_workers", Json::Num(*phys_workers as f64)));
+                pairs.push(("lanes", Json::Num(*lanes as f64)));
+                pairs.push(("cost_ms", Json::Num(*cost_ms)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Per-pool-thread liveness stamps on the run clock (milliseconds since
+/// pool spawn, +1 so 0 means "spawned, never stamped" — which still reads
+/// as a stamp at t≈0, exactly when the thread was created). Cells
+/// `0..phys_workers` belong to grad threads, `phys_workers..` to lanes.
+pub struct Heartbeats {
+    cells: Vec<AtomicU64>,
+}
+
+impl Heartbeats {
+    pub fn new(n: usize) -> Heartbeats {
+        Heartbeats { cells: (0..n).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Record liveness for cell `i` at `now_ms` on the run clock.
+    #[inline]
+    pub fn stamp(&self, i: usize, now_ms: u64) {
+        self.cells[i].store(now_ms + 1, Ordering::Relaxed);
+    }
+
+    /// Milliseconds since cell `i` last stamped (as of `now_ms`).
+    pub fn age_ms(&self, i: usize, now_ms: u64) -> u64 {
+        let last = self.cells[i].load(Ordering::Relaxed).saturating_sub(1);
+        now_ms.saturating_sub(last)
+    }
+
+    /// True when cell `i` has not stamped within `deadline_ms`.
+    pub fn stale(&self, i: usize, now_ms: u64, deadline_ms: u64) -> bool {
+        self.age_ms(i, now_ms) > deadline_ms
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+/// Straggler detection over the measured per-bucket comm timeline: a
+/// bucket whose reduction ran longer than `factor`× the rolling median
+/// (and above an absolute floor, so microsecond jitter on an idle wire
+/// never flags) is reported. Pure bookkeeping — detection only, the
+/// trajectory is untouched.
+pub struct StragglerTracker {
+    hist: VecDeque<f64>,
+    cap: usize,
+    /// Minimum history before any flagging (a median of 2 samples is
+    /// noise) and the absolute duration floor in seconds.
+    min_hist: usize,
+    floor_s: f64,
+}
+
+impl Default for StragglerTracker {
+    fn default() -> StragglerTracker {
+        StragglerTracker::new(256, 8, 2e-4)
+    }
+}
+
+impl StragglerTracker {
+    pub fn new(cap: usize, min_hist: usize, floor_s: f64) -> StragglerTracker {
+        StragglerTracker { hist: VecDeque::with_capacity(cap), cap: cap.max(1), min_hist, floor_s }
+    }
+
+    fn median(&self) -> f64 {
+        let mut v: Vec<f64> = self.hist.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = v.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    /// Feed one bucket's measured reduction duration; returns the rolling
+    /// median it exceeded when the sample flags as a straggler.
+    pub fn observe(&mut self, duration_s: f64, factor: f64) -> Option<f64> {
+        let flagged = if self.hist.len() >= self.min_hist {
+            let med = self.median();
+            (duration_s > factor * med && duration_s > self.floor_s).then_some(med)
+        } else {
+            None
+        };
+        if self.hist.len() == self.cap {
+            self.hist.pop_front();
+        }
+        self.hist.push_back(duration_s);
+        flagged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds() {
+        let p = FaultPlan::parse(
+            "crash@3:1; panic@0:0 ;stall@5:2:800;delay@1:0:40;lanestall@2:1:300;lanepanic@4:0;slow@2:0:8",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.specs().len(), 7);
+        assert_eq!(p.seed, 7);
+        assert_eq!(
+            p.specs()[0],
+            FaultSpec { step: 3, target: 1, kind: FaultKind::Crash }
+        );
+        assert_eq!(p.specs()[2].kind, FaultKind::Stall { ms: 800 });
+        assert_eq!(p.specs()[6].kind, FaultKind::CommSlow { factor: 8.0 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultPlan::parse("crash@3", 0).is_err()); // missing target
+        assert!(FaultPlan::parse("stall@3:1", 0).is_err()); // missing ms
+        assert!(FaultPlan::parse("crash@3:1:9", 0).is_err()); // extra field
+        assert!(FaultPlan::parse("vanish@3:1", 0).is_err()); // unknown kind
+        assert!(FaultPlan::parse("crash@x:1", 0).is_err()); // non-numeric
+        assert!(FaultPlan::parse("slow@1:0:0", 0).is_err()); // factor < 1
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn take_is_one_shot_and_targeted() {
+        let mut p = FaultPlan::parse("crash@3:1;lanestall@2:0:100", 0).unwrap();
+        assert_eq!(p.take_worker(2, 1), None); // wrong step
+        assert_eq!(p.take_worker(3, 0), None); // wrong worker
+        assert_eq!(p.take_worker(3, 1), Some(FaultKind::Crash));
+        assert_eq!(p.take_worker(3, 1), None); // consumed
+        assert_eq!(p.take_lane(2, 0, 2), Some(FaultKind::LaneStall { ms: 100 }));
+        assert_eq!(p.take_lane(2, 0, 2), None);
+    }
+
+    #[test]
+    fn take_lane_reshards_targets_modulo_live_lanes() {
+        // Target lane 3 of the original fleet; with only 2 lanes left the
+        // fault lands on lane 3 % 2 == 1.
+        let mut p = FaultPlan::parse("lanepanic@1:3", 0).unwrap();
+        assert_eq!(p.take_lane(1, 0, 2), None);
+        assert_eq!(p.take_lane(1, 1, 2), Some(FaultKind::LanePanic));
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_range() {
+        let a = FaultPlan::generate(42, 10, 4, 2, 16);
+        let b = FaultPlan::generate(42, 10, 4, 2, 16);
+        assert_eq!(a.specs(), b.specs());
+        let c = FaultPlan::generate(43, 10, 4, 2, 16);
+        assert_ne!(a.specs(), c.specs());
+        for s in a.specs() {
+            assert!(s.step < 10);
+            if s.kind.targets_worker() {
+                assert!(s.target < 4);
+            } else {
+                assert!(s.target < 2);
+            }
+        }
+    }
+
+    #[test]
+    fn heartbeat_staleness() {
+        let hb = Heartbeats::new(2);
+        hb.stamp(0, 1000);
+        assert!(!hb.stale(0, 1200, 300));
+        assert!(hb.stale(0, 1400, 300));
+        // Cell 1 never stamped: reads as a stamp at spawn (t=0).
+        assert!(hb.stale(1, 1000, 300));
+        assert!(!hb.stale(1, 100, 300));
+    }
+
+    #[test]
+    fn straggler_tracker_flags_outliers_only() {
+        let mut t = StragglerTracker::new(64, 4, 1e-4);
+        // Build history of ~1ms buckets; nothing flags while warming up.
+        for _ in 0..8 {
+            assert!(t.observe(1e-3, 4.0).is_none());
+        }
+        // 10ms against a 1ms median: flagged, median reported.
+        let med = t.observe(10e-3, 4.0).expect("outlier must flag");
+        assert!((med - 1e-3).abs() < 1e-9);
+        // 2ms is above median but under 4x: not flagged.
+        assert!(t.observe(2e-3, 4.0).is_none());
+        // Sub-floor durations never flag even when relatively huge.
+        let mut t2 = StragglerTracker::new(64, 4, 1e-3);
+        for _ in 0..8 {
+            t2.observe(1e-6, 4.0);
+        }
+        assert!(t2.observe(1e-4, 4.0).is_none());
+    }
+
+    #[test]
+    fn event_json_is_self_describing() {
+        let e = FaultEvent::Recovered {
+            step: 5,
+            restored_step: 5,
+            phys_workers: 3,
+            lanes: 2,
+            cost_ms: 120.5,
+        };
+        let s = e.to_json().to_string();
+        assert!(s.contains("\"kind\""), "{s}");
+        assert!(s.contains("recovered"), "{s}");
+        let w = FaultEvent::WorkerLost { step: 2, workers: vec![1, 3], detect_ms: 250 };
+        assert!(w.to_json().to_string().contains("worker_lost"));
+    }
+}

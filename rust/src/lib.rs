@@ -34,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod init;
 pub mod metrics;
 pub mod mlperf;

@@ -15,6 +15,14 @@
 //! --pipeline-depth 1|2 (2 = cross-step double buffering, the default),
 //! --fence full|layer, --no-lars, --no-smoothing, --no-overlap,
 //! --mlperf-log, --threaded.
+//!
+//! Fault tolerance (PR 6): --fault SPEC (e.g. "crash@3:1;slow@2:0:8"),
+//! --fault-seed N --fault-count N (seeded random plan), --fault-deadline-ms
+//! N, --ckpt-every N (in-memory restore-point cadence), --straggler-factor
+//! X, --no-supervise, --no-recover. An injected crash is detected by
+//! heartbeat deadline, the pool re-shards over the survivors, state
+//! restores from the last in-memory snapshot and the run continues —
+//! bitwise identical to the unfaulted trajectory.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -33,6 +41,8 @@ const KNOWN_OPTS: &[&str] = &[
     "train-size",
     "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",
     "save-checkpoint", "resume",
+    "fault", "fault-seed", "fault-count", "fault-deadline-ms", "ckpt-every",
+    "straggler-factor", "no-supervise", "no-recover",
 ];
 
 fn main() -> Result<()> {
@@ -158,6 +168,18 @@ fn train(args: &Args) -> Result<()> {
         report.comm_exposed_total_s * 1e3,
         if trainer.pipeline { "pipelined" } else { "sequential" }
     );
+    if report.fault_seed != 0 || !report.fault_events.is_empty() {
+        println!(
+            "faults: seed={} events={} recoveries={} ({:.1} ms total recovery cost)",
+            report.fault_seed,
+            report.fault_events.len(),
+            report.recovery_count,
+            report.recovery_cost_s * 1e3
+        );
+        for e in &report.fault_events {
+            println!("  {}", e.to_json().to_string());
+        }
+    }
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_json().to_string_pretty())?;
         println!("wrote {path}");

@@ -291,6 +291,13 @@ impl MeasuredPipeline {
         cross_step_exposed(&self.report(), self.next_step_window_s)
     }
 
+    /// Per-bucket allreduce durations, in bucket order — the feed for the
+    /// coordinator's straggler detector (a duration far above the rolling
+    /// median flags the owning lane).
+    pub fn bucket_durations_s(&self) -> Vec<f64> {
+        self.comm_spans.iter().map(|&(s, e)| (e - s).max(0.0)).collect()
+    }
+
     /// Re-schedule the measured buckets (their ready times and measured
     /// durations) on `channels` idealized lanes with the simulator's
     /// greedy earliest-free-channel policy.

@@ -425,6 +425,63 @@ fn restore_reseeds_generations_under_double_buffering() {
     assert_eq!(straight.epoch(), resumed.epoch(), "epoch accounting diverged");
 }
 
+/// Satellite regression (closes the PR-5 gap): checkpoints now CARRY the
+/// q8 error-feedback residuals, so a q8+EF run interrupted mid-run and
+/// resumed from disk is bitwise identical to the uninterrupted one. The
+/// residuals are state exactly like momentum — silently zeroing them on
+/// restore (the old behavior) shifts every post-resume quantization.
+#[test]
+fn restore_carries_q8_ef_residuals_bitwise() {
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    cfg.comm_threads = 2;
+    cfg.total_steps = 6;
+    cfg.wire = "q8".into();
+
+    let mut straight = Trainer::new(cfg.clone(), engine()).unwrap();
+    assert!(straight.error_feedback(), "q8 must default to EF on");
+    for _ in 0..6 {
+        straight.step().unwrap();
+    }
+
+    let mut first = Trainer::new(cfg.clone(), engine()).unwrap();
+    for _ in 0..4 {
+        first.step().unwrap();
+    }
+    let ckpt = first.checkpoint();
+    assert_eq!(ckpt.ef_residuals.len(), 2, "q8+EF checkpoint must carry per-worker residuals");
+    assert!(
+        ckpt.ef_residuals.iter().any(|r| r.iter().any(|&x| x != 0.0)),
+        "after 4 q8 steps the residuals cannot all be zero"
+    );
+    assert!(ckpt.ef_err_sq > 0.0, "cumulative quant-error accounting must persist");
+
+    // Round-trip through DISK (atomic write + CRC-verified read), then
+    // resume in a fresh trainer.
+    let dir = std::env::temp_dir().join("yasgd_ef_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ef.ckpt");
+    ckpt.save(&path).unwrap();
+    let loaded = yasgd::checkpoint::Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.ef_residuals, ckpt.ef_residuals, "residuals must survive the wire format");
+    assert_eq!(loaded.ef_err_sq, ckpt.ef_err_sq);
+
+    let mut resumed = Trainer::new(cfg, engine()).unwrap();
+    resumed.restore(&loaded).unwrap();
+    assert_eq!(resumed.step_index(), 4);
+    for _ in 0..2 {
+        resumed.step().unwrap();
+    }
+    assert_eq!(straight.params(), resumed.params(), "q8+EF resume diverged");
+    assert_eq!(straight.bn_state(), resumed.bn_state(), "q8+EF resume diverged (bn)");
+    assert_eq!(
+        straight.quant_error_norm(),
+        resumed.quant_error_norm(),
+        "quant-error accounting diverged after resume"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Satellite: `--chunk-bytes auto` derives the grain from the α–β link
 /// (the α·β latency floor), builds a chunked plan with it, and the
 /// TrainReport records both the grain and the per-layer plan.

@@ -18,6 +18,13 @@ Asserts the structural invariants the cross-step pipeline PR promises:
      deterministic per-step byte accounting shows q8 moving >= 1.9x
      fewer bytes than f16 (exact WireStats counting, so NO tolerance),
      and the q8-vs-f32 compression ratio is > 3.8.
+  4. the fault-tolerance section (in-run recovery PR) exists and holds:
+     an injected crash actually forced >= 1 in-process recovery, the
+     recovered run finished BITWISE equal to the clean one (exact, NO
+     tolerance — this is the whole point), and the end-to-end overhead
+     of detection + re-shard + replay stayed below one clean run's
+     worth of wall-clock (overhead_frac < 1.0; detection deadlines
+     dominate, so this is loose enough for noisy runners).
 
 Tolerance-guarded on purpose for the wall-clock fields: CI runners are
 noisy and the exposed fractions are measurements; the gate catches
@@ -92,11 +99,33 @@ def main() -> None:
     if bench["wire_q8"]["compression_ratio"] <= 3.8:
         fail(f"q8 compression ratio vs f32 too low: {bench['wire_q8']['compression_ratio']}")
 
+    # Fault-tolerance section (in-run recovery PR).
+    faults = bench.get("faults")
+    if not isinstance(faults, dict):
+        fail("missing 'faults' section")
+    for key in ("clean_elapsed_s", "faulted_elapsed_s", "recovery_cost_s", "overhead_frac"):
+        v = faults.get(key)
+        if not isinstance(v, (int, float)):
+            fail(f"'faults.{key}' missing or non-numeric: {v!r}")
+    if faults.get("bitwise_equal") is not True:
+        fail(f"crash recovery must be bitwise identical: {faults.get('bitwise_equal')!r}")
+    recoveries = faults.get("recovery_count")
+    if not isinstance(recoveries, (int, float)) or recoveries < 1:
+        fail(f"injected crash must force >= 1 recovery: {recoveries!r}")
+    overhead = faults["overhead_frac"]
+    if overhead >= 1.0:
+        fail(
+            f"recovery overhead {overhead:.3f} >= 1.0: detection + re-shard + replay "
+            f"cost more than a whole clean run"
+        )
+
     print(
         f"check_bench: OK: exposed comm depth1={d1:.4f} -> depth2={d2:.4f} "
         f"(cross-step hidden {bench['depth2']['cross_hidden_ms_per_step']:.4f} ms/step); "
         f"wire q8 exposed {eq8:.4f} <= f16 {ef16:.4f} + tol, "
-        f"bytes {byte_ratio:.3f}x below f16"
+        f"bytes {byte_ratio:.3f}x below f16; "
+        f"faults: {int(recoveries)} recoveries, bitwise, "
+        f"overhead {overhead:.3f} < 1.0"
     )
 
 
