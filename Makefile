@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-check chaos-smoke artifacts clean
+.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-fig2 bench-check chaos-smoke artifacts clean
 
 verify: build test
 
@@ -32,11 +32,19 @@ bench-comm:
 bench-pipeline:
 	$(CARGO) bench --bench pipeline
 
-# Assert the bench artifact's structural invariants (depth-2 section
-# present, whole-run exposed comm no worse than depth 1, crash recovery
-# bitwise with bounded overhead).
+# 2048-rank schedule sweep (ring/hier/torus/multiring x f16/q8) ->
+# BENCH_fig2.json. Reads BENCH_pipeline.json's fitted link when present,
+# so run bench-pipeline first for the calibrated columns to be measured.
+bench-fig2:
+	$(CARGO) bench --bench fig2_scalability
+
+# Assert the bench artifacts' structural invariants (pipeline: depth-2
+# section present, whole-run exposed comm no worse than depth 1, crash
+# recovery bitwise with bounded overhead; fig2: torus step time no worse
+# than plain hier at 2048 ranks under the calibrated link, and the torus
+# byte split is intra-node dominant).
 bench-check:
-	python3 scripts/check_bench.py BENCH_pipeline.json
+	python3 scripts/check_bench.py BENCH_pipeline.json BENCH_fig2.json
 
 # Fault-injection system tests only: the chaos grid (crash/stall/panic/
 # lane faults × depth × wire recover bitwise), plus the seeded random

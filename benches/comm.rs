@@ -64,6 +64,10 @@ fn main() {
         Algorithm::Ring,
         Algorithm::HalvingDoubling,
         Algorithm::Hierarchical { ranks_per_node: 4 },
+        // 8 ranks / rpn 4 -> a 1x2 node "torus" (row ring only) here; the
+        // A8 modelled table below re-derives the real 16x32 grid at 2048.
+        Algorithm::torus_auto(8, 4),
+        Algorithm::MultiRing { rails: 2 },
     ];
     for algo in algos {
         let mut bufs = make_bufs(8, n8, 42);

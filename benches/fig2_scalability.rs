@@ -1,21 +1,41 @@
-//! Bench target for paper Fig 2: throughput vs GPU count.
+//! Bench target for paper Fig 2: throughput vs GPU count — now swept to
+//! the title's 2048-rank scale across the full schedule family.
 //!
-//! Measures the REAL coordinator at 1..4 in-process workers (compute-bound
-//! on this box) and regenerates the paper's 4..2048-GPU curve from the
-//! ABCI α–β model. When a `BENCH_pipeline.json` from a prior
-//! `make bench-pipeline` run is present, its FITTED α–β link (the replay
-//! calibration of the measured per-bucket allreduces) is fed back into
-//! the `ClusterSpec` generators as a third, measured-link curve — closing
-//! the measure → fit → model loop instead of hardcoding α–β.
+//! Sections:
+//!   1. REAL coordinator at 1..4 in-process workers (compute-bound here).
+//!   2. The Fig-2 ABCI curve (torus default, per-GPU batch 40, fp16).
+//!   3. Schedule sweep: ring vs hier vs torus vs multiring at 4..2048
+//!      ranks under f16 AND q8 wire pricing, on the ABCI spec and on the
+//!      CALIBRATED spec built from `BENCH_pipeline.json`'s fitted α–β
+//!      link (falling back to the default 2 µs / 8 GB/s config link when
+//!      no fit artifact is around, so the sweep always runs).
+//!   4. REAL `allreduce_mean` at p = 2048 per schedule × wire: exact
+//!      per-tier WireStats (intra-node / inter-node / inter-rack byte
+//!      split + the node-leader bottleneck `max_bytes_per_rank`).
+//!
+//! Writes the flat headline artifact BENCH_fig2.json at the repo root
+//! (uploaded as a CI artifact and gated by scripts/check_bench.py: torus
+//! must beat plain hier at 2048 ranks under the calibrated link, and the
+//! torus tier accounting must be intra-dominant), plus the usual raw
+//! dump under bench_results/. Quick mode (`BENCH_QUICK=1`, the CI smoke
+//! setting) trims the measured section so the bench finishes in seconds
+//! while still producing every field.
 //! `cargo bench --bench fig2_scalability`
 
 use std::sync::Arc;
 use yasgd::benchkit::{dump_results, Table};
+use yasgd::collective::{allreduce_mean, torus_grid, Algorithm, Precision};
 use yasgd::config::RunConfig;
 use yasgd::coordinator::Trainer;
 use yasgd::runtime::Engine;
-use yasgd::simnet::{scaling_curve, ClusterSpec, LinkParams};
+use yasgd::simnet::{scaling_curve, scaling_curve_with, ClusterSpec, LinkParams};
 use yasgd::util::json::Json;
+use yasgd::util::rng::Rng;
+
+/// ResNet-50 gradient elements (the paper's model, not our proxy).
+const GRAD_ELEMS: f64 = 25.5e6;
+/// The sweep's headline rank count — the title's 2048 GPUs.
+const RANKS: usize = 2048;
 
 /// The α–β link `benches/pipeline.rs` fitted from its measured trace, if
 /// a BENCH_pipeline.json is lying around (repo root — same place that
@@ -31,13 +51,27 @@ fn fitted_link() -> Option<LinkParams> {
     Some(LinkParams { latency_s: alpha_us * 1e-6, bandwidth_bps: beta_gbps * 1e9 })
 }
 
+/// The four schedules the sweep compares, at rank count `p`.
+fn schedules(p: usize, rpn: usize) -> [(&'static str, Algorithm); 4] {
+    [
+        ("ring", Algorithm::Ring),
+        ("hier", Algorithm::Hierarchical { ranks_per_node: rpn }),
+        ("torus", Algorithm::torus_auto(p, rpn)),
+        ("multiring", Algorithm::MultiRing { rails: 2 }),
+    ]
+}
+
 fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
     let mut results = Vec::new();
 
     // ---- measured (real engine) ------------------------------------------
     let engine = Arc::new(Engine::load(&yasgd::artifacts_dir(None)).expect("make artifacts"));
     let b = engine.manifest().train.batch_size;
-    let steps = 4;
+    let steps = if quick { 2 } else { 4 };
+    if quick {
+        println!("(BENCH_QUICK: {steps} measured steps per worker count)\n");
+    }
     println!("== measured coordinator throughput (runtime engine) ==");
     let mut t = Table::new(&["workers", "step ms", "img/s"]);
     for w in [1usize, 2, 4] {
@@ -63,10 +97,10 @@ fn main() {
     println!("{}", t.render());
 
     // ---- modelled ABCI curve (the figure's axes) ---------------------------
-    println!("== Fig 2 curve (ABCI model, per-GPU batch 40, fp16 grads) ==");
+    println!("== Fig 2 curve (ABCI model, torus schedule, per-GPU batch 40, fp16 grads) ==");
     let spec = ClusterSpec::abci();
     let counts: Vec<usize> = (2..=11).map(|k| 1usize << k).collect();
-    let pts = scaling_curve(&spec, &counts, 40, 51e6, 8, 0.66);
+    let pts = scaling_curve(&spec, &counts, 40, GRAD_ELEMS * 2.0, 8, 0.66);
     let mut t = Table::new(&["gpus", "ideal Mimg/s", "model Mimg/s", "efficiency"]);
     for p in &pts {
         t.row(&[
@@ -89,40 +123,138 @@ fn main() {
         last.efficiency * 100.0
     );
 
-    // ---- measured-link curve (fitted α–β fed back from the pipeline
-    // bench replay, closing the calibration loop) --------------------------
-    match fitted_link() {
-        Some(link) => {
-            println!(
-                "== Fig 2 curve (MEASURED link: α = {:.2} µs, β = {:.3} GB/s from \
-                 BENCH_pipeline.json) ==",
-                link.latency_s * 1e6,
-                link.bandwidth_bps / 1e9
-            );
-            let mspec = ClusterSpec::calibrated(link);
-            let mpts = scaling_curve(&mspec, &counts, 40, 51e6, 8, 0.66);
-            let mut t = Table::new(&["gpus", "model Mimg/s", "efficiency"]);
-            for p in &mpts {
-                t.row(&[
-                    format!("{}", p.gpus),
-                    format!("{:.3}", p.model_images_per_sec / 1e6),
-                    format!("{:.1}%", p.efficiency * 100.0),
-                ]);
-                results.push(Json::obj(vec![
-                    ("name", Json::Str(format!("measured-link-{}g", p.gpus))),
-                    ("model_images_per_sec", Json::Num(p.model_images_per_sec)),
-                    ("efficiency", Json::Num(p.efficiency)),
-                ]));
+    // ---- schedule sweep: ring vs hier vs torus vs multiring ---------------
+    // Two link worlds: the hardcoded ABCI spec, and the CALIBRATED spec
+    // fed back from the pipeline bench's fitted α–β (the measure → fit →
+    // model loop). The fallback default link keeps the calibrated section
+    // — and its CI gate — alive when no fit artifact exists.
+    let (calib_link, calib_source) = match fitted_link() {
+        Some(link) => (link, "BENCH_pipeline.json"),
+        None => (RunConfig::default().link(), "default-config-link"),
+    };
+    println!(
+        "== schedule sweep to {RANKS} ranks (calibrated link: α = {:.2} µs, β = {:.3} GB/s \
+         from {calib_source}) ==",
+        calib_link.latency_s * 1e6,
+        calib_link.bandwidth_bps / 1e9
+    );
+    let rpn = spec.gpus_per_node;
+    let sweep_counts = [16usize, 128, 512, RANKS];
+    let mut model_rows = Vec::new();
+    for (spec_name, sp) in [("abci", spec), ("calibrated", ClusterSpec::calibrated(calib_link))] {
+        for (wire, bpe) in [("f16", 2.0f64), ("q8", 1.0f64)] {
+            let mut t = Table::new(&["gpus", "ring ms", "hier ms", "torus ms", "multiring ms"]);
+            let curves: Vec<(&str, Vec<yasgd::simnet::ScalingPoint>)> = schedules(RANKS, rpn)
+                .iter()
+                .map(|&(name, _)| {
+                    let pts = scaling_curve_with(
+                        &sp,
+                        |p| {
+                            schedules(p, rpn)
+                                .iter()
+                                .find(|(n, _)| *n == name)
+                                .map(|&(_, a)| a)
+                                .unwrap()
+                        },
+                        &sweep_counts,
+                        40,
+                        GRAD_ELEMS * bpe,
+                        8,
+                        0.66,
+                    );
+                    (name, pts)
+                })
+                .collect();
+            for (i, &g) in sweep_counts.iter().enumerate() {
+                let mut row = vec![format!("{g}")];
+                for (name, pts) in &curves {
+                    let p = &pts[i];
+                    row.push(format!("{:.2}", p.step_time_s * 1e3));
+                    model_rows.push(Json::obj(vec![
+                        ("spec", Json::Str(spec_name.to_string())),
+                        ("wire", Json::Str(wire.to_string())),
+                        ("algo", Json::Str(name.to_string())),
+                        ("gpus", Json::Num(g as f64)),
+                        ("step_ms", Json::Num(p.step_time_s * 1e3)),
+                        ("images_per_sec", Json::Num(p.model_images_per_sec)),
+                        ("efficiency", Json::Num(p.efficiency)),
+                    ]));
+                }
+                t.row(&row);
             }
-            println!("{}", t.render());
-        }
-        None => {
-            println!(
-                "(no usable α–β fit in BENCH_pipeline.json — run `make bench-pipeline` first \
-                 for the measured-link curve)"
-            );
+            println!("-- {spec_name} spec, {wire} wire --\n{}", t.render());
         }
     }
+
+    // ---- real per-tier wire accounting at 2048 ranks ----------------------
+    // Not a model: the actual reference collective at p = 2048, small
+    // buffer, so the byte split per tier and the node-leader bottleneck
+    // are EXACT schedule properties, independent of link pricing.
+    let n = 2048usize;
+    let (rows, cols) = torus_grid(0, 0, (RANKS + rpn - 1) / rpn);
+    println!(
+        "== real allreduce at p = {RANKS} (rpn = {rpn}, torus grid {rows}x{cols}, n = {n} \
+         elems/rank) =="
+    );
+    let mut t = Table::new(&[
+        "algo", "wire", "total KiB", "intra KiB", "inter KiB", "rack KiB", "max/rank KiB",
+        "rounds",
+    ]);
+    let mut wire_rows = Vec::new();
+    for (name, algo) in schedules(RANKS, rpn) {
+        for (wire, precision) in [("f16", Precision::F16), ("q8", Precision::Q8)] {
+            let mut rng = Rng::new(0xF162048);
+            let mut bufs: Vec<Vec<f32>> = (0..RANKS)
+                .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 2.0).collect())
+                .collect();
+            let stats = allreduce_mean(&mut bufs, algo, precision);
+            assert_eq!(
+                stats.intranode_bytes + stats.internode_bytes + stats.interrack_bytes,
+                stats.total_bytes,
+                "{name}/{wire}: per-tier bytes must partition the total"
+            );
+            let kib = |v: usize| format!("{:.0}", v as f64 / 1024.0);
+            t.row(&[
+                name.to_string(),
+                wire.to_string(),
+                kib(stats.total_bytes),
+                kib(stats.intranode_bytes),
+                kib(stats.internode_bytes),
+                kib(stats.interrack_bytes),
+                kib(stats.max_bytes_per_rank),
+                format!("{}", stats.rounds),
+            ]);
+            wire_rows.push(Json::obj(vec![
+                ("algo", Json::Str(name.to_string())),
+                ("wire", Json::Str(wire.to_string())),
+                ("total_bytes", Json::Num(stats.total_bytes as f64)),
+                ("intranode_bytes", Json::Num(stats.intranode_bytes as f64)),
+                ("internode_bytes", Json::Num(stats.internode_bytes as f64)),
+                ("interrack_bytes", Json::Num(stats.interrack_bytes as f64)),
+                ("max_bytes_per_rank", Json::Num(stats.max_bytes_per_rank as f64)),
+                ("rounds", Json::Num(stats.rounds as f64)),
+            ]));
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- headline artifact (CI uploads this next to BENCH_pipeline.json,
+    // scripts/check_bench.py asserts the torus gates on it) ----------------
+    let headline = Json::obj(vec![
+        ("quick", Json::Bool(quick)),
+        ("ranks", Json::Num(RANKS as f64)),
+        ("ranks_per_node", Json::Num(rpn as f64)),
+        ("torus_grid", Json::Str(format!("{rows}x{cols}"))),
+        ("calib_source", Json::Str(calib_source.to_string())),
+        ("calib_alpha_us", Json::Num(calib_link.latency_s * 1e6)),
+        ("calib_beta_gbps", Json::Num(calib_link.bandwidth_bps / 1e9)),
+        ("model", Json::Arr(model_rows)),
+        ("wire_stats", Json::Arr(wire_rows)),
+    ]);
+    std::fs::write("BENCH_fig2.json", headline.to_string_pretty())
+        .expect("writing BENCH_fig2.json");
+    println!("\nwrote BENCH_fig2.json");
+    results.push(headline);
     let path = dump_results("fig2_scalability", &Json::Arr(results)).unwrap();
     println!("wrote {}", path.display());
 }

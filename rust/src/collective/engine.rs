@@ -30,7 +30,7 @@
 //!   plan — never by thread arrival — so results are bit-identical to the
 //!   reference at every thread count (grid-tested below).
 
-use super::{chunks, Algorithm, Precision, WireStats};
+use super::{chunks, torus_grid, Algorithm, Precision, Tier, WireStats};
 use std::sync::Barrier;
 use std::time::Instant;
 
@@ -102,6 +102,7 @@ impl PlanBuilder {
     /// Account for a transfer and return the op if it moves data. Bytes
     /// are the codec's EXACT wire cost (q8 scale headers included), with
     /// the fp32-equivalent booked alongside for the compression ratio.
+    /// Bytes are booked on the `tier` of the link the hop crosses.
     /// `count_empty` mirrors the reference's message accounting: the ring
     /// skips empty chunks entirely, while naive/HD/hierarchical send (and
     /// count) zero-length messages.
@@ -112,7 +113,7 @@ impl PlanBuilder {
         dst: usize,
         lo: usize,
         hi: usize,
-        internode: bool,
+        tier: Tier,
         count_empty: bool,
     ) -> Option<Op> {
         debug_assert!(matches!(kind, OpKind::Copy | OpKind::Add));
@@ -124,8 +125,10 @@ impl PlanBuilder {
             self.stats.messages += 1;
             self.sent[src] += bytes;
             self.recv[dst] += bytes;
-            if internode {
-                self.stats.internode_bytes += bytes;
+            match tier {
+                Tier::IntraNode => self.stats.intranode_bytes += bytes,
+                Tier::InterNode => self.stats.internode_bytes += bytes,
+                Tier::InterRack => self.stats.interrack_bytes += bytes,
             }
         }
         (lo < hi).then_some(Op { kind, src, dst, lo, hi })
@@ -174,20 +177,31 @@ fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan
     let inv = 1.0 / p as f32;
     // fp32 folds the mean-scale into the gather phase (bit-neutral, see
     // module docs); quantizing codecs must keep quantize → gather → scale
-    // order (quantize∘scale ≠ scale∘quantize bitwise).
-    let fold = (precision == Precision::F32).then_some(inv);
+    // order (quantize∘scale ≠ scale∘quantize bitwise). The torus and
+    // multi-rail schedules keep the reference's trailing whole-buffer
+    // scale on every precision (their multi-phase gathers make the fold
+    // point awkward, and they are simulated-scale schedules first).
+    let fold = match algo {
+        Algorithm::Torus { .. } | Algorithm::MultiRing { .. } => None,
+        _ => (precision == Precision::F32).then_some(inv),
+    };
     match algo {
         Algorithm::Naive => build_naive(&mut pb, p, n, fold),
         Algorithm::Ring => {
             let ids: Vec<usize> = (0..p).collect();
-            build_ring(&mut pb, &ids, n, true, fold);
+            build_ring(&mut pb, &ids, n, Tier::InterNode, fold);
         }
         Algorithm::HalvingDoubling => build_hd(&mut pb, p, n, fold),
         Algorithm::Hierarchical { ranks_per_node } => {
             build_hier(&mut pb, p, n, ranks_per_node, fold)
         }
+        Algorithm::Torus { rows, cols, ranks_per_node } => {
+            build_torus(&mut pb, p, n, rows, cols, ranks_per_node)
+        }
+        Algorithm::MultiRing { rails } => build_multiring(&mut pb, p, n, rails),
     }
-    if precision.quantizes() {
+    if precision.quantizes() || matches!(algo, Algorithm::Torus { .. } | Algorithm::MultiRing { .. })
+    {
         // Reference epilogue: every rank scales its whole buffer by 1/p.
         let ops = (0..p).map(|r| pb.scale(r, 0, n)).collect();
         pb.push_parallel(ops);
@@ -198,7 +212,7 @@ fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan
 fn build_naive(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
     // Gather-reduce at rank 0: strictly ordered, one serial chain.
     let chain: Vec<Op> = (1..p)
-        .filter_map(|r| pb.xfer(OpKind::Add, r, 0, 0, n, true, true))
+        .filter_map(|r| pb.xfer(OpKind::Add, r, 0, 0, n, Tier::InterNode, true))
         .collect();
     pb.push_round(vec![chain]);
     let q = pb.quantize(0, 0, n);
@@ -208,7 +222,7 @@ fn build_naive(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
         pb.push_parallel(vec![s]);
     }
     // Broadcast: independent copies out of the root.
-    let ops = (1..p).map(|r| pb.xfer(OpKind::Copy, 0, r, 0, n, true, true)).collect();
+    let ops = (1..p).map(|r| pb.xfer(OpKind::Copy, 0, r, 0, n, Tier::InterNode, true)).collect();
     pb.push_parallel(ops);
     pb.stats.rounds += 2 * (p - 1);
 }
@@ -217,51 +231,80 @@ fn build_naive(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
 /// hierarchical phase 2 passes the node leaders). Handles the reduce-
 /// scatter, the owned-chunk quantize (fp16) or folded scale (fp32), and
 /// the all-gather.
-fn build_ring(pb: &mut PlanBuilder, ids: &[usize], n: usize, internode: bool, fold: Option<f32>) {
+fn build_ring(pb: &mut PlanBuilder, ids: &[usize], n: usize, tier: Tier, fold: Option<f32>) {
     let p = ids.len();
+    let rings = [(ids.to_vec(), 0, n)];
+    build_ring_group(pb, &rings, tier, fold);
+    pb.stats.rounds += 2 * (p - 1);
+}
+
+/// Several same-size rings in lockstep: ring k reduce-scatters and
+/// all-gathers its own span `[lo0, hi0)` over its own rank ids, and the
+/// rings share physical rounds (their rank sets and spans are disjoint,
+/// so the ops of one round stay race-free). The torus's per-column rings
+/// and the multi-rail rings both come through here. Does NOT bump
+/// `stats.rounds` — the caller owns round accounting, because lockstep
+/// rings cost the rounds of ONE ring.
+fn build_ring_group(
+    pb: &mut PlanBuilder,
+    rings: &[(Vec<usize>, usize, usize)],
+    tier: Tier,
+    fold: Option<f32>,
+) {
+    let p = rings[0].0.len();
     debug_assert!(p >= 2);
-    let spans = chunks(n, p);
+    debug_assert!(rings.iter().all(|(ids, _, _)| ids.len() == p));
+    // Per-ring chunk spans, offset into the ring's slice of the buffer.
+    let spans: Vec<Vec<(usize, usize)>> = rings
+        .iter()
+        .map(|&(_, lo0, hi0)| {
+            chunks(hi0 - lo0, p).into_iter().map(|(a, b)| (lo0 + a, lo0 + b)).collect()
+        })
+        .collect();
 
     // Reduce-scatter: in round r, position i sends chunk (i - r) to i+1.
     for r in 0..p - 1 {
-        let ops = (0..p)
-            .map(|i| {
-                let (lo, hi) = spans[(i + p - r) % p];
-                pb.xfer(OpKind::Add, ids[i], ids[(i + 1) % p], lo, hi, internode, false)
-            })
-            .collect();
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(rings.len() * p);
+        for (k, (ids, _, _)) in rings.iter().enumerate() {
+            for i in 0..p {
+                let (lo, hi) = spans[k][(i + p - r) % p];
+                ops.push(pb.xfer(OpKind::Add, ids[i], ids[(i + 1) % p], lo, hi, tier, false));
+            }
+        }
         pb.push_parallel(ops);
     }
-    // Position i now owns fully-reduced chunk (i+1)%p.
+    // Position i now owns fully-reduced chunk (i+1)%p of its ring's span.
     if pb.precision.quantizes() {
-        let ops = (0..p)
-            .map(|i| {
-                let (lo, hi) = spans[(i + 1) % p];
-                pb.quantize(ids[i], lo, hi)
-            })
-            .collect();
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(rings.len() * p);
+        for (k, (ids, _, _)) in rings.iter().enumerate() {
+            for i in 0..p {
+                let (lo, hi) = spans[k][(i + 1) % p];
+                ops.push(pb.quantize(ids[i], lo, hi));
+            }
+        }
         pb.push_parallel(ops);
     }
     if fold.is_some() {
-        let ops = (0..p)
-            .map(|i| {
-                let (lo, hi) = spans[(i + 1) % p];
-                pb.scale(ids[i], lo, hi)
-            })
-            .collect();
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(rings.len() * p);
+        for (k, (ids, _, _)) in rings.iter().enumerate() {
+            for i in 0..p {
+                let (lo, hi) = spans[k][(i + 1) % p];
+                ops.push(pb.scale(ids[i], lo, hi));
+            }
+        }
         pb.push_parallel(ops);
     }
-    // All-gather: chunk (i+1-r) travels the ring.
+    // All-gather: chunk (i+1-r) travels each ring.
     for r in 0..p - 1 {
-        let ops = (0..p)
-            .map(|i| {
-                let (lo, hi) = spans[(i + 1 + p - r) % p];
-                pb.xfer(OpKind::Copy, ids[i], ids[(i + 1) % p], lo, hi, internode, false)
-            })
-            .collect();
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(rings.len() * p);
+        for (k, (ids, _, _)) in rings.iter().enumerate() {
+            for i in 0..p {
+                let (lo, hi) = spans[k][(i + 1 + p - r) % p];
+                ops.push(pb.xfer(OpKind::Copy, ids[i], ids[(i + 1) % p], lo, hi, tier, false));
+            }
+        }
         pb.push_parallel(ops);
     }
-    pb.stats.rounds += 2 * (p - 1);
 }
 
 fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
@@ -270,7 +313,7 @@ fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
 
     // Fold the remainder into partners (disjoint pairs, one round).
     let ops = (0..extra)
-        .map(|e| pb.xfer(OpKind::Add, pow2 + e, e, 0, n, true, true))
+        .map(|e| pb.xfer(OpKind::Add, pow2 + e, e, 0, n, Tier::InterNode, true))
         .collect();
     pb.push_parallel(ops);
     pb.stats.rounds += extra;
@@ -287,8 +330,8 @@ fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
             }
             let (lo_i, hi_i) = spans[i];
             let mid = lo_i + (hi_i - lo_i) / 2;
-            ops.push(pb.xfer(OpKind::Add, i, j, mid, hi_i, true, true));
-            ops.push(pb.xfer(OpKind::Add, j, i, lo_i, mid, true, true));
+            ops.push(pb.xfer(OpKind::Add, i, j, mid, hi_i, Tier::InterNode, true));
+            ops.push(pb.xfer(OpKind::Add, j, i, lo_i, mid, Tier::InterNode, true));
             spans[i] = (lo_i, mid);
             spans[j] = (mid, hi_i);
         }
@@ -319,8 +362,8 @@ fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
             }
             let (lo_i, hi_i) = spans[i];
             let (lo_j, hi_j) = spans[j];
-            ops.push(pb.xfer(OpKind::Copy, j, i, lo_j, hi_j, true, true));
-            ops.push(pb.xfer(OpKind::Copy, i, j, lo_i, hi_i, true, true));
+            ops.push(pb.xfer(OpKind::Copy, j, i, lo_j, hi_j, Tier::InterNode, true));
+            ops.push(pb.xfer(OpKind::Copy, i, j, lo_i, hi_i, Tier::InterNode, true));
             let merged = (lo_i.min(lo_j), hi_i.max(hi_j));
             spans[i] = merged;
             spans[j] = merged;
@@ -333,7 +376,7 @@ fn build_hd(pb: &mut PlanBuilder, p: usize, n: usize, fold: Option<f32>) {
     // Unfold: partners broadcast the final (already scaled, on fp32)
     // buffer back to the folded ranks.
     let ops = (0..extra)
-        .map(|e| pb.xfer(OpKind::Copy, e, pow2 + e, 0, n, true, true))
+        .map(|e| pb.xfer(OpKind::Copy, e, pow2 + e, 0, n, Tier::InterNode, true))
         .collect();
     pb.push_parallel(ops);
     pb.stats.rounds += extra;
@@ -350,7 +393,7 @@ fn build_hier(pb: &mut PlanBuilder, p: usize, n: usize, ranks_per_node: usize, f
         .map(|node| {
             let leader = node * rpn;
             (leader + 1..((node + 1) * rpn).min(p))
-                .filter_map(|r| pb.xfer(OpKind::Add, r, leader, 0, n, false, true))
+                .filter_map(|r| pb.xfer(OpKind::Add, r, leader, 0, n, Tier::IntraNode, true))
                 .collect()
         })
         .collect();
@@ -361,7 +404,7 @@ fn build_hier(pb: &mut PlanBuilder, p: usize, n: usize, ranks_per_node: usize, f
     // into the leader ring's gather.
     if nodes > 1 {
         let leader_ids: Vec<usize> = (0..nodes).map(|nd| nd * rpn).collect();
-        build_ring(pb, &leader_ids, n, true, fold);
+        build_ring(pb, &leader_ids, n, Tier::InterNode, fold);
     } else if fold.is_some() {
         // Single node: the leader holds the full sum; scale it before the
         // broadcast copies it out.
@@ -378,11 +421,132 @@ fn build_hier(pb: &mut PlanBuilder, p: usize, n: usize, ranks_per_node: usize, f
     for node in 0..nodes {
         let leader = node * rpn;
         for r in leader + 1..((node + 1) * rpn).min(p) {
-            ops.push(pb.xfer(OpKind::Copy, leader, r, 0, n, false, true));
+            ops.push(pb.xfer(OpKind::Copy, leader, r, 0, n, Tier::IntraNode, true));
         }
     }
     pb.push_parallel(ops);
     pb.stats.rounds += rpn - 1;
+}
+
+/// 2D-torus plan, mirroring the reference `torus` phase for phase (see
+/// its docs for the schedule and the q8 re-grid argument). The rows×cols
+/// leader grid comes from the shared `torus_grid` factorization, so plan
+/// and reference always agree on the shape.
+fn build_torus(
+    pb: &mut PlanBuilder,
+    p: usize,
+    n: usize,
+    rows: usize,
+    cols: usize,
+    ranks_per_node: usize,
+) {
+    let rpn = ranks_per_node.max(1).min(p);
+    let nodes = (p + rpn - 1) / rpn;
+    let (rows, cols) = torus_grid(rows, cols, nodes);
+    let leader = |node: usize| node * rpn;
+    let lid = |r: usize, c: usize| leader(r * cols + c);
+    let col_spans = chunks(n, cols);
+
+    // Phase 1: intra-node reduce — one serial chain per node (member
+    // order IS the reduction order), nodes concurrent.
+    let chains: Vec<Vec<Op>> = (0..nodes)
+        .map(|node| {
+            let l = leader(node);
+            (l + 1..((node + 1) * rpn).min(p))
+                .filter_map(|r| pb.xfer(OpKind::Add, r, l, 0, n, Tier::IntraNode, true))
+                .collect()
+        })
+        .collect();
+    pb.push_round(chains);
+    pb.stats.rounds += rpn - 1;
+
+    // Phase 2: row-ring reduce-scatter; all rows share each round.
+    if cols > 1 {
+        for t in 0..cols - 1 {
+            let mut ops: Vec<Option<Op>> = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                for i in 0..cols {
+                    let (lo, hi) = col_spans[(i + cols - t) % cols];
+                    let (src, dst) = (lid(r, i), lid(r, (i + 1) % cols));
+                    ops.push(pb.xfer(OpKind::Add, src, dst, lo, hi, Tier::InterNode, false));
+                }
+            }
+            pb.push_parallel(ops);
+        }
+        pb.stats.rounds += cols - 1;
+    }
+
+    // Phase 3: per-column ring allreduce of the column's owned chunk —
+    // the cols rings are disjoint in ranks AND spans, so they run in
+    // lockstep and cost the rounds of one rows-sized ring.
+    if rows > 1 {
+        let rings: Vec<(Vec<usize>, usize, usize)> = (0..cols)
+            .map(|c| {
+                let (lo, hi) = col_spans[(c + 1) % cols];
+                ((0..rows).map(|r| lid(r, c)).collect(), lo, hi)
+            })
+            .collect();
+        build_ring_group(pb, &rings, Tier::InterRack, None);
+        pb.stats.rounds += 2 * (rows - 1);
+    }
+
+    // Re-quantize every leader's owned span on the ROW-gather grid (see
+    // the reference: q8's positional chunk grid must match the span the
+    // row all-gather relays, or relay re-encodes would diverge).
+    if pb.precision.quantizes() {
+        let mut ops: Vec<Option<Op>> = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let (lo, hi) = col_spans[(c + 1) % cols];
+                ops.push(pb.quantize(lid(r, c), lo, hi));
+            }
+        }
+        pb.push_parallel(ops);
+    }
+
+    // Phase 4: row-ring all-gather.
+    if cols > 1 {
+        for t in 0..cols - 1 {
+            let mut ops: Vec<Option<Op>> = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                for i in 0..cols {
+                    let (lo, hi) = col_spans[(i + 1 + cols - t) % cols];
+                    let (src, dst) = (lid(r, i), lid(r, (i + 1) % cols));
+                    ops.push(pb.xfer(OpKind::Copy, src, dst, lo, hi, Tier::InterNode, false));
+                }
+            }
+            pb.push_parallel(ops);
+        }
+        pb.stats.rounds += cols - 1;
+    }
+
+    // Phase 5: leaders quantize the full buffer, then broadcast.
+    if pb.precision.quantizes() {
+        let ops = (0..nodes).map(|node| pb.quantize(leader(node), 0, n)).collect();
+        pb.push_parallel(ops);
+    }
+    let mut ops: Vec<Option<Op>> = Vec::new();
+    for node in 0..nodes {
+        let l = leader(node);
+        for r in l + 1..((node + 1) * rpn).min(p) {
+            ops.push(pb.xfer(OpKind::Copy, l, r, 0, n, Tier::IntraNode, true));
+        }
+    }
+    pb.push_parallel(ops);
+    pb.stats.rounds += rpn - 1;
+}
+
+/// Multi-rail ring plan: the rails' rings are disjoint slices over the
+/// same rank set, zipped into shared rounds (the reference runs them
+/// sequentially; byte/message accounting is order-independent and the
+/// shared `2(p-1)` round count models rails on separate NIC ports).
+fn build_multiring(pb: &mut PlanBuilder, p: usize, n: usize, rails: usize) {
+    let rails = rails.max(1);
+    let ids: Vec<usize> = (0..p).collect();
+    let rings: Vec<(Vec<usize>, usize, usize)> =
+        chunks(n, rails).into_iter().map(|(lo, hi)| (ids.clone(), lo, hi)).collect();
+    build_ring_group(pb, &rings, Tier::InterNode, None);
+    pb.stats.rounds += 2 * (p - 1);
 }
 
 // ---------------------------------------------------------------------
@@ -679,6 +843,12 @@ mod tests {
             Algorithm::Hierarchical { ranks_per_node: 4 },
             Algorithm::Hierarchical { ranks_per_node: 3 },
             Algorithm::Hierarchical { ranks_per_node: 1 },
+            // rpn=2 gives multi-member nodes AND (at p>=8) a 2D leader
+            // grid with live column rings; rpn=1 gives pure leader grids.
+            Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 2 },
+            Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 1 },
+            Algorithm::MultiRing { rails: 2 },
+            Algorithm::MultiRing { rails: 3 },
         ]
     }
 
@@ -687,7 +857,9 @@ mod tests {
         assert_eq!(a.total_bytes, b.total_bytes, "{what}: total_bytes");
         assert_eq!(a.max_bytes_per_rank, b.max_bytes_per_rank, "{what}: max_bytes_per_rank");
         assert_eq!(a.messages, b.messages, "{what}: messages");
+        assert_eq!(a.intranode_bytes, b.intranode_bytes, "{what}: intranode_bytes");
         assert_eq!(a.internode_bytes, b.internode_bytes, "{what}: internode_bytes");
+        assert_eq!(a.interrack_bytes, b.interrack_bytes, "{what}: interrack_bytes");
         assert_eq!(a.uncompressed_bytes, b.uncompressed_bytes, "{what}: uncompressed_bytes");
     }
 

@@ -12,8 +12,15 @@
 //!
 //! Algorithms: naive root-gather (baseline), ring (bandwidth-optimal,
 //! 2(p-1)/p · n bytes/rank), recursive halving-doubling (latency-optimal,
-//! log2 p rounds), and the ABCI-shaped hierarchical variant (intra-node
-//! reduce → inter-node ring over node leaders → intra-node broadcast).
+//! log2 p rounds), the ABCI-shaped hierarchical variant (intra-node
+//! reduce → inter-node ring over node leaders → intra-node broadcast),
+//! the 2D-torus schedule from Sony's NNL (arXiv 1811.05233: intra-node
+//! reduce → per-row ring reduce-scatter → per-column ring allreduce →
+//! per-row ring allgather → intra-node broadcast), and the multi-rail
+//! ring (independent rings over disjoint buffer slices, one per NIC
+//! rail). Every hop is booked on the link [`Tier`] it crosses, so the
+//! α–β model in `simnet` can price intra-node, in-rack and inter-rack
+//! traffic differently.
 //!
 //! Two execution paths share the same per-element math:
 //!
@@ -53,6 +60,18 @@ pub use engine::CommEngine;
 pub use crate::util::codec::Codec as Precision;
 pub use crate::util::codec::WireCodec;
 
+/// Which link class a hop crosses. Every transfer is booked on exactly
+/// one tier so `WireStats` can split bytes by link class and the simnet
+/// model can price each hop on the link it actually crosses: NVLink
+/// within a node, the in-rack IB fabric between nodes, and the
+/// (typically oversubscribed) spine between racks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    IntraNode,
+    InterNode,
+    InterRack,
+}
+
 /// Which collective algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
@@ -64,6 +83,18 @@ pub enum Algorithm {
     HalvingDoubling,
     /// Intra-node reduce, inter-node ring over leaders, intra-node bcast.
     Hierarchical { ranks_per_node: usize },
+    /// 2D-torus over the node grid (Sony NNL, arXiv 1811.05233):
+    /// intra-node reduce → per-row ring reduce-scatter (each row leader
+    /// ends owning 1/cols of the buffer) → per-column ring allreduce of
+    /// the owned chunk (the only phase that crosses racks) → per-row
+    /// ring allgather → intra-node broadcast. `rows × cols` must tile
+    /// the node count; `0 × 0` (or any non-tiling shape) falls back to
+    /// auto-factorization — see [`torus_grid`].
+    Torus { rows: usize, cols: usize, ranks_per_node: usize },
+    /// `rails` independent ring allreduces over disjoint 1/rails slices
+    /// of the buffer — one ring per NIC/HCA rail, so a multi-NIC node
+    /// can drive all its ports at once.
+    MultiRing { rails: usize },
 }
 
 impl Algorithm {
@@ -73,6 +104,127 @@ impl Algorithm {
             Algorithm::Ring => "ring",
             Algorithm::HalvingDoubling => "halving_doubling",
             Algorithm::Hierarchical { .. } => "hierarchical",
+            Algorithm::Torus { .. } => "torus",
+            Algorithm::MultiRing { .. } => "multiring",
+        }
+    }
+
+    /// Auto-factorized torus for `p` ranks at `ranks_per_node`: the most
+    /// square rows×cols grid over the node leaders. Prime node counts
+    /// degrade gracefully to a 1×nodes grid — a single leader ring.
+    pub fn torus_auto(p: usize, ranks_per_node: usize) -> Algorithm {
+        let rpn = ranks_per_node.max(1).min(p.max(1));
+        let nodes = (p + rpn - 1) / rpn;
+        let (rows, cols) = torus_grid(0, 0, nodes);
+        Algorithm::Torus { rows, cols, ranks_per_node: rpn }
+    }
+
+    /// How many threads a comm lane wants to execute this schedule's
+    /// natural internal parallelism (multiring's rails are independent
+    /// rings that should run concurrently; every other schedule is fine
+    /// with one thread per lane). Thread counts never change bits — this
+    /// only steers the coordinator's lane/thread split.
+    pub fn preferred_lane_threads(&self) -> usize {
+        match self {
+            Algorithm::MultiRing { rails } => (*rails).max(1),
+            _ => 1,
+        }
+    }
+
+    /// The schedule family, stripped of its shape parameters.
+    pub fn kind(&self) -> ScheduleKind {
+        match self {
+            Algorithm::Naive => ScheduleKind::Naive,
+            Algorithm::Ring => ScheduleKind::Ring,
+            Algorithm::HalvingDoubling => ScheduleKind::HalvingDoubling,
+            Algorithm::Hierarchical { .. } => ScheduleKind::Hierarchical,
+            Algorithm::Torus { .. } => ScheduleKind::Torus,
+            Algorithm::MultiRing { .. } => ScheduleKind::MultiRing,
+        }
+    }
+}
+
+/// Resolve a torus grid for `nodes` node leaders: an explicit rows×cols
+/// that tiles the node count is honored; anything else (0×0 = auto, or
+/// a stale shape after the rank count changed) falls back to the most
+/// square factorization, with rows ≤ cols. Prime node counts degrade to
+/// 1×nodes — a single leader ring.
+pub fn torus_grid(rows: usize, cols: usize, nodes: usize) -> (usize, usize) {
+    if nodes == 0 {
+        return (1, 1);
+    }
+    if rows > 0 && cols > 0 && rows * cols == nodes {
+        return (rows, cols);
+    }
+    let mut r = 1;
+    let mut d = 1;
+    while d * d <= nodes {
+        if nodes % d == 0 {
+            r = d;
+        }
+        d += 1;
+    }
+    (r, nodes / r)
+}
+
+/// The schedule axis of [`Algorithm`] as a parse/print round-trippable
+/// enum: `Display` prints the canonical CLI name, `FromStr` accepts the
+/// canonical names plus the historical aliases, and the parse error
+/// enumerates every valid schedule instead of a bare "unknown".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Naive,
+    Ring,
+    HalvingDoubling,
+    Hierarchical,
+    Torus,
+    MultiRing,
+}
+
+impl ScheduleKind {
+    pub const ALL: [ScheduleKind; 6] = [
+        ScheduleKind::Naive,
+        ScheduleKind::Ring,
+        ScheduleKind::HalvingDoubling,
+        ScheduleKind::Hierarchical,
+        ScheduleKind::Torus,
+        ScheduleKind::MultiRing,
+    ];
+
+    /// The canonical CLI spelling (`--comm-algo <canonical>`).
+    pub fn canonical(self) -> &'static str {
+        match self {
+            ScheduleKind::Naive => "naive",
+            ScheduleKind::Ring => "ring",
+            ScheduleKind::HalvingDoubling => "hd",
+            ScheduleKind::Hierarchical => "hier",
+            ScheduleKind::Torus => "torus",
+            ScheduleKind::MultiRing => "multiring",
+        }
+    }
+}
+
+impl std::fmt::Display for ScheduleKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.canonical())
+    }
+}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ScheduleKind, String> {
+        match s {
+            "naive" => Ok(ScheduleKind::Naive),
+            "ring" => Ok(ScheduleKind::Ring),
+            "hd" | "halving_doubling" => Ok(ScheduleKind::HalvingDoubling),
+            "hier" | "hierarchical" => Ok(ScheduleKind::Hierarchical),
+            "torus" => Ok(ScheduleKind::Torus),
+            "multiring" | "multi_ring" => Ok(ScheduleKind::MultiRing),
+            other => Err(format!(
+                "unknown allreduce schedule '{other}' (valid: {})",
+                ScheduleKind::ALL.map(ScheduleKind::canonical).join(", ")
+            )),
         }
     }
 }
@@ -95,9 +247,17 @@ pub struct WireStats {
     pub max_bytes_per_rank: usize,
     /// Messages sent in total.
     pub messages: usize,
-    /// Bytes that crossed node boundaries (Hierarchical only; otherwise
-    /// equal to total_bytes with 1 rank/node assumed).
+    /// Bytes that stayed inside a node (hierarchical/torus intra phases;
+    /// zero for the flat schedules, which assume 1 rank/node).
+    pub intranode_bytes: usize,
+    /// Bytes that crossed node boundaries within a rack (the flat
+    /// schedules book everything here with 1 rank/node assumed; torus
+    /// books its row rings here).
     pub internode_bytes: usize,
+    /// Bytes that crossed rack boundaries (torus column rings; zero for
+    /// schedules that are not rack-aware). `intranode_bytes +
+    /// internode_bytes + interrack_bytes == total_bytes` always.
+    pub interrack_bytes: usize,
     /// What the same messages would have cost uncompressed (elems × 4
     /// bytes) — the denominator-free side of the compression accounting,
     /// booked per message alongside `total_bytes`.
@@ -141,7 +301,9 @@ impl WireStats {
         self.total_bytes += o.total_bytes;
         self.max_bytes_per_rank += o.max_bytes_per_rank;
         self.messages += o.messages;
+        self.intranode_bytes += o.intranode_bytes;
         self.internode_bytes += o.internode_bytes;
+        self.interrack_bytes += o.interrack_bytes;
         self.uncompressed_bytes += o.uncompressed_bytes;
         self.elapsed_s += o.elapsed_s;
     }
@@ -168,18 +330,18 @@ impl Wire {
     }
 
     /// Transfer `src` (owned by rank `from`) into `out` (owned by rank
-    /// `to`), overwriting, counting bytes.
-    fn send(&mut self, src: &[f32], out: &mut [f32], internode: bool, from: usize, to: usize) {
+    /// `to`), overwriting, counting bytes on the given link tier.
+    fn send(&mut self, src: &[f32], out: &mut [f32], tier: Tier, from: usize, to: usize) {
         assert_eq!(src.len(), out.len());
         self.precision.copy(src, out);
-        self.count(src.len(), internode, from, to);
+        self.count(src.len(), tier, from, to);
     }
 
     /// Transfer `src` and add into `out` (the reduce half of the exchange).
-    fn send_add(&mut self, src: &[f32], out: &mut [f32], internode: bool, from: usize, to: usize) {
+    fn send_add(&mut self, src: &[f32], out: &mut [f32], tier: Tier, from: usize, to: usize) {
         assert_eq!(src.len(), out.len());
         self.precision.reduce_add(src, out);
-        self.count(src.len(), internode, from, to);
+        self.count(src.len(), tier, from, to);
     }
 
     /// Quantize a rank's OWN data in place (no wire traffic): before a
@@ -191,15 +353,17 @@ impl Wire {
         self.precision.quantize_own(buf);
     }
 
-    fn count(&mut self, elems: usize, internode: bool, from: usize, to: usize) {
+    fn count(&mut self, elems: usize, tier: Tier, from: usize, to: usize) {
         let bytes = self.precision.wire_bytes(elems);
         self.stats.total_bytes += bytes;
         self.stats.uncompressed_bytes += elems * 4;
         self.stats.messages += 1;
         self.sent[from] += bytes;
         self.recv[to] += bytes;
-        if internode {
-            self.stats.internode_bytes += bytes;
+        match tier {
+            Tier::IntraNode => self.stats.intranode_bytes += bytes,
+            Tier::InterNode => self.stats.internode_bytes += bytes,
+            Tier::InterRack => self.stats.interrack_bytes += bytes,
         }
     }
 
@@ -235,11 +399,15 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>], algo: Algorithm, precision: Precisi
     let mut wire = Wire::new(precision, p);
     match algo {
         Algorithm::Naive => naive(bufs, &mut wire),
-        Algorithm::Ring => ring(bufs, &mut wire, true, None),
+        Algorithm::Ring => ring(bufs, &mut wire, Tier::InterNode, None),
         Algorithm::HalvingDoubling => halving_doubling(bufs, &mut wire),
         Algorithm::Hierarchical { ranks_per_node } => {
             hierarchical(bufs, &mut wire, ranks_per_node)
         }
+        Algorithm::Torus { rows, cols, ranks_per_node } => {
+            torus(bufs, &mut wire, rows, cols, ranks_per_node)
+        }
+        Algorithm::MultiRing { rails } => multiring(bufs, &mut wire, rails),
     }
 
     let inv = 1.0 / p as f32;
@@ -258,12 +426,12 @@ fn naive(bufs: &mut [Vec<f32>], wire: &mut Wire) {
     // Gather-reduce at rank 0.
     let (root, rest) = bufs.split_first_mut().unwrap();
     for (r, b) in rest.iter().enumerate() {
-        wire.send_add(b, root, true, r + 1, 0);
+        wire.send_add(b, root, Tier::InterNode, r + 1, 0);
     }
     // Broadcast (root's own copy quantized to match what it sends).
     wire.quantize_own(root);
     for (r, b) in rest.iter_mut().enumerate() {
-        wire.send(root, b, true, 0, r + 1);
+        wire.send(root, b, Tier::InterNode, 0, r + 1);
     }
     wire.stats.rounds = 2 * (p - 1);
 }
@@ -285,9 +453,29 @@ pub(crate) fn chunks(n: usize, p: usize) -> Vec<(usize, usize)> {
 /// Ring over the ranks in `bufs`. When the ring runs over a subset of a
 /// larger machine (hierarchical phase 2 over node leaders), `ids` maps
 /// ring position -> global rank id for the per-rank byte ledgers.
-fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool, ids: Option<&[usize]>) {
+fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, tier: Tier, ids: Option<&[usize]>) {
     let p = bufs.len();
-    let spans = chunks(bufs[0].len(), p);
+    let n = bufs[0].len();
+    ring_span(bufs, wire, 0, n, tier, ids);
+    wire.stats.rounds += 2 * (p - 1);
+}
+
+/// One ring allreduce restricted to `bufs[..][lo0..hi0]` — torus column
+/// rings and multiring rails run rings over sub-spans of the buffer.
+/// Books messages but NOT rounds: the caller owns round accounting,
+/// because conceptually-parallel rings (rails, torus columns) share
+/// their rounds.
+fn ring_span(
+    bufs: &mut [Vec<f32>],
+    wire: &mut Wire,
+    lo0: usize,
+    hi0: usize,
+    tier: Tier,
+    ids: Option<&[usize]>,
+) {
+    let p = bufs.len();
+    let spans: Vec<(usize, usize)> =
+        chunks(hi0 - lo0, p).into_iter().map(|(a, b)| (lo0 + a, lo0 + b)).collect();
     let id = |i: usize| ids.map_or(i, |m| m[i]);
 
     // Reduce-scatter: in round r, rank i sends chunk (i - r) to rank i+1.
@@ -302,7 +490,7 @@ fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool, ids: Option<&[u
             }
             // Split-borrow the two rank buffers.
             let (a, b) = two_mut(bufs, src_rank, dst_rank);
-            wire.send_add(&a[lo..hi], &mut b[lo..hi], internode, id(src_rank), id(dst_rank));
+            wire.send_add(&a[lo..hi], &mut b[lo..hi], tier, id(src_rank), id(dst_rank));
         }
     }
     // After reduce-scatter, rank i owns the fully-reduced chunk (i+1)%p;
@@ -322,10 +510,9 @@ fn ring(bufs: &mut [Vec<f32>], wire: &mut Wire, internode: bool, ids: Option<&[u
                 continue;
             }
             let (a, b) = two_mut(bufs, src_rank, dst_rank);
-            wire.send(&a[lo..hi], &mut b[lo..hi], internode, id(src_rank), id(dst_rank));
+            wire.send(&a[lo..hi], &mut b[lo..hi], tier, id(src_rank), id(dst_rank));
         }
     }
-    wire.stats.rounds += 2 * (p - 1);
 }
 
 /// Borrow two distinct ranks mutably.
@@ -351,7 +538,7 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
     for e in 0..extra {
         let (src, dst) = (pow2 + e, e);
         let (a, b) = two_mut(bufs, src, dst);
-        wire.send_add(a, b, true, src, dst);
+        wire.send_add(a, b, Tier::InterNode, src, dst);
         wire.stats.rounds += 1;
     }
 
@@ -374,8 +561,8 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
             // into i, i sends its upper half into j. The two transfers
             // touch disjoint spans, so neither needs a snapshot copy.
             let (bi, bj) = two_mut(bufs, i, j);
-            wire.send_add(&bi[mid..hi_i], &mut bj[mid..hi_i], true, i, j);
-            wire.send_add(&bj[lo_i..mid], &mut bi[lo_i..mid], true, j, i);
+            wire.send_add(&bi[mid..hi_i], &mut bj[mid..hi_i], Tier::InterNode, i, j);
+            wire.send_add(&bj[lo_i..mid], &mut bi[lo_i..mid], Tier::InterNode, j, i);
             spans[i] = (lo_i, mid);
             spans[j] = (mid, hi_i);
         }
@@ -402,8 +589,8 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
             let (lo_i, hi_i) = spans[i];
             let (lo_j, hi_j) = spans[j];
             let (bi, bj) = two_mut(bufs, i, j);
-            wire.send(&bj[lo_j..hi_j], &mut bi[lo_j..hi_j], true, j, i);
-            wire.send(&bi[lo_i..hi_i], &mut bj[lo_i..hi_i], true, i, j);
+            wire.send(&bj[lo_j..hi_j], &mut bi[lo_j..hi_j], Tier::InterNode, j, i);
+            wire.send(&bi[lo_i..hi_i], &mut bj[lo_i..hi_i], Tier::InterNode, i, j);
             let merged = (lo_i.min(lo_j), hi_i.max(hi_j));
             spans[i] = merged;
             spans[j] = merged;
@@ -416,7 +603,7 @@ fn halving_doubling(bufs: &mut [Vec<f32>], wire: &mut Wire) {
     for e in 0..extra {
         let (src, dst) = (e, pow2 + e);
         let (a, b) = two_mut(bufs, src, dst);
-        wire.send(a, b, true, src, dst);
+        wire.send(a, b, Tier::InterNode, src, dst);
         wire.stats.rounds += 1;
     }
 }
@@ -431,7 +618,7 @@ fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
         let leader = node * rpn;
         for r in leader + 1..((node + 1) * rpn).min(p) {
             let (l, m) = two_mut(bufs, leader, r);
-            wire.send_add(m, l, false, r, leader);
+            wire.send_add(m, l, Tier::IntraNode, r, leader);
         }
     }
     wire.stats.rounds += rpn - 1;
@@ -441,7 +628,7 @@ fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
         let leader_ids: Vec<usize> = (0..nodes).map(|nd| nd * rpn).collect();
         let mut leaders: Vec<Vec<f32>> =
             leader_ids.iter().map(|&l| std::mem::take(&mut bufs[l])).collect();
-        ring(&mut leaders, wire, true, Some(&leader_ids));
+        ring(&mut leaders, wire, Tier::InterNode, Some(&leader_ids));
         for (&l, lb) in leader_ids.iter().zip(leaders.into_iter()) {
             bufs[l] = lb;
         }
@@ -453,10 +640,141 @@ fn hierarchical(bufs: &mut [Vec<f32>], wire: &mut Wire, ranks_per_node: usize) {
         wire.quantize_own(&mut bufs[leader]);
         for r in leader + 1..((node + 1) * rpn).min(p) {
             let (l, m) = two_mut(bufs, leader, r);
-            wire.send(l, m, false, leader, r);
+            wire.send(l, m, Tier::IntraNode, leader, r);
         }
     }
     wire.stats.rounds += rpn - 1;
+}
+
+/// 2D-torus allreduce (Sony NNL, arXiv 1811.05233). The node leaders
+/// form a rows×cols grid; rows live inside racks (row rings cross only
+/// in-rack inter-node links), columns hop between racks. Five phases:
+///
+/// 1. intra-node reduce to each node leader (as in `hierarchical`);
+/// 2. per-ROW ring reduce-scatter over the row's leaders: after cols-1
+///    rounds the leader in column i owns the row-reduced chunk
+///    (i+1) % cols of the buffer;
+/// 3. per-COLUMN ring allreduce of each column's owned chunk — the only
+///    phase that crosses racks, moving just bytes/cols per column ring;
+/// 4. per-ROW ring allgather of the now-global chunks;
+/// 5. leaders re-quantize the full buffer and broadcast intra-node.
+///
+/// All row rings run conceptually in parallel (they share rounds), as do
+/// all column rings. With rows == 1 the torus degrades to hierarchical-
+/// with-a-leader-ring; with cols == 1 the column ring covers all nodes.
+fn torus(bufs: &mut [Vec<f32>], wire: &mut Wire, rows: usize, cols: usize, ranks_per_node: usize) {
+    let p = bufs.len();
+    let n = bufs[0].len();
+    let rpn = ranks_per_node.max(1).min(p);
+    let nodes = (p + rpn - 1) / rpn;
+    let (rows, cols) = torus_grid(rows, cols, nodes);
+    let leader = |node: usize| node * rpn;
+    let lid = |r: usize, c: usize| leader(r * cols + c);
+
+    // Phase 1: intra-node reduce to each node leader.
+    for node in 0..nodes {
+        let l = leader(node);
+        for r in l + 1..((node + 1) * rpn).min(p) {
+            let (lb, m) = two_mut(bufs, l, r);
+            wire.send_add(m, lb, Tier::IntraNode, r, l);
+        }
+    }
+    wire.stats.rounds += rpn - 1;
+
+    let col_spans = chunks(n, cols);
+
+    // Phase 2: row-ring reduce-scatter (in round t, the column-i leader
+    // sends chunk (i - t) % cols to the column-(i+1) leader of its row).
+    if cols > 1 {
+        for t in 0..cols - 1 {
+            for r in 0..rows {
+                for i in 0..cols {
+                    let (lo, hi) = col_spans[(i + cols - t) % cols];
+                    if lo == hi {
+                        continue;
+                    }
+                    let (src, dst) = (lid(r, i), lid(r, (i + 1) % cols));
+                    let (a, b) = two_mut(bufs, src, dst);
+                    wire.send_add(&a[lo..hi], &mut b[lo..hi], Tier::InterNode, src, dst);
+                }
+            }
+        }
+        wire.stats.rounds += cols - 1;
+    }
+
+    // Phase 3: column-ring allreduce of each column's owned chunk. The
+    // cols rings are disjoint in both ranks and spans, so they share
+    // their 2(rows-1) rounds.
+    if rows > 1 {
+        for c in 0..cols {
+            let (lo, hi) = col_spans[(c + 1) % cols];
+            let ids: Vec<usize> = (0..rows).map(|r| lid(r, c)).collect();
+            let mut col: Vec<Vec<f32>> =
+                ids.iter().map(|&l| std::mem::take(&mut bufs[l])).collect();
+            ring_span(&mut col, wire, lo, hi, Tier::InterRack, Some(&ids));
+            for (&l, lb) in ids.iter().zip(col.into_iter()) {
+                bufs[l] = lb;
+            }
+        }
+        wire.stats.rounds += 2 * (rows - 1);
+    }
+
+    // Re-quantize every leader's owned span on the ROW-gather grid. The
+    // column rings quantized at sub-chunk boundaries, and q8's chunk
+    // grid is positional: the row allgather must source data encoded at
+    // its own span boundaries, or relay hops would re-grid the payload
+    // and ranks at different ring distances would diverge. (No-op for
+    // f32; bitwise no-op for f16, which has no grid.)
+    for r in 0..rows {
+        for c in 0..cols {
+            let (lo, hi) = col_spans[(c + 1) % cols];
+            wire.quantize_own(&mut bufs[lid(r, c)][lo..hi]);
+        }
+    }
+
+    // Phase 4: row-ring allgather (chunk (i+1-t) % cols travels).
+    if cols > 1 {
+        for t in 0..cols - 1 {
+            for r in 0..rows {
+                for i in 0..cols {
+                    let (lo, hi) = col_spans[(i + 1 + cols - t) % cols];
+                    if lo == hi {
+                        continue;
+                    }
+                    let (src, dst) = (lid(r, i), lid(r, (i + 1) % cols));
+                    let (a, b) = two_mut(bufs, src, dst);
+                    wire.send(&a[lo..hi], &mut b[lo..hi], Tier::InterNode, src, dst);
+                }
+            }
+        }
+        wire.stats.rounds += cols - 1;
+    }
+
+    // Phase 5: leaders quantize the full buffer (all leaders hold
+    // identical bits, so this is deterministic) and broadcast intra-node.
+    for node in 0..nodes {
+        let l = leader(node);
+        wire.quantize_own(&mut bufs[l]);
+        for r in l + 1..((node + 1) * rpn).min(p) {
+            let (lb, m) = two_mut(bufs, l, r);
+            wire.send(lb, m, Tier::IntraNode, l, r);
+        }
+    }
+    wire.stats.rounds += rpn - 1;
+}
+
+/// Multi-rail ring: `rails` independent ring allreduces, each over a
+/// disjoint 1/rails slice of the buffer — one ring per NIC/HCA rail.
+/// The rails share their 2(p-1) rounds (they run on separate ports);
+/// per-rail data flow is identical to a plain ring over the slice.
+fn multiring(bufs: &mut [Vec<f32>], wire: &mut Wire, rails: usize) {
+    let p = bufs.len();
+    let n = bufs[0].len();
+    let rails = rails.max(1);
+    for (lo, hi) in chunks(n, rails) {
+        ring_span(bufs, wire, lo, hi, Tier::InterNode, None);
+    }
+    wire.stats.rounds += 2 * (p - 1);
 }
 
 #[cfg(test)]
@@ -648,6 +966,8 @@ mod tests {
             Algorithm::Ring,
             Algorithm::HalvingDoubling,
             Algorithm::Hierarchical { ranks_per_node: 4 },
+            Algorithm::Torus { rows: 2, cols: 2, ranks_per_node: 2 },
+            Algorithm::MultiRing { rails: 3 },
         ] {
             let mut bufs = make_bufs(8, 999, 11);
             allreduce_mean(&mut bufs, algo, Precision::F32);
@@ -673,7 +993,9 @@ mod tests {
             total_bytes: 100,
             max_bytes_per_rank: 40,
             messages: 3,
+            intranode_bytes: 30,
             internode_bytes: 60,
+            interrack_bytes: 10,
             uncompressed_bytes: 200,
             elapsed_s: 0.5,
         };
@@ -682,7 +1004,9 @@ mod tests {
             total_bytes: 10,
             max_bytes_per_rank: 4,
             messages: 1,
+            intranode_bytes: 2,
             internode_bytes: 0,
+            interrack_bytes: 8,
             uncompressed_bytes: 20,
             elapsed_s: 0.25,
         };
@@ -691,7 +1015,9 @@ mod tests {
         assert_eq!(a.total_bytes, 110);
         assert_eq!(a.max_bytes_per_rank, 44);
         assert_eq!(a.messages, 4);
+        assert_eq!(a.intranode_bytes, 32);
         assert_eq!(a.internode_bytes, 60);
+        assert_eq!(a.interrack_bytes, 18);
         assert_eq!(a.uncompressed_bytes, 220);
         assert!((a.elapsed_s - 0.75).abs() < 1e-12);
         assert!((a.compression_ratio() - 2.0).abs() < 1e-12);
@@ -710,6 +1036,11 @@ mod tests {
             Algorithm::HalvingDoubling,
             Algorithm::Hierarchical { ranks_per_node: 4 },
             Algorithm::Hierarchical { ranks_per_node: 3 },
+            Algorithm::Torus { rows: 2, cols: 2, ranks_per_node: 2 },
+            Algorithm::Torus { rows: 2, cols: 4, ranks_per_node: 1 },
+            Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 3 },
+            Algorithm::MultiRing { rails: 2 },
+            Algorithm::MultiRing { rails: 4 },
         ] {
             let orig = make_bufs(8, 2048, 77);
             let want = expected_mean(&orig);
@@ -756,5 +1087,189 @@ mod tests {
         let f32_stats = allreduce_mean(&mut c, Algorithm::Ring, Precision::F32);
         assert!((f32_stats.compression_ratio() - 1.0).abs() < 1e-12);
         assert_eq!(f32_stats.total_bytes, f32_stats.uncompressed_bytes);
+    }
+
+    #[test]
+    fn torus_correct_across_shapes() {
+        // (p, rows, cols, rpn): explicit grids, auto-factorized grids,
+        // ragged last node, prime node counts (degrade to 1×nodes), and
+        // single-node (all inter phases skip).
+        for (p, rows, cols, rpn) in [
+            (8, 2, 2, 2),
+            (16, 2, 2, 4),
+            (16, 4, 4, 1),
+            (16, 2, 4, 2),
+            (12, 0, 0, 2), // auto: 6 nodes -> 2x3
+            (5, 0, 0, 2),  // 3 nodes (ragged), prime -> 1x3
+            (7, 0, 0, 1),  // prime node count -> 1x7
+            (4, 0, 0, 4),  // single node: pure intra reduce+broadcast
+            (8, 1, 4, 2),  // rows=1: no column rings
+            (8, 4, 1, 2),  // cols=1: column ring covers all nodes
+        ] {
+            check(Algorithm::Torus { rows, cols, ranks_per_node: rpn }, p, 1000, 1e-5);
+        }
+    }
+
+    #[test]
+    fn torus_short_and_empty_buffers() {
+        // Fewer elements than columns/rows: some spans are empty.
+        check(Algorithm::Torus { rows: 2, cols: 4, ranks_per_node: 1 }, 8, 3, 1e-6);
+        check(Algorithm::Torus { rows: 2, cols: 2, ranks_per_node: 2 }, 8, 0, 1e-6);
+        check(Algorithm::Torus { rows: 2, cols: 4, ranks_per_node: 1 }, 8, 1, 1e-6);
+    }
+
+    #[test]
+    fn multiring_correct() {
+        for p in [2, 3, 4, 7, 8, 16] {
+            for rails in [1, 2, 3, 4] {
+                check(Algorithm::MultiRing { rails }, p, 1000, 1e-5);
+            }
+        }
+        // More rails than elements: trailing rails carry empty slices.
+        check(Algorithm::MultiRing { rails: 8 }, 4, 5, 1e-6);
+        check(Algorithm::MultiRing { rails: 0 }, 4, 100, 1e-6); // clamps to 1
+    }
+
+    #[test]
+    fn multiring_matches_ring_bytes_and_rounds() {
+        // The rails tile the buffer exactly, so total traffic equals a
+        // plain ring's and the shared rounds equal a ring's 2(p-1).
+        let (p, n) = (8usize, 9600usize);
+        let mut a = make_bufs(p, n, 31);
+        let ring = allreduce_mean(&mut a, Algorithm::Ring, Precision::F32);
+        let mut b = make_bufs(p, n, 31);
+        let multi = allreduce_mean(&mut b, Algorithm::MultiRing { rails: 4 }, Precision::F32);
+        assert_eq!(multi.uncompressed_bytes, ring.uncompressed_bytes);
+        assert_eq!(multi.rounds, ring.rounds);
+        assert_eq!(multi.internode_bytes, multi.total_bytes);
+    }
+
+    #[test]
+    fn tier_bytes_partition_total() {
+        // intranode + internode + interrack == total for every schedule,
+        // and each schedule books its phases on the expected tiers.
+        let (p, n) = (16usize, 4096usize);
+        for algo in [
+            Algorithm::Naive,
+            Algorithm::Ring,
+            Algorithm::HalvingDoubling,
+            Algorithm::Hierarchical { ranks_per_node: 4 },
+            Algorithm::Torus { rows: 2, cols: 2, ranks_per_node: 4 },
+            Algorithm::MultiRing { rails: 2 },
+        ] {
+            let mut bufs = make_bufs(p, n, 17);
+            let s = allreduce_mean(&mut bufs, algo, Precision::F32);
+            assert_eq!(
+                s.intranode_bytes + s.internode_bytes + s.interrack_bytes,
+                s.total_bytes,
+                "{}: tier bytes must partition the total",
+                algo.name()
+            );
+            match algo {
+                // Flat schedules have no topology: everything is
+                // booked inter-node (preserving the historical
+                // internode_bytes == total_bytes reading).
+                Algorithm::Naive | Algorithm::Ring | Algorithm::HalvingDoubling
+                | Algorithm::MultiRing { .. } => {
+                    assert_eq!(s.internode_bytes, s.total_bytes, "{}", algo.name());
+                }
+                Algorithm::Hierarchical { .. } => {
+                    assert!(s.intranode_bytes > 0 && s.internode_bytes > 0);
+                    assert_eq!(s.interrack_bytes, 0);
+                }
+                Algorithm::Torus { .. } => {
+                    assert!(s.intranode_bytes > 0, "intra reduce/broadcast");
+                    assert!(s.internode_bytes > 0, "row rings");
+                    assert!(s.interrack_bytes > 0, "column rings");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torus_intranode_bytes_dominate_internode() {
+        // The check_bench.py tier-sanity gate in unit form: with rpn
+        // members feeding each leader, intra-node traffic (rpn-1 full
+        // buffers in, rpn-1 out per node) exceeds the row rings'
+        // scatter/gather traffic (~2·bytes/cols per leader).
+        let mut bufs = make_bufs(16, 8192, 23);
+        let s = allreduce_mean(
+            &mut bufs,
+            Algorithm::Torus { rows: 2, cols: 2, ranks_per_node: 4 },
+            Precision::F32,
+        );
+        assert!(
+            s.intranode_bytes >= s.internode_bytes,
+            "intra {} < inter {}",
+            s.intranode_bytes,
+            s.internode_bytes
+        );
+    }
+
+    #[test]
+    fn torus_interrack_traffic_is_scattered() {
+        // The column rings move only the owned 1/cols chunk: inter-rack
+        // bytes must come in well under the row rings' inter-node bytes.
+        let mut bufs = make_bufs(16, 8192, 29);
+        let s = allreduce_mean(
+            &mut bufs,
+            Algorithm::Torus { rows: 4, cols: 4, ranks_per_node: 1 },
+            Precision::F32,
+        );
+        assert!(s.interrack_bytes < s.internode_bytes, "{s:?}");
+    }
+
+    #[test]
+    fn torus_grid_factorization() {
+        // Explicit shape wins when it tiles the node count.
+        assert_eq!(torus_grid(2, 4, 8), (2, 4));
+        assert_eq!(torus_grid(8, 1, 8), (8, 1));
+        // Mismatched explicit shape falls back to auto.
+        assert_eq!(torus_grid(3, 4, 8), (2, 4));
+        // Auto: most-square with rows <= cols.
+        assert_eq!(torus_grid(0, 0, 8), (2, 4));
+        assert_eq!(torus_grid(0, 0, 16), (4, 4));
+        assert_eq!(torus_grid(0, 0, 12), (3, 4));
+        assert_eq!(torus_grid(0, 0, 512), (16, 32));
+        // Primes degrade to a single row (flat leader ring).
+        assert_eq!(torus_grid(0, 0, 7), (1, 7));
+        assert_eq!(torus_grid(0, 0, 13), (1, 13));
+        assert_eq!(torus_grid(0, 0, 1), (1, 1));
+        assert_eq!(torus_grid(0, 0, 0), (1, 1));
+    }
+
+    #[test]
+    fn torus_auto_builds_valid_shape() {
+        let algo = Algorithm::torus_auto(2048, 4);
+        assert_eq!(algo, Algorithm::Torus { rows: 16, cols: 32, ranks_per_node: 4 });
+        // rpn larger than p clamps.
+        let small = Algorithm::torus_auto(2, 8);
+        assert_eq!(small, Algorithm::Torus { rows: 1, cols: 1, ranks_per_node: 2 });
+    }
+
+    #[test]
+    fn schedule_kind_round_trips_and_enumerates_on_error() {
+        use std::str::FromStr;
+        for kind in ScheduleKind::ALL {
+            let shown = kind.to_string();
+            assert_eq!(ScheduleKind::from_str(&shown).unwrap(), kind);
+            assert_eq!(shown, kind.canonical());
+        }
+        // Long-form aliases accepted.
+        assert_eq!(ScheduleKind::from_str("halving_doubling").unwrap(), ScheduleKind::HalvingDoubling);
+        assert_eq!(ScheduleKind::from_str("hierarchical").unwrap(), ScheduleKind::Hierarchical);
+        assert_eq!(ScheduleKind::from_str("multi_ring").unwrap(), ScheduleKind::MultiRing);
+        // The error message enumerates every valid schedule.
+        let err = ScheduleKind::from_str("smoke-signals").unwrap_err();
+        for kind in ScheduleKind::ALL {
+            assert!(
+                err.contains(kind.canonical()),
+                "error should list '{}': {err}",
+                kind.canonical()
+            );
+        }
+        // Algorithm -> kind is total.
+        assert_eq!(Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 4 }.kind(), ScheduleKind::Torus);
+        assert_eq!(Algorithm::MultiRing { rails: 2 }.kind(), ScheduleKind::MultiRing);
     }
 }

@@ -1,7 +1,7 @@
 //! Run configuration: typed settings for the coordinator, loadable from a
 //! JSON file with CLI overrides (`--key value` wins over file values).
 
-use crate::collective::{Algorithm, Precision};
+use crate::collective::{Algorithm, Precision, ScheduleKind};
 use crate::simnet::LinkParams;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -50,9 +50,22 @@ pub struct RunConfig {
     pub decay: String,
     pub lars: bool,
     pub label_smoothing: bool,
-    /// "ring" | "hd" | "hier" | "naive"
+    /// Allreduce schedule: "ring" | "hd" | "hier" | "naive" | "torus" |
+    /// "multiring" (see [`ScheduleKind`]; `--comm-algo` is an alias of
+    /// `--allreduce`).
     pub allreduce: String,
     pub ranks_per_node: usize,
+    /// Torus node-grid rows (torus schedule only). 0 = auto-factorize
+    /// the node count into the most-square grid (`--torus RxC` sets
+    /// both; set both or neither).
+    pub torus_rows: usize,
+    /// Torus node-grid columns. 0 = auto (see `torus_rows`).
+    pub torus_cols: usize,
+    /// Rail count for the multiring schedule: independent full rings,
+    /// each carrying 1/rails of the buffer. Effective concurrency is
+    /// capped by the modeled NIC count in `simnet` pricing, but the
+    /// plan itself honors the configured value.
+    pub rails: usize,
     /// Wire codec: "f16" (paper), "f32", or "q8" (int8 payload + per-
     /// chunk absmax scale; pairs with `error_feedback`).
     pub wire: String,
@@ -96,6 +109,12 @@ pub struct RunConfig {
     pub link_alpha_us: f64,
     /// α–β link model: bandwidth in GB/s (see `link_alpha_us`).
     pub link_beta_gbps: f64,
+    /// Rack-tier (spine) α–β latency in MICROSECONDS — prices the
+    /// torus schedule's column rings, which cross racks. 0 = inherit
+    /// `link_alpha_us` (flat fabric).
+    pub link_rack_alpha_us: f64,
+    /// Rack-tier α–β bandwidth in GB/s. 0 = inherit `link_beta_gbps`.
+    pub link_rack_beta_gbps: f64,
     /// Cross-step pipeline depth (pipelined executor only): 1 = each
     /// step's comm/update tail finishes inside the step; 2 = the tail
     /// overlaps the next step's micro-batch draw + ramp-up (double
@@ -180,6 +199,9 @@ impl Default for RunConfig {
             label_smoothing: true,
             allreduce: "hier".into(),
             ranks_per_node: 4,
+            torus_rows: 0,
+            torus_cols: 0,
+            rails: 2,
             wire: "f16".into(),
             error_feedback: true,
             bucket_bytes: 16 * 1024,
@@ -187,6 +209,8 @@ impl Default for RunConfig {
             chunk_auto: false,
             link_alpha_us: 2.0,
             link_beta_gbps: 8.0,
+            link_rack_alpha_us: 0.0,
+            link_rack_beta_gbps: 0.0,
             pipeline_depth: 2,
             fence: "full".into(),
             comm_threads: 2,
@@ -209,14 +233,37 @@ impl Default for RunConfig {
 
 impl RunConfig {
     pub fn algorithm(&self) -> Result<Algorithm> {
-        Ok(match self.allreduce.as_str() {
-            "ring" => Algorithm::Ring,
-            "hd" | "halving_doubling" => Algorithm::HalvingDoubling,
-            "hier" | "hierarchical" => {
+        // `ScheduleKind::from_str` enumerates every valid spelling on a
+        // miss, so a typo'd `--comm-algo` lists its options.
+        let kind: ScheduleKind =
+            self.allreduce.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        Ok(match kind {
+            ScheduleKind::Naive => Algorithm::Naive,
+            ScheduleKind::Ring => Algorithm::Ring,
+            ScheduleKind::HalvingDoubling => Algorithm::HalvingDoubling,
+            ScheduleKind::Hierarchical => {
                 Algorithm::Hierarchical { ranks_per_node: self.ranks_per_node }
             }
-            "naive" => Algorithm::Naive,
-            other => anyhow::bail!("unknown allreduce algorithm '{other}'"),
+            ScheduleKind::Torus => {
+                let rpn = self.ranks_per_node.max(1).min(self.workers.max(1));
+                let nodes = (self.workers + rpn - 1) / rpn;
+                match (self.torus_rows, self.torus_cols) {
+                    (0, 0) => Algorithm::torus_auto(self.workers, rpn),
+                    (rows, cols) if rows > 0 && cols > 0 => {
+                        anyhow::ensure!(
+                            rows * cols == nodes,
+                            "--torus {rows}x{cols} does not tile the node grid \
+                             ({} workers / {rpn} ranks-per-node = {nodes} nodes)",
+                            self.workers
+                        );
+                        Algorithm::Torus { rows, cols, ranks_per_node: rpn }
+                    }
+                    _ => anyhow::bail!(
+                        "--torus needs both rows and cols (RxC), or neither for auto"
+                    ),
+                }
+            }
+            ScheduleKind::MultiRing => Algorithm::MultiRing { rails: self.rails.max(1) },
         })
     }
 
@@ -251,6 +298,26 @@ impl RunConfig {
         }
     }
 
+    /// The rack-tier (spine) α–β link model, pricing the torus
+    /// schedule's inter-rack column rings. Zero components inherit the
+    /// node-tier [`RunConfig::link`] — a flat fabric unless told
+    /// otherwise.
+    pub fn rack_link(&self) -> LinkParams {
+        let base = self.link();
+        LinkParams {
+            latency_s: if self.link_rack_alpha_us > 0.0 {
+                self.link_rack_alpha_us * 1e-6
+            } else {
+                base.latency_s
+            },
+            bandwidth_bps: if self.link_rack_beta_gbps > 0.0 {
+                self.link_rack_beta_gbps * 1e9
+            } else {
+                base.bandwidth_bps
+            },
+        }
+    }
+
     /// Load from JSON file if `--config path` given, then apply CLI
     /// overrides.
     pub fn from_args(args: &Args) -> Result<RunConfig> {
@@ -279,7 +346,24 @@ impl RunConfig {
             c.label_smoothing = false;
         }
         c.allreduce = args.get_or("allreduce", &c.allreduce).to_string();
+        // `--comm-algo` is the schedule-flavored alias; it wins if both
+        // are given.
+        c.allreduce = args.get_or("comm-algo", &c.allreduce).to_string();
         c.ranks_per_node = args.get_usize("ranks-per-node", c.ranks_per_node)?;
+        if let Some(v) = args.get("torus") {
+            let (rows_s, cols_s) = v.split_once('x').ok_or_else(|| {
+                anyhow::anyhow!("--torus expects RxC (e.g. 16x32), got '{v}'")
+            })?;
+            c.torus_rows = rows_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--torus rows '{rows_s}' is not a number"))?;
+            c.torus_cols = cols_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--torus cols '{cols_s}' is not a number"))?;
+        }
+        c.rails = args.get_usize("rails", c.rails)?;
         c.wire = args.get_or("wire", &c.wire).to_string();
         if let Some(v) = args.get("error-feedback") {
             c.error_feedback = match v {
@@ -299,6 +383,8 @@ impl RunConfig {
         }
         c.link_alpha_us = args.get_f64("link-alpha-us", c.link_alpha_us)?;
         c.link_beta_gbps = args.get_f64("link-beta-gbps", c.link_beta_gbps)?;
+        c.link_rack_alpha_us = args.get_f64("link-rack-alpha-us", c.link_rack_alpha_us)?;
+        c.link_rack_beta_gbps = args.get_f64("link-rack-beta-gbps", c.link_rack_beta_gbps)?;
         c.pipeline_depth = args.get_usize("pipeline-depth", c.pipeline_depth)?;
         c.fence = args.get_or("fence", &c.fence).to_string();
         c.comm_threads = args.get_usize("comm-threads", c.comm_threads)?;
@@ -350,6 +436,9 @@ impl RunConfig {
             label_smoothing: get_bool("label_smoothing", d.label_smoothing),
             allreduce: get_str("allreduce", &d.allreduce),
             ranks_per_node: get_usize("ranks_per_node", d.ranks_per_node),
+            torus_rows: get_usize("torus_rows", d.torus_rows),
+            torus_cols: get_usize("torus_cols", d.torus_cols),
+            rails: get_usize("rails", d.rails),
             wire: get_str("wire", &d.wire),
             error_feedback: get_bool("error_feedback", d.error_feedback),
             bucket_bytes: get_usize("bucket_bytes", d.bucket_bytes),
@@ -359,6 +448,8 @@ impl RunConfig {
                 || get_bool("chunk_auto", d.chunk_auto),
             link_alpha_us: get_f64("link_alpha_us", d.link_alpha_us),
             link_beta_gbps: get_f64("link_beta_gbps", d.link_beta_gbps),
+            link_rack_alpha_us: get_f64("link_rack_alpha_us", d.link_rack_alpha_us),
+            link_rack_beta_gbps: get_f64("link_rack_beta_gbps", d.link_rack_beta_gbps),
             pipeline_depth: get_usize("pipeline_depth", d.pipeline_depth),
             fence: get_str("fence", &d.fence),
             comm_threads: get_usize("comm_threads", d.comm_threads),
@@ -407,6 +498,11 @@ impl RunConfig {
             self.link_alpha_us >= 0.0 && self.link_beta_gbps > 0.0,
             "link alpha must be >= 0 and beta > 0"
         );
+        anyhow::ensure!(
+            self.link_rack_alpha_us >= 0.0 && self.link_rack_beta_gbps >= 0.0,
+            "rack link alpha/beta must be >= 0 (0 inherits the node-tier link)"
+        );
+        anyhow::ensure!(self.rails >= 1, "rails must be >= 1");
         anyhow::ensure!(
             self.straggler_factor > 1.0,
             "straggler_factor must be > 1 (it multiplies the rolling median)"
@@ -527,6 +623,119 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"pipeline_depth": 3}"#).is_err());
         assert!(RunConfig::from_json(r#"{"fence": "vibes"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"link_beta_gbps": 0}"#).is_err());
+    }
+
+    #[test]
+    fn comm_algo_alias_and_new_schedules_parse() {
+        // `--comm-algo` is an alias of `--allreduce` and wins over it.
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--allreduce",
+            "ring",
+            "--comm-algo",
+            "multiring",
+            "--rails",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(c.algorithm().unwrap(), Algorithm::MultiRing { rails: 3 });
+        // Torus with no explicit shape auto-factorizes the node grid:
+        // 8 workers / 2 per node = 4 nodes -> 2x2.
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--workers",
+            "8",
+            "--ranks-per-node",
+            "2",
+            "--comm-algo",
+            "torus",
+        ]))
+        .unwrap();
+        assert_eq!(
+            c.algorithm().unwrap(),
+            Algorithm::Torus { rows: 2, cols: 2, ranks_per_node: 2 }
+        );
+        // Explicit `--torus RxC` overrides auto when it tiles the grid...
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--workers",
+            "8",
+            "--ranks-per-node",
+            "2",
+            "--comm-algo",
+            "torus",
+            "--torus",
+            "1x4",
+        ]))
+        .unwrap();
+        assert_eq!(
+            c.algorithm().unwrap(),
+            Algorithm::Torus { rows: 1, cols: 4, ranks_per_node: 2 }
+        );
+        // ...and is rejected when it does not.
+        assert!(RunConfig::from_args(&args(&[
+            "train",
+            "--workers",
+            "8",
+            "--ranks-per-node",
+            "2",
+            "--comm-algo",
+            "torus",
+            "--torus",
+            "3x2",
+        ]))
+        .is_err());
+        // Malformed shapes fail at parse.
+        assert!(
+            RunConfig::from_args(&args(&["train", "--comm-algo", "torus", "--torus", "4"]))
+                .is_err()
+        );
+        // One-sided shapes (rows without cols) are rejected too.
+        assert!(
+            RunConfig::from_json(r#"{"allreduce": "torus", "torus_rows": 2}"#).is_err()
+        );
+        // JSON spelling of the full knob set round-trips.
+        let c = RunConfig::from_json(
+            r#"{"workers": 8, "ranks_per_node": 2, "allreduce": "torus",
+                "torus_rows": 4, "torus_cols": 1, "rails": 5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.algorithm().unwrap(),
+            Algorithm::Torus { rows: 4, cols: 1, ranks_per_node: 2 }
+        );
+    }
+
+    #[test]
+    fn unknown_schedule_error_enumerates_options() {
+        let err = RunConfig::from_json(r#"{"allreduce": "smoke-signals"}"#)
+            .unwrap_err()
+            .to_string();
+        for kind in crate::collective::ScheduleKind::ALL {
+            assert!(
+                err.contains(kind.canonical()),
+                "error should list '{kind}': {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rack_link_inherits_node_link_when_zero() {
+        let d = RunConfig::default();
+        assert_eq!(d.rack_link().latency_s, d.link().latency_s);
+        assert_eq!(d.rack_link().bandwidth_bps, d.link().bandwidth_bps);
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--link-rack-alpha-us",
+            "12",
+            "--link-rack-beta-gbps",
+            "12.5",
+        ]))
+        .unwrap();
+        assert!((c.rack_link().latency_s - 12e-6).abs() < 1e-12);
+        assert!((c.rack_link().bandwidth_bps - 12.5e9).abs() < 1.0);
+        // Node-tier link is untouched by the rack knobs.
+        assert!((c.link().latency_s - 2e-6).abs() < 1e-12);
     }
 
     #[test]

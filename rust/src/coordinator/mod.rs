@@ -120,6 +120,11 @@ pub struct TrainReport {
     /// "q8") — BENCH artifacts must be self-describing about the wire
     /// precision they were produced under.
     pub wire_codec: String,
+    /// Allreduce schedule the run reduced gradients with
+    /// (`Algorithm::name()`: "naive" | "ring" | "halving_doubling" |
+    /// "hierarchical" | "torus" | "multiring") — reports must be
+    /// self-describing about the collective, too.
+    pub comm_algo: String,
     /// Exact on-wire compression ratio vs an fp32 exchange of the same
     /// elements (`WireStats::compression_ratio`): 1.0 / 2.0 / ≈3.94.
     pub compression_ratio: f64,
@@ -191,6 +196,7 @@ impl TrainReport {
                 ),
             ),
             ("wire_codec", Json::Str(self.wire_codec.clone())),
+            ("comm_algo", Json::Str(self.comm_algo.clone())),
             ("compression_ratio", Json::Num(self.compression_ratio)),
             ("error_feedback", Json::Bool(self.error_feedback)),
             ("quant_error_norm", Json::Num(self.quant_error_norm)),
@@ -226,6 +232,25 @@ impl TrainReport {
             ),
             ("wire_total_bytes", Json::Num(self.wire_totals.total_bytes as f64)),
             ("wire_messages", Json::Num(self.wire_totals.messages as f64)),
+            // Topology accounting: the node-leader bottleneck and the
+            // per-tier byte split (intra + inter + rack == total), so
+            // artifacts can defend a schedule choice without re-running.
+            (
+                "wire_max_bytes_per_rank",
+                Json::Num(self.wire_totals.max_bytes_per_rank as f64),
+            ),
+            (
+                "wire_intranode_bytes",
+                Json::Num(self.wire_totals.intranode_bytes as f64),
+            ),
+            (
+                "wire_internode_bytes",
+                Json::Num(self.wire_totals.internode_bytes as f64),
+            ),
+            (
+                "wire_interrack_bytes",
+                Json::Num(self.wire_totals.interrack_bytes as f64),
+            ),
             // Engine-active seconds summed over buckets (exceeds wall
             // clock when buckets reduce concurrently) + derived rate.
             ("wire_comm_active_s", Json::Num(self.wire_totals.elapsed_s)),
@@ -399,9 +424,17 @@ impl Trainer {
         let algo = cfg.algorithm()?;
         // `--chunk-bytes auto`: derive the row-chunk grain from the α–β
         // link model (chunks below the α·β latency floor pay more
-        // latency than backward can hide; see simnet::auto_chunk_bytes).
+        // latency than backward can hide) — schedule-aware, so a torus
+        // run's plan respects the coarser inter-rack grain its column
+        // rings cross (see simnet::auto_chunk_bytes_for).
         let chunk_bytes_used = if cfg.chunk_auto {
-            crate::simnet::auto_chunk_bytes(&cfg.link(), 512, 4 * cfg.bucket_bytes)
+            crate::simnet::auto_chunk_bytes_for(
+                algo,
+                &cfg.link(),
+                &cfg.rack_link(),
+                512,
+                4 * cfg.bucket_bytes,
+            )
         } else {
             cfg.chunk_bytes
         };
@@ -649,7 +682,14 @@ impl Trainer {
         // bits) never depends on the lane count.
         let budget = self.cfg.comm_threads.saturating_sub(self.lanes_lost).max(1);
         let lanes = budget.min(self.plan.buckets.len()).max(1);
-        (lanes, (self.cfg.comm_threads / lanes).max(1))
+        // Each lane gets at least the schedule's natural internal
+        // parallelism (multiring's rails are independent rings that want
+        // one thread each); thread counts never change bits, only
+        // wall-clock.
+        let per_lane = (self.cfg.comm_threads / lanes)
+            .max(self.algo.preferred_lane_threads())
+            .max(1);
+        (lanes, per_lane)
     }
 
     /// Run one optimization step. Returns (mean loss, train accuracy).
@@ -1274,6 +1314,7 @@ impl Trainer {
             chunk_bytes: self.chunk_bytes_used,
             chunk_plan,
             wire_codec: self.precision.name().to_string(),
+            comm_algo: self.algo.name().to_string(),
             compression_ratio: self.wire_totals.compression_ratio(),
             error_feedback: self.ef,
             quant_error_norm: self.ef_err_sq.sqrt(),

@@ -8,10 +8,13 @@
 //!   smoke                     one grad+update+eval round trip (CI check)
 //!
 //! Common options: --artifacts DIR, --workers N, --steps N, --lr X,
-//! --allreduce ring|hd|hier|naive, --wire f16|f32|q8,
+//! --comm-algo ring|hd|hier|naive|torus|multiring (alias: --allreduce),
+//! --torus RxC (explicit torus node grid; omit for auto-factorization),
+//! --rails N (multiring rail count), --wire f16|f32|q8,
 //! --error-feedback on|off (q8 residual carrying), --bucket-bytes N,
 //! --chunk-bytes N|auto (0 = whole-layer buckets; auto = α–β-derived,
-//! see --link-alpha-us/--link-beta-gbps), --comm-threads N,
+//! see --link-alpha-us/--link-beta-gbps and the rack-tier
+//! --link-rack-alpha-us/--link-rack-beta-gbps), --comm-threads N,
 //! --pipeline-depth 1|2 (2 = cross-step double buffering, the default),
 //! --fence full|layer, --no-lars, --no-smoothing, --no-overlap,
 //! --mlperf-log, --threaded.
@@ -35,8 +38,9 @@ use yasgd::util::cli::Args;
 const KNOWN_OPTS: &[&str] = &[
     "artifacts", "config", "workers", "grad-accum", "steps", "eval-every", "eval-batches",
     "seed", "lr", "warmup-frac", "decay", "no-lars", "no-smoothing", "allreduce",
+    "comm-algo", "torus", "rails",
     "ranks-per-node", "wire", "error-feedback", "bucket-bytes", "chunk-bytes",
-    "link-alpha-us", "link-beta-gbps",
+    "link-alpha-us", "link-beta-gbps", "link-rack-alpha-us", "link-rack-beta-gbps",
     "pipeline-depth", "fence", "comm-threads", "no-overlap",
     "train-size",
     "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",

@@ -10,7 +10,7 @@
 //! split Fig 2 needs: its y-axis is throughput, its x-axis is GPU count,
 //! and the paper's own "ideal" line is the same linear extrapolation.
 
-use crate::collective::{Algorithm, Precision};
+use crate::collective::{torus_grid, Algorithm, Precision};
 
 /// One link class: time to move n bytes = latency + n / bandwidth.
 #[derive(Debug, Clone, Copy)]
@@ -25,14 +25,30 @@ impl LinkParams {
     }
 }
 
-/// Cluster shape + calibration constants.
+/// Cluster shape + calibration constants, now with the full rack/node/NIC
+/// hierarchy: every hop of a schedule is priced on the tier it actually
+/// crosses (NVLink inside a node, in-rack InfiniBand between nodes, the
+/// spine between racks), and rail-parallel schedules are capped by the
+/// physical NIC count.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterSpec {
     pub gpus_per_node: usize,
+    /// Nodes per rack/leaf-switch group: hops beyond this distance cross
+    /// the spine and pay `inter_rack` instead of `inter`. The torus maps
+    /// its ROWS inside racks and its columns across them.
+    pub nodes_per_rack: usize,
+    /// NIC/HCA rails per node: the concurrency cap for multi-rail
+    /// schedules (a rail beyond the physical NIC count shares ports and
+    /// buys no bandwidth).
+    pub nics_per_node: usize,
     /// NVLink-class intra-node link (per direction, per GPU pair).
     pub intra: LinkParams,
-    /// InfiniBand-class inter-node link (per node; ABCI has 2 HCAs).
+    /// InfiniBand-class inter-node link, PER RAIL (one HCA); in-rack hops
+    /// pay this tier.
     pub inter: LinkParams,
+    /// Spine link between racks: higher latency (an extra switch tier),
+    /// same per-rail bandwidth.
+    pub inter_rack: LinkParams,
     /// Single-GPU training throughput in images/sec (calibration anchor).
     pub images_per_sec_per_gpu: f64,
     /// Fixed per-step host/framework overhead (kernel launches, queueing).
@@ -46,15 +62,20 @@ pub struct ClusterSpec {
 
 impl ClusterSpec {
     /// ABCI: 4x V100 SXM2 per node, NVLink mesh, 2x IB EDR HCAs per node
-    /// (Fig 1). V100 fp16 ResNet-50 throughput anchored to the paper's own
-    /// measurement: 1.73M img/s over 2048 GPUs at 77% efficiency
-    /// => single-GPU ~ 1097 img/s.
+    /// (Fig 1), 34-ish nodes per rack (we round to 32 so the 512-node
+    /// fleet tiles 16 racks). V100 fp16 ResNet-50 throughput anchored to
+    /// the paper's own measurement: 1.73M img/s over 2048 GPUs at 77%
+    /// efficiency => single-GPU ~ 1097 img/s.
     pub fn abci() -> ClusterSpec {
         ClusterSpec {
             gpus_per_node: 4,
+            nodes_per_rack: 32,
+            nics_per_node: 2,
             intra: LinkParams { latency_s: 3e-6, bandwidth_bps: 130e9 },
-            // 2 HCAs x 100 Gbit/s = 25 GB/s per node aggregate.
-            inter: LinkParams { latency_s: 8e-6, bandwidth_bps: 25e9 },
+            // One EDR HCA: 100 Gbit/s = 12.5 GB/s per rail.
+            inter: LinkParams { latency_s: 8e-6, bandwidth_bps: 12.5e9 },
+            // Spine hop: one more switch tier of latency, same rail rate.
+            inter_rack: LinkParams { latency_s: 12e-6, bandwidth_bps: 12.5e9 },
             images_per_sec_per_gpu: 1097.0,
             per_step_overhead_s: 1.2e-3,
             straggler_frac_per_doubling: 0.02,
@@ -64,7 +85,9 @@ impl ClusterSpec {
     /// A single-HCA commodity cluster for ablation comparisons.
     pub fn commodity() -> ClusterSpec {
         ClusterSpec {
+            nics_per_node: 1,
             inter: LinkParams { latency_s: 15e-6, bandwidth_bps: 12.5e9 },
+            inter_rack: LinkParams { latency_s: 22e-6, bandwidth_bps: 12.5e9 },
             ..Self::abci()
         }
     }
@@ -72,12 +95,12 @@ impl ClusterSpec {
     /// A spec whose links are a MEASURED α–β fit instead of the hardcoded
     /// ABCI numbers — the feedback edge from `benches/pipeline.rs`'s
     /// replay (`fit_alpha_beta` over the measured per-bucket allreduces)
-    /// into the Fig-2 generators. Both link classes take the fitted pair:
-    /// the in-process fabric has no NVLink/IB distinction, so the curve
-    /// this produces reads "our transport, scaled out", next to the ABCI
-    /// curve rather than replacing it.
+    /// into the Fig-2 generators. ALL link tiers take the fitted pair:
+    /// the in-process fabric has no NVLink/IB/spine distinction, so the
+    /// curve this produces reads "our transport, scaled out", next to the
+    /// ABCI curve rather than replacing it.
     pub fn calibrated(link: LinkParams) -> ClusterSpec {
-        ClusterSpec { intra: link, inter: link, ..Self::abci() }
+        ClusterSpec { intra: link, inter: link, inter_rack: link, ..Self::abci() }
     }
 }
 
@@ -102,6 +125,28 @@ pub fn latency_floor_bytes(link: &LinkParams) -> usize {
 /// bigger chunks, each still worth one α on the compressed wire.
 pub fn auto_chunk_bytes(link: &LinkParams, min_bytes: usize, max_bytes: usize) -> usize {
     latency_floor_bytes(link).clamp(min_bytes, max_bytes.max(min_bytes))
+}
+
+/// Schedule-aware [`auto_chunk_bytes`]: a chunk plan must respect the
+/// grain of EVERY tier its schedule crosses, so the torus — whose column
+/// rings ride the higher-latency inter-rack spine — takes the coarser of
+/// the node-link and rack-link latency floors. Flat and two-level
+/// schedules never leave the node tier's link class and keep the plain
+/// floor.
+pub fn auto_chunk_bytes_for(
+    algo: Algorithm,
+    link: &LinkParams,
+    rack_link: &LinkParams,
+    min_bytes: usize,
+    max_bytes: usize,
+) -> usize {
+    let floor = match algo {
+        Algorithm::Torus { .. } => {
+            latency_floor_bytes(link).max(latency_floor_bytes(rack_link))
+        }
+        _ => latency_floor_bytes(link),
+    };
+    floor.clamp(min_bytes, max_bytes.max(min_bytes))
 }
 
 /// Exact bytes a message of `elems` gradient elements occupies on the
@@ -131,13 +176,22 @@ pub fn concurrent_codec_allreduce_time(
 
 /// Predicted allreduce time for `bytes` of wire data across `p` ranks.
 ///
-/// Textbook critical-path formulas; `Hierarchical` prices intra-node hops
-/// on the NVLink link and the leader ring on IB.
+/// Textbook critical-path formulas, priced per link TIER: hierarchical
+/// and torus intra-node hops run on NVLink, in-rack inter-node hops on
+/// per-rail IB, and the torus's column rings on the inter-rack spine —
+/// the same tier split `WireStats` books per schedule, so the model and
+/// the byte ledgers describe the same machine.
 pub fn allreduce_time(spec: &ClusterSpec, algo: Algorithm, p: usize, bytes: f64) -> f64 {
     if p <= 1 {
         return 0.0;
     }
     let pf = p as f64;
+    // NVLink tree reduce + broadcast over one node's members: what the
+    // hierarchical and torus schedules both pay at the edges.
+    let intra_tree = |rpn: f64| {
+        let intra_rounds = 2.0 * rpn.log2().ceil().max(1.0);
+        intra_rounds * spec.intra.transfer_time(bytes)
+    };
     match algo {
         Algorithm::Naive => {
             // Root receives (p-1)·n then sends (p-1)·n, serialized.
@@ -155,20 +209,45 @@ pub fn allreduce_time(spec: &ClusterSpec, algo: Algorithm, p: usize, bytes: f64)
         Algorithm::Hierarchical { ranks_per_node } => {
             let rpn = ranks_per_node.max(1).min(p) as f64;
             let nodes = (pf / rpn).ceil();
-            // Intra: tree reduce + broadcast over NVLink, log2(rpn) rounds each.
-            let intra_rounds = 2.0 * rpn.log2().ceil().max(1.0);
-            let t_intra = intra_rounds * spec.intra.transfer_time(bytes);
-            // Inter: halving-doubling over node leaders (a flat ring across
-            // 512 nodes would pay ~1000 α's; latency-log is what NCCL-class
-            // libraries pick at this scale and message size).
+            // Inter: flat ring across the node leaders — what the
+            // `collective` schedule actually executes. At 512 nodes that
+            // is ~1,022 α's of latency on the critical path: the node-
+            // leader latency wall the 2D torus exists to break.
             let t_inter = if nodes > 1.0 {
-                let rounds = 2.0 * nodes.log2().ceil();
-                rounds * spec.inter.latency_s
-                    + 2.0 * bytes * (nodes - 1.0) / nodes / spec.inter.bandwidth_bps
+                2.0 * (nodes - 1.0) * spec.inter.transfer_time(bytes / nodes)
             } else {
                 0.0
             };
-            t_intra + t_inter
+            intra_tree(rpn) + t_inter
+        }
+        Algorithm::Torus { rows, cols, ranks_per_node } => {
+            let rpn = ranks_per_node.max(1).min(p);
+            let nodes = (p + rpn - 1) / rpn;
+            let (rows, cols) = torus_grid(rows, cols, nodes);
+            // Row rings (in-rack IB): reduce-scatter + all-gather of
+            // 1/cols chunks, all rows concurrent.
+            let t_rows = if cols > 1 {
+                2.0 * (cols as f64 - 1.0) * spec.inter.transfer_time(bytes / cols as f64)
+            } else {
+                0.0
+            };
+            // Column rings (spine): a full ring allreduce, but of just
+            // the owned bytes/cols chunk, scattered 1/rows per round —
+            // the only traffic that ever crosses racks.
+            let t_cols = if rows > 1 {
+                2.0 * (rows as f64 - 1.0)
+                    * spec.inter_rack.transfer_time(bytes / (rows * cols) as f64)
+            } else {
+                0.0
+            };
+            intra_tree(rpn as f64) + t_rows + t_cols
+        }
+        Algorithm::MultiRing { rails } => {
+            // `rails` concurrent rings over disjoint 1/rails slices, one
+            // per NIC rail; rails beyond the physical NIC count share
+            // ports and stop helping.
+            let rails_eff = rails.max(1).min(spec.nics_per_node.max(1)) as f64;
+            2.0 * (pf - 1.0) * spec.inter.transfer_time(bytes / (pf * rails_eff))
         }
     }
 }
@@ -326,9 +405,36 @@ pub struct ScalingPoint {
 }
 
 /// Model the paper's scaling experiment: per-GPU batch fixed (81920/2048 =
-/// 40), gradient bytes fixed, hierarchical allreduce, overlap on.
+/// 40), gradient bytes fixed, overlap on, with the paper's own schedule —
+/// the auto-factorized 2D torus (arXiv 1811.05233; the shape adapts to
+/// each GPU count via `torus_grid`).
 pub fn scaling_curve(
     spec: &ClusterSpec,
+    gpu_counts: &[usize],
+    per_gpu_batch: usize,
+    grad_bytes: f64,
+    bucket_count: usize,
+    overlap_frac: f64,
+) -> Vec<ScalingPoint> {
+    scaling_curve_with(
+        spec,
+        |_| Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: spec.gpus_per_node },
+        gpu_counts,
+        per_gpu_batch,
+        grad_bytes,
+        bucket_count,
+        overlap_frac,
+    )
+}
+
+/// [`scaling_curve`] under an explicit schedule: `algo_of` maps each GPU
+/// count to the algorithm priced at that scale (shape parameters like the
+/// torus grid or the hierarchical rpn may depend on the count) — the hook
+/// the Fig-2 schedule comparison sweeps ring vs hier vs torus vs
+/// multiring through.
+pub fn scaling_curve_with(
+    spec: &ClusterSpec,
+    algo_of: impl Fn(usize) -> Algorithm,
     gpu_counts: &[usize],
     per_gpu_batch: usize,
     grad_bytes: f64,
@@ -341,12 +447,7 @@ pub fn scaling_curve(
             let compute_s = per_gpu_batch as f64 / spec.images_per_sec_per_gpu;
             let bucket = grad_bytes / bucket_count.max(1) as f64;
             let buckets = vec![bucket; bucket_count.max(1)];
-            let comm_s = bucketed_allreduce_time(
-                spec,
-                Algorithm::Hierarchical { ranks_per_node: spec.gpus_per_node },
-                g,
-                &buckets,
-            );
+            let comm_s = bucketed_allreduce_time(spec, algo_of(g), g, &buckets);
             let m = StepModel {
                 compute_s,
                 overlap_window_frac: overlap_frac,
@@ -392,7 +493,7 @@ pub fn time_to_train_s(
     let compute_s = per_gpu_batch / spec.images_per_sec_per_gpu;
     let comm_s = bucketed_allreduce_time(
         spec,
-        Algorithm::Hierarchical { ranks_per_node: spec.gpus_per_node },
+        Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: spec.gpus_per_node },
         gpus,
         &vec![grad_bytes / 8.0; 8],
     );
@@ -807,6 +908,123 @@ mod tests {
             assert!(w[1].efficiency <= w[0].efficiency + 1e-9);
         }
         assert!(pts[0].efficiency > 0.85);
+    }
+
+    #[test]
+    fn torus_beats_hier_at_2048() {
+        // The tentpole claim, in model form (check_bench.py gates the
+        // benched version): at 2,048 ranks the hierarchical leader ring
+        // pays ~1,022 α's on the critical path while the 16x32 torus
+        // pays ~92 for the SAME total wire volume, so the torus wins
+        // under the ABCI links AND under any fitted single-link spec.
+        let bytes = 51e6;
+        for spec in [
+            ClusterSpec::abci(),
+            ClusterSpec::calibrated(LinkParams { latency_s: 5e-6, bandwidth_bps: 10e9 }),
+        ] {
+            let hier =
+                allreduce_time(&spec, Algorithm::Hierarchical { ranks_per_node: 4 }, 2048, bytes);
+            let torus = allreduce_time(
+                &spec,
+                Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 4 },
+                2048,
+                bytes,
+            );
+            assert!(torus < hier, "torus {torus} vs hier {hier}");
+            // And the explicit paper shape prices the same as auto (512
+            // nodes factor to 16x32 either way).
+            let explicit = allreduce_time(
+                &spec,
+                Algorithm::Torus { rows: 16, cols: 32, ranks_per_node: 4 },
+                2048,
+                bytes,
+            );
+            assert!((torus - explicit).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn torus_prices_columns_on_the_rack_tier() {
+        // Only the torus pays the spine: dilating inter_rack latency
+        // slows the torus but leaves hierarchical untouched.
+        let base = ClusterSpec::abci();
+        let slow_spine = ClusterSpec {
+            inter_rack: LinkParams { latency_s: 500e-6, ..base.inter_rack },
+            ..base
+        };
+        let torus = Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 4 };
+        let hier = Algorithm::Hierarchical { ranks_per_node: 4 };
+        assert!(allreduce_time(&slow_spine, torus, 2048, 51e6) > allreduce_time(&base, torus, 2048, 51e6));
+        assert_eq!(
+            allreduce_time(&slow_spine, hier, 2048, 51e6),
+            allreduce_time(&base, hier, 2048, 51e6)
+        );
+        // Degenerate single-row torus never touches the spine either.
+        let flat = Algorithm::Torus { rows: 1, cols: 512, ranks_per_node: 4 };
+        assert_eq!(
+            allreduce_time(&slow_spine, flat, 2048, 51e6),
+            allreduce_time(&base, flat, 2048, 51e6)
+        );
+    }
+
+    #[test]
+    fn multiring_rails_capped_by_nic_count() {
+        let abci = ClusterSpec::abci(); // 2 NICs
+        let p = 512;
+        let bytes = 51e6;
+        let one = allreduce_time(&abci, Algorithm::MultiRing { rails: 1 }, p, bytes);
+        let two = allreduce_time(&abci, Algorithm::MultiRing { rails: 2 }, p, bytes);
+        let four = allreduce_time(&abci, Algorithm::MultiRing { rails: 4 }, p, bytes);
+        // One rail IS the flat ring; two rails split the payload over
+        // both HCAs; rails beyond the NIC count share ports and buy
+        // nothing.
+        assert_eq!(one, allreduce_time(&abci, Algorithm::Ring, p, bytes));
+        assert!(two < one);
+        assert_eq!(four, two);
+        // Commodity has one NIC: multi-rail degrades to the plain ring.
+        let com = ClusterSpec::commodity();
+        assert_eq!(
+            allreduce_time(&com, Algorithm::MultiRing { rails: 4 }, p, bytes),
+            allreduce_time(&com, Algorithm::Ring, p, bytes)
+        );
+    }
+
+    #[test]
+    fn auto_chunk_respects_rack_tier_for_torus() {
+        let link = LinkParams { latency_s: 2e-6, bandwidth_bps: 8e9 }; // floor 16k
+        let rack = LinkParams { latency_s: 8e-6, bandwidth_bps: 8e9 }; // floor 64k
+        let torus = Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 4 };
+        // Torus chunks at the coarser spine floor; node-tier schedules
+        // keep the node-link floor.
+        assert_eq!(auto_chunk_bytes_for(torus, &link, &rack, 512, 1 << 20), 64_000);
+        for algo in [
+            Algorithm::Ring,
+            Algorithm::Hierarchical { ranks_per_node: 4 },
+            Algorithm::MultiRing { rails: 2 },
+        ] {
+            assert_eq!(auto_chunk_bytes_for(algo, &link, &rack, 512, 1 << 20), 16_000);
+        }
+        // Same clamp semantics as the plain helper.
+        assert_eq!(auto_chunk_bytes_for(torus, &link, &rack, 512, 20_000), 20_000);
+    }
+
+    #[test]
+    fn scaling_curve_with_ranks_schedules() {
+        // The Fig-2 schedule comparison in miniature: at 2,048 GPUs the
+        // torus curve must dominate hier, which must dominate the flat
+        // ring (whose ~4,094 α's swamp the overlap window).
+        let s = ClusterSpec::abci();
+        let at = |algo_of: &dyn Fn(usize) -> Algorithm| {
+            scaling_curve_with(&s, algo_of, &[2048], 40, 51e6, 8, 0.66)[0].model_images_per_sec
+        };
+        let ring = at(&|_| Algorithm::Ring);
+        let hier = at(&|_| Algorithm::Hierarchical { ranks_per_node: 4 });
+        let torus = at(&|_| Algorithm::Torus { rows: 0, cols: 0, ranks_per_node: 4 });
+        assert!(torus >= hier, "torus {torus} vs hier {hier}");
+        assert!(hier > ring, "hier {hier} vs ring {ring}");
+        // And the default curve IS the torus curve.
+        let dflt = scaling_curve(&s, &[2048], 40, 51e6, 8, 0.66)[0].model_images_per_sec;
+        assert!((dflt - torus).abs() < 1e-9);
     }
 
     #[test]

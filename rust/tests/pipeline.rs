@@ -116,6 +116,116 @@ fn pipelined_matches_sequential_across_grid() {
     }
 }
 
+/// The topology-aware schedules join the determinism grid: torus (2D
+/// node grid with intra-node reduce/broadcast, row rings and inter-rack
+/// column rings) and multiring (independent rail rings over disjoint
+/// slices) must reproduce the sequential barrier reference bit-for-bit
+/// across depth {1, 2} × wire {f32, f16, q8+EF} — including a PRIME node
+/// count, where torus auto-factorization degrades to a single ring row.
+/// Separate from the main grid because these rows also pin
+/// `ranks_per_node` (the default 4 would degenerate every ≤4-worker
+/// torus into one node).
+#[test]
+fn torus_and_multiring_join_the_determinism_grid() {
+    // (workers, ranks_per_node, comm_threads, grad_accum, wire, allreduce, chunk_bytes)
+    let grid = [
+        (4usize, 1usize, 2usize, 1usize, "f32", "torus", 0usize), // 4 nodes -> 2x2 grid
+        (4, 2, 2, 1, "f16", "torus", 2048),  // 2 nodes -> 1x2 row, live intra phases
+        (3, 1, 1, 2, "q8", "torus", 16 * 1024), // prime node count -> 1x3 fallback
+        (4, 1, 2, 1, "f16", "multiring", 4096),
+        (3, 1, 2, 1, "f32", "multiring", 0),
+        (4, 1, 1, 2, "q8", "multiring", 1024),
+    ];
+    for (workers, rpn, comm_threads, grad_accum, wire, allreduce, chunk_bytes) in grid {
+        let what = format!(
+            "workers={workers} rpn={rpn} lanes<=({comm_threads}) accum={grad_accum} {wire} \
+             {allreduce} chunk={chunk_bytes}"
+        );
+        let mut cfg = base_cfg();
+        cfg.workers = workers;
+        cfg.ranks_per_node = rpn;
+        cfg.comm_threads = comm_threads;
+        cfg.grad_accum = grad_accum;
+        cfg.wire = wire.into();
+        cfg.allreduce = allreduce.into();
+        cfg.chunk_bytes = chunk_bytes;
+        cfg.total_steps = 3;
+
+        let mut seq_cfg = cfg.clone();
+        seq_cfg.overlap = false;
+        let mut seq = Trainer::new(seq_cfg, engine()).unwrap();
+
+        cfg.overlap = true;
+        let mut d1_cfg = cfg.clone();
+        d1_cfg.pipeline_depth = 1;
+        let mut d1 = Trainer::new(d1_cfg, engine()).unwrap();
+        assert!(d1.pipeline, "{what}: overlap=true must pick the pipelined executor");
+
+        cfg.pipeline_depth = 2;
+        let mut d2 = Trainer::new(cfg, engine()).unwrap();
+        assert_eq!(d2.depth(), 2, "{what}: depth-2 trainer must double-buffer");
+
+        for s in 0..3 {
+            let (l1, a1) = seq.step().unwrap();
+            let (l2, a2) = d1.step().unwrap();
+            let (l3, a3) = d2.step().unwrap();
+            assert_eq!(l1, l2, "{what}: step {s} depth-1 loss differs");
+            assert_eq!(a1, a2, "{what}: step {s} depth-1 acc differs");
+            assert_eq!(l1, l3, "{what}: step {s} depth-2 loss differs");
+            assert_eq!(a1, a3, "{what}: step {s} depth-2 acc differs");
+        }
+        assert_eq!(seq.params(), d1.params(), "{what}: depth-1 params diverged");
+        assert_eq!(seq.params(), d2.params(), "{what}: depth-2 params diverged");
+        assert_eq!(seq.bn_state(), d1.bn_state(), "{what}: depth-1 bn state diverged");
+        assert_eq!(seq.bn_state(), d2.bn_state(), "{what}: depth-2 bn state diverged");
+    }
+}
+
+/// Satellite: the TrainReport is self-describing about the collective —
+/// `comm_algo` plus the node-leader bottleneck (`max_bytes_per_rank`)
+/// and the per-tier byte split, both in the struct (via `wire_totals`)
+/// and in the serialized JSON.
+#[test]
+fn report_surfaces_comm_algo_and_per_tier_wire_bytes() {
+    use yasgd::util::json::Json;
+    let mut cfg = base_cfg();
+    cfg.total_steps = 2;
+    cfg.eval_every = 0;
+    cfg.workers = 4;
+    cfg.ranks_per_node = 2;
+    cfg.allreduce = "torus".into();
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    let report = t.train().unwrap();
+    assert_eq!(report.comm_algo, "torus");
+    let w = &report.wire_totals;
+    assert!(w.max_bytes_per_rank > 0);
+    assert_eq!(
+        w.intranode_bytes + w.internode_bytes + w.interrack_bytes,
+        w.total_bytes,
+        "per-tier bytes must partition the total"
+    );
+    assert!(w.intranode_bytes > 0, "torus at 2 ranks/node must book intra-node bytes");
+    let j = report.to_json();
+    assert_eq!(j.get("comm_algo").and_then(Json::as_str), Some("torus"));
+    let get = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report JSON missing {k}"))
+    };
+    assert_eq!(get("wire_max_bytes_per_rank"), w.max_bytes_per_rank as f64);
+    assert_eq!(
+        get("wire_intranode_bytes") + get("wire_internode_bytes")
+            + get("wire_interrack_bytes"),
+        w.total_bytes as f64
+    );
+    // The default hierarchical run keeps its legacy report name.
+    let mut hier_cfg = base_cfg();
+    hier_cfg.total_steps = 1;
+    hier_cfg.eval_every = 0;
+    let mut h = Trainer::new(hier_cfg, engine()).unwrap();
+    assert_eq!(h.train().unwrap().comm_algo, "hierarchical");
+}
+
 /// The per-layer fence relaxation reads the exact same parameter versions
 /// as the full fence (each layer is awaited at the version the full fence
 /// would have provided), so it must also be bitwise neutral — across

@@ -6,7 +6,7 @@
 //! reproducible).
 
 use yasgd::bucket::BucketPlan;
-use yasgd::collective::{allreduce_mean, Algorithm, CommEngine, Precision};
+use yasgd::collective::{allreduce_mean, torus_grid, Algorithm, CommEngine, Precision};
 use yasgd::model_meta::Manifest;
 use yasgd::schedule::{Decay, LrSchedule};
 use yasgd::util::codec::{q8_ef_apply, q8_encode_copy, Q8_CHUNK};
@@ -117,11 +117,13 @@ fn prop_allreduce_equals_sequential_mean() {
     for case in 0..CASES {
         let p = 2 + rng.below(15) as usize;
         let n = rng.below(3000) as usize;
-        let algo = match rng.below(4) {
+        let algo = match rng.below(6) {
             0 => Algorithm::Naive,
             1 => Algorithm::Ring,
             2 => Algorithm::HalvingDoubling,
-            _ => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
+            3 => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
+            4 => Algorithm::torus_auto(p, 1 + rng.below(5) as usize),
+            _ => Algorithm::MultiRing { rails: 1 + rng.below(4) as usize },
         };
         let bufs: Vec<Vec<f32>> = (0..p)
             .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect())
@@ -149,11 +151,13 @@ fn prop_allreduce_all_ranks_bit_identical() {
     for case in 0..CASES {
         let p = 2 + rng.below(11) as usize;
         let n = 1 + rng.below(2000) as usize;
-        let algo = match rng.below(4) {
+        let algo = match rng.below(6) {
             0 => Algorithm::Naive,
             1 => Algorithm::Ring,
             2 => Algorithm::HalvingDoubling,
-            _ => Algorithm::Hierarchical { ranks_per_node: 4 },
+            3 => Algorithm::Hierarchical { ranks_per_node: 4 },
+            4 => Algorithm::torus_auto(p, 1 + rng.below(5) as usize),
+            _ => Algorithm::MultiRing { rails: 1 + rng.below(4) as usize },
         };
         let precision = match rng.below(3) {
             0 => Precision::F32,
@@ -184,11 +188,13 @@ fn prop_comm_engine_bit_identical_to_reference() {
     let mut rng = Rng::new(0xE7617E);
     for case in 0..CASES {
         let p = 2 + rng.below(15) as usize;
-        let algo = match rng.below(4) {
+        let algo = match rng.below(6) {
             0 => Algorithm::Naive,
             1 => Algorithm::Ring,
             2 => Algorithm::HalvingDoubling,
-            _ => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
+            3 => Algorithm::Hierarchical { ranks_per_node: 1 + rng.below(5) as usize },
+            4 => Algorithm::torus_auto(p, 1 + rng.below(5) as usize),
+            _ => Algorithm::MultiRing { rails: 1 + rng.below(4) as usize },
         };
         let precision = match rng.below(3) {
             0 => Precision::F32,
@@ -226,6 +232,105 @@ fn prop_comm_engine_bit_identical_to_reference() {
                 eng_stats.internode_bytes, ref_stats.internode_bytes,
                 "case {case} internode"
             );
+            assert_eq!(
+                eng_stats.intranode_bytes, ref_stats.intranode_bytes,
+                "case {case} intranode"
+            );
+            assert_eq!(
+                eng_stats.interrack_bytes, ref_stats.interrack_bytes,
+                "case {case} interrack"
+            );
+            assert_eq!(
+                eng_stats.intranode_bytes + eng_stats.internode_bytes
+                    + eng_stats.interrack_bytes,
+                eng_stats.total_bytes,
+                "case {case}: per-tier bytes must partition the total"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_torus_grid_tiles_and_degrades_for_primes() {
+    // The node-grid factorization shared by the reference schedule, the
+    // plan builder and the simulator: the auto grid must tile the node
+    // count exactly with the most-square split (rows <= cols, rows the
+    // largest divisor <= sqrt), honor a valid explicit shape verbatim,
+    // and fall back to auto — never a rank-skipping grid — on a stale
+    // shape. Prime node counts degrade to a single 1xN ring row.
+    let mut rng = Rng::new(0x70125);
+    for case in 0..CASES {
+        let nodes = 1 + rng.below(600) as usize;
+        let (r, c) = torus_grid(0, 0, nodes);
+        assert_eq!(r * c, nodes, "case {case}: auto grid must tile {nodes} nodes");
+        assert!(r <= c, "case {case}: rows must not exceed cols");
+        for d in (r + 1)..=((nodes as f64).sqrt() as usize) {
+            assert_ne!(
+                nodes % d,
+                0,
+                "case {case}: {nodes} has a squarer split {d}x{}",
+                nodes / d
+            );
+        }
+        // A valid explicit shape is honored verbatim (transposed grids
+        // are legal: the caller may want long rows on the fast tier)...
+        assert_eq!(torus_grid(c, r, nodes), (c, r), "case {case}");
+        // ...and a shape that no longer matches the node count falls
+        // back to auto: (r+1)(c+1) = nodes + r + c + 1 != nodes, always.
+        assert_eq!(torus_grid(c + 1, r + 1, nodes), (r, c), "case {case}");
+    }
+    for p in [2usize, 3, 5, 7, 11, 127, 509] {
+        assert_eq!(torus_grid(0, 0, p), (1, p), "prime {p} must degrade to one ring row");
+    }
+}
+
+#[test]
+fn prop_new_schedules_conserve_elements_for_any_rank_count() {
+    // Marker conservation over the new schedules at awkward rank counts
+    // (non-power-of-two, primes) and random torus shapes: rank r holds
+    // (i+1)*(r+1) at index i, so index i's exact mean is (i+1)*(p+1)/2.
+    // A schedule that skips, double-counts or mis-tiles ANY sub-span
+    // (ragged chunk spans, prime 1xN grids, rail splits, leader-owned
+    // column chunks) lands measurably off at some index. Every partial
+    // sum stays integer and < 2^24, so f32 arithmetic is exact up to the
+    // final 1/p scale.
+    let mut rng = Rng::new(0x70C05);
+    for case in 0..CASES {
+        let p = 2 + rng.below(16) as usize;
+        let n = rng.below(2048) as usize;
+        let algo = if rng.below(2) == 0 {
+            Algorithm::torus_auto(p, 1 + rng.below(5) as usize)
+        } else {
+            Algorithm::MultiRing { rails: 1 + rng.below(4) as usize }
+        };
+        let mut bufs: Vec<Vec<f32>> = (0..p)
+            .map(|r| (0..n).map(|i| ((i + 1) * (r + 1)) as f32).collect())
+            .collect();
+        let stats = allreduce_mean(&mut bufs, algo, Precision::F32);
+        assert_eq!(
+            stats.intranode_bytes + stats.internode_bytes + stats.interrack_bytes,
+            stats.total_bytes,
+            "case {case}: per-tier bytes must partition the total"
+        );
+        for (r, b) in bufs.iter().enumerate() {
+            for (i, &g) in b.iter().enumerate() {
+                let want = (i + 1) as f64 * (p + 1) as f64 / 2.0;
+                assert!(
+                    ((g as f64) - want).abs() <= 1e-5 * want,
+                    "case {case} algo {} rank {r} idx {i}: {g} vs {want}",
+                    algo.name()
+                );
+            }
+        }
+        // The lossy wires must still leave every rank bit-identical.
+        for precision in [Precision::F16, Precision::Q8] {
+            let mut lossy: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..n).map(|i| ((i + 1) * (r + 1)) as f32 * 1e-3).collect())
+                .collect();
+            allreduce_mean(&mut lossy, algo, precision);
+            for (r, b) in lossy.iter().enumerate().skip(1) {
+                assert_eq!(&lossy[0], b, "case {case} {precision:?} rank {r} differs");
+            }
         }
     }
 }

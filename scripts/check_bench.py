@@ -1,9 +1,13 @@
 #!/usr/bin/env python3
-"""CI gate over BENCH_pipeline.json (the bench-smoke artifact).
+"""CI gate over the bench-smoke artifacts.
 
-Asserts the structural invariants the cross-step pipeline PR promises:
+Accepts any number of artifact paths (default: BENCH_pipeline.json) and
+dispatches on the file name: *fig2* files get the topology gates, the
+rest get the pipeline gates.
 
-  1. the new depth-2 section exists (with its steady-state throughput
+BENCH_pipeline.json — invariants the pipeline/wire/fault PRs promise:
+
+  1. the depth-2 section exists (with its steady-state throughput
      fields), and
   2. the depth-2 WHOLE-RUN exposed-comm fraction (cold-start step
      included — `StepBreakdown.exposed_comm_frac()` over every step) is
@@ -26,16 +30,36 @@ Asserts the structural invariants the cross-step pipeline PR promises:
      worth of wall-clock (overhead_frac < 1.0; detection deadlines
      dominate, so this is loose enough for noisy runners).
 
+BENCH_fig2.json — invariants the topology-aware collectives PR promises:
+
+  5. the 2048-rank schedule sweep ran for every (spec, wire, algo)
+     combination, and under the CALIBRATED link the 2D torus's modelled
+     step time at 2048 ranks is no worse than plain hierarchical's, for
+     f16 AND q8 wires. The model is deterministic α–β arithmetic, so
+     the margin is a float-rounding epsilon, not a noise tolerance: the
+     torus replaces hier's 2(nodes-1)-hop leader ring with a
+     2(cols-1)-hop row ring plus a 2(rows-1)-hop rack-tier column ring
+     over 1/cols of the buffer, which strictly wins whenever latency
+     is nonzero.
+  6. the REAL `allreduce_mean` per-tier accounting at 2048 ranks shows
+     the torus is intra-node dominant (intranode_bytes >=
+     internode_bytes — the point of node-leader aggregation), and the
+     per-tier bytes exactly partition the total (deterministic
+     WireStats counting, NO tolerance).
+
 Tolerance-guarded on purpose for the wall-clock fields: CI runners are
 noisy and the exposed fractions are measurements; the gate catches
 structural regressions (section missing, depth 2 / q8 clearly worse),
-not micro-jitter. Byte accounting is deterministic and gated strictly.
+not micro-jitter. Byte accounting and the α–β model are deterministic
+and gated strictly.
 """
 
 import json
+import os
 import sys
 
 TOLERANCE = 0.05  # absolute, on a [0, 1] fraction
+MODEL_EPS = 1e-9  # relative, on deterministic α–β model times
 
 
 def fail(msg: str) -> None:
@@ -43,16 +67,17 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
-def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_pipeline.json"
+def load(path: str) -> dict:
     try:
         with open(path) as f:
-            bench = json.load(f)
+            return json.load(f)
     except OSError as e:
         fail(f"cannot read {path}: {e}")
     except json.JSONDecodeError as e:
         fail(f"{path} is not valid JSON: {e}")
 
+
+def check_pipeline(bench: dict) -> None:
     for section in ("depth1", "depth2"):
         if not isinstance(bench.get(section), dict):
             fail(f"missing '{section}' section")
@@ -127,6 +152,96 @@ def main() -> None:
         f"faults: {int(recoveries)} recoveries, bitwise, "
         f"overhead {overhead:.3f} < 1.0"
     )
+
+
+def check_fig2(bench: dict) -> None:
+    ranks = bench.get("ranks")
+    if ranks != 2048:
+        fail(f"fig2 sweep must reach 2048 ranks: ranks={ranks!r}")
+
+    model = bench.get("model")
+    if not isinstance(model, list) or not model:
+        fail("missing or empty 'model' sweep")
+    wires = ("f16", "q8")
+    algos = ("ring", "hier", "torus", "multiring")
+    at_2048 = {}
+    for row in model:
+        if not isinstance(row, dict):
+            fail(f"malformed model row: {row!r}")
+        if row.get("gpus") == 2048:
+            key = (row.get("spec"), row.get("wire"), row.get("algo"))
+            at_2048[key] = row.get("step_ms")
+    for spec in ("abci", "calibrated"):
+        for wire in wires:
+            for algo in algos:
+                v = at_2048.get((spec, wire, algo))
+                if not isinstance(v, (int, float)) or v <= 0:
+                    fail(f"model step_ms missing at 2048 for ({spec}, {wire}, {algo}): {v!r}")
+
+    # Gate: torus <= hier at 2048 under the CALIBRATED link, both wires.
+    # Deterministic model arithmetic — epsilon, not tolerance.
+    for wire in wires:
+        torus = at_2048[("calibrated", wire, "torus")]
+        hier = at_2048[("calibrated", wire, "hier")]
+        if torus > hier * (1.0 + MODEL_EPS):
+            fail(
+                f"torus must beat plain hier at 2048 ranks under the calibrated "
+                f"link ({wire} wire): torus {torus:.4f} ms > hier {hier:.4f} ms"
+            )
+
+    wire_stats = bench.get("wire_stats")
+    if not isinstance(wire_stats, list) or not wire_stats:
+        fail("missing or empty 'wire_stats' (real allreduce per-tier accounting)")
+    torus_rows = 0
+    for row in wire_stats:
+        if not isinstance(row, dict):
+            fail(f"malformed wire_stats row: {row!r}")
+        for key in (
+            "total_bytes",
+            "intranode_bytes",
+            "internode_bytes",
+            "interrack_bytes",
+            "max_bytes_per_rank",
+        ):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(f"wire_stats[{row.get('algo')!r}/{row.get('wire')!r}].{key}: {v!r}")
+        tiers = row["intranode_bytes"] + row["internode_bytes"] + row["interrack_bytes"]
+        if tiers != row["total_bytes"]:
+            fail(
+                f"per-tier bytes must partition the total for "
+                f"{row.get('algo')!r}/{row.get('wire')!r}: "
+                f"{tiers} != {row['total_bytes']}"
+            )
+        if row.get("algo") == "torus":
+            torus_rows += 1
+            if row["intranode_bytes"] < row["internode_bytes"]:
+                fail(
+                    f"torus must be intra-node dominant ({row.get('wire')!r} wire): "
+                    f"intranode {row['intranode_bytes']} < internode {row['internode_bytes']}"
+                )
+    if torus_rows < len(wires):
+        fail(f"expected a torus wire_stats row per wire, got {torus_rows}")
+
+    t_f16 = at_2048[("calibrated", "f16", "torus")]
+    h_f16 = at_2048[("calibrated", "f16", "hier")]
+    print(
+        f"check_bench: OK: fig2 @2048 calibrated f16 torus {t_f16:.4f} ms <= "
+        f"hier {h_f16:.4f} ms (grid {bench.get('torus_grid')!r}, link "
+        f"{bench.get('calib_alpha_us')} us / {bench.get('calib_beta_gbps')} GB/s "
+        f"from {bench.get('calib_source')!r}); torus per-tier accounting "
+        f"intra-dominant and exactly partitioned for {torus_rows} wire(s)"
+    )
+
+
+def main() -> None:
+    paths = sys.argv[1:] or ["BENCH_pipeline.json"]
+    for path in paths:
+        bench = load(path)
+        if "fig2" in os.path.basename(path):
+            check_fig2(bench)
+        else:
+            check_pipeline(bench)
 
 
 if __name__ == "__main__":
