@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-fig2 bench-check chaos-smoke artifacts clean
+.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-fig2 bench-check chaos-smoke chaos-soak artifacts clean
 
 verify: build test
 
@@ -47,10 +47,19 @@ bench-check:
 	python3 scripts/check_bench.py BENCH_pipeline.json BENCH_fig2.json
 
 # Fault-injection system tests only: the chaos grid (crash/stall/panic/
-# lane faults × depth × wire recover bitwise), plus the seeded random
-# fault-plan never-deadlock sweep. CHAOS_FULL=1 widens the random sweep.
+# lane faults × depth × wire × schedule recover bitwise), the elastic
+# fleet grid (drain/join/rebalance are bitwise routing no-ops), plus the
+# seeded random fault-plan and elastic-plan never-deadlock sweeps.
+# CHAOS_FULL=1 widens both random sweeps.
 chaos-smoke:
 	$(CARGO) test -q --test faults
+
+# Nightly chaos soak: the full-width seeded sweeps (12 fault seeds + 12
+# elastic seeds instead of the per-PR 4) run back to back. Wall-clock
+# heavy (every detection deadline and stall sleep is real time) but
+# almost CPU-idle, so it lives in a scheduled CI job, not the PR path.
+chaos-soak:
+	CHAOS_FULL=1 $(CARGO) test -q --test faults
 
 # AOT-lower the JAX/Pallas graphs to HLO text + manifest (PJRT path only).
 artifacts:

@@ -306,14 +306,17 @@ fn main() {
     // scripts/check_bench.py bounds the recovery overhead (faulted
     // elapsed / clean elapsed − 1).
     let fault_steps = if quick { 6 } else { 12 };
-    let fault_run = |spec: &str| {
+    let fault_run = |spec: &str, fleet: &str| {
         let mut cfg = bench_cfg();
         cfg.chunk_bytes = chunk_bytes;
         cfg.pipeline_depth = 2;
         cfg.total_steps = fault_steps;
         cfg.fault_spec = spec.into();
+        cfg.fleet_spec = fleet.into();
         // Short detection deadline: it is pure dead time in the recovery
         // cost, and the overhead gate compares against a short clean run.
+        // (This is the adaptive tracker's FLOOR; the bench steps are fast,
+        // so the effective deadline stays pinned to it.)
         cfg.fault_deadline_ms = 100;
         let mut t = Trainer::new(cfg, engine.clone()).unwrap();
         let t0 = Instant::now();
@@ -323,9 +326,9 @@ fn main() {
         t.flush_recovering().unwrap();
         (t0.elapsed().as_secs_f64(), t)
     };
-    let (clean_s, mut clean_t) = fault_run("");
+    let (clean_s, mut clean_t) = fault_run("", "");
     let crash_step = fault_steps / 2;
-    let (faulted_s, mut faulted_t) = fault_run(&format!("crash@{crash_step}:1"));
+    let (faulted_s, mut faulted_t) = fault_run(&format!("crash@{crash_step}:1"), "");
     let bitwise_equal = clean_t.params() == faulted_t.params()
         && clean_t.bn_state() == faulted_t.bn_state();
     let recovery_count = faulted_t.recovery_count();
@@ -342,6 +345,34 @@ fn main() {
         recovery_cost_s * 1e3
     );
     assert!(bitwise_equal, "crash recovery must be bitwise identical");
+
+    // ---- elastic fleet: scale-down + re-admission overhead ---------------
+    // Same config, no faults: drain one seat a third of the way in and
+    // admit it back at two thirds. Both transitions are pure routing
+    // (the drained thread idles alive), so the whole drain+join episode
+    // must cost less than ONE clean step-equivalent and finish bitwise
+    // identical — gated by scripts/check_bench.py.
+    let drain_step = (fault_steps / 3).max(1);
+    let join_step = (2 * fault_steps / 3).max(drain_step + 1);
+    let fleet_spec = format!("drain@{drain_step}:1;join@{join_step}");
+    let (elastic_s, mut elastic_t) = fault_run("", &fleet_spec);
+    let elastic_bitwise = clean_t.params() == elastic_t.params()
+        && clean_t.bn_state() == elastic_t.bn_state();
+    let reroutes = elastic_t.reroutes();
+    let elastic_overhead_s = elastic_s - clean_s;
+    let clean_step_s = clean_s / fault_steps as f64;
+    println!("\n== elastic fleet ({fleet_spec}, {reroutes} reroutes) ==");
+    println!(
+        "clean {clean_s:.3}s vs elastic {elastic_s:.3}s -> drain+join overhead {:.1} ms \
+         ({:.2} clean step-equivalents, bitwise_equal={elastic_bitwise})",
+        elastic_overhead_s * 1e3,
+        elastic_overhead_s / clean_step_s.max(1e-12)
+    );
+    for e in elastic_t.fleet_events() {
+        println!("  fleet: {}", e.to_json().to_string());
+    }
+    assert!(elastic_bitwise, "elastic membership changes must be bitwise no-ops");
+    assert!(reroutes >= 1, "the drain must move routing at least once");
 
     // ---- result files -----------------------------------------------------
     // A degenerate fit leaves NaNs; serialize those as null, not bare NaN.
@@ -415,6 +446,24 @@ fn main() {
                 ("overhead_frac", Json::Num(fault_overhead_frac)),
                 ("bitwise_equal", Json::Bool(bitwise_equal)),
                 ("surviving_workers", Json::Num(faulted_t.phys_workers_alive() as f64)),
+            ]),
+        ),
+        // Elastic-fleet section: gated by scripts/check_bench.py (at
+        // least one reroute, bitwise, and the drain+join episode cheaper
+        // than one clean step-equivalent).
+        (
+            "elastic",
+            Json::obj(vec![
+                ("steps", Json::Num(fault_steps as f64)),
+                ("clean_elapsed_s", Json::Num(clean_s)),
+                ("elastic_elapsed_s", Json::Num(elastic_s)),
+                ("overhead_s", Json::Num(elastic_overhead_s)),
+                ("reroutes", Json::Num(reroutes as f64)),
+                ("bitwise_equal", Json::Bool(elastic_bitwise)),
+                (
+                    "fleet_events",
+                    Json::Arr(elastic_t.fleet_events().iter().map(|e| e.to_json()).collect()),
+                ),
             ]),
         ),
         ("measured_hidden_frac", Json::Num(measured.hidden_frac)),

@@ -219,6 +219,68 @@ impl Checkpoint {
             ef_err_sq,
         })
     }
+
+    /// Save into the rotation layout: `dir/ckpt-<step, zero-padded>.ckpt`,
+    /// keeping the newest `keep` checkpoints. The prune runs only AFTER
+    /// the fresh write loads back clean (full CRC verify) — a failed or
+    /// torn write therefore never costs an older restore point — and the
+    /// just-verified file is never itself a prune candidate (`keep` is
+    /// clamped to ≥ 1), so the directory always ends with at least one
+    /// verified checkpoint. Returns the written path.
+    pub fn save_retained(&self, dir: &Path, keep: usize) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        // Zero-padded step => lexicographic name order == step order.
+        let path = dir.join(format!("ckpt-{:012}.ckpt", self.step));
+        self.save(&path)?;
+        Checkpoint::load(&path)
+            .with_context(|| format!("verifying fresh checkpoint {path:?} before pruning"))?;
+        for stale in Self::rotation_files(dir)?.into_iter().skip(keep.max(1)) {
+            std::fs::remove_file(&stale).with_context(|| format!("pruning {stale:?}"))?;
+        }
+        Ok(path)
+    }
+
+    /// Load the newest LOADABLE checkpoint from a rotation directory:
+    /// candidates are tried newest-first, and one that fails its CRC (or
+    /// is otherwise unreadable) is skipped, falling back to the next — a
+    /// torn or bit-rotted newest file costs one snapshot interval, not
+    /// the run.
+    pub fn load_latest(dir: &Path) -> Result<Checkpoint> {
+        let files = Self::rotation_files(dir)?;
+        anyhow::ensure!(!files.is_empty(), "no checkpoints in {dir:?}");
+        let mut first_err = None;
+        for path in &files {
+            match Checkpoint::load(path) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    eprintln!("checkpoint {path:?} unloadable, falling back: {e:#}");
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        Err(first_err.expect("at least one candidate").context(format!(
+            "none of the {} checkpoint(s) in {dir:?} loaded clean",
+            files.len()
+        )))
+    }
+
+    /// Rotation-layout files in `dir`, newest first (names embed the
+    /// zero-padded step, so name order is step order).
+    fn rotation_files(dir: &Path) -> Result<Vec<std::path::PathBuf>> {
+        let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("listing {dir:?}"))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt-") && n.ends_with(".ckpt"))
+            })
+            .collect();
+        files.sort();
+        files.reverse();
+        Ok(files)
+    }
 }
 
 #[cfg(test)]
@@ -364,6 +426,50 @@ mod tests {
         sample().save(&path).unwrap();
         assert!(path.exists());
         assert!(!path.with_extension("tmp").exists(), "tmp file must be renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_prunes_only_after_verify_and_keeps_newest() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_rot");
+        std::fs::remove_dir_all(&dir).ok();
+        for step in [3usize, 7, 11, 15] {
+            let mut c = sample();
+            c.step = step;
+            c.save_retained(&dir, 2).unwrap();
+        }
+        let files = Checkpoint::rotation_files(&dir).unwrap();
+        assert_eq!(files.len(), 2, "keep=2 must leave exactly two files");
+        assert_eq!(Checkpoint::load(&files[0]).unwrap().step, 15);
+        assert_eq!(Checkpoint::load(&files[1]).unwrap().step, 11);
+        // keep=0 is clamped: the just-verified file survives.
+        let mut c = sample();
+        c.step = 20;
+        c.save_retained(&dir, 0).unwrap();
+        assert_eq!(Checkpoint::rotation_files(&dir).unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_fallback");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = sample();
+        c.step = 5;
+        c.save_retained(&dir, 3).unwrap();
+        c.step = 9;
+        let newest = c.save_retained(&dir, 3).unwrap();
+        // Bit-rot deep in the newest payload: same length, CRC catches it.
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let n = bytes.len();
+        bytes[n - 64] ^= 0x04;
+        std::fs::write(&newest, &bytes).unwrap();
+        let restored = Checkpoint::load_latest(&dir).unwrap();
+        assert_eq!(restored.step, 5, "must fall back past the corrupt newest file");
+        // An empty/corrupt-only directory surfaces a real error.
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Checkpoint::load_latest(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -180,6 +180,29 @@ pub struct RunConfig {
     /// than this multiple of the rolling median is logged as a
     /// `FaultEvent::Straggler` (detection only; never triggers recovery).
     pub straggler_factor: f64,
+    /// Elastic membership schedule: `;`-separated `kind@step[:slot]`
+    /// directives — `join@S`, `drain@S:SLOT`, `penalize@S:SLOT` (see
+    /// `fleet::ElasticPlan::parse`), or `seed:N` to draw N random events
+    /// from `fault_seed`. Empty = fixed fleet.
+    pub fleet_spec: String,
+    /// Straggler REBALANCING (routing around a sustained-slow seat with
+    /// hysteresis + cooldown). `--no-rebalance` keeps detection-only
+    /// behavior: verdicts are logged but routing never moves.
+    pub rebalance: bool,
+    /// TRUE (default): the supervision deadline adapts — `deadline_factor`
+    /// × the rolling-median step wall-time, floored at
+    /// `fault_deadline_ms`. FALSE (an explicit `--fault-deadline-ms` or
+    /// JSON `fault_deadline_ms`): that value is used verbatim.
+    pub fault_deadline_auto: bool,
+    /// Adaptive-deadline multiplier over the rolling-median step
+    /// wall-time (must be > 1; only meaningful under
+    /// `fault_deadline_auto`).
+    pub deadline_factor: f64,
+    /// On-disk checkpoint retention for `--save-checkpoint`: keep the
+    /// newest N verified checkpoints in the target directory, pruning
+    /// older ones AFTER the new write passes CRC verification. 0 = keep
+    /// everything (the legacy single-file behavior).
+    pub ckpt_keep: usize,
 }
 
 impl Default for RunConfig {
@@ -227,6 +250,11 @@ impl Default for RunConfig {
             fault_deadline_ms: 30_000,
             ckpt_every: 1,
             straggler_factor: 4.0,
+            fleet_spec: String::new(),
+            rebalance: true,
+            fault_deadline_auto: true,
+            deadline_factor: 4.0,
+            ckpt_keep: 0,
         }
     }
 }
@@ -406,9 +434,20 @@ impl RunConfig {
         if args.flag("no-recover") {
             c.recover = false;
         }
+        // An EXPLICIT deadline pins the supervision deadline verbatim;
+        // otherwise it stays the adaptive tracker's floor.
+        if args.get("fault-deadline-ms").is_some() {
+            c.fault_deadline_auto = false;
+        }
         c.fault_deadline_ms = args.get_u64("fault-deadline-ms", c.fault_deadline_ms)?;
         c.ckpt_every = args.get_usize("ckpt-every", c.ckpt_every)?;
         c.straggler_factor = args.get_f64("straggler-factor", c.straggler_factor)?;
+        c.fleet_spec = args.get_or("fleet", &c.fleet_spec).to_string();
+        if args.flag("no-rebalance") {
+            c.rebalance = false;
+        }
+        c.deadline_factor = args.get_f64("deadline-factor", c.deadline_factor)?;
+        c.ckpt_keep = args.get_usize("ckpt-keep", c.ckpt_keep)?;
         c.validate()?;
         Ok(c)
     }
@@ -474,6 +513,16 @@ impl RunConfig {
                 .unwrap_or(d.fault_deadline_ms),
             ckpt_every: get_usize("ckpt_every", d.ckpt_every),
             straggler_factor: get_f64("straggler_factor", d.straggler_factor),
+            fleet_spec: get_str("fleet_spec", &d.fleet_spec),
+            rebalance: get_bool("rebalance", d.rebalance),
+            // An explicit JSON deadline is an override, same as the CLI
+            // flag (a `fault_deadline_auto` key can force either way).
+            fault_deadline_auto: get_bool(
+                "fault_deadline_auto",
+                j.get("fault_deadline_ms").is_none(),
+            ),
+            deadline_factor: get_f64("deadline_factor", d.deadline_factor),
+            ckpt_keep: get_usize("ckpt_keep", d.ckpt_keep),
         };
         c.validate()?;
         Ok(c)
@@ -511,10 +560,26 @@ impl RunConfig {
             self.fault_deadline_ms >= 10,
             "fault_deadline_ms must be >= 10 (shorter deadlines misfire on scheduling jitter)"
         );
+        anyhow::ensure!(
+            self.deadline_factor > 1.0,
+            "deadline_factor must be > 1 (it multiplies the median step wall-time)"
+        );
         if !self.fault_spec.is_empty() {
             // Parse eagerly so a typo'd schedule fails at config load, not
             // mid-run at the injection step.
             crate::faults::FaultPlan::parse(&self.fault_spec, self.fault_seed)?;
+        }
+        if !self.fleet_spec.is_empty() {
+            // Same eager-parse rule for the elastic plan; `seed:N` only
+            // needs its count to be an integer.
+            if let Some(n) = self.fleet_spec.strip_prefix("seed:") {
+                anyhow::ensure!(
+                    n.trim().parse::<usize>().is_ok(),
+                    "--fleet seed:N needs an integer count, got '{n}'"
+                );
+            } else {
+                crate::fleet::ElasticPlan::parse(&self.fleet_spec, self.fault_seed)?;
+            }
         }
         self.fence_mode()?;
         self.algorithm()?;
@@ -831,6 +896,65 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"fault_spec": "meteor@1:0"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"straggler_factor": 1.0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"fault_deadline_ms": 5}"#).is_err());
+    }
+
+    #[test]
+    fn elastic_fleet_knobs_round_trip() {
+        let d = RunConfig::default();
+        assert!(d.fleet_spec.is_empty(), "fixed fleet by default");
+        assert!(d.rebalance, "rebalancing defaults on");
+        assert!(d.fault_deadline_auto, "deadline adapts by default");
+        assert_eq!(d.ckpt_keep, 0, "retention off by default");
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--fleet",
+            "drain@3:1;join@5;penalize@2:0",
+            "--no-rebalance",
+            "--deadline-factor",
+            "6",
+            "--ckpt-keep",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(c.fleet_spec, "drain@3:1;join@5;penalize@2:0");
+        assert!(!c.rebalance);
+        assert!((c.deadline_factor - 6.0).abs() < 1e-12);
+        assert_eq!(c.ckpt_keep, 3);
+        // The seeded form validates without enumerating events.
+        let c = RunConfig::from_args(&args(&["train", "--fleet", "seed:4"])).unwrap();
+        assert_eq!(c.fleet_spec, "seed:4");
+        let c = RunConfig::from_json(
+            r#"{"fleet_spec": "join@2", "rebalance": false, "ckpt_keep": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fleet_spec, "join@2");
+        assert!(!c.rebalance);
+        assert_eq!(c.ckpt_keep, 2);
+        // Malformed elastic specs fail at config load.
+        assert!(RunConfig::from_json(r#"{"fleet_spec": "evaporate@1:0"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"fleet_spec": "seed:lots"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"deadline_factor": 1.0}"#).is_err());
+    }
+
+    #[test]
+    fn explicit_deadline_disables_the_adaptive_tracker() {
+        // CLI: giving the flag at all pins the deadline verbatim.
+        let c = RunConfig::from_args(&args(&["train", "--fault-deadline-ms", "300"])).unwrap();
+        assert!(!c.fault_deadline_auto);
+        assert_eq!(c.fault_deadline_ms, 300);
+        // No flag: adaptive stays on, the default is the floor.
+        let c = RunConfig::from_args(&args(&["train"])).unwrap();
+        assert!(c.fault_deadline_auto);
+        // JSON key behaves like the flag...
+        let c = RunConfig::from_json(r#"{"fault_deadline_ms": 1000}"#).unwrap();
+        assert!(!c.fault_deadline_auto);
+        // ...unless an explicit `fault_deadline_auto` forces it back on
+        // (the value then serves as the adaptive floor).
+        let c = RunConfig::from_json(
+            r#"{"fault_deadline_ms": 1000, "fault_deadline_auto": true}"#,
+        )
+        .unwrap();
+        assert!(c.fault_deadline_auto);
     }
 
     #[test]

@@ -44,7 +44,8 @@ use crate::bucket::BucketPlan;
 use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
 use crate::config::{FenceMode, RunConfig};
 use crate::data::{make_batch, Batch, DataConfig, Shard, Split, Synthetic};
-use crate::faults::{FaultEvent, FaultPlan, Heartbeats, StragglerTracker};
+use crate::faults::{DeadlineTracker, FaultEvent, FaultPlan, Heartbeats, StragglerTracker};
+use crate::fleet::{ElasticPlan, FleetController, FleetEvent};
 use crate::init;
 use crate::metrics::{StepBreakdown, Throughput, Timer};
 use crate::mlperf::{tags, MlperfLogger};
@@ -53,7 +54,7 @@ use crate::runtime::{Engine, GradVariant, UpdateRule};
 use crate::schedule::LrSchedule;
 use crate::util::codec;
 use crate::util::json::Json;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::sync::Arc;
 
 /// In-process recoveries one `step()`/`flush_recovering()` call will
@@ -161,6 +162,13 @@ pub struct TrainReport {
     /// Total wall-clock spent recovering: detection → caught back up to
     /// the step that faulted (teardown + restore + replay).
     pub recovery_cost_s: f64,
+    /// Typed elastic-fleet timeline: joins, drains, losses, rebalance
+    /// penalties and restores, in occurrence order — the membership
+    /// history a chaos-soak artifact replays its routing from.
+    pub fleet_events: Vec<FleetEvent>,
+    /// Routing-table rewrites that moved at least one logical worker
+    /// (scale-down, admission, rebalance — not no-op resets).
+    pub reroute_count: usize,
 }
 
 impl TrainReport {
@@ -264,6 +272,11 @@ impl TrainReport {
             ),
             ("recovery_count", Json::Num(self.recovery_count as f64)),
             ("recovery_cost_s", Json::Num(self.recovery_cost_s)),
+            (
+                "fleet_events",
+                Json::Arr(self.fleet_events.iter().map(FleetEvent::to_json).collect()),
+            ),
+            ("reroute_count", Json::Num(self.reroute_count as f64)),
         ])
     }
 }
@@ -398,6 +411,26 @@ pub struct Trainer {
     recovery_count: usize,
     recovery_cost_s: f64,
 
+    // ---- elastic fleet (fleet module) ----------------------------------
+    /// The logical→physical routing authority: seat states, the routing
+    /// table every pipelined dispatch reads, the rebalancer and the typed
+    /// membership timeline. Mirrors the pool's thread seats 1:1.
+    fleet: FleetController,
+    /// Scheduled membership changes (`--fleet`): drains, joins and
+    /// deterministic rebalance penalties, one-shot per step boundary.
+    elastic_plan: Option<ElasticPlan>,
+    /// Adaptive supervision deadline: factor × rolling-median step
+    /// wall-time, floored — or the explicit `--fault-deadline-ms`
+    /// override, verbatim.
+    deadline: DeadlineTracker,
+    /// Seats whose threads were CONFIRMED dead at the most recent loss
+    /// site (set by the collect loop, consumed by `step()`'s recovery
+    /// fork to choose live scale-down over full teardown).
+    lost_slots: Vec<usize>,
+    /// End-of-step reports the SURVIVING seats still owed when the loss
+    /// was declared — the exact count `live_scale_down`'s quiesce drains.
+    stale_reports: usize,
+
     pub breakdown: StepBreakdown,
     wire_totals: WireStats,
     images_seen: u64,
@@ -481,6 +514,30 @@ impl Trainer {
             None
         };
         let phys_alive = workers;
+        // Elastic membership plan: `--fleet seed:N` draws N events from the
+        // fault-seed stream (so one `--fault-seed` keys the whole chaos
+        // run); any other non-empty spec is an explicit schedule.
+        let elastic_plan = if cfg.fleet_spec.is_empty() {
+            None
+        } else if let Some(n) = cfg.fleet_spec.strip_prefix("seed:") {
+            let count: usize = n
+                .trim()
+                .parse()
+                .with_context(|| format!("--fleet seed:N needs an integer, got '{n}'"))?;
+            Some(ElasticPlan::generate(cfg.fault_seed, cfg.total_steps, workers, count))
+        } else {
+            Some(ElasticPlan::parse(&cfg.fleet_spec, cfg.fault_seed)?)
+        };
+        // An EXPLICIT `--fault-deadline-ms` is an override (tests pin tiny
+        // deadlines); otherwise the configured value is the adaptive
+        // tracker's floor and the deadline follows the fleet's measured
+        // step cadence.
+        let deadline = DeadlineTracker::new(
+            cfg.deadline_factor,
+            cfg.fault_deadline_ms,
+            (!cfg.fault_deadline_auto).then_some(cfg.fault_deadline_ms),
+        );
+        let fleet = FleetController::new(workers, workers, cfg.rebalance);
         Ok(Trainer {
             cfg,
             engine,
@@ -535,6 +592,11 @@ impl Trainer {
             straggler: StragglerTracker::default(),
             recovery_count: 0,
             recovery_cost_s: 0.0,
+            fleet,
+            elastic_plan,
+            deadline,
+            lost_slots: Vec::new(),
+            stale_reports: 0,
             breakdown: StepBreakdown::default(),
             wire_totals: WireStats::default(),
             images_seen: 0,
@@ -658,6 +720,23 @@ impl Trainer {
         self.phys_alive
     }
 
+    /// Typed elastic-fleet timeline so far: joins, drains, losses,
+    /// rebalance penalties and restores, in occurrence order.
+    pub fn fleet_events(&self) -> &[FleetEvent] {
+        self.fleet.events()
+    }
+
+    /// Routing-table rewrites that moved at least one logical worker.
+    pub fn reroutes(&self) -> usize {
+        self.fleet.reroutes()
+    }
+
+    /// The supervision deadline currently in force (adaptive, or the
+    /// explicit `--fault-deadline-ms` override).
+    pub fn effective_deadline_ms(&self) -> u64 {
+        self.deadline.effective_ms()
+    }
+
     pub fn epoch(&self) -> f64 {
         self.images_seen as f64 / self.cfg.train_size as f64
     }
@@ -726,8 +805,13 @@ impl Trainer {
         let mut recovery_t0: Option<std::time::Instant> = None;
         let mut restored_from = 0usize;
         loop {
+            let attempt_t0 = std::time::Instant::now();
             match self.step_attempt() {
                 Ok(out) => {
+                    // Feed the adaptive supervision deadline from HEALTHY
+                    // step wall-times only (a faulted attempt's duration is
+                    // detection latency, not cadence).
+                    self.deadline.observe_step(attempt_t0.elapsed().as_secs_f64());
                     // Replaying restored steps: keep going until the step
                     // this call was asked for has run.
                     if self.step_idx <= target {
@@ -749,16 +833,44 @@ impl Trainer {
                 }
                 Err(e) => {
                     recovery_t0.get_or_insert_with(std::time::Instant::now);
-                    // Poison + join the pool FIRST, on every error path —
-                    // even when recovery is off, so Drop never blocks on a
-                    // wedged lane.
-                    self.fault_teardown();
+                    // LIVE scale-down is sound only when every lost seat's
+                    // thread has provably exited (`slot_finished`): the
+                    // survivors get quiesced and re-routed without a pool
+                    // respawn. A wedged-but-alive thread, a lane loss, a
+                    // panic (no seats recorded) or a disabled recovery all
+                    // fall through to the join-everything teardown.
+                    let lost = std::mem::take(&mut self.lost_slots);
+                    let live_ok = self.pipeline
+                        && self.cfg.recover
+                        && recoveries < MAX_RECOVERIES
+                        && !lost.is_empty()
+                        && self.lanes_lost == 0
+                        && self.last_snapshot.is_some()
+                        && self
+                            .pool
+                            .as_ref()
+                            .is_some_and(|p| lost.iter().all(|&s| p.slot_finished(s)));
+                    let live = live_ok && self.live_scale_down(&lost).is_ok();
+                    if !live {
+                        // Poison + join the pool FIRST, on every error path
+                        // — even when recovery is off, so Drop never blocks
+                        // on a wedged lane.
+                        self.fault_teardown();
+                    }
                     if !(self.pipeline && self.cfg.recover) || recoveries >= MAX_RECOVERIES {
                         return Err(e);
                     }
                     let Some(snap_step) = self.restore_snapshot() else {
                         return Err(e);
                     };
+                    if live {
+                        // The fresh fence was seeded at the FAILED step;
+                        // re-seed it at the replay step so the restored
+                        // params admit the first replayed generation.
+                        if let Some(f) = &self.fence {
+                            f.reset(snap_step as u64);
+                        }
+                    }
                     recoveries += 1;
                     self.recovery_count += 1;
                     restored_from = snap_step;
@@ -1330,6 +1442,8 @@ impl Trainer {
             fault_events: self.fault_events.clone(),
             recovery_count: self.recovery_count,
             recovery_cost_s: self.recovery_cost_s,
+            fleet_events: self.fleet.events().to_vec(),
+            reroute_count: self.fleet.reroutes(),
         })
     }
 }

@@ -44,6 +44,7 @@
 use super::worker_pool::{LaneJob, LaneMsg, RawBuf, WaitOutcome, WorkerJob};
 use super::Trainer;
 use crate::faults::{FaultEvent, FaultKind, Heartbeats};
+use crate::fleet::{ElasticKind, FleetAction, FleetEvent};
 use crate::overlap::MeasuredPipeline;
 use crate::runtime::{GradVariant, UpdateRule};
 use anyhow::Result;
@@ -101,8 +102,14 @@ impl Trainer {
         // PHYSICAL grad threads: the survivors. The run's LOGICAL worker
         // count (`cfg.workers`) fixes the shards, buffers and ledger
         // targets — i.e. the numerics — forever; after a loss the leader
-        // just routes several logical workers onto each surviving thread.
+        // just routes several logical workers onto each surviving thread
+        // (the fleet controller's table).
         let phys = self.phys_alive.min(self.cfg.workers).max(1);
+        // The fleet's seat table mirrors the pool's thread seats 1:1. A
+        // fresh spawn (first step, or post-teardown respawn) starts from
+        // `phys` all-active seats; everything the controller learned
+        // about the OLD pool's seats died with those threads.
+        self.fleet.reset_seats(phys);
         let run_t0 = std::time::Instant::now();
         let nb = self.bucket_spans.len();
         self.run_t0 = Some(run_t0);
@@ -117,11 +124,16 @@ impl Trainer {
             self.engine.manifest().layers.len(),
             self.step_idx as u64,
         )));
-        let hb = std::sync::Arc::new(Heartbeats::new(phys + lanes));
+        // Heartbeat cells are pre-sized for the CAP, not the current pool:
+        // grad seats can grow up to `cfg.workers` via join admission, and
+        // lane cells sit above that cap so they never collide with a seat
+        // that does not exist yet.
+        let hb = std::sync::Arc::new(Heartbeats::new(self.cfg.workers + lanes));
         self.heartbeats = Some(hb.clone());
         self.pool = Some(super::worker_pool::WorkerPool::spawn(
             phys,
             lanes,
+            self.cfg.workers,
             threads_per_lane,
             self.algo,
             self.precision,
@@ -170,6 +182,160 @@ impl Trainer {
         self.depth() == 2 && gen % 2 == 1
     }
 
+    /// Apply the step boundary's fleet transitions — cooldown expiries,
+    /// then the elastic plan's scheduled drains/joins/penalties — before
+    /// generation `step` dispatches. Routing changes land here and only
+    /// here (plus the failure path), so a step always runs under one
+    /// routing table. Every change is bitwise-neutral by construction:
+    /// logical shards, ledger targets and reduction order never move.
+    fn apply_fleet_boundary(&mut self, step: usize) -> Result<()> {
+        self.fleet.tick_cooldowns(step);
+        let kinds = match self.elastic_plan.as_mut() {
+            Some(p) => p.take_step(step),
+            None => Vec::new(),
+        };
+        for kind in kinds {
+            let before = self.fleet.events().len();
+            let t0 = Instant::now();
+            match kind {
+                ElasticKind::Drain { slot } => {
+                    self.fleet.drain(step, slot);
+                }
+                ElasticKind::Penalize { slot } => {
+                    self.fleet.penalize(step, slot);
+                }
+                ElasticKind::Join => self.apply_join(step)?,
+            }
+            if self.fleet.events().len() > before {
+                self.fleet.add_cost_to_last(t0.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit one replacement physical worker at a step boundary. The
+    /// common case is LIVE: a drained seat re-activates (its thread never
+    /// died), or a replacement thread is spawned into a dead seat / one
+    /// new seat, and routing hands logical workers back — the pool, the
+    /// ledgers and the in-flight tail are untouched. When comm lanes were
+    /// lost earlier (`lanes_lost > 0`) the join instead takes the rebuild
+    /// path: lane budgets are sized at spawn, so re-expanding them means
+    /// finishing the in-flight tail and respawning the pool one grad seat
+    /// wider with the full lane complement.
+    ///
+    /// In-process, "warming from the in-memory snapshot" is the shared
+    /// address space itself — an admitted thread reads the same master
+    /// params every survivor does, and admission happens only at a step
+    /// boundary where that state is exactly the snapshot state.
+    fn apply_join(&mut self, step: usize) -> Result<()> {
+        if self.lanes_lost > 0 {
+            // Rebuild wider: retire the tail, drop the pool (joining every
+            // thread), then respawn with the lane budget restored and one
+            // more grad seat.
+            self.finish_inflight()?;
+            self.pool = None;
+            self.ready = None;
+            self.reduced = None;
+            self.fence = None;
+            self.heartbeats = None;
+            self.run_t0 = None;
+            self.last_pipeline = None;
+            self.lanes_lost = 0;
+            self.phys_alive = (self.phys_alive + 1).min(self.cfg.workers);
+            let phys = self.phys_alive.max(1);
+            let moved = self.fleet.reset_seats(phys);
+            self.fleet.push_event(FleetEvent {
+                step,
+                slot: phys - 1,
+                action: FleetAction::Join,
+                moved,
+                cost_ms: 0.0,
+            });
+            self.ensure_pool();
+            return Ok(());
+        }
+        let Some((slot, needs_spawn)) = self.fleet.admit(step) else {
+            return Ok(()); // fleet already at full strength
+        };
+        if needs_spawn {
+            self.pool.as_mut().expect("pool ensured").admit_slot(slot)?;
+        }
+        self.phys_alive = (self.phys_alive + 1).min(self.cfg.workers);
+        Ok(())
+    }
+
+    /// Live scale-down after a confirmed-dead grad thread: re-route the
+    /// lost seat's logical workers to the survivors WITHOUT tearing down
+    /// and re-spawning the pool. Only sound when every lost seat's thread
+    /// has provably exited (`slot_finished`) — the caller checks; a
+    /// merely-wedged thread could wake mid-replay and must go through
+    /// [`fault_teardown`]'s join-everything path instead.
+    ///
+    /// Procedure: poison the failed generation's ledgers and release its
+    /// fence waiters; QUIESCE — every logical worker dispatched to a
+    /// surviving thread still owes exactly one end-of-step report (the
+    /// worker epilogue always sends, even on panic), and receiving them
+    /// proves those threads are idle again, because the report send is
+    /// the thread's last action for a job. Lanes are provably idle
+    /// already: the dead seat published nothing, so no bucket of the
+    /// failed generation ever reached its ready target and no lane took
+    /// a view. Then replace the ledgers and fence with fresh instances —
+    /// the replay re-arms the SAME generation number, and a zombie
+    /// publish through a stale `Arc` must land in the old, forever-
+    /// poisoned instance — and mark the seats lost so routing moves.
+    ///
+    /// [`fault_teardown`]: Trainer::fault_teardown
+    pub(super) fn live_scale_down(&mut self, lost_slots: &[usize]) -> Result<()> {
+        let t0 = Instant::now();
+        if let Some(l) = &self.ready {
+            l.poison_all();
+        }
+        if let Some(l) = &self.reduced {
+            l.poison_all();
+        }
+        if let Some(f) = &self.fence {
+            f.publish_all(u64::MAX);
+        }
+        let quiesce_deadline = Duration::from_millis(self.deadline.effective_ms().max(1_000));
+        let quiesce_t0 = Instant::now();
+        let mut outstanding = self.stale_reports;
+        while outstanding > 0 {
+            let pool = self.pool.as_ref().expect("live scale-down with a live pool");
+            match pool.recv_worker_timeout(SUPERVISE_SLICE) {
+                Some(_) => outstanding -= 1,
+                None if quiesce_t0.elapsed() < quiesce_deadline => continue,
+                None => anyhow::bail!(
+                    "quiesce timed out with {outstanding} stale report(s) outstanding"
+                ),
+            }
+        }
+        self.stale_reports = 0;
+        self.inflight = None;
+        self.pending_lane_msgs.clear();
+        self.last_pipeline = None;
+        let run_t0 = self.run_t0.expect("live scale-down with a live pool");
+        let nb = self.bucket_spans.len();
+        self.ready = Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(
+            nb,
+            self.cfg.workers,
+            run_t0,
+        )));
+        self.reduced =
+            Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(nb, 1, run_t0)));
+        // Seeded at the CURRENT step; the caller's snapshot restore
+        // re-seeds it at the replay step right after.
+        self.fence = Some(std::sync::Arc::new(super::worker_pool::ParamFence::new(
+            self.engine.manifest().layers.len(),
+            self.step_idx as u64,
+        )));
+        let step = self.step_idx;
+        for &slot in lost_slots {
+            self.fleet.mark_lost(step, slot);
+        }
+        self.fleet.add_cost_to_last(t0.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
     /// One pipelined step: returns (Σ loss, Σ correct) over workers, like
     /// the sequential grad phase does. At depth 2 the step's own comm/
     /// update tail is left in flight (finished inside the NEXT step or by
@@ -182,6 +348,12 @@ impl Trainer {
         accum_inv: f32,
     ) -> Result<(f32, f32)> {
         self.ensure_pool();
+        self.lost_slots.clear();
+        self.stale_reports = 0;
+        // Step-boundary fleet transitions (drains, joins, penalties,
+        // cooldown expiries) land before anything of this generation is
+        // armed — the whole step then runs under one routing table.
+        self.apply_fleet_boundary(self.step_idx)?;
         let nb = self.bucket_spans.len();
         let workers = self.cfg.workers;
         let gen = self.step_idx as u64;
@@ -257,17 +429,18 @@ impl Trainer {
         };
 
         // ---- dispatch: one job per LOGICAL grad worker, one per lane ---
-        // Jobs route onto the surviving physical threads (`w % phys`): a
-        // full-strength pool gets the identity routing, a post-recovery
-        // pool serializes several logical workers per thread — same
-        // shards, same buffers, same publishes, same bits.
+        // Jobs route onto serving physical seats through the fleet
+        // controller's table: a full-strength fleet gets the identity
+        // routing (`w % phys`), a shrunken or rebalanced one serializes
+        // several logical workers per thread — same shards, same buffers,
+        // same publishes, same bits.
+        let route: Vec<usize> = (0..workers).map(|w| self.fleet.slot_for(w)).collect();
         let dispatch_abs_s = run_t0.elapsed().as_secs_f64();
         let pool = self.pool.as_ref().expect("pool just ensured");
-        let phys = pool.phys_workers();
         debug_assert_eq!(lanes, pool.lanes(), "lane split drifted from the live pool");
         for w in 0..workers {
             pool.send_worker(
-                w % phys,
+                route[w],
                 WorkerJob {
                     gen,
                     worker: w,
@@ -333,10 +506,12 @@ impl Trainer {
         // early in the loop a healthy worker may still be fence-blocked
         // behind a long previous tail with its last stamp minutes old;
         // (b) alone is not enough for the symmetric reason.
-        let deadline = Duration::from_millis(self.cfg.fault_deadline_ms);
+        let deadline_ms = self.deadline.effective_ms();
+        let deadline = Duration::from_millis(deadline_ms);
         let supervise = self.cfg.supervise;
         let collect_t0 = Instant::now();
         let mut worker_results: Vec<Option<(f32, f32)>> = vec![None; workers];
+        let mut arrival_s: Vec<f64> = vec![0.0; workers];
         let mut got = 0usize;
         while got < workers {
             let pool = self.pool.as_ref().expect("pool");
@@ -350,13 +525,13 @@ impl Trainer {
                     let lost: Vec<usize> = (0..workers)
                         .filter(|&w| {
                             worker_results[w].is_none()
-                                && hb.stale(w % phys, now_ms, self.cfg.fault_deadline_ms)
+                                && hb.stale(route[w], now_ms, deadline_ms)
                         })
                         .collect();
                     if lost.is_empty() {
                         continue; // starved but heartbeats are fresh: slow ≠ dead
                     }
-                    let mut dead_threads: Vec<usize> = lost.iter().map(|&w| w % phys).collect();
+                    let mut dead_threads: Vec<usize> = lost.iter().map(|&w| route[w]).collect();
                     dead_threads.sort_unstable();
                     dead_threads.dedup();
                     let detect_ms = collect_t0.elapsed().as_millis() as u64;
@@ -366,10 +541,19 @@ impl Trainer {
                         detect_ms,
                     });
                     self.phys_alive = self.phys_alive.saturating_sub(dead_threads.len()).max(1);
+                    // Bookkeeping for the caller's LIVE scale-down path:
+                    // which seats died, and how many reports the surviving
+                    // threads still owe for this generation (the quiesce
+                    // drains exactly that many before the replay re-arms).
+                    self.stale_reports = (0..workers)
+                        .filter(|&w| {
+                            worker_results[w].is_none() && !dead_threads.contains(&route[w])
+                        })
+                        .count();
+                    self.lost_slots = dead_threads;
                     first_err = Some(anyhow::anyhow!(
-                        "worker(s) {lost:?} lost at step {step}: no heartbeat for {} ms \
-                         ({} surviving grad thread(s))",
-                        self.cfg.fault_deadline_ms,
+                        "worker(s) {lost:?} lost at step {step}: no heartbeat for \
+                         {deadline_ms} ms ({} surviving grad thread(s))",
                         self.phys_alive,
                     ));
                     break;
@@ -390,6 +574,7 @@ impl Trainer {
                 }
             }
             self.ef_err_sq += msg.ef_err_sq;
+            arrival_s[msg.worker] = collect_t0.elapsed().as_secs_f64();
             worker_results[msg.worker] = Some((msg.loss, msg.correct));
             got += 1;
         }
@@ -401,6 +586,23 @@ impl Trainer {
             // thread and joins the pool — before recovering or surfacing
             // the error; nothing here may block on the broken generation.
             return Err(e);
+        }
+
+        // ---- straggler rebalance feed ----------------------------------
+        // Per-SEAT grad lateness: the latest report arrival among the
+        // logical workers each seat served this step. (Bucket durations
+        // won't do — those attribute to comm lanes.) The controller's
+        // hysteresis + cooldown turn sustained lateness into a routing
+        // penalty at a later boundary; verdicts move routing only, never
+        // numerics.
+        {
+            let mut per_slot: std::collections::BTreeMap<usize, f64> = Default::default();
+            for w in 0..workers {
+                let e = per_slot.entry(route[w]).or_insert(0.0);
+                *e = e.max(arrival_s[w]);
+            }
+            let lat: Vec<(usize, f64)> = per_slot.into_iter().collect();
+            self.fleet.observe_latencies(step, &lat, self.cfg.straggler_factor);
         }
 
         // ---- park this step's tail -------------------------------------
@@ -444,7 +646,6 @@ impl Trainer {
         let reduced = self.reduced.as_ref().expect("inflight implies pool").clone();
         let fence = self.fence.as_ref().expect("inflight implies pool").clone();
         let hb = self.heartbeats.as_ref().expect("inflight implies pool").clone();
-        let phys = self.pool.as_ref().expect("inflight implies pool").phys_workers();
         let lanes = self.pool.as_ref().expect("inflight implies pool").lanes();
         let run_t0 = self.run_t0.expect("inflight implies pool");
         let entry_abs_s = run_t0.elapsed().as_secs_f64();
@@ -466,8 +667,9 @@ impl Trainer {
         } else {
             None
         };
+        let deadline_ms = self.deadline.effective_ms();
         let deadline = if self.cfg.supervise {
-            Some(Duration::from_millis(self.cfg.fault_deadline_ms))
+            Some(Duration::from_millis(deadline_ms))
         } else {
             None
         };
@@ -517,7 +719,11 @@ impl Trainer {
                     WaitOutcome::TimedOut => {
                         let lane = i % lanes.max(1);
                         let now_ms = run_t0.elapsed().as_millis() as u64;
-                        if !hb.stale(phys + lane, now_ms, self.cfg.fault_deadline_ms) {
+                        // Lane cells sit ABOVE the grad-seat cap
+                        // (`cfg.workers`), not above the live seat count —
+                        // seats grow via join admission, lane cells must
+                        // never collide.
+                        if !hb.stale(self.cfg.workers + lane, now_ms, deadline_ms) {
                             continue; // alive, just slow: wait again
                         }
                         let detect_ms = wait_t0.elapsed().as_millis() as u64;
@@ -529,8 +735,7 @@ impl Trainer {
                         self.lanes_lost += 1;
                         return Err(anyhow::anyhow!(
                             "comm lane {lane} lost at step {gen}: bucket {i} unreduced and \
-                             no heartbeat for {} ms",
-                            self.cfg.fault_deadline_ms,
+                             no heartbeat for {deadline_ms} ms",
                         ));
                     }
                 }

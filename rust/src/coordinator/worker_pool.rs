@@ -489,12 +489,29 @@ pub(crate) struct LaneMsg {
 }
 
 /// The persistent pool: thread handles plus the per-role channels.
+/// Grad seats are ELASTIC: a dead seat keeps its channel index forever
+/// (the fleet controller simply routes around it) and `admit_slot` can
+/// later spawn a replacement thread into the same seat, or open one new
+/// seat at the end — indices never shift, so routing tables, heartbeat
+/// cells and thread names stay stable across the whole run.
 pub(crate) struct WorkerPool {
     job_txs: Vec<Sender<WorkerJob>>,
     lane_txs: Vec<Sender<LaneJob>>,
     worker_rx: Receiver<WorkerMsg>,
     lane_rx: Receiver<LaneMsg>,
-    handles: Vec<JoinHandle<()>>,
+    grad_handles: Vec<JoinHandle<()>>,
+    lane_handles: Vec<JoinHandle<()>>,
+    /// Everything `admit_slot` needs to spawn a replacement grad thread
+    /// mid-run without the Trainer re-plumbing its shared state.
+    ctx: SpawnCtx,
+}
+
+struct SpawnCtx {
+    engine: Arc<Engine>,
+    data: Arc<Synthetic>,
+    run_t0: Instant,
+    hb: Arc<Heartbeats>,
+    worker_tx: Sender<WorkerMsg>,
 }
 
 impl WorkerPool {
@@ -502,15 +519,21 @@ impl WorkerPool {
     /// After an in-run recovery the physical count can be smaller than
     /// the run's LOGICAL worker count (`cfg.workers`, which fixes the
     /// numerics): the leader then routes several logical workers onto one
-    /// thread (`w % phys`), serially — same shards, same buffers, same
-    /// bits, fewer threads.
+    /// thread (the fleet controller's table, `w % phys` while the fleet
+    /// is whole), serially — same shards, same buffers, same bits, fewer
+    /// threads.
     ///
     /// Heartbeat cells: grad thread `w` stamps `hb[w]`; lane `l` stamps
-    /// `hb[workers + l]`. Stamps are milliseconds on the shared run clock.
+    /// `hb[lane_cell_base + l]`. The base is the LOGICAL worker count
+    /// (not `workers`): grad seats can grow up to that cap via
+    /// `admit_slot`, and lane cells must never collide with a seat that
+    /// does not exist yet. Stamps are milliseconds on the shared run
+    /// clock.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn spawn(
         workers: usize,
         lanes: usize,
+        lane_cell_base: usize,
         threads_per_lane: usize,
         algo: Algorithm,
         precision: Precision,
@@ -519,12 +542,14 @@ impl WorkerPool {
         run_t0: Instant,
         hb: Arc<Heartbeats>,
     ) -> WorkerPool {
-        debug_assert!(hb.len() >= workers + lanes, "heartbeat table too small");
+        debug_assert!(lane_cell_base >= workers, "grad seats would collide with lane cells");
+        debug_assert!(hb.len() >= lane_cell_base + lanes, "heartbeat table too small");
         let (worker_tx, worker_rx) = channel();
         let (lane_tx, lane_rx) = channel();
         let mut job_txs = Vec::with_capacity(workers);
         let mut lane_txs = Vec::with_capacity(lanes);
-        let mut handles = Vec::with_capacity(workers + lanes);
+        let mut grad_handles = Vec::with_capacity(workers);
+        let mut lane_handles = Vec::with_capacity(lanes);
         for w in 0..workers {
             let (tx, rx) = channel::<WorkerJob>();
             job_txs.push(tx);
@@ -532,7 +557,7 @@ impl WorkerPool {
             let data = data.clone();
             let results = worker_tx.clone();
             let pulse = Pulse { hb: hb.clone(), cell: w, t0: run_t0 };
-            handles.push(
+            grad_handles.push(
                 std::thread::Builder::new()
                     .name(format!("yasgd-grad-{w}"))
                     .spawn(move || worker_thread(engine, data, rx, results, pulse))
@@ -544,15 +569,61 @@ impl WorkerPool {
             lane_txs.push(tx);
             let results = lane_tx.clone();
             let comm = CommEngine::new(algo, precision, threads_per_lane);
-            let pulse = Pulse { hb: hb.clone(), cell: workers + l, t0: run_t0 };
-            handles.push(
+            let pulse = Pulse { hb: hb.clone(), cell: lane_cell_base + l, t0: run_t0 };
+            lane_handles.push(
                 std::thread::Builder::new()
                     .name(format!("yasgd-lane-{l}"))
                     .spawn(move || lane_thread(l, lanes, run_t0, comm, rx, results, pulse))
                     .expect("spawning comm lane thread"),
             );
         }
-        WorkerPool { job_txs, lane_txs, worker_rx, lane_rx, handles }
+        let ctx = SpawnCtx { engine, data, run_t0, hb, worker_tx };
+        WorkerPool { job_txs, lane_txs, worker_rx, lane_rx, grad_handles, lane_handles, ctx }
+    }
+
+    /// True when grad seat `w`'s thread has provably exited (crashed or
+    /// shut down). The leader's live scale-down path requires this: a
+    /// declared-lost thread that is merely wedged could wake up later,
+    /// and only the full-teardown path can retire it safely.
+    pub(crate) fn slot_finished(&self, w: usize) -> bool {
+        self.grad_handles[w].is_finished()
+    }
+
+    /// Admit a grad thread into seat `slot`: replace a dead seat in place
+    /// (`slot < phys_workers()`, whose previous thread MUST have
+    /// finished), or open one new seat (`slot == phys_workers()`).
+    /// Channel seat and thread handle swap; indices never shift.
+    pub(crate) fn admit_slot(&mut self, slot: usize) -> Result<()> {
+        anyhow::ensure!(slot <= self.job_txs.len(), "admit to non-contiguous seat {slot}");
+        anyhow::ensure!(self.ctx.hb.len() > slot, "no heartbeat cell for seat {slot}");
+        if slot < self.grad_handles.len() {
+            anyhow::ensure!(
+                self.grad_handles[slot].is_finished(),
+                "admit into seat {slot} whose thread is still alive"
+            );
+        }
+        let (tx, rx) = channel::<WorkerJob>();
+        let engine = self.ctx.engine.clone();
+        let data = self.ctx.data.clone();
+        let results = self.ctx.worker_tx.clone();
+        let pulse = Pulse { hb: self.ctx.hb.clone(), cell: slot, t0: self.ctx.run_t0 };
+        // Stamp the seat's cell now: the stale stamp left by the dead
+        // occupant must not read as the NEW thread being lost before its
+        // first job arrives.
+        self.ctx.hb.stamp(slot, self.ctx.run_t0.elapsed().as_millis() as u64);
+        let handle = std::thread::Builder::new()
+            .name(format!("yasgd-grad-{slot}"))
+            .spawn(move || worker_thread(engine, data, rx, results, pulse))?;
+        if slot == self.job_txs.len() {
+            self.job_txs.push(tx);
+            self.grad_handles.push(handle);
+        } else {
+            self.job_txs[slot] = tx;
+            let old = std::mem::replace(&mut self.grad_handles[slot], handle);
+            // Already finished (checked above), so this join is instant.
+            let _ = old.join();
+        }
+        Ok(())
     }
 
     pub(crate) fn lanes(&self) -> usize {
@@ -625,7 +696,7 @@ impl Drop for WorkerPool {
         // on its job channel by the time the channels close.)
         self.job_txs.clear();
         self.lane_txs.clear();
-        for h in self.handles.drain(..) {
+        for h in self.grad_handles.drain(..).chain(self.lane_handles.drain(..)) {
             let _ = h.join();
         }
     }

@@ -446,6 +446,71 @@ impl StragglerTracker {
     }
 }
 
+/// Adaptive supervision deadline: `factor ×` the rolling median of step
+/// wall-time, floored at the configured default (30 s) so short early
+/// steps can never tighten the deadline into false-positive territory.
+/// An explicit `--fault-deadline-ms` is an OVERRIDE — the tracker then
+/// reports that value verbatim (which is how the chaos tests keep their
+/// fast 300 ms detection).
+pub struct DeadlineTracker {
+    hist: VecDeque<f64>,
+    cap: usize,
+    factor: f64,
+    floor_ms: u64,
+    override_ms: Option<u64>,
+    /// Below this much history the floor alone applies — a median of one
+    /// warm-up step is noise, and the whole point is that early steps
+    /// must not misfire.
+    min_hist: usize,
+}
+
+impl DeadlineTracker {
+    pub fn new(factor: f64, floor_ms: u64, override_ms: Option<u64>) -> DeadlineTracker {
+        DeadlineTracker {
+            hist: VecDeque::with_capacity(64),
+            cap: 64,
+            factor: factor.max(1.0),
+            floor_ms,
+            override_ms,
+            min_hist: 3,
+        }
+    }
+
+    /// Feed one completed step's wall time (seconds).
+    pub fn observe_step(&mut self, wall_s: f64) {
+        if self.hist.len() == self.cap {
+            self.hist.pop_front();
+        }
+        self.hist.push_back(wall_s.max(0.0));
+    }
+
+    fn median_s(&self) -> f64 {
+        let mut v: Vec<f64> = self.hist.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = v.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    /// The deadline the supervisor should use right now.
+    pub fn effective_ms(&self) -> u64 {
+        if let Some(ms) = self.override_ms {
+            return ms;
+        }
+        if self.hist.len() < self.min_hist {
+            return self.floor_ms;
+        }
+        let adaptive = (self.factor * self.median_s() * 1e3).ceil() as u64;
+        adaptive.max(self.floor_ms)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -544,6 +609,40 @@ mod tests {
             t2.observe(1e-6, 4.0);
         }
         assert!(t2.observe(1e-4, 4.0).is_none());
+    }
+
+    #[test]
+    fn deadline_tracker_floor_holds_for_short_early_steps() {
+        // Fast warm-up steps (1 ms) must NOT tighten the deadline below
+        // the 30 s floor — the misfire this satellite pins against.
+        let mut t = DeadlineTracker::new(4.0, 30_000, None);
+        assert_eq!(t.effective_ms(), 30_000, "no history: floor");
+        for _ in 0..8 {
+            t.observe_step(1e-3);
+        }
+        assert_eq!(t.effective_ms(), 30_000, "fast steps: floor holds");
+    }
+
+    #[test]
+    fn deadline_tracker_expands_for_slow_fleets() {
+        let mut t = DeadlineTracker::new(4.0, 30_000, None);
+        for _ in 0..5 {
+            t.observe_step(20.0);
+        }
+        assert_eq!(t.effective_ms(), 80_000, "4x a 20 s median");
+        // Below min_hist the floor applies even for slow steps.
+        let mut early = DeadlineTracker::new(4.0, 30_000, None);
+        early.observe_step(20.0);
+        assert_eq!(early.effective_ms(), 30_000);
+    }
+
+    #[test]
+    fn deadline_tracker_explicit_flag_is_an_override() {
+        let mut t = DeadlineTracker::new(4.0, 30_000, Some(300));
+        for _ in 0..8 {
+            t.observe_step(20.0);
+        }
+        assert_eq!(t.effective_ms(), 300, "explicit deadline wins outright");
     }
 
     #[test]

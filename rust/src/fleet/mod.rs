@@ -1,0 +1,689 @@
+//! Elastic fleet controller: live logical→physical worker routing.
+//!
+//! PR 6 split the fleet into LOGICAL workers (which own shards, ledger
+//! targets and reduction slots, fixed forever) and PHYSICAL pool threads
+//! (which merely compute), with the hard-wired mapping `w % phys`. This
+//! module promotes that mapping to a live, policy-driven table owned by
+//! [`FleetController`]:
+//!
+//! * **scale-down** — a lost or administratively drained physical slot's
+//!   logical workers re-route onto the survivors without re-spawning the
+//!   pool;
+//! * **scale-up** — a replacement slot is admitted at a step boundary
+//!   (warmed from the in-memory snapshot by the coordinator) and takes
+//!   logical workers back;
+//! * **straggler mitigation** — a sustained-slow slot is penalized
+//!   (hysteresis so one slow step never thrashes, cooldown so it earns
+//!   its way back) and routing shifts its logical workers away.
+//!
+//! The bitwise invariant is inherited, not re-proven: routing only picks
+//! WHO computes a logical worker's fixed shard; gradients land in the
+//! same per-logical-worker buffers and reduce in the same bucket order,
+//! so every routing change is numerically invisible (the chaos grid in
+//! `rust/tests/faults.rs` holds this to bit-equality).
+//!
+//! [`ElasticPlan`] is the deterministic schedule of fleet events —
+//! parsed from `--fleet "drain@step:slot;join@step"` or generated from a
+//! u64 seed, mirroring `faults::FaultPlan` — and [`FleetEvent`] is the
+//! typed timeline `TrainReport` records.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Consecutive sustained-slow steps before a slot is penalized. One slow
+/// bucket (GC pause, page fault) must never move routing.
+pub const REBALANCE_HYSTERESIS: u32 = 3;
+
+/// Steps a penalized slot sits out before routing is restored.
+pub const REBALANCE_COOLDOWN: usize = 8;
+
+/// Lifecycle of one physical pool slot. Indices are stable forever: a
+/// slot that dies keeps its index (and its pool channel seat), so the
+/// routing table, heartbeat cells and thread names never shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Serving: eligible to compute logical workers.
+    Active,
+    /// Administratively removed from routing; the thread idles alive and
+    /// can be re-admitted without a spawn.
+    Drained,
+    /// The thread is gone (crash or declared-lost); re-admission spawns a
+    /// replacement into the same seat.
+    Lost,
+}
+
+/// What happened to the fleet. `moved` counts logical workers whose
+/// serving slot changed in the reroute this event caused; `cost_ms` is
+/// the leader-side wall time the transition took (quiesce + restore +
+/// re-arm for a live scale-down, spawn + warm for a join, ~0 for a pure
+/// routing flip).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetAction {
+    Join,
+    Drain,
+    Lost,
+    Rebalance,
+    Restore,
+}
+
+impl FleetAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetAction::Join => "join",
+            FleetAction::Drain => "drain",
+            FleetAction::Lost => "lost",
+            FleetAction::Rebalance => "rebalance",
+            FleetAction::Restore => "restore",
+        }
+    }
+}
+
+/// One entry of the typed fleet timeline `TrainReport` carries.
+#[derive(Debug, Clone)]
+pub struct FleetEvent {
+    pub step: usize,
+    pub slot: usize,
+    pub action: FleetAction,
+    /// Logical workers whose route changed because of this event.
+    pub moved: usize,
+    pub cost_ms: f64,
+}
+
+impl FleetEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.action.name().to_string())),
+            ("step", Json::Num(self.step as f64)),
+            ("slot", Json::Num(self.slot as f64)),
+            ("moved", Json::Num(self.moved as f64)),
+            ("cost_ms", Json::Num(self.cost_ms)),
+        ])
+    }
+}
+
+/// One scheduled elastic event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ElasticKind {
+    /// Admit a replacement slot (re-uses the lowest dead seat, else opens
+    /// a new one up to the logical-worker cap).
+    Join,
+    /// Administratively remove `slot` from routing at a step boundary.
+    Drain { slot: usize },
+    /// Force the rebalancer's verdict on `slot` — a deterministic stand-in
+    /// for "sustained slow" so rebalance routing is testable bitwise
+    /// without real timing.
+    Penalize { slot: usize },
+}
+
+impl ElasticKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElasticKind::Join => "join",
+            ElasticKind::Drain { .. } => "drain",
+            ElasticKind::Penalize { .. } => "penalize",
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            ElasticKind::Join => "join".to_string(),
+            ElasticKind::Drain { slot } => format!("drain slot {slot}"),
+            ElasticKind::Penalize { slot } => format!("penalize slot {slot}"),
+        }
+    }
+}
+
+/// One scheduled elastic event: `kind` applies at the boundary BEFORE
+/// step `step` dispatches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticSpec {
+    pub step: usize,
+    pub kind: ElasticKind,
+}
+
+/// A deterministic, replayable schedule of fleet transitions. Like
+/// `FaultPlan`, events are one-shot: a recovery replay of a step finds
+/// its transitions already applied.
+#[derive(Debug, Clone)]
+pub struct ElasticPlan {
+    /// Seed the plan is replayable from (0 for hand-written specs).
+    pub seed: u64,
+    specs: Vec<ElasticSpec>,
+    taken: Vec<bool>,
+}
+
+impl ElasticPlan {
+    /// Parse an explicit spec: `;`-separated directives.
+    ///
+    /// * `join@S` — admit a replacement slot before step S
+    /// * `drain@S:SLOT` — drain physical slot SLOT before step S
+    /// * `penalize@S:SLOT` — force the rebalance verdict on SLOT at step S
+    pub fn parse(spec: &str, seed: u64) -> Result<ElasticPlan> {
+        let mut specs = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, rest) = part
+                .split_once('@')
+                .with_context(|| format!("fleet directive '{part}': expected kind@step[:slot]"))?;
+            let fields: Vec<&str> = rest.split(':').collect();
+            let num = |i: usize, what: &str| -> Result<u64> {
+                fields
+                    .get(i)
+                    .with_context(|| format!("fleet directive '{part}': missing {what}"))?
+                    .trim()
+                    .parse::<u64>()
+                    .with_context(|| format!("fleet directive '{part}': bad {what}"))
+            };
+            let step = num(0, "step")? as usize;
+            let arity = |n: usize| -> Result<()> {
+                if fields.len() != n {
+                    bail!("fleet directive '{part}': expected {n} ':'-fields");
+                }
+                Ok(())
+            };
+            let kind = match kind_s.trim() {
+                "join" => {
+                    arity(1)?;
+                    ElasticKind::Join
+                }
+                "drain" => {
+                    arity(2)?;
+                    ElasticKind::Drain { slot: num(1, "slot")? as usize }
+                }
+                "penalize" => {
+                    arity(2)?;
+                    ElasticKind::Penalize { slot: num(1, "slot")? as usize }
+                }
+                other => {
+                    bail!("fleet directive '{part}': unknown kind '{other}' (join|drain|penalize)")
+                }
+            };
+            specs.push(ElasticSpec { step, kind });
+        }
+        let taken = vec![false; specs.len()];
+        Ok(ElasticPlan { seed, specs, taken })
+    }
+
+    /// Generate `count` random elastic events from a single seed — the
+    /// elastic-fuzz entry point. Same (seed, steps, slots, count) → same
+    /// plan, bit-for-bit, on every platform. Slot targets are taken
+    /// modulo the live slot count at apply time, so any draw is valid.
+    pub fn generate(seed: u64, steps: usize, slots: usize, count: usize) -> ElasticPlan {
+        let mut rng = Rng::new(seed ^ 0xE1A57);
+        let mut specs = Vec::with_capacity(count);
+        for _ in 0..count {
+            // Steps start at 1: a transition before the first step would
+            // race the warm-from-snapshot requirement for joins.
+            let step = 1 + rng.below(steps.max(2) as u64 - 1) as usize;
+            let slot = rng.below(slots.max(1) as u64) as usize;
+            let kind = match rng.below(3) {
+                0 => ElasticKind::Join,
+                1 => ElasticKind::Drain { slot },
+                _ => ElasticKind::Penalize { slot },
+            };
+            specs.push(ElasticSpec { step, kind });
+        }
+        let taken = vec![false; specs.len()];
+        ElasticPlan { seed, specs, taken }
+    }
+
+    pub fn specs(&self) -> &[ElasticSpec] {
+        &self.specs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Consume (one-shot) every unconsumed event scheduled at `step`, in
+    /// spec order.
+    pub fn take_step(&mut self, step: usize) -> Vec<ElasticKind> {
+        let mut out = Vec::new();
+        for (i, s) in self.specs.iter().enumerate() {
+            if !self.taken[i] && s.step == step {
+                self.taken[i] = true;
+                out.push(s.kind);
+            }
+        }
+        out
+    }
+}
+
+/// The live routing table. `slots` indices are pool-thread seats and
+/// never shift; `route[w]` is the seat serving logical worker `w`.
+/// Routing is a pure function of (slot states, penalty set): serving
+/// slots sorted ascending, `route[w] = serving[w % serving.len()]` — the
+/// PR-6 `w % phys` map is the degenerate case of an all-active fleet.
+#[derive(Debug)]
+pub struct FleetController {
+    logical: usize,
+    slots: Vec<SlotState>,
+    /// Step index each penalty expires at (0 = not penalized).
+    penalized_until: Vec<usize>,
+    slow_streak: Vec<u32>,
+    route: Vec<usize>,
+    rebalance_enabled: bool,
+    events: Vec<FleetEvent>,
+    reroutes: usize,
+}
+
+impl FleetController {
+    pub fn new(logical: usize, phys: usize, rebalance_enabled: bool) -> FleetController {
+        let logical = logical.max(1);
+        let phys = phys.clamp(1, logical);
+        let mut f = FleetController {
+            logical,
+            slots: vec![SlotState::Active; phys],
+            penalized_until: vec![0; phys],
+            slow_streak: vec![0; phys],
+            route: Vec::new(),
+            rebalance_enabled,
+            events: Vec::new(),
+            reroutes: 0,
+        };
+        f.route = f.compute_route();
+        f
+    }
+
+    /// Serving slots, ascending: active and not under penalty. If the
+    /// penalty set would empty the fleet, penalties are ignored (a slow
+    /// fleet beats a stopped one); at least one active slot always
+    /// exists by construction.
+    pub fn serving(&self) -> Vec<usize> {
+        let unpenalized: Vec<usize> = (0..self.slots.len())
+            .filter(|&s| self.slots[s] == SlotState::Active && self.penalized_until[s] == 0)
+            .collect();
+        if !unpenalized.is_empty() {
+            return unpenalized;
+        }
+        (0..self.slots.len()).filter(|&s| self.slots[s] == SlotState::Active).collect()
+    }
+
+    fn compute_route(&self) -> Vec<usize> {
+        let serving = self.serving();
+        (0..self.logical).map(|w| serving[w % serving.len()]).collect()
+    }
+
+    /// Recompute routing; returns how many logical workers moved.
+    fn reroute(&mut self) -> usize {
+        let next = self.compute_route();
+        let moved = next.iter().zip(&self.route).filter(|(a, b)| a != b).count();
+        if moved > 0 {
+            self.reroutes += 1;
+        }
+        self.route = next;
+        moved
+    }
+
+    /// The physical seat serving logical worker `w`.
+    #[inline]
+    pub fn slot_for(&self, w: usize) -> usize {
+        self.route[w]
+    }
+
+    /// Total seats ever opened (dead seats keep their index).
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn state(&self, slot: usize) -> SlotState {
+        self.slots[slot]
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| **s == SlotState::Active).count()
+    }
+
+    pub fn events(&self) -> &[FleetEvent] {
+        &self.events
+    }
+
+    pub fn reroutes(&self) -> usize {
+        self.reroutes
+    }
+
+    /// Attribute measured transition cost to the event that caused it
+    /// (the coordinator times the quiesce/spawn work around the call).
+    pub fn add_cost_to_last(&mut self, ms: f64) {
+        if let Some(e) = self.events.last_mut() {
+            e.cost_ms += ms;
+        }
+    }
+
+    /// Record an externally-constructed timeline event (the coordinator's
+    /// pool-rebuild paths manage seats wholesale via [`reset_seats`] and
+    /// log what they did here).
+    ///
+    /// [`reset_seats`]: FleetController::reset_seats
+    pub fn push_event(&mut self, event: FleetEvent) {
+        self.events.push(event);
+    }
+
+    /// Rebuild the seat table to `phys` all-active seats — the full pool
+    /// respawn after a teardown-based recovery, or the widening rebuild a
+    /// join takes when lane budgets must re-expand. Penalties and streaks
+    /// reset; the timeline and reroute counter carry over. Returns how
+    /// many logical workers moved.
+    pub fn reset_seats(&mut self, phys: usize) -> usize {
+        let phys = phys.clamp(1, self.logical);
+        self.slots = vec![SlotState::Active; phys];
+        self.penalized_until = vec![0; phys];
+        self.slow_streak = vec![0; phys];
+        self.reroute()
+    }
+
+    /// A physical seat's thread died (crash or declared-lost). Routing
+    /// shifts its logical workers to the survivors. Idempotent.
+    pub fn mark_lost(&mut self, step: usize, slot: usize) {
+        if self.slots[slot] == SlotState::Lost {
+            return;
+        }
+        self.slots[slot] = SlotState::Lost;
+        self.penalized_until[slot] = 0;
+        self.slow_streak[slot] = 0;
+        if self.active_slots() == 0 {
+            // Losing the last seat is unrecoverable routing-wise; leave
+            // the seat active so serving() stays non-empty — the
+            // coordinator's recovery ceiling handles the failure.
+            self.slots[slot] = SlotState::Active;
+            return;
+        }
+        let moved = self.reroute();
+        self.events.push(FleetEvent { step, slot, action: FleetAction::Lost, moved, cost_ms: 0.0 });
+    }
+
+    /// Administratively remove a seat from routing (thread stays alive,
+    /// idle). Refused when it would empty the fleet or the seat is not
+    /// active.
+    pub fn drain(&mut self, step: usize, slot: usize) -> bool {
+        let slot = slot % self.slots.len();
+        if self.slots[slot] != SlotState::Active || self.active_slots() <= 1 {
+            return false;
+        }
+        self.slots[slot] = SlotState::Drained;
+        self.penalized_until[slot] = 0;
+        self.slow_streak[slot] = 0;
+        let moved = self.reroute();
+        self.events.push(FleetEvent {
+            step,
+            slot,
+            action: FleetAction::Drain,
+            moved,
+            cost_ms: 0.0,
+        });
+        true
+    }
+
+    /// Admit one slot: re-activate the lowest drained seat (no spawn —
+    /// its thread idles alive), else re-open the lowest lost seat, else
+    /// open a new seat up to the logical-worker cap. Returns
+    /// `(seat, needs_spawn)`; `None` when the fleet is already full.
+    pub fn admit(&mut self, step: usize) -> Option<(usize, bool)> {
+        let drained = (0..self.slots.len()).find(|&s| self.slots[s] == SlotState::Drained);
+        let lost = (0..self.slots.len()).find(|&s| self.slots[s] == SlotState::Lost);
+        let (slot, needs_spawn) = match (drained, lost) {
+            (Some(s), _) => (s, false),
+            (None, Some(s)) => (s, true),
+            (None, None) if self.slots.len() < self.logical => {
+                self.slots.push(SlotState::Active);
+                self.penalized_until.push(0);
+                self.slow_streak.push(0);
+                (self.slots.len() - 1, true)
+            }
+            _ => return None,
+        };
+        self.slots[slot] = SlotState::Active;
+        self.penalized_until[slot] = 0;
+        self.slow_streak[slot] = 0;
+        let moved = self.reroute();
+        self.events.push(FleetEvent { step, slot, action: FleetAction::Join, moved, cost_ms: 0.0 });
+        Some((slot, needs_spawn))
+    }
+
+    /// Force the rebalance verdict on `slot` (the deterministic test and
+    /// `penalize@S:SLOT` path) — same penalty + cooldown as an organic
+    /// sustained-slow detection. No-op when rebalance is disabled, the
+    /// seat is not serving, or penalizing would empty the serving set.
+    pub fn penalize(&mut self, step: usize, slot: usize) -> bool {
+        let slot = slot % self.slots.len();
+        if !self.rebalance_enabled
+            || self.slots[slot] != SlotState::Active
+            || self.penalized_until[slot] != 0
+        {
+            return false;
+        }
+        let serving_without: usize = (0..self.slots.len())
+            .filter(|&s| {
+                s != slot && self.slots[s] == SlotState::Active && self.penalized_until[s] == 0
+            })
+            .count();
+        if serving_without == 0 {
+            return false;
+        }
+        self.penalized_until[slot] = step + REBALANCE_COOLDOWN;
+        self.slow_streak[slot] = 0;
+        let moved = self.reroute();
+        self.events.push(FleetEvent {
+            step,
+            slot,
+            action: FleetAction::Rebalance,
+            moved,
+            cost_ms: 0.0,
+        });
+        true
+    }
+
+    /// Expire penalties whose cooldown has passed; routing restores the
+    /// seat. Called at every step boundary.
+    pub fn tick_cooldowns(&mut self, step: usize) {
+        for slot in 0..self.slots.len() {
+            if self.penalized_until[slot] != 0 && step >= self.penalized_until[slot] {
+                self.penalized_until[slot] = 0;
+                if self.slots[slot] == SlotState::Active {
+                    let moved = self.reroute();
+                    self.events.push(FleetEvent {
+                        step,
+                        slot,
+                        action: FleetAction::Restore,
+                        moved,
+                        cost_ms: 0.0,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Feed one step's measured per-seat grad-report latency (seconds,
+    /// only seats that served this step). A seat sustained above
+    /// `factor`× the median of the OTHER seats for
+    /// [`REBALANCE_HYSTERESIS`] consecutive steps is penalized for
+    /// [`REBALANCE_COOLDOWN`] steps. Pure policy: verdicts only move
+    /// routing, never numerics.
+    pub fn observe_latencies(&mut self, step: usize, lat: &[(usize, f64)], factor: f64) {
+        if !self.rebalance_enabled || lat.len() < 2 {
+            return;
+        }
+        let mut slow: Vec<usize> = Vec::new();
+        for &(slot, d) in lat {
+            let mut others: Vec<f64> =
+                lat.iter().filter(|(s, _)| *s != slot).map(|(_, d)| *d).collect();
+            others.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let med = others[others.len() / 2];
+            if d > factor * med && med > 0.0 {
+                slow.push(slot);
+            }
+        }
+        for &(slot, _) in lat {
+            if slow.contains(&slot) {
+                self.slow_streak[slot] += 1;
+                if self.slow_streak[slot] >= REBALANCE_HYSTERESIS {
+                    self.penalize(step, slot);
+                }
+            } else {
+                self.slow_streak[slot] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_fleet_matches_pr6_modulo_routing() {
+        let f = FleetController::new(4, 2, true);
+        for w in 0..4 {
+            assert_eq!(f.slot_for(w), w % 2);
+        }
+        assert_eq!(f.reroutes(), 0);
+    }
+
+    #[test]
+    fn lost_slot_reroutes_to_survivors() {
+        let mut f = FleetController::new(4, 2, true);
+        f.mark_lost(3, 1);
+        for w in 0..4 {
+            assert_eq!(f.slot_for(w), 0);
+        }
+        assert_eq!(f.reroutes(), 1);
+        assert_eq!(f.events().len(), 1);
+        assert_eq!(f.events()[0].action, FleetAction::Lost);
+        assert_eq!(f.events()[0].moved, 2);
+        // Idempotent: declaring the same loss twice records one event.
+        f.mark_lost(3, 1);
+        assert_eq!(f.events().len(), 1);
+    }
+
+    #[test]
+    fn drain_refuses_to_empty_the_fleet() {
+        let mut f = FleetController::new(4, 2, true);
+        assert!(f.drain(1, 0));
+        assert!(!f.drain(1, 1), "last active seat must not drain");
+        assert!(!f.drain(1, 0), "seat already drained");
+        assert_eq!(f.active_slots(), 1);
+    }
+
+    #[test]
+    fn admit_prefers_drained_then_lost_then_new_seat() {
+        let mut f = FleetController::new(4, 3, true);
+        f.drain(1, 0);
+        f.mark_lost(2, 1);
+        // Drained seat 0 first: no spawn needed, its thread idles alive.
+        assert_eq!(f.admit(3), Some((0, false)));
+        // Lost seat 1 next: replacement spawn into the same seat.
+        assert_eq!(f.admit(4), Some((1, true)));
+        // Fleet full at logical cap 4 after one more new seat.
+        assert_eq!(f.admit(5), Some((3, true)));
+        assert_eq!(f.admit(6), None);
+        assert_eq!(f.num_slots(), 4);
+    }
+
+    #[test]
+    fn routing_is_deterministic_over_sorted_serving_set() {
+        let mut f = FleetController::new(6, 3, true);
+        f.mark_lost(1, 1);
+        let serving = f.serving();
+        assert_eq!(serving, vec![0, 2]);
+        for w in 0..6 {
+            assert_eq!(f.slot_for(w), serving[w % 2]);
+        }
+    }
+
+    #[test]
+    fn penalize_moves_routing_and_cooldown_restores() {
+        let mut f = FleetController::new(4, 2, true);
+        assert!(f.penalize(5, 1));
+        for w in 0..4 {
+            assert_eq!(f.slot_for(w), 0);
+        }
+        // Under cooldown nothing restores.
+        f.tick_cooldowns(5 + REBALANCE_COOLDOWN - 1);
+        assert_eq!(f.slot_for(1), 0);
+        // At expiry routing returns and a restore event is recorded.
+        f.tick_cooldowns(5 + REBALANCE_COOLDOWN);
+        assert_eq!(f.slot_for(1), 1);
+        let kinds: Vec<&str> = f.events().iter().map(|e| e.action.name()).collect();
+        assert_eq!(kinds, vec!["rebalance", "restore"]);
+    }
+
+    #[test]
+    fn penalize_never_empties_serving_set_and_respects_escape_hatch() {
+        let mut f = FleetController::new(4, 2, true);
+        assert!(f.penalize(1, 0));
+        assert!(!f.penalize(1, 1), "penalizing the last serving seat must refuse");
+        let mut off = FleetController::new(4, 2, false);
+        assert!(!off.penalize(1, 0), "--no-rebalance disables penalties");
+    }
+
+    #[test]
+    fn hysteresis_requires_sustained_slowness() {
+        let mut f = FleetController::new(4, 2, true);
+        let slow = [(0usize, 1e-3), (1usize, 50e-3)];
+        let fast = [(0usize, 1e-3), (1usize, 1e-3)];
+        f.observe_latencies(1, &slow, 4.0);
+        f.observe_latencies(2, &slow, 4.0);
+        assert_eq!(f.slot_for(1), 1, "two slow steps are below hysteresis");
+        f.observe_latencies(3, &fast, 4.0);
+        f.observe_latencies(4, &slow, 4.0);
+        f.observe_latencies(5, &slow, 4.0);
+        assert_eq!(f.slot_for(1), 1, "streak reset by a fast step");
+        f.observe_latencies(6, &slow, 4.0);
+        assert_eq!(f.slot_for(1), 0, "three consecutive slow steps penalize");
+    }
+
+    #[test]
+    fn elastic_parse_all_kinds_and_rejects_malformed() {
+        let p = ElasticPlan::parse("join@4; drain@2:1 ;penalize@3:0", 9).unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.specs().len(), 3);
+        assert_eq!(p.specs()[0], ElasticSpec { step: 4, kind: ElasticKind::Join });
+        assert_eq!(p.specs()[1], ElasticSpec { step: 2, kind: ElasticKind::Drain { slot: 1 } });
+        assert!(ElasticPlan::parse("", 0).unwrap().is_empty());
+        assert!(ElasticPlan::parse("join@4:1", 0).is_err()); // extra field
+        assert!(ElasticPlan::parse("drain@2", 0).is_err()); // missing slot
+        assert!(ElasticPlan::parse("evict@2:1", 0).is_err()); // unknown kind
+        assert!(ElasticPlan::parse("drain@x:1", 0).is_err()); // non-numeric
+    }
+
+    #[test]
+    fn elastic_generate_is_deterministic_and_in_range() {
+        let a = ElasticPlan::generate(7, 10, 2, 8);
+        let b = ElasticPlan::generate(7, 10, 2, 8);
+        assert_eq!(a.specs(), b.specs());
+        let c = ElasticPlan::generate(8, 10, 2, 8);
+        assert_ne!(a.specs(), c.specs());
+        for s in a.specs() {
+            assert!(s.step >= 1 && s.step < 10);
+            match s.kind {
+                ElasticKind::Drain { slot } | ElasticKind::Penalize { slot } => assert!(slot < 2),
+                ElasticKind::Join => {}
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_take_step_is_one_shot_and_ordered() {
+        let mut p = ElasticPlan::parse("drain@2:1;join@2;join@5", 0).unwrap();
+        assert!(p.take_step(1).is_empty());
+        let at2 = p.take_step(2);
+        assert_eq!(at2, vec![ElasticKind::Drain { slot: 1 }, ElasticKind::Join]);
+        assert!(p.take_step(2).is_empty(), "one-shot");
+        assert_eq!(p.take_step(5), vec![ElasticKind::Join]);
+    }
+
+    #[test]
+    fn event_json_is_self_describing() {
+        let e = FleetEvent {
+            step: 3,
+            slot: 1,
+            action: FleetAction::Rebalance,
+            moved: 2,
+            cost_ms: 0.4,
+        };
+        let s = e.to_json().to_string();
+        assert!(s.contains("\"kind\""), "{s}");
+        assert!(s.contains("rebalance"), "{s}");
+        assert!(s.contains("\"moved\""), "{s}");
+    }
+}

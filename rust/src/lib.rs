@@ -35,6 +35,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod faults;
+pub mod fleet;
 pub mod init;
 pub mod metrics;
 pub mod mlperf;

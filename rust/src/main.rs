@@ -26,6 +26,16 @@
 //! heartbeat deadline, the pool re-shards over the survivors, state
 //! restores from the last in-memory snapshot and the run continues —
 //! bitwise identical to the unfaulted trajectory.
+//!
+//! Elastic fleet (PR 8): --fleet SPEC (e.g. "drain@3:1;join@5", or
+//! "seed:N" to draw N membership events from --fault-seed),
+//! --no-rebalance (log straggler verdicts but never re-route),
+//! --deadline-factor X (adaptive supervision deadline = X × rolling-median
+//! step wall-time, floored at --fault-deadline-ms; giving the deadline
+//! flag explicitly pins it verbatim instead), --ckpt-keep N (on-disk
+//! checkpoint rotation for --save-checkpoint: the path becomes a
+//! directory keeping the newest N CRC-verified checkpoints; --resume
+//! accepts that directory and loads the newest loadable one).
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -47,6 +57,7 @@ const KNOWN_OPTS: &[&str] = &[
     "save-checkpoint", "resume",
     "fault", "fault-seed", "fault-count", "fault-deadline-ms", "ckpt-every",
     "straggler-factor", "no-supervise", "no-recover",
+    "fleet", "no-rebalance", "deadline-factor", "ckpt-keep",
 ];
 
 fn main() -> Result<()> {
@@ -111,14 +122,31 @@ fn train(args: &Args) -> Result<()> {
     let mut trainer = Trainer::new(cfg, engine)?;
     trainer.threaded = args.flag("threaded");
     if let Some(path) = args.get("resume") {
-        let ckpt = yasgd::checkpoint::Checkpoint::load(std::path::Path::new(path))?;
+        // A directory resumes from its newest LOADABLE checkpoint (the
+        // rotation layout `--ckpt-keep` writes); a file loads verbatim.
+        let p = std::path::Path::new(path);
+        let ckpt = if p.is_dir() {
+            yasgd::checkpoint::Checkpoint::load_latest(p)?
+        } else {
+            yasgd::checkpoint::Checkpoint::load(p)?
+        };
         trainer.restore(&ckpt)?;
         println!("resumed from {path} at step {}", trainer.step_index());
     }
     let report = trainer.train()?;
     if let Some(path) = args.get("save-checkpoint") {
-        trainer.checkpoint().save(std::path::Path::new(path))?;
-        println!("saved checkpoint to {path}");
+        let keep = trainer.cfg.ckpt_keep;
+        let ckpt = trainer.checkpoint();
+        if keep > 0 {
+            let written = ckpt.save_retained(std::path::Path::new(path), keep)?;
+            println!(
+                "saved checkpoint to {} (rotation: newest {keep} kept)",
+                written.display()
+            );
+        } else {
+            ckpt.save(std::path::Path::new(path))?;
+            println!("saved checkpoint to {path}");
+        }
     }
 
     println!(
@@ -181,6 +209,17 @@ fn train(args: &Args) -> Result<()> {
             report.recovery_cost_s * 1e3
         );
         for e in &report.fault_events {
+            println!("  {}", e.to_json().to_string());
+        }
+    }
+    if !report.fleet_events.is_empty() {
+        println!(
+            "fleet: {} membership event(s), {} reroute(s), deadline now {} ms",
+            report.fleet_events.len(),
+            report.reroute_count,
+            trainer.effective_deadline_ms()
+        );
+        for e in &report.fleet_events {
             println!("  {}", e.to_json().to_string());
         }
     }

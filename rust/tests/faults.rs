@@ -1,7 +1,8 @@
 //! Fault-injection system tests: the chaos grid (an injected worker crash
 //! recovers IN-PROCESS, bitwise identical to the unfaulted run, across
-//! pipeline depth {1, 2} × wire codec {f32, q8+EF}), panic containment
-//! (a worker panic never hangs the trainer — fail fast under
+//! pipeline depth {1, 2} × wire codec {f32, q8+EF} × allreduce schedule
+//! {hier, torus}, with multiring covered by its own chaos run), panic
+//! containment (a worker panic never hangs the trainer — fail fast under
 //! `--no-recover`, recover bitwise otherwise), stall-vs-delay semantics
 //! (a stalled worker past the deadline is declared lost and replayed; a
 //! heartbeating delay merely waits), lane faults (stalled/panicked comm
@@ -9,6 +10,13 @@
 //! comm slowdown neutrality, the TrainReport fault telemetry
 //! (seed/events/recovery cost), and a seeded random fault-plan sweep
 //! under a watchdog proving that arbitrary plans never deadlock.
+//!
+//! Elastic-fleet tests (PR 8): scheduled drains/joins/rebalance penalties
+//! are pure ROUTING moves — bitwise no-ops across the same grid axes —
+//! live scale-down reroutes a confirmed-dead seat without a pool respawn,
+//! seeded random elastic plans never deadlock (watchdog) and never change
+//! the bits, and the adaptive supervision deadline holds its floor
+//! through fast early steps while expanding for a genuinely slow fleet.
 //!
 //! Every fault here is injected from a `FaultPlan` replayable by a single
 //! u64 seed or spec string — no real thread is ever killed externally, so
@@ -21,6 +29,7 @@ use std::sync::OnceLock;
 use yasgd::config::RunConfig;
 use yasgd::coordinator::Trainer;
 use yasgd::faults::{FaultEvent, FaultPlan};
+use yasgd::fleet::ElasticPlan;
 use yasgd::runtime::Engine;
 
 fn engine() -> Arc<Engine> {
@@ -69,46 +78,72 @@ fn event_kinds(t: &Trainer) -> Vec<&'static str> {
 }
 
 /// THE acceptance criterion: an injected worker crash at depth {1, 2} ×
-/// wire {f32, q8 with error feedback} is detected by heartbeat deadline,
-/// the pool re-shards over the survivors (logical shards unchanged), the
-/// run restores from the in-memory snapshot and finishes BITWISE
-/// IDENTICAL to the unfaulted trajectory — including the EF residual
-/// state on the q8 wire.
+/// wire {f32, q8 with error feedback} × allreduce schedule {hier, torus}
+/// is detected by heartbeat deadline, the pool re-shards over the
+/// survivors (logical shards unchanged), the run restores from the
+/// in-memory snapshot and finishes BITWISE IDENTICAL to the unfaulted
+/// trajectory — including the EF residual state on the q8 wire.
 #[test]
-fn crash_recovers_bitwise_across_depth_and_wire() {
+fn crash_recovers_bitwise_across_depth_wire_and_schedule() {
     for depth in [1usize, 2] {
         for wire in ["f32", "q8"] {
-            let what = format!("depth={depth} wire={wire}");
-            let mut cfg = base_cfg();
-            cfg.pipeline_depth = depth;
-            cfg.wire = wire.into();
+            for schedule in ["hier", "torus"] {
+                let what = format!("depth={depth} wire={wire} schedule={schedule}");
+                let mut cfg = base_cfg();
+                cfg.pipeline_depth = depth;
+                cfg.wire = wire.into();
+                cfg.allreduce = schedule.into();
 
-            let (ref_params, ref_bn, _) = run_to_end(cfg.clone());
+                let (ref_params, ref_bn, _) = run_to_end(cfg.clone());
 
-            // Crash logical worker 1 at step 2 (mid-run: snapshots exist,
-            // steps remain on both sides of the fault).
-            cfg.fault_spec = "crash@2:1".into();
-            let (params, bn, t) = run_to_end(cfg);
+                // Crash logical worker 1 at step 2 (mid-run: snapshots exist,
+                // steps remain on both sides of the fault).
+                cfg.fault_spec = "crash@2:1".into();
+                let (params, bn, t) = run_to_end(cfg);
 
-            assert_eq!(ref_params, params, "{what}: params diverged after crash recovery");
-            assert_eq!(ref_bn, bn, "{what}: bn state diverged after crash recovery");
-            assert!(t.recovery_count() >= 1, "{what}: crash must force a recovery");
-            assert!(
-                t.phys_workers_alive() < 2,
-                "{what}: the crashed thread must leave the physical pool"
-            );
-            let kinds = event_kinds(&t);
-            for need in ["injected", "worker_lost", "recovered"] {
-                assert!(kinds.contains(&need), "{what}: missing {need} event in {kinds:?}");
+                assert_eq!(ref_params, params, "{what}: params diverged after crash recovery");
+                assert_eq!(ref_bn, bn, "{what}: bn state diverged after crash recovery");
+                assert!(t.recovery_count() >= 1, "{what}: crash must force a recovery");
+                assert!(
+                    t.phys_workers_alive() < 2,
+                    "{what}: the crashed thread must leave the physical pool"
+                );
+                let kinds = event_kinds(&t);
+                for need in ["injected", "worker_lost", "recovered"] {
+                    assert!(kinds.contains(&need), "{what}: missing {need} event in {kinds:?}");
+                }
+                // Detection latency is recorded and plausible (>= ~deadline).
+                let detect = t.fault_events().iter().find_map(|e| match e {
+                    FaultEvent::WorkerLost { detect_ms, .. } => Some(*detect_ms),
+                    _ => None,
+                });
+                assert!(detect.unwrap() >= 100, "{what}: implausibly fast detection");
+                // PR 8: a confirmed-dead seat is also a fleet membership
+                // event — the routing timeline must record the loss.
+                let fleet_kinds: Vec<_> =
+                    t.fleet_events().iter().map(|e| e.action.name()).collect();
+                assert!(
+                    fleet_kinds.contains(&"lost"),
+                    "{what}: no lost fleet event in {fleet_kinds:?}"
+                );
             }
-            // Detection latency is recorded and plausible (>= ~deadline).
-            let detect = t.fault_events().iter().find_map(|e| match e {
-                FaultEvent::WorkerLost { detect_ms, .. } => Some(*detect_ms),
-                _ => None,
-            });
-            assert!(detect.unwrap() >= 100, "{what}: implausibly fast detection");
         }
     }
+}
+
+/// Schedule-axis chaos for the remaining topology: the multiring
+/// allreduce under a worker crash recovers bitwise too, so the fault
+/// machinery is schedule-agnostic end to end.
+#[test]
+fn multiring_schedule_survives_chaos_bitwise() {
+    let mut cfg = base_cfg();
+    cfg.allreduce = "multiring".into();
+    let (ref_params, ref_bn, _) = run_to_end(cfg.clone());
+    cfg.fault_spec = "crash@2:1".into();
+    let (params, bn, t) = run_to_end(cfg);
+    assert_eq!(ref_params, params, "multiring: params diverged after crash recovery");
+    assert_eq!(ref_bn, bn, "multiring: bn diverged after crash recovery");
+    assert!(t.recovery_count() >= 1);
 }
 
 /// Satellite regression (the PR-2 deadlock): a worker PANIC must never
@@ -318,4 +353,173 @@ fn crash_without_snapshots_fails_cleanly() {
     }
     assert!(failed, "a crash with no restore point must error, not hang or continue");
     drop(t);
+}
+
+/// PR-8 tentpole grid: a scheduled drain + later join are pure ROUTING
+/// moves — across pipeline depth {1, 2} × wire {f32, q8+EF} × allreduce
+/// schedule {hier, torus} the run finishes bitwise identical to the
+/// fixed fleet, with zero recoveries (membership changes are not
+/// faults), the drained thread never re-spawned, and the typed timeline
+/// recording both transitions.
+#[test]
+fn elastic_drain_and_join_are_bitwise_across_depth_wire_and_schedule() {
+    for depth in [1usize, 2] {
+        for wire in ["f32", "q8"] {
+            for schedule in ["hier", "torus"] {
+                let what = format!("depth={depth} wire={wire} schedule={schedule}");
+                let mut cfg = base_cfg();
+                cfg.pipeline_depth = depth;
+                cfg.wire = wire.into();
+                cfg.allreduce = schedule.into();
+
+                let (ref_params, ref_bn, _) = run_to_end(cfg.clone());
+
+                // Drain seat 1 before step 1; admit it back before step 3.
+                cfg.fleet_spec = "drain@1:1;join@3".into();
+                let (params, bn, t) = run_to_end(cfg);
+
+                assert_eq!(ref_params, params, "{what}: drain/join changed the bits");
+                assert_eq!(ref_bn, bn, "{what}: drain/join changed the bn bits");
+                assert_eq!(
+                    t.recovery_count(),
+                    0,
+                    "{what}: a scheduled membership change is not a fault"
+                );
+                assert_eq!(t.phys_workers_alive(), 2, "{what}: joined fleet is full strength");
+                assert!(t.reroutes() >= 2, "{what}: drain and join must each reroute");
+                let kinds: Vec<_> = t.fleet_events().iter().map(|e| e.action.name()).collect();
+                for need in ["drain", "join"] {
+                    assert!(kinds.contains(&need), "{what}: missing {need} in {kinds:?}");
+                }
+                // Both transitions moved at least one logical worker, and
+                // the join re-used the drained seat's live thread (no
+                // spawn): its cost is bounded by a routing flip, not a
+                // thread start + warm (asserted loosely via moved > 0 —
+                // cost_ms is wall-clock and not robust in CI).
+                for e in t.fleet_events() {
+                    assert!(e.moved > 0, "{what}: {} event moved nobody", e.action.name());
+                }
+            }
+        }
+    }
+}
+
+/// Straggler rebalance is bitwise and has its escape hatch: a forced
+/// penalty verdict moves routing off the slow seat (same bits, no
+/// recovery), the penalty expires back via a Restore event when the run
+/// is long enough, and `--no-rebalance` turns the whole policy off.
+#[test]
+fn rebalance_penalty_is_bitwise_and_no_rebalance_disables_it() {
+    let (ref_params, ref_bn, _) = run_to_end(base_cfg());
+
+    // Forced verdict on seat 0 before step 1: cooldown (8 steps) outlives
+    // this 5-step run, so the penalty stays in force to the end.
+    let mut cfg = base_cfg();
+    cfg.fleet_spec = "penalize@1:0".into();
+    let (params, bn, t) = run_to_end(cfg);
+    assert_eq!(ref_params, params, "rebalance penalty changed the bits");
+    assert_eq!(ref_bn, bn, "rebalance penalty changed the bn bits");
+    assert_eq!(t.recovery_count(), 0, "a routing penalty is not a fault");
+    assert!(t.reroutes() >= 1, "the penalty must move routing");
+    let kinds: Vec<_> = t.fleet_events().iter().map(|e| e.action.name()).collect();
+    assert!(kinds.contains(&"rebalance"), "missing rebalance event: {kinds:?}");
+
+    // A longer run outlives the cooldown: the seat is restored.
+    let mut cfg = base_cfg();
+    cfg.total_steps = 12;
+    cfg.fleet_spec = "penalize@1:0".into();
+    let (_, _, t) = run_to_end(cfg);
+    let kinds: Vec<_> = t.fleet_events().iter().map(|e| e.action.name()).collect();
+    assert!(kinds.contains(&"restore"), "cooldown expiry must restore the seat: {kinds:?}");
+
+    // Escape hatch: --no-rebalance makes the same spec a no-op.
+    let mut cfg = base_cfg();
+    cfg.fleet_spec = "penalize@1:0".into();
+    cfg.rebalance = false;
+    let (params, bn, t) = run_to_end(cfg);
+    assert_eq!(ref_params, params, "--no-rebalance run diverged");
+    assert_eq!(ref_bn, bn);
+    assert_eq!(t.reroutes(), 0, "--no-rebalance must suppress all rebalance routing");
+    assert!(t.fleet_events().is_empty(), "--no-rebalance run logged {:?}", t.fleet_events());
+}
+
+/// Seeded random elastic plans (the `--fleet seed:N` path) must never
+/// deadlock — joins, drains and penalties in any order, including
+/// refused no-ops (drain of the last seat, join of a full fleet) — and
+/// must stay bitwise identical to the fixed fleet. Same watchdog idiom
+/// as the random fault sweep; `CHAOS_FULL=1` widens the seed list for
+/// the nightly soak.
+#[test]
+fn random_elastic_plans_never_deadlock_and_stay_bitwise() {
+    let (ref_params, ref_bn, _) = run_to_end(base_cfg());
+    let seeds: &[u64] = if std::env::var("CHAOS_FULL").map(|v| v != "0").unwrap_or(false) {
+        &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    } else {
+        &[1, 2, 3, 4]
+    };
+    for &seed in seeds {
+        // The exact plan the trainer will draw, printed into the failure
+        // message so any hang or divergence names its schedule.
+        let plan = ElasticPlan::generate(seed, 5, 2, 3);
+        let descs: Vec<String> = plan
+            .specs()
+            .iter()
+            .map(|s| format!("{}@{}", s.kind.describe(), s.step))
+            .collect();
+        let what = format!("seed={seed} plan=[{}]", descs.join(", "));
+
+        let mut cfg = base_cfg();
+        cfg.fault_seed = seed;
+        cfg.fleet_spec = "seed:3".into();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = what.clone();
+        let h = std::thread::spawn(move || {
+            let (p, b, t) = run_to_end(cfg);
+            tx.send((p, b, t.recovery_count())).unwrap_or_else(|_| panic!("{w}: send"));
+        });
+        let (params, bn, recoveries) = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("{what}: trainer deadlocked (watchdog fired)"));
+        h.join().unwrap();
+        assert_eq!(ref_params, params, "{what}: diverged");
+        assert_eq!(ref_bn, bn, "{what}: bn diverged");
+        assert_eq!(recoveries, 0, "{what}: elastic transitions must not trip recovery");
+    }
+}
+
+/// The adaptive supervision deadline end to end: a run of fast steps
+/// holds the configured floor (short early steps never shrink it into
+/// false positives), while a genuinely slow fleet — three delayed,
+/// heartbeating steps — expands the effective deadline above the floor
+/// without ever declaring anyone lost.
+#[test]
+fn adaptive_deadline_holds_floor_for_fast_steps_and_expands_for_slow() {
+    // Fast steps: the floor is a hard lower bound, and no healthy worker
+    // is ever declared lost (the misfire the floor exists to prevent).
+    let (_, _, t) = run_to_end(base_cfg());
+    assert!(
+        t.effective_deadline_ms() >= 300,
+        "short early steps must never pull the deadline below its floor (got {} ms)",
+        t.effective_deadline_ms()
+    );
+    assert_eq!(t.recovery_count(), 0, "fast clean steps misfired into a recovery");
+    assert!(
+        !event_kinds(&t).contains(&"worker_lost"),
+        "fast clean steps misfired a loss: {:?}",
+        event_kinds(&t)
+    );
+
+    // Slow fleet: worker 0 heartbeats through a 400 ms delay on three of
+    // five steps. The rolling median step time is ~0.4 s, so the
+    // effective deadline becomes factor (4.0) x median > floor — and the
+    // delays are waited for, never declared lost.
+    let mut cfg = base_cfg();
+    cfg.fault_spec = "delay@1:0:400;delay@2:0:400;delay@3:0:400".into();
+    let (_, _, t) = run_to_end(cfg);
+    assert_eq!(t.recovery_count(), 0, "heartbeating delays must never be declared lost");
+    assert!(
+        t.effective_deadline_ms() > 300,
+        "a slow fleet must expand the adaptive deadline (got {} ms)",
+        t.effective_deadline_ms()
+    );
 }

@@ -29,6 +29,14 @@ BENCH_pipeline.json — invariants the pipeline/wire/fault PRs promise:
      of detection + re-shard + replay stayed below one clean run's
      worth of wall-clock (overhead_frac < 1.0; detection deadlines
      dominate, so this is loose enough for noisy runners).
+  4b. the elastic-fleet section (elastic fleet PR) exists and holds:
+     a scheduled drain + re-admission actually rerouted (>= 1 reroute
+     in the fleet timeline), stayed BITWISE equal to the fixed-fleet
+     run (exact, NO tolerance — membership is routing, not numerics),
+     and the whole drain+join episode cost less than ONE clean
+     step-equivalent of wall-clock (elastic_elapsed_s - clean_elapsed_s
+     < clean_elapsed_s / steps): both transitions are pure routing
+     flips, with no detection deadline and no respawn on this path.
 
 BENCH_fig2.json — invariants the topology-aware collectives PR promises:
 
@@ -144,13 +152,42 @@ def check_pipeline(bench: dict) -> None:
             f"cost more than a whole clean run"
         )
 
+    # Elastic-fleet section (elastic fleet PR).
+    elastic = bench.get("elastic")
+    if not isinstance(elastic, dict):
+        fail("missing 'elastic' section")
+    for key in ("steps", "clean_elapsed_s", "elastic_elapsed_s", "reroutes"):
+        v = elastic.get(key)
+        if not isinstance(v, (int, float)):
+            fail(f"'elastic.{key}' missing or non-numeric: {v!r}")
+    if elastic.get("bitwise_equal") is not True:
+        fail(
+            f"elastic membership changes must be bitwise no-ops: "
+            f"{elastic.get('bitwise_equal')!r}"
+        )
+    if elastic["reroutes"] < 1:
+        fail(f"the drained seat must reroute at least once: {elastic['reroutes']!r}")
+    e_steps = elastic["steps"]
+    if e_steps < 1:
+        fail(f"'elastic.steps' must be >= 1: {e_steps!r}")
+    clean_step_s = elastic["clean_elapsed_s"] / e_steps
+    elastic_overhead_s = elastic["elastic_elapsed_s"] - elastic["clean_elapsed_s"]
+    if elastic_overhead_s >= clean_step_s:
+        fail(
+            f"drain+join episode cost {elastic_overhead_s:.4f} s >= one clean "
+            f"step-equivalent ({clean_step_s:.4f} s): elastic transitions must be "
+            f"routing flips, not pool rebuilds"
+        )
+
     print(
         f"check_bench: OK: exposed comm depth1={d1:.4f} -> depth2={d2:.4f} "
         f"(cross-step hidden {bench['depth2']['cross_hidden_ms_per_step']:.4f} ms/step); "
         f"wire q8 exposed {eq8:.4f} <= f16 {ef16:.4f} + tol, "
         f"bytes {byte_ratio:.3f}x below f16; "
         f"faults: {int(recoveries)} recoveries, bitwise, "
-        f"overhead {overhead:.3f} < 1.0"
+        f"overhead {overhead:.3f} < 1.0; "
+        f"elastic: {int(elastic['reroutes'])} reroute(s), bitwise, "
+        f"drain+join {elastic_overhead_s:.4f} s < {clean_step_s:.4f} s step-equiv"
     )
 
 
