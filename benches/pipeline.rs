@@ -1,7 +1,9 @@
 //! Pipelined vs sequential step executor: throughput, exposed-comm
 //! fraction for CHUNKED vs whole-layer bucket plans, the cross-step
-//! double-buffering (depth 1 vs depth 2) comparison with steady-state vs
-//! cold-start accounting, and the simulator calibration loop (measured
+//! pipelining (depth 1 vs 2 vs 4) comparison with steady-state vs
+//! cold-start accounting, the work-stealing task runtime vs the pinned
+//! fixed-pool lane schedule (`--no-steal`), and the simulator
+//! calibration loop (measured
 //! trace → overlap replay + α–β fit with residuals → `--chunk-bytes
 //! auto` plan derived from the fit). Writes the headline numbers to
 //! BENCH_pipeline.json (repo root; uploaded as a CI artifact and
@@ -108,6 +110,29 @@ fn main() {
     let d2_trainer = Trainer::new(d2_cfg, engine.clone()).unwrap();
     let (d2_ips, d2_steady_ips, mut d2_trainer) = run(d2_trainer, warmup, steps);
 
+    // ---- pipelined depth 4 (N-slot generation ring), chunked -------------
+    // Under synchronous loss reporting depths 2 and 4 schedule the same
+    // single parked tail, so this row is a REGRESSION fence (deeper slots
+    // must cost nothing), not a speedup claim.
+    let mut d4_cfg = bench_cfg();
+    d4_cfg.chunk_bytes = chunk_bytes;
+    d4_cfg.pipeline_depth = 4;
+    let d4_trainer = Trainer::new(d4_cfg, engine.clone()).unwrap();
+    let (d4_ips, d4_steady_ips, d4_trainer) = run(d4_trainer, warmup, steps);
+
+    // ---- fixed-pool baseline: same depth-2 config, stealing off ----------
+    // `--no-steal` pins every bucket to its static lane — the pre-runtime
+    // schedule. The gate requires the work-stealing run to be no slower
+    // (steady-state) and to expose no more comm, within tolerance.
+    let mut fixed_cfg = bench_cfg();
+    fixed_cfg.chunk_bytes = chunk_bytes;
+    fixed_cfg.pipeline_depth = 2;
+    fixed_cfg.steal = false;
+    let fixed_trainer = Trainer::new(fixed_cfg, engine.clone()).unwrap();
+    let (fixed_ips, fixed_steady_ips, fixed_trainer) = run(fixed_trainer, warmup, steps);
+    let (fixed_tasks, _, _) = fixed_trainer.runtime_stats();
+    assert_eq!(fixed_tasks, 0, "--no-steal must bypass the task runtime");
+
     // ---- same depth-2 chunked config on the q8 wire (int8 + EF) ----------
     let mut q8_cfg = bench_cfg();
     q8_cfg.chunk_bytes = chunk_bytes;
@@ -121,7 +146,10 @@ fn main() {
     let exposed_unchunked = unchunked_trainer.breakdown.exposed_comm_frac();
     let exposed_d1 = d1_trainer.breakdown.exposed_comm_frac();
     let exposed_d2 = d2_trainer.breakdown.exposed_comm_frac();
+    let exposed_d4 = d4_trainer.breakdown.exposed_comm_frac();
+    let exposed_fixed = fixed_trainer.breakdown.exposed_comm_frac();
     let exposed_q8 = q8_trainer.breakdown.exposed_comm_frac();
+    let (task_count, steal_count, worker_idle_frac) = d2_trainer.runtime_stats();
     let cross_hidden_ms = d2_trainer.breakdown.cross_hidden_s.mean() * 1e3;
     let f16_wire = d2_trainer.wire_totals().clone();
     let q8_wire = q8_trainer.wire_totals().clone();
@@ -170,6 +198,22 @@ fn main() {
         format!("{:.1}%", d2_trainer.breakdown.overlap_efficiency() * 100.0),
     ]);
     t.row(&[
+        "pipelined d4 (4-slot ring)".into(),
+        format!("{chunked_plan_buckets}"),
+        format!("{d4_ips:.1}"),
+        format!("{d4_steady_ips:.1}"),
+        format!("{:.1}%", exposed_d4 * 100.0),
+        format!("{:.1}%", d4_trainer.breakdown.overlap_efficiency() * 100.0),
+    ]);
+    t.row(&[
+        "pipelined d2 (fixed lanes, --no-steal)".into(),
+        format!("{chunked_plan_buckets}"),
+        format!("{fixed_ips:.1}"),
+        format!("{fixed_steady_ips:.1}"),
+        format!("{:.1}%", exposed_fixed * 100.0),
+        format!("{:.1}%", fixed_trainer.breakdown.overlap_efficiency() * 100.0),
+    ]);
+    t.row(&[
         "pipelined d2 (q8 wire + EF)".into(),
         format!("{}", q8_trainer.bucket_plan().buckets.len()),
         format!("{q8_ips:.1}"),
@@ -188,6 +232,13 @@ fn main() {
         q8_quant_err
     );
     println!("speedup: {speedup:.2}x (depth-2 chunked pipelined over sequential)");
+    println!(
+        "task runtime: {task_count} reduce tasks, {steal_count} stolen, pool idle {:.1}% \
+         (steal {:.1} img/s vs fixed lanes {:.1} img/s steady-state)",
+        worker_idle_frac * 100.0,
+        d2_steady_ips,
+        fixed_steady_ips
+    );
     println!(
         "chunking: exposed comm {:.1}% -> {:.1}% at {} lanes; double buffering: {:.1}% -> \
          {:.1}% ({cross_hidden_ms:.3} ms/step hidden by the next step's ramp-up)\n",
@@ -405,6 +456,38 @@ fn main() {
                 (
                     "next_step_window_ms",
                     Json::Num(trace.next_step_window_s * 1e3),
+                ),
+            ]),
+        ),
+        (
+            "depth4",
+            Json::obj(vec![
+                ("images_per_sec", Json::Num(d4_ips)),
+                ("steady_state_images_per_sec", Json::Num(d4_steady_ips)),
+                ("exposed_comm_frac", Json::Num(exposed_d4)),
+            ]),
+        ),
+        // Work-stealing task runtime vs the pinned fixed-pool schedule
+        // (both depth 2, chunked): the CI gate requires live task/steal
+        // counters, a sane idle fraction, steady-state throughput no
+        // worse than the fixed pool and exposed comm no higher — within
+        // tolerance, lanes (2) < workers (4) here.
+        (
+            "runtime",
+            Json::obj(vec![
+                ("pipeline_depth", Json::Num(d2_trainer.cfg.pipeline_depth as f64)),
+                ("task_count", Json::Num(task_count as f64)),
+                ("steal_count", Json::Num(steal_count as f64)),
+                ("worker_idle_frac", Json::Num(worker_idle_frac)),
+                ("steady_state_images_per_sec", Json::Num(d2_steady_ips)),
+                ("exposed_comm_frac", Json::Num(exposed_d2)),
+                (
+                    "fixed_pool",
+                    Json::obj(vec![
+                        ("steady_state_images_per_sec", Json::Num(fixed_steady_ips)),
+                        ("exposed_comm_frac", Json::Num(exposed_fixed)),
+                        ("task_count", Json::Num(fixed_tasks as f64)),
+                    ]),
                 ),
             ]),
         ),

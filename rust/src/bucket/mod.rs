@@ -421,12 +421,16 @@ impl BucketPlan {
 /// order with strictly descending spans, so in-order publication is
 /// exactly "everything whose span lies at or above the frontier".
 ///
-/// The cursor is generation-TAGGED: under the double-buffered cross-step
-/// executor a worker alternates between two packed gradient buffers, and
-/// `begin(gen)` re-arms the cursor for the next generation — carrying the
-/// tag along is what lets the publish side (the coordinator's
-/// `GenLedger`) assert that a frontier advance is credited to the step it
-/// belongs to, never to the other in-flight generation.
+/// The cursor is generation-TAGGED: under the cross-step executor a
+/// worker rotates over `pipeline_depth` packed gradient buffers (slot
+/// `gen % depth`), and `begin(gen)` re-arms the cursor for the next
+/// generation — carrying the tag along is what lets the publish side
+/// (the coordinator's `GenLedger`, itself N-slotted) assert that a
+/// frontier advance is credited to the step it belongs to, never to any
+/// other in-flight generation. The cursor itself holds no depth: one
+/// worker thread processes its generations strictly in order, so a
+/// single (spans, next, gen) triple re-armed per generation is exactly
+/// the per-slot wraparound state the ledger asserts against.
 #[derive(Debug)]
 pub struct FrontierCursor {
     spans: Arc<Vec<(usize, usize)>>,
@@ -706,6 +710,27 @@ mod tests {
         let first = cursor.advance(spans[1].0).count();
         assert!(first >= 1);
         assert_eq!(first + cursor.finish().count(), spans.len());
+    }
+
+    #[test]
+    fn frontier_cursor_rotates_through_depth_n_generation_slots() {
+        // Two full wraparounds of an 8-slot generation window: the cursor
+        // must re-arm cleanly at every `gen % depth` slot boundary — the
+        // worker-side half of the ledger's per-slot wraparound assert.
+        let m = chunky_manifest();
+        let plan = BucketPlan::build_chunked(&m, 2 * 1024, 2, 2 * 1024);
+        let spans = Arc::new(plan.spans_with_padding());
+        let mut cursor = FrontierCursor::new(spans.clone());
+        for gen in 0u64..16 {
+            cursor.begin(gen);
+            assert_eq!(cursor.gen(), gen);
+            let mut published = 0usize;
+            for &(lo, _) in spans.iter() {
+                published += cursor.advance(lo).count();
+            }
+            assert_eq!(published, spans.len(), "gen {gen} under-published");
+            assert_eq!(cursor.finish().count(), 0);
+        }
     }
 
     #[test]

@@ -115,12 +115,20 @@ pub struct RunConfig {
     pub link_rack_alpha_us: f64,
     /// Rack-tier α–β bandwidth in GB/s. 0 = inherit `link_beta_gbps`.
     pub link_rack_beta_gbps: f64,
-    /// Cross-step pipeline depth (pipelined executor only): 1 = each
-    /// step's comm/update tail finishes inside the step; 2 = the tail
-    /// overlaps the next step's micro-batch draw + ramp-up (double
-    /// buffering, the default). Bit-identical either way — depth trades
+    /// Cross-step pipeline depth (pipelined executor only), 1..=8:
+    /// 1 = each step's comm/update tail finishes inside the step; 2 = the
+    /// tail overlaps the next step's micro-batch draw + ramp-up (double
+    /// buffering, the default); deeper values rotate N generation slots
+    /// (ledgers + buffers). Bit-identical at every depth — depth trades
     /// wall-clock, never numerics.
     pub pipeline_depth: usize,
+    /// Work-stealing task runtime for the per-bucket reduce hops
+    /// (default ON): readiness edges enqueue tasks on per-seat
+    /// Chase–Lev deques and idle threads steal them, comm lanes first.
+    /// `--no-steal` pins every bucket to its static lane (the legacy
+    /// fixed-pool stride schedule) — a scheduling change only, the bits
+    /// are identical either way.
+    pub steal: bool,
     /// Cross-step parameter fence strictness: "full" (default) or
     /// "layer" (see [`FenceMode`]).
     pub fence: String,
@@ -235,6 +243,7 @@ impl Default for RunConfig {
             link_rack_alpha_us: 0.0,
             link_rack_beta_gbps: 0.0,
             pipeline_depth: 2,
+            steal: true,
             fence: "full".into(),
             comm_threads: 2,
             overlap: true,
@@ -414,6 +423,9 @@ impl RunConfig {
         c.link_rack_alpha_us = args.get_f64("link-rack-alpha-us", c.link_rack_alpha_us)?;
         c.link_rack_beta_gbps = args.get_f64("link-rack-beta-gbps", c.link_rack_beta_gbps)?;
         c.pipeline_depth = args.get_usize("pipeline-depth", c.pipeline_depth)?;
+        if args.flag("no-steal") {
+            c.steal = false;
+        }
         c.fence = args.get_or("fence", &c.fence).to_string();
         c.comm_threads = args.get_usize("comm-threads", c.comm_threads)?;
         if args.flag("no-overlap") {
@@ -490,6 +502,7 @@ impl RunConfig {
             link_rack_alpha_us: get_f64("link_rack_alpha_us", d.link_rack_alpha_us),
             link_rack_beta_gbps: get_f64("link_rack_beta_gbps", d.link_rack_beta_gbps),
             pipeline_depth: get_usize("pipeline_depth", d.pipeline_depth),
+            steal: get_bool("steal", d.steal),
             fence: get_str("fence", &d.fence),
             comm_threads: get_usize("comm_threads", d.comm_threads),
             overlap: get_bool("overlap", d.overlap),
@@ -540,8 +553,10 @@ impl RunConfig {
         anyhow::ensure!(self.bucket_bytes > 0, "bucket_bytes must be > 0");
         anyhow::ensure!(self.comm_threads >= 1, "comm_threads must be >= 1");
         anyhow::ensure!(
-            (1..=2).contains(&self.pipeline_depth),
-            "pipeline_depth must be 1 or 2"
+            (1..=8).contains(&self.pipeline_depth),
+            "pipeline_depth must be in 1..=8 (1 = no cross-step overlap, \
+             2 = double buffering, up to 8 generation slots), got {}",
+            self.pipeline_depth
         );
         anyhow::ensure!(
             self.link_alpha_us >= 0.0 && self.link_beta_gbps > 0.0,
@@ -685,7 +700,13 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"wire": "f8"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"comm_threads": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"pipeline_depth": 0}"#).is_err());
-        assert!(RunConfig::from_json(r#"{"pipeline_depth": 3}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"pipeline_depth": 9}"#).is_err());
+        // The depth-0 error must tell the caller what IS supported.
+        let e = RunConfig::from_json(r#"{"pipeline_depth": 0}"#).unwrap_err();
+        assert!(e.to_string().contains("1..=8"), "unhelpful error: {e}");
+        // Depths above the historical 2 are valid now (N-slot ledgers).
+        assert!(RunConfig::from_json(r#"{"pipeline_depth": 3}"#).is_ok());
+        assert!(RunConfig::from_json(r#"{"pipeline_depth": 8}"#).is_ok());
         assert!(RunConfig::from_json(r#"{"fence": "vibes"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"link_beta_gbps": 0}"#).is_err());
     }
@@ -835,6 +856,15 @@ mod tests {
         let c = RunConfig::from_json(r#"{"pipeline_depth": 1, "fence": "layer"}"#).unwrap();
         assert_eq!(c.pipeline_depth, 1);
         assert_eq!(c.fence_mode().unwrap(), FenceMode::PerLayer);
+        let c = RunConfig::from_args(&args(&["train", "--pipeline-depth", "4"])).unwrap();
+        assert_eq!(c.pipeline_depth, 4);
+        // The task-runtime escape hatch: stealing defaults on, --no-steal
+        // (CLI) / "steal": false (JSON) pin the legacy stride schedule.
+        assert!(d.steal, "work stealing defaults on");
+        let c = RunConfig::from_args(&args(&["train", "--no-steal"])).unwrap();
+        assert!(!c.steal);
+        let c = RunConfig::from_json(r#"{"steal": false}"#).unwrap();
+        assert!(!c.steal);
     }
 
     #[test]

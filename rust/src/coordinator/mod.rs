@@ -169,6 +169,18 @@ pub struct TrainReport {
     /// Routing-table rewrites that moved at least one logical worker
     /// (scale-down, admission, rebalance — not no-op resets).
     pub reroute_count: usize,
+    /// Reduce-hop tasks executed on the work-stealing runtime across the
+    /// run (0 on the sequential executor; legacy-stripe generations —
+    /// those carrying an injected lane fault — queue no tasks).
+    pub runtime_task_count: u64,
+    /// Runtime tasks executed by a thread OTHER than the bucket's
+    /// publisher — stolen off a peer's deque or taken from the global
+    /// injector. The comm-priority stealing the runtime exists for.
+    pub runtime_steal_count: u64,
+    /// Mean pool-thread idle fraction over the run: 1 − Σ busy-ns /
+    /// Σ thread-capacity-ns, summed over every pool the run spawned.
+    /// 0 when no pipelined pool ever ran.
+    pub worker_idle_frac: f64,
 }
 
 impl TrainReport {
@@ -277,6 +289,9 @@ impl TrainReport {
                 Json::Arr(self.fleet_events.iter().map(FleetEvent::to_json).collect()),
             ),
             ("reroute_count", Json::Num(self.reroute_count as f64)),
+            ("runtime_task_count", Json::Num(self.runtime_task_count as f64)),
+            ("runtime_steal_count", Json::Num(self.runtime_steal_count as f64)),
+            ("worker_idle_frac", Json::Num(self.worker_idle_frac)),
         ])
     }
 }
@@ -343,14 +358,18 @@ pub struct Trainer {
     ef_err_sq: f64,
 
     // scratch reused across steps (no hot-loop allocation). The primary
-    // buffers serve the sequential executor and EVEN step generations of
-    // the pipelined one; the `_alt` set is the second generation slot of
-    // the cross-step double buffer (odd generations at depth 2),
-    // allocated lazily on the first depth-2 pipelined step.
+    // buffers serve the sequential executor and generation slot 0 of the
+    // pipelined one; the `_alt` set is slot 1 (so depth 2 — the default —
+    // reproduces the historical odd/even alternation), and the `_ext`
+    // tiers are slots 2..depth for `--pipeline-depth` > 2. Slot buffers
+    // beyond the primaries are allocated lazily on the first pipelined
+    // step that needs them.
     worker_grads: Vec<Vec<f32>>,
     worker_grads_alt: Vec<Vec<f32>>,
+    worker_grads_ext: Vec<Vec<Vec<f32>>>,
     worker_states: Vec<Vec<f32>>,
     worker_states_alt: Vec<Vec<f32>>,
+    worker_states_ext: Vec<Vec<Vec<f32>>>,
     batches: Vec<Batch>,
     /// Persistent allreduce engines for the SEQUENTIAL executor, one per
     /// concurrent bucket lane; the chunk plans they cache make the
@@ -375,9 +394,12 @@ pub struct Trainer {
     fence: Option<Arc<worker_pool::ParamFence>>,
     /// Fence strictness (from `cfg.fence`), resolved once.
     fence_mode: FenceMode,
-    /// The dispatched-but-unfinished step generation (depth 2 parks each
-    /// step's comm/update tail here; retired by the next step or `flush`).
-    inflight: Option<pipeline::InflightTail>,
+    /// Dispatched-but-unfinished step generations, oldest first (depth
+    /// ≥ 2 parks each step's comm/update tail here; retired by the next
+    /// step or `flush`). Under synchronous loss reporting at most one
+    /// tail is parked at a step boundary whatever the depth — see the
+    /// `pipeline` module docs.
+    inflight: std::collections::VecDeque<pipeline::InflightTail>,
     /// Lane reports that arrived for a generation other than the one
     /// being drained (see `drain_lane_msgs`).
     pending_lane_msgs: Vec<worker_pool::LaneMsg>,
@@ -430,6 +452,14 @@ pub struct Trainer {
     /// End-of-step reports the SURVIVING seats still owed when the loss
     /// was declared — the exact count `live_scale_down`'s quiesce drains.
     stale_reports: usize,
+
+    // ---- task-runtime accounting (exec module, via the pool's TaskHub) --
+    /// Counters absorbed from pools that have been TORN DOWN (fault
+    /// teardown, lane-rebuild respawn): (tasks, steals, busy ns, thread-
+    /// capacity ns). The live pool's counters are added on read, so a
+    /// run's totals survive any number of respawns without double
+    /// counting.
+    runtime_absorbed: (u64, u64, u64, u64),
 
     pub breakdown: StepBreakdown,
     wire_totals: WireStats,
@@ -564,11 +594,13 @@ impl Trainer {
             },
             ef_err_sq: 0.0,
             worker_grads: (0..workers).map(|_| vec![0.0; np]).collect(),
-            // Second generation slot: allocated lazily by `ensure_pool`
-            // the first time a depth-2 pipelined step runs.
+            // Generation slots ≥ 1: allocated lazily by `ensure_pool`
+            // the first time a pipelined step needs them.
             worker_grads_alt: Vec::new(),
+            worker_grads_ext: Vec::new(),
             worker_states: (0..workers).map(|_| vec![0.0; sc]).collect(),
             worker_states_alt: Vec::new(),
+            worker_states_ext: Vec::new(),
             batches: (0..workers)
                 .map(|_| Batch { images: Vec::new(), labels: Vec::new() })
                 .collect(),
@@ -579,7 +611,7 @@ impl Trainer {
             reduced: None,
             fence: None,
             fence_mode,
-            inflight: None,
+            inflight: std::collections::VecDeque::new(),
             pending_lane_msgs: Vec::new(),
             chunk_bytes_used,
             last_pipeline: None,
@@ -597,6 +629,7 @@ impl Trainer {
             deadline,
             lost_slots: Vec::new(),
             stale_reports: 0,
+            runtime_absorbed: (0, 0, 0, 0),
             breakdown: StepBreakdown::default(),
             wire_totals: WireStats::default(),
             images_seen: 0,
@@ -720,6 +753,37 @@ impl Trainer {
         self.phys_alive
     }
 
+    /// Fold the live pool's task-runtime counters into the dead-pool
+    /// accumulator. Called exactly once per pool, immediately before the
+    /// pool is discarded (fault teardown, lane-rebuild respawn) — the
+    /// live pool's counters are otherwise added at read time.
+    pub(crate) fn absorb_runtime_stats(&mut self) {
+        if let Some(p) = &self.pool {
+            let (t, s, b, w) = p.runtime_totals();
+            self.runtime_absorbed.0 += t;
+            self.runtime_absorbed.1 += s;
+            self.runtime_absorbed.2 += b;
+            self.runtime_absorbed.3 += w;
+        }
+    }
+
+    /// Run-wide task-runtime counters: (tasks executed, tasks stolen,
+    /// pool-thread idle fraction). Sums every torn-down pool's absorbed
+    /// totals with the live pool's, consuming neither; idle fraction is
+    /// 1 − Σ busy-ns / Σ thread-capacity-ns (0 with no pool history).
+    pub fn runtime_stats(&self) -> (u64, u64, f64) {
+        let (mut t, mut s, mut b, mut w) = self.runtime_absorbed;
+        if let Some(p) = &self.pool {
+            let (lt, ls, lb, lw) = p.runtime_totals();
+            t += lt;
+            s += ls;
+            b += lb;
+            w += lw;
+        }
+        let idle = if w == 0 { 0.0 } else { (1.0 - b as f64 / w as f64).clamp(0.0, 1.0) };
+        (t, s, idle)
+    }
+
     /// Typed elastic-fleet timeline so far: joins, drains, losses,
     /// rebalance penalties and restores, in occurrence order.
     pub fn fleet_events(&self) -> &[FleetEvent] {
@@ -789,7 +853,7 @@ impl Trainer {
             && self.cfg.recover
             && self.cfg.ckpt_every > 0
             && self.last_snapshot.is_none()
-            && self.inflight.is_none()
+            && self.inflight.is_empty()
         {
             self.last_snapshot = Some(Snapshot {
                 step: self.step_idx,
@@ -1031,17 +1095,21 @@ impl Trainer {
         // Outside the update timer so `update_s` means the same thing in
         // both executors (pure master update, no BN bookkeeping).
         t_up.stop_into(&mut self.breakdown.update_s);
-        self.apply_bn_policy(false);
+        self.apply_bn_policy(0);
 
         Ok((loss_sum, correct_sum))
     }
 
     /// BN statistics policy (paper III-A-2): worker-local (adopt worker
-    /// 0's) or mean-synced. Shared by both executors; `alt` selects which
-    /// generation's states buffers to read (the sequential executor and
-    /// even pipelined generations use the primary set).
-    pub(crate) fn apply_bn_policy(&mut self, alt: bool) {
-        let states = if alt { &self.worker_states_alt } else { &self.worker_states };
+    /// 0's) or mean-synced. Shared by both executors; `slot` selects
+    /// which generation slot's states buffers to read (the sequential
+    /// executor always reads slot 0, the primary set).
+    pub(crate) fn apply_bn_policy(&mut self, slot: usize) {
+        let states = match slot {
+            0 => &self.worker_states,
+            1 => &self.worker_states_alt,
+            k => &self.worker_states_ext[k - 2],
+        };
         match self.bn_mode {
             BnStatsMode::Local => self.bn_state.copy_from_slice(&states[0]),
             BnStatsMode::Mean => {
@@ -1444,6 +1512,9 @@ impl Trainer {
             recovery_cost_s: self.recovery_cost_s,
             fleet_events: self.fleet.events().to_vec(),
             reroute_count: self.fleet.reroutes(),
+            runtime_task_count: self.runtime_stats().0,
+            runtime_steal_count: self.runtime_stats().1,
+            worker_idle_frac: self.runtime_stats().2,
         })
     }
 }

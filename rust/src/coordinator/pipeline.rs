@@ -1,28 +1,34 @@
-//! The pipelined step executor (paper III-C-2), double-buffered across
-//! steps.
+//! The pipelined step executor (paper III-C-2), generation-buffered
+//! across steps and fed by the work-stealing task runtime.
 //!
 //! `Trainer::step_pipelined` drives one optimization step through the
 //! persistent [`worker_pool`](super::worker_pool): grad workers stream
-//! bucket publications in backward-readiness order, comm lanes reduce each
-//! bucket the moment every worker has published it (while later buckets
-//! are still being computed), and the leader streams the LARS/SGD master
-//! update per bucket as reductions land.
+//! bucket publications in backward-readiness order; each bucket's
+//! reduction becomes a stealable task the instant the LAST worker
+//! publishes it (the completing worker pushes the hop onto its own
+//! Chase–Lev deque), so whichever pool thread is free first — a parked
+//! comm lane, an idle peer, or the publisher itself after its backward —
+//! reduces it while later buckets are still being computed; and the
+//! leader streams the LARS/SGD master update per bucket as reductions
+//! land. Generations carrying an injected lane fault fall back to the
+//! legacy static lane stripe so fault attribution stays per-lane.
 //!
-//! # Cross-step double buffering (`cfg.pipeline_depth = 2`, the default)
+//! # Cross-step overlap (`cfg.pipeline_depth ≥ 2`, default 2)
 //!
 //! The step's TAIL — the last buckets' reductions, the streamed master
 //! update, the lane drain and all accounting — is not finished inside the
 //! step that produced it. `step_pipelined(s)` instead:
 //!
 //! 1. arms the generation-tagged ledgers for generation s and dispatches
-//!    step s's jobs into grad buffer s % 2 (workers immediately zero it
-//!    and draw their first micro-batch, then block on the parameter
-//!    fence);
-//! 2. finishes step s−1's tail ([`Trainer::finish_inflight`]): waits out
-//!    its remaining reductions from buffer (s−1) % 2, streams its
-//!    per-bucket updates — publishing the fence layer by layer, which is
-//!    what releases step s's workers into forward/backward — applies the
-//!    BN policy and drains its lane reports;
+//!    step s's jobs into grad buffer slot s % depth (workers immediately
+//!    zero it and draw their first micro-batch, then block on the
+//!    parameter fence);
+//! 2. retires every parked tail ([`Trainer::finish_inflight`]), oldest
+//!    first: waits out each one's remaining reductions from its
+//!    dispatch-time buffer slot, streams its per-bucket updates —
+//!    publishing the fence layer by layer, which is what releases step
+//!    s's workers into forward/backward — applies the BN policy and
+//!    drains its lane reports;
 //! 3. collects step s's worker reports (the loss) and parks step s's tail
 //!    as the new in-flight generation.
 //!
@@ -37,17 +43,32 @@
 //! determinism grid in `rust/tests/pipeline.rs` enforces this at every
 //! (depth, workers, lanes, accum, precision, algorithm, chunk) point.
 //!
+//! # Depth > 2 under synchronous loss reporting
+//!
+//! The ledgers, buffer slots and the parked-tail queue all rotate over N
+//! generation slots (`--pipeline-depth N`), but note what step 2 above
+//! implies: because `step(s)` RETURNS step s's loss, its workers must
+//! pass fence version s before reporting, and that fence needs every
+//! update through s−1 applied — so the leader retires each tail within
+//! the following step and at most ONE tail is parked at any step
+//! boundary, whatever the depth. Depths 2, 4, 8 therefore schedule (and
+//! compute) identically today; the extra slots are real, tested
+//! machinery (wraparound re-arm asserted per slot) whose payoff arrives
+//! with the ROADMAP's bounded-staleness async-SGD mode, where loss
+//! reporting is allowed to lag and deeper windows genuinely overlap.
+//!
 //! Anything that reads master state (`params()`, `checkpoint()`,
 //! `evaluate()`, `train()`'s report, Drop) first calls
-//! [`Trainer::flush`], which retires the in-flight generation.
+//! [`Trainer::flush`], which retires every in-flight generation.
 
-use super::worker_pool::{LaneJob, LaneMsg, RawBuf, WaitOutcome, WorkerJob};
+use super::worker_pool::{LaneJob, LaneMsg, RawBuf, ReduceCtx, WaitOutcome, WorkerJob};
 use super::Trainer;
 use crate::faults::{FaultEvent, FaultKind, Heartbeats};
 use crate::fleet::{ElasticKind, FleetAction, FleetEvent};
 use crate::overlap::MeasuredPipeline;
 use crate::runtime::{GradVariant, UpdateRule};
 use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize};
 use std::time::{Duration, Instant};
 
 /// Supervisor poll slice: the collect loop re-checks heartbeats at this
@@ -66,14 +87,19 @@ pub(super) struct InflightTail {
     /// on before the tail is finished).
     pub(super) lr: f32,
     pub(super) rule: UpdateRule,
-    /// Which buffer set the generation was dispatched into (captured at
-    /// dispatch: `pipeline`/`cfg.pipeline_depth` are public and could be
-    /// flipped while a tail is parked — the retire path must read the
-    /// buffers the jobs actually wrote, not re-derive the slot).
-    pub(super) alt: bool,
+    /// Which buffer SLOT (`gen % depth`) the generation was dispatched
+    /// into (captured at dispatch: `pipeline`/`cfg.pipeline_depth` are
+    /// public and could be flipped while a tail is parked — the retire
+    /// path must read the buffers the jobs actually wrote, not re-derive
+    /// the slot).
+    pub(super) slot: usize,
     /// Effective depth at dispatch (same flip-proofing: exposure
     /// accounting keys off the depth the step actually ran at).
     pub(super) depth: usize,
+    /// Whether the generation's reductions ran on the task runtime
+    /// (loss attribution differs: a hop can run on ANY pool thread, so
+    /// only an all-threads-silent pool condemns an unreduced bucket).
+    pub(super) task_mode: bool,
     /// Run-clock instant the generation's jobs were dispatched.
     pub(super) dispatch_abs_s: f64,
 }
@@ -83,17 +109,24 @@ impl Trainer {
     /// on first use (so trainers running the sequential executor never
     /// spawn any of it).
     fn ensure_pool(&mut self) {
-        // The second generation's buffers exist only once a depth-2
-        // pipelined step actually runs (sequential and PJRT trainers —
-        // where depth 2 is configured by default but unusable — never pay
-        // the extra workers × Np allocation). Checked outside the
-        // pool-exists early-return so a depth flipped up mid-run still
-        // gets its buffers.
-        if self.depth() == 2 && self.worker_grads_alt.is_empty() {
+        // Later generation-slot buffers exist only once a deep pipelined
+        // step actually runs (sequential and PJRT trainers — where depth
+        // 2 is configured by default but unusable — never pay the extra
+        // workers × Np allocations). Checked outside the pool-exists
+        // early-return so a depth flipped up mid-run still gets its
+        // buffers: slot 1 lives in the historical `_alt` pair, slots
+        // 2..depth in the `_ext` tiers.
+        if self.depth() >= 2 && self.worker_grads_alt.is_empty() {
             let np = self.engine.manifest().padded_param_count;
             let sc = self.engine.manifest().state_count;
             self.worker_grads_alt = (0..self.cfg.workers).map(|_| vec![0.0; np]).collect();
             self.worker_states_alt = (0..self.cfg.workers).map(|_| vec![0.0; sc]).collect();
+        }
+        while self.depth() > 2 && self.worker_grads_ext.len() < self.depth() - 2 {
+            let np = self.engine.manifest().padded_param_count;
+            let sc = self.engine.manifest().state_count;
+            self.worker_grads_ext.push((0..self.cfg.workers).map(|_| vec![0.0; np]).collect());
+            self.worker_states_ext.push((0..self.cfg.workers).map(|_| vec![0.0; sc]).collect());
         }
         if self.pool.is_some() {
             return;
@@ -112,14 +145,17 @@ impl Trainer {
         self.fleet.reset_seats(phys);
         let run_t0 = std::time::Instant::now();
         let nb = self.bucket_spans.len();
+        let depth_slots = self.depth().max(2);
         self.run_t0 = Some(run_t0);
-        self.ready = Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(
+        self.ready = Some(std::sync::Arc::new(super::worker_pool::GenLedger::with_slots(
             nb,
             self.cfg.workers,
             run_t0,
+            depth_slots,
         )));
-        self.reduced =
-            Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(nb, 1, run_t0)));
+        self.reduced = Some(std::sync::Arc::new(
+            super::worker_pool::GenLedger::with_slots(nb, 1, run_t0, depth_slots),
+        ));
         self.fence = Some(std::sync::Arc::new(super::worker_pool::ParamFence::new(
             self.engine.manifest().layers.len(),
             self.step_idx as u64,
@@ -165,8 +201,15 @@ impl Trainer {
         if let Some(f) = &self.fence {
             f.publish_all(u64::MAX);
         }
-        self.inflight = None;
+        // Poison the task runtime's registered contexts BEFORE the join:
+        // executors drop in-flight tasks, steal loops terminate, and the
+        // pool's threads fall through to their closed job channels.
+        if let Some(p) = &self.pool {
+            p.hub().poison_ctxs();
+        }
+        self.inflight.clear();
         self.pending_lane_msgs.clear();
+        self.absorb_runtime_stats();
         self.pool = None; // Drop: close channels, join every thread
         self.ready = None;
         self.reduced = None;
@@ -176,10 +219,17 @@ impl Trainer {
         self.last_pipeline = None;
     }
 
-    /// Which generation buffer set step generation `gen` uses: the `_alt`
-    /// slot on odd generations at depth 2, the primary slot otherwise.
-    fn gen_uses_alt(&self, gen: u64) -> bool {
-        self.depth() == 2 && gen % 2 == 1
+    /// Which generation buffer slot step generation `gen` uses: slot
+    /// `gen % depth` (0 → the primary buffers, 1 → the `_alt` pair,
+    /// k ≥ 2 → `_ext[k − 2]`); always slot 0 at depth 1. Depth 2
+    /// reproduces the historical odd/even alternation exactly.
+    fn gen_slot(&self, gen: u64) -> usize {
+        let d = self.depth();
+        if d <= 1 {
+            0
+        } else {
+            (gen % d as u64) as usize
+        }
     }
 
     /// Apply the step boundary's fleet transitions — cooldown expiries,
@@ -233,6 +283,7 @@ impl Trainer {
             // thread), then respawn with the lane budget restored and one
             // more grad seat.
             self.finish_inflight()?;
+            self.absorb_runtime_stats();
             self.pool = None;
             self.ready = None;
             self.reduced = None;
@@ -296,6 +347,14 @@ impl Trainer {
         if let Some(f) = &self.fence {
             f.publish_all(u64::MAX);
         }
+        // Poison the runtime's contexts too. Note no task of the FAILED
+        // generation can exist: its dead seat published nothing, so no
+        // bucket ever reached the ready target and no completion edge
+        // fired — the poison only covers stragglers of already-retired
+        // generations, whose lane messages the leader already drained.
+        if let Some(p) = &self.pool {
+            p.hub().poison_ctxs();
+        }
         let quiesce_deadline = Duration::from_millis(self.deadline.effective_ms().max(1_000));
         let quiesce_t0 = Instant::now();
         let mut outstanding = self.stale_reports;
@@ -310,18 +369,25 @@ impl Trainer {
             }
         }
         self.stale_reports = 0;
-        self.inflight = None;
+        debug_assert!(
+            self.inflight.is_empty(),
+            "worker loss is detected in the collect loop, after every tail was retired"
+        );
+        self.inflight.clear();
         self.pending_lane_msgs.clear();
         self.last_pipeline = None;
         let run_t0 = self.run_t0.expect("live scale-down with a live pool");
         let nb = self.bucket_spans.len();
-        self.ready = Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(
+        let depth_slots = self.depth().max(2);
+        self.ready = Some(std::sync::Arc::new(super::worker_pool::GenLedger::with_slots(
             nb,
             self.cfg.workers,
             run_t0,
+            depth_slots,
         )));
-        self.reduced =
-            Some(std::sync::Arc::new(super::worker_pool::GenLedger::new(nb, 1, run_t0)));
+        self.reduced = Some(std::sync::Arc::new(
+            super::worker_pool::GenLedger::with_slots(nb, 1, run_t0, depth_slots),
+        ));
         // Seeded at the CURRENT step; the caller's snapshot restore
         // re-seeds it at the replay step right after.
         self.fence = Some(std::sync::Arc::new(super::worker_pool::ParamFence::new(
@@ -357,15 +423,22 @@ impl Trainer {
         let nb = self.bucket_spans.len();
         let workers = self.cfg.workers;
         let gen = self.step_idx as u64;
-        let alt = self.gen_uses_alt(gen);
-        // Normally consecutive generations alternate buffer slots, so the
+        let slot = self.gen_slot(gen);
+        // Normally consecutive generations rotate buffer slots, so a
         // parked tail and the new dispatch never collide. A mid-run flip
         // of the public `cfg.pipeline_depth`/`pipeline` knobs can break
-        // that parity (e.g. depth 2 → 1 with an odd tail parked): the new
-        // generation would then be dispatched into buffers the tail's
-        // lanes are still reducing. Retire the tail first in that case —
-        // correctness over overlap.
-        if matches!(&self.inflight, Some(tail) if tail.alt == alt) {
+        // that rotation (e.g. depth 2 → 1 with an odd tail parked): the
+        // new generation would then be dispatched into buffers — or onto
+        // a ledger slot — the tail's reducers are still using. Retire
+        // everything parked first in that case — correctness over
+        // overlap. (The ledger-congruence arm guards a depth flipped
+        // ABOVE the slot count the ledgers were built with.)
+        let ledger_depth = self.ready.as_ref().expect("pool ensured").depth() as u64;
+        if self
+            .inflight
+            .iter()
+            .any(|t| t.slot == slot || t.gen % ledger_depth == gen % ledger_depth)
+        {
             self.finish_inflight()?;
         }
         let ready = self.ready.as_ref().expect("pool ensured").clone();
@@ -405,6 +478,15 @@ impl Trainer {
             }
         }
 
+        // Task mode is per GENERATION: any injected lane fault pins the
+        // whole generation to the legacy static lane stripe, so the
+        // fault lands on (and is attributed to) exactly the lane the
+        // plan targeted. Steal loops of other in-flight generations
+        // coexist with a legacy generation without interference — lanes
+        // process their jobs serially. `--no-steal` pins every
+        // generation to the legacy schedule.
+        let task_mode = self.cfg.steal && lane_faults.iter().all(|f| f.is_none());
+
         ready.begin(gen);
         reduced.begin(gen);
 
@@ -412,10 +494,10 @@ impl Trainer {
         // model). Gradients/states go to the generation-selected slot.
         let params_buf = RawBuf::new(&mut self.params);
         let bn_buf = RawBuf::new(&mut self.bn_state);
-        let (grad_vecs, state_vecs) = if alt {
-            (&mut self.worker_grads_alt, &mut self.worker_states_alt)
-        } else {
-            (&mut self.worker_grads, &mut self.worker_states)
+        let (grad_vecs, state_vecs) = match slot {
+            0 => (&mut self.worker_grads, &mut self.worker_states),
+            1 => (&mut self.worker_grads_alt, &mut self.worker_states_alt),
+            k => (&mut self.worker_grads_ext[k - 2], &mut self.worker_states_ext[k - 2]),
         };
         let grad_bufs: Vec<RawBuf> = grad_vecs.iter_mut().map(|g| RawBuf::new(g)).collect();
         let state_bufs: Vec<RawBuf> = state_vecs.iter_mut().map(|s| RawBuf::new(s)).collect();
@@ -438,6 +520,22 @@ impl Trainer {
         let dispatch_abs_s = run_t0.elapsed().as_secs_f64();
         let pool = self.pool.as_ref().expect("pool just ensured");
         debug_assert_eq!(lanes, pool.lanes(), "lane split drifted from the live pool");
+        // Register the generation's reduce context BEFORE any job is
+        // dispatched: the completing worker of a bucket's LAST publish
+        // queues the hop task immediately, and an executor resolving the
+        // task must find its buffers. (Legacy generations skip this —
+        // their lanes walk the static stripe and never consult the hub.)
+        if task_mode {
+            pool.hub().register_ctx(std::sync::Arc::new(ReduceCtx {
+                gen,
+                grads: grad_bufs.clone(),
+                spans: self.bucket_spans.clone(),
+                reduced: reduced.clone(),
+                results: pool.lane_result_tx(),
+                remaining: AtomicUsize::new(nb),
+                poisoned: AtomicBool::new(false),
+            }));
+        }
         for w in 0..workers {
             pool.send_worker(
                 route[w],
@@ -458,6 +556,7 @@ impl Trainer {
                     fence: fence.clone(),
                     fence_mode: self.fence_mode,
                     fault: worker_faults[w],
+                    task_mode,
                 },
             );
         }
@@ -471,6 +570,7 @@ impl Trainer {
                     ready: ready.clone(),
                     reduced: reduced.clone(),
                     fault: lane_faults[l],
+                    steal: task_mode,
                 },
             );
         }
@@ -607,12 +707,13 @@ impl Trainer {
 
         // ---- park this step's tail -------------------------------------
         let rule = if self.cfg.lars { UpdateRule::Lars } else { UpdateRule::Sgd };
-        self.inflight = Some(InflightTail {
+        self.inflight.push_back(InflightTail {
             gen,
             lr: self.schedule.lr_at(self.step_idx) as f32,
             rule,
-            alt,
+            slot,
             depth: self.depth(),
+            task_mode,
             dispatch_abs_s,
         });
         if self.depth() == 1 {
@@ -631,13 +732,24 @@ impl Trainer {
         Ok((loss_sum, correct_sum))
     }
 
-    /// Retire the in-flight generation, if any: wait out its remaining
+    /// Retire EVERY parked generation, oldest first. No-op when nothing
+    /// is parked. (Under synchronous loss reporting at most one tail is
+    /// ever parked — see the module docs — but the drain is written for
+    /// the general queue so the bounded-staleness mode can deepen it.)
+    pub(super) fn finish_inflight(&mut self) -> Result<()> {
+        while !self.inflight.is_empty() {
+            self.finish_one_tail()?;
+        }
+        Ok(())
+    }
+
+    /// Retire the OLDEST in-flight generation: wait out its remaining
     /// reductions, stream its per-bucket master updates (publishing the
     /// parameter fence as layers land), apply the BN policy, drain its
     /// lane reports and book the step's overlap accounting. No-op when
     /// nothing is parked.
-    pub(super) fn finish_inflight(&mut self) -> Result<()> {
-        let Some(tail) = self.inflight.take() else {
+    fn finish_one_tail(&mut self) -> Result<()> {
+        let Some(tail) = self.inflight.pop_front() else {
             return Ok(());
         };
         let gen = tail.gen;
@@ -686,11 +798,10 @@ impl Trainer {
         // version is published right after its update: that (not the end
         // of the loop) is what admits the next generation's per-layer
         // waiters.
-        let alt = tail.alt;
-        let g0 = RawBuf::new(if alt {
-            &mut self.worker_grads_alt[0]
-        } else {
-            &mut self.worker_grads[0]
+        let g0 = RawBuf::new(match tail.slot {
+            0 => &mut self.worker_grads[0],
+            1 => &mut self.worker_grads_alt[0],
+            k => &mut self.worker_grads_ext[k - 2][0],
         });
         let mut update_active_s = 0.0f64;
         for i in 0..nb {
@@ -719,10 +830,36 @@ impl Trainer {
                     WaitOutcome::TimedOut => {
                         let lane = i % lanes.max(1);
                         let now_ms = run_t0.elapsed().as_millis() as u64;
-                        // Lane cells sit ABOVE the grad-seat cap
-                        // (`cfg.workers`), not above the live seat count —
-                        // seats grow via join admission, lane cells must
-                        // never collide.
+                        if tail.task_mode {
+                            // Task-runtime generation: the hop can run on
+                            // ANY pool thread (the publisher, a peer, a
+                            // lane), and parked threads keep their
+                            // heartbeat fresh — so a single fresh cell
+                            // anywhere in the pool means the bucket can
+                            // still be executed. Condemn only a pool
+                            // that has gone silent wholesale.
+                            let all_stale = (0..self.cfg.workers + lanes)
+                                .all(|c| hb.stale(c, now_ms, deadline_ms));
+                            if !all_stale {
+                                continue; // somebody is alive: wait again
+                            }
+                            let detect_ms = wait_t0.elapsed().as_millis() as u64;
+                            self.fault_events.push(FaultEvent::LaneLost {
+                                step: gen as usize,
+                                lane,
+                                detect_ms,
+                            });
+                            self.lanes_lost += 1;
+                            return Err(anyhow::anyhow!(
+                                "task runtime lost at step {gen}: bucket {i} unreduced \
+                                 and no heartbeat from any pool thread for {deadline_ms} ms",
+                            ));
+                        }
+                        // Legacy static stripe: the bucket belongs to
+                        // exactly one lane. Lane cells sit ABOVE the
+                        // grad-seat cap (`cfg.workers`), not above the
+                        // live seat count — seats grow via join
+                        // admission, lane cells must never collide.
                         if !hb.stale(self.cfg.workers + lane, now_ms, deadline_ms) {
                             continue; // alive, just slow: wait again
                         }
@@ -776,7 +913,7 @@ impl Trainer {
 
         // ---- BN statistics policy (this generation's workers reported
         // before it was parked, so their states buffers are final) -------
-        self.apply_bn_policy(alt);
+        self.apply_bn_policy(tail.slot);
         fence.publish_bn(gen + 1);
         if first_err.is_some() {
             // A failed update must still never strand fence waiters.
@@ -786,6 +923,12 @@ impl Trainer {
         // ---- drain the lanes (always fully, even on error: the next
         // generation must find quiescent threads) ------------------------
         let per_bucket = self.drain_lane_msgs(gen, nb);
+        // Every lane message drained ⟹ every executor is past its buffer
+        // accesses (`remaining` is decremented before the send) — safe to
+        // retire the generation's reduce context.
+        if let Some(pool) = &self.pool {
+            pool.hub().clear_ctx(gen);
+        }
 
         // ---- accounting -------------------------------------------------
         // Backward ends when the LAST bucket became ready; comm activity

@@ -1,0 +1,478 @@
+//! Work-stealing executor primitives for the pipelined trainer.
+//!
+//! The coordinator's task runtime (coordinator::worker_pool::TaskHub) is
+//! built from three pieces defined here:
+//!
+//! * a fixed-capacity **Chase–Lev deque** (`deque()` → [`DequeWorker`] /
+//!   [`Stealer`]) — the classic single-owner work-stealing queue from
+//!   Chase & Lev, "Dynamic Circular Work-Stealing Deque" (SPAA '05), with
+//!   the C11-memory-model orderings of Lê et al. (PPoPP '13). The owner
+//!   pushes and pops at the bottom; any number of stealers CAS tasks off
+//!   the top. Tasks are tiny `Copy` descriptors, so a torn read of a slot
+//!   that loses its validating CAS is discarded harmlessly.
+//! * a global [`Injector`] — a mutexed FIFO for overflow and for tasks
+//!   produced by threads that have no deque of their own.
+//! * a [`Bell`] — a condvar that wakes parked threads when work arrives,
+//!   paired with bounded park slices so a missed wakeup costs one slice,
+//!   never liveness.
+//!
+//! The acquisition order every runtime thread follows is local pop →
+//! steal (rotating over peers) → injector → park, mirroring the green-
+//! thread pool in the related runtime (`green.c`/`pool.c`: local → steal
+//! → global queue → poll → park). Comm priority is structural rather
+//! than a per-task field: the deques carry *only* comm work (bucket
+//! reduction hops), so any steal is by construction a comm-priority
+//! steal.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{fence, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One unit of stealable work: reduce bucket `bucket` of generation
+/// `gen`. The executor resolves the generation to buffers/ledgers via
+/// the hub's registered per-generation context at execution time, so a
+/// task outlives its step only as a dangling `(gen, bucket)` pair that
+/// the resolver drops — never as a live pointer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub gen: u64,
+    pub bucket: u32,
+}
+
+/// Outcome of a steal attempt. `Retry` means a concurrent operation won
+/// the validating CAS (or resized state was observed mid-flight); the
+/// caller may immediately retry or move on to the next victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Steal {
+    Empty,
+    Retry,
+    Success(Task),
+}
+
+/// Fixed-capacity ring shared by one owner and its stealers.
+///
+/// `top`/`bottom` are monotone i64 counters; the live window is
+/// `[top, bottom)` and slot `i` lives at `buf[i & mask]`. Capacity is
+/// fixed (no Chase–Lev growth): the runtime sizes each deque for the
+/// maximum number of in-flight buckets and routes overflow to the
+/// injector, which keeps the unsafe surface minimal.
+struct Ring {
+    buf: Box<[UnsafeCell<Task>]>,
+    mask: i64,
+    top: AtomicI64,
+    bottom: AtomicI64,
+}
+
+// SAFETY: slots are plain `Copy` data. Races on a slot are possible only
+// between an owner `push` recycling an index and a stale stealer read of
+// that index; the stealer's validating CAS on `top` fails in exactly
+// that case and the torn value is discarded.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+/// Owner handle: single-threaded push/pop end of a Chase–Lev deque.
+pub struct DequeWorker {
+    ring: Arc<Ring>,
+}
+
+/// Thief handle: any number of clones may concurrently `steal`.
+#[derive(Clone)]
+pub struct Stealer {
+    ring: Arc<Ring>,
+}
+
+/// Create a deque with capacity `cap` (rounded up to a power of two,
+/// minimum 4). Returns the unique owner handle and one stealer (clone
+/// it freely).
+pub fn deque(cap: usize) -> (DequeWorker, Stealer) {
+    let cap = cap.max(4).next_power_of_two();
+    let buf: Vec<UnsafeCell<Task>> =
+        (0..cap).map(|_| UnsafeCell::new(Task { gen: 0, bucket: 0 })).collect();
+    let ring = Arc::new(Ring {
+        buf: buf.into_boxed_slice(),
+        mask: cap as i64 - 1,
+        top: AtomicI64::new(0),
+        bottom: AtomicI64::new(0),
+    });
+    (DequeWorker { ring: Arc::clone(&ring) }, Stealer { ring })
+}
+
+impl DequeWorker {
+    /// Push at the bottom. Returns `Err(task)` when the ring is full so
+    /// the caller can route the task to the injector instead (the deque
+    /// never grows).
+    pub fn push(&self, task: Task) -> Result<(), Task> {
+        let r = &*self.ring;
+        let b = r.bottom.load(Ordering::Relaxed);
+        let t = r.top.load(Ordering::Acquire);
+        if b - t > r.mask {
+            return Err(task); // full
+        }
+        unsafe { *r.buf[(b & r.mask) as usize].get() = task };
+        r.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Pop from the bottom (LIFO). Owner-only.
+    pub fn pop(&self) -> Option<Task> {
+        let r = &*self.ring;
+        let b = r.bottom.load(Ordering::Relaxed) - 1;
+        r.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = r.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: restore bottom.
+            r.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let task = unsafe { *r.buf[(b & r.mask) as usize].get() };
+        if t == b {
+            // Last element: race the stealers for it.
+            let won = r
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            r.bottom.store(b + 1, Ordering::Relaxed);
+            return if won { Some(task) } else { None };
+        }
+        Some(task)
+    }
+
+    /// True when the live window is empty (owner-side snapshot).
+    pub fn is_empty(&self) -> bool {
+        let r = &*self.ring;
+        r.bottom.load(Ordering::Relaxed) <= r.top.load(Ordering::Relaxed)
+    }
+}
+
+impl Stealer {
+    /// Steal from the top (FIFO relative to the owner's pushes).
+    pub fn steal(&self) -> Steal {
+        let r = &*self.ring;
+        let t = r.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = r.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Speculative read; validated by the CAS below. The slot may be
+        // concurrently recycled by the owner, in which case the CAS
+        // fails and the (possibly torn) value is discarded.
+        let task = unsafe { *r.buf[(t & r.mask) as usize].get() };
+        match r.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed) {
+            Ok(_) => Steal::Success(task),
+            Err(_) => Steal::Retry,
+        }
+    }
+
+    /// Approximate occupancy (racy; for diagnostics only).
+    pub fn approx_len(&self) -> usize {
+        let r = &*self.ring;
+        let t = r.top.load(Ordering::Relaxed);
+        let b = r.bottom.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+}
+
+/// Global overflow / injection queue. Deliberately a mutexed FIFO: it is
+/// off the fast path (deque overflow and ownerless producers only), and
+/// a lock keeps it trivially correct.
+#[derive(Default)]
+pub struct Injector {
+    q: Mutex<VecDeque<Task>>,
+}
+
+impl Injector {
+    pub fn new() -> Injector {
+        Injector::default()
+    }
+
+    pub fn push(&self, task: Task) {
+        self.q.lock().unwrap().push_back(task);
+    }
+
+    pub fn pop(&self) -> Option<Task> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.lock().unwrap().is_empty()
+    }
+}
+
+/// Wakeup bell for parked runtime threads. Parking is always a bounded
+/// slice (`park_slice`), so the bell is a latency optimization, not a
+/// correctness requirement: a thread that misses a ring re-polls after
+/// at most one slice.
+#[derive(Default)]
+pub struct Bell {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Bell {
+    pub fn new() -> Bell {
+        Bell::default()
+    }
+
+    /// Wake every parked thread.
+    pub fn ring(&self) {
+        let mut s = self.seq.lock().unwrap();
+        *s = s.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    /// Park for at most `slice`, returning early if the bell rings.
+    pub fn park_slice(&self, slice: Duration) {
+        let s = self.seq.lock().unwrap();
+        let seq0 = *s;
+        let _unused = self
+            .cv
+            .wait_timeout_while(s, slice, |s| *s == seq0)
+            .unwrap();
+    }
+}
+
+/// Aggregate counters for the task runtime, read into `TrainReport`.
+/// `busy_ns` accumulates per-thread wall time spent executing tasks or
+/// jobs so the trainer can report a worker idle fraction.
+#[derive(Default)]
+pub struct RuntimeStats {
+    pub tasks_executed: AtomicU64,
+    pub tasks_stolen: AtomicU64,
+    pub busy_ns: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn new() -> RuntimeStats {
+        RuntimeStats::default()
+    }
+
+    pub fn note_exec(&self, stolen: bool) {
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            self.tasks_stolen.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn note_busy(&self, ns: u64) {
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    #[test]
+    fn deque_lifo_pop_fifo_steal() {
+        let (w, s) = deque(8);
+        for i in 0..4 {
+            w.push(Task { gen: 1, bucket: i }).unwrap();
+        }
+        // Owner pops LIFO.
+        assert_eq!(w.pop(), Some(Task { gen: 1, bucket: 3 }));
+        // Thief steals FIFO.
+        assert_eq!(s.steal(), Steal::Success(Task { gen: 1, bucket: 0 }));
+        assert_eq!(s.steal(), Steal::Success(Task { gen: 1, bucket: 1 }));
+        assert_eq!(w.pop(), Some(Task { gen: 1, bucket: 2 }));
+        assert_eq!(w.pop(), None);
+        assert_eq!(s.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn deque_full_routes_to_caller() {
+        let (w, _s) = deque(4);
+        for i in 0..4 {
+            w.push(Task { gen: 0, bucket: i }).unwrap();
+        }
+        assert_eq!(w.push(Task { gen: 0, bucket: 99 }), Err(Task { gen: 0, bucket: 99 }));
+        assert_eq!(w.pop(), Some(Task { gen: 0, bucket: 3 }));
+        w.push(Task { gen: 0, bucket: 4 }).unwrap();
+    }
+
+    #[test]
+    fn deque_wraps_around_capacity() {
+        let (w, s) = deque(4);
+        // Push/consume well past capacity to exercise index wraparound.
+        for round in 0..64u32 {
+            for i in 0..3 {
+                w.push(Task { gen: u64::from(round), bucket: i }).unwrap();
+            }
+            assert_eq!(s.steal(), Steal::Success(Task { gen: u64::from(round), bucket: 0 }));
+            assert_eq!(w.pop(), Some(Task { gen: u64::from(round), bucket: 2 }));
+            assert_eq!(w.pop(), Some(Task { gen: u64::from(round), bucket: 1 }));
+        }
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn injector_is_fifo() {
+        let inj = Injector::new();
+        assert!(inj.is_empty());
+        inj.push(Task { gen: 0, bucket: 0 });
+        inj.push(Task { gen: 0, bucket: 1 });
+        assert_eq!(inj.pop(), Some(Task { gen: 0, bucket: 0 }));
+        assert_eq!(inj.pop(), Some(Task { gen: 0, bucket: 1 }));
+        assert_eq!(inj.pop(), None);
+    }
+
+    #[test]
+    fn bell_park_slice_returns() {
+        let bell = Bell::new();
+        // Must return even with no ring (bounded slice).
+        bell.park_slice(Duration::from_millis(1));
+        bell.ring();
+        bell.park_slice(Duration::from_millis(1));
+    }
+
+    /// Deterministic xorshift for the seeded schedules below.
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    /// Satellite 3: 1000 seeded randomized interleavings of one owner
+    /// (push/pop) against two thieves — every pushed task is consumed
+    /// exactly once, across all schedules.
+    #[test]
+    fn seeded_schedules_no_lost_or_duplicated_task() {
+        const SCHEDULES: u64 = 1000;
+        const TASKS: u32 = 40;
+        for seed in 0..SCHEDULES {
+            let (w, s) = deque(8);
+            let s2 = s.clone();
+            let done = Arc::new(AtomicBool::new(false));
+            let mut rng = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+
+            let thieves: Vec<_> = [s, s2]
+                .into_iter()
+                .map(|st| {
+                    let done = Arc::clone(&done);
+                    thread::spawn(move || {
+                        let mut got = Vec::new();
+                        loop {
+                            match st.steal() {
+                                Steal::Success(t) => got.push(t.bucket),
+                                Steal::Retry => continue,
+                                Steal::Empty => {
+                                    if done.load(Ordering::Acquire) {
+                                        // One final sweep: `done` may have
+                                        // been set between our Empty and
+                                        // the last push's publication.
+                                        while let Steal::Success(t) = st.steal() {
+                                            got.push(t.bucket);
+                                        }
+                                        return got;
+                                    }
+                                    thread::yield_now();
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+
+            // Owner: interleave pushes and pops per the seeded schedule,
+            // spilling full-deque pushes into retries.
+            let mut popped = Vec::new();
+            let mut next = 0u32;
+            while next < TASKS {
+                match xorshift(&mut rng) % 4 {
+                    0 => {
+                        if let Some(t) = w.pop() {
+                            popped.push(t.bucket);
+                        }
+                    }
+                    1 => thread::yield_now(),
+                    _ => {
+                        if w.push(Task { gen: seed, bucket: next }).is_ok() {
+                            next += 1;
+                        } else if let Some(t) = w.pop() {
+                            popped.push(t.bucket);
+                        }
+                    }
+                }
+            }
+            done.store(true, Ordering::Release);
+            let mut all = popped;
+            for th in thieves {
+                all.extend(th.join().unwrap());
+            }
+            // Drain anything the thieves exited before seeing.
+            while let Some(t) = w.pop() {
+                all.push(t.bucket);
+            }
+            all.sort_unstable();
+            let uniq: HashSet<u32> = all.iter().copied().collect();
+            assert_eq!(
+                all.len(),
+                TASKS as usize,
+                "seed {seed}: {} consumed, want {TASKS} (dup or loss)",
+                all.len()
+            );
+            assert_eq!(uniq.len(), TASKS as usize, "seed {seed}: duplicated task");
+        }
+    }
+
+    /// Heavier contention: four thieves against a pushing owner, every
+    /// task accounted for exactly once.
+    #[test]
+    fn four_thieves_consume_each_task_once() {
+        let (w, s) = deque(16);
+        const TASKS: u32 = 2000;
+        let done = Arc::new(AtomicBool::new(false));
+        let thieves: Vec<_> = (0..4)
+            .map(|_| {
+                let st = s.clone();
+                let done = Arc::clone(&done);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match st.steal() {
+                            Steal::Success(t) => got.push(t.bucket),
+                            Steal::Retry => continue,
+                            Steal::Empty => {
+                                if done.load(Ordering::Acquire) {
+                                    while let Steal::Success(t) = st.steal() {
+                                        got.push(t.bucket);
+                                    }
+                                    return got;
+                                }
+                                thread::yield_now();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        let mut next = 0u32;
+        while next < TASKS {
+            if w.push(Task { gen: 7, bucket: next }).is_ok() {
+                next += 1;
+            } else if let Some(t) = w.pop() {
+                all.push(t.bucket);
+            }
+        }
+        done.store(true, Ordering::Release);
+        for th in thieves {
+            all.extend(th.join().unwrap());
+        }
+        while let Some(t) = w.pop() {
+            all.push(t.bucket);
+        }
+        let uniq: HashSet<u32> = all.iter().copied().collect();
+        assert_eq!(all.len(), TASKS as usize);
+        assert_eq!(uniq.len(), TASKS as usize);
+    }
+}

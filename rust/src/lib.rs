@@ -33,6 +33,7 @@ pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod experiments;
 pub mod faults;
 pub mod fleet;

@@ -15,7 +15,9 @@
 //! --chunk-bytes N|auto (0 = whole-layer buckets; auto = α–β-derived,
 //! see --link-alpha-us/--link-beta-gbps and the rack-tier
 //! --link-rack-alpha-us/--link-rack-beta-gbps), --comm-threads N,
-//! --pipeline-depth 1|2 (2 = cross-step double buffering, the default),
+//! --pipeline-depth 1..=8 (2 = cross-step double buffering, the default;
+//! deeper values rotate N generation slots), --no-steal (pin buckets to
+//! their static comm lane instead of the work-stealing task runtime),
 //! --fence full|layer, --no-lars, --no-smoothing, --no-overlap,
 //! --mlperf-log, --threaded.
 //!
@@ -51,7 +53,7 @@ const KNOWN_OPTS: &[&str] = &[
     "comm-algo", "torus", "rails",
     "ranks-per-node", "wire", "error-feedback", "bucket-bytes", "chunk-bytes",
     "link-alpha-us", "link-beta-gbps", "link-rack-alpha-us", "link-rack-beta-gbps",
-    "pipeline-depth", "fence", "comm-threads", "no-overlap",
+    "pipeline-depth", "no-steal", "fence", "comm-threads", "no-overlap",
     "train-size",
     "val-size", "noise", "mlperf-log", "threaded", "gpus", "per-gpu-batch", "json",
     "save-checkpoint", "resume",

@@ -389,6 +389,39 @@ impl StepModel {
         self.compute_s + exposed + self.overhead_s
     }
 
+    /// Step time when the exposed tail drains on the WORK-STEALING
+    /// runtime: the fixed pool leaves the tail's residual comm queued
+    /// behind `lanes` dedicated channels, while the task runtime lets
+    /// the `workers` grad threads (done with backward exactly when the
+    /// tail starts) steal reduction hops — the same residual work drains
+    /// at `lanes + workers` executors, shrinking the exposed tail by the
+    /// channel ratio. `workers = 0` reduces exactly to
+    /// [`StepModel::step_time`]; compose with
+    /// [`StepModel::step_time_double_buffered`]'s grace window by
+    /// subtracting `next_prep_s` from the result's exposed share.
+    pub fn step_time_stealing(&self, lanes: usize, workers: usize) -> f64 {
+        let window = self.compute_s * self.overlap_window_frac;
+        let exposed = (self.comm_s - window).max(0.0);
+        let l = lanes.max(1) as f64;
+        let exposed = exposed * l / (l + workers as f64);
+        self.compute_s + exposed + self.overhead_s
+    }
+
+    /// Pool-thread idle fraction of one modelled step: 1 − busy /
+    /// capacity with busy = `workers` threads through compute plus the
+    /// total comm work, capacity = all `workers + lanes` threads across
+    /// the visible step. The model-side counterpart of the trainer's
+    /// measured `worker_idle_frac` (RuntimeStats busy-ns / thread-ns).
+    pub fn pool_idle_frac(&self, workers: usize, lanes: usize) -> f64 {
+        let span = self.step_time();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let threads = (workers + lanes).max(1) as f64;
+        let busy = workers as f64 * self.compute_s + self.comm_s;
+        (1.0 - busy / (threads * span)).clamp(0.0, 1.0)
+    }
+
     pub fn efficiency(&self) -> f64 {
         self.compute_s / self.step_time()
     }
@@ -959,6 +992,33 @@ mod tests {
         let floor = m.compute_s + m.overhead_s;
         assert!((m.step_time_double_buffered(1.0) - floor).abs() < 1e-12);
         assert!(m.step_time_double_buffered(-3.0) <= single + 1e-15);
+    }
+
+    #[test]
+    fn stealing_shrinks_the_exposed_tail_by_the_channel_ratio() {
+        let m = StepModel {
+            compute_s: 40e-3,
+            overlap_window_frac: 0.5,
+            comm_s: 30e-3, // 20 ms hidden intra-step, 10 ms tail
+            overhead_s: 1e-3,
+        };
+        let single = m.step_time();
+        // No stealers: exactly the fixed-pool model.
+        assert!((m.step_time_stealing(2, 0) - single).abs() < 1e-15);
+        // 2 lanes + 4 stealing workers: the 10 ms tail drains 3× faster.
+        let want = m.compute_s + 10e-3 * 2.0 / 6.0 + m.overhead_s;
+        assert!((m.step_time_stealing(2, 4) - want).abs() < 1e-12);
+        // More stealers never slower; fully-hidden comm gains nothing.
+        assert!(m.step_time_stealing(2, 8) <= m.step_time_stealing(2, 4) + 1e-15);
+        let hidden = StepModel { comm_s: 15e-3, ..m };
+        assert!((hidden.step_time_stealing(2, 4) - hidden.step_time()).abs() < 1e-15);
+        // Idle fraction: bounded, and stealing's shorter span (same busy
+        // work, smaller capacity window) leaves the pool LESS idle.
+        let f = m.pool_idle_frac(4, 2);
+        assert!((0.0..=1.0).contains(&f), "idle fraction {f} out of bounds");
+        let busy = 4.0 * m.compute_s + m.comm_s;
+        let by_hand = 1.0 - busy / (6.0 * single);
+        assert!((f - by_hand).abs() < 1e-12);
     }
 
     #[test]

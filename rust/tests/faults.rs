@@ -1,6 +1,6 @@
 //! Fault-injection system tests: the chaos grid (an injected worker crash
 //! recovers IN-PROCESS, bitwise identical to the unfaulted run, across
-//! pipeline depth {1, 2} × wire codec {f32, q8+EF} × allreduce schedule
+//! pipeline depth {1, 2, 4} × wire codec {f32, q8+EF} × allreduce schedule
 //! {hier, torus}, with multiring covered by its own chaos run), panic
 //! containment (a worker panic never hangs the trainer — fail fast under
 //! `--no-recover`, recover bitwise otherwise), stall-vs-delay semantics
@@ -77,15 +77,18 @@ fn event_kinds(t: &Trainer) -> Vec<&'static str> {
     t.fault_events().iter().map(|e| e.kind()).collect()
 }
 
-/// THE acceptance criterion: an injected worker crash at depth {1, 2} ×
-/// wire {f32, q8 with error feedback} × allreduce schedule {hier, torus}
-/// is detected by heartbeat deadline, the pool re-shards over the
+/// THE acceptance criterion: an injected worker crash at depth {1, 2, 4}
+/// × wire {f32, q8 with error feedback} × allreduce schedule {hier,
+/// torus} is detected by heartbeat deadline, the pool re-shards over the
 /// survivors (logical shards unchanged), the run restores from the
 /// in-memory snapshot and finishes BITWISE IDENTICAL to the unfaulted
-/// trajectory — including the EF residual state on the q8 wire.
+/// trajectory — including the EF residual state on the q8 wire. Depth 4
+/// runs the crash through the N-slot generation ring on the task
+/// runtime: teardown must poison every registered reduce context and
+/// clear the parked tails before the pool respawns.
 #[test]
 fn crash_recovers_bitwise_across_depth_wire_and_schedule() {
-    for depth in [1usize, 2] {
+    for depth in [1usize, 2, 4] {
         for wire in ["f32", "q8"] {
             for schedule in ["hier", "torus"] {
                 let what = format!("depth={depth} wire={wire} schedule={schedule}");
@@ -211,6 +214,46 @@ fn stall_is_replayed_delay_is_waited_for() {
         "delay was wrongly declared lost: {:?}",
         event_kinds(&t)
     );
+}
+
+/// Satellite regression (parked-worker supervision): an IDLE seat is not
+/// a DEAD seat. Four workers race a small model, so early finishers park
+/// for long stretches while a deliberately delayed (but heartbeating)
+/// straggler holds the step open far past a pinned 40 ms deadline — the
+/// exact shape that used to read as "no heartbeat from the pool" once
+/// workers went idle. Parked seats now stamp their cells every park
+/// slice, so the supervisor must wait the delay out: zero recoveries,
+/// zero loss events, and bits identical to the generously-supervised
+/// reference.
+#[test]
+fn parked_idle_workers_are_never_declared_lost_under_a_short_deadline() {
+    let mut cfg = base_cfg();
+    cfg.workers = 4;
+    cfg.comm_threads = 2;
+    let (ref_params, ref_bn, _) = run_to_end(cfg.clone());
+
+    // Pin the deadline to 40 ms (adaptive expansion off) and hold two
+    // mid-run steps open ~4 deadlines each with a heartbeating delay.
+    cfg.fault_deadline_ms = 40;
+    cfg.fault_deadline_auto = false;
+    cfg.fault_spec = "delay@1:1:150;delay@3:0:150".into();
+    let (params, bn, t) = run_to_end(cfg);
+
+    assert_eq!(ref_params, params, "short-deadline supervision changed the bits");
+    assert_eq!(ref_bn, bn, "short-deadline supervision changed the bn bits");
+    assert_eq!(
+        t.recovery_count(),
+        0,
+        "parked-but-healthy seats were declared lost under a short deadline"
+    );
+    assert_eq!(t.phys_workers_alive(), 4, "every idle seat must survive supervision");
+    for k in event_kinds(&t) {
+        assert!(
+            k != "worker_lost" && k != "lane_lost",
+            "idle-but-healthy pool produced a loss event: {:?}",
+            event_kinds(&t)
+        );
+    }
 }
 
 /// Lane faults: a stalled or panicked COMM LANE is detected on the

@@ -1,5 +1,5 @@
 //! Pipelined-executor system tests: the determinism grid (pipelined vs
-//! sequential bit-identity across depth ∈ {1, 2} × workers × lanes ×
+//! sequential bit-identity across depth ∈ {1, 2, 4} × workers × lanes ×
 //! accum × precision × algorithm × chunk granularity), the parameter-
 //! fence modes, chunk numerical-neutrality at one worker, exposed /
 //! hidden / cross-step comm accounting, the measured-pipeline calibration
@@ -40,9 +40,10 @@ fn base_cfg() -> RunConfig {
     }
 }
 
-/// The load-bearing test: for every grid point, BOTH pipelined executors —
-/// depth 1 (intra-step overlap only) and depth 2 (cross-step double
-/// buffering with the full-update parameter fence) — produce a trajectory
+/// The load-bearing test: for every grid point, ALL pipelined executors —
+/// depth 1 (intra-step overlap only), depth 2 (cross-step double
+/// buffering with the full-update parameter fence) and depth 4 (N-slot
+/// generation ring on the task runtime) — produce a trajectory
 /// (losses, accuracies, params, momentum-derived params, bn_state)
 /// BIT-identical to the sequential barrier reference. The grid covers
 /// chunking (0 = whole-layer buckets, plus several row chunk
@@ -95,23 +96,33 @@ fn pipelined_matches_sequential_across_grid() {
         assert!(d1.pipeline, "{what}: overlap=true must pick the pipelined executor");
         assert_eq!(d1.depth(), 1);
 
-        cfg.pipeline_depth = 2;
-        let mut d2 = Trainer::new(cfg, engine()).unwrap();
+        let mut d2_cfg = cfg.clone();
+        d2_cfg.pipeline_depth = 2;
+        let mut d2 = Trainer::new(d2_cfg, engine()).unwrap();
         assert_eq!(d2.depth(), 2, "{what}: depth-2 trainer must double-buffer");
+
+        cfg.pipeline_depth = 4;
+        let mut d4 = Trainer::new(cfg, engine()).unwrap();
+        assert_eq!(d4.depth(), 4, "{what}: depth-4 trainer must hold 4 slots");
 
         for s in 0..3 {
             let (l1, a1) = seq.step().unwrap();
             let (l2, a2) = d1.step().unwrap();
             let (l3, a3) = d2.step().unwrap();
+            let (l4, a4) = d4.step().unwrap();
             assert_eq!(l1, l2, "{what}: step {s} depth-1 loss differs");
             assert_eq!(a1, a2, "{what}: step {s} depth-1 acc differs");
             assert_eq!(l1, l3, "{what}: step {s} depth-2 loss differs");
             assert_eq!(a1, a3, "{what}: step {s} depth-2 acc differs");
+            assert_eq!(l1, l4, "{what}: step {s} depth-4 loss differs");
+            assert_eq!(a1, a4, "{what}: step {s} depth-4 acc differs");
         }
         assert_eq!(seq.params(), d1.params(), "{what}: depth-1 params diverged");
         assert_eq!(seq.params(), d2.params(), "{what}: depth-2 params diverged");
+        assert_eq!(seq.params(), d4.params(), "{what}: depth-4 params diverged");
         assert_eq!(seq.bn_state(), d1.bn_state(), "{what}: depth-1 bn state diverged");
         assert_eq!(seq.bn_state(), d2.bn_state(), "{what}: depth-2 bn state diverged");
+        assert_eq!(seq.bn_state(), d4.bn_state(), "{what}: depth-4 bn state diverged");
         assert_eq!(seq.epoch(), d2.epoch(), "{what}: epoch accounting diverged");
     }
 }
@@ -120,7 +131,7 @@ fn pipelined_matches_sequential_across_grid() {
 /// node grid with intra-node reduce/broadcast, row rings and inter-rack
 /// column rings) and multiring (independent rail rings over disjoint
 /// slices) must reproduce the sequential barrier reference bit-for-bit
-/// across depth {1, 2} × wire {f32, f16, q8+EF} — including a PRIME node
+/// across depth {1, 2, 4} × wire {f32, f16, q8+EF} — including a PRIME node
 /// count, where torus auto-factorization degrades to a single ring row.
 /// Separate from the main grid because these rows also pin
 /// `ranks_per_node` (the default 4 would degenerate every ≤4-worker
@@ -161,23 +172,33 @@ fn torus_and_multiring_join_the_determinism_grid() {
         let mut d1 = Trainer::new(d1_cfg, engine()).unwrap();
         assert!(d1.pipeline, "{what}: overlap=true must pick the pipelined executor");
 
-        cfg.pipeline_depth = 2;
-        let mut d2 = Trainer::new(cfg, engine()).unwrap();
+        let mut d2_cfg = cfg.clone();
+        d2_cfg.pipeline_depth = 2;
+        let mut d2 = Trainer::new(d2_cfg, engine()).unwrap();
         assert_eq!(d2.depth(), 2, "{what}: depth-2 trainer must double-buffer");
+
+        cfg.pipeline_depth = 4;
+        let mut d4 = Trainer::new(cfg, engine()).unwrap();
+        assert_eq!(d4.depth(), 4, "{what}: depth-4 trainer must hold 4 slots");
 
         for s in 0..3 {
             let (l1, a1) = seq.step().unwrap();
             let (l2, a2) = d1.step().unwrap();
             let (l3, a3) = d2.step().unwrap();
+            let (l4, a4) = d4.step().unwrap();
             assert_eq!(l1, l2, "{what}: step {s} depth-1 loss differs");
             assert_eq!(a1, a2, "{what}: step {s} depth-1 acc differs");
             assert_eq!(l1, l3, "{what}: step {s} depth-2 loss differs");
             assert_eq!(a1, a3, "{what}: step {s} depth-2 acc differs");
+            assert_eq!(l1, l4, "{what}: step {s} depth-4 loss differs");
+            assert_eq!(a1, a4, "{what}: step {s} depth-4 acc differs");
         }
         assert_eq!(seq.params(), d1.params(), "{what}: depth-1 params diverged");
         assert_eq!(seq.params(), d2.params(), "{what}: depth-2 params diverged");
+        assert_eq!(seq.params(), d4.params(), "{what}: depth-4 params diverged");
         assert_eq!(seq.bn_state(), d1.bn_state(), "{what}: depth-1 bn state diverged");
         assert_eq!(seq.bn_state(), d2.bn_state(), "{what}: depth-2 bn state diverged");
+        assert_eq!(seq.bn_state(), d4.bn_state(), "{what}: depth-4 bn state diverged");
     }
 }
 
@@ -653,6 +674,92 @@ fn train_report_carries_steady_state_and_depth() {
     use yasgd::util::json::Json;
     assert!(j.get("steady_state_images_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
     assert_eq!(j.get("pipeline_depth").and_then(Json::as_f64).unwrap(), 2.0);
+}
+
+/// The work-stealing task runtime is self-describing: every per-bucket
+/// reduce hop runs as exactly one task (so `runtime_task_count` equals
+/// buckets × steps in a fault-free run), the comm lanes acquire work
+/// exclusively by stealing (so `runtime_steal_count` is live whenever a
+/// lane executed anything), the idle fraction is a fraction, and the JSON
+/// report carries all three plus the configured depth.
+#[test]
+fn train_report_carries_task_runtime_stats() {
+    use yasgd::util::json::Json;
+    let mut cfg = base_cfg();
+    cfg.workers = 4;
+    cfg.comm_threads = 2;
+    cfg.total_steps = 6;
+    cfg.eval_every = 0;
+    cfg.pipeline_depth = 4;
+    let nb = {
+        let t = Trainer::new(cfg.clone(), engine()).unwrap();
+        t.bucket_plan().buckets.len()
+    };
+    assert!(nb >= 2, "need a multi-bucket plan to exercise the runtime");
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    let report = t.train().unwrap();
+    assert_eq!(report.pipeline_depth, 4, "report must record the configured depth");
+    assert_eq!(
+        report.runtime_task_count,
+        (nb * 6) as u64,
+        "every bucket reduction of every step must run as exactly one task"
+    );
+    assert!(report.runtime_steal_count <= report.runtime_task_count);
+    assert!(
+        (0.0..=1.0).contains(&report.worker_idle_frac),
+        "idle fraction out of range: {}",
+        report.worker_idle_frac
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 2 {
+        // Lanes acquire work exclusively by stealing; with 2 lanes spinning
+        // against 4 producers over 6 multi-bucket steps they must have won
+        // at least one race. (On a single hardware thread the OS may
+        // legally starve them — skip the scheduling-dependent claim.)
+        assert!(
+            report.runtime_steal_count > 0,
+            "comm lanes never stole a task in a pipelined run"
+        );
+    }
+    let j = report.to_json();
+    let get = |k: &str| {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report JSON missing {k}"))
+    };
+    assert_eq!(get("runtime_task_count"), report.runtime_task_count as f64);
+    assert_eq!(get("runtime_steal_count"), report.runtime_steal_count as f64);
+    assert!((get("worker_idle_frac") - report.worker_idle_frac).abs() < 1e-12);
+    assert_eq!(get("pipeline_depth"), 4.0);
+}
+
+/// The `--no-steal` escape hatch pins every bucket to its static comm
+/// lane (the legacy fixed-pool schedule): zero tasks, zero steals — and
+/// bit-identical results, because WHO reduces a bucket was never
+/// observable in the numerics.
+#[test]
+fn no_steal_pins_the_legacy_lane_schedule_bitwise() {
+    let mut cfg = base_cfg();
+    cfg.workers = 3;
+    cfg.comm_threads = 2;
+    let mut stealing = Trainer::new(cfg.clone(), engine()).unwrap();
+    cfg.steal = false;
+    let mut pinned = Trainer::new(cfg, engine()).unwrap();
+    for s in 0..4 {
+        let (l1, _) = stealing.step().unwrap();
+        let (l2, _) = pinned.step().unwrap();
+        assert_eq!(l1, l2, "step {s}: --no-steal changed the loss");
+    }
+    stealing.flush().unwrap();
+    pinned.flush().unwrap();
+    assert_eq!(stealing.params(), pinned.params(), "--no-steal changed the params");
+    assert_eq!(stealing.bn_state(), pinned.bn_state(), "--no-steal changed bn state");
+    let (tasks, steals, idle) = pinned.runtime_stats();
+    assert_eq!(tasks, 0, "--no-steal must not create runtime tasks");
+    assert_eq!(steals, 0, "--no-steal must not steal");
+    assert!((0.0..=1.0).contains(&idle));
+    let (tasks, _, _) = stealing.runtime_stats();
+    assert!(tasks > 0, "the default run must route reduce hops through the runtime");
 }
 
 /// Satellite regression: `final_val_acc` is an Option — present when an

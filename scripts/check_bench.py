@@ -29,6 +29,19 @@ BENCH_pipeline.json — invariants the pipeline/wire/fault PRs promise:
      of detection + re-shard + replay stayed below one clean run's
      worth of wall-clock (overhead_frac < 1.0; detection deadlines
      dominate, so this is loose enough for noisy runners).
+  4c. the task-runtime section (work-stealing PR) exists and holds:
+     the pipelined run actually routed its reduce hops through the
+     runtime (task_count >= 1) and the comm lanes actually stole work
+     (steal_count >= 1 — lanes acquire exclusively by stealing, so a
+     zero here means the deques or the bell broke), the reported pool
+     idle fraction is a fraction, the steady-state throughput of the
+     stealing run is no worse than the pinned fixed-pool (`--no-steal`)
+     baseline within a relative throughput tolerance, and — since the
+     bench runs lanes (2) < workers (4) — its exposed-comm fraction is
+     no higher than the fixed pool's within the usual absolute
+     tolerance. The depth4 section exists too (N-slot generation ring)
+     and its exposed-comm fraction matches depth 1's bound: deeper
+     pipelines must never expose MORE communication.
   4b. the elastic-fleet section (elastic fleet PR) exists and holds:
      a scheduled drain + re-admission actually rerouted (>= 1 reroute
      in the fleet timeline), stayed BITWISE equal to the fixed-fleet
@@ -68,6 +81,11 @@ import sys
 
 TOLERANCE = 0.05  # absolute, on a [0, 1] fraction
 MODEL_EPS = 1e-9  # relative, on deterministic α–β model times
+# Relative slack on steady-state img/s comparisons: CI wall-clock is far
+# noisier than the exposed fractions, and this gate exists to catch the
+# stealing runtime being STRUCTURALLY slower than fixed lanes (lost
+# wakeups, contended deques), not scheduler jitter.
+STEADY_TOL = 0.25
 
 
 def fail(msg: str) -> None:
@@ -107,6 +125,76 @@ def check_pipeline(bench: dict) -> None:
         fail(
             f"depth-2 whole-run exposed-comm fraction regressed: "
             f"{d2:.4f} > depth-1 {d1:.4f} + {TOLERANCE}"
+        )
+
+    # Depth-4 section (work-stealing task runtime PR): the N-slot ring
+    # must not regress the exposure bound depth 2 already meets.
+    d4sec = bench.get("depth4")
+    if not isinstance(d4sec, dict):
+        fail("missing 'depth4' section")
+    for key in ("images_per_sec", "steady_state_images_per_sec", "exposed_comm_frac"):
+        v = d4sec.get(key)
+        if not isinstance(v, (int, float)):
+            fail(f"'depth4.{key}' missing or non-numeric: {v!r}")
+    d4 = d4sec["exposed_comm_frac"]
+    if not 0.0 <= d4 <= 1.0:
+        fail(f"depth4 exposed fraction out of [0, 1]: {d4}")
+    if d4 > d1 + TOLERANCE:
+        fail(
+            f"depth-4 whole-run exposed-comm fraction regressed: "
+            f"{d4:.4f} > depth-1 {d1:.4f} + {TOLERANCE}"
+        )
+
+    # Task-runtime section (work-stealing PR).
+    runtime = bench.get("runtime")
+    if not isinstance(runtime, dict):
+        fail("missing 'runtime' section")
+    for key in (
+        "pipeline_depth",
+        "task_count",
+        "steal_count",
+        "worker_idle_frac",
+        "steady_state_images_per_sec",
+        "exposed_comm_frac",
+    ):
+        v = runtime.get(key)
+        if not isinstance(v, (int, float)):
+            fail(f"'runtime.{key}' missing or non-numeric: {v!r}")
+    fixed = runtime.get("fixed_pool")
+    if not isinstance(fixed, dict):
+        fail("missing 'runtime.fixed_pool' baseline")
+    for key in ("steady_state_images_per_sec", "exposed_comm_frac", "task_count"):
+        v = fixed.get(key)
+        if not isinstance(v, (int, float)):
+            fail(f"'runtime.fixed_pool.{key}' missing or non-numeric: {v!r}")
+    if runtime["task_count"] < 1:
+        fail(f"pipelined run routed no reduce hops through the runtime: "
+             f"{runtime['task_count']!r}")
+    if runtime["steal_count"] < 1:
+        fail(
+            f"comm lanes stole nothing in a pipelined run (lanes acquire "
+            f"exclusively by stealing): {runtime['steal_count']!r}"
+        )
+    if fixed["task_count"] != 0:
+        fail(f"--no-steal baseline must bypass the runtime: {fixed['task_count']!r}")
+    idle = runtime["worker_idle_frac"]
+    if not 0.0 <= idle <= 1.0:
+        fail(f"'runtime.worker_idle_frac' out of [0, 1]: {idle}")
+    steal_ips = runtime["steady_state_images_per_sec"]
+    fixed_ips = fixed["steady_state_images_per_sec"]
+    if steal_ips < fixed_ips * (1.0 - STEADY_TOL):
+        fail(
+            f"work-stealing steady-state throughput regressed past the fixed "
+            f"pool: {steal_ips:.1f} < {fixed_ips:.1f} img/s - {STEADY_TOL:.0%}"
+        )
+    e_steal = runtime["exposed_comm_frac"]
+    e_fixed = fixed["exposed_comm_frac"]
+    if not (0.0 <= e_steal <= 1.0 and 0.0 <= e_fixed <= 1.0):
+        fail(f"runtime exposed fractions out of [0, 1]: steal={e_steal}, fixed={e_fixed}")
+    if e_steal > e_fixed + TOLERANCE:
+        fail(
+            f"work-stealing exposed-comm fraction regressed past the fixed "
+            f"pool: {e_steal:.4f} > {e_fixed:.4f} + {TOLERANCE}"
         )
 
     # Wire-codec sections (int8 wire-compression PR).
@@ -181,7 +269,11 @@ def check_pipeline(bench: dict) -> None:
 
     print(
         f"check_bench: OK: exposed comm depth1={d1:.4f} -> depth2={d2:.4f} "
+        f"-> depth4={d4:.4f} "
         f"(cross-step hidden {bench['depth2']['cross_hidden_ms_per_step']:.4f} ms/step); "
+        f"runtime: {int(runtime['task_count'])} tasks / "
+        f"{int(runtime['steal_count'])} steals, idle {idle:.3f}, "
+        f"steal {steal_ips:.1f} vs fixed {fixed_ips:.1f} img/s steady; "
         f"wire q8 exposed {eq8:.4f} <= f16 {ef16:.4f} + tol, "
         f"bytes {byte_ratio:.3f}x below f16; "
         f"faults: {int(recoveries)} recoveries, bitwise, "
