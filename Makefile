@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-fig2 bench-check chaos-smoke chaos-soak artifacts clean
+.PHONY: verify build test fmt clippy bench bench-comm bench-pipeline bench-fig2 bench-transport bench-check chaos-smoke chaos-soak socket-smoke artifacts clean
 
 verify: build test
 
@@ -38,13 +38,21 @@ bench-pipeline:
 bench-fig2:
 	$(CARGO) bench --bench fig2_scalability
 
+# Socket-transport calibration: UDS fleet ping-pong α, α–β fit over a
+# size sweep, frame-envelope overhead -> BENCH_transport.json. Spawns
+# real rank-shell OS processes from the freshly built yasgd binary.
+bench-transport:
+	$(CARGO) bench --bench transport
+
 # Assert the bench artifacts' structural invariants (pipeline: depth-2
 # section present, whole-run exposed comm no worse than depth 1, crash
 # recovery bitwise with bounded overhead; fig2: torus step time no worse
 # than plain hier at 2048 ranks under the calibrated link, and the torus
-# byte split is intra-node dominant).
+# byte split is intra-node dominant; transport: socket reduce bitwise vs
+# the in-process engine, ping α inside the fit's residual band, frame
+# envelope < 2% of leader bytes).
 bench-check:
-	python3 scripts/check_bench.py BENCH_pipeline.json BENCH_fig2.json
+	python3 scripts/check_bench.py BENCH_pipeline.json BENCH_fig2.json BENCH_transport.json
 
 # Fault-injection system tests only: the chaos grid (crash/stall/panic/
 # lane faults × depth × wire × schedule recover bitwise), the elastic
@@ -60,6 +68,15 @@ chaos-smoke:
 # almost CPU-idle, so it lives in a scheduled CI job, not the PR path.
 chaos-soak:
 	CHAOS_FULL=1 $(CARGO) test -q --test faults
+
+# Socket-transport system tests only: the multi-process determinism grid
+# ({f32, q8} x {ring, hier} bitwise vs the in-process engine), trainer
+# equivalence under --transport socket, and the wire-level chaos matrix
+# (peer kill, CRC-caught frame corruption, heartbeat-detected stall,
+# half-closed socket -> supervised recovery, bitwise).
+socket-smoke:
+	python3 scripts/check_wire_spec.py
+	$(CARGO) test -q --test transport
 
 # AOT-lower the JAX/Pallas graphs to HLO text + manifest (PJRT path only).
 artifacts:

@@ -1,0 +1,266 @@
+//! Socket-transport microbenchmark (PR 10): calibrate the real
+//! Unix-domain-socket fleet with the SAME α–β methodology the pipeline
+//! bench applies to the in-process lanes.
+//!
+//! * Ping-pong α — the smallest reduce a 2-rank fleet can run, repeated,
+//!   min-of-reps: one Job/Data/Result round trip through real OS
+//!   processes, the poll reactor and the framed wire.
+//! * α–β fit — `allreduce_mean` latency over a geometric sweep of
+//!   buffer sizes, fitted with `simnet::fit_alpha_beta` and scored with
+//!   `fit_residuals`. The ping-pong point is ITSELF a fit sample, so the
+//!   gate in scripts/check_bench.py can demand the measured α sits
+//!   inside the fit's own residual band — a self-consistency check, not
+//!   a machine-speed assertion.
+//! * Frame overhead — the 17-byte length+kind+seq+CRC envelope, both
+//!   measured (the leader links' exact payload vs framed byte counters)
+//!   and analytic (plan messages × FRAME_OVERHEAD over scheduled wire
+//!   bytes). The gate bounds the measured fraction below 2%.
+//! * Determinism spot check — one socket reduce vs `CommEngine`,
+//!   bitwise, on the f32 and the q8 wire (the full grid lives in
+//!   rust/tests/transport.rs; the bench re-asserts it so a perf run can
+//!   never report numbers for a wrong reduction).
+//!
+//! Writes BENCH_transport.json (repo root; assertion-checked by
+//! scripts/check_bench.py) plus the raw dump under
+//! bench_results/transport.json. Quick mode (`BENCH_QUICK=1`) trims the
+//! sweep so CI finishes in seconds while producing every field.
+
+use yasgd::benchkit::{dump_results, Table};
+use yasgd::collective::{Algorithm, CommEngine, Precision};
+use yasgd::simnet::{fit_alpha_beta, fit_residuals, LinkParams};
+use yasgd::transport::socket::{SocketFleet, SocketOpts};
+use yasgd::transport::FRAME_OVERHEAD;
+use yasgd::util::json::Json;
+use yasgd::util::rng::Rng;
+
+/// The rank-shell binary: the real `yasgd` executable Cargo built for
+/// this bench run.
+fn shell_bin() -> String {
+    env!("CARGO_BIN_EXE_yasgd").to_string()
+}
+
+fn socket_opts(workers: usize, algo: Algorithm, precision: Precision) -> SocketOpts {
+    SocketOpts {
+        workers,
+        algo,
+        precision,
+        shell_binary: shell_bin(),
+        connect_retries: 10,
+        connect_base_ms: 5,
+        heartbeat_ms: 50,
+        deadline_ms: 30_000,
+        seed: 11,
+    }
+}
+
+fn buffers(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..p)
+        .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect())
+        .collect()
+}
+
+/// One timed reduce; returns the leader-measured elapsed seconds.
+fn timed_reduce(fleet: &mut SocketFleet, bufs: &mut [Vec<f32>]) -> f64 {
+    let mut views: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+    let stats = fleet.allreduce_mean(&mut views).expect("bench reduce");
+    stats.elapsed_s
+}
+
+/// Bitwise spot check: a fresh fleet must reduce identically to the
+/// in-process engine. Returns true iff every element matches to the bit.
+fn bitwise_check(p: usize, n: usize, algo: Algorithm, precision: Precision) -> bool {
+    let mut want = buffers(p, n, 0xBE7C);
+    let mut engine = CommEngine::new(algo, precision, 1);
+    let mut views: Vec<&mut [f32]> = want.iter_mut().map(|b| b.as_mut_slice()).collect();
+    engine.allreduce_mean(&mut views);
+
+    let mut got = buffers(p, n, 0xBE7C);
+    let mut fleet = SocketFleet::spawn(socket_opts(p, algo, precision)).expect("fleet spawn");
+    let mut views: Vec<&mut [f32]> = got.iter_mut().map(|b| b.as_mut_slice()).collect();
+    fleet.allreduce_mean(&mut views).expect("socket reduce");
+    fleet.shutdown().expect("orderly shutdown");
+
+    want.iter()
+        .zip(got.iter())
+        .all(|(w, g)| w.iter().zip(g.iter()).all(|(a, b)| a.to_bits() == b.to_bits()))
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let (warmup, reps) = if quick { (2, 5) } else { (3, 25) };
+    if quick {
+        println!("(BENCH_QUICK: {reps} reps after {warmup} warmup per size)\n");
+    }
+    let p = 2;
+    // Geometric size sweep, in f32 elements. The smallest point doubles
+    // as the ping-pong α probe; the largest keeps the bench sub-second
+    // even over real sockets.
+    let sizes: &[usize] = if quick {
+        &[64, 1024, 16384, 65536]
+    } else {
+        &[64, 256, 1024, 4096, 16384, 65536, 262144]
+    };
+
+    // ---- determinism spot check (full grid: rust/tests/transport.rs) ----
+    let bitwise_f32 = bitwise_check(p, 1537, Algorithm::Ring, Precision::F32);
+    let bitwise_q8 = bitwise_check(p, 1537, Algorithm::Ring, Precision::Q8);
+    let bitwise_equal = bitwise_f32 && bitwise_q8;
+    assert!(bitwise_equal, "socket reduce diverged from CommEngine (f32={bitwise_f32}, q8={bitwise_q8})");
+
+    // ---- latency sweep over one long-lived fleet -------------------------
+    let mut fleet =
+        SocketFleet::spawn(socket_opts(p, Algorithm::Ring, Precision::F32)).expect("fleet spawn");
+    let mut samples: Vec<(f64, f64)> = Vec::with_capacity(sizes.len());
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (n, min_us, mean_us)
+    let mut last_stats = None;
+    for (si, &n) in sizes.iter().enumerate() {
+        let mut bufs = buffers(p, n, 0xA1FA ^ si as u64);
+        for _ in 0..warmup {
+            timed_reduce(&mut fleet, &mut bufs);
+        }
+        let mut min_s = f64::INFINITY;
+        let mut sum_s = 0.0;
+        for _ in 0..reps {
+            let s = timed_reduce(&mut fleet, &mut bufs);
+            min_s = min_s.min(s);
+            sum_s += s;
+        }
+        // One stats snapshot per size for the analytic overhead below.
+        {
+            let mut views: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            last_stats = Some(fleet.allreduce_mean(&mut views).expect("stats reduce"));
+        }
+        // x-axis: the per-rank payload each Job/Result leg actually moves.
+        samples.push(((n * 4) as f64, min_s));
+        rows.push((n, min_s * 1e6, sum_s / reps as f64 * 1e6));
+    }
+    let (payload_bytes, framed_bytes) = fleet.leader_frame_accounting();
+    fleet.shutdown().expect("orderly shutdown");
+
+    // ---- ping-pong α + α–β fit ------------------------------------------
+    let ping_bytes = samples[0].0;
+    let ping_alpha_us = samples[0].1 * 1e6;
+    let fit = fit_alpha_beta(&samples);
+    let (alpha_us, beta_gbps, rms_us, max_us, fit_n) = match &fit {
+        Some(link) => {
+            let q = fit_residuals(&samples, link);
+            (
+                link.latency_s * 1e6,
+                link.bandwidth_bps / 1e9,
+                q.rms_s * 1e6,
+                q.max_abs_s * 1e6,
+                q.n,
+            )
+        }
+        None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN, 0),
+    };
+    // Self-consistency: the ping point is a fit sample, so its distance
+    // from the fitted line is bounded by the fit's own worst residual.
+    // Predict through the µs/GB-s round trip (`from_us_gbps`) because
+    // that is what scripts/check_bench.py recomputes from the JSON.
+    let ping_predicted_us = if alpha_us.is_finite() && beta_gbps > 0.0 {
+        LinkParams::from_us_gbps(alpha_us, beta_gbps).transfer_time(ping_bytes) * 1e6
+    } else {
+        f64::NAN
+    };
+
+    // ---- frame overhead ---------------------------------------------------
+    let measured_frac = if framed_bytes > 0 {
+        (framed_bytes - payload_bytes) as f64 / framed_bytes as f64
+    } else {
+        f64::NAN
+    };
+    let stats = last_stats.expect("at least one size ran");
+    let sched_env = (stats.messages as usize * FRAME_OVERHEAD) as f64;
+    let analytic_frac = sched_env / (stats.total_bytes as f64 + sched_env);
+    assert!(
+        measured_frac < 0.02,
+        "frame envelope must cost < 2% of leader traffic: {measured_frac:.4}"
+    );
+
+    println!("== socket transport: UDS fleet latency sweep (p={p}, ring, f32) ==");
+    let mut t = Table::new(&["elems", "bytes/rank", "min µs", "mean µs"]);
+    for (n, min_us, mean_us) in &rows {
+        t.row(&[
+            format!("{n}"),
+            format!("{}", n * 4),
+            format!("{min_us:.1}"),
+            format!("{mean_us:.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "ping-pong: α = {ping_alpha_us:.1} µs at {ping_bytes:.0} B/rank \
+         (fit predicts {ping_predicted_us:.1} µs)"
+    );
+    println!(
+        "α–β fit over {fit_n} sizes: α = {alpha_us:.2} µs, β = {beta_gbps:.3} GB/s \
+         (residuals rms {rms_us:.2} µs, max {max_us:.2} µs)"
+    );
+    println!(
+        "frame envelope ({FRAME_OVERHEAD} B/frame): measured {:.4}% of leader bytes \
+         ({payload_bytes} payload / {framed_bytes} framed), analytic {:.4}% of \
+         scheduled mesh bytes ({} msgs, {} B)",
+        measured_frac * 100.0,
+        analytic_frac * 100.0,
+        stats.messages,
+        stats.total_bytes
+    );
+    println!("determinism: bitwise vs CommEngine — f32 {bitwise_f32}, q8 {bitwise_q8}");
+    println!(
+        "\nEXPERIMENTS.md row:\n| {} | {ping_alpha_us:.1} | {alpha_us:.2} | {beta_gbps:.3} \
+         | {rms_us:.2} | {max_us:.2} | {:.4}% | {bitwise_equal} |",
+        if quick { "quick" } else { "full" },
+        measured_frac * 100.0
+    );
+
+    // ---- result files -----------------------------------------------------
+    let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    let headline = Json::obj(vec![
+        ("workers", Json::Num(p as f64)),
+        ("algo", Json::Str("ring".into())),
+        ("wire", Json::Str("f32".into())),
+        ("reps", Json::Num(reps as f64)),
+        ("quick", Json::Bool(quick)),
+        ("ping_bytes", Json::Num(ping_bytes)),
+        ("ping_alpha_us", num_or_null(ping_alpha_us)),
+        ("fit_alpha_us", num_or_null(alpha_us)),
+        ("fit_beta_gbps", num_or_null(beta_gbps)),
+        ("fit_rms_residual_us", num_or_null(rms_us)),
+        ("fit_max_residual_us", num_or_null(max_us)),
+        ("fit_n", Json::Num(fit_n as f64)),
+        (
+            "samples",
+            Json::Arr(
+                rows.iter()
+                    .map(|(n, min_us, mean_us)| {
+                        Json::obj(vec![
+                            ("bytes", Json::Num((n * 4) as f64)),
+                            ("min_us", Json::Num(*min_us)),
+                            ("mean_us", Json::Num(*mean_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "frame_overhead",
+            Json::obj(vec![
+                ("frame_bytes", Json::Num(FRAME_OVERHEAD as f64)),
+                ("payload_bytes", Json::Num(payload_bytes as f64)),
+                ("framed_bytes", Json::Num(framed_bytes as f64)),
+                ("measured_frac", num_or_null(measured_frac)),
+                ("analytic_frac", num_or_null(analytic_frac)),
+            ]),
+        ),
+        ("bitwise_equal", Json::Bool(bitwise_equal)),
+        ("bitwise_f32", Json::Bool(bitwise_f32)),
+        ("bitwise_q8", Json::Bool(bitwise_q8)),
+    ]);
+    std::fs::write("BENCH_transport.json", headline.to_string_pretty())
+        .expect("writing BENCH_transport.json");
+    println!("\nwrote BENCH_transport.json");
+    let path = dump_results("transport", &headline).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -26,6 +26,7 @@
 //! before these fields existed (legacy files) still load — the checks are
 //! skipped, matching the old behavior exactly.
 
+use crate::util::crc::crc32;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
@@ -33,18 +34,11 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"YASGD1\n\0";
 
-/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), bitwise — the
-/// payload is read once at load time anyway, so a table buys nothing.
-fn crc32(bytes: &[u8]) -> u32 {
-    let mut crc = !0u32;
-    for &b in bytes {
-        crc ^= b as u32;
-        for _ in 0..8 {
-            crc = (crc >> 1) ^ (0xEDB8_8320 & (0u32.wrapping_sub(crc & 1)));
-        }
-    }
-    !crc
-}
+/// Smallest byte count any checkpoint can occupy: the magic plus the
+/// u32 header length. Anything shorter is structurally not a checkpoint
+/// (an interrupted `File::create`, a zero-length crash leftover), and
+/// `load_latest` skips such files without even opening them.
+const MIN_FILE_LEN: u64 = (MAGIC.len() + 4) as u64;
 
 /// A complete training state snapshot.
 #[derive(Debug, Clone, PartialEq)]
@@ -241,15 +235,41 @@ impl Checkpoint {
     }
 
     /// Load the newest LOADABLE checkpoint from a rotation directory:
-    /// candidates are tried newest-first, and one that fails its CRC (or
-    /// is otherwise unreadable) is skipped, falling back to the next — a
-    /// torn or bit-rotted newest file costs one snapshot interval, not
-    /// the run.
+    /// candidates are tried newest-first, and one that fails its CRC, is
+    /// zero-length or shorter than the minimum header, or is otherwise
+    /// unreadable, is skipped, falling back to the next — a torn or
+    /// bit-rotted newest file costs one snapshot interval, not the run.
     pub fn load_latest(dir: &Path) -> Result<Checkpoint> {
         let files = Self::rotation_files(dir)?;
         anyhow::ensure!(!files.is_empty(), "no checkpoints in {dir:?}");
         let mut first_err = None;
         for path in &files {
+            // Structural pre-check: an empty file (a crash between
+            // `File::create` and the first write of some foreign writer)
+            // or one shorter than magic + header length cannot be a
+            // checkpoint; skip it with a message that says WHY instead of
+            // surfacing a generic short-read error from `load`.
+            match std::fs::metadata(path).map(|m| m.len()) {
+                Ok(0) => {
+                    eprintln!("checkpoint {path:?} is zero-length, falling back");
+                    first_err
+                        .get_or_insert_with(|| anyhow::anyhow!("checkpoint {path:?} is zero-length"));
+                    continue;
+                }
+                Ok(len) if len < MIN_FILE_LEN => {
+                    eprintln!(
+                        "checkpoint {path:?} is {len} bytes, shorter than the {MIN_FILE_LEN}-byte \
+                         minimum header, falling back"
+                    );
+                    first_err.get_or_insert_with(|| {
+                        anyhow::anyhow!(
+                            "checkpoint {path:?} is {len} bytes (minimum header is {MIN_FILE_LEN})"
+                        )
+                    });
+                    continue;
+                }
+                _ => {}
+            }
             match Checkpoint::load(path) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
@@ -470,6 +490,49 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         std::fs::create_dir_all(&dir).unwrap();
         assert!(Checkpoint::load_latest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_length_newest_falls_back_to_previous() {
+        // An interrupted write can leave a zero-byte file under the
+        // rotation name; load_latest must skip it structurally, not die
+        // on a short read.
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_zero");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = sample();
+        c.step = 4;
+        c.save_retained(&dir, 3).unwrap();
+        std::fs::write(dir.join("ckpt-000000000008.ckpt"), b"").unwrap();
+        let restored = Checkpoint::load_latest(&dir).unwrap();
+        assert_eq!(restored.step, 4, "must fall back past the zero-length newest file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn short_header_newest_falls_back_to_previous() {
+        // Shorter than magic + header-length u32: structurally not a
+        // checkpoint, skipped before `load` is even attempted.
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_short");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = sample();
+        c.step = 6;
+        c.save_retained(&dir, 3).unwrap();
+        std::fs::write(dir.join("ckpt-000000000009.ckpt"), &MAGIC[..5]).unwrap();
+        let restored = Checkpoint::load_latest(&dir).unwrap();
+        assert_eq!(restored.step, 6, "must fall back past the short-header newest file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn all_candidates_short_surfaces_error() {
+        let dir = std::env::temp_dir().join("yasgd_ckpt_test_allshort");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ckpt-000000000001.ckpt"), b"").unwrap();
+        std::fs::write(dir.join("ckpt-000000000002.ckpt"), b"YASGD").unwrap();
+        let err = Checkpoint::load_latest(&dir).unwrap_err().to_string();
+        assert!(err.contains("loaded clean"), "want the summary error, got: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

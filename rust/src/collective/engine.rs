@@ -34,8 +34,13 @@ use super::{chunks, torus_grid, Algorithm, Precision, Tier, WireStats};
 use std::sync::Barrier;
 use std::time::Instant;
 
+// Plan internals are `pub(crate)`: the socket transport executes the
+// SAME compiled plans rank-by-rank across processes (each rank-shell
+// rebuilds the identical plan deterministically and runs its own op
+// subsequence in global plan order), which is what makes the multi-
+// process path bit-identical to this engine by construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum OpKind {
+pub(crate) enum OpKind {
     /// dst[lo..hi] = wire(src[lo..hi])
     Copy,
     /// dst[lo..hi] += wire(src[lo..hi])
@@ -49,31 +54,31 @@ enum OpKind {
 /// One operation on the shared rank buffers. For `Quantize`/`Scale`,
 /// `src == dst` (in-place).
 #[derive(Debug, Clone, Copy)]
-struct Op {
-    kind: OpKind,
-    src: usize,
-    dst: usize,
-    lo: usize,
-    hi: usize,
+pub(crate) struct Op {
+    pub(crate) kind: OpKind,
+    pub(crate) src: usize,
+    pub(crate) dst: usize,
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
 }
 
 /// Ops that may run concurrently (one chain per thread slot, ops within a
 /// chain strictly in order — e.g. the naive root reduction is one chain).
 #[derive(Debug, Clone)]
-struct Round {
-    chains: Vec<Vec<Op>>,
+pub(crate) struct Round {
+    pub(crate) chains: Vec<Vec<Op>>,
 }
 
 /// A fully-resolved allreduce schedule for one (p, n) shape.
 #[derive(Debug, Clone)]
-struct Plan {
-    rounds: Vec<Round>,
+pub(crate) struct Plan {
+    pub(crate) rounds: Vec<Round>,
     /// Wire accounting, identical to what the reference path reports.
-    stats: WireStats,
+    pub(crate) stats: WireStats,
     /// 1/p as f32 — the exact multiplier the reference uses.
-    inv: f32,
+    pub(crate) inv: f32,
     /// Widest round (bounds useful thread count).
-    max_chains: usize,
+    pub(crate) max_chains: usize,
 }
 
 // ---------------------------------------------------------------------
@@ -171,7 +176,7 @@ impl PlanBuilder {
     }
 }
 
-fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan {
+pub(crate) fn build_plan(algo: Algorithm, precision: Precision, p: usize, n: usize) -> Plan {
     debug_assert!(p >= 2);
     let mut pb = PlanBuilder::new(precision, p);
     let inv = 1.0 / p as f32;
@@ -557,7 +562,7 @@ fn build_multiring(pb: &mut PlanBuilder, p: usize, n: usize, rails: usize) {
 /// ops in DIFFERENT chains touch pairwise-disjoint memory (no write/write
 /// and no read/write overlap), every span is in bounds, and no transfer
 /// aliases src with dst. Returns a description of the first violation.
-fn validate_plan(plan: &Plan, p: usize, n: usize) -> Result<(), String> {
+pub(crate) fn validate_plan(plan: &Plan, p: usize, n: usize) -> Result<(), String> {
     #[derive(Clone, Copy)]
     struct Access {
         chain: usize,

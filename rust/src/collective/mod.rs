@@ -51,7 +51,7 @@
 
 use std::time::Instant;
 
-mod engine;
+pub(crate) mod engine;
 pub use engine::CommEngine;
 
 /// Wire precision for gradient exchange (paper: fp16 wire, fp32 master;

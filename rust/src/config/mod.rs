@@ -211,6 +211,26 @@ pub struct RunConfig {
     /// older ones AFTER the new write passes CRC verification. 0 = keep
     /// everything (the legacy single-file behavior).
     pub ckpt_keep: usize,
+    /// Gradient-exchange transport: `inproc` (the split-borrow in-process
+    /// engine, the default) or `socket` (one rank-shell OS process per
+    /// worker over Unix domain sockets — bit-identical results, real
+    /// wire-level fault tolerance; forces the sequential step path).
+    pub transport: String,
+    /// Socket transport: connect attempts before giving up with a typed
+    /// error (capped exponential backoff with seeded jitter between
+    /// attempts).
+    pub connect_retries: usize,
+    /// Socket transport: base backoff delay in ms (attempt k sleeps in
+    /// `[base·2^k / 2, base·2^k]`, capped).
+    pub connect_base_ms: u64,
+    /// Socket transport: rank-shell heartbeat interval in ms. Peer-death
+    /// detection uses the supervision deadline on top of these stamps.
+    pub heartbeat_ms: u64,
+    /// Socket transport: binary providing the `rank-shell` subcommand.
+    /// Empty = `current_exe()`. Not a CLI flag — tests set it to
+    /// `env!("CARGO_BIN_EXE_yasgd")` because their current_exe is the
+    /// test harness, and `$YASGD_SHELL_BIN` overrides for exotic setups.
+    pub shell_binary: String,
 }
 
 impl Default for RunConfig {
@@ -264,6 +284,11 @@ impl Default for RunConfig {
             fault_deadline_auto: true,
             deadline_factor: 4.0,
             ckpt_keep: 0,
+            transport: "inproc".into(),
+            connect_retries: 10,
+            connect_base_ms: 5,
+            heartbeat_ms: 25,
+            shell_binary: std::env::var("YASGD_SHELL_BIN").unwrap_or_default(),
         }
     }
 }
@@ -460,6 +485,10 @@ impl RunConfig {
         }
         c.deadline_factor = args.get_f64("deadline-factor", c.deadline_factor)?;
         c.ckpt_keep = args.get_usize("ckpt-keep", c.ckpt_keep)?;
+        c.transport = args.get_or("transport", &c.transport).to_string();
+        c.connect_retries = args.get_usize("connect-retries", c.connect_retries)?;
+        c.connect_base_ms = args.get_u64("connect-base-ms", c.connect_base_ms)?;
+        c.heartbeat_ms = args.get_u64("heartbeat-ms", c.heartbeat_ms)?;
         c.validate()?;
         Ok(c)
     }
@@ -536,6 +565,19 @@ impl RunConfig {
             ),
             deadline_factor: get_f64("deadline_factor", d.deadline_factor),
             ckpt_keep: get_usize("ckpt_keep", d.ckpt_keep),
+            transport: get_str("transport", &d.transport),
+            connect_retries: get_usize("connect_retries", d.connect_retries),
+            connect_base_ms: j
+                .get("connect_base_ms")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64)
+                .unwrap_or(d.connect_base_ms),
+            heartbeat_ms: j
+                .get("heartbeat_ms")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64)
+                .unwrap_or(d.heartbeat_ms),
+            shell_binary: get_str("shell_binary", &d.shell_binary),
         };
         c.validate()?;
         Ok(c)
@@ -596,10 +638,24 @@ impl RunConfig {
                 crate::fleet::ElasticPlan::parse(&self.fleet_spec, self.fault_seed)?;
             }
         }
+        anyhow::ensure!(
+            self.transport == "inproc" || self.transport == "socket",
+            "unknown transport '{}' (inproc | socket)",
+            self.transport
+        );
+        anyhow::ensure!(self.connect_retries >= 1, "connect_retries must be >= 1");
+        anyhow::ensure!(self.connect_base_ms >= 1, "connect_base_ms must be >= 1");
+        anyhow::ensure!(self.heartbeat_ms >= 1, "heartbeat_ms must be >= 1");
         self.fence_mode()?;
         self.algorithm()?;
         self.precision()?;
         Ok(())
+    }
+
+    /// Whether collectives run over the multi-process Unix-socket
+    /// transport instead of the in-process split-borrow engine.
+    pub fn socket_transport(&self) -> bool {
+        self.transport == "socket"
     }
 
     /// The schedule implied by this config.
@@ -964,6 +1020,48 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"fleet_spec": "evaporate@1:0"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"fleet_spec": "seed:lots"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"deadline_factor": 1.0}"#).is_err());
+    }
+
+    #[test]
+    fn transport_knobs_round_trip() {
+        let d = RunConfig::default();
+        assert_eq!(d.transport, "inproc", "in-process transport by default");
+        assert!(!d.socket_transport());
+        assert_eq!(d.connect_retries, 10);
+        assert_eq!(d.connect_base_ms, 5);
+        assert_eq!(d.heartbeat_ms, 25);
+        let c = RunConfig::from_args(&args(&[
+            "train",
+            "--transport",
+            "socket",
+            "--connect-retries",
+            "4",
+            "--connect-base-ms",
+            "2",
+            "--heartbeat-ms",
+            "50",
+        ]))
+        .unwrap();
+        assert!(c.socket_transport());
+        assert_eq!(c.connect_retries, 4);
+        assert_eq!(c.connect_base_ms, 2);
+        assert_eq!(c.heartbeat_ms, 50);
+        let c = RunConfig::from_json(
+            r#"{"transport": "socket", "connect_retries": 3,
+                "connect_base_ms": 7, "heartbeat_ms": 40,
+                "shell_binary": "/tmp/yasgd"}"#,
+        )
+        .unwrap();
+        assert!(c.socket_transport());
+        assert_eq!(c.connect_retries, 3);
+        assert_eq!(c.connect_base_ms, 7);
+        assert_eq!(c.heartbeat_ms, 40);
+        assert_eq!(c.shell_binary, "/tmp/yasgd");
+        // Bad values fail at config load, not at fleet bring-up.
+        assert!(RunConfig::from_json(r#"{"transport": "carrier-pigeon"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"connect_retries": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"connect_base_ms": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"heartbeat_ms": 0}"#).is_err());
     }
 
     #[test]

@@ -45,13 +45,15 @@ use crate::collective::{Algorithm, CommEngine, Precision, WireStats};
 use crate::config::{FenceMode, RunConfig};
 use crate::data::{make_batch, Batch, DataConfig, Shard, Split, Synthetic};
 use crate::faults::{DeadlineTracker, FaultEvent, FaultPlan, Heartbeats, StragglerTracker};
-use crate::fleet::{ElasticPlan, FleetController, FleetEvent};
+use crate::fleet::{ElasticPlan, FleetAction, FleetController, FleetEvent};
 use crate::init;
 use crate::metrics::{StepBreakdown, Throughput, Timer};
 use crate::mlperf::{tags, MlperfLogger};
 use crate::overlap::MeasuredPipeline;
 use crate::runtime::{Engine, GradVariant, UpdateRule};
 use crate::schedule::LrSchedule;
+use crate::transport::socket::{SocketFleet, SocketOpts};
+use crate::transport::TransportError;
 use crate::util::codec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -453,6 +455,14 @@ pub struct Trainer {
     /// was declared — the exact count `live_scale_down`'s quiesce drains.
     stale_reports: usize,
 
+    // ---- socket transport (transport module) ---------------------------
+    /// Multi-process collective fleet (`--transport socket`): one
+    /// rank-shell OS process per logical worker, spawned lazily on the
+    /// first sequential step and respawned fresh (new socket dir, new
+    /// processes) after a detected peer death. `None` under the
+    /// in-process transport.
+    socket: Option<SocketFleet>,
+
     // ---- task-runtime accounting (exec module, via the pool's TaskHub) --
     /// Counters absorbed from pools that have been TORN DOWN (fault
     /// teardown, lane-rebuild respawn): (tasks, steals, busy ns, thread-
@@ -523,7 +533,10 @@ impl Trainer {
         let sc = m.state_count;
         let workers = cfg.workers;
         let bucket_spans = Arc::new(plan.spans_with_padding());
-        let pipeline = cfg.overlap && engine.supports_pipeline();
+        // The socket transport reduces through OS processes, which the
+        // pipelined executor's in-memory lane channels cannot drive — a
+        // socket run always takes the sequential (barrier) executor.
+        let pipeline = cfg.overlap && engine.supports_pipeline() && !cfg.socket_transport();
         let fence_mode = cfg.fence_mode()?;
         let ef = cfg.error_feedback_active()?;
         // Deterministic fault plan: an explicit `--fault` schedule wins;
@@ -629,6 +642,7 @@ impl Trainer {
             deadline,
             lost_slots: Vec::new(),
             stale_reports: 0,
+            socket: None,
             runtime_absorbed: (0, 0, 0, 0),
             breakdown: StepBreakdown::default(),
             wire_totals: WireStats::default(),
@@ -849,7 +863,7 @@ impl Trainer {
         // dispatch (and again right after a disk `restore()`), so recovery
         // always has somewhere to go back to even before the periodic
         // `ckpt_every` snapshots start landing.
-        if self.pipeline
+        if (self.pipeline || self.cfg.socket_transport())
             && self.cfg.recover
             && self.cfg.ckpt_every > 0
             && self.last_snapshot.is_none()
@@ -918,10 +932,14 @@ impl Trainer {
                     if !live {
                         // Poison + join the pool FIRST, on every error path
                         // — even when recovery is off, so Drop never blocks
-                        // on a wedged lane.
+                        // on a wedged lane. A broken socket fleet is killed
+                        // the same way; the next attempt respawns it fresh.
                         self.fault_teardown();
+                        self.socket_teardown();
                     }
-                    if !(self.pipeline && self.cfg.recover) || recoveries >= MAX_RECOVERIES {
+                    let recoverable =
+                        (self.pipeline || self.cfg.socket_transport()) && self.cfg.recover;
+                    if !recoverable || recoveries >= MAX_RECOVERIES {
                         return Err(e);
                     }
                     let Some(snap_step) = self.restore_snapshot() else {
@@ -994,8 +1012,9 @@ impl Trainer {
         all_idxs: &[Vec<Vec<usize>>],
         accum_inv: f32,
     ) -> Result<(f32, f32)> {
-        // Lane engines, built on first use (pipelined trainers never do).
-        if self.comm.is_empty() {
+        // Lane engines, built on first use (pipelined trainers never do;
+        // socket trainers reduce through the shell fleet instead).
+        if self.comm.is_empty() && !self.cfg.socket_transport() {
             let (lanes, threads_per_lane) = self.comm_lane_split();
             self.comm = (0..lanes)
                 .map(|_| CommEngine::new(self.algo, self.precision, threads_per_lane))
@@ -1033,6 +1052,27 @@ impl Trainer {
                 }
             }
         }
+        // Socket transport: spawn the shell fleet on first use, refresh
+        // its peer-death deadline from the adaptive tracker, and arm this
+        // step's transport faults before any frames go out. Done before
+        // the split-borrow below so `self` is still whole.
+        if self.cfg.socket_transport() {
+            self.ensure_socket()?;
+            if let Some(fault_plan) = self.fault_plan.as_mut() {
+                for r in 0..self.cfg.workers {
+                    if let Some(kind) = fault_plan.take_transport(self.step_idx, r) {
+                        self.fault_events.push(FaultEvent::Injected {
+                            step: self.step_idx,
+                            target: r,
+                            desc: kind.describe(),
+                        });
+                        self.socket.as_mut().expect("just ensured").inject(r, kind);
+                    }
+                }
+            }
+            let deadline_ms = self.effective_deadline_ms();
+            self.socket.as_mut().expect("just ensured").set_deadline_ms(deadline_ms);
+        }
         let nb = self.plan.buckets.len();
         let plan = &self.plan;
         let mut bucket_views: Vec<Vec<&mut [f32]>> =
@@ -1052,9 +1092,29 @@ impl Trainer {
             }
             debug_assert!(rest.is_empty(), "bucket spans must cover the padded buffer");
         }
-        let lanes = self.comm.len();
+        let lanes = self.comm.len().max(1);
         let per_lane = (nb + lanes - 1) / lanes;
-        let all_stats: Vec<Vec<WireStats>> = if lanes <= 1 || nb == 1 {
+        let mut socket_failure: Option<(usize, u64, TransportError)> = None;
+        let all_stats: Vec<Vec<WireStats>> = if let Some(fleet) = self.socket.as_mut() {
+            // One fleet, buckets in plan order on the leader thread: the
+            // shells execute each bucket's schedule in lockstep, and the
+            // sequential order (like lane assignment in-proc) never
+            // changes bits — reduction order is fixed per bucket.
+            let t_detect = std::time::Instant::now();
+            let mut stats = Vec::with_capacity(nb);
+            for views in bucket_views.iter_mut() {
+                match fleet.allreduce_mean(views) {
+                    Ok(s) => stats.push(s),
+                    Err(e) => {
+                        let rank = fleet.last_dead().unwrap_or(0);
+                        socket_failure =
+                            Some((rank, t_detect.elapsed().as_millis() as u64, e));
+                        break;
+                    }
+                }
+            }
+            vec![stats]
+        } else if lanes <= 1 || nb == 1 {
             let engine = &mut self.comm[0];
             vec![bucket_views.iter_mut().map(|views| engine.allreduce_mean(views)).collect()]
         } else {
@@ -1076,6 +1136,26 @@ impl Trainer {
             })
         };
         drop(bucket_views);
+        if let Some((rank, detect_ms, e)) = socket_failure {
+            // A dead rank breaks the whole shell fleet: log the typed
+            // events, kill the survivors and surface the error to the
+            // supervised `step()` wrapper, which restores the last
+            // snapshot and replays over a freshly spawned fleet.
+            self.fault_events.push(FaultEvent::PeerDead {
+                step: self.step_idx,
+                rank,
+                detect_ms,
+            });
+            self.fleet.push_event(FleetEvent {
+                step: self.step_idx,
+                slot: rank,
+                action: FleetAction::Respawn,
+                moved: 0,
+                cost_ms: detect_ms as f64,
+            });
+            self.socket_teardown();
+            return Err(e.into());
+        }
         for stats in all_stats.iter().flatten() {
             self.wire_totals.merge(stats);
         }
@@ -1097,7 +1177,56 @@ impl Trainer {
         t_up.stop_into(&mut self.breakdown.update_s);
         self.apply_bn_policy(0);
 
+        // Periodic recovery snapshot (socket transport only — the
+        // pipelined executor takes its own at tail retirement): the
+        // master state at step boundary `step_idx + 1`, every
+        // `ckpt_every` steps.
+        if self.socket.is_some()
+            && self.cfg.recover
+            && self.cfg.ckpt_every > 0
+            && (self.step_idx + 1) % self.cfg.ckpt_every == 0
+        {
+            self.last_snapshot = Some(Snapshot {
+                step: self.step_idx + 1,
+                params: self.params.clone(),
+                momentum: self.momentum.clone(),
+                bn_state: self.bn_state.clone(),
+                ef_residuals: self.ef_residuals.clone(),
+                ef_err_sq: self.ef_err_sq,
+            });
+        }
+
         Ok((loss_sum, correct_sum))
+    }
+
+    /// Spawn the rank-shell fleet if the socket transport is configured
+    /// and none is live (first step, or the previous fleet was torn down
+    /// on a fault). One shell process per logical worker.
+    fn ensure_socket(&mut self) -> Result<()> {
+        if self.socket.is_some() {
+            return Ok(());
+        }
+        let fleet = SocketFleet::spawn(SocketOpts {
+            workers: self.cfg.workers,
+            algo: self.algo,
+            precision: self.precision,
+            shell_binary: self.cfg.shell_binary.clone(),
+            connect_retries: self.cfg.connect_retries,
+            connect_base_ms: self.cfg.connect_base_ms,
+            heartbeat_ms: self.cfg.heartbeat_ms,
+            deadline_ms: self.effective_deadline_ms(),
+            seed: self.cfg.seed,
+        })
+        .context("spawning the socket transport fleet")?;
+        self.socket = Some(fleet);
+        Ok(())
+    }
+
+    /// Kill and reap the shell fleet's processes (no-op without one).
+    /// Dropping the fleet kills every child and removes its socket dir;
+    /// the next `ensure_socket` spawns a fresh one.
+    fn socket_teardown(&mut self) {
+        self.socket = None;
     }
 
     /// BN statistics policy (paper III-A-2): worker-local (adopt worker
@@ -1534,6 +1663,11 @@ impl Drop for Trainer {
     fn drop(&mut self) {
         if self.flush().is_err() {
             self.fault_teardown();
+        }
+        // Orderly shell-fleet exit (Shutdown frames + a grace window)
+        // instead of the kill Drop would deliver.
+        if let Some(fleet) = self.socket.take() {
+            let _ = fleet.shutdown();
         }
     }
 }

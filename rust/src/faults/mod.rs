@@ -68,6 +68,22 @@ pub enum FaultKind {
     /// numerics are untouched). Flagged by straggler detection, never
     /// recovered from.
     CommSlow { factor: f64 },
+    /// Socket transport: the targeted rank-shell process exits hard
+    /// (`exit(17)`) midway through its data sends — peers see EOF, the
+    /// leader sees a dead child. The harshest transport loss.
+    PeerKill,
+    /// Socket transport: the shell XORs one byte of its first outgoing
+    /// data frame AFTER encoding, so the receiver's CRC-32 trailer check
+    /// must reject it (wire-level corruption, not a software bug).
+    FrameCorrupt,
+    /// Socket transport: the shell freezes `ms` at job start WITHOUT
+    /// heartbeating — past the deadline the leader must declare it dead
+    /// even though the process is still alive.
+    SockStall { ms: u64 },
+    /// Socket transport: the shell half-closes (shutdown(Write)) its
+    /// first peer link at job start — the peer's next read gets EOF
+    /// mid-protocol instead of a clean teardown.
+    HalfClose,
 }
 
 impl FaultKind {
@@ -76,6 +92,18 @@ impl FaultKind {
         matches!(
             self,
             FaultKind::Crash | FaultKind::Panic | FaultKind::Stall { .. } | FaultKind::Delay { .. }
+        )
+    }
+
+    /// True for kinds consumed at SOCKET-TRANSPORT dispatch (injected
+    /// into a rank-shell process, not an in-process thread).
+    pub fn targets_transport(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::PeerKill
+                | FaultKind::FrameCorrupt
+                | FaultKind::SockStall { .. }
+                | FaultKind::HalfClose
         )
     }
 
@@ -88,14 +116,19 @@ impl FaultKind {
             FaultKind::LaneStall { .. } => "lanestall",
             FaultKind::LanePanic => "lanepanic",
             FaultKind::CommSlow { .. } => "slow",
+            FaultKind::PeerKill => "peerkill",
+            FaultKind::FrameCorrupt => "corrupt",
+            FaultKind::SockStall { .. } => "sockstall",
+            FaultKind::HalfClose => "halfclose",
         }
     }
 
     pub fn describe(&self) -> String {
         match self {
-            FaultKind::Stall { ms } | FaultKind::Delay { ms } | FaultKind::LaneStall { ms } => {
-                format!("{} {}ms", self.name(), ms)
-            }
+            FaultKind::Stall { ms }
+            | FaultKind::Delay { ms }
+            | FaultKind::LaneStall { ms }
+            | FaultKind::SockStall { ms } => format!("{} {}ms", self.name(), ms),
             FaultKind::CommSlow { factor } => format!("slow x{factor}"),
             _ => self.name().to_string(),
         }
@@ -131,6 +164,10 @@ impl FaultPlan {
     /// * `lanestall@S:L:MS` — comm lane L frozen MS ms
     /// * `lanepanic@S:L` — comm lane L panics
     /// * `slow@S:L:K` — lane L's collective runs K× slower for step S
+    /// * `peerkill@S:R` — socket rank-shell R exits hard mid-send
+    /// * `corrupt@S:R` — shell R flips a byte of an outgoing data frame
+    /// * `sockstall@S:R:MS` — shell R freezes MS ms without heartbeating
+    /// * `halfclose@S:R` — shell R half-closes a peer link at job start
     pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
         let mut specs = Vec::new();
         for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
@@ -187,9 +224,26 @@ impl FaultPlan {
                     }
                     FaultKind::CommSlow { factor }
                 }
+                "peerkill" => {
+                    arity(2)?;
+                    FaultKind::PeerKill
+                }
+                "corrupt" => {
+                    arity(2)?;
+                    FaultKind::FrameCorrupt
+                }
+                "sockstall" => {
+                    arity(3)?;
+                    FaultKind::SockStall { ms: num(2, "ms")? }
+                }
+                "halfclose" => {
+                    arity(2)?;
+                    FaultKind::HalfClose
+                }
                 other => bail!(
                     "fault directive '{part}': unknown kind '{other}' \
-                     (crash|panic|stall|delay|lanestall|lanepanic|slow)"
+                     (crash|panic|stall|delay|lanestall|lanepanic|slow\
+                     |peerkill|corrupt|sockstall|halfclose)"
                 ),
             };
             specs.push(FaultSpec { step, target, kind });
@@ -250,10 +304,23 @@ impl FaultPlan {
     /// Consume (one-shot) the first unconsumed lane fault scheduled for
     /// (`step`, lane `lane`). Lane targets are taken modulo the CURRENT
     /// lane count, so a plan generated for the original fleet still lands
-    /// on a live lane after a re-shard.
+    /// on a live lane after a re-shard. Transport kinds are explicitly
+    /// excluded — they dispatch per socket RANK via [`take_transport`],
+    /// not per comm lane.
     pub fn take_lane(&mut self, step: usize, lane: usize, lanes: usize) -> Option<FaultKind> {
         let lanes = lanes.max(1);
-        self.take(|s| !s.kind.targets_worker() && s.step == step && s.target % lanes == lane)
+        self.take(|s| {
+            !s.kind.targets_worker()
+                && !s.kind.targets_transport()
+                && s.step == step
+                && s.target % lanes == lane
+        })
+    }
+
+    /// Consume (one-shot) the first unconsumed transport fault scheduled
+    /// for (`step`, socket rank `rank`).
+    pub fn take_transport(&mut self, step: usize, rank: usize) -> Option<FaultKind> {
+        self.take(|s| s.kind.targets_transport() && s.step == step && s.target == rank)
     }
 
     fn take(&mut self, pred: impl Fn(&FaultSpec) -> bool) -> Option<FaultKind> {
@@ -283,6 +350,10 @@ pub enum FaultEvent {
     /// A comm lane stopped making progress (stale heartbeat past the
     /// deadline, or a poisoned ledger from its panic boundary).
     LaneLost { step: usize, lane: usize, detect_ms: u64 },
+    /// A socket-transport rank died or went silent: dead child process,
+    /// peer-reported EOF/corruption, or heartbeat stale past the
+    /// deadline. `detect_ms` is time from step start to declaration.
+    PeerDead { step: usize, rank: usize, detect_ms: u64 },
     /// A bucket's reduction ran `duration_ms` against a rolling median of
     /// `median_ms` — flagged, never recovered from.
     Straggler { step: usize, bucket: usize, duration_ms: f64, median_ms: f64 },
@@ -305,6 +376,7 @@ impl FaultEvent {
             FaultEvent::WorkerPanic { .. } => "worker_panic",
             FaultEvent::WorkerLost { .. } => "worker_lost",
             FaultEvent::LaneLost { .. } => "lane_lost",
+            FaultEvent::PeerDead { .. } => "peer_dead",
             FaultEvent::Straggler { .. } => "straggler",
             FaultEvent::Recovered { .. } => "recovered",
         }
@@ -331,6 +403,11 @@ impl FaultEvent {
             FaultEvent::LaneLost { step, lane, detect_ms } => {
                 pairs.push(("step", Json::Num(*step as f64)));
                 pairs.push(("lane", Json::Num(*lane as f64)));
+                pairs.push(("detect_ms", Json::Num(*detect_ms as f64)));
+            }
+            FaultEvent::PeerDead { step, rank, detect_ms } => {
+                pairs.push(("step", Json::Num(*step as f64)));
+                pairs.push(("rank", Json::Num(*rank as f64)));
                 pairs.push(("detect_ms", Json::Num(*detect_ms as f64)));
             }
             FaultEvent::Straggler { step, bucket, duration_ms, median_ms } => {
@@ -530,6 +607,36 @@ mod tests {
         );
         assert_eq!(p.specs()[2].kind, FaultKind::Stall { ms: 800 });
         assert_eq!(p.specs()[6].kind, FaultKind::CommSlow { factor: 8.0 });
+    }
+
+    #[test]
+    fn parse_transport_kinds() {
+        let p = FaultPlan::parse("peerkill@2:1;corrupt@3:0;sockstall@1:2:600;halfclose@4:3", 0)
+            .unwrap();
+        assert_eq!(p.specs().len(), 4);
+        assert_eq!(p.specs()[0].kind, FaultKind::PeerKill);
+        assert_eq!(p.specs()[1].kind, FaultKind::FrameCorrupt);
+        assert_eq!(p.specs()[2].kind, FaultKind::SockStall { ms: 600 });
+        assert_eq!(p.specs()[3].kind, FaultKind::HalfClose);
+        for s in p.specs() {
+            assert!(s.kind.targets_transport());
+            assert!(!s.kind.targets_worker());
+        }
+        assert!(FaultPlan::parse("sockstall@1:2", 0).is_err()); // missing ms
+        assert!(FaultPlan::parse("peerkill@1:2:9", 0).is_err()); // extra field
+    }
+
+    #[test]
+    fn transport_faults_do_not_leak_into_lane_dispatch() {
+        // A transport fault at (step 2, rank 0) must be invisible to both
+        // worker and lane takers — only take_transport may consume it.
+        let mut p = FaultPlan::parse("peerkill@2:0", 0).unwrap();
+        assert_eq!(p.take_worker(2, 0), None);
+        assert_eq!(p.take_lane(2, 0, 1), None);
+        assert_eq!(p.take_transport(2, 1), None); // wrong rank
+        assert_eq!(p.take_transport(1, 0), None); // wrong step
+        assert_eq!(p.take_transport(2, 0), Some(FaultKind::PeerKill));
+        assert_eq!(p.take_transport(2, 0), None); // one-shot
     }
 
     #[test]

@@ -65,6 +65,10 @@ pub enum FleetAction {
     Lost,
     Rebalance,
     Restore,
+    /// A socket-transport rank process died (or went silent past the
+    /// deadline) and the whole shell fleet was torn down for a fresh
+    /// spawn on the recovery path. `slot` is the rank blamed.
+    Respawn,
 }
 
 impl FleetAction {
@@ -75,6 +79,7 @@ impl FleetAction {
             FleetAction::Lost => "lost",
             FleetAction::Rebalance => "rebalance",
             FleetAction::Restore => "restore",
+            FleetAction::Respawn => "respawn",
         }
     }
 }

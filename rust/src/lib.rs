@@ -45,6 +45,7 @@ pub mod overlap;
 pub mod runtime;
 pub mod schedule;
 pub mod simnet;
+pub mod transport;
 pub mod util;
 
 /// Default artifacts directory, relative to the repo root.

@@ -38,6 +38,16 @@
 //! checkpoint rotation for --save-checkpoint: the path becomes a
 //! directory keeping the newest N CRC-verified checkpoints; --resume
 //! accepts that directory and loads the newest loadable one).
+//!
+//! Transport (PR 10): --transport inproc|socket selects how collective
+//! ranks talk. `socket` runs one OS process per rank over Unix domain
+//! sockets — every message is a length-prefixed CRC32-framed record,
+//! connects retry with capped exponential backoff (--connect-retries N,
+//! --connect-base-ms N) and each link carries heartbeats
+//! (--heartbeat-ms N) so a dead peer process is detected by deadline and
+//! recovered through the PR-6 supervision path instead of hanging.
+//! There is also a hidden `rank-shell` subcommand: the per-rank worker
+//! process the socket fleet spawns; it is not for interactive use.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -60,10 +70,17 @@ const KNOWN_OPTS: &[&str] = &[
     "fault", "fault-seed", "fault-count", "fault-deadline-ms", "ckpt-every",
     "straggler-factor", "no-supervise", "no-recover",
     "fleet", "no-rebalance", "deadline-factor", "ckpt-keep",
+    "transport", "connect-retries", "connect-base-ms", "heartbeat-ms",
 ];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    if args.subcommand.as_deref() == Some("rank-shell") {
+        // The per-rank worker process the socket fleet spawns. Its flags
+        // are internal and versioned with the binary, so it dispatches
+        // before the public-option check.
+        return yasgd::transport::socket::shell_main(&args);
+    }
     args.reject_unknown(KNOWN_OPTS)?;
     match args.subcommand.as_deref() {
         Some("info") => info(&args),

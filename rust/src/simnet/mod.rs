@@ -23,6 +23,12 @@ impl LinkParams {
     pub fn transfer_time(&self, bytes: f64) -> f64 {
         self.latency_s + bytes / self.bandwidth_bps
     }
+
+    /// Build from the bench-file units (α in µs, β in GB/s) — the form
+    /// `BENCH_*.json` records and `benches/transport.rs` fits.
+    pub fn from_us_gbps(alpha_us: f64, beta_gbps: f64) -> LinkParams {
+        LinkParams { latency_s: alpha_us * 1e-6, bandwidth_bps: beta_gbps * 1e9 }
+    }
 }
 
 /// Cluster shape + calibration constants, now with the full rack/node/NIC

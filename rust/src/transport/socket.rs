@@ -1,0 +1,1178 @@
+//! Multi-process socket transport: one OS process per rank over Unix
+//! domain sockets, bit-identical to the in-process engine.
+//!
+//! # Topology
+//!
+//! The leader (the training process) spawns one `rank-shell` child per
+//! rank via the hidden `rank-shell` subcommand of the `yasgd` binary.
+//! Shell `r` binds `rank-r.sock` in a per-fleet temp directory, then
+//! connects (with capped backoff — it may race a slower peer's bind) to
+//! every lower-ranked shell and introduces itself with a Hello frame;
+//! higher-ranked shells and the leader connect in. The result is a full
+//! mesh of shell↔shell links plus one leader↔shell control link each.
+//!
+//! # Execution model: plan-slice SPMD
+//!
+//! Per step the leader sends each shell a Job frame carrying the
+//! algorithm (numerically — the shell has no algorithm flags that could
+//! drift), precision, (p, n) and the rank's raw f32 buffer. Every shell
+//! rebuilds the IDENTICAL [`Plan`] the in-process engine would compile
+//! (same `build_plan`, same inputs) and walks the ops in global plan
+//! order, acting only on the ones that name it:
+//!
+//! * `src == me` — snapshot `buf[lo..hi]` as raw f32 LE and queue a
+//!   Data frame to `dst` (sends never block: frames queue in userland
+//!   and the reactor flushes while awaiting anything else — which is
+//!   what makes the strict-order receive below deadlock-free).
+//! * `dst == me` — await the next Data frame from `src` (per-link FIFO
+//!   + identical global order on both sides means the k-th frame on a
+//!   link IS the k-th (src→dst) op), then apply the SAME codec kernel
+//!   the engine applies in-process (`precision.copy` / `reduce_add`).
+//! * `Quantize`/`Scale` on `me` — apply locally, exactly as in-process.
+//!
+//! Payloads are raw f32 and the receiver applies the wire codec, so the
+//! arithmetic — including q8's chunk grid, which is relative to the
+//! passed slice on both paths — is bit-identical to `CommEngine` for
+//! every codec. Wire *statistics* still bill the codec's canonical
+//! framing via the shared plan, exactly like the engine. The shell then
+//! returns its reduced buffer in a Result frame.
+//!
+//! # Liveness and failure
+//!
+//! Shells heartbeat the leader on every wait loop; the leader stamps a
+//! [`Heartbeats`] cell per rank on every received frame and declares a
+//! rank dead when its child exited, its link hit EOF, an Error frame
+//! arrived, or its heartbeat went stale past the deadline. Every
+//! failure becomes a typed [`TransportError`] so the trainer's existing
+//! snapshot-restore-replay recovery path can take over — a dead process
+//! is a recoverable event, never a hang. Injected transport faults
+//! ([`FaultKind::PeerKill`] and friends) are armed by a Fault frame and
+//! executed by the shell itself, so they exercise the REAL wire paths:
+//! a corrupt frame is rejected by the receiver's CRC, a killed process
+//! by EOF/deadline.
+
+use super::{
+    algo_from_wire, algo_to_wire, connect_with_backoff, decode_frame, encode_frame_into,
+    precision_from_wire, precision_to_wire, Backoff, Frame, FrameKind, Transport, TransportError,
+    FRAME_OVERHEAD,
+};
+use crate::collective::engine::{build_plan, OpKind, Plan};
+use crate::collective::{Algorithm, Precision, WireStats};
+use crate::faults::{FaultKind, Heartbeats};
+use crate::util::cli::Args;
+use anyhow::Context;
+use std::collections::VecDeque;
+use std::io::{IoSlice, IoSliceMut, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Hello rank value identifying the leader (no shell can have it).
+const LEADER_RANK: u32 = u32::MAX;
+/// Backoff cap for connect retries.
+const CONNECT_CAP_MS: u64 = 400;
+/// Reactor poll interval while waiting for socket readiness.
+const POLL: Duration = Duration::from_micros(50);
+/// Budget for the startup mesh handshake (bind/connect/Hello), separate
+/// from the step deadline so a tight chaos-test deadline cannot make
+/// fleet bring-up flaky.
+const STARTUP_MS: u64 = 15_000;
+/// Exit code of a PeerKill-injected shell (distinguishable from a bug).
+const PEERKILL_EXIT: i32 = 17;
+
+// ---------------------------------------------------------------------
+// Link: one nonblocking framed connection
+// ---------------------------------------------------------------------
+
+/// One framed, sequence-checked, nonblocking connection. Outbound
+/// frames queue in userland and drain via `write_vectored` (one iovec
+/// per pending frame); inbound bytes arrive via `read_vectored` into a
+/// scatter buffer pair and decode into an inbox of verified frames.
+struct Link {
+    stream: UnixStream,
+    peer: String,
+    inbuf: Vec<u8>,
+    out: VecDeque<Vec<u8>>,
+    /// Bytes of `out.front()` already written (partial-write resume).
+    out_off: usize,
+    send_seq: u64,
+    recv_seq: u64,
+    inbox: VecDeque<Frame>,
+    eof: bool,
+    /// Measured accounting, both directions: payload bytes vs framed
+    /// bytes (payload + FRAME_OVERHEAD each) — feeds the frame-overhead
+    /// metric in `benches/transport.rs`.
+    payload_bytes: u64,
+    framed_bytes: u64,
+}
+
+impl Link {
+    fn new(stream: UnixStream, peer: String) -> std::io::Result<Link> {
+        stream.set_nonblocking(true)?;
+        Ok(Link {
+            stream,
+            peer,
+            inbuf: Vec::new(),
+            out: VecDeque::new(),
+            out_off: 0,
+            send_seq: 0,
+            recv_seq: 0,
+            inbox: VecDeque::new(),
+            eof: false,
+            payload_bytes: 0,
+            framed_bytes: 0,
+        })
+    }
+
+    fn queue(&mut self, kind: FrameKind, payload: &[u8]) {
+        let mut wire = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+        encode_frame_into(&mut wire, kind, self.send_seq, payload);
+        self.send_seq += 1;
+        self.payload_bytes += payload.len() as u64;
+        self.framed_bytes += wire.len() as u64;
+        self.out.push_back(wire);
+    }
+
+    /// Wire bytes of the most recently queued frame — the FrameCorrupt
+    /// injection flips a byte here, AFTER encoding, so the receiver's
+    /// CRC check sees genuine wire-level damage.
+    fn last_queued_mut(&mut self) -> Option<&mut Vec<u8>> {
+        self.out.back_mut()
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.out.is_empty()
+    }
+
+    /// Write as much of the out-queue as the socket accepts, gathering
+    /// up to 16 pending frames per `writev`. Never blocks.
+    fn flush(&mut self) -> Result<(), TransportError> {
+        while !self.out.is_empty() {
+            let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(self.out.len().min(16));
+            for (i, frame) in self.out.iter().take(16).enumerate() {
+                slices.push(IoSlice::new(if i == 0 { &frame[self.out_off..] } else { frame }));
+            }
+            match (&self.stream).write_vectored(&slices) {
+                Ok(0) => {
+                    return Err(TransportError::PeerClosed { peer: self.peer.clone() });
+                }
+                Ok(mut n) => {
+                    while n > 0 {
+                        let rem = self.out.front().expect("bytes written past queue").len()
+                            - self.out_off;
+                        if n >= rem {
+                            self.out.pop_front();
+                            self.out_off = 0;
+                            n -= rem;
+                        } else {
+                            self.out_off += n;
+                            n = 0;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return Err(TransportError::PeerClosed { peer: self.peer.clone() }),
+            }
+        }
+        Ok(())
+    }
+
+    /// Read everything available (scatter `readv`), then decode every
+    /// complete frame into the inbox, verifying CRC and sequence.
+    fn pump(&mut self) -> Result<(), TransportError> {
+        loop {
+            let mut a = [0u8; 4096];
+            let mut b = [0u8; 16384];
+            let mut bufs = [IoSliceMut::new(&mut a), IoSliceMut::new(&mut b)];
+            match (&self.stream).read_vectored(&mut bufs) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    let from_a = n.min(a.len());
+                    self.inbuf.extend_from_slice(&a[..from_a]);
+                    if n > a.len() {
+                        self.inbuf.extend_from_slice(&b[..n - a.len()]);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.eof = true;
+                    break;
+                }
+            }
+        }
+        loop {
+            match decode_frame(&self.inbuf) {
+                Ok(None) => break,
+                Ok(Some((frame, used))) => {
+                    self.inbuf.drain(..used);
+                    if frame.seq != self.recv_seq {
+                        return Err(TransportError::SeqSkew {
+                            peer: self.peer.clone(),
+                            want: self.recv_seq,
+                            got: frame.seq,
+                        });
+                    }
+                    self.recv_seq += 1;
+                    self.payload_bytes += frame.payload.len() as u64;
+                    self.framed_bytes += used as u64;
+                    self.inbox.push_back(frame);
+                }
+                Err(err) => {
+                    return Err(TransportError::Corrupt { peer: self.peer.clone(), err });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs (Job / Fault headers, f32 <-> LE bytes)
+// ---------------------------------------------------------------------
+
+const JOB_HEADER_LEN: usize = 1 + 12 + 1 + 4 + 4;
+
+fn rd_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().expect("4 bytes"))
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        v.extend_from_slice(&x.to_le_bytes());
+    }
+    v
+}
+
+fn bytes_to_f32s_into(b: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))));
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct JobHeader {
+    algo: Algorithm,
+    precision: Precision,
+    p: usize,
+    n: usize,
+}
+
+fn encode_job(algo: Algorithm, precision: Precision, p: usize, n: usize, data: &[f32]) -> Vec<u8> {
+    debug_assert_eq!(data.len(), n);
+    let (id, a, b, c) = algo_to_wire(algo);
+    let mut v = Vec::with_capacity(JOB_HEADER_LEN + n * 4);
+    v.push(id);
+    v.extend_from_slice(&a.to_le_bytes());
+    v.extend_from_slice(&b.to_le_bytes());
+    v.extend_from_slice(&c.to_le_bytes());
+    v.push(precision_to_wire(precision));
+    v.extend_from_slice(&(p as u32).to_le_bytes());
+    v.extend_from_slice(&(n as u32).to_le_bytes());
+    for x in data {
+        v.extend_from_slice(&x.to_le_bytes());
+    }
+    v
+}
+
+fn decode_job(payload: &[u8]) -> Option<(JobHeader, &[u8])> {
+    if payload.len() < JOB_HEADER_LEN {
+        return None;
+    }
+    let algo = algo_from_wire(
+        payload[0],
+        rd_u32(&payload[1..]),
+        rd_u32(&payload[5..]),
+        rd_u32(&payload[9..]),
+    )?;
+    let precision = precision_from_wire(payload[13])?;
+    let p = rd_u32(&payload[14..]) as usize;
+    let n = rd_u32(&payload[18..]) as usize;
+    let data = &payload[JOB_HEADER_LEN..];
+    (data.len() == n * 4).then_some((JobHeader { algo, precision, p, n }, data))
+}
+
+/// Fault frame payload: kind byte + one u32 argument. Only transport
+/// kinds are representable — worker/lane kinds never reach a shell.
+fn fault_to_wire(kind: FaultKind) -> Option<[u8; 5]> {
+    let (k, arg) = match kind {
+        FaultKind::PeerKill => (1u8, 0u32),
+        FaultKind::FrameCorrupt => (2, 0),
+        FaultKind::SockStall { ms } => (3, ms as u32),
+        FaultKind::HalfClose => (4, 0),
+        _ => return None,
+    };
+    let a = arg.to_le_bytes();
+    Some([k, a[0], a[1], a[2], a[3]])
+}
+
+fn fault_from_wire(payload: &[u8]) -> Option<FaultKind> {
+    if payload.len() != 5 {
+        return None;
+    }
+    let arg = rd_u32(&payload[1..]);
+    Some(match payload[0] {
+        1 => FaultKind::PeerKill,
+        2 => FaultKind::FrameCorrupt,
+        3 => FaultKind::SockStall { ms: arg as u64 },
+        4 => FaultKind::HalfClose,
+        _ => return None,
+    })
+}
+
+fn sock_path(dir: &std::path::Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank-{rank}.sock"))
+}
+
+// ---------------------------------------------------------------------
+// Leader side: SocketFleet
+// ---------------------------------------------------------------------
+
+/// Configuration for a socket fleet (leader side).
+#[derive(Debug, Clone)]
+pub struct SocketOpts {
+    pub workers: usize,
+    pub algo: Algorithm,
+    pub precision: Precision,
+    /// Path of the binary providing the `rank-shell` subcommand; empty
+    /// means `current_exe()` (tests pass `env!("CARGO_BIN_EXE_yasgd")`,
+    /// since their current_exe is the test harness).
+    pub shell_binary: String,
+    pub connect_retries: usize,
+    pub connect_base_ms: u64,
+    pub heartbeat_ms: u64,
+    /// Peer-death deadline. The trainer refreshes it per step from its
+    /// `DeadlineTracker` via [`SocketFleet::set_deadline_ms`].
+    pub deadline_ms: u64,
+    /// Seed for backoff jitter (derived per link).
+    pub seed: u64,
+}
+
+/// A fleet of rank-shell processes executing allreduces over UDS.
+///
+/// Drop-in for `CommEngine::allreduce_mean` except it can FAIL — with a
+/// typed [`TransportError`] naming the dead rank — instead of hanging,
+/// which is the hook the trainer's supervised recovery path needs. A
+/// failed fleet is broken (children killed); the trainer respawns a
+/// fresh one after restoring from snapshot.
+pub struct SocketFleet {
+    opts: SocketOpts,
+    dir: PathBuf,
+    children: Vec<Child>,
+    links: Vec<Link>,
+    hb: Heartbeats,
+    epoch: Instant,
+    deadline_ms: u64,
+    plan_cache: Option<((usize, usize), Plan)>,
+    pending: Vec<Option<FaultKind>>,
+    last_dead: Option<usize>,
+    broken: bool,
+}
+
+impl SocketFleet {
+    /// Spawn one rank-shell process per worker and connect the control
+    /// links. On any failure the already-spawned children are killed
+    /// (via Drop of the partially-built fleet).
+    pub fn spawn(opts: SocketOpts) -> anyhow::Result<SocketFleet> {
+        static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+        let p = opts.workers;
+        anyhow::ensure!(p >= 1, "socket fleet needs at least one worker");
+        let dir = std::env::temp_dir().join(format!(
+            "yasgd-sock-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating socket dir {}", dir.display()))?;
+        let bin = if opts.shell_binary.is_empty() {
+            std::env::current_exe().context("resolving current_exe for rank-shell")?
+        } else {
+            PathBuf::from(&opts.shell_binary)
+        };
+        let mut fleet = SocketFleet {
+            dir: dir.clone(),
+            children: Vec::with_capacity(p),
+            links: Vec::with_capacity(p),
+            hb: Heartbeats::new(p),
+            epoch: Instant::now(),
+            deadline_ms: opts.deadline_ms,
+            plan_cache: None,
+            pending: vec![None; p],
+            last_dead: None,
+            broken: false,
+            opts,
+        };
+        for r in 0..p {
+            let child = Command::new(&bin)
+                .arg("rank-shell")
+                .arg("--dir")
+                .arg(&dir)
+                .arg("--rank")
+                .arg(r.to_string())
+                .arg("--world")
+                .arg(p.to_string())
+                .arg("--connect-retries")
+                .arg(fleet.opts.connect_retries.to_string())
+                .arg("--connect-base-ms")
+                .arg(fleet.opts.connect_base_ms.to_string())
+                .arg("--heartbeat-ms")
+                .arg(fleet.opts.heartbeat_ms.to_string())
+                .arg("--deadline-ms")
+                .arg(fleet.opts.deadline_ms.to_string())
+                .arg("--seed")
+                .arg(fleet.opts.seed.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .with_context(|| format!("spawning rank-shell {r} from {}", bin.display()))?;
+            fleet.children.push(child);
+        }
+        for r in 0..p {
+            let mut backoff = Backoff::new(
+                fleet.opts.connect_base_ms,
+                CONNECT_CAP_MS,
+                fleet.opts.connect_retries,
+                fleet.opts.seed ^ 0x1EAD_0000 ^ r as u64,
+            );
+            let stream = connect_with_backoff(&sock_path(&dir, r), &mut backoff)
+                .with_context(|| format!("leader connecting to rank-shell {r}"))?;
+            let mut link = Link::new(stream, format!("rank {r}"))?;
+            link.queue(FrameKind::Hello, &LEADER_RANK.to_le_bytes());
+            link.flush()?;
+            fleet.links.push(link);
+        }
+        Ok(fleet)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.opts.workers
+    }
+
+    /// The rank blamed for the most recent failure (for the PeerDead
+    /// fault event), if any.
+    pub fn last_dead(&self) -> Option<usize> {
+        self.last_dead
+    }
+
+    pub fn is_broken(&self) -> bool {
+        self.broken
+    }
+
+    /// Refresh the peer-death deadline (the trainer feeds its adaptive
+    /// `DeadlineTracker` value here every step).
+    pub fn set_deadline_ms(&mut self, ms: u64) {
+        self.deadline_ms = ms.max(1);
+    }
+
+    /// Arm a transport fault for `rank` on the NEXT allreduce. Returns
+    /// false (and arms nothing) for non-transport kinds.
+    pub fn inject(&mut self, rank: usize, kind: FaultKind) -> bool {
+        if rank < self.pending.len() && kind.targets_transport() {
+            self.pending[rank] = Some(kind);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Measured (payload, framed) byte totals over the leader links,
+    /// both directions.
+    pub fn leader_frame_accounting(&self) -> (u64, u64) {
+        self.links.iter().fold((0, 0), |(p, f), l| (p + l.payload_bytes, f + l.framed_bytes))
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn plan_stats(&mut self, p: usize, n: usize) -> WireStats {
+        if self.plan_cache.as_ref().map(|(k, _)| *k != (p, n)).unwrap_or(true) {
+            self.plan_cache =
+                Some(((p, n), build_plan(self.opts.algo, self.opts.precision, p, n)));
+        }
+        self.plan_cache.as_ref().expect("just built").1.stats.clone()
+    }
+
+    /// Distribute one allreduce-mean across the shell fleet. Wire stats
+    /// come from the shared plan, exactly as the in-process engine
+    /// reports them. Any rank failure — death, EOF, corruption, silence
+    /// past the deadline — aborts the fleet and surfaces as a typed
+    /// error for the trainer's recovery path.
+    pub fn allreduce_mean(
+        &mut self,
+        ranks: &mut [&mut [f32]],
+    ) -> Result<WireStats, TransportError> {
+        let t0 = Instant::now();
+        let p = ranks.len();
+        if p <= 1 {
+            return Ok(WireStats::default());
+        }
+        assert_eq!(p, self.opts.workers, "rank count changed under a live socket fleet");
+        assert!(!self.broken, "socket fleet reused after failure without respawn");
+        let n = ranks[0].len();
+        let mut stats = self.plan_stats(p, n);
+        for (r, buf) in ranks.iter().enumerate() {
+            if let Some(kind) = self.pending[r].take() {
+                if let Some(payload) = fault_to_wire(kind) {
+                    self.links[r].queue(FrameKind::Fault, &payload);
+                }
+            }
+            self.links[r].queue(
+                FrameKind::Job,
+                &encode_job(self.opts.algo, self.opts.precision, p, n, buf),
+            );
+        }
+        match self.collect_results(p, n) {
+            Ok(results) => {
+                for (r, buf) in results.into_iter().enumerate() {
+                    ranks[r].copy_from_slice(&buf);
+                }
+                stats.elapsed_s = t0.elapsed().as_secs_f64();
+                Ok(stats)
+            }
+            Err((rank, e)) => {
+                self.last_dead = Some(rank);
+                self.broken = true;
+                self.abort();
+                Err(e)
+            }
+        }
+    }
+
+    /// Drive all links until every rank returned its Result frame, or
+    /// some rank is declared dead: `Err((rank, why))`.
+    #[allow(clippy::type_complexity)]
+    fn collect_results(
+        &mut self,
+        p: usize,
+        n: usize,
+    ) -> Result<Vec<Vec<f32>>, (usize, TransportError)> {
+        let start_ms = self.now_ms();
+        for r in 0..p {
+            self.hb.stamp(r, start_ms);
+        }
+        let mut results: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+        loop {
+            for r in 0..p {
+                self.links[r].flush().map_err(|e| (r, e))?;
+                self.links[r].pump().map_err(|e| (r, e))?;
+                let mut got = false;
+                while let Some(frame) = self.links[r].inbox.pop_front() {
+                    got = true;
+                    match frame.kind {
+                        FrameKind::Heartbeat => {}
+                        FrameKind::Result => {
+                            if frame.payload.len() != n * 4 {
+                                return Err((
+                                    r,
+                                    TransportError::ShellError {
+                                        rank: r,
+                                        msg: format!(
+                                            "result payload {} bytes, expected {}",
+                                            frame.payload.len(),
+                                            n * 4
+                                        ),
+                                    },
+                                ));
+                            }
+                            let mut buf = Vec::with_capacity(n);
+                            bytes_to_f32s_into(&frame.payload, &mut buf);
+                            results[r] = Some(buf);
+                        }
+                        FrameKind::Error => {
+                            return Err((
+                                r,
+                                TransportError::ShellError {
+                                    rank: r,
+                                    msg: String::from_utf8_lossy(&frame.payload).into_owned(),
+                                },
+                            ));
+                        }
+                        other => {
+                            return Err((
+                                r,
+                                TransportError::ShellError {
+                                    rank: r,
+                                    msg: format!("unexpected {other:?} frame on control link"),
+                                },
+                            ));
+                        }
+                    }
+                }
+                if got {
+                    let now = self.now_ms();
+                    self.hb.stamp(r, now);
+                }
+            }
+            if results.iter().all(Option::is_some) {
+                return Ok(results.into_iter().map(|b| b.expect("checked")).collect());
+            }
+            let now = self.now_ms();
+            for r in 0..p {
+                if results[r].is_some() {
+                    continue;
+                }
+                if self.links[r].eof {
+                    return Err((r, TransportError::PeerClosed { peer: format!("rank {r}") }));
+                }
+                if let Ok(Some(status)) = self.children[r].try_wait() {
+                    return Err((
+                        r,
+                        TransportError::PeerClosed { peer: format!("rank {r} ({status})") },
+                    ));
+                }
+                if self.hb.stale(r, now, self.deadline_ms) {
+                    return Err((
+                        r,
+                        TransportError::Timeout {
+                            peer: format!("rank {r}"),
+                            waited_ms: self.hb.age_ms(r, now),
+                        },
+                    ));
+                }
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+
+    /// Orderly teardown: ask every shell to exit, give them a grace
+    /// window, then let Drop reap whatever is left.
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        for link in &mut self.links {
+            link.queue(FrameKind::Shutdown, &[]);
+        }
+        let t0 = Instant::now();
+        while self.links.iter().any(Link::has_pending) && t0.elapsed() < Duration::from_secs(2) {
+            for link in &mut self.links {
+                let _ = link.flush();
+            }
+            std::thread::sleep(POLL);
+        }
+        let t0 = Instant::now();
+        for child in &mut self.children {
+            while t0.elapsed() < Duration::from_secs(3) {
+                if matches!(child.try_wait(), Ok(Some(_))) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill every child immediately (failure teardown — the recovery
+    /// path respawns a fresh fleet afterwards).
+    pub fn abort(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Drop for SocketFleet {
+    fn drop(&mut self) {
+        self.abort();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl Transport for SocketFleet {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn allreduce_mean(&mut self, ranks: &mut [&mut [f32]]) -> anyhow::Result<WireStats> {
+        Ok(SocketFleet::allreduce_mean(self, ranks)?)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shell side: the per-rank process
+// ---------------------------------------------------------------------
+
+/// Entry point of the hidden `rank-shell` subcommand (dispatched from
+/// `main` before unknown-option rejection — the shell's flags are its
+/// own). Runs until the leader sends Shutdown or its link drops.
+pub fn shell_main(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get("dir").context("rank-shell: --dir is required")?);
+    let me = args.get_usize("rank", usize::MAX)?;
+    let p = args.get_usize("world", 0)?;
+    anyhow::ensure!(p >= 1 && me < p, "rank-shell: need --rank < --world");
+    let shell = Shell::start(
+        dir,
+        me,
+        p,
+        args.get_usize("connect-retries", 10)?,
+        args.get_u64("connect-base-ms", 5)?,
+        args.get_u64("heartbeat-ms", 25)?,
+        args.get_u64("deadline-ms", 30_000)?,
+        args.get_u64("seed", 0)?,
+    )?;
+    shell.run()
+}
+
+type PlanKey = (Algorithm, Precision, usize, usize);
+
+struct Shell {
+    me: usize,
+    p: usize,
+    hb_ms: u64,
+    deadline_ms: u64,
+    leader: Link,
+    /// Peer links indexed by rank (`None` at `me`).
+    peers: Vec<Option<Link>>,
+    armed: Option<FaultKind>,
+    plan_cache: Option<(PlanKey, Plan)>,
+    scratch: Vec<f32>,
+    last_hb: Instant,
+}
+
+impl Shell {
+    #[allow(clippy::too_many_arguments)]
+    fn start(
+        dir: PathBuf,
+        me: usize,
+        p: usize,
+        retries: usize,
+        base_ms: u64,
+        hb_ms: u64,
+        deadline_ms: u64,
+        seed: u64,
+    ) -> anyhow::Result<Shell> {
+        // Bind FIRST so peers' connect-with-backoff can land while we do
+        // our own outbound connects; the listener backlog holds them.
+        let my_path = sock_path(&dir, me);
+        let listener = UnixListener::bind(&my_path)
+            .with_context(|| format!("rank {me}: binding {}", my_path.display()))?;
+        listener.set_nonblocking(true)?;
+
+        let mut peers: Vec<Option<Link>> = (0..p).map(|_| None).collect();
+        for s in 0..me {
+            let mut backoff = Backoff::new(
+                base_ms,
+                CONNECT_CAP_MS,
+                retries,
+                seed ^ ((me as u64) << 32) ^ s as u64,
+            );
+            let stream = connect_with_backoff(&sock_path(&dir, s), &mut backoff)
+                .with_context(|| format!("rank {me}: connecting to rank {s}"))?;
+            let mut link = Link::new(stream, format!("rank {s}"))?;
+            link.queue(FrameKind::Hello, &(me as u32).to_le_bytes());
+            link.flush()?;
+            peers[s] = Some(link);
+        }
+
+        // Accept the leader plus every higher-ranked peer; each incoming
+        // connection identifies itself with its first (Hello) frame.
+        let mut leader: Option<Link> = None;
+        let need_peers = p - 1 - me;
+        let mut got_peers = 0usize;
+        let mut unidentified: Vec<Link> = Vec::new();
+        let t0 = Instant::now();
+        while leader.is_none() || got_peers < need_peers {
+            match listener.accept() {
+                Ok((stream, _)) => unidentified.push(Link::new(stream, "incoming".to_string())?),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => return Err(e).context(format!("rank {me}: accept")),
+            }
+            let mut i = 0;
+            while i < unidentified.len() {
+                unidentified[i]
+                    .pump()
+                    .with_context(|| format!("rank {me}: reading Hello"))?;
+                if let Some(frame) = unidentified[i].inbox.pop_front() {
+                    anyhow::ensure!(
+                        frame.kind == FrameKind::Hello && frame.payload.len() == 4,
+                        "rank {me}: first frame on incoming link was {:?}, not Hello",
+                        frame.kind
+                    );
+                    let who = rd_u32(&frame.payload);
+                    let mut link = unidentified.swap_remove(i);
+                    if who == LEADER_RANK {
+                        link.peer = "leader".to_string();
+                        leader = Some(link);
+                    } else {
+                        let who = who as usize;
+                        anyhow::ensure!(
+                            who < p && who > me && peers[who].is_none(),
+                            "rank {me}: bogus Hello from rank {who}"
+                        );
+                        link.peer = format!("rank {who}");
+                        peers[who] = Some(link);
+                        got_peers += 1;
+                    }
+                    continue;
+                }
+                if unidentified[i].eof {
+                    unidentified.swap_remove(i);
+                    continue;
+                }
+                i += 1;
+            }
+            for link in peers.iter_mut().flatten() {
+                link.flush()
+                    .with_context(|| format!("rank {me}: flushing Hello"))?;
+            }
+            anyhow::ensure!(
+                t0.elapsed().as_millis() as u64 <= STARTUP_MS,
+                "rank {me}: mesh handshake timed out ({got_peers}/{need_peers} peers, \
+                 leader {})",
+                leader.is_some()
+            );
+            std::thread::sleep(POLL);
+        }
+
+        Ok(Shell {
+            me,
+            p,
+            hb_ms: hb_ms.max(1),
+            deadline_ms: deadline_ms.max(1),
+            leader: leader.expect("loop exits only with a leader"),
+            peers,
+            armed: None,
+            plan_cache: None,
+            scratch: Vec::new(),
+            last_hb: Instant::now(),
+        })
+    }
+
+    fn run(mut self) -> anyhow::Result<()> {
+        loop {
+            if self.leader.flush().is_err() || self.leader.pump().is_err() {
+                return Ok(()); // leader gone: orphan shells exit quietly
+            }
+            while let Some(frame) = self.leader.inbox.pop_front() {
+                match frame.kind {
+                    FrameKind::Job => {
+                        if let Err(e) = self.run_job(&frame.payload) {
+                            self.die(e);
+                        }
+                    }
+                    FrameKind::Fault => self.armed = fault_from_wire(&frame.payload),
+                    FrameKind::Shutdown => return Ok(()),
+                    _ => {}
+                }
+            }
+            if self.leader.eof {
+                return Ok(());
+            }
+            for link in self.peers.iter_mut().flatten() {
+                let _ = link.flush();
+            }
+            self.maybe_heartbeat();
+            std::thread::sleep(POLL);
+        }
+    }
+
+    /// Report a typed failure to the leader, then exit. Never returns —
+    /// a shell that failed mid-plan has no consistent state to resume.
+    fn die(&mut self, e: TransportError) -> ! {
+        eprintln!("rank {} shell: {e}", self.me);
+        self.leader.queue(FrameKind::Error, e.to_string().as_bytes());
+        let t0 = Instant::now();
+        while self.leader.has_pending() && t0.elapsed() < Duration::from_millis(500) {
+            if self.leader.flush().is_err() {
+                break;
+            }
+            std::thread::sleep(POLL);
+        }
+        std::process::exit(1);
+    }
+
+    fn maybe_heartbeat(&mut self) {
+        if self.last_hb.elapsed().as_millis() as u64 >= self.hb_ms {
+            self.leader.queue(FrameKind::Heartbeat, &[]);
+            let _ = self.leader.flush();
+            self.last_hb = Instant::now();
+        }
+    }
+
+    fn take_plan(&mut self, key: PlanKey) -> Plan {
+        match self.plan_cache.take() {
+            Some((k, plan)) if k == key => plan,
+            _ => build_plan(key.0, key.1, key.2, key.3),
+        }
+    }
+
+    /// Execute one allreduce job: rebuild the shared plan, walk it in
+    /// global order executing the ops that name this rank, return the
+    /// reduced buffer. Armed faults fire here, against the real wire.
+    fn run_job(&mut self, payload: &[u8]) -> Result<(), TransportError> {
+        let (hdr, data) = decode_job(payload).ok_or_else(|| TransportError::ShellError {
+            rank: self.me,
+            msg: "malformed job header".to_string(),
+        })?;
+        if hdr.p != self.p {
+            return Err(TransportError::ShellError {
+                rank: self.me,
+                msg: format!("job says p={}, fleet has {}", hdr.p, self.p),
+            });
+        }
+        let mut buf = Vec::with_capacity(hdr.n);
+        bytes_to_f32s_into(data, &mut buf);
+
+        let armed = self.armed.take();
+        match armed {
+            // Freeze WITHOUT heartbeating: alive but silent — only the
+            // leader's deadline can tell this from a dead process.
+            Some(FaultKind::SockStall { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(FaultKind::HalfClose) => {}
+            _ => {}
+        }
+
+        let key: PlanKey = (hdr.algo, hdr.precision, hdr.p, hdr.n);
+        let plan = self.take_plan(key);
+        let precision = hdr.precision;
+
+        let ops = || plan.rounds.iter().flat_map(|r| r.chains.iter()).flatten();
+        let my_sends = ops()
+            .filter(|op| {
+                matches!(op.kind, OpKind::Copy | OpKind::Add)
+                    && op.src == self.me
+                    && op.dst != self.me
+            })
+            .count();
+        // PeerKill drops the process mid-step: after roughly half its
+        // sends, so peers are left waiting on real, partial traffic.
+        let kill_after = (my_sends + 1) / 2;
+        let kill = matches!(armed, Some(FaultKind::PeerKill));
+        let mut corrupt_next = matches!(armed, Some(FaultKind::FrameCorrupt));
+        if matches!(armed, Some(FaultKind::HalfClose)) {
+            // Half-close the link carrying this rank's FIRST send, so
+            // the fault always lands on a link the schedule uses.
+            if let Some(first_dst) = ops()
+                .find(|op| {
+                    matches!(op.kind, OpKind::Copy | OpKind::Add)
+                        && op.src == self.me
+                        && op.dst != self.me
+                })
+                .map(|op| op.dst)
+            {
+                let link = self.peers[first_dst].as_mut().expect("plan names a peer");
+                let _ = link.stream.shutdown(std::net::Shutdown::Write);
+            }
+        }
+
+        let mut sent = 0usize;
+        let mut result = Ok(());
+        'plan: for round in &plan.rounds {
+            for chain in &round.chains {
+                for op in chain {
+                    match op.kind {
+                        OpKind::Copy | OpKind::Add if op.src == self.me && op.dst != self.me => {
+                            let payload = f32s_to_bytes(&buf[op.lo..op.hi]);
+                            let link = self.peers[op.dst].as_mut().expect("plan names a peer");
+                            link.queue(FrameKind::Data, &payload);
+                            if corrupt_next {
+                                if let Some(wire) = link.last_queued_mut() {
+                                    // Flip one payload bit AFTER encoding:
+                                    // real wire damage, caught by the
+                                    // receiver's CRC trailer.
+                                    wire[4 + 1 + 8] ^= 0x01;
+                                }
+                                corrupt_next = false;
+                            }
+                            sent += 1;
+                            if kill && sent >= kill_after {
+                                for l in self.peers.iter_mut().flatten() {
+                                    let _ = l.flush();
+                                }
+                                std::process::exit(PEERKILL_EXIT);
+                            }
+                            if let Err(e) = self.flush_all() {
+                                result = Err(e);
+                                break 'plan;
+                            }
+                        }
+                        OpKind::Copy | OpKind::Add if op.dst == self.me && op.src != self.me => {
+                            let frame = match self.await_data(op.src) {
+                                Ok(f) => f,
+                                Err(e) => {
+                                    result = Err(e);
+                                    break 'plan;
+                                }
+                            };
+                            if frame.payload.len() != (op.hi - op.lo) * 4 {
+                                result = Err(TransportError::ShellError {
+                                    rank: self.me,
+                                    msg: format!(
+                                        "data frame from rank {} is {} bytes, op wants {}",
+                                        op.src,
+                                        frame.payload.len(),
+                                        (op.hi - op.lo) * 4
+                                    ),
+                                });
+                                break 'plan;
+                            }
+                            let mut scratch = std::mem::take(&mut self.scratch);
+                            bytes_to_f32s_into(&frame.payload, &mut scratch);
+                            let dst = &mut buf[op.lo..op.hi];
+                            match op.kind {
+                                OpKind::Copy => precision.copy(&scratch, dst),
+                                _ => precision.reduce_add(&scratch, dst),
+                            }
+                            self.scratch = scratch;
+                        }
+                        OpKind::Quantize if op.dst == self.me => {
+                            precision.quantize_own(&mut buf[op.lo..op.hi]);
+                        }
+                        OpKind::Scale if op.dst == self.me => {
+                            for v in &mut buf[op.lo..op.hi] {
+                                *v *= plan.inv;
+                            }
+                        }
+                        _ => {} // another rank's op
+                    }
+                }
+            }
+        }
+        self.plan_cache = Some((key, plan));
+        result?;
+
+        self.leader.queue(FrameKind::Result, &f32s_to_bytes(&buf));
+        self.drain_all()
+    }
+
+    /// Await the next Data frame from `src`, keeping every link moving
+    /// (outbound flush = deadlock freedom; inbound pump = bounded kernel
+    /// buffers) and heartbeating the leader.
+    fn await_data(&mut self, src: usize) -> Result<Frame, TransportError> {
+        let t0 = Instant::now();
+        loop {
+            self.flush_all()?;
+            for r in 0..self.p {
+                if r == self.me {
+                    continue;
+                }
+                self.peers[r].as_mut().expect("full mesh").pump()?;
+            }
+            let link = self.peers[src].as_mut().expect("full mesh");
+            if let Some(frame) = link.inbox.pop_front() {
+                if frame.kind != FrameKind::Data {
+                    return Err(TransportError::ShellError {
+                        rank: self.me,
+                        msg: format!("expected Data from rank {src}, got {:?}", frame.kind),
+                    });
+                }
+                return Ok(frame);
+            }
+            if link.eof {
+                return Err(TransportError::PeerClosed { peer: format!("rank {src}") });
+            }
+            if self.leader.pump().is_err() || self.leader.eof {
+                std::process::exit(0); // orphaned mid-step
+            }
+            while let Some(frame) = self.leader.inbox.pop_front() {
+                match frame.kind {
+                    FrameKind::Shutdown => std::process::exit(0),
+                    FrameKind::Fault => self.armed = fault_from_wire(&frame.payload),
+                    _ => {}
+                }
+            }
+            self.maybe_heartbeat();
+            let waited = t0.elapsed().as_millis() as u64;
+            if waited > self.deadline_ms {
+                return Err(TransportError::Timeout {
+                    peer: format!("rank {src}"),
+                    waited_ms: waited,
+                });
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+
+    fn flush_all(&mut self) -> Result<(), TransportError> {
+        for link in self.peers.iter_mut().flatten() {
+            link.flush()?;
+        }
+        self.leader.flush()
+    }
+
+    /// Flush every queue dry after a job (the Result frame, plus any
+    /// tail Data a slow peer has not yet drained).
+    fn drain_all(&mut self) -> Result<(), TransportError> {
+        let t0 = Instant::now();
+        loop {
+            self.flush_all()?;
+            let pending =
+                self.leader.has_pending() || self.peers.iter().flatten().any(Link::has_pending);
+            if !pending {
+                return Ok(());
+            }
+            self.maybe_heartbeat();
+            let waited = t0.elapsed().as_millis() as u64;
+            if waited > self.deadline_ms {
+                return Err(TransportError::Timeout {
+                    peer: "drain".to_string(),
+                    waited_ms: waited,
+                });
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_header_round_trips() {
+        let data: Vec<f32> = (0..17).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let wire = encode_job(
+            Algorithm::Hierarchical { ranks_per_node: 2 },
+            Precision::Q8,
+            4,
+            17,
+            &data,
+        );
+        let (hdr, bytes) = decode_job(&wire).expect("valid job");
+        assert_eq!(hdr.algo, Algorithm::Hierarchical { ranks_per_node: 2 });
+        assert_eq!(hdr.precision, Precision::Q8);
+        assert_eq!(hdr.p, 4);
+        assert_eq!(hdr.n, 17);
+        let mut back = Vec::new();
+        bytes_to_f32s_into(bytes, &mut back);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn job_rejects_length_mismatch_and_bad_tags() {
+        let data = [1.0f32; 8];
+        let mut wire = encode_job(Algorithm::Ring, Precision::F32, 2, 8, &data);
+        wire.pop(); // data shorter than header claims
+        assert!(decode_job(&wire).is_none());
+        let mut wire = encode_job(Algorithm::Ring, Precision::F32, 2, 8, &data);
+        wire[0] = 99; // unknown algorithm id
+        assert!(decode_job(&wire).is_none());
+        let mut wire = encode_job(Algorithm::Ring, Precision::F32, 2, 8, &data);
+        wire[13] = 9; // unknown precision tag
+        assert!(decode_job(&wire).is_none());
+        assert!(decode_job(&wire[..10]).is_none()); // truncated header
+    }
+
+    #[test]
+    fn fault_wire_round_trips_transport_kinds_only() {
+        for kind in [
+            FaultKind::PeerKill,
+            FaultKind::FrameCorrupt,
+            FaultKind::SockStall { ms: 700 },
+            FaultKind::HalfClose,
+        ] {
+            let wire = fault_to_wire(kind).expect("transport kind");
+            assert_eq!(fault_from_wire(&wire), Some(kind));
+        }
+        assert!(fault_to_wire(FaultKind::Crash).is_none());
+        assert!(fault_to_wire(FaultKind::CommSlow { factor: 2.0 }).is_none());
+        assert_eq!(fault_from_wire(&[9, 0, 0, 0, 0]), None);
+        assert_eq!(fault_from_wire(&[1, 0]), None);
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod cli;
 pub mod codec;
+pub mod crc;
 pub mod fp16;
 pub mod json;
 pub mod rng;

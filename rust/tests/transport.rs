@@ -1,0 +1,256 @@
+//! Socket-transport system tests (PR 10): the multi-process Unix-socket
+//! fleet must be a drop-in for the in-process engine.
+//!
+//! * Determinism grid — a `SocketFleet` of real rank-shell OS processes
+//!   reduces BITWISE IDENTICAL to `CommEngine` across wire codec
+//!   {f32, q8} × schedule {ring, hier}, with matching wire statistics.
+//! * Trainer equivalence — `--transport socket` training runs land on
+//!   exactly the in-process trajectory (params AND BN state), including
+//!   the q8 + error-feedback wire.
+//! * Wire-level chaos — every transport fault kind (process kill mid-
+//!   step, frame corruption caught by CRC, a silent stall detected by
+//!   heartbeat deadline, a half-closed socket) is detected as a typed
+//!   peer-death, escalates into the existing supervised recovery path
+//!   (snapshot restore + replay over a freshly spawned fleet), and the
+//!   run finishes bitwise identical to the clean socket run.
+//!
+//! Shells are spawned from the real `yasgd` binary
+//! (`CARGO_BIN_EXE_yasgd`), so these tests exercise the actual
+//! `rank-shell` dispatch, the UDS mesh handshake and the framed wire.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::sync::OnceLock;
+use yasgd::collective::{Algorithm, CommEngine, Precision};
+use yasgd::config::RunConfig;
+use yasgd::coordinator::Trainer;
+use yasgd::fleet::FleetAction;
+use yasgd::runtime::Engine;
+use yasgd::transport::socket::{SocketFleet, SocketOpts};
+use yasgd::util::rng::Rng;
+
+fn engine() -> Arc<Engine> {
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Arc::new(Engine::load(&dir).expect("engine load"))
+        })
+        .clone()
+}
+
+/// The rank-shell binary under test: the REAL yasgd executable, not the
+/// test harness (whose `current_exe` has no `rank-shell` subcommand).
+fn shell_bin() -> String {
+    env!("CARGO_BIN_EXE_yasgd").to_string()
+}
+
+fn socket_opts(workers: usize, algo: Algorithm, precision: Precision) -> SocketOpts {
+    SocketOpts {
+        workers,
+        algo,
+        precision,
+        shell_binary: shell_bin(),
+        connect_retries: 10,
+        connect_base_ms: 5,
+        heartbeat_ms: 25,
+        deadline_ms: 10_000,
+        seed: 7,
+    }
+}
+
+fn test_buffers(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..p)
+        .map(|_| (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect())
+        .collect()
+}
+
+/// THE transport acceptance criterion: the socket fleet's reduction is
+/// bit-identical to the in-process engine's, across codec × schedule,
+/// at a length that exercises uneven ring chunks (1537 = prime-ish, not
+/// divisible by p or the q8 chunk). Wire statistics must agree too —
+/// both sides bill the SAME shared plan.
+#[test]
+fn socket_fleet_matches_comm_engine_bitwise() {
+    let p = 4;
+    let n = 1537;
+    for algo in [Algorithm::Ring, Algorithm::Hierarchical { ranks_per_node: 2 }] {
+        for precision in [Precision::F32, Precision::Q8] {
+            let what = format!("algo={algo:?} precision={precision:?}");
+
+            let mut want = test_buffers(p, n, 0xB17_5EED);
+            let mut engine = CommEngine::new(algo, precision, 1);
+            let mut views: Vec<&mut [f32]> = want.iter_mut().map(|b| b.as_mut_slice()).collect();
+            let ref_stats = engine.allreduce_mean(&mut views);
+
+            let mut got = test_buffers(p, n, 0xB17_5EED);
+            let mut fleet =
+                SocketFleet::spawn(socket_opts(p, algo, precision)).expect("fleet spawn");
+            let mut views: Vec<&mut [f32]> = got.iter_mut().map(|b| b.as_mut_slice()).collect();
+            let stats = fleet.allreduce_mean(&mut views).expect("socket allreduce");
+            fleet.shutdown().expect("orderly shutdown");
+
+            for (r, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+                for (i, (a, b)) in w.iter().zip(g.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{what}: rank {r} elem {i}: inproc {a} vs socket {b}"
+                    );
+                }
+            }
+            assert_eq!(stats.rounds, ref_stats.rounds, "{what}: rounds");
+            assert_eq!(stats.total_bytes, ref_stats.total_bytes, "{what}: total bytes");
+            assert_eq!(stats.messages, ref_stats.messages, "{what}: messages");
+            assert_eq!(
+                stats.uncompressed_bytes, ref_stats.uncompressed_bytes,
+                "{what}: uncompressed bytes"
+            );
+        }
+    }
+}
+
+/// A fleet survives MANY successive reduces (plan cache, seq counters
+/// and link buffers all carry across steps) and stays bitwise right.
+#[test]
+fn socket_fleet_repeated_steps_stay_bitwise() {
+    let p = 2;
+    let n = 513;
+    let mut fleet =
+        SocketFleet::spawn(socket_opts(p, Algorithm::Ring, Precision::F32)).expect("spawn");
+    let mut engine = CommEngine::new(Algorithm::Ring, Precision::F32, 1);
+    for step in 0..5u64 {
+        let mut want = test_buffers(p, n, 0xCAFE ^ step);
+        let mut got = want.clone();
+        let mut views: Vec<&mut [f32]> = want.iter_mut().map(|b| b.as_mut_slice()).collect();
+        engine.allreduce_mean(&mut views);
+        let mut views: Vec<&mut [f32]> = got.iter_mut().map(|b| b.as_mut_slice()).collect();
+        fleet.allreduce_mean(&mut views).expect("socket allreduce");
+        assert_eq!(want, got, "step {step} diverged");
+    }
+    fleet.shutdown().expect("orderly shutdown");
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        workers: 2,
+        total_steps: 4,
+        eval_every: 0,
+        eval_batches: 2,
+        train_size: 256,
+        val_size: 64,
+        bucket_bytes: 4 * 1024,
+        comm_threads: 2,
+        fault_deadline_ms: 300,
+        ..RunConfig::default()
+    }
+}
+
+fn socket_cfg(allreduce: &str, wire: &str) -> RunConfig {
+    RunConfig {
+        transport: "socket".into(),
+        shell_binary: shell_bin(),
+        allreduce: allreduce.into(),
+        wire: wire.into(),
+        ..base_cfg()
+    }
+}
+
+/// Run `cfg` to completion and return (params, bn_state, trainer).
+fn run_to_end(cfg: RunConfig) -> (Vec<f32>, Vec<f32>, Trainer) {
+    let steps = cfg.total_steps;
+    let mut t = Trainer::new(cfg, engine()).unwrap();
+    for _ in 0..steps {
+        t.step().unwrap();
+    }
+    t.flush_recovering().unwrap();
+    let p = t.params().to_vec();
+    let b = t.bn_state().to_vec();
+    (p, b, t)
+}
+
+/// `--transport socket` trains the SAME trajectory as the in-process
+/// default, on the f32 wire and on the q8 + error-feedback wire (whose
+/// leader-side EF pre-pass and receiver-side chunk grid must both line
+/// up with the in-process path).
+#[test]
+fn trainer_socket_matches_inproc_bitwise() {
+    for (allreduce, wire) in [("ring", "f32"), ("hier", "q8")] {
+        let what = format!("allreduce={allreduce} wire={wire}");
+        let inproc = RunConfig {
+            allreduce: allreduce.into(),
+            wire: wire.into(),
+            ..base_cfg()
+        };
+        let (ref_params, ref_bn, _) = run_to_end(inproc);
+        let (params, bn, t) = run_to_end(socket_cfg(allreduce, wire));
+        assert_eq!(ref_params, params, "{what}: socket params diverged from in-process");
+        assert_eq!(ref_bn, bn, "{what}: socket bn state diverged from in-process");
+        assert_eq!(t.recovery_count(), 0, "{what}: clean run must not recover");
+    }
+}
+
+fn event_kinds(t: &Trainer) -> Vec<&'static str> {
+    t.fault_events().iter().map(|e| e.kind()).collect()
+}
+
+/// Shared chaos harness: run the clean socket config, then the same
+/// config with `spec` injected, and demand detection + in-run recovery
+/// + a bitwise-identical final state.
+fn assert_fault_recovers_bitwise(mut cfg: RunConfig, spec: &str) {
+    let (ref_params, ref_bn, _) = run_to_end(cfg.clone());
+    cfg.fault_spec = spec.into();
+    let (params, bn, t) = run_to_end(cfg);
+    assert_eq!(ref_params, params, "{spec}: params diverged after transport recovery");
+    assert_eq!(ref_bn, bn, "{spec}: bn state diverged after transport recovery");
+    assert!(t.recovery_count() >= 1, "{spec}: transport fault must force a recovery");
+    let kinds = event_kinds(&t);
+    for need in ["injected", "peer_dead", "recovered"] {
+        assert!(kinds.contains(&need), "{spec}: missing {need} event in {kinds:?}");
+    }
+    assert!(
+        t.fleet_events().iter().any(|e| e.action == FleetAction::Respawn),
+        "{spec}: peer death must log a fleet respawn event"
+    );
+}
+
+/// A rank process killed mid-step (after ~half its sends) is detected —
+/// EOF, child exit status, or a peer shell's typed error — and the run
+/// recovers bitwise through snapshot restore + fleet respawn.
+#[test]
+fn peerkill_recovers_bitwise() {
+    assert_fault_recovers_bitwise(socket_cfg("ring", "f32"), "peerkill@1:0");
+}
+
+/// A flipped payload bit on the wire is REJECTED by the receiver's CRC
+/// trailer (never mis-applied into the reduction), surfaces as a typed
+/// corruption error, and the run recovers bitwise.
+#[test]
+fn frame_corruption_rejected_and_recovered_bitwise() {
+    assert_fault_recovers_bitwise(socket_cfg("ring", "f32"), "corrupt@1:1");
+}
+
+/// A rank that goes SILENT (stalls without heartbeating, longer than the
+/// deadline) is detected by heartbeat staleness — alive but useless is
+/// the same as dead — and the run recovers bitwise.
+#[test]
+fn sockstall_detected_by_deadline_and_recovered_bitwise() {
+    // Stall (600 ms) > deadline floor (300 ms): detection must fire.
+    assert_fault_recovers_bitwise(socket_cfg("ring", "f32"), "sockstall@1:0:600");
+}
+
+/// A half-closed socket (write side shut on a link the schedule uses)
+/// starves the peer's strictly-ordered receive; the deadline converts
+/// the hang into a typed error and the run recovers bitwise.
+#[test]
+fn halfclose_recovers_bitwise() {
+    assert_fault_recovers_bitwise(socket_cfg("ring", "f32"), "halfclose@2:1");
+}
+
+/// Transport chaos on the q8 + error-feedback wire: recovery must
+/// restore the EF residual state too, or the replayed trajectory forks.
+#[test]
+fn peerkill_recovers_bitwise_on_q8_wire() {
+    assert_fault_recovers_bitwise(socket_cfg("hier", "q8"), "peerkill@2:1");
+}

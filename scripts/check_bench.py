@@ -2,8 +2,9 @@
 """CI gate over the bench-smoke artifacts.
 
 Accepts any number of artifact paths (default: BENCH_pipeline.json) and
-dispatches on the file name: *fig2* files get the topology gates, the
-rest get the pipeline gates.
+dispatches on the file name: *fig2* files get the topology gates,
+*transport* files get the socket-transport gates, the rest get the
+pipeline gates.
 
 BENCH_pipeline.json — invariants the pipeline/wire/fault PRs promise:
 
@@ -50,6 +51,19 @@ BENCH_pipeline.json — invariants the pipeline/wire/fault PRs promise:
      step-equivalent of wall-clock (elastic_elapsed_s - clean_elapsed_s
      < clean_elapsed_s / steps): both transitions are pure routing
      flips, with no detection deadline and no respawn on this path.
+
+BENCH_transport.json — invariants the socket-transport PR promises:
+
+  7. the socket reduce is BITWISE equal to the in-process engine on the
+     f32 AND q8 wires (exact, NO tolerance — a perf number for a wrong
+     reduction is worthless), the measured ping-pong α sits inside the
+     α–β fit's OWN residual band (the ping point is a fit sample, so
+     this is pure self-consistency: it holds on any machine speed and
+     only breaks when the measurement or the fit pipeline breaks), and
+     the 17-byte frame envelope (length + kind + seq + CRC trailer)
+     costs < 2% of the leader's byte traffic, measured from the exact
+     per-link payload/framed counters AND analytically from the plan's
+     message count.
 
 BENCH_fig2.json — invariants the topology-aware collectives PR promises:
 
@@ -283,6 +297,68 @@ def check_pipeline(bench: dict) -> None:
     )
 
 
+def check_transport(bench: dict) -> None:
+    for key in (
+        "ping_bytes",
+        "ping_alpha_us",
+        "fit_alpha_us",
+        "fit_beta_gbps",
+        "fit_rms_residual_us",
+        "fit_max_residual_us",
+    ):
+        v = bench.get(key)
+        if not isinstance(v, (int, float)):
+            fail(f"'{key}' missing or non-numeric: {v!r}")
+
+    # Gate: bitwise equality with the in-process engine, both wires.
+    for key in ("bitwise_equal", "bitwise_f32", "bitwise_q8"):
+        if bench.get(key) is not True:
+            fail(f"socket reduce must be bitwise equal to CommEngine: {key}={bench.get(key)!r}")
+
+    # Gate: measured ping-pong α inside the fit's own residual band.
+    # Predicted time of the ping sample under the fitted link, in µs
+    # (bytes / (GB/s * 1e9) seconds == bytes / (GB/s * 1e3) µs).
+    beta = bench["fit_beta_gbps"]
+    if beta <= 0:
+        fail(f"fitted β must be positive: {beta!r}")
+    predicted_us = bench["fit_alpha_us"] + bench["ping_bytes"] / (beta * 1e3)
+    band_us = bench["fit_max_residual_us"] * (1.0 + MODEL_EPS)
+    gap_us = abs(bench["ping_alpha_us"] - predicted_us)
+    if gap_us > band_us:
+        fail(
+            f"ping-pong α {bench['ping_alpha_us']:.2f} µs is {gap_us:.2f} µs from the "
+            f"fitted line ({predicted_us:.2f} µs), outside the fit's own residual "
+            f"band ({band_us:.2f} µs): the ping point is a fit sample, so this "
+            f"can only mean the measurement or the fit broke"
+        )
+
+    # Gate: the frame envelope is cheap — < 2% of leader traffic, by the
+    # exact byte counters and by the analytic plan accounting.
+    fo = bench.get("frame_overhead")
+    if not isinstance(fo, dict):
+        fail("missing 'frame_overhead' section")
+    if fo.get("frame_bytes") != 17:
+        fail(f"frame envelope must be the 17-byte len+kind+seq+crc: {fo.get('frame_bytes')!r}")
+    payload = fo.get("payload_bytes")
+    framed = fo.get("framed_bytes")
+    if not isinstance(payload, (int, float)) or not isinstance(framed, (int, float)):
+        fail(f"frame byte counters missing: payload={payload!r}, framed={framed!r}")
+    if not 0 < payload <= framed:
+        fail(f"frame counters inconsistent: payload {payload!r} vs framed {framed!r}")
+    for key in ("measured_frac", "analytic_frac"):
+        v = fo.get(key)
+        if not isinstance(v, (int, float)) or not 0.0 <= v < 0.02:
+            fail(f"frame overhead '{key}' must be a fraction < 0.02: {v!r}")
+
+    print(
+        f"check_bench: OK: transport ping α {bench['ping_alpha_us']:.1f} µs within "
+        f"{band_us:.1f} µs of fit (α {bench['fit_alpha_us']:.2f} µs, "
+        f"β {beta:.3f} GB/s, rms {bench['fit_rms_residual_us']:.2f} µs); frame "
+        f"envelope {fo['measured_frac']:.5f} measured / {fo['analytic_frac']:.5f} "
+        f"analytic < 0.02; bitwise vs CommEngine on f32 and q8"
+    )
+
+
 def check_fig2(bench: dict) -> None:
     ranks = bench.get("ranks")
     if ranks != 2048:
@@ -367,8 +443,11 @@ def main() -> None:
     paths = sys.argv[1:] or ["BENCH_pipeline.json"]
     for path in paths:
         bench = load(path)
-        if "fig2" in os.path.basename(path):
+        name = os.path.basename(path)
+        if "fig2" in name:
             check_fig2(bench)
+        elif "transport" in name:
+            check_transport(bench)
         else:
             check_pipeline(bench)
 

@@ -1,0 +1,204 @@
+#!/usr/bin/env python3
+"""Language-independent conformance check of the transport wire spec.
+
+Independently reimplements the bit-level pieces of rust/src/transport/
+(the crc32 trailer, the frame codec, the seeded reconnect backoff and
+the Rng it draws jitter from) from their documented layouts — NOT by
+calling the Rust code — and asserts the same properties the Rust unit
+tests do, plus an oracle Rust can't cheaply use (zlib.crc32). A
+divergence here means the wire format drifted from its spec: a shell
+ported to another language from the doc comments would stop
+interoperating. Zero dependencies beyond the stdlib; runs in
+`make socket-smoke`.
+"""
+import random
+import struct
+import sys
+import zlib
+
+M64 = (1 << 64) - 1
+M32 = (1 << 32) - 1
+
+# ---- util::crc::crc32 (bitwise port) --------------------------------
+def crc32(data: bytes) -> int:
+    crc = M32
+    for b in data:
+        crc ^= b
+        for _ in range(8):
+            crc = (crc >> 1) ^ (0xEDB88320 & (-(crc & 1) & M32))
+    return crc ^ M32
+
+# ---- util::rng::Rng (xoshiro256** + SplitMix64 port) ----------------
+class Rng:
+    def __init__(self, seed):
+        x = seed & M64
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & M64
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    @staticmethod
+    def _rotl(v, k):
+        return ((v << k) | (v >> (64 - k))) & M64
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+# ---- transport frame codec (port) -----------------------------------
+FRAME_OVERHEAD = 17
+MAX_FRAME = 64 << 20
+KINDS = set(range(1, 9))
+
+def encode_frame(kind, seq, payload: bytes) -> bytes:
+    body = bytes([kind]) + struct.pack("<Q", seq) + payload
+    return struct.pack("<I", len(payload)) + body + struct.pack("<I", crc32(body))
+
+def decode_frame(buf: bytes):
+    """Returns ('incomplete',), ('ok', kind, seq, payload, consumed) or ('err', why)."""
+    if len(buf) < 4:
+        return ("incomplete",)
+    (ln,) = struct.unpack_from("<I", buf, 0)
+    if ln > MAX_FRAME:
+        return ("err", "toolong")
+    total = FRAME_OVERHEAD + ln
+    if len(buf) < total:
+        return ("incomplete",)
+    body = buf[4 : total - 4]
+    (want,) = struct.unpack_from("<I", buf, total - 4)
+    got = crc32(body)
+    if want != got:
+        return ("err", "badcrc")
+    if body[0] not in KINDS:
+        return ("err", "badkind")
+    (seq,) = struct.unpack_from("<Q", body, 1)
+    return ("ok", body[0], seq, body[9:], total)
+
+# ---- transport Backoff (port) ---------------------------------------
+class Backoff:
+    def __init__(self, base_ms, cap_ms, retries, seed):
+        self.base = max(base_ms, 1)
+        self.cap = max(cap_ms, 1)
+        self.retries = retries
+        self.attempt = 0
+        self.rng = Rng(seed)
+
+    def next_delay_ms(self):
+        if self.attempt >= self.retries:
+            return None
+        exp = min(self.base * min(1 << self.attempt, M64), self.cap, M64)
+        self.attempt += 1
+        lo = max(exp // 2, 1)
+        return lo + self.rng.below(exp - lo + 1)
+
+def check(name, cond):
+    print(f"  {'ok' if cond else 'FAIL'}: {name}")
+    if not cond:
+        sys.exit(1)
+
+print("== crc32 vs zlib oracle ==")
+check("empty", crc32(b"") == 0)
+check("check value", crc32(b"123456789") == 0xCBF43926)
+r = random.Random(1)
+agree = True
+for n in (0, 1, 3, 17, 64, 1000):
+    d = bytes(r.getrandbits(8) for _ in range(n))
+    agree = agree and crc32(d) == zlib.crc32(d)
+check("matches zlib.crc32 on random buffers", agree)
+
+print("== frame codec roundtrip + fuzz ==")
+wire = encode_frame(3, 42, b"hello transport")
+check("wire length = overhead + payload", len(wire) == FRAME_OVERHEAD + 15)
+st = decode_frame(wire)
+check("roundtrip", st[0] == "ok" and st[1] == 3 and st[2] == 42 and st[3] == b"hello transport" and st[4] == len(wire))
+check("kind byte at offset 4, first payload byte at 13",
+      wire[4] == 3 and wire[13] == ord("h"))
+
+# Fuzz: every single-byte flip is rejected or re-framed-but-never-silently-wrong.
+r = random.Random(7)
+flips_ok = True
+for trial in range(400):
+    payload = bytes(r.getrandbits(8) for _ in range(r.randrange(0, 64)))
+    kind = r.choice(sorted(KINDS))
+    seq = r.getrandbits(64)
+    wire = bytearray(encode_frame(kind, seq, payload))
+    i = r.randrange(len(wire))
+    bit = 1 << r.randrange(8)
+    wire[i] ^= bit
+    st = decode_frame(bytes(wire))
+    if st[0] == "ok":
+        # A length-prefix flip may shrink/grow the frame; accepting the
+        # SAME content would be a silent corruption. Anything else
+        # (incomplete/err) is a detected rejection.
+        if st[1] == kind and st[2] == seq and st[3] == payload:
+            flips_ok = False
+            print(f"    trial {trial}: flip byte {i} silently accepted")
+            break
+        # A reinterpreted shorter frame must still have passed its CRC
+        # over flipped-length bytes: possible only if the flip was in
+        # the length prefix AND the truncated body happens to checksum.
+        # crc makes this ~2^-32; treat an occurrence as failure.
+        flips_ok = False
+        print(f"    trial {trial}: flip byte {i} decoded as a different valid frame")
+        break
+check("400 random single-bit flips all rejected", flips_ok)
+
+truncs_ok = True
+for trial in range(200):
+    payload = bytes(r.getrandbits(8) for _ in range(r.randrange(0, 64)))
+    wire = encode_frame(2, trial, payload)
+    cut = r.randrange(len(wire))
+    st = decode_frame(wire[:cut])
+    if st[0] == "ok":
+        truncs_ok = False
+        print(f"    trial {trial}: truncation at {cut} accepted")
+        break
+check("200 random truncations never decode", truncs_ok)
+
+big = struct.pack("<I", MAX_FRAME + 1) + b"\x00" * 20
+check("oversize length prefix rejected immediately", decode_frame(big) == ("err", "toolong"))
+
+zeros = b"\x00" * 64
+check("all-zero stream never decodes a frame (kind 0 unused)",
+      decode_frame(zeros)[0] != "ok")
+
+print("== backoff envelope + determinism ==")
+b = Backoff(5, 1000, 10, 42)
+delays = []
+while (d := b.next_delay_ms()) is not None:
+    delays.append(d)
+check("hands out exactly `retries` delays then None", len(delays) == 10 and b.next_delay_ms() is None)
+env_ok = all(
+    max(min(5 * (1 << k), 1000) // 2, 1) <= d <= min(5 * (1 << k), 1000)
+    for k, d in enumerate(delays)
+)
+check("every delay in [e/2, e], e = min(base*2^k, cap)", env_ok)
+check("cap honored", all(d <= 1000 for d in delays) and delays[-1] >= 500)
+b2 = Backoff(5, 1000, 10, 42)
+delays2 = [b2.next_delay_ms() for _ in range(10)]
+check("same seed -> identical schedule", delays == delays2)
+b3 = Backoff(5, 1000, 10, 43)
+delays3 = [b3.next_delay_ms() for _ in range(10)]
+check("different seed -> different schedule", delays != delays3)
+
+print("== job header layout (22 bytes) ==")
+# Mirror socket.rs encode_job: [algo u8][a u32][b u32][c u32][prec u8][p u32][n u32]
+hdr = struct.pack("<BIIIBII", 1, 7, 0, 0, 0, 4, 1537)
+check("header is 22 bytes", len(hdr) == 22)
+
+print("\nall transport logic checks passed")
